@@ -1,0 +1,109 @@
+//! Fig 2: running time vs accuracy of KNN graph construction across
+//! four datasets, comparing random projection forests (Annoy-style),
+//! vantage-point trees (t-SNE's method), NN-Descent, and LargeVis
+//! (small forest + neighbor exploring).
+//!
+//! Paper shape to reproduce: LargeVis reaches the highest recall at the
+//! lowest time (lower-right in the paper's axes); vp-trees are worst;
+//! plain RP-forests need many trees to match LargeVis's recall.
+
+use largevis::bench::{bench_scale, Table};
+use largevis::data::datasets;
+use largevis::knn::explore::{largevis_knn, LargeVisKnnConfig};
+use largevis::knn::nndescent::{nn_descent, NnDescentConfig};
+use largevis::knn::rptree::{rp_forest_knn, RpForestConfig};
+use largevis::knn::sampled_recall;
+use largevis::knn::vptree::{vp_tree_knn, VpTreeConfig};
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    let k = 30; // paper: 150; scaled down with the datasets
+    // (dataset, base scale) — sizes chosen so the full bench runs in
+    // minutes on one core (LARGEVIS_BENCH_SCALE raises them).
+    let sets = [
+        ("20ng-like", 0.35),
+        ("mnist-like", 0.05),
+        ("wikidoc-like", 0.015),
+        ("livejournal-like", 0.0125),
+    ];
+    let mut table = Table::new(
+        "Fig 2 — KNN graph construction: time vs recall (K=50)",
+        &["dataset", "n", "method", "param", "secs", "recall"],
+    );
+
+    for (name, base) in sets {
+        let ds = datasets::generate(name, base * scale, 0xf162).unwrap();
+        let n = ds.points.n();
+        eprintln!("[fig2] {name}: n={n}");
+        let mut record = |method: &str, param: String, secs: f64, g: &largevis::knn::KnnGraph| {
+            let recall = sampled_recall(&ds.points, g, 300, 7, 0);
+            table.row(&[
+                name.into(),
+                n.to_string(),
+                method.into(),
+                param,
+                format!("{secs:.2}"),
+                format!("{recall:.4}"),
+            ]);
+        };
+
+        // Random projection forest: more trees -> higher recall.
+        for trees in [1usize, 4, 16, 32] {
+            let cfg = RpForestConfig { n_trees: trees, ..Default::default() };
+            let t0 = std::time::Instant::now();
+            let g = rp_forest_knn(&ds.points, k, &cfg);
+            record("rp-forest", format!("trees={trees}"), t0.elapsed().as_secs_f64(), &g);
+        }
+        // Vantage-point tree: visit budget -> recall (exact = unbounded).
+        for visits in [50usize, 200, 1000, usize::MAX] {
+            let cfg = VpTreeConfig { max_visits: visits, ..Default::default() };
+            let t0 = std::time::Instant::now();
+            let g = vp_tree_knn(&ds.points, k, &cfg);
+            let p = if visits == usize::MAX { "exact".into() } else { format!("visits={visits}") };
+            record("vp-tree", p, t0.elapsed().as_secs_f64(), &g);
+        }
+        // k-d tree (extension: related-work baseline; great at low d,
+        // collapses at high d).
+        for visits in [200usize, usize::MAX] {
+            let cfg = largevis::knn::kdtree::KdTreeConfig { max_visits: visits, ..Default::default() };
+            let t0 = std::time::Instant::now();
+            let g = largevis::knn::kdtree::kd_tree_knn(&ds.points, k, &cfg);
+            let p = if visits == usize::MAX { "exact".into() } else { format!("visits={visits}") };
+            record("kd-tree", p, t0.elapsed().as_secs_f64(), &g);
+        }
+        // LSH (extension: hashing baseline).
+        for tables in [4usize, 16] {
+            let cfg = largevis::knn::lsh::LshConfig { n_tables: tables, ..Default::default() };
+            let t0 = std::time::Instant::now();
+            let g = largevis::knn::lsh::lsh_knn(&ds.points, k, &cfg);
+            record("lsh", format!("tables={tables}"), t0.elapsed().as_secs_f64(), &g);
+        }
+        // NN-Descent.
+        for iters in [1usize, 3, 6] {
+            let cfg =
+                NnDescentConfig { max_iters: iters, sample_rate: 0.6, ..Default::default() };
+            let t0 = std::time::Instant::now();
+            let g = nn_descent(&ds.points, k, &cfg);
+            record("nn-descent", format!("iters={iters}"), t0.elapsed().as_secs_f64(), &g);
+        }
+        // LargeVis: small forest + exploring.
+        for (trees, iters) in [(2usize, 1usize), (4, 1), (8, 1)] {
+            let cfg = LargeVisKnnConfig {
+                forest: RpForestConfig { n_trees: trees, ..Default::default() },
+                iters,
+                ..Default::default()
+            };
+            let t0 = std::time::Instant::now();
+            let g = largevis_knn(&ds.points, k, &cfg);
+            record(
+                "largevis",
+                format!("trees={trees},explore={iters}"),
+                t0.elapsed().as_secs_f64(),
+                &g,
+            );
+        }
+    }
+    table.print();
+    table.write_tsv("fig2_knn_construction")?;
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Fig 4: comparing probabilistic functions f(x) for the layout model —
+//! `1/(1+ax²)` for several `a` and `1/(1+e^{x²})` — by KNN-classifier
+//! accuracy of the resulting layouts.
+//!
+//! Paper shape: the long-tailed `1/(1+x²)` (a=1) wins; the sigmoid
+//! variant crowds and scores clearly lower.
+
+use largevis::bench::{bench_scale, workloads, Table};
+use largevis::eval::knn_classifier::{knn_accuracy, KnnEvalConfig};
+use largevis::vis::{layout, LargeVisConfig, ProbFn};
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    let sets = [("wikidoc-like", 0.0125), ("livejournal-like", 0.01)];
+    let mut table = Table::new(
+        "Fig 4 — probabilistic functions (KNN accuracy of layout)",
+        &["dataset", "n", "prob_fn", "accuracy", "secs"],
+    );
+
+    for (name, base) in sets {
+        let w = workloads::prepare(name, base * scale, 50, 0xf164);
+        let labels = w.dataset.labels.as_ref().expect("labeled dataset");
+        eprintln!("[fig4] {name}: n={}", w.graph.n());
+        let fns: [(String, ProbFn); 5] = [
+            ("1/(1+0.5x^2)".into(), ProbFn::InvQuad { a: 0.5 }),
+            ("1/(1+x^2)".into(), ProbFn::InvQuad { a: 1.0 }),
+            ("1/(1+2x^2)".into(), ProbFn::InvQuad { a: 2.0 }),
+            ("1/(1+4x^2)".into(), ProbFn::InvQuad { a: 4.0 }),
+            ("1/(1+exp(x^2))".into(), ProbFn::SigmoidSq),
+        ];
+        for (label, f) in fns {
+            let cfg = LargeVisConfig { prob_fn: f, samples_per_vertex: 2000, ..Default::default() };
+            let t0 = std::time::Instant::now();
+            let y = layout(&w.graph, &cfg);
+            let secs = t0.elapsed().as_secs_f64();
+            let acc = knn_accuracy(&y, labels, &KnnEvalConfig { k: 5, sample: 3000, ..Default::default() });
+            table.row(&[
+                name.into(),
+                w.graph.n().to_string(),
+                label,
+                format!("{acc:.4}"),
+                format!("{secs:.2}"),
+            ]);
+        }
+    }
+    table.print();
+    table.write_tsv("fig4_prob_functions")?;
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Fig 6: layout accuracy and running time vs data size (random samples
+//! of wikidoc-like), LargeVis vs BH t-SNE (default lr).
+//!
+//! Paper shape: with default parameters, LargeVis's accuracy holds or
+//! improves with size while default-lr t-SNE degrades; the time gap
+//! widens with N (O(N) vs O(N log N)).
+
+use largevis::baselines::{bh_tsne, BhTsneConfig};
+use largevis::bench::{bench_scale, workloads, Table};
+use largevis::eval::knn_classifier::{knn_accuracy, KnnEvalConfig};
+use largevis::vis::{layout, LargeVisConfig};
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    let fractions = [0.003, 0.006, 0.0125, 0.025];
+    let mut table = Table::new(
+        "Fig 6 — accuracy and time vs data size (wikidoc-like)",
+        &["n", "method", "accuracy", "secs"],
+    );
+
+    for frac in fractions {
+        let w = workloads::prepare("wikidoc-like", frac * scale, 50, 0xf166);
+        let labels = w.dataset.labels.as_ref().unwrap();
+        let n = w.graph.n();
+        eprintln!("[fig6] n={n}");
+        let ecfg = KnnEvalConfig { k: 5, sample: 3000, ..Default::default() };
+
+        let t0 = std::time::Instant::now();
+        let y = bh_tsne(&w.graph, &BhTsneConfig { iters: 250, eta: 200.0, ..Default::default() });
+        let secs = t0.elapsed().as_secs_f64();
+        table.row(&[
+            n.to_string(),
+            "tsne(lr=200)".into(),
+            format!("{:.4}", knn_accuracy(&y, labels, &ecfg)),
+            format!("{secs:.2}"),
+        ]);
+
+        let t0 = std::time::Instant::now();
+        let y = layout(&w.graph, &LargeVisConfig { samples_per_vertex: 2000, ..Default::default() });
+        let secs = t0.elapsed().as_secs_f64();
+        table.row(&[
+            n.to_string(),
+            "largevis(default)".into(),
+            format!("{:.4}", knn_accuracy(&y, labels, &ecfg)),
+            format!("{secs:.2}"),
+        ]);
+    }
+    table.print();
+    table.write_tsv("fig6_scaling")?;
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Fig 7: LargeVis sensitivity to (a) the number of negative samples M
+//! and (b) the number of training samples T, on wikidoc-like.
+//!
+//! Paper shape: accuracy saturates around M≈5 and is flat beyond; the
+//! accuracy-vs-T curve saturates once T is a few thousand per vertex.
+
+use largevis::bench::{bench_scale, workloads, Table};
+use largevis::eval::knn_classifier::{knn_accuracy, KnnEvalConfig};
+use largevis::vis::{layout, LargeVisConfig};
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    let w = workloads::prepare("wikidoc-like", 0.0125 * scale, 30, 0xf167);
+    let labels = w.dataset.labels.as_ref().unwrap();
+    eprintln!("[fig7] n={}", w.graph.n());
+    let ecfg = KnnEvalConfig { k: 5, sample: 3000, ..Default::default() };
+
+    let mut table = Table::new(
+        "Fig 7a — sensitivity to negative samples M (T=2000/vertex)",
+        &["M", "accuracy", "secs"],
+    );
+    for m in [1usize, 2, 3, 5, 7, 10] {
+        let cfg = LargeVisConfig { negatives: m, samples_per_vertex: 2000, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let y = layout(&w.graph, &cfg);
+        table.row(&[
+            m.to_string(),
+            format!("{:.4}", knn_accuracy(&y, labels, &ecfg)),
+            format!("{:.2}", t0.elapsed().as_secs_f64()),
+        ]);
+    }
+    table.print();
+    table.write_tsv("fig7a_negatives")?;
+
+    let mut table = Table::new(
+        "Fig 7b — sensitivity to training samples per vertex (M=5)",
+        &["samples/vertex", "accuracy", "secs"],
+    );
+    for t in [100usize, 400, 1000, 2000, 4000, 8000] {
+        let cfg = LargeVisConfig { samples_per_vertex: t, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let y = layout(&w.graph, &cfg);
+        table.row(&[
+            t.to_string(),
+            format!("{:.4}", knn_accuracy(&y, labels, &ecfg)),
+            format!("{:.2}", t0.elapsed().as_secs_f64()),
+        ]);
+    }
+    table.print();
+    table.write_tsv("fig7b_samples")?;
+    Ok(())
+}

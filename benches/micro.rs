@@ -1,0 +1,153 @@
+//! Micro-benchmarks of the hot paths (§Perf): alias sampling, distance
+//! kernels, per-edge gradient step, Hogwild thread scaling, quadtree
+//! build, RP-tree build, perplexity calibration, and the XLA batched
+//! step latency (if artifacts exist).
+
+use largevis::bench::{time_fn, Table};
+use largevis::data::matrix::sqdist;
+use largevis::data::synth::gaussian_mixture;
+use largevis::graph::weights::calibrate_row;
+use largevis::util::alias::AliasTable;
+use largevis::util::rng::Rng;
+use largevis::vis::{init_layout, LargeVisConfig};
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new("micro-benchmarks", &["bench", "metric", "value"]);
+
+    // Alias sampling throughput.
+    {
+        let mut rng = Rng::new(1);
+        let w: Vec<f64> = (0..1_000_000).map(|_| rng.f64() + 0.01).collect();
+        let t = AliasTable::new(&w);
+        let s = time_fn(1, 5, || {
+            let mut acc = 0usize;
+            for _ in 0..1_000_000 {
+                acc ^= t.sample(&mut rng);
+            }
+            acc
+        });
+        table.row(&[
+            "alias.sample".into(),
+            "M samples/s".into(),
+            format!("{:.0}", 1.0 / s.p50),
+        ]);
+    }
+
+    // sqdist throughput at d=100 (the KNN hot scalar).
+    {
+        let mut rng = Rng::new(2);
+        let a: Vec<f32> = (0..100).map(|_| rng.gaussian()).collect();
+        let b: Vec<f32> = (0..100).map(|_| rng.gaussian()).collect();
+        let s = time_fn(2, 5, || {
+            let mut acc = 0f32;
+            for _ in 0..1_000_000 {
+                acc += sqdist(std::hint::black_box(&a), std::hint::black_box(&b));
+            }
+            acc
+        });
+        table.row(&[
+            "sqdist(d=100)".into(),
+            "M dists/s".into(),
+            format!("{:.0}", 1.0 / s.p50),
+        ]);
+    }
+
+    // Hogwild SGD throughput & thread scaling on an SBM graph.
+    {
+        let g = largevis::data::synth::sbm(20_000, 10, 12.0, 1.0, 3);
+        let edges: Vec<(u32, u32, f64)> = g.edges.iter().map(|&(a, b)| (a, b, 1.0)).collect();
+        let graph = largevis::graph::CsrGraph::from_undirected(g.n, &edges);
+        for threads in [1usize, 2, 4, 8, 0] {
+            let label = if threads == 0 {
+                format!("auto({})", largevis::util::pool::default_threads())
+            } else {
+                threads.to_string()
+            };
+            let cfg = LargeVisConfig { samples_per_vertex: 500, threads, ..Default::default() };
+            let mut y = init_layout(g.n, 2, 1);
+            let rep = largevis::vis::sgd::optimize(&graph, &mut y, &cfg);
+            table.row(&[
+                format!("sgd.hogwild(threads={label})"),
+                "M samples/s".into(),
+                format!("{:.2}", rep.throughput() / 1e6),
+            ]);
+        }
+    }
+
+    // RP-tree forest build.
+    {
+        let (m, _) = gaussian_mixture(20_000, 100, 10, 0.3, 4);
+        let s = time_fn(0, 3, || {
+            largevis::knn::rptree::rp_forest_knn(
+                &m,
+                20,
+                &largevis::knn::rptree::RpForestConfig::default(),
+            )
+        });
+        table.row(&["rpforest.build(n=20k,d=100,8 trees)".into(), "secs".into(), format!("{:.3}", s.p50)]);
+    }
+
+    // Quadtree build.
+    {
+        let y = init_layout(100_000, 2, 5);
+        let s = time_fn(1, 5, || largevis::baselines::QuadTree::build(&y));
+        table.row(&["quadtree.build(n=100k)".into(), "ms".into(), format!("{:.2}", s.p50 * 1e3)]);
+    }
+
+    // Perplexity calibration per row.
+    {
+        let mut rng = Rng::new(6);
+        let dists: Vec<f32> = (0..150).map(|_| rng.f32() * 10.0).collect();
+        let s = time_fn(10, 5, || {
+            let mut acc = 0f64;
+            for _ in 0..1000 {
+                acc += calibrate_row(std::hint::black_box(&dists), 50.0, 64, 1e-5)[0];
+            }
+            acc
+        });
+        table.row(&[
+            "perplexity.calibrate(k=150)".into(),
+            "K rows/s".into(),
+            format!("{:.1}", 1.0 / s.p50),
+        ]);
+    }
+
+    // XLA batched step latency (skipped without artifacts).
+    match largevis::runtime::Runtime::from_default_dir() {
+        Ok(rt) => {
+            let mf = rt.manifest;
+            let (b, m, s_dim) = (mf.batch, mf.negatives, mf.dim);
+            let mut rng = Rng::new(7);
+            let yi: Vec<f32> = (0..b * s_dim).map(|_| rng.gaussian()).collect();
+            let yj: Vec<f32> = (0..b * s_dim).map(|_| rng.gaussian()).collect();
+            let yn: Vec<f32> = (0..b * m * s_dim).map(|_| rng.gaussian()).collect();
+            let s = time_fn(3, 10, || {
+                rt.run(
+                    "grad_kernel",
+                    &[
+                        largevis::runtime::literal_f32_2d(&yi, b, s_dim).unwrap(),
+                        largevis::runtime::literal_f32_2d(&yj, b, s_dim).unwrap(),
+                        largevis::runtime::literal_f32_2d(&yn, b, m * s_dim).unwrap(),
+                        largevis::runtime::literal_f32(7.0),
+                    ],
+                )
+                .unwrap()
+            });
+            table.row(&[
+                format!("xla.grad_kernel(B={b})"),
+                "µs/batch".into(),
+                format!("{:.0}", s.p50 * 1e6),
+            ]);
+            table.row(&[
+                "xla.grad_kernel".into(),
+                "M samples/s".into(),
+                format!("{:.2}", b as f64 / s.p50 / 1e6),
+            ]);
+        }
+        Err(e) => eprintln!("[micro] xla bench skipped: {e}"),
+    }
+
+    table.print();
+    table.write_tsv("micro")?;
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Table 2: graph-visualization running time, BH t-SNE vs LargeVis,
+//! across all seven datasets, with the speedup row.
+//!
+//! Paper shape: comparable on the small sets (20NG, MNIST), LargeVis
+//! several times faster on the large ones (speedup grows with N —
+//! O(N) sampling vs O(N log N) per full-batch iteration).
+
+use largevis::baselines::{bh_tsne, BhTsneConfig};
+use largevis::bench::{bench_scale, workloads, Table};
+use largevis::util::timer::fmt_duration;
+use largevis::vis::{layout, LargeVisConfig};
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    // All seven paper datasets, scaled so the full table runs in minutes.
+    let sets = [
+        ("20ng-like", 0.2),
+        ("mnist-like", 0.04),
+        ("wikiword-like", 0.02),
+        ("wikidoc-like", 0.0125),
+        ("livejournal-like", 0.01),
+        ("csauthor-like", 0.02),
+        ("dblp-like", 0.025),
+    ];
+    // Work-matched budgets mirroring the paper's settings (t-SNE: 1000
+    // full-batch iterations; LargeVis: T ∝ N edge samples). We shrink
+    // both by the same factor to keep the bench fast.
+    let tsne_iters = 250;
+    let samples_per_vertex = 2500;
+
+    let mut table = Table::new(
+        "Table 2 — layout running time (seconds)",
+        &["dataset", "n", "tsne_secs", "largevis_secs", "speedup"],
+    );
+
+    for (name, base) in sets {
+        let w = workloads::prepare(name, base * scale, 50, 0x7ab2);
+        let n = w.graph.n();
+        eprintln!("[table2] {name}: n={n} (knn took {})", fmt_duration(w.knn_secs));
+
+        let t0 = std::time::Instant::now();
+        let yt = bh_tsne(&w.graph, &BhTsneConfig { iters: tsne_iters, ..Default::default() });
+        let tsne_secs = t0.elapsed().as_secs_f64();
+        std::hint::black_box(&yt);
+
+        let t0 = std::time::Instant::now();
+        let yl = layout(&w.graph, &LargeVisConfig { samples_per_vertex, ..Default::default() });
+        let lv_secs = t0.elapsed().as_secs_f64();
+        std::hint::black_box(&yl);
+
+        table.row(&[
+            name.into(),
+            n.to_string(),
+            format!("{tsne_secs:.2}"),
+            format!("{lv_secs:.2}"),
+            format!("{:.1}", tsne_secs / lv_secs.max(1e-9)),
+        ]);
+    }
+    table.print();
+    table.write_tsv("table2_vis_runtime")?;
+    Ok(())
+}

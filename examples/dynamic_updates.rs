@@ -1,0 +1,69 @@
+//! Dynamic data extension (the paper's future-work item): embed a base
+//! corpus, then stream new points in batches — each batch is spliced
+//! into the KNN graph and placed by localized SGD while the existing
+//! view stays frozen; a final global re-optimization unfreezes all.
+//!
+//! ```text
+//! cargo run --release --example dynamic_updates
+//! ```
+
+use largevis::data::synth::gaussian_mixture;
+use largevis::eval::knn_classifier::{knn_accuracy, KnnEvalConfig};
+use largevis::graph::weights::{weighted_graph, WeightConfig};
+use largevis::knn::explore::{largevis_knn, LargeVisKnnConfig};
+use largevis::render::{render_scatter, ScatterStyle};
+use largevis::util::timer::Timer;
+use largevis::vis::incremental::IncrementalLayout;
+use largevis::vis::LargeVisConfig;
+
+fn main() -> anyhow::Result<()> {
+    std::fs::create_dir_all("target/run")?;
+    // Base: 4000 points, stream: 4 batches of 250 from the same source.
+    let (all, labels) = gaussian_mixture(5000, 32, 8, 0.2, 77);
+    let base_ids: Vec<usize> = (0..4000).collect();
+    let base = all.gather_rows(&base_ids);
+
+    let t = Timer::start("base embed");
+    let knn = largevis_knn(&base, 20, &LargeVisKnnConfig::default());
+    let wcfg = WeightConfig { perplexity: 15.0, ..Default::default() };
+    let vcfg = LargeVisConfig { samples_per_vertex: 3000, ..Default::default() };
+    let graph = weighted_graph(&knn, &wcfg);
+    let mut layout = largevis::vis::init_layout(base.n(), 2, 3);
+    largevis::vis::sgd::optimize(&graph, &mut layout, &vcfg);
+    t.report();
+
+    let mut inc = IncrementalLayout::new(base, knn, layout, wcfg, vcfg);
+    for batch in 0..4 {
+        let ids: Vec<usize> = (4000 + batch * 250..4000 + (batch + 1) * 250).collect();
+        let points = all.gather_rows(&ids);
+        let t = Timer::start("insert batch");
+        inc.add_points(&points);
+        let secs = t.report();
+        let acc = knn_accuracy(
+            &inc.layout,
+            &labels[..inc.n()],
+            &KnnEvalConfig { k: 5, sample: 2000, ..Default::default() },
+        );
+        println!("after batch {batch}: n={} accuracy={acc:.4} (insert took {secs:.2}s)", inc.n());
+    }
+
+    render_scatter(
+        std::path::Path::new("target/run/dynamic_updates.svg"),
+        &inc.layout,
+        Some(&labels),
+        8,
+        &ScatterStyle { title: "incremental insertions (frozen base)".into(), ..Default::default() },
+    )?;
+
+    let t = Timer::start("global reoptimize");
+    inc.reoptimize();
+    t.report();
+    let acc = knn_accuracy(
+        &inc.layout,
+        &labels,
+        &KnnEvalConfig { k: 5, sample: 2000, ..Default::default() },
+    );
+    println!("after global reoptimize: accuracy={acc:.4}");
+    println!("wrote target/run/dynamic_updates.svg");
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): the full LargeVis
+//! system on a real small workload — the `mnist-like` dataset at
+//! 20,000 × 784 — through every layer:
+//!
+//!   dataset → RP-forest KNN + neighbor exploring → perplexity weights
+//!   → Hogwild layout → KNN-classifier eval → SVG,
+//!
+//! then the same layout again through the **XLA path** (AOT JAX/Pallas
+//! gradient artifact via PJRT) to prove the three layers compose, and a
+//! BH t-SNE run for the paper's headline comparison. Prints a summary
+//! table and logs the layout-objective curve.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use largevis::bench::Table;
+use largevis::data::datasets;
+use largevis::eval::knn_classifier::{knn_accuracy, KnnEvalConfig};
+use largevis::graph::weights::{weighted_graph, WeightConfig};
+use largevis::knn::explore::{largevis_knn, LargeVisKnnConfig};
+use largevis::knn::sampled_recall;
+use largevis::render::{render_scatter, ScatterStyle};
+use largevis::util::timer::{fmt_duration, Timer};
+use largevis::vis::{init_layout, LargeVisConfig};
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::var("E2E_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.3);
+    std::fs::create_dir_all("target/run")?;
+
+    // ---- Stage 1: dataset (mnist-like, 784-d manifold clusters) ----
+    let t = Timer::start("dataset");
+    let ds = datasets::generate("mnist-like", scale, 0xe2e).unwrap();
+    let labels = ds.labels.as_ref().unwrap();
+    println!("dataset: {} n={} d={} ({} classes)", ds.name, ds.points.n(), ds.points.d(), ds.n_classes);
+    let t_data = t.report();
+
+    // ---- Stage 2: KNN graph ----
+    let k = 50;
+    let t = Timer::start("knn");
+    let knn = largevis_knn(&ds.points, k, &LargeVisKnnConfig::default());
+    let t_knn = t.report();
+    let recall = sampled_recall(&ds.points, &knn, 300, 7, 0);
+    println!("knn: k={k} recall≈{recall:.4} ({})", fmt_duration(t_knn));
+
+    // ---- Stage 3: weights ----
+    let t = Timer::start("weights");
+    let graph = weighted_graph(&knn, &WeightConfig::default());
+    let t_weights = t.report();
+
+    // ---- Stage 4a: Hogwild layout ----
+    let cfg = LargeVisConfig { samples_per_vertex: 3000, ..Default::default() };
+    let t = Timer::start("layout/hogwild");
+    let mut y_hogwild = init_layout(graph.n(), 2, cfg.seed);
+    let rep = largevis::vis::sgd::optimize(&graph, &mut y_hogwild, &cfg);
+    let t_hogwild = t.report();
+    println!(
+        "hogwild: {} samples, {:.2}M samples/s",
+        rep.samples,
+        rep.throughput() / 1e6
+    );
+
+    // ---- Stage 4b: XLA batched layout (three-layer integration) ----
+    let (y_xla, t_xla) = match largevis::runtime::Runtime::from_default_dir() {
+        Ok(rt) => {
+            println!("pjrt platform: {}", rt.platform());
+            let xcfg = LargeVisConfig { samples_per_vertex: 600, ..cfg.clone() };
+            let t = Timer::start("layout/xla");
+            let mut y = init_layout(graph.n(), 2, cfg.seed);
+            let xrep = largevis::vis::batched::optimize_batched(&graph, &mut y, &xcfg, &rt)?;
+            let secs = t.report();
+            println!("xla: {} samples, {:.2}M samples/s", xrep.samples, xrep.throughput() / 1e6);
+            (Some(y), secs)
+        }
+        Err(e) => {
+            println!("xla path skipped: {e}");
+            (None, 0.0)
+        }
+    };
+
+    // ---- Stage 4c: BH t-SNE baseline ----
+    let tsne_iters = 400;
+    let t = Timer::start("layout/bhtsne");
+    let y_tsne = largevis::baselines::bh_tsne(
+        &graph,
+        &largevis::baselines::BhTsneConfig { iters: tsne_iters, ..Default::default() },
+    );
+    let t_tsne = t.report();
+
+    // ---- Stage 5: evaluation ----
+    let ecfg = KnnEvalConfig { k: 5, sample: 3000, ..Default::default() };
+    let acc_hogwild = knn_accuracy(&y_hogwild, labels, &ecfg);
+    let acc_tsne = knn_accuracy(&y_tsne, labels, &ecfg);
+    let acc_xla = y_xla.as_ref().map(|y| knn_accuracy(y, labels, &ecfg));
+
+    let mut table = Table::new(
+        "end-to-end: mnist-like (paper headline: LargeVis ≥ t-SNE quality, much faster)",
+        &["engine", "layout time", "samples/s", "knn-acc@5"],
+    );
+    table.row(&[
+        "largevis/hogwild".into(),
+        fmt_duration(t_hogwild),
+        format!("{:.2}M", rep.throughput() / 1e6),
+        format!("{acc_hogwild:.4}"),
+    ]);
+    if let Some(acc) = acc_xla {
+        table.row(&[
+            "largevis/xla".into(),
+            fmt_duration(t_xla),
+            "-".into(),
+            format!("{acc:.4}"),
+        ]);
+    }
+    table.row(&[
+        format!("bh-tsne({tsne_iters} it)"),
+        fmt_duration(t_tsne),
+        "-".into(),
+        format!("{acc_tsne:.4}"),
+    ]);
+    table.print();
+    table.write_tsv("end_to_end")?;
+
+    // ---- Stage 6: render ----
+    render_scatter(
+        std::path::Path::new("target/run/e2e_largevis.svg"),
+        &y_hogwild,
+        Some(labels),
+        ds.n_classes,
+        &ScatterStyle { title: "LargeVis (hogwild)".into(), ..Default::default() },
+    )?;
+    render_scatter(
+        std::path::Path::new("target/run/e2e_tsne.svg"),
+        &y_tsne,
+        Some(labels),
+        ds.n_classes,
+        &ScatterStyle { title: "BH t-SNE".into(), ..Default::default() },
+    )?;
+    println!(
+        "\nstage times: data={} knn={} weights={} | total={}",
+        fmt_duration(t_data),
+        fmt_duration(t_knn),
+        fmt_duration(t_weights),
+        fmt_duration(t_data + t_knn + t_weights + t_hogwild)
+    );
+    println!("SVGs in target/run/");
+    Ok(())
+}

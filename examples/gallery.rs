@@ -1,0 +1,77 @@
+//! Gallery: regenerate the paper's qualitative figures (Figs 8–9) —
+//! LargeVis vs BH t-SNE layouts of 20NG/WikiDoc/LiveJournal analogs,
+//! plus LargeVis-only WikiWord/CSAuthor panels, as SVGs in
+//! `target/figures/`.
+//!
+//! Scale with `GALLERY_SCALE` (default 0.05 keeps the run in minutes).
+
+use largevis::baselines::{bh_tsne, BhTsneConfig};
+use largevis::data::datasets;
+use largevis::graph::weights::{weighted_graph, WeightConfig};
+use largevis::knn::explore::{largevis_knn, LargeVisKnnConfig};
+use largevis::render::{render_scatter, ScatterStyle};
+use largevis::util::timer::Timer;
+use largevis::vis::{layout, LargeVisConfig};
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 =
+        std::env::var("GALLERY_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    std::fs::create_dir_all("target/figures")?;
+
+    // (dataset, also-run-tsne) — mirrors the panels of Figs 8 and 9.
+    let panels = [
+        ("20ng-like", true),
+        ("wikidoc-like", true),
+        ("livejournal-like", true),
+        ("wikiword-like", false),
+        ("csauthor-like", false),
+    ];
+
+    for (name, with_tsne) in panels {
+        let t = Timer::start(name);
+        // 20NG is small in the paper; render it at full size.
+        let eff_scale = if name == "20ng-like" { 1.0 } else { scale };
+        let ds = datasets::generate(name, eff_scale, 0xf1a).unwrap();
+        let k = 50.min(ds.points.n() - 1);
+        let knn = largevis_knn(&ds.points, k, &LargeVisKnnConfig::default());
+        let graph = weighted_graph(&knn, &WeightConfig::default());
+
+        // Unlabeled sets are colored by K-means of the high-dimensional
+        // representations, exactly as the paper does (200 clusters).
+        let (colors, n_colors): (Vec<u32>, usize) = match &ds.labels {
+            Some(l) => (l.clone(), ds.n_classes),
+            None => {
+                let k_colors = 200.min(ds.points.n() / 10).max(2);
+                let km = largevis::eval::kmeans(
+                    &ds.points,
+                    &largevis::eval::KMeansConfig { k: k_colors, ..Default::default() },
+                );
+                (km.assignment, k_colors)
+            }
+        };
+
+        let y = layout(&graph, &LargeVisConfig { samples_per_vertex: 2000, ..Default::default() });
+        render_scatter(
+            std::path::Path::new(&format!("target/figures/fig8_{name}_largevis.svg")),
+            &y,
+            Some(&colors),
+            n_colors,
+            &ScatterStyle { title: format!("{name} — LargeVis"), ..Default::default() },
+        )?;
+
+        if with_tsne {
+            let yt = bh_tsne(&graph, &BhTsneConfig { iters: 500, ..Default::default() });
+            render_scatter(
+                std::path::Path::new(&format!("target/figures/fig8_{name}_tsne.svg")),
+                &yt,
+                Some(&colors),
+                n_colors,
+                &ScatterStyle { title: format!("{name} — BH t-SNE"), ..Default::default() },
+            )?;
+        }
+        t.report();
+        println!("{name}: n={} rendered", ds.points.n());
+    }
+    println!("gallery SVGs in target/figures/");
+    Ok(())
+}

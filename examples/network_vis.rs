@@ -1,0 +1,65 @@
+//! Network visualization scenario (paper Fig 10: the DBLP conference
+//! map): generate a hierarchical-community graph, embed it to 100-d
+//! with LINE (the paper's preprocessing), visualize with LargeVis, and
+//! verify communities separate.
+//!
+//! ```text
+//! cargo run --release --example network_vis
+//! ```
+
+use largevis::data::synth::sbm;
+use largevis::embed::line::{train_line, LineConfig};
+use largevis::eval::knn_classifier::{knn_accuracy, KnnEvalConfig};
+use largevis::graph::weights::{weighted_graph, WeightConfig};
+use largevis::knn::explore::{largevis_knn, LargeVisKnnConfig};
+use largevis::render::{render_scatter, ScatterStyle};
+use largevis::util::timer::Timer;
+use largevis::vis::{layout, LargeVisConfig};
+
+fn main() -> anyhow::Result<()> {
+    std::fs::create_dir_all("target/run")?;
+    // "Conferences": 24 communities of papers, like Fig 10's venues.
+    let n = 12_000;
+    let communities = 24;
+    let t = Timer::start("sbm graph");
+    let g = sbm(n, communities, 14.0, 1.0, 0xdb1);
+    t.report();
+    println!("graph: n={} undirected edges={} communities={}", g.n, g.edges.len(), communities);
+
+    // LINE 100-d preprocessing (exactly what the paper does for DBLP).
+    let t = Timer::start("line embed");
+    let edges: Vec<(u32, u32, f32)> = g.edges.iter().map(|&(a, b)| (a, b, 1.0)).collect();
+    let emb = train_line(
+        g.n,
+        &edges,
+        &LineConfig { dim: 100, samples_per_vertex: 1500, ..Default::default() },
+    )
+    .embedding;
+    t.report();
+
+    // LargeVis pipeline on the embeddings.
+    let t = Timer::start("largevis");
+    let knn = largevis_knn(&emb, 30, &LargeVisKnnConfig::default());
+    let graph = weighted_graph(&knn, &WeightConfig::default());
+    let y = layout(&graph, &LargeVisConfig { samples_per_vertex: 3000, ..Default::default() });
+    t.report();
+
+    let acc = knn_accuracy(
+        &y,
+        &g.communities,
+        &KnnEvalConfig { k: 5, sample: 3000, ..Default::default() },
+    );
+    println!("community KNN-accuracy on 2D layout: {acc:.4} (chance = {:.4})", 1.0 / communities as f64);
+    anyhow::ensure!(acc > 3.0 / communities as f64, "layout failed to separate communities");
+
+    let path = std::path::Path::new("target/run/network_vis.svg");
+    render_scatter(
+        path,
+        &y,
+        Some(&g.communities),
+        communities,
+        &ScatterStyle { title: "dblp-like conference map (LargeVis)".into(), ..Default::default() },
+    )?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

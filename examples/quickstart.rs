@@ -1,0 +1,36 @@
+//! Quickstart: visualize a swiss roll in ~30 lines.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Generates 5k points on a swiss-roll manifold, builds the LargeVis
+//! KNN graph, lays it out, and writes `target/run/quickstart.svg` — the
+//! roll unrolls into colored bands.
+
+use largevis::data::synth::swiss_roll;
+use largevis::graph::weights::{weighted_graph, WeightConfig};
+use largevis::knn::explore::{largevis_knn, LargeVisKnnConfig};
+use largevis::render::{render_scatter, ScatterStyle};
+use largevis::vis::{layout, LargeVisConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data: 5000 points on a 3-d swiss roll (8 colored bands).
+    let (points, labels) = swiss_roll(5000, 3, 8, 42);
+
+    // 2. Approximate KNN graph (RP-forest + neighbor exploring).
+    let knn = largevis_knn(&points, 20, &LargeVisKnnConfig::default());
+
+    // 3. Perplexity-calibrated edge weights (Eqs. 1-2).
+    let graph = weighted_graph(&knn, &WeightConfig { perplexity: 15.0, ..Default::default() });
+
+    // 4. Probabilistic layout by asynchronous SGD (Eq. 6).
+    let y = layout(&graph, &LargeVisConfig { samples_per_vertex: 3000, ..Default::default() });
+
+    // 5. Render.
+    std::fs::create_dir_all("target/run")?;
+    let path = std::path::Path::new("target/run/quickstart.svg");
+    render_scatter(path, &y, Some(&labels), 8, &ScatterStyle::default())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

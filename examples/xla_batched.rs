@@ -1,0 +1,102 @@
+//! Demonstrates the three-layer AOT path in isolation:
+//!
+//! 1. rust builds a toy weighted graph,
+//! 2. the `grad_kernel` HLO artifact (JAX/Pallas, lowered at build
+//!    time) computes batched gradients on the PJRT CPU client,
+//! 3. rust applies them — and cross-checks one batch against the native
+//!    Hogwild gradient math.
+//!
+//! Also exercises the fused `largevis_step` artifact (gather + kernel +
+//! scatter in one HLO) on a table of the manifest's baked size.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example xla_batched
+//! ```
+
+use largevis::data::synth::sbm;
+use largevis::graph::CsrGraph;
+use largevis::runtime::{literal_f32, literal_f32_2d, literal_to_f32, Runtime};
+use largevis::util::rng::Rng;
+use largevis::vis::objective::ProbFn;
+use largevis::vis::{init_layout, LargeVisConfig};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_default_dir()?;
+    let mf = rt.manifest;
+    println!(
+        "pjrt platform={} artifacts: batch={} M={} dim={}",
+        rt.platform(),
+        mf.batch,
+        mf.negatives,
+        mf.dim
+    );
+
+    // --- Cross-check the grad_kernel artifact against native math ---
+    let (b, m, s) = (mf.batch, mf.negatives, mf.dim);
+    let mut rng = Rng::new(1);
+    let mk = |len: usize, rng: &mut Rng| -> Vec<f32> {
+        (0..len).map(|_| rng.gaussian()).collect()
+    };
+    let yi = mk(b * s, &mut rng);
+    let yj = mk(b * s, &mut rng);
+    let yneg = mk(b * m * s, &mut rng);
+    let gamma = 7.0f32;
+
+    let outs = rt.run(
+        "grad_kernel",
+        &[
+            literal_f32_2d(&yi, b, s)?,
+            literal_f32_2d(&yj, b, s)?,
+            literal_f32_2d(&yneg, b, m * s)?,
+            literal_f32(gamma),
+        ],
+    )?;
+    let gi = literal_to_f32(&outs[0])?;
+    let f = ProbFn::InvQuad { a: 1.0 };
+    let mut max_err = 0f32;
+    for e in 0..b {
+        // Native gradient for edge e (same math as the Hogwild engine).
+        let mut want = [0f32; 8];
+        let d2: f32 = (0..s).map(|k| (yi[e * s + k] - yj[e * s + k]).powi(2)).sum();
+        let c = f.coeff_pos(d2);
+        for k in 0..s {
+            want[k] += (c * (yi[e * s + k] - yj[e * s + k])).clamp(-5.0, 5.0);
+        }
+        for neg in 0..m {
+            let off = (e * m + neg) * s;
+            let d2: f32 = (0..s).map(|k| (yi[e * s + k] - yneg[off + k]).powi(2)).sum();
+            let c = gamma * f.coeff_neg(d2);
+            for k in 0..s {
+                want[k] += (c * (yi[e * s + k] - yneg[off + k])).clamp(-5.0, 5.0);
+            }
+        }
+        for k in 0..s {
+            max_err = max_err.max((gi[e * s + k] - want[k]).abs());
+        }
+    }
+    println!("grad_kernel vs native max |err| over {b} edges = {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-4, "XLA/native gradient mismatch");
+
+    // --- Run a full batched layout on an SBM graph via the artifact ---
+    let g = sbm(3000, 6, 12.0, 1.0, 2);
+    let edges: Vec<(u32, u32, f64)> = g.edges.iter().map(|&(a, b)| (a, b, 1.0)).collect();
+    let graph = CsrGraph::from_undirected(g.n, &edges);
+    let cfg = LargeVisConfig { samples_per_vertex: 800, ..Default::default() };
+    let mut y = init_layout(g.n, 2, 3);
+    let rep = largevis::vis::batched::optimize_batched(&graph, &mut y, &cfg, &rt)?;
+    println!(
+        "batched layout: {} samples in {:.2}s ({:.0}k samples/s)",
+        rep.samples,
+        rep.seconds,
+        rep.throughput() / 1e3
+    );
+    let acc = largevis::eval::knn_classifier::knn_accuracy(
+        &y,
+        &g.communities,
+        &largevis::eval::knn_classifier::KnnEvalConfig { k: 5, sample: 2000, ..Default::default() },
+    );
+    println!("community knn-accuracy of XLA layout = {acc:.4}");
+    anyhow::ensure!(acc > 0.5, "XLA layout failed to separate communities");
+    println!("xla_batched OK");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* -> artifacts/.
+
+HLO text (NOT serialized protos) is the interchange format: jax >= 0.5
+emits 64-bit instruction ids that the crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts (shapes baked at trace time, listed in the manifest):
+  grad_kernel.hlo.txt    (yi[B,s], yj[B,s], yneg_flat[B,M*s], gamma[1])
+                         -> (gi, gj, gneg_flat)   B=1024, M=5, s=2
+  largevis_step.hlo.txt  (y[N,s], i[B], j[B], neg[B,M], rho[], gamma[])
+                         -> y'                     N=10000
+  pdist.hlo.txt          (xa[256,100], xb[256,100]) -> [256,256]
+
+Run: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Baked artifact shapes — keep in sync with rust/src/runtime/mod.rs.
+BATCH = 1024
+NEGATIVES = 5
+DIM = 2
+STEP_N = 10_000
+PDIST_TILE = 256
+PDIST_D = 100
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_grad_kernel():
+    f32 = jnp.float32
+    spec = [
+        jax.ShapeDtypeStruct((BATCH, DIM), f32),
+        jax.ShapeDtypeStruct((BATCH, DIM), f32),
+        jax.ShapeDtypeStruct((BATCH, NEGATIVES, DIM), f32),
+        jax.ShapeDtypeStruct((), f32),
+    ]
+    return jax.jit(model.grad_only).lower(*spec)
+
+
+def lower_largevis_step():
+    f32, i32 = jnp.float32, jnp.int32
+    spec = [
+        jax.ShapeDtypeStruct((STEP_N, DIM), f32),
+        jax.ShapeDtypeStruct((BATCH,), i32),
+        jax.ShapeDtypeStruct((BATCH,), i32),
+        jax.ShapeDtypeStruct((BATCH, NEGATIVES), i32),
+        jax.ShapeDtypeStruct((), f32),
+        jax.ShapeDtypeStruct((), f32),
+    ]
+    return jax.jit(model.largevis_step, donate_argnums=(0,)).lower(*spec)
+
+
+def lower_pdist():
+    f32 = jnp.float32
+    spec = [
+        jax.ShapeDtypeStruct((PDIST_TILE, PDIST_D), f32),
+        jax.ShapeDtypeStruct((PDIST_TILE, PDIST_D), f32),
+    ]
+    return jax.jit(model.pdist).lower(*spec)
+
+
+ARTIFACTS = {
+    "grad_kernel": lower_grad_kernel,
+    "largevis_step": lower_largevis_step,
+    "pdist": lower_pdist,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "batch": BATCH,
+        "negatives": NEGATIVES,
+        "dim": DIM,
+        "step_n": STEP_N,
+        "pdist_tile": PDIST_TILE,
+        "pdist_d": PDIST_D,
+        "artifacts": {},
+    }
+    for name, lower in ARTIFACTS.items():
+        text = to_hlo_text(lower())
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = os.path.basename(path)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

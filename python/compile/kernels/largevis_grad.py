@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: fused batched LargeVis edge gradient.
+
+The SGD hot-spot of the paper — for a tile of B edges with M negatives
+each, compute the attractive and repulsive gradients of
+
+    O = log f(||yi-yj||) + sum_m gamma log(1 - f(||yi-yn_m||)),
+    f(x) = 1/(1 + a x^2)
+
+fused in one VMEM-resident pass (no intermediate HBM traffic).
+
+TPU framing (DESIGN.md §Hardware-Adaptation): the computation is
+elementwise + small-axis reductions — VPU work. We tile the batch
+dimension with BlockSpec so each grid step owns a [TILE_B, ...] slab in
+VMEM; negatives are kept as a flattened [TILE_B, M*s] lane-dim array so
+the lane dimension stays contiguous. interpret=True everywhere (CPU
+correctness path; Mosaic lowering is TPU-only).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.ref import CLIP, EPS
+
+# Batch tile per grid step. 256 edges x (1+M) partners x s floats is
+# ~14 KiB of VMEM at M=5, s=2 — far under the ~4 MiB/tile budget, so
+# the tile size is chosen for grid overhead, not capacity.
+TILE_B = 256
+
+
+def _grad_kernel(yi_ref, yj_ref, yneg_ref, gamma_ref, gi_ref, gj_ref, gneg_ref, *, a, m, s):
+    """One batch tile: yi/yj [T,s], yneg [T, M*s] flattened."""
+    yi = yi_ref[...]
+    yj = yj_ref[...]
+    gamma = gamma_ref[0]
+
+    delta = yi - yj
+    d2 = jnp.sum(delta * delta, axis=-1, keepdims=True)
+    gpos = jnp.clip((-2.0 * a / (1.0 + a * d2)) * delta, -CLIP, CLIP)
+
+    yneg = yneg_ref[...].reshape(yi.shape[0], m, s)
+    dneg = yi[:, None, :] - yneg
+    d2n = jnp.sum(dneg * dneg, axis=-1, keepdims=True)
+    cneg = 2.0 * gamma / ((EPS + d2n) * (1.0 + a * d2n))
+    gneg_term = jnp.clip(cneg * dneg, -CLIP, CLIP)
+
+    gi_ref[...] = gpos + jnp.sum(gneg_term, axis=1)
+    gj_ref[...] = -gpos
+    gneg_ref[...] = (-gneg_term).reshape(yi.shape[0], m * s)
+
+
+@functools.partial(jax.jit, static_argnames=("a",))
+def largevis_grad(yi, yj, yneg, gamma, a=1.0):
+    """Pallas-tiled LargeVis gradient.
+
+    Args/returns match ``ref.largevis_grad_ref`` (yneg is [B, M, s]).
+    ``gamma`` is a scalar array so it stays a runtime input of the AOT
+    artifact (the rust coordinator can change it without recompiling).
+    """
+    b, s = yi.shape
+    _, m, _ = yneg.shape
+    assert b % TILE_B == 0 or b < TILE_B, f"B={b} must be < or multiple of {TILE_B}"
+    tile = min(TILE_B, b)
+    grid = (b // tile,)
+    yneg_flat = yneg.reshape(b, m * s)
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1)
+
+    gi, gj, gneg_flat = pl.pallas_call(
+        functools.partial(_grad_kernel, a=a, m=m, s=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, s), lambda i: (i, 0)),
+            pl.BlockSpec((tile, s), lambda i: (i, 0)),
+            pl.BlockSpec((tile, m * s), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, s), lambda i: (i, 0)),
+            pl.BlockSpec((tile, s), lambda i: (i, 0)),
+            pl.BlockSpec((tile, m * s), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s), jnp.float32),
+            jax.ShapeDtypeStruct((b, s), jnp.float32),
+            jax.ShapeDtypeStruct((b, m * s), jnp.float32),
+        ],
+        interpret=True,
+    )(yi, yj, yneg_flat, gamma_arr)
+    return gi, gj, gneg_flat.reshape(b, m, s)

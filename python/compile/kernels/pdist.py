@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: tiled squared-Euclidean pairwise distances.
+
+Used by the exact-KNN ground-truth path: the rust coordinator streams
+[TILE, d] query/corpus blocks through this kernel and keeps a bounded
+heap of the results.
+
+TPU framing: ||a-b||^2 = ||a||^2 + ||b||^2 - 2 a.b turns the O(Q.R.d)
+distance computation into a matmul — MXU work with f32 accumulation;
+the row-norm terms are VPU epilogue. Tiles of 256x256 over d=128 keep
+each operand slab at 128 KiB in VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pdist_kernel(xa_ref, xb_ref, out_ref):
+    xa = xa_ref[...]
+    xb = xb_ref[...]
+    na = jnp.sum(xa * xa, axis=-1)[:, None]
+    nb = jnp.sum(xb * xb, axis=-1)[None, :]
+    cross = jax.lax.dot_general(
+        xa, xb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] = jnp.maximum(na + nb - 2.0 * cross, 0.0)
+
+
+@jax.jit
+def pdist(xa, xb):
+    """Squared distances between all rows of xa [Q,d] and xb [R,d]."""
+    q, d = xa.shape
+    r, _ = xb.shape
+    return pl.pallas_call(
+        _pdist_kernel,
+        out_shape=jax.ShapeDtypeStruct((q, r), jnp.float32),
+        interpret=True,
+    )(xa, xb)

@@ -1,0 +1,61 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis), and double as readable documentation of the math.
+
+Gradient convention matches the rust Hogwild engine
+(`rust/src/vis/objective.rs`): gradients are of the *maximized*
+objective, so the update is ``y += rho * grad``.
+"""
+
+import jax.numpy as jnp
+
+# Repulsive-singularity guard; must match rust vis::objective::EPS.
+EPS = 0.1
+# Per-component gradient clip; must match LargeVisConfig::grad_clip.
+CLIP = 5.0
+
+
+def largevis_grad_ref(yi, yj, yneg, gamma, a=1.0):
+    """Batched LargeVis gradient for f(x) = 1/(1 + a x^2).
+
+    Args:
+      yi:   [B, s] source embeddings.
+      yj:   [B, s] positive-target embeddings.
+      yneg: [B, M, s] negative-sample embeddings.
+      gamma: scalar negative weight.
+      a: scale of the probability function.
+
+    Returns:
+      (gi, gj, gneg): gradients of the objective w.r.t. yi, yj, yneg
+      with shapes matching the inputs. Per-component clipping to
+      [-CLIP, CLIP] is applied to each *term* (positive term and each
+      negative term separately), exactly as the reference C++ and our
+      rust engine do.
+    """
+    delta = yi - yj                                     # [B, s]
+    d2 = jnp.sum(delta * delta, axis=-1, keepdims=True)  # [B, 1]
+    gpos = jnp.clip((-2.0 * a / (1.0 + a * d2)) * delta, -CLIP, CLIP)
+
+    dneg = yi[:, None, :] - yneg                        # [B, M, s]
+    d2n = jnp.sum(dneg * dneg, axis=-1, keepdims=True)  # [B, M, 1]
+    cneg = 2.0 * gamma / ((EPS + d2n) * (1.0 + a * d2n))
+    gneg_term = jnp.clip(cneg * dneg, -CLIP, CLIP)      # [B, M, s]
+
+    gi = gpos + jnp.sum(gneg_term, axis=1)              # [B, s]
+    gj = -gpos
+    gneg = -gneg_term
+    return gi, gj, gneg
+
+
+def pdist_ref(xa, xb):
+    """Squared Euclidean distances between rows of xa [Q,d] and xb [R,d].
+
+    Uses the matmul reformulation ||a-b||^2 = ||a||^2 + ||b||^2 - 2 a.b
+    (clamped at 0 against rounding), the same schedule the Pallas kernel
+    uses to target the MXU.
+    """
+    na = jnp.sum(xa * xa, axis=-1)[:, None]   # [Q, 1]
+    nb = jnp.sum(xb * xb, axis=-1)[None, :]   # [1, R]
+    cross = xa @ xb.T                          # [Q, R]
+    return jnp.maximum(na + nb - 2.0 * cross, 0.0)

@@ -1,0 +1,47 @@
+"""L2: the batched LargeVis SGD step as a single JAX computation.
+
+``largevis_step`` is the full update for one batch of sampled edges:
+gather the touched embeddings from the table, run the L1 gradient
+kernel, scatter-add the scaled updates back. Lowered once by aot.py;
+the rust coordinator then drives it via PJRT with integer index batches
+— Python never runs at layout time.
+
+Duplicate indices within a batch are handled by the scatter-add
+semantics of ``.at[].add`` (contributions sum, matching sequential SGD
+up to reordering).
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.largevis_grad import largevis_grad
+from compile.kernels.pdist import pdist  # re-exported for aot
+
+
+def largevis_step(y, idx_i, idx_j, idx_neg, rho, gamma):
+    """One batched SGD step over the embedding table.
+
+    Args:
+      y:       [N, s] embedding table (donated by the runtime).
+      idx_i:   [B] int32 edge sources.
+      idx_j:   [B] int32 edge targets.
+      idx_neg: [B, M] int32 negative samples.
+      rho:     scalar learning rate.
+      gamma:   scalar negative weight.
+
+    Returns:
+      [N, s] updated table.
+    """
+    yi = y[idx_i]           # [B, s]
+    yj = y[idx_j]           # [B, s]
+    yneg = y[idx_neg]       # [B, M, s]
+    gi, gj, gneg = largevis_grad(yi, yj, yneg, gamma, a=1.0)
+    rho = jnp.asarray(rho, jnp.float32)
+    y = y.at[idx_i].add(rho * gi)
+    y = y.at[idx_j].add(rho * gj)
+    y = y.at[idx_neg.reshape(-1)].add(rho * gneg.reshape(-1, y.shape[1]))
+    return y
+
+
+def grad_only(yi, yj, yneg, gamma):
+    """N-independent gradient artifact (rust does gather/scatter)."""
+    return largevis_grad(yi, yj, yneg, gamma, a=1.0)

@@ -1,0 +1,143 @@
+"""Kernel-vs-reference correctness — the core L1 signal.
+
+Exhaustive fixed cases plus hypothesis sweeps over shapes and value
+ranges. Everything runs on CPU with interpret=True.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.largevis_grad import TILE_B, largevis_grad
+from compile.kernels.pdist import pdist
+from compile.kernels.ref import CLIP, EPS, largevis_grad_ref, pdist_ref
+
+
+def _rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+@pytest.mark.parametrize("b", [8, 64, TILE_B, 2 * TILE_B])
+@pytest.mark.parametrize("m", [1, 5])
+def test_grad_matches_ref(b, m):
+    rng = np.random.default_rng(b * 31 + m)
+    yi, yj = _rand(rng, (b, 2)), _rand(rng, (b, 2))
+    yn = _rand(rng, (b, m, 2))
+    got = largevis_grad(yi, yj, yn, 7.0)
+    want = largevis_grad_ref(yi, yj, yn, 7.0)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-6)
+
+
+def test_grad_gamma_scales_negative_term():
+    rng = np.random.default_rng(1)
+    yi, yj = _rand(rng, (64, 2)), _rand(rng, (64, 2))
+    yn = _rand(rng, (64, 5, 2))
+    _, _, gneg1 = largevis_grad(yi, yj, yn, 1.0)
+    _, _, gneg3 = largevis_grad(yi, yj, yn, 3.0)
+    # Below the clip threshold the negative gradient is linear in gamma.
+    mask = np.abs(np.asarray(gneg3)) < CLIP - 1e-3
+    np.testing.assert_allclose(
+        np.asarray(gneg3)[mask], 3.0 * np.asarray(gneg1)[mask], rtol=1e-4, atol=1e-6
+    )
+
+
+def test_grad_zero_distance_is_finite():
+    """Coincident points must not produce NaN/inf (EPS guard)."""
+    yi = jnp.zeros((8, 2), jnp.float32)
+    got = largevis_grad(yi, yi, jnp.zeros((8, 5, 2), jnp.float32), 7.0)
+    for g in got:
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_grad_attracts_and_repels():
+    """Positive gradient pulls i toward j; negatives push i away."""
+    yi = jnp.asarray([[1.0, 0.0]], jnp.float32)
+    yj = jnp.asarray([[-1.0, 0.0]], jnp.float32)
+    yn = jnp.asarray([[[0.5, 0.0]]], jnp.float32)
+    gi, gj, gneg = largevis_grad(yi, yj, yn, 7.0)
+    # Attraction dominates along x for this geometry? Check signs of terms:
+    # gj = -gpos must point from j toward i (positive x).
+    assert float(gj[0, 0]) > 0.0
+    # The negative at x=0.5 is pushed away from i (negative x direction).
+    assert float(gneg[0, 0, 0]) < 0.0
+
+
+def test_grad_clip_applied():
+    """Huge coordinates -> per-component clip at +/-CLIP."""
+    yi = jnp.asarray([[1e3, 1e3]], jnp.float32)
+    yj = jnp.asarray([[-1e3, -1e3]], jnp.float32)
+    yn = jnp.full((1, 5, 2), 1e-4, jnp.float32)
+    gi, gj, gneg = largevis_grad(yi, yj, yn, 1e6)
+    for g in (gi, gj, gneg):
+        assert np.max(np.abs(np.asarray(g))) <= CLIP + 1e-5
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.sampled_from([4, 16, 128]),
+    m=st.integers(1, 8),
+    s=st.sampled_from([2, 3]),
+    scale=st.floats(1e-3, 1e2),
+    gamma=st.floats(0.1, 20.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_grad_hypothesis_sweep(b, m, s, scale, gamma, seed):
+    rng = np.random.default_rng(seed)
+    yi, yj = _rand(rng, (b, s), scale), _rand(rng, (b, s), scale)
+    yn = _rand(rng, (b, m, s), scale)
+    got = largevis_grad(yi, yj, yn, gamma)
+    want = largevis_grad_ref(yi, yj, yn, gamma)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5)
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+@pytest.mark.parametrize("q,r,d", [(8, 8, 4), (256, 256, 100), (32, 128, 64)])
+def test_pdist_matches_ref(q, r, d):
+    rng = np.random.default_rng(q + r + d)
+    xa, xb = _rand(rng, (q, d)), _rand(rng, (r, d))
+    np.testing.assert_allclose(pdist(xa, xb), pdist_ref(xa, xb), rtol=1e-4, atol=1e-3)
+
+
+def test_pdist_self_diagonal_zero():
+    rng = np.random.default_rng(3)
+    xa = _rand(rng, (64, 16))
+    dmat = np.asarray(pdist(xa, xa))
+    np.testing.assert_allclose(np.diag(dmat), 0.0, atol=1e-3)
+    assert np.all(dmat >= 0.0)
+
+
+def test_pdist_matches_naive_loop():
+    rng = np.random.default_rng(4)
+    xa, xb = _rand(rng, (5, 7)), _rand(rng, (6, 7))
+    naive = np.zeros((5, 6), np.float32)
+    for i in range(5):
+        for j in range(6):
+            diff = np.asarray(xa[i]) - np.asarray(xb[j])
+            naive[i, j] = float(diff @ diff)
+    np.testing.assert_allclose(pdist(xa, xb), naive, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    q=st.integers(1, 64),
+    r=st.integers(1, 64),
+    d=st.integers(1, 128),
+    scale=st.floats(1e-2, 1e2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pdist_hypothesis_sweep(q, r, d, scale, seed):
+    rng = np.random.default_rng(seed)
+    xa, xb = _rand(rng, (q, d), scale), _rand(rng, (r, d), scale)
+    got = np.asarray(pdist(xa, xb))
+    want = np.asarray(pdist_ref(xa, xb))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2 * scale * scale)
+    assert np.all(got >= 0.0)
+
+
+def test_eps_matches_rust_constant():
+    """EPS/CLIP here must stay in sync with rust vis::objective."""
+    assert EPS == pytest.approx(0.1)
+    assert CLIP == pytest.approx(5.0)

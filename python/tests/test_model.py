@@ -1,0 +1,106 @@
+"""L2 model tests: the batched SGD step semantics and AOT lowering."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels.ref import largevis_grad_ref
+
+
+def _setup(n=50, b=16, m=3, seed=0):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.normal(size=(n, 2)) * 0.01, jnp.float32)
+    i = jnp.asarray(rng.integers(0, n, size=b), jnp.int32)
+    j = jnp.asarray(rng.integers(0, n, size=b), jnp.int32)
+    neg = jnp.asarray(rng.integers(0, n, size=(b, m)), jnp.int32)
+    return y, i, j, neg
+
+
+def test_step_matches_manual_scatter():
+    y, i, j, neg = _setup()
+    rho, gamma = 0.3, 7.0
+    got = model.largevis_step(y, i, j, neg, rho, gamma)
+
+    gi, gj, gneg = largevis_grad_ref(y[i], y[j], y[neg], gamma)
+    want = np.asarray(y).copy()
+    np.add.at(want, np.asarray(i), rho * np.asarray(gi))
+    np.add.at(want, np.asarray(j), rho * np.asarray(gj))
+    np.add.at(
+        want,
+        np.asarray(neg).reshape(-1),
+        rho * np.asarray(gneg).reshape(-1, 2),
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_step_only_touched_rows_change():
+    y, i, j, neg = _setup(n=100, b=4, m=2, seed=1)
+    got = np.asarray(model.largevis_step(y, i, j, neg, 1.0, 7.0))
+    touched = set(np.asarray(i)) | set(np.asarray(j)) | set(np.asarray(neg).reshape(-1))
+    for v in range(100):
+        if v not in touched:
+            np.testing.assert_array_equal(got[v], np.asarray(y)[v])
+
+
+def test_step_duplicate_indices_accumulate():
+    """Same edge twice in a batch => double the update of once."""
+    y, _, _, _ = _setup(n=10, seed=2)
+    i1 = jnp.asarray([1], jnp.int32)
+    j1 = jnp.asarray([2], jnp.int32)
+    neg1 = jnp.asarray([[3]], jnp.int32)
+    i2 = jnp.asarray([1, 1], jnp.int32)
+    j2 = jnp.asarray([2, 2], jnp.int32)
+    neg2 = jnp.asarray([[3], [3]], jnp.int32)
+    once = np.asarray(model.largevis_step(y, i1, j1, neg1, 0.5, 7.0)) - np.asarray(y)
+    twice = np.asarray(model.largevis_step(y, i2, j2, neg2, 0.5, 7.0)) - np.asarray(y)
+    np.testing.assert_allclose(twice, 2.0 * once, rtol=1e-4, atol=1e-7)
+
+
+def test_step_improves_objective_on_toy_graph():
+    """Repeated steps on a two-clique graph must raise the objective."""
+    rng = np.random.default_rng(3)
+    n = 12
+    edges = [(a, b) for a in range(6) for b in range(6) if a < b]
+    edges += [(a + 6, b + 6) for a, b in edges]
+    y = jnp.asarray(rng.normal(size=(n, 2)) * 1e-3, jnp.float32)
+
+    def objective(yv):
+        o = 0.0
+        yv = np.asarray(yv)
+        pos = set()
+        for a, b in edges:
+            d2 = float(((yv[a] - yv[b]) ** 2).sum())
+            o += np.log(1.0 / (1.0 + d2))
+            pos.add((a, b))
+        for a in range(n):
+            for b in range(a + 1, n):
+                if (a, b) not in pos:
+                    d2 = float(((yv[a] - yv[b]) ** 2).sum())
+                    o += 7.0 * np.log(max(1.0 - 1.0 / (1.0 + d2), 1e-12))
+        return o
+
+    before = objective(y)
+    for step in range(60):
+        ii = rng.integers(0, len(edges), size=8)
+        i = jnp.asarray([edges[k][0] for k in ii], jnp.int32)
+        j = jnp.asarray([edges[k][1] for k in ii], jnp.int32)
+        neg = jnp.asarray(rng.integers(0, n, size=(8, 5)), jnp.int32)
+        rho = 1.0 * (1.0 - step / 60.0)
+        y = model.largevis_step(y, i, j, neg, rho, 7.0)
+    after = objective(y)
+    assert after > before, f"{before} -> {after}"
+
+
+@pytest.mark.parametrize("name", list(aot.ARTIFACTS))
+def test_aot_lowering_produces_hlo_text(name):
+    text = aot.to_hlo_text(aot.ARTIFACTS[name]())
+    assert "HloModule" in text
+    # No Mosaic custom-calls may appear (interpret=True requirement).
+    assert "tpu_custom_call" not in text and "mosaic" not in text.lower()
+
+
+def test_manifest_constants_consistent():
+    assert aot.BATCH % 256 == 0  # TILE_B divides the batch
+    assert aot.DIM == 2
+    assert aot.NEGATIVES == 5

@@ -1,0 +1,183 @@
+//! Barnes–Hut t-SNE (van der Maaten, JMLR 2014) — the paper's main
+//! layout baseline (Fig 5–6, Table 2).
+//!
+//! Full-batch gradient descent on KL(P ‖ Q) with the Student-t kernel,
+//! momentum + adaptive gains, early exaggeration, and the quadtree
+//! far-field approximation of the repulsive term — O(N log N) per
+//! iteration (vs LargeVis's O(N) total sampling).
+//!
+//! The input P comes from the same perplexity-calibrated, symmetrized
+//! KNN graph as LargeVis (our [`crate::graph::weights`]), matching the
+//! paper's experimental setup where all visualizers share one KNN graph.
+
+use crate::baselines::quadtree::QuadTree;
+use crate::data::matrix::Matrix;
+use crate::graph::CsrGraph;
+use crate::util::pool;
+use crate::vis::init_layout;
+
+/// BH t-SNE hyper-parameters (defaults follow van der Maaten's code).
+#[derive(Clone, Debug)]
+pub struct BhTsneConfig {
+    /// Barnes–Hut accuracy θ (paper setting: 0.5).
+    pub theta: f32,
+    /// Gradient-descent iterations (paper setting: 1000).
+    pub iters: usize,
+    /// Learning rate η (t-SNE default 200; the paper shows large data
+    /// wants ~2500–3000, which Fig 5/6 sweeps explore).
+    pub eta: f32,
+    /// Early-exaggeration factor and duration.
+    pub exaggeration: f32,
+    /// Iterations with exaggeration on.
+    pub exaggeration_iters: usize,
+    /// Momentum before/after iteration 250.
+    pub momentum: f32,
+    /// Momentum after the switch.
+    pub final_momentum: f32,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Layout init seed.
+    pub seed: u64,
+}
+
+impl Default for BhTsneConfig {
+    fn default() -> Self {
+        BhTsneConfig {
+            theta: 0.5,
+            iters: 1000,
+            eta: 200.0,
+            exaggeration: 12.0,
+            exaggeration_iters: 250,
+            momentum: 0.5,
+            final_momentum: 0.8,
+            threads: 0,
+            seed: 0x7e5e,
+        }
+    }
+}
+
+/// Run BH t-SNE on a weighted graph; returns the 2D layout.
+pub fn bh_tsne(graph: &CsrGraph, cfg: &BhTsneConfig) -> Matrix {
+    let n = graph.n();
+    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
+    let mut y = init_layout(n, 2, cfg.seed);
+    let mut velocity = vec![0f32; n * 2];
+    let mut gains = vec![1f32; n * 2];
+
+    // P normalized over directed pairs (our weighted graph already sums
+    // to 1 over directed edges).
+    let edges = graph.edges();
+
+    for iter in 0..cfg.iters {
+        let exag = if iter < cfg.exaggeration_iters { cfg.exaggeration } else { 1.0 };
+        let momentum = if iter < 250 { cfg.momentum } else { cfg.final_momentum };
+
+        // Repulsive pass: per-point far-field sums and the global Z.
+        let tree = QuadTree::build(&y);
+        // rep[i] = (Σ_c N_c q_ic² (y_i - y_c), Σ_c N_c q_ic) with
+        // q_ic = 1/(1+d²); Z = Σ_i Σ_c N_c q_ic.
+        let rep: Vec<(f32, f32, f64)> = pool::parallel_map(n, threads, |i| {
+            let (xi, yi) = (y.row(i)[0], y.row(i)[1]);
+            let (mut fx, mut fy, mut z) = (0f32, 0f32, 0f64);
+            tree.for_each_far_field(xi, yi, cfg.theta, i as u32, &mut |cnt, cx, cy| {
+                let dx = xi - cx;
+                let dy = yi - cy;
+                let q = 1.0 / (1.0 + dx * dx + dy * dy);
+                let q2 = q * q * cnt as f32;
+                fx += q2 * dx;
+                fy += q2 * dy;
+                z += (cnt as f32 * q) as f64;
+            });
+            (fx, fy, z)
+        });
+        let z: f64 = rep.iter().map(|&(_, _, zi)| zi).sum::<f64>().max(1e-12);
+
+        // Attractive pass over the sparse P (parallel over edge chunks,
+        // each worker returns a private accumulator, merged after).
+        let mut attr = vec![0f32; n * 2];
+        {
+            let nt = threads.max(1);
+            let chunk = edges.len().div_ceil(nt);
+            let partials: Vec<Vec<f32>> = pool::parallel_map(nt, nt, |tid| {
+                let lo = tid * chunk;
+                let hi = ((tid + 1) * chunk).min(edges.len());
+                let mut local = vec![0f32; n * 2];
+                for &(a, b, w) in &edges[lo..hi.max(lo)] {
+                    let (ai, bi) = (a as usize, b as usize);
+                    let dx = y.row(ai)[0] - y.row(bi)[0];
+                    let dy = y.row(ai)[1] - y.row(bi)[1];
+                    let q = 1.0 / (1.0 + dx * dx + dy * dy);
+                    let c = (exag * w as f32) * q;
+                    local[ai * 2] += c * dx;
+                    local[ai * 2 + 1] += c * dy;
+                }
+                local
+            });
+            for local in &partials {
+                for (a, l) in attr.iter_mut().zip(local) {
+                    *a += l;
+                }
+            }
+        }
+
+        // Gradient + momentum/gains update.
+        for i in 0..n {
+            for k in 0..2 {
+                let g_attr = attr[i * 2 + k];
+                let g_rep = match k {
+                    0 => rep[i].0,
+                    _ => rep[i].1,
+                } / z as f32;
+                let grad = 4.0 * (g_attr - g_rep);
+                let idx = i * 2 + k;
+                // Adaptive gains (Jacobs): sign agreement shrinks, else grows.
+                gains[idx] = if grad.signum() != velocity[idx].signum() {
+                    (gains[idx] + 0.2).min(8.0)
+                } else {
+                    (gains[idx] * 0.8).max(0.01)
+                };
+                velocity[idx] = momentum * velocity[idx] - cfg.eta * gains[idx] * grad;
+                y.row_mut(i)[k] += velocity[idx];
+            }
+        }
+        // Recenter (t-SNE does this every iteration).
+        let means = y.col_means();
+        for i in 0..n {
+            for k in 0..2 {
+                y.row_mut(i)[k] -= means[k];
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+    use crate::eval::knn_classifier::{knn_accuracy, KnnEvalConfig};
+    use crate::graph::weights::{weighted_graph, WeightConfig};
+    use crate::knn::bruteforce::exact_knn;
+
+    #[test]
+    fn tsne_separates_gaussian_clusters() {
+        let (m, labels) = gaussian_mixture(300, 16, 3, 0.0, 5);
+        let knn = exact_knn(&m, 20, 4);
+        let g = weighted_graph(&knn, &WeightConfig { perplexity: 10.0, ..Default::default() });
+        let cfg = BhTsneConfig { iters: 300, threads: 2, ..Default::default() };
+        let y = bh_tsne(&g, &cfg);
+        assert!(y.as_slice().iter().all(|v| v.is_finite()));
+        let acc = knn_accuracy(&y, &labels, &KnnEvalConfig { k: 5, ..Default::default() });
+        assert!(acc > 0.85, "t-SNE accuracy {acc}");
+    }
+
+    #[test]
+    fn layout_centered() {
+        let (m, _) = gaussian_mixture(120, 8, 2, 0.2, 6);
+        let knn = exact_knn(&m, 10, 2);
+        let g = weighted_graph(&knn, &WeightConfig { perplexity: 5.0, ..Default::default() });
+        let y = bh_tsne(&g, &BhTsneConfig { iters: 50, threads: 1, ..Default::default() });
+        let means = y.col_means();
+        assert!(means[0].abs() < 1e-3 && means[1].abs() < 1e-3, "{means:?}");
+    }
+}

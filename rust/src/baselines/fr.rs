@@ -1,0 +1,127 @@
+//! Fruchterman–Reingold force-directed layout (1991) — the classical
+//! O(N²)-per-iteration graph-drawing baseline the paper cites as
+//! unscalable beyond ~1M nodes. Included for the related-work
+//! comparison on small graphs and as a sanity baseline in tests.
+
+use crate::data::matrix::Matrix;
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+/// FR parameters.
+#[derive(Clone, Debug)]
+pub struct FrConfig {
+    /// Iterations.
+    pub iters: usize,
+    /// Layout area edge length.
+    pub width: f32,
+    /// Seed for the random initial placement.
+    pub seed: u64,
+}
+
+impl Default for FrConfig {
+    fn default() -> Self {
+        FrConfig { iters: 200, width: 10.0, seed: 0xf4 }
+    }
+}
+
+/// Run Fruchterman–Reingold; returns the 2D layout. O(iters · N²).
+pub fn fruchterman_reingold(graph: &CsrGraph, cfg: &FrConfig) -> Matrix {
+    let n = graph.n();
+    let mut rng = Rng::new(cfg.seed);
+    let mut y = Matrix::zeros(n, 2);
+    for i in 0..n {
+        y.row_mut(i)[0] = rng.range_f32(-cfg.width / 2.0, cfg.width / 2.0);
+        y.row_mut(i)[1] = rng.range_f32(-cfg.width / 2.0, cfg.width / 2.0);
+    }
+    if n < 2 {
+        return y;
+    }
+    let k = cfg.width / (n as f32).sqrt(); // optimal pair distance
+    let mut disp = vec![0f32; n * 2];
+
+    for iter in 0..cfg.iters {
+        let temp = cfg.width / 10.0 * (1.0 - iter as f32 / cfg.iters as f32).max(0.01);
+        disp.iter_mut().for_each(|d| *d = 0.0);
+        // Repulsive: all pairs.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dx = y.row(i)[0] - y.row(j)[0];
+                let dy = y.row(i)[1] - y.row(j)[1];
+                let d = (dx * dx + dy * dy).sqrt().max(1e-6);
+                let f = k * k / d;
+                let (ux, uy) = (dx / d, dy / d);
+                disp[i * 2] += ux * f;
+                disp[i * 2 + 1] += uy * f;
+                disp[j * 2] -= ux * f;
+                disp[j * 2 + 1] -= uy * f;
+            }
+        }
+        // Attractive: edges.
+        for &(a, b, _) in graph.edges() {
+            let (i, j) = (a as usize, b as usize);
+            let dx = y.row(i)[0] - y.row(j)[0];
+            let dy = y.row(i)[1] - y.row(j)[1];
+            let d = (dx * dx + dy * dy).sqrt().max(1e-6);
+            let f = d * d / k;
+            let (ux, uy) = (dx / d, dy / d);
+            disp[i * 2] -= ux * f;
+            disp[i * 2 + 1] -= uy * f;
+            // (both directions present in edges(), so each endpoint
+            // accumulates its pull once per direction)
+        }
+        // Apply with temperature cap.
+        for i in 0..n {
+            let dx = disp[i * 2];
+            let dy = disp[i * 2 + 1];
+            let d = (dx * dx + dy * dy).sqrt().max(1e-9);
+            let step = d.min(temp);
+            y.row_mut(i)[0] += dx / d * step;
+            y.row_mut(i)[1] += dy / d * step;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_two_cliques() {
+        let mut edges = Vec::new();
+        for c in 0..2u32 {
+            let base = c * 5;
+            for a in 0..5u32 {
+                for b in (a + 1)..5u32 {
+                    edges.push((base + a, base + b, 1.0f64));
+                }
+            }
+        }
+        edges.push((0, 5, 1.0));
+        let g = CsrGraph::from_undirected(10, &edges);
+        let y = fruchterman_reingold(&g, &FrConfig::default());
+        let mut intra = 0f64;
+        let mut inter = 0f64;
+        let (mut ni, mut nx) = (0, 0);
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let d = y.sqdist(a, b) as f64;
+                if (a < 5) == (b < 5) {
+                    intra += d;
+                    ni += 1;
+                } else {
+                    inter += d;
+                    nx += 1;
+                }
+            }
+        }
+        assert!(inter / nx as f64 > intra / ni as f64, "FR failed to separate cliques");
+    }
+
+    #[test]
+    fn all_coordinates_finite() {
+        let g = CsrGraph::from_undirected(3, &[(0, 1, 1.0), (1, 2, 1.0)]);
+        let y = fruchterman_reingold(&g, &FrConfig { iters: 50, ..Default::default() });
+        assert!(y.as_slice().iter().all(|v| v.is_finite()));
+    }
+}

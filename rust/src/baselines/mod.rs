@@ -1,0 +1,13 @@
+//! Visualization baselines from the paper's evaluation (§4.3):
+//! Barnes–Hut t-SNE, BH Symmetric SNE, and Fruchterman–Reingold.
+//! (The LINE-2D baseline lives in [`crate::embed::line`].)
+
+pub mod quadtree;
+pub mod bhtsne;
+pub mod sne;
+pub mod fr;
+
+pub use bhtsne::{bh_tsne, BhTsneConfig};
+pub use fr::{fruchterman_reingold, FrConfig};
+pub use quadtree::QuadTree;
+pub use sne::{bh_sne, BhSneConfig};

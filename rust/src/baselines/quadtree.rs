@@ -1,0 +1,254 @@
+//! Barnes–Hut quadtree over 2D layouts: each cell stores its point
+//! count and center of mass; far-field cells (size/dist < θ) stand in
+//! for their points, giving O(N log N) repulsive-force sums for t-SNE
+//! and SNE.
+
+use crate::data::matrix::Matrix;
+
+/// Quadtree node (Vec-backed; children index NONE = empty).
+struct Node {
+    /// Cell center (x, y).
+    cx: f32,
+    cy: f32,
+    /// Cell half-width.
+    half: f32,
+    /// Number of points in the subtree.
+    count: u32,
+    /// Center of mass of contained points.
+    mass_x: f32,
+    mass_y: f32,
+    /// A representative point when `count == 1`.
+    point: u32,
+    /// Child indices (NW, NE, SW, SE).
+    children: [u32; 4],
+}
+
+const NONE: u32 = u32::MAX;
+
+/// Barnes–Hut quadtree.
+pub struct QuadTree {
+    nodes: Vec<Node>,
+}
+
+impl QuadTree {
+    /// Build over the first two columns of `layout`.
+    pub fn build(layout: &Matrix) -> Self {
+        assert!(layout.d() >= 2 && layout.n() > 0);
+        let n = layout.n();
+        let (mut xmin, mut xmax, mut ymin, mut ymax) = (f32::MAX, f32::MIN, f32::MAX, f32::MIN);
+        for i in 0..n {
+            let r = layout.row(i);
+            xmin = xmin.min(r[0]);
+            xmax = xmax.max(r[0]);
+            ymin = ymin.min(r[1]);
+            ymax = ymax.max(r[1]);
+        }
+        let half = 0.5 * ((xmax - xmin).max(ymax - ymin)).max(1e-6) + 1e-5;
+        let mut tree = QuadTree { nodes: Vec::with_capacity(2 * n) };
+        tree.nodes.push(Node {
+            cx: 0.5 * (xmin + xmax),
+            cy: 0.5 * (ymin + ymax),
+            half,
+            count: 0,
+            mass_x: 0.0,
+            mass_y: 0.0,
+            point: NONE,
+            children: [NONE; 4],
+        });
+        for i in 0..n {
+            let r = layout.row(i);
+            tree.insert(0, i as u32, r[0], r[1], 0);
+        }
+        tree
+    }
+
+    fn insert(&mut self, node: u32, point: u32, x: f32, y: f32, depth: usize) {
+        let (count, cx, cy, half) = {
+            let nd = &mut self.nodes[node as usize];
+            nd.mass_x += x;
+            nd.mass_y += y;
+            nd.count += 1;
+            (nd.count, nd.cx, nd.cy, nd.half)
+        };
+        if count == 1 {
+            self.nodes[node as usize].point = point;
+            return;
+        }
+        // Depth cap: coincident points pile up in one cell.
+        if depth > 48 {
+            return;
+        }
+        // On the second insertion, push the resident point down.
+        if count == 2 {
+            let old = self.nodes[node as usize].point;
+            self.nodes[node as usize].point = NONE;
+            if old != NONE {
+                let (ox, oy) = {
+                    let nd = &self.nodes[node as usize];
+                    // Recover the old point's coords from the mass sums.
+                    (nd.mass_x - x, nd.mass_y - y)
+                };
+                let qo = self.child_for(node, ox, oy, cx, cy, half, depth);
+                self.insert_into_child(qo, old, ox, oy, depth);
+            }
+        }
+        let q = self.child_for(node, x, y, cx, cy, half, depth);
+        self.insert_into_child(q, point, x, y, depth);
+    }
+
+    fn insert_into_child(&mut self, child: u32, point: u32, x: f32, y: f32, depth: usize) {
+        self.insert(child, point, x, y, depth + 1);
+    }
+
+    fn child_for(&mut self, node: u32, x: f32, y: f32, cx: f32, cy: f32, half: f32, _depth: usize) -> u32 {
+        let (qi, ox, oy) = match (x >= cx, y >= cy) {
+            (false, true) => (0, -0.5, 0.5),
+            (true, true) => (1, 0.5, 0.5),
+            (false, false) => (2, -0.5, -0.5),
+            (true, false) => (3, 0.5, -0.5),
+        };
+        let existing = self.nodes[node as usize].children[qi];
+        if existing != NONE {
+            return existing;
+        }
+        let child = self.nodes.len() as u32;
+        self.nodes.push(Node {
+            cx: cx + ox * half,
+            cy: cy + oy * half,
+            half: 0.5 * half,
+            count: 0,
+            mass_x: 0.0,
+            mass_y: 0.0,
+            point: NONE,
+            children: [NONE; 4],
+        });
+        self.nodes[node as usize].children[qi] = child;
+        child
+    }
+
+    /// Barnes–Hut traversal: call `accept(count, com_x, com_y)` for every
+    /// cell that is far enough from `(x, y)` (cell_size/dist < θ) or is a
+    /// single point other than `skip`.
+    pub fn for_each_far_field(
+        &self,
+        x: f32,
+        y: f32,
+        theta: f32,
+        skip: u32,
+        accept: &mut impl FnMut(u32, f32, f32),
+    ) {
+        self.walk(0, x, y, theta, skip, accept);
+    }
+
+    fn walk(
+        &self,
+        node: u32,
+        x: f32,
+        y: f32,
+        theta: f32,
+        skip: u32,
+        accept: &mut impl FnMut(u32, f32, f32),
+    ) {
+        let nd = &self.nodes[node as usize];
+        if nd.count == 0 {
+            return;
+        }
+        let com_x = nd.mass_x / nd.count as f32;
+        let com_y = nd.mass_y / nd.count as f32;
+        if nd.count == 1 {
+            if nd.point != skip {
+                accept(1, com_x, com_y);
+            }
+            return;
+        }
+        let dx = x - com_x;
+        let dy = y - com_y;
+        let dist = (dx * dx + dy * dy).sqrt().max(1e-12);
+        if (2.0 * nd.half) / dist < theta {
+            // Far field. If the query point itself is inside this cell,
+            // its self-contribution is one point at distance ~0 — the
+            // callers' kernels are finite there, and the error is O(1/N).
+            accept(nd.count, com_x, com_y);
+            return;
+        }
+        for &c in &nd.children {
+            if c != NONE {
+                self.walk(c, x, y, theta, skip, accept);
+            }
+        }
+    }
+
+    /// Total number of points inserted.
+    pub fn count(&self) -> u32 {
+        self.nodes[0].count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_layout(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(n, 2);
+        for i in 0..n {
+            m.row_mut(i)[0] = rng.gaussian() * 3.0;
+            m.row_mut(i)[1] = rng.gaussian() * 3.0;
+        }
+        m
+    }
+
+    #[test]
+    fn mass_conservation() {
+        let m = random_layout(500, 1);
+        let t = QuadTree::build(&m);
+        assert_eq!(t.count(), 500);
+        // Sum of accepted counts with theta=0 (never accept internal
+        // cells => every leaf visited) equals n-1 (skip = self).
+        let mut total = 0u32;
+        t.for_each_far_field(m.row(0)[0], m.row(0)[1], 0.0, 0, &mut |c, _, _| total += c);
+        assert_eq!(total, 499);
+    }
+
+    #[test]
+    fn far_field_approximates_exact_sum() {
+        // Σ_j 1/(1+d²): BH vs exact within a few percent at θ=0.5.
+        let m = random_layout(800, 2);
+        let t = QuadTree::build(&m);
+        let (qx, qy) = (m.row(0)[0], m.row(0)[1]);
+        let mut approx = 0f64;
+        t.for_each_far_field(qx, qy, 0.5, 0, &mut |cnt, cx, cy| {
+            let d2 = (qx - cx) * (qx - cx) + (qy - cy) * (qy - cy);
+            approx += cnt as f64 / (1.0 + d2 as f64);
+        });
+        let mut exact = 0f64;
+        for j in 1..800 {
+            let d2 = m.sqdist(0, j);
+            exact += 1.0 / (1.0 + d2 as f64);
+        }
+        let rel = (approx - exact).abs() / exact;
+        assert!(rel < 0.05, "rel err {rel}: approx {approx} vs exact {exact}");
+    }
+
+    #[test]
+    fn duplicate_points_no_infinite_loop() {
+        let mut m = Matrix::zeros(64, 2);
+        for i in 0..64 {
+            m.row_mut(i).copy_from_slice(&[1.5, -2.0]);
+        }
+        let t = QuadTree::build(&m);
+        assert_eq!(t.count(), 64);
+    }
+
+    #[test]
+    fn theta_large_visits_few_cells() {
+        let m = random_layout(1000, 3);
+        let t = QuadTree::build(&m);
+        let mut visits_strict = 0;
+        let mut visits_loose = 0;
+        t.for_each_far_field(0.0, 0.0, 0.2, NONE, &mut |_, _, _| visits_strict += 1);
+        t.for_each_far_field(0.0, 0.0, 1.5, NONE, &mut |_, _, _| visits_loose += 1);
+        assert!(visits_loose < visits_strict);
+    }
+}

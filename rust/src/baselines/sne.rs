@@ -1,0 +1,113 @@
+//! Barnes–Hut Symmetric SNE (Hinton & Roweis 2002, accelerated per van
+//! der Maaten 2014) — Fig 5's weakest graph-visualization baseline.
+//!
+//! Identical to BH t-SNE except the low-dimensional kernel is Gaussian
+//! `exp(-d²)` instead of Student-t — which is exactly why it crowds:
+//! comparing the two isolates the heavy-tail choice (the same contrast
+//! Fig 4 draws for LargeVis's f).
+
+use crate::baselines::quadtree::QuadTree;
+use crate::data::matrix::Matrix;
+use crate::graph::CsrGraph;
+use crate::util::pool;
+use crate::vis::init_layout;
+
+/// BH-SSNE hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct BhSneConfig {
+    /// Barnes–Hut accuracy θ.
+    pub theta: f32,
+    /// Iterations.
+    pub iters: usize,
+    /// Learning rate.
+    pub eta: f32,
+    /// Momentum.
+    pub momentum: f32,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Default for BhSneConfig {
+    fn default() -> Self {
+        BhSneConfig { theta: 0.5, iters: 1000, eta: 200.0, momentum: 0.7, threads: 0, seed: 0x55e }
+    }
+}
+
+/// Run BH Symmetric SNE on a weighted graph; returns the 2D layout.
+pub fn bh_sne(graph: &CsrGraph, cfg: &BhSneConfig) -> Matrix {
+    let n = graph.n();
+    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
+    let mut y = init_layout(n, 2, cfg.seed);
+    let mut velocity = vec![0f32; n * 2];
+    let edges = graph.edges();
+
+    for _iter in 0..cfg.iters {
+        let tree = QuadTree::build(&y);
+        // Gaussian far field: Σ_c N_c e^{-d²} (y_i-y_c) and Z terms.
+        let rep: Vec<(f32, f32, f64)> = pool::parallel_map(n, threads, |i| {
+            let (xi, yi) = (y.row(i)[0], y.row(i)[1]);
+            let (mut fx, mut fy, mut z) = (0f32, 0f32, 0f64);
+            tree.for_each_far_field(xi, yi, cfg.theta, i as u32, &mut |cnt, cx, cy| {
+                let dx = xi - cx;
+                let dy = yi - cy;
+                let w = (-(dx * dx + dy * dy)).exp() * cnt as f32;
+                fx += w * dx;
+                fy += w * dy;
+                z += w as f64;
+            });
+            (fx, fy, z)
+        });
+        let z: f64 = rep.iter().map(|&(_, _, zi)| zi).sum::<f64>().max(1e-12);
+
+        let mut attr = vec![0f32; n * 2];
+        for &(a, b, w) in edges {
+            let (ai, bi) = (a as usize, b as usize);
+            let dx = y.row(ai)[0] - y.row(bi)[0];
+            let dy = y.row(ai)[1] - y.row(bi)[1];
+            attr[ai * 2] += w as f32 * dx;
+            attr[ai * 2 + 1] += w as f32 * dy;
+        }
+
+        for i in 0..n {
+            for k in 0..2 {
+                let g_rep = match k {
+                    0 => rep[i].0,
+                    _ => rep[i].1,
+                } / z as f32;
+                let grad = 2.0 * (attr[i * 2 + k] - g_rep);
+                let idx = i * 2 + k;
+                velocity[idx] = cfg.momentum * velocity[idx] - cfg.eta * grad;
+                y.row_mut(i)[k] += velocity[idx];
+            }
+        }
+        let means = y.col_means();
+        for i in 0..n {
+            for k in 0..2 {
+                y.row_mut(i)[k] -= means[k];
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+    use crate::eval::knn_classifier::{knn_accuracy, KnnEvalConfig};
+    use crate::graph::weights::{weighted_graph, WeightConfig};
+    use crate::knn::bruteforce::exact_knn;
+
+    #[test]
+    fn sne_recovers_coarse_structure() {
+        let (m, labels) = gaussian_mixture(240, 12, 3, 0.0, 8);
+        let knn = exact_knn(&m, 15, 2);
+        let g = weighted_graph(&knn, &WeightConfig { perplexity: 8.0, ..Default::default() });
+        let y = bh_sne(&g, &BhSneConfig { iters: 250, eta: 50.0, threads: 2, ..Default::default() });
+        assert!(y.as_slice().iter().all(|v| v.is_finite()));
+        let acc = knn_accuracy(&y, &labels, &KnnEvalConfig { k: 5, ..Default::default() });
+        assert!(acc > 0.6, "SSNE accuracy {acc}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Bench harness (no `criterion` offline): timing loops with warmup,
+//! aligned table printing matching the paper's rows, and TSV output so
+//! figures can be re-plotted.
+
+pub mod workloads;
+
+use crate::util::stats::{summarize, Summary};
+use std::io::Write;
+use std::time::Instant;
+
+/// Time `f` for `iters` measured runs after `warmup` runs.
+pub fn time_fn<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&samples)
+}
+
+/// A results table with aligned columns, printable and TSV-dumpable.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column names.
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Print to stdout with aligned columns.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.header));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+
+    /// Write as TSV into `target/figures/<name>.tsv`.
+    pub fn write_tsv(&self, name: &str) -> anyhow::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("target/figures");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.tsv"));
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        writeln!(f, "# {}", self.title)?;
+        writeln!(f, "{}", self.header.join("\t"))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join("\t"))?;
+        }
+        f.flush()?;
+        Ok(path)
+    }
+}
+
+/// Scale knob for bench workloads: `LARGEVIS_BENCH_SCALE` (default 1.0)
+/// multiplies dataset sizes so CI can run tiny and a workstation full.
+pub fn bench_scale() -> f64 {
+    std::env::var("LARGEVIS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_returns_iters_samples() {
+        let s = time_fn(1, 5, || 2 + 2);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("demo", &["alg", "secs"]);
+        t.row(&["largevis".into(), "1.5".into()]);
+        t.row(&["tsne".into(), "9.9".into()]);
+        let p = t.write_tsv("test_demo").unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.contains("largevis\t1.5"));
+        t.print();
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

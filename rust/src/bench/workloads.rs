@@ -1,0 +1,47 @@
+//! Shared workload setup for the figure/table benches: dataset →
+//! KNN graph → weighted graph, with wall-clock accounting.
+
+use crate::data::datasets::{self, Dataset};
+use crate::graph::weights::{weighted_graph, WeightConfig};
+use crate::graph::CsrGraph;
+use crate::knn::explore::{largevis_knn, LargeVisKnnConfig};
+use crate::knn::KnnGraph;
+
+/// A fully prepared layout workload.
+pub struct Workload {
+    /// The generated dataset.
+    pub dataset: Dataset,
+    /// Its approximate KNN graph.
+    pub knn: KnnGraph,
+    /// The perplexity-weighted symmetrized graph.
+    pub graph: CsrGraph,
+    /// Seconds spent building the KNN graph.
+    pub knn_secs: f64,
+}
+
+/// Build the standard workload the paper uses for the layout benches:
+/// LargeVis KNN (default forest + 1 exploring pass), perplexity 50.
+pub fn prepare(dataset: &str, scale: f64, k: usize, seed: u64) -> Workload {
+    let ds = datasets::generate(dataset, scale, seed)
+        .unwrap_or_else(|| panic!("unknown dataset {dataset}"));
+    let k = k.min(ds.points.n().saturating_sub(1)).max(2);
+    let t0 = std::time::Instant::now();
+    let knn = largevis_knn(&ds.points, k, &LargeVisKnnConfig::default());
+    let knn_secs = t0.elapsed().as_secs_f64();
+    let graph = weighted_graph(&knn, &WeightConfig::default());
+    Workload { dataset: ds, knn, graph, knn_secs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepare_small_workload() {
+        let w = prepare("20ng-like", 0.01, 8, 1);
+        assert!(w.graph.n() > 0);
+        assert!(w.graph.n_directed_edges() > 0);
+        assert!(w.knn_secs >= 0.0);
+        assert_eq!(w.knn.n(), w.dataset.points.n());
+    }
+}

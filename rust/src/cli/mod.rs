@@ -1,0 +1,142 @@
+//! Hand-rolled CLI argument parser (no `clap` offline): subcommands,
+//! `--flag`, `--key value`, `--key=value`, and positional arguments.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, positionals.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Args {
+    /// First non-flag token (e.g. `pipeline`).
+    pub command: String,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Remaining positional arguments.
+    pub positionals: Vec<String>,
+}
+
+/// Option keys that take a value (everything else after `--` is a flag).
+const VALUE_KEYS: &[&str] = &[
+    "dataset", "scale", "k", "trees", "explore-iters", "perplexity", "samples", "negatives",
+    "gamma", "rho0", "threads", "seed", "out", "config", "dim", "prob-fn", "prob-a", "engine",
+    "max-visits", "format", "sample",
+];
+
+/// Parse a raw argument vector (without argv[0]).
+pub fn parse(argv: &[String]) -> Result<Args> {
+    let mut args = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        if let Some(stripped) = tok.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                args.options.insert(k.to_string(), v.to_string());
+            } else if VALUE_KEYS.contains(&stripped) {
+                i += 1;
+                let Some(v) = argv.get(i) else {
+                    bail!("option --{stripped} expects a value");
+                };
+                args.options.insert(stripped.to_string(), v.clone());
+            } else {
+                args.flags.push(stripped.to_string());
+            }
+        } else if args.command.is_empty() {
+            args.command = tok.clone();
+        } else {
+            args.positionals.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+impl Args {
+    /// Typed option lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(raw) => {
+                raw.parse().map_err(|_| anyhow::anyhow!("--{key}: cannot parse {raw:?}"))
+            }
+        }
+    }
+
+    /// String option lookup.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// True if `--flag` present.
+    pub fn has_flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+/// Usage text for the `largevis` binary.
+pub const USAGE: &str = "\
+largevis — LargeVis (WWW 2016) reproduction
+
+USAGE:
+    largevis <COMMAND> [OPTIONS]
+
+COMMANDS:
+    pipeline    run the full pipeline: dataset -> KNN -> weights -> layout -> SVG + report
+    knn         build a KNN graph and report recall vs exact ground truth
+    datasets    list the dataset registry (paper Table 1 analogs)
+    info        print build/runtime information
+
+COMMON OPTIONS:
+    --dataset <name>      registry dataset (default 20ng-like); `largevis datasets` lists them
+    --scale <f>           fraction of the dataset's full size (default 0.1)
+    --k <n>               neighbors per point (default 150)
+    --trees <n>           RP-forest trees (default 4)
+    --explore-iters <n>   neighbor-exploring iterations (default 1)
+    --perplexity <f>      target perplexity (default 50)
+    --samples <n>         SGD edge samples per vertex (default 2000)
+    --negatives <n>       negative samples M (default 5)
+    --gamma <f>           negative weight gamma (default 7)
+    --engine <hogwild|xla>  layout engine (default hogwild)
+    --threads <n>         worker threads (default: all cores)
+    --seed <n>            RNG seed
+    --out <dir>           output directory (default target/run)
+    --config <file>       INI config file (CLI options override it)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = parse(&v(&["pipeline", "--dataset", "mnist-like", "--scale=0.25", "--quiet"]))
+            .unwrap();
+        assert_eq!(a.command, "pipeline");
+        assert_eq!(a.get_str("dataset"), Some("mnist-like"));
+        assert_eq!(a.get_or::<f64>("scale", 1.0).unwrap(), 0.25);
+        assert!(a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&v(&["knn", "--k"])).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse(&v(&["bench", "fig2", "fig3"])).unwrap();
+        assert_eq!(a.positionals, vec!["fig2", "fig3"]);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&v(&["pipeline"])).unwrap();
+        assert_eq!(a.get_or::<usize>("k", 150).unwrap(), 150);
+        assert!(parse(&v(&["x", "--k", "NaNope"])).unwrap().get_or::<usize>("k", 1).is_err());
+    }
+}

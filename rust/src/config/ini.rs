@@ -1,0 +1,128 @@
+//! INI-subset parser: sections, `key = value`, comments, blank lines.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed INI document: `section -> key -> value` (root section = "").
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Ini {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Ini {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Ini> {
+        let mut ini = Ini::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                ini.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got {line:?}", lineno + 1);
+            };
+            ini.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(ini)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Ini> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        Ini::parse(&text)
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, section: &str, key: &str, default: T) -> Result<T> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse()
+                .map_err(|_| anyhow::anyhow!("[{section}] {key}: cannot parse {raw:?}")),
+        }
+    }
+
+    /// Boolean lookup accepting true/false/1/0/yes/no.
+    pub fn get_bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(raw) => match raw.to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                other => bail!("[{section}] {key}: not a boolean: {other:?}"),
+            },
+        }
+    }
+
+    /// Section names present in the document.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# pipeline config
+dataset = 20ng-like
+
+[knn]
+k = 150
+trees = 4
+
+[vis]
+gamma = 7.0
+use_xla = yes
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let ini = Ini::parse(SAMPLE).unwrap();
+        assert_eq!(ini.get("", "dataset"), Some("20ng-like"));
+        assert_eq!(ini.get_or::<usize>("knn", "k", 0).unwrap(), 150);
+        assert_eq!(ini.get_or::<f32>("vis", "gamma", 0.0).unwrap(), 7.0);
+        assert!(ini.get_bool_or("vis", "use_xla", false).unwrap());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let ini = Ini::parse("").unwrap();
+        assert_eq!(ini.get_or::<usize>("knn", "k", 150).unwrap(), 150);
+        assert!(!ini.get_bool_or("x", "y", false).unwrap());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Ini::parse("not a kv line").is_err());
+        assert!(Ini::parse("[unterminated").is_err());
+        let ini = Ini::parse("k = notanumber").unwrap();
+        assert!(ini.get_or::<usize>("", "k", 1).is_err());
+        assert!(ini.get_bool_or("", "k", true).is_err());
+    }
+
+    #[test]
+    fn whitespace_tolerated() {
+        let ini = Ini::parse("  key   =   spaced value  ").unwrap();
+        assert_eq!(ini.get("", "key"), Some("spaced value"));
+    }
+}

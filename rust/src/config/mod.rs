@@ -1,0 +1,9 @@
+//! Configuration system (no `serde` offline): a small INI-style parser
+//! (`[section]`, `key = value`, `#`/`;` comments) with typed getters,
+//! plus the typed [`PipelineConfig`] used by the coordinator and CLI.
+
+pub mod ini;
+pub mod pipeline;
+
+pub use ini::Ini;
+pub use pipeline::PipelineConfig;

@@ -1,0 +1,128 @@
+//! Typed end-to-end pipeline configuration, assembled from an INI file
+//! and/or CLI overrides.
+
+use crate::config::ini::Ini;
+use crate::graph::weights::WeightConfig;
+use crate::knn::explore::LargeVisKnnConfig;
+use crate::knn::rptree::RpForestConfig;
+use crate::vis::{LargeVisConfig, ProbFn};
+use anyhow::Result;
+
+/// Everything the coordinator needs for one run.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Registry dataset name.
+    pub dataset: String,
+    /// Scale factor applied to the dataset's full N.
+    pub scale: f64,
+    /// KNN graph: K neighbors (paper: 150).
+    pub k: usize,
+    /// KNN construction config.
+    pub knn: LargeVisKnnConfig,
+    /// Edge weighting (perplexity).
+    pub weights: WeightConfig,
+    /// Layout engine config.
+    pub vis: LargeVisConfig,
+    /// Use the AOT/XLA batched optimizer instead of Hogwild.
+    pub use_xla: bool,
+    /// Output directory for layout/SVG/report.
+    pub out_dir: std::path::PathBuf,
+    /// Seed for dataset generation.
+    pub data_seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            dataset: "20ng-like".to_string(),
+            scale: 1.0,
+            k: 150,
+            knn: LargeVisKnnConfig::default(),
+            weights: WeightConfig::default(),
+            vis: LargeVisConfig::default(),
+            use_xla: false,
+            out_dir: std::path::PathBuf::from("target/run"),
+            data_seed: 0xda7a,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Build from an INI document (missing keys keep defaults).
+    pub fn from_ini(ini: &Ini) -> Result<Self> {
+        let mut cfg = PipelineConfig::default();
+        cfg.dataset = ini.get("", "dataset").unwrap_or(&cfg.dataset).to_string();
+        cfg.scale = ini.get_or("", "scale", cfg.scale)?;
+        cfg.data_seed = ini.get_or("", "seed", cfg.data_seed)?;
+        if let Some(dir) = ini.get("", "out_dir") {
+            cfg.out_dir = dir.into();
+        }
+
+        cfg.k = ini.get_or("knn", "k", cfg.k)?;
+        cfg.knn.forest = RpForestConfig {
+            n_trees: ini.get_or("knn", "trees", cfg.knn.forest.n_trees)?,
+            leaf_size: ini.get_or("knn", "leaf_size", cfg.knn.forest.leaf_size)?,
+            search_leaves: ini.get_or("knn", "search_leaves", cfg.knn.forest.search_leaves)?,
+            threads: ini.get_or("knn", "threads", 0)?,
+            seed: ini.get_or("knn", "seed", cfg.knn.forest.seed)?,
+        };
+        cfg.knn.iters = ini.get_or("knn", "explore_iters", cfg.knn.iters)?;
+        cfg.knn.threads = ini.get_or("knn", "threads", 0)?;
+
+        cfg.weights.perplexity = ini.get_or("weights", "perplexity", cfg.weights.perplexity)?;
+
+        cfg.vis.dim = ini.get_or("vis", "dim", cfg.vis.dim)?;
+        cfg.vis.samples_per_vertex =
+            ini.get_or("vis", "samples_per_vertex", cfg.vis.samples_per_vertex)?;
+        cfg.vis.negatives = ini.get_or("vis", "negatives", cfg.vis.negatives)?;
+        cfg.vis.gamma = ini.get_or("vis", "gamma", cfg.vis.gamma)?;
+        cfg.vis.rho0 = ini.get_or("vis", "rho0", cfg.vis.rho0)?;
+        cfg.vis.threads = ini.get_or("vis", "threads", 0)?;
+        cfg.vis.seed = ini.get_or("vis", "seed", cfg.vis.seed)?;
+        let a = ini.get_or("vis", "prob_a", 1.0f32)?;
+        cfg.vis.prob_fn = match ini.get("vis", "prob_fn").unwrap_or("invquad") {
+            "invquad" => ProbFn::InvQuad { a },
+            "sigmoid" => ProbFn::SigmoidSq,
+            other => anyhow::bail!("[vis] prob_fn: unknown function {other:?}"),
+        };
+        cfg.use_xla = ini.get_bool_or("vis", "use_xla", cfg.use_xla)?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = PipelineConfig::default();
+        assert_eq!(c.k, 150);
+        assert_eq!(c.weights.perplexity, 50.0);
+        assert_eq!(c.vis.negatives, 5);
+        assert_eq!(c.vis.gamma, 7.0);
+        assert_eq!(c.vis.rho0, 1.0);
+        assert_eq!(c.vis.prob_fn, ProbFn::InvQuad { a: 1.0 });
+    }
+
+    #[test]
+    fn ini_overrides() {
+        let ini = Ini::parse(
+            "dataset = mnist-like\nscale = 0.5\n[knn]\nk = 30\ntrees = 2\n[vis]\nprob_fn = sigmoid\ngamma = 3.5",
+        )
+        .unwrap();
+        let c = PipelineConfig::from_ini(&ini).unwrap();
+        assert_eq!(c.dataset, "mnist-like");
+        assert_eq!(c.scale, 0.5);
+        assert_eq!(c.k, 30);
+        assert_eq!(c.knn.forest.n_trees, 2);
+        assert_eq!(c.vis.prob_fn, ProbFn::SigmoidSq);
+        assert_eq!(c.vis.gamma, 3.5);
+    }
+
+    #[test]
+    fn bad_prob_fn_rejected() {
+        let ini = Ini::parse("[vis]\nprob_fn = cosine").unwrap();
+        assert!(PipelineConfig::from_ini(&ini).is_err());
+    }
+}

@@ -1,0 +1,77 @@
+//! A small append-only metrics registry for pipeline runs: named f64
+//! gauges with insertion order preserved, dumpable as JSON.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Named metrics collected during a run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    entries: Vec<(String, f64)>,
+}
+
+impl Metrics {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Record (or overwrite) a metric.
+    pub fn set(&mut self, name: &str, value: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 = value;
+        } else {
+            self.entries.push((name.to_string(), value));
+        }
+    }
+
+    /// Fetch a metric.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.entries.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    /// All entries in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.entries.iter().map(|(n, v)| (n.as_str(), *v))
+    }
+
+    /// Serialize to a JSON object string.
+    pub fn to_json(&self) -> String {
+        let mut map = BTreeMap::new();
+        for (n, v) in &self.entries {
+            map.insert(n.clone(), Json::Num(*v));
+        }
+        Json::Obj(map).to_string_compact()
+    }
+
+    /// Pretty print to stderr.
+    pub fn report(&self, label: &str) {
+        eprintln!("[metrics] {label}:");
+        for (n, v) in self.iter() {
+            eprintln!("    {n:<36} {v:.6}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_overwrite() {
+        let mut m = Metrics::new();
+        m.set("a", 1.0);
+        m.set("b", 2.0);
+        m.set("a", 3.0);
+        assert_eq!(m.get("a"), Some(3.0));
+        assert_eq!(m.iter().count(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut m = Metrics::new();
+        m.set("x", 1.5);
+        let j = crate::util::json::Json::parse(&m.to_json()).unwrap();
+        assert_eq!(j.get("x"), Some(&crate::util::json::Json::Num(1.5)));
+    }
+}

@@ -1,0 +1,11 @@
+//! Pipeline coordinator: stage orchestration, metrics, run reports.
+//!
+//! The L3 request path — `dataset → [LINE embed] → KNN graph →
+//! perplexity weights → layout (Hogwild or XLA) → eval → render` — with
+//! per-stage wall-clock accounting and a machine-readable report.
+
+pub mod metrics;
+pub mod pipeline;
+
+pub use metrics::Metrics;
+pub use pipeline::{run_pipeline, PipelineOutput};

@@ -1,0 +1,117 @@
+//! The end-to-end LargeVis pipeline (Figure 1 of the paper).
+
+use crate::config::PipelineConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::data::datasets;
+use crate::data::io::write_layout_tsv;
+use crate::data::matrix::Matrix;
+use crate::eval::knn_classifier::{knn_accuracy, KnnEvalConfig};
+use crate::graph::weights::weighted_graph;
+use crate::knn::explore::largevis_knn;
+use crate::knn::sampled_recall;
+use crate::render::{render_scatter, ScatterStyle};
+use crate::util::timer::Timer;
+use anyhow::{Context, Result};
+
+/// Everything a pipeline run produces.
+pub struct PipelineOutput {
+    /// The 2D/3D layout.
+    pub layout: Matrix,
+    /// Labels (if the dataset has them).
+    pub labels: Option<Vec<u32>>,
+    /// Per-stage timings and quality metrics.
+    pub metrics: Metrics,
+}
+
+/// Run the full pipeline per `cfg`, writing layout TSV + SVG + report
+/// JSON into `cfg.out_dir`.
+pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineOutput> {
+    let mut metrics = Metrics::new();
+    std::fs::create_dir_all(&cfg.out_dir)
+        .with_context(|| format!("create {}", cfg.out_dir.display()))?;
+
+    // Stage 1: dataset (generation stands in for I/O offline).
+    let t = Timer::start("dataset");
+    let ds = datasets::generate(&cfg.dataset, cfg.scale, cfg.data_seed)
+        .with_context(|| format!("unknown dataset {:?}", cfg.dataset))?;
+    metrics.set("dataset.secs", t.report());
+    metrics.set("dataset.n", ds.points.n() as f64);
+    metrics.set("dataset.d", ds.points.d() as f64);
+    eprintln!("[pipeline] dataset {} n={} d={}", ds.name, ds.points.n(), ds.points.d());
+
+    // Stage 2: KNN graph (RP-forest + neighbor exploring).
+    let k = cfg.k.min(ds.points.n().saturating_sub(1)).max(1);
+    let t = Timer::start("knn");
+    let knn = largevis_knn(&ds.points, k, &cfg.knn);
+    metrics.set("knn.secs", t.report());
+    let recall = sampled_recall(&ds.points, &knn, 200, 7, cfg.knn.threads);
+    metrics.set("knn.sampled_recall", recall);
+    eprintln!("[pipeline] knn k={k} sampled-recall={recall:.4}");
+
+    // Stage 3: perplexity weights + symmetrization.
+    let t = Timer::start("weights");
+    let graph = weighted_graph(&knn, &cfg.weights);
+    metrics.set("weights.secs", t.report());
+    metrics.set("graph.directed_edges", graph.n_directed_edges() as f64);
+
+    // Stage 4: layout.
+    let t = Timer::start("layout");
+    let mut layout = crate::vis::init_layout(graph.n(), cfg.vis.dim, cfg.vis.seed);
+    let report = if cfg.use_xla {
+        let rt = crate::runtime::Runtime::from_default_dir()?;
+        crate::vis::batched::optimize_batched(&graph, &mut layout, &cfg.vis, &rt)?
+    } else {
+        crate::vis::sgd::optimize(&graph, &mut layout, &cfg.vis)
+    };
+    metrics.set("layout.secs", t.report());
+    metrics.set("layout.samples", report.samples as f64);
+    metrics.set("layout.samples_per_sec", report.throughput());
+
+    // Stage 5: evaluation (labels permitting).
+    if let Some(labels) = &ds.labels {
+        let t = Timer::start("eval");
+        let acc = knn_accuracy(&layout, labels, &KnnEvalConfig::default());
+        metrics.set("eval.secs", t.report());
+        metrics.set("eval.knn_accuracy", acc);
+        eprintln!("[pipeline] 2D KNN-classifier accuracy = {acc:.4}");
+    }
+
+    // Stage 6: outputs.
+    write_layout_tsv(&cfg.out_dir.join("layout.tsv"), &layout, ds.labels.as_deref())?;
+    render_scatter(
+        &cfg.out_dir.join("layout.svg"),
+        &layout,
+        ds.labels.as_deref(),
+        ds.n_classes,
+        &ScatterStyle { title: ds.name.clone(), ..Default::default() },
+    )?;
+    std::fs::write(cfg.out_dir.join("report.json"), metrics.to_json())?;
+    eprintln!("[pipeline] outputs in {}", cfg.out_dir.display());
+
+    Ok(PipelineOutput { layout, labels: ds.labels, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_pipeline_end_to_end() {
+        let mut cfg = PipelineConfig {
+            dataset: "20ng-like".into(),
+            scale: 0.02, // ~380 points
+            k: 10,
+            out_dir: std::env::temp_dir().join("largevis_pipeline_test"),
+            ..Default::default()
+        };
+        cfg.vis.samples_per_vertex = 400;
+        cfg.knn.forest.n_trees = 2;
+        let out = run_pipeline(&cfg).unwrap();
+        assert_eq!(out.layout.d(), 2);
+        assert!(out.metrics.get("eval.knn_accuracy").unwrap() > 0.3);
+        assert!(cfg.out_dir.join("layout.svg").exists());
+        assert!(cfg.out_dir.join("report.json").exists());
+        let report = std::fs::read_to_string(cfg.out_dir.join("report.json")).unwrap();
+        crate::util::json::Json::parse(&report).unwrap();
+    }
+}

@@ -1,0 +1,184 @@
+//! Registry of paper-analog datasets (Table 1).
+//!
+//! Each [`DatasetSpec`] names one of the paper's seven corpora and its
+//! synthetic substitute. `scale` shrinks the large sets so every figure
+//! regenerates in minutes; `--scale 1.0` reproduces the paper's full N
+//! (memory permitting). Network datasets are generated as SBM graphs
+//! and embedded to 100-d with our LINE substrate, mirroring the paper's
+//! preprocessing.
+
+use crate::data::matrix::Matrix;
+use crate::data::synth;
+use crate::embed::line::{train_line, LineConfig};
+
+/// A generated dataset: points, optional labels, provenance.
+pub struct Dataset {
+    /// Registry name (e.g. `20ng-like`).
+    pub name: String,
+    /// `n × d` feature matrix.
+    pub points: Matrix,
+    /// Class labels if the paper's original had them.
+    pub labels: Option<Vec<u32>>,
+    /// Number of distinct classes (0 when unlabeled).
+    pub n_classes: usize,
+}
+
+/// Static description of a dataset in the registry.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DatasetSpec {
+    /// Registry name.
+    pub name: &'static str,
+    /// Paper dataset this stands in for.
+    pub paper_name: &'static str,
+    /// Paper's N (Table 1).
+    pub paper_n: usize,
+    /// Our full-scale N (before `scale`).
+    pub full_n: usize,
+    /// Dimensionality.
+    pub d: usize,
+    /// Classes (0 = unlabeled).
+    pub classes: usize,
+    /// True when the source is a graph embedded via LINE.
+    pub is_network: bool,
+}
+
+/// All seven paper datasets (Table 1) in paper order.
+pub const REGISTRY: &[DatasetSpec] = &[
+    DatasetSpec { name: "20ng-like", paper_name: "20NG", paper_n: 18_846, full_n: 18_846, d: 100, classes: 20, is_network: false },
+    DatasetSpec { name: "mnist-like", paper_name: "MNIST", paper_n: 70_000, full_n: 70_000, d: 784, classes: 10, is_network: false },
+    DatasetSpec { name: "wikiword-like", paper_name: "WikiWord", paper_n: 836_756, full_n: 200_000, d: 100, classes: 0, is_network: false },
+    DatasetSpec { name: "wikidoc-like", paper_name: "WikiDoc", paper_n: 2_837_395, full_n: 400_000, d: 100, classes: 1000, is_network: false },
+    DatasetSpec { name: "csauthor-like", paper_name: "CSAuthor", paper_n: 1_854_295, full_n: 200_000, d: 100, classes: 0, is_network: true },
+    DatasetSpec { name: "dblp-like", paper_name: "DBLPPaper", paper_n: 1_345_560, full_n: 150_000, d: 100, classes: 30, is_network: true },
+    DatasetSpec { name: "livejournal-like", paper_name: "LiveJournal", paper_n: 3_997_963, full_n: 400_000, d: 100, classes: 500, is_network: true },
+];
+
+/// Look up a spec by registry name.
+pub fn spec(name: &str) -> Option<&'static DatasetSpec> {
+    REGISTRY.iter().find(|s| s.name == name)
+}
+
+/// Generate a dataset at `scale ∈ (0, 1]` of its full size.
+///
+/// Unknown names return `None`. Generation is deterministic in
+/// `(name, scale, seed)`.
+pub fn generate(name: &str, scale: f64, seed: u64) -> Option<Dataset> {
+    let s = spec(name)?;
+    let n = ((s.full_n as f64 * scale).round() as usize).max(s.classes.max(64) * 2);
+    Some(match s.name {
+        "20ng-like" => {
+            let (points, labels) = synth::gaussian_mixture(n, s.d, s.classes, 0.55, seed);
+            pack(s, points, Some(labels))
+        }
+        "mnist-like" => {
+            let (points, labels) = synth::manifold_clusters(n, s.d, s.classes, 12, seed);
+            pack(s, points, Some(labels))
+        }
+        "wikiword-like" => {
+            let (points, _) = synth::zipf_mixture(n, s.d, 200, seed);
+            pack(s, points, None)
+        }
+        "wikidoc-like" => {
+            let k = s.classes.min(n / 4).max(2);
+            let (points, labels) = synth::hierarchical_mixture(n, s.d, 25, k, seed);
+            pack(s, points, Some(labels))
+        }
+        "csauthor-like" => {
+            let k = (n / 400).max(8);
+            let g = synth::sbm(n, k, 10.0, 1.0, seed);
+            let emb = embed_graph(&g, s.d, seed);
+            pack(s, emb, None)
+        }
+        "dblp-like" => {
+            let k = s.classes.min(n / 50).max(4);
+            let g = synth::sbm(n, k, 12.0, 1.5, seed);
+            let emb = embed_graph(&g, s.d, seed);
+            pack(s, emb, Some(g.communities))
+        }
+        "livejournal-like" => {
+            let k = s.classes.min(n / 100).max(8);
+            let g = synth::power_law_sbm(n, k, 10.0, 1.2, seed);
+            let emb = embed_graph(&g, s.d, seed);
+            pack(s, emb, Some(g.communities))
+        }
+        _ => unreachable!(),
+    })
+}
+
+fn pack(s: &DatasetSpec, points: Matrix, labels: Option<Vec<u32>>) -> Dataset {
+    let n_classes = labels
+        .as_ref()
+        .map(|ls| ls.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0))
+        .unwrap_or(0);
+    Dataset { name: s.name.to_string(), points, labels, n_classes }
+}
+
+fn embed_graph(g: &synth::SbmGraph, dim: usize, seed: u64) -> Matrix {
+    let edges: Vec<(u32, u32, f32)> = g.edges.iter().map(|&(a, b)| (a, b, 1.0)).collect();
+    let cfg = LineConfig { dim, samples_per_vertex: 400, seed, ..Default::default() };
+    train_line(g.n, &edges, &cfg).embedding
+}
+
+/// Table-1-style statistics row for a generated dataset.
+pub fn stats_row(ds: &Dataset) -> String {
+    format!(
+        "{:<18} {:>9} {:>11} {:>12}",
+        ds.name,
+        ds.points.n(),
+        ds.points.d(),
+        if ds.n_classes > 0 { ds.n_classes.to_string() } else { "-".to_string() }
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_paper_table1() {
+        assert_eq!(REGISTRY.len(), 7);
+        assert_eq!(spec("mnist-like").unwrap().paper_n, 70_000);
+        assert_eq!(spec("livejournal-like").unwrap().paper_n, 3_997_963);
+        assert!(spec("nope").is_none());
+    }
+
+    #[test]
+    fn generate_small_vector_sets() {
+        for name in ["20ng-like", "mnist-like", "wikiword-like", "wikidoc-like"] {
+            let ds = generate(name, 0.02, 1).unwrap();
+            let s = spec(name).unwrap();
+            assert_eq!(ds.points.d(), s.d, "{name}");
+            assert!(ds.points.n() > 0);
+            if s.classes > 0 {
+                let labels = ds.labels.as_ref().unwrap();
+                assert_eq!(labels.len(), ds.points.n());
+            } else {
+                assert!(ds.labels.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn generate_network_set() {
+        let ds = generate("dblp-like", 0.01, 2).unwrap();
+        assert_eq!(ds.points.d(), 100);
+        assert!(ds.labels.is_some());
+        assert!(ds.points.as_slice().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = generate("20ng-like", 0.01, 5).unwrap();
+        let b = generate("20ng-like", 0.01, 5).unwrap();
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn stats_row_formats() {
+        let ds = generate("20ng-like", 0.01, 1).unwrap();
+        let row = stats_row(&ds);
+        assert!(row.contains("20ng-like"));
+        assert!(row.contains("100"));
+    }
+}

@@ -1,0 +1,162 @@
+//! Binary dataset I/O.
+//!
+//! Format (`.lvec`, little-endian): magic `LVEC`, u32 version, u64 n,
+//! u64 d, then `n*d` f32 values. Labels (`.lbl`): magic `LLBL`, u32
+//! version, u64 n, then `n` u32 class ids. Layouts re-use `.lvec`.
+//! Simple, mmap-friendly, and round-trips exactly.
+
+use crate::data::matrix::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const VEC_MAGIC: &[u8; 4] = b"LVEC";
+const LBL_MAGIC: &[u8; 4] = b"LLBL";
+const VERSION: u32 = 1;
+
+/// Write a matrix to `path` in `.lvec` format.
+pub fn write_matrix(path: &Path, m: &Matrix) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(VEC_MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(m.n() as u64).to_le_bytes())?;
+    w.write_all(&(m.d() as u64).to_le_bytes())?;
+    for &x in m.as_slice() {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a `.lvec` matrix.
+pub fn read_matrix(path: &Path) -> Result<Matrix> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != VEC_MAGIC {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("{}: unsupported version {version}", path.display());
+    }
+    let n = read_u64(&mut r)? as usize;
+    let d = read_u64(&mut r)? as usize;
+    let total = n.checked_mul(d).context("n*d overflow")?;
+    let mut bytes = vec![0u8; total * 4];
+    r.read_exact(&mut bytes)?;
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Matrix::from_vec(data, n, d))
+}
+
+/// Write class labels to `path` in `.lbl` format.
+pub fn write_labels(path: &Path, labels: &[u32]) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(LBL_MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(labels.len() as u64).to_le_bytes())?;
+    for &l in labels {
+        w.write_all(&l.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a `.lbl` label file.
+pub fn read_labels(path: &Path) -> Result<Vec<u32>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != LBL_MAGIC {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("{}: unsupported version {version}", path.display());
+    }
+    let n = read_u64(&mut r)? as usize;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Write a 2D layout as TSV (`x<TAB>y[<TAB>label]`) for external tools.
+pub fn write_layout_tsv(path: &Path, layout: &Matrix, labels: Option<&[u32]>) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for i in 0..layout.n() {
+        let row = layout.row(i);
+        let coords: Vec<String> = row.iter().map(|x| format!("{x:.6}")).collect();
+        match labels {
+            Some(ls) => writeln!(w, "{}\t{}", coords.join("\t"), ls[i])?,
+            None => writeln!(w, "{}", coords.join("\t"))?,
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("largevis_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = Matrix::from_vec((0..24).map(|x| x as f32 * 0.5 - 3.0).collect(), 6, 4);
+        let p = tmp("roundtrip.lvec");
+        write_matrix(&p, &m).unwrap();
+        let back = read_matrix(&p).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        let labels: Vec<u32> = (0..100).map(|i| i % 7).collect();
+        let p = tmp("roundtrip.lbl");
+        write_labels(&p, &labels).unwrap();
+        assert_eq!(read_labels(&p).unwrap(), labels);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad.lvec");
+        std::fs::write(&p, b"NOPE00000000").unwrap();
+        assert!(read_matrix(&p).is_err());
+        assert!(read_labels(&p).is_err());
+    }
+
+    #[test]
+    fn tsv_written() {
+        let m = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        let p = tmp("layout.tsv");
+        write_layout_tsv(&p, &m, Some(&[0, 1])).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().next().unwrap().ends_with("\t0"));
+    }
+}

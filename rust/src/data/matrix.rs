@@ -1,0 +1,269 @@
+//! Dense row-major `f32` matrix — the in-memory format for both the
+//! high-dimensional input points and the low-dimensional layout.
+
+/// Dense row-major matrix of `n` rows × `d` columns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f32>,
+    n: usize,
+    d: usize,
+}
+
+impl Matrix {
+    /// Zero-filled `n × d` matrix.
+    pub fn zeros(n: usize, d: usize) -> Self {
+        Matrix { data: vec![0.0; n * d], n, d }
+    }
+
+    /// Wrap an existing buffer; `data.len()` must equal `n * d`.
+    pub fn from_vec(data: Vec<f32>, n: usize, d: usize) -> Self {
+        assert_eq!(data.len(), n * d, "buffer length {} != {}x{}", data.len(), n, d);
+        Matrix { data, n, d }
+    }
+
+    /// Number of rows (points).
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of columns (dimensions).
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Row `i` as a mutable slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The full backing buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable backing buffer.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the backing buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Squared Euclidean distance between rows `i` and `j`.
+    #[inline]
+    pub fn sqdist(&self, i: usize, j: usize) -> f32 {
+        sqdist(self.row(i), self.row(j))
+    }
+
+    /// Copy a subset of rows into a new matrix (preserving order).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.d);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Normalize every row to unit L2 norm (zero rows left untouched).
+    pub fn normalize_rows(&mut self) {
+        for i in 0..self.n {
+            let row = self.row_mut(i);
+            let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 0.0 {
+                for x in row.iter_mut() {
+                    *x /= norm;
+                }
+            }
+        }
+    }
+
+    /// Append a row (used by the incremental/dynamic-data extension).
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.d, "row length {} != d {}", row.len(), self.d);
+        self.data.extend_from_slice(row);
+        self.n += 1;
+    }
+
+    /// Per-column mean.
+    pub fn col_means(&self) -> Vec<f32> {
+        let mut means = vec![0f64; self.d];
+        for i in 0..self.n {
+            for (m, &x) in means.iter_mut().zip(self.row(i)) {
+                *m += x as f64;
+            }
+        }
+        means.iter().map(|&m| (m / self.n.max(1) as f64) as f32).collect()
+    }
+}
+
+/// Squared Euclidean distance between two equal-length vectors.
+///
+/// The single hottest scalar function in KNN construction; written as a
+/// 4-lane unrolled loop the compiler auto-vectorizes.
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Squared distance with early exit: returns a value `> bound` as soon
+/// as the partial sum exceeds `bound` (checked every 32 lanes).
+///
+/// The KNN inner loops compare candidates against a bounded heap's
+/// current worst distance; at d=784 most candidates exceed it within
+/// the first blocks, so bailing early is a large win (§Perf).
+#[inline]
+pub fn sqdist_bounded(a: &[f32], b: &[f32], bound: f32) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut s = 0f32;
+    let mut i = 0;
+    while i + 32 <= n {
+        let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+        for c in 0..8 {
+            let base = i + c * 4;
+            let d0 = a[base] - b[base];
+            let d1 = a[base + 1] - b[base + 1];
+            let d2 = a[base + 2] - b[base + 2];
+            let d3 = a[base + 3] - b[base + 3];
+            s0 += d0 * d0;
+            s1 += d1 * d1;
+            s2 += d2 * d2;
+            s3 += d3 * d3;
+        }
+        s += s0 + s1 + s2 + s3;
+        i += 32;
+        if s > bound {
+            return s;
+        }
+    }
+    for k in i..n {
+        let d = a[k] - b[k];
+        s += d * d;
+    }
+    s
+}
+
+/// Dot product (same unrolling as [`sqdist`]).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_rows() {
+        let mut m = Matrix::zeros(3, 4);
+        assert_eq!((m.n(), m.d()), (3, 4));
+        m.row_mut(1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.row(1), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.row(0), &[0.0; 4]);
+    }
+
+    #[test]
+    fn sqdist_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..13).map(|i| (13 - i) as f32 * 0.25).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!((sqdist(&a, &b) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sqdist_bounded_exact_below_bound() {
+        let a: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..100).map(|i| (i as f32).cos()).collect();
+        let exact = sqdist(&a, &b);
+        assert!((sqdist_bounded(&a, &b, f32::INFINITY) - exact).abs() < 1e-4);
+        // With a bound above the true value the result is still exact.
+        assert!((sqdist_bounded(&a, &b, exact * 1.01) - exact).abs() < 1e-4);
+        // With a tiny bound the result merely exceeds the bound.
+        assert!(sqdist_bounded(&a, &b, 0.001) > 0.001);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..9).map(|i| (i * 2) as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot(&a, &b), naive);
+    }
+
+    #[test]
+    fn gather_rows_preserves_order() {
+        let m = Matrix::from_vec((0..12).map(|x| x as f32).collect(), 4, 3);
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.row(0), m.row(2));
+        assert_eq!(g.row(1), m.row(0));
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut m = Matrix::from_vec(vec![3.0, 4.0, 0.0, 0.0], 2, 2);
+        m.normalize_rows();
+        assert!((m.row(0)[0] - 0.6).abs() < 1e-6);
+        assert!((m.row(0)[1] - 0.8).abs() < 1e-6);
+        assert_eq!(m.row(1), &[0.0, 0.0]); // zero row untouched
+    }
+
+    #[test]
+    fn col_means() {
+        let m = Matrix::from_vec(vec![1.0, 10.0, 3.0, 30.0], 2, 2);
+        assert_eq!(m.col_means(), vec![2.0, 20.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_len() {
+        Matrix::from_vec(vec![0.0; 5], 2, 3);
+    }
+}

@@ -1,0 +1,15 @@
+//! Data substrate: dense matrices, dataset I/O, synthetic generators,
+//! and the registry of paper-analog datasets.
+//!
+//! The paper evaluates on seven proprietary/large corpora (Table 1).
+//! Offline, each is replaced by a synthetic analog with matched
+//! dimensionality, label structure, and (scaled) size — see
+//! `DESIGN.md` §Data-substitutions for the mapping rationale.
+
+pub mod matrix;
+pub mod io;
+pub mod synth;
+pub mod datasets;
+
+pub use datasets::{Dataset, DatasetSpec};
+pub use matrix::Matrix;

@@ -1,0 +1,109 @@
+//! Anisotropic Gaussian mixture — the `20ng-like` analog.
+//!
+//! 20 newsgroups has ~20 topical classes at 100-d with substantial
+//! pairwise overlap (e.g. comp.* groups). We mimic that by drawing
+//! cluster centers on a sphere, giving each cluster an anisotropic
+//! per-dimension scale, and pulling designated *confusable pairs* of
+//! centers close together.
+
+use crate::data::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Generate `n` points in `d` dims from `k` anisotropic Gaussian
+/// clusters; `overlap ∈ [0,1]` controls how close confusable pairs sit.
+///
+/// Returns `(points, labels)` with labels in `0..k`.
+pub fn gaussian_mixture(n: usize, d: usize, k: usize, overlap: f32, seed: u64) -> (Matrix, Vec<u32>) {
+    assert!(k >= 1 && d >= 1 && n >= k);
+    let mut rng = Rng::new(seed);
+
+    // Cluster centers: random gaussian directions, radius ~ sqrt(d) so
+    // between-cluster distance dominates within-cluster variance.
+    let radius = (d as f32).sqrt() * 2.0;
+    let mut centers = Matrix::zeros(k, d);
+    for c in 0..k {
+        let row = centers.row_mut(c);
+        for x in row.iter_mut() {
+            *x = rng.gaussian();
+        }
+        let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        for x in row.iter_mut() {
+            *x *= radius / norm;
+        }
+    }
+    // Confusable pairs: centers (2i, 2i+1) are pulled together.
+    for pair in 0..k / 2 {
+        let (a, b) = (2 * pair, 2 * pair + 1);
+        if rng.f32() < 0.5 {
+            // Only half of the pairs confusable, like real topic sets.
+            continue;
+        }
+        let mix = overlap.clamp(0.0, 1.0);
+        let ca: Vec<f32> = centers.row(a).to_vec();
+        for (xb, &xa) in centers.row_mut(b).iter_mut().zip(&ca) {
+            *xb = *xb * (1.0 - mix) + xa * mix;
+        }
+    }
+    // Per-cluster anisotropic scales in [0.5, 1.5].
+    let scales: Vec<Vec<f32>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.range_f32(0.5, 1.5)).collect())
+        .collect();
+
+    let mut points = Matrix::zeros(n, d);
+    let mut labels = vec![0u32; n];
+    for i in 0..n {
+        let c = i % k; // balanced classes
+        labels[i] = c as u32;
+        let center = centers.row(c).to_vec();
+        let row = points.row_mut(i);
+        for ((x, &mu), &s) in row.iter_mut().zip(&center).zip(&scales[c]) {
+            *x = mu + s * rng.gaussian();
+        }
+    }
+    (points, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::sqdist;
+
+    #[test]
+    fn shapes_and_labels() {
+        let (m, l) = gaussian_mixture(200, 10, 5, 0.3, 1);
+        assert_eq!((m.n(), m.d()), (200, 10));
+        assert_eq!(l.len(), 200);
+        assert!(l.iter().all(|&c| c < 5));
+        // balanced
+        for c in 0..5u32 {
+            assert_eq!(l.iter().filter(|&&x| x == c).count(), 40);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, _) = gaussian_mixture(50, 8, 4, 0.2, 9);
+        let (b, _) = gaussian_mixture(50, 8, 4, 0.2, 9);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn clusters_separated() {
+        // Same-class mean distance should be well below cross-class.
+        let (m, l) = gaussian_mixture(400, 50, 4, 0.0, 3);
+        let (mut within, mut across) = (vec![], vec![]);
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let d = sqdist(m.row(i), m.row(j)) as f64;
+                if l[i] == l[j] {
+                    within.push(d);
+                } else {
+                    across.push(d);
+                }
+            }
+        }
+        let mw = within.iter().sum::<f64>() / within.len() as f64;
+        let ma = across.iter().sum::<f64>() / across.len() as f64;
+        assert!(ma > 1.5 * mw, "within={mw} across={ma}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Two-level hierarchical Gaussian mixture — the `wikidoc-like` analog.
+//!
+//! Wikipedia articles carry ~1000 categories with a clear topical
+//! hierarchy (a few dozen broad topics, each with many subcategories).
+//! We sample `super_k` top-level topic centers, then `k` subtopic
+//! centers around them; leaf labels are subtopic ids. This produces the
+//! multi-scale cluster structure that distinguishes a good layout from
+//! a bad one at millions of points.
+
+use crate::data::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Generate a 2-level mixture: `k` leaf classes nested under `super_k`
+/// topics. Returns `(points, leaf_labels)`.
+pub fn hierarchical_mixture(
+    n: usize,
+    d: usize,
+    super_k: usize,
+    k: usize,
+    seed: u64,
+) -> (Matrix, Vec<u32>) {
+    assert!(super_k >= 1 && k >= super_k && n >= k);
+    let mut rng = Rng::new(seed);
+    let top_radius = (d as f32).sqrt() * 3.0;
+    let sub_radius = (d as f32).sqrt() * 0.8;
+
+    let mut top = Matrix::zeros(super_k, d);
+    for c in 0..super_k {
+        let row = top.row_mut(c);
+        for x in row.iter_mut() {
+            *x = rng.gaussian();
+        }
+        let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        for x in row.iter_mut() {
+            *x *= top_radius / norm;
+        }
+    }
+    // Subtopic centers: parent center + small offset. Subtopic c belongs
+    // to parent c % super_k so classes are spread across topics.
+    let mut sub = Matrix::zeros(k, d);
+    let mut parent = vec![0usize; k];
+    for c in 0..k {
+        let p = c % super_k;
+        parent[c] = p;
+        let prow = top.row(p).to_vec();
+        let row = sub.row_mut(c);
+        for (x, &mu) in row.iter_mut().zip(&prow) {
+            *x = mu + sub_radius / (d as f32).sqrt() * rng.gaussian() * (d as f32).powf(0.25);
+        }
+    }
+    // Cluster sizes ~ Zipf, mirroring category popularity skew; points
+    // assigned round-robin over a Zipf-weighted alias-ish scheme.
+    let weights: Vec<f64> = (0..k).map(|c| 1.0 / (1.0 + c as f64).powf(0.8)).collect();
+    let table = crate::util::alias::AliasTable::new(&weights);
+
+    let mut points = Matrix::zeros(n, d);
+    let mut labels = vec![0u32; n];
+    for i in 0..n {
+        // Guarantee every class is populated, then go Zipf.
+        let c = if i < k { i } else { table.sample(&mut rng) };
+        labels[i] = c as u32;
+        let center = sub.row(c).to_vec();
+        let row = points.row_mut(i);
+        for (x, &mu) in row.iter_mut().zip(&center) {
+            *x = mu + 0.7 * rng.gaussian();
+        }
+    }
+    (points, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_classes_populated() {
+        let (_, l) = hierarchical_mixture(500, 20, 5, 40, 2);
+        let distinct: std::collections::HashSet<_> = l.iter().collect();
+        assert_eq!(distinct.len(), 40);
+    }
+
+    #[test]
+    fn zipf_skew_present() {
+        let (_, l) = hierarchical_mixture(5000, 10, 4, 50, 3);
+        let mut counts = vec![0usize; 50];
+        for &c in &l {
+            counts[c as usize] += 1;
+        }
+        assert!(counts[0] > counts[30], "head class should dominate: {counts:?}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, la) = hierarchical_mixture(100, 16, 3, 10, 7);
+        let (b, lb) = hierarchical_mixture(100, 16, 3, 10, 7);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+}

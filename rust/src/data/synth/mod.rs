@@ -1,0 +1,21 @@
+//! Synthetic dataset generators — the offline analogs of the paper's
+//! corpora (DESIGN.md §Data-substitutions).
+//!
+//! Each generator is seeded and deterministic. Vector generators return
+//! `(Matrix, labels)`; graph generators return an edge list plus ground-
+//! truth communities (embedded to 100-d via [`crate::embed::line`], the
+//! same preprocessing the paper applies to its network datasets).
+
+pub mod gaussian_mixture;
+pub mod hierarchical;
+pub mod manifold;
+pub mod swiss_roll;
+pub mod zipf_mixture;
+pub mod sbm;
+
+pub use gaussian_mixture::gaussian_mixture;
+pub use hierarchical::hierarchical_mixture;
+pub use manifold::manifold_clusters;
+pub use sbm::{power_law_sbm, sbm, SbmGraph};
+pub use swiss_roll::swiss_roll;
+pub use zipf_mixture::zipf_mixture;

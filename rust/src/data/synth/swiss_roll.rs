@@ -1,0 +1,63 @@
+//! Classic swiss-roll manifold, used by the quickstart example and by
+//! tests that need a known non-linear structure (a linear method cannot
+//! unroll it; LargeVis should).
+
+use crate::data::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Generate a swiss roll with `n` points embedded in `d >= 3` dims
+/// (extra dims are small noise). Labels quantize the roll parameter
+/// into `bands` segments. Returns `(points, labels)`.
+pub fn swiss_roll(n: usize, d: usize, bands: usize, seed: u64) -> (Matrix, Vec<u32>) {
+    assert!(d >= 3 && bands >= 1);
+    let mut rng = Rng::new(seed);
+    let mut points = Matrix::zeros(n, d);
+    let mut labels = vec![0u32; n];
+    for i in 0..n {
+        let t = 1.5 * std::f32::consts::PI * (1.0 + 2.0 * rng.f32()); // roll parameter
+        let h = 21.0 * rng.f32(); // height
+        let row = points.row_mut(i);
+        row[0] = t * t.cos();
+        row[1] = h;
+        row[2] = t * t.sin();
+        for x in row.iter_mut().skip(3) {
+            *x = 0.05 * rng.gaussian();
+        }
+        let t_min = 1.5 * std::f32::consts::PI;
+        let t_max = 4.5 * std::f32::consts::PI;
+        let band = (((t - t_min) / (t_max - t_min)) * bands as f32) as usize;
+        labels[i] = band.min(bands - 1) as u32;
+    }
+    (points, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_band_range() {
+        let (m, l) = swiss_roll(500, 5, 8, 1);
+        assert_eq!((m.n(), m.d()), (500, 5));
+        assert!(l.iter().all(|&b| b < 8));
+        let distinct: std::collections::HashSet<_> = l.iter().collect();
+        assert!(distinct.len() >= 6);
+    }
+
+    #[test]
+    fn radius_grows_with_band() {
+        let (m, l) = swiss_roll(2000, 3, 4, 2);
+        let mut mean_r = vec![0f64; 4];
+        let mut cnt = vec![0usize; 4];
+        for i in 0..2000 {
+            let row = m.row(i);
+            let r = (row[0] * row[0] + row[2] * row[2]).sqrt() as f64;
+            mean_r[l[i] as usize] += r;
+            cnt[l[i] as usize] += 1;
+        }
+        for b in 0..4 {
+            mean_r[b] /= cnt[b] as f64;
+        }
+        assert!(mean_r[3] > mean_r[0]);
+    }
+}

@@ -1,0 +1,69 @@
+//! Zipf-weighted mixture with heavy-tailed density — the
+//! `wikiword-like` analog.
+//!
+//! Word-embedding spaces have no class labels but a very skewed density:
+//! a dense core of frequent words and a long sparse tail. We sample
+//! cluster assignment Zipf-style and scale cluster spread with rank, so
+//! head clusters are dense/tight and tail clusters diffuse.
+
+use crate::data::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Generate `n` points in `d` dims from `k` Zipf-weighted clusters.
+/// Returns `(points, cluster_ids)` — ids are *not* semantic labels (the
+/// paper's WikiWord has none) but are handy for coloring.
+pub fn zipf_mixture(n: usize, d: usize, k: usize, seed: u64) -> (Matrix, Vec<u32>) {
+    assert!(k >= 1 && n >= 1);
+    let mut rng = Rng::new(seed);
+    let radius = (d as f32).sqrt() * 1.8;
+    let mut centers = Matrix::zeros(k, d);
+    for c in 0..k {
+        let row = centers.row_mut(c);
+        for x in row.iter_mut() {
+            *x = rng.gaussian();
+        }
+        // Head clusters near the origin, tail clusters farther out.
+        let shell = radius * (0.4 + 0.6 * (c as f32 / k as f32));
+        let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        for x in row.iter_mut() {
+            *x *= shell / norm;
+        }
+    }
+    let mut points = Matrix::zeros(n, d);
+    let mut ids = vec![0u32; n];
+    for i in 0..n {
+        let c = rng.zipf(k, 1.1);
+        ids[i] = c as u32;
+        let spread = 0.5 + 1.2 * (c as f32 / k as f32); // tail is diffuse
+        let center = centers.row(c).to_vec();
+        let row = points.row_mut(i);
+        for (x, &mu) in row.iter_mut().zip(&center) {
+            *x = mu + spread * rng.gaussian();
+        }
+    }
+    (points, ids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_cluster_largest() {
+        let (_, ids) = zipf_mixture(20_000, 10, 50, 1);
+        let mut counts = vec![0usize; 50];
+        for &c in &ids {
+            counts[c as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        assert_eq!(counts[0], max);
+        assert!(counts[0] > 5 * counts[30].max(1));
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, _) = zipf_mixture(100, 8, 10, 5);
+        let (b, _) = zipf_mixture(100, 8, 10, 5);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,236 @@
+//! LINE: Large-scale Information Network Embedding (first-order
+//! proximity), trained by asynchronous SGD with edge sampling and
+//! degree^0.75 negative sampling — the same optimization machinery the
+//! LargeVis layout engine uses, at arbitrary output dimension.
+//!
+//! First-order LINE models `P(e_ij) = σ(u_i · u_j)` over observed edges
+//! plus M negative samples; we follow the paper's settings (ρ0=0.025,
+//! M=5).
+
+use crate::data::matrix::Matrix;
+use crate::util::alias::AliasTable;
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+/// LINE hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct LineConfig {
+    /// Output dimensionality (100 for preprocessing, 2 for the baseline).
+    pub dim: usize,
+    /// Total edge samples; the paper suggests ~10K·N for 1M nodes. We
+    /// default to `samples_per_vertex * n` via [`LineConfig::total_samples`].
+    pub samples_per_vertex: usize,
+    /// Negative samples per positive edge.
+    pub negatives: usize,
+    /// Initial learning rate (paper: 0.025 for LINE).
+    pub rho0: f32,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for LineConfig {
+    fn default() -> Self {
+        LineConfig { dim: 100, samples_per_vertex: 600, negatives: 5, rho0: 0.025, threads: 0, seed: 0x11e }
+    }
+}
+
+impl LineConfig {
+    fn total_samples(&self, n: usize) -> u64 {
+        (self.samples_per_vertex as u64) * (n as u64)
+    }
+}
+
+/// Trained LINE model.
+pub struct Line {
+    /// Vertex embeddings, `n × dim`.
+    pub embedding: Matrix,
+}
+
+/// Shared mutable embedding for Hogwild updates.
+///
+/// Safety: Hogwild (Recht et al., NIPS 2011) performs unsynchronized
+/// concurrent writes on purpose; on sparse graphs conflicting updates
+/// are rare and convergence is unaffected. All access stays in-bounds;
+/// racing writes can only produce stale/torn *values*, never UB beyond
+/// the data race itself, which we accept exactly as the paper does.
+pub(crate) struct SharedParams {
+    ptr: *mut f32,
+    len: usize,
+}
+
+unsafe impl Sync for SharedParams {}
+unsafe impl Send for SharedParams {}
+
+impl SharedParams {
+    pub(crate) fn new(buf: &mut [f32]) -> Self {
+        SharedParams { ptr: buf.as_mut_ptr(), len: buf.len() }
+    }
+
+    /// Mutable slice for vertex `v`'s `dim` parameters.
+    ///
+    /// # Safety
+    /// Caller must keep `v*dim + dim <= len`. Concurrent calls may alias
+    /// (Hogwild semantics).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn row(&self, v: usize, dim: usize) -> &mut [f32] {
+        debug_assert!((v + 1) * dim <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(v * dim), dim)
+    }
+}
+
+/// Train first-order LINE on an undirected edge list with weights.
+///
+/// `edges` are (src, dst, weight); both directions are sampled.
+pub fn train_line(n: usize, edges: &[(u32, u32, f32)], cfg: &LineConfig) -> Line {
+    assert!(n > 0 && !edges.is_empty());
+    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
+
+    // Edge alias table over weights (each undirected edge sampled in both
+    // directions with equal probability, handled by a coin flip).
+    let weights: Vec<f64> = edges.iter().map(|&(_, _, w)| w as f64).collect();
+    let edge_table = AliasTable::new(&weights);
+
+    // Negative table over deg^0.75.
+    let mut deg = vec![0f64; n];
+    for &(a, b, w) in edges {
+        deg[a as usize] += w as f64;
+        deg[b as usize] += w as f64;
+    }
+    let neg_weights: Vec<f64> = deg.iter().map(|&d| d.max(1e-12).powf(0.75)).collect();
+    let neg_table = AliasTable::new(&neg_weights);
+
+    // Init embeddings small-uniform like the reference implementation.
+    let mut emb = Matrix::zeros(n, cfg.dim);
+    {
+        let mut rng = Rng::new(cfg.seed);
+        for x in emb.as_mut_slice().iter_mut() {
+            *x = (rng.f32() - 0.5) / cfg.dim as f32;
+        }
+    }
+
+    let total = cfg.total_samples(n);
+    let shared = SharedParams::new(emb.as_mut_slice());
+    let progress = std::sync::atomic::AtomicU64::new(0);
+    let dim = cfg.dim;
+    let rho0 = cfg.rho0;
+    let negatives = cfg.negatives;
+    let base_rng = Rng::new(cfg.seed ^ 0x5eed);
+
+    pool::spawn_workers(threads, |tid| {
+        let mut rng = base_rng.split(tid as u64);
+        let my_samples = total / threads as u64 + 1;
+        let mut grad_j = vec![0f32; dim];
+        for s in 0..my_samples {
+            // Learning-rate schedule ρ_t = ρ0 (1 - t/T), floored.
+            if s % 1024 == 0 {
+                progress.fetch_add(1024, std::sync::atomic::Ordering::Relaxed);
+            }
+            let t = progress.load(std::sync::atomic::Ordering::Relaxed).min(total);
+            let rho = (rho0 * (1.0 - t as f32 / total as f32)).max(rho0 * 1e-4);
+
+            let e = edge_table.sample(&mut rng);
+            let (mut i, mut j) = (edges[e].0 as usize, edges[e].1 as usize);
+            if rng.f32() < 0.5 {
+                std::mem::swap(&mut i, &mut j);
+            }
+            // SAFETY: i, j, negatives all < n; rows length dim.
+            let vi = unsafe { shared.row(i, dim) };
+            grad_j.iter_mut().for_each(|g| *g = 0.0);
+            // Positive + M negatives, sigmoid objective.
+            for m in 0..=negatives {
+                let (target, label) = if m == 0 {
+                    (j, 1.0f32)
+                } else {
+                    let neg = neg_table.sample(&mut rng);
+                    if neg == i || neg == j {
+                        continue;
+                    }
+                    (neg, 0.0f32)
+                };
+                let vt = unsafe { shared.row(target, dim) };
+                let score: f32 = vi.iter().zip(vt.iter()).map(|(a, b)| a * b).sum();
+                let sig = 1.0 / (1.0 + (-score).exp());
+                let g = (label - sig) * rho;
+                for k in 0..dim {
+                    grad_j[k] += g * vt[k];
+                    vt[k] += g * vi[k];
+                }
+            }
+            for k in 0..dim {
+                vi[k] += grad_j[k];
+            }
+        }
+    });
+
+    Line { embedding: emb }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::dot;
+    use crate::data::synth::sbm;
+
+    fn mean_cos(emb: &Matrix, pairs: &[(usize, usize)]) -> f64 {
+        let mut s = 0.0;
+        for &(a, b) in pairs {
+            let (ra, rb) = (emb.row(a), emb.row(b));
+            let na = dot(ra, ra).sqrt().max(1e-9);
+            let nb = dot(rb, rb).sqrt().max(1e-9);
+            s += (dot(ra, rb) / na / nb) as f64;
+        }
+        s / pairs.len() as f64
+    }
+
+    #[test]
+    fn line_separates_sbm_communities() {
+        let g = sbm(600, 3, 12.0, 1.0, 42);
+        let edges: Vec<(u32, u32, f32)> = g.edges.iter().map(|&(a, b)| (a, b, 1.0)).collect();
+        let cfg = LineConfig { dim: 16, samples_per_vertex: 2000, threads: 4, ..Default::default() };
+        let line = train_line(g.n, &edges, &cfg);
+
+        let mut rng = Rng::new(7);
+        let mut within = vec![];
+        let mut across = vec![];
+        while within.len() < 300 || across.len() < 300 {
+            let a = rng.below(g.n);
+            let b = rng.below(g.n);
+            if a == b {
+                continue;
+            }
+            if g.communities[a] == g.communities[b] {
+                if within.len() < 300 {
+                    within.push((a, b));
+                }
+            } else if across.len() < 300 {
+                across.push((a, b));
+            }
+        }
+        let cw = mean_cos(&line.embedding, &within);
+        let ca = mean_cos(&line.embedding, &across);
+        assert!(cw > ca + 0.1, "within-cos={cw:.3} across-cos={ca:.3}");
+    }
+
+    #[test]
+    fn deterministic_single_thread() {
+        let g = sbm(100, 2, 8.0, 1.0, 1);
+        let edges: Vec<(u32, u32, f32)> = g.edges.iter().map(|&(a, b)| (a, b, 1.0)).collect();
+        let cfg =
+            LineConfig { dim: 8, samples_per_vertex: 100, threads: 1, seed: 3, ..Default::default() };
+        let a = train_line(g.n, &edges, &cfg);
+        let b = train_line(g.n, &edges, &cfg);
+        assert_eq!(a.embedding, b.embedding);
+    }
+
+    #[test]
+    fn embedding_finite() {
+        let g = sbm(200, 4, 6.0, 2.0, 9);
+        let edges: Vec<(u32, u32, f32)> = g.edges.iter().map(|&(a, b)| (a, b, 1.0)).collect();
+        let cfg = LineConfig { dim: 4, samples_per_vertex: 500, threads: 2, ..Default::default() };
+        let line = train_line(g.n, &edges, &cfg);
+        assert!(line.embedding.as_slice().iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,10 @@
+//! Embedding-learning substrate.
+//!
+//! The paper preprocesses its network datasets with LINE (Tang et al.,
+//! WWW 2015) to 100-d representations before visualization, and also
+//! evaluates LINE *directly at 2-d* as a (poor) visualization baseline
+//! (Fig 5). Both uses are served by [`line`].
+
+pub mod line;
+
+pub use line::{Line, LineConfig};

@@ -1,0 +1,186 @@
+//! K-means (Lloyd's algorithm with k-means++ seeding) — the paper
+//! colors its unlabeled figures (WikiWord, CSAuthor; Figs 8–9) by
+//! K-means clusters of the *high-dimensional* representations (200
+//! clusters). Parallel over points; deterministic under a seed.
+
+use crate::data::matrix::{sqdist, Matrix};
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+/// K-means configuration.
+#[derive(Clone, Debug)]
+pub struct KMeansConfig {
+    /// Number of clusters.
+    pub k: usize,
+    /// Max Lloyd iterations.
+    pub max_iters: usize,
+    /// Stop when fewer than `tol_frac * n` points change cluster.
+    pub tol_frac: f64,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Seed for k-means++ init.
+    pub seed: u64,
+}
+
+impl Default for KMeansConfig {
+    fn default() -> Self {
+        KMeansConfig { k: 200, max_iters: 30, tol_frac: 0.001, threads: 0, seed: 0x7e11 }
+    }
+}
+
+/// K-means result.
+pub struct KMeans {
+    /// Cluster assignment per point.
+    pub assignment: Vec<u32>,
+    /// Cluster centroids, `k × d`.
+    pub centroids: Matrix,
+    /// Final within-cluster sum of squares.
+    pub inertia: f64,
+    /// Lloyd iterations executed.
+    pub iters: usize,
+}
+
+/// Run K-means on `data`.
+pub fn kmeans(data: &Matrix, cfg: &KMeansConfig) -> KMeans {
+    let n = data.n();
+    let d = data.d();
+    let k = cfg.k.min(n).max(1);
+    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
+    let mut rng = Rng::new(cfg.seed);
+
+    // k-means++ seeding: first centroid uniform, then ∝ D².
+    let mut centroids = Matrix::zeros(k, d);
+    centroids.row_mut(0).copy_from_slice(data.row(rng.below(n)));
+    let mut d2 = vec![0f64; n];
+    for c in 1..k {
+        let total: f64 = {
+            let prev = centroids.row(c - 1).to_vec();
+            let updates = pool::parallel_map(n, threads, |i| {
+                let dist = sqdist(data.row(i), &prev) as f64;
+                if c == 1 {
+                    dist
+                } else {
+                    dist.min(d2[i])
+                }
+            });
+            d2.copy_from_slice(&updates);
+            d2.iter().sum()
+        };
+        // Sample ∝ d2.
+        let mut target = rng.f64() * total.max(1e-300);
+        let mut pick = n - 1;
+        for (i, &w) in d2.iter().enumerate() {
+            target -= w;
+            if target <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        centroids.row_mut(c).copy_from_slice(data.row(pick));
+    }
+
+    // Lloyd iterations.
+    let mut assignment = vec![0u32; n];
+    let mut inertia = f64::INFINITY;
+    let mut iters = 0;
+    for iter in 0..cfg.max_iters {
+        iters = iter + 1;
+        // Assign.
+        let new_assign: Vec<(u32, f64)> = pool::parallel_map(n, threads, |i| {
+            let row = data.row(i);
+            let mut best = (0u32, f64::INFINITY);
+            for c in 0..k {
+                let dist = sqdist(row, centroids.row(c)) as f64;
+                if dist < best.1 {
+                    best = (c as u32, dist);
+                }
+            }
+            best
+        });
+        let changed = new_assign
+            .iter()
+            .zip(&assignment)
+            .filter(|((c, _), old)| c != *old)
+            .count();
+        inertia = new_assign.iter().map(|&(_, d)| d).sum();
+        for (slot, &(c, _)) in assignment.iter_mut().zip(&new_assign) {
+            *slot = c;
+        }
+        // Update.
+        let mut sums = vec![0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for (i, &c) in assignment.iter().enumerate() {
+            counts[c as usize] += 1;
+            let row = data.row(i);
+            for (s, &x) in sums[c as usize * d..(c as usize + 1) * d].iter_mut().zip(row) {
+                *s += x as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed an empty cluster at a random point.
+                centroids.row_mut(c).copy_from_slice(data.row(rng.below(n)));
+                continue;
+            }
+            let crow = centroids.row_mut(c);
+            for (slot, &s) in crow.iter_mut().zip(&sums[c * d..(c + 1) * d]) {
+                *slot = (s / counts[c] as f64) as f32;
+            }
+        }
+        if (changed as f64) < cfg.tol_frac * n as f64 {
+            break;
+        }
+    }
+    KMeans { assignment, centroids, inertia, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+
+    #[test]
+    fn recovers_separated_clusters() {
+        let (m, labels) = gaussian_mixture(600, 10, 4, 0.0, 3);
+        let km = kmeans(&m, &KMeansConfig { k: 4, threads: 2, ..Default::default() });
+        // Purity: majority true-label share per cluster should be high.
+        let mut purity = 0usize;
+        for c in 0..4u32 {
+            let members: Vec<usize> =
+                (0..600).filter(|&i| km.assignment[i] == c).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let mut counts = [0usize; 4];
+            for &i in &members {
+                counts[labels[i] as usize] += 1;
+            }
+            purity += counts.iter().max().unwrap();
+        }
+        let score = purity as f64 / 600.0;
+        assert!(score > 0.95, "purity {score}");
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let (m, _) = gaussian_mixture(300, 8, 3, 0.3, 5);
+        let i2 = kmeans(&m, &KMeansConfig { k: 2, threads: 1, ..Default::default() }).inertia;
+        let i8 = kmeans(&m, &KMeansConfig { k: 8, threads: 1, ..Default::default() }).inertia;
+        assert!(i8 < i2, "inertia k=8 {i8} !< k=2 {i2}");
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let (m, _) = gaussian_mixture(200, 6, 3, 0.2, 7);
+        let a = kmeans(&m, &KMeansConfig { k: 5, threads: 1, seed: 9, ..Default::default() });
+        let b = kmeans(&m, &KMeansConfig { k: 5, threads: 1, seed: 9, ..Default::default() });
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn k_greater_than_n_clamped() {
+        let (m, _) = gaussian_mixture(10, 4, 2, 0.2, 8);
+        let km = kmeans(&m, &KMeansConfig { k: 50, threads: 1, ..Default::default() });
+        assert!(km.assignment.iter().all(|&c| (c as usize) < 10));
+    }
+}

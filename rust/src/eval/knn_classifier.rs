@@ -1,0 +1,110 @@
+//! KNN-classifier accuracy on low-dimensional layouts (paper §4.3
+//! "Evaluation", used by Figs 5–7).
+//!
+//! For sampled query points, classify by majority vote of the K nearest
+//! *other* points in the 2D layout and compare with the true label.
+
+use crate::data::matrix::Matrix;
+use crate::knn::bruteforce::exact_knn_for;
+use crate::util::rng::Rng;
+
+/// Evaluation parameters.
+#[derive(Clone, Debug)]
+pub struct KnnEvalConfig {
+    /// Neighbors for the classifier vote (paper tries several).
+    pub k: usize,
+    /// Number of query points sampled (caps O(N²) cost on big layouts).
+    pub sample: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// RNG seed for the query sample.
+    pub seed: u64,
+}
+
+impl Default for KnnEvalConfig {
+    fn default() -> Self {
+        KnnEvalConfig { k: 5, sample: 5000, threads: 0, seed: 0xe7a1 }
+    }
+}
+
+/// Classification accuracy of a KNN vote over the layout coordinates.
+pub fn knn_accuracy(layout: &Matrix, labels: &[u32], cfg: &KnnEvalConfig) -> f64 {
+    assert_eq!(layout.n(), labels.len());
+    let n = layout.n();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let queries = rng.sample_indices(n, cfg.sample.min(n));
+    let neighbors = exact_knn_for(layout, &queries, cfg.k, cfg.threads);
+    let mut correct = 0usize;
+    for (row, &q) in neighbors.iter().zip(&queries) {
+        // Majority vote (ties broken by the nearest member of the tie).
+        let mut votes: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+        for &(id, _) in row {
+            *votes.entry(labels[id as usize]).or_insert(0) += 1;
+        }
+        let best = votes.iter().max_by_key(|&(_, &c)| c).map(|(&l, &c)| (l, c));
+        if let Some((label, count)) = best {
+            let tied: Vec<u32> =
+                votes.iter().filter(|&(_, &c)| c == count).map(|(&l, _)| l).collect();
+            let winner = if tied.len() == 1 {
+                label
+            } else {
+                // Nearest neighbor whose label is among the tied ones.
+                row.iter()
+                    .map(|&(id, _)| labels[id as usize])
+                    .find(|l| tied.contains(l))
+                    .unwrap_or(label)
+            };
+            if winner == labels[q] {
+                correct += 1;
+            }
+        }
+    }
+    correct as f64 / queries.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two well-separated blobs in 2D.
+    fn blobs(n: usize) -> (Matrix, Vec<u32>) {
+        let mut rng = Rng::new(9);
+        let mut m = Matrix::zeros(n, 2);
+        let mut labels = vec![0u32; n];
+        for i in 0..n {
+            let c = i % 2;
+            labels[i] = c as u32;
+            let cx = if c == 0 { -5.0 } else { 5.0 };
+            m.row_mut(i)[0] = cx + rng.gaussian();
+            m.row_mut(i)[1] = rng.gaussian();
+        }
+        (m, labels)
+    }
+
+    #[test]
+    fn separated_blobs_score_high() {
+        let (m, l) = blobs(400);
+        let acc = knn_accuracy(&m, &l, &KnnEvalConfig::default());
+        assert!(acc > 0.97, "accuracy {acc}");
+    }
+
+    #[test]
+    fn random_labels_score_chance() {
+        let (m, _) = blobs(400);
+        let mut rng = Rng::new(4);
+        let labels: Vec<u32> = (0..400).map(|_| rng.below(4) as u32).collect();
+        let acc = knn_accuracy(&m, &labels, &KnnEvalConfig { k: 9, ..Default::default() });
+        assert!(acc < 0.45, "accuracy {acc} should be near chance 0.25");
+    }
+
+    #[test]
+    fn sampling_cap_respected() {
+        let (m, l) = blobs(1000);
+        let acc =
+            knn_accuracy(&m, &l, &KnnEvalConfig { sample: 50, ..Default::default() });
+        assert!(acc > 0.9);
+    }
+}

@@ -1,0 +1,61 @@
+//! Additional layout-quality metrics beyond the paper's classifier
+//! accuracy: K-ary neighborhood preservation (fraction of
+//! high-dimensional KNN retained among low-dimensional KNN).
+
+use crate::data::matrix::Matrix;
+use crate::knn::bruteforce::exact_knn_for;
+use crate::util::rng::Rng;
+
+/// Mean fraction of each sampled point's high-dimensional K nearest
+/// neighbors that remain within its low-dimensional K nearest neighbors.
+pub fn neighborhood_preservation(
+    high: &Matrix,
+    low: &Matrix,
+    k: usize,
+    sample: usize,
+    seed: u64,
+    threads: usize,
+) -> f64 {
+    assert_eq!(high.n(), low.n());
+    let n = high.n();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut rng = Rng::new(seed);
+    let queries = rng.sample_indices(n, sample.min(n));
+    let hi = exact_knn_for(high, &queries, k, threads);
+    let lo = exact_knn_for(low, &queries, k, threads);
+    let mut score = 0.0;
+    for (h, l) in hi.iter().zip(&lo) {
+        let hs: std::collections::HashSet<u32> = h.iter().map(|&(id, _)| id).collect();
+        let kept = l.iter().filter(|&&(id, _)| hs.contains(&id)).count();
+        score += kept as f64 / hs.len().max(1) as f64;
+    }
+    score / queries.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_embedding_is_perfect() {
+        let mut rng = Rng::new(1);
+        let data: Vec<f32> = (0..200).map(|_| rng.gaussian()).collect();
+        let m = Matrix::from_vec(data, 100, 2);
+        let s = neighborhood_preservation(&m, &m, 5, 100, 2, 2);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shuffled_embedding_scores_low() {
+        let mut rng = Rng::new(3);
+        let data: Vec<f32> = (0..400).map(|_| rng.gaussian()).collect();
+        let high = Matrix::from_vec(data.clone(), 200, 2);
+        let mut perm: Vec<usize> = (0..200).collect();
+        rng.shuffle(&mut perm);
+        let low = high.gather_rows(&perm);
+        let s = neighborhood_preservation(&high, &low, 5, 200, 4, 2);
+        assert!(s < 0.2, "shuffled preservation {s}");
+    }
+}

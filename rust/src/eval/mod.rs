@@ -1,0 +1,15 @@
+//! Quantitative evaluation of layouts.
+//!
+//! The paper evaluates visualizations by KNN classification accuracy on
+//! the 2D coordinates (borrowed from the t-SNE paper): a layout that
+//! preserves structure lets a KNN classifier recover the original
+//! labels. [`knn_classifier`] implements that metric; [`metrics`] adds
+//! a neighborhood-preservation score used by our extended tests.
+
+pub mod knn_classifier;
+pub mod metrics;
+pub mod kmeans;
+
+pub use kmeans::{kmeans, KMeansConfig};
+pub use knn_classifier::{knn_accuracy, KnnEvalConfig};
+pub use metrics::neighborhood_preservation;

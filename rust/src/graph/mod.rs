@@ -1,0 +1,9 @@
+//! Weighted-graph substrate: perplexity-calibrated edge weights
+//! (paper Eqs. 1–2) and a CSR sparse representation consumed by the
+//! layout engines.
+
+pub mod weights;
+pub mod sparse;
+
+pub use sparse::CsrGraph;
+pub use weights::{weighted_graph, WeightConfig};

@@ -1,0 +1,181 @@
+//! CSR (compressed sparse row) weighted undirected graph — the layout
+//! engines' input format. Stores both directions of every undirected
+//! edge plus a flat edge list for O(1) alias-sampled access.
+
+/// CSR weighted graph.
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    /// Row offsets, length n+1.
+    offsets: Vec<u64>,
+    /// Column ids (neighbor vertex), length = 2 × #undirected edges.
+    cols: Vec<u32>,
+    /// Edge weights aligned with `cols`.
+    weights: Vec<f64>,
+    /// Flat *directed* edge list (src, dst, weight) mirroring CSR order.
+    edges: Vec<(u32, u32, f64)>,
+}
+
+impl CsrGraph {
+    /// Build from undirected edges `(a, b, w)`; both directions stored.
+    pub fn from_undirected(n: usize, undirected: &[(u32, u32, f64)]) -> Self {
+        let mut deg = vec![0u64; n];
+        for &(a, b, _) in undirected {
+            assert!((a as usize) < n && (b as usize) < n && a != b, "bad edge ({a},{b})");
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut offsets = vec![0u64; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let m2 = offsets[n] as usize;
+        let mut cols = vec![0u32; m2];
+        let mut weights = vec![0f64; m2];
+        let mut cursor = offsets.clone();
+        for &(a, b, w) in undirected {
+            let ca = cursor[a as usize] as usize;
+            cols[ca] = b;
+            weights[ca] = w;
+            cursor[a as usize] += 1;
+            let cb = cursor[b as usize] as usize;
+            cols[cb] = a;
+            weights[cb] = w;
+            cursor[b as usize] += 1;
+        }
+        // Sort each row by column for deterministic layout + bsearch.
+        for i in 0..n {
+            let (lo, hi) = (offsets[i] as usize, offsets[i + 1] as usize);
+            let mut row: Vec<(u32, f64)> =
+                cols[lo..hi].iter().copied().zip(weights[lo..hi].iter().copied()).collect();
+            row.sort_unstable_by_key(|&(c, _)| c);
+            for (slot, (c, w)) in row.into_iter().enumerate() {
+                cols[lo + slot] = c;
+                weights[lo + slot] = w;
+            }
+        }
+        let mut edges = Vec::with_capacity(m2);
+        for i in 0..n {
+            let (lo, hi) = (offsets[i] as usize, offsets[i + 1] as usize);
+            for e in lo..hi {
+                edges.push((i as u32, cols[e], weights[e]));
+            }
+        }
+        CsrGraph { offsets, cols, weights, edges }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of *directed* edges (2 × undirected).
+    #[inline]
+    pub fn n_directed_edges(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Neighbors of `i` as `(col, weight)` pairs, sorted by col.
+    #[inline]
+    pub fn row(&self, i: usize) -> RowIter<'_> {
+        let (lo, hi) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
+        RowIter { cols: &self.cols[lo..hi], weights: &self.weights[lo..hi], pos: 0 }
+    }
+
+    /// Weighted degree of vertex `i`.
+    pub fn weighted_degree(&self, i: usize) -> f64 {
+        let (lo, hi) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
+        self.weights[lo..hi].iter().sum()
+    }
+
+    /// Unweighted degree of vertex `i`.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        (self.offsets[i + 1] - self.offsets[i]) as usize
+    }
+
+    /// The flat directed edge list (src, dst, w), CSR order.
+    #[inline]
+    pub fn edges(&self) -> &[(u32, u32, f64)] {
+        &self.edges
+    }
+}
+
+/// Iterator over one CSR row, yielding owned `(col, weight)` pairs.
+pub struct RowIter<'a> {
+    cols: &'a [u32],
+    weights: &'a [f64],
+    pos: usize,
+}
+
+impl Iterator for RowIter<'_> {
+    type Item = (u32, f64);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos < self.cols.len() {
+            let out = (self.cols[self.pos], self.weights[self.pos]);
+            self.pos += 1;
+            Some(out)
+        } else {
+            None
+        }
+    }
+}
+
+impl RowIter<'_> {
+    /// All pairs as a vector (convenience for tests).
+    pub fn collect_pairs(self) -> Vec<(u32, f64)> {
+        self.collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrGraph {
+        CsrGraph::from_undirected(4, &[(0, 1, 1.0), (1, 2, 2.0), (0, 3, 0.5)])
+    }
+
+    #[test]
+    fn degrees_and_rows() {
+        let g = sample();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.n_directed_edges(), 6);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(2), 1);
+        assert_eq!(g.row(0).collect_pairs(), vec![(1, 1.0), (3, 0.5)]);
+        assert_eq!(g.row(2).collect_pairs(), vec![(1, 2.0)]);
+    }
+
+    #[test]
+    fn weighted_degree() {
+        let g = sample();
+        assert!((g.weighted_degree(1) - 3.0).abs() < 1e-12);
+        assert!((g.weighted_degree(3) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edges_match_rows() {
+        let g = sample();
+        assert_eq!(g.edges().len(), 6);
+        let total: f64 = g.edges().iter().map(|&(_, _, w)| w).sum();
+        assert!((total - 7.0).abs() < 1e-12); // 2*(1+2+0.5)
+        for &(s, d, _) in g.edges() {
+            assert!(g.row(s as usize).collect_pairs().iter().any(|&(c, _)| c == d));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_self_loop() {
+        CsrGraph::from_undirected(3, &[(1, 1, 1.0)]);
+    }
+
+    #[test]
+    fn isolated_vertices_ok() {
+        let g = CsrGraph::from_undirected(5, &[(0, 1, 1.0)]);
+        assert_eq!(g.degree(4), 0);
+        assert_eq!(g.row(4).collect_pairs(), vec![]);
+    }
+}

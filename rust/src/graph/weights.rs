@@ -1,0 +1,163 @@
+//! Edge weights for the KNN graph (paper §3.1, Eqs. 1–2) — identical to
+//! t-SNE's input similarities.
+//!
+//! For each point i a bandwidth σ_i is found by binary search so the
+//! conditional distribution `p_{·|i}` over i's KNN edges has a target
+//! perplexity `u` (paper default 50). The graph is then symmetrized:
+//! `w_ij = (p_{j|i} + p_{i|j}) / 2N`.
+
+use crate::graph::sparse::CsrGraph;
+use crate::knn::KnnGraph;
+use crate::util::pool;
+
+/// Weighting parameters.
+#[derive(Clone, Debug)]
+pub struct WeightConfig {
+    /// Target perplexity `u` (paper: 50).
+    pub perplexity: f64,
+    /// Binary-search iterations for σ_i.
+    pub max_iters: usize,
+    /// |log(perp) - log(u)| tolerance.
+    pub tol: f64,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+}
+
+impl Default for WeightConfig {
+    fn default() -> Self {
+        WeightConfig { perplexity: 50.0, max_iters: 64, tol: 1e-5, threads: 0 }
+    }
+}
+
+/// Conditional probabilities for one row given `beta = 1/(2σ²)`.
+/// Returns (probs, perplexity). Distances are squared Euclidean.
+fn row_probs(dists: &[f32], beta: f64) -> (Vec<f64>, f64) {
+    // Subtract min for numerical stability.
+    let dmin = dists.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    let mut probs: Vec<f64> = dists.iter().map(|&d| (-beta * (d as f64 - dmin)).exp()).collect();
+    let sum: f64 = probs.iter().sum();
+    let mut entropy = 0.0;
+    for p in probs.iter_mut() {
+        *p /= sum;
+        if *p > 1e-300 {
+            entropy -= *p * p.ln();
+        }
+    }
+    (probs, entropy.exp())
+}
+
+/// Binary-search σ_i for the target perplexity on one node's KNN edges.
+/// Returns the conditional probabilities `p_{j|i}` aligned with `dists`.
+pub fn calibrate_row(dists: &[f32], perplexity: f64, max_iters: usize, tol: f64) -> Vec<f64> {
+    if dists.is_empty() {
+        return Vec::new();
+    }
+    // Perplexity can't exceed the support size; clamp the target.
+    let target = perplexity.min(dists.len() as f64).max(1.0);
+    let (mut lo, mut hi) = (0.0f64, f64::INFINITY);
+    let mut beta = 1.0f64;
+    let mut probs = Vec::new();
+    for _ in 0..max_iters {
+        let (p, perp) = row_probs(dists, beta);
+        probs = p;
+        let diff = perp.ln() - target.ln();
+        if diff.abs() < tol {
+            break;
+        }
+        if diff > 0.0 {
+            // Too flat (perplexity too high) -> increase beta.
+            lo = beta;
+            beta = if hi.is_finite() { (lo + hi) / 2.0 } else { beta * 2.0 };
+        } else {
+            hi = beta;
+            beta = (lo + hi) / 2.0;
+        }
+    }
+    probs
+}
+
+/// Build the symmetrized weighted graph from a KNN graph (Eqs. 1–2).
+pub fn weighted_graph(knn: &KnnGraph, cfg: &WeightConfig) -> CsrGraph {
+    let n = knn.n();
+    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
+
+    // Conditional p_{j|i} per node, in KNN order.
+    let conds: Vec<Vec<f64>> = pool::parallel_map(n, threads, |i| {
+        let dists: Vec<f32> = knn.neighbors[i].iter().map(|&(_, d)| d).collect();
+        calibrate_row(&dists, cfg.perplexity, cfg.max_iters, cfg.tol)
+    });
+
+    // Symmetrize: w_ij = (p_{j|i} + p_{i|j}) / (2N).
+    // Build a map for p_{i|j} lookups.
+    let mut pair_weight: std::collections::HashMap<(u32, u32), f64> =
+        std::collections::HashMap::with_capacity(n * knn.k);
+    for (i, nbrs) in knn.neighbors.iter().enumerate() {
+        for (slot, &(j, _)) in nbrs.iter().enumerate() {
+            let key = if (i as u32) < j { (i as u32, j) } else { (j, i as u32) };
+            *pair_weight.entry(key).or_insert(0.0) += conds[i][slot];
+        }
+    }
+    let scale = 1.0 / (2.0 * n as f64);
+    let edges: Vec<(u32, u32, f64)> = pair_weight
+        .into_iter()
+        .filter(|&(_, w)| w > 0.0)
+        .map(|((a, b), w)| (a, b, w * scale))
+        .collect();
+    CsrGraph::from_undirected(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+    use crate::knn::bruteforce::exact_knn;
+
+    #[test]
+    fn calibration_hits_target_perplexity() {
+        let dists: Vec<f32> = (1..=100).map(|i| i as f32 * 0.3).collect();
+        for &u in &[5.0, 20.0, 50.0] {
+            let probs = calibrate_row(&dists, u, 100, 1e-7);
+            let entropy: f64 = -probs.iter().filter(|&&p| p > 0.0).map(|p| p * p.ln()).sum::<f64>();
+            assert!(
+                (entropy.exp() - u).abs() < 0.05,
+                "target {u}, got {}",
+                entropy.exp()
+            );
+        }
+    }
+
+    #[test]
+    fn probs_sum_to_one_and_order_by_distance() {
+        let dists = vec![0.1f32, 0.5, 2.0, 8.0];
+        let probs = calibrate_row(&dists, 2.0, 64, 1e-6);
+        let sum: f64 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        for w in probs.windows(2) {
+            assert!(w[0] >= w[1], "closer neighbor must get more mass: {probs:?}");
+        }
+    }
+
+    #[test]
+    fn symmetric_and_normalized() {
+        let (m, _) = gaussian_mixture(200, 8, 4, 0.2, 1);
+        let knn = exact_knn(&m, 10, 2);
+        let g = weighted_graph(&knn, &WeightConfig { perplexity: 5.0, ..Default::default() });
+        // Symmetry: CSR stores both directions with equal weight.
+        for i in 0..g.n() {
+            for (j, w) in g.row(i) {
+                let back = g.row(j as usize).find(|&(b, _)| b as usize == i);
+                let (_, wb) = back.expect("missing reverse edge");
+                assert!((w - wb).abs() < 1e-12);
+            }
+        }
+        // Total weight = sum of w_ij over ordered pairs ≈ sum_i sum_j p_{j|i} / 2N * 2 = 1/N * N...
+        // Each conditional row sums to 1, so total over ordered pairs = 2 * (1/2N) * N = 1.
+        let total: f64 = (0..g.n()).map(|i| g.row(i).map(|(_, w)| w).sum::<f64>()).sum();
+        assert!((total - 1.0).abs() < 1e-6, "total weight {total}");
+    }
+
+    #[test]
+    fn empty_row_ok() {
+        assert!(calibrate_row(&[], 30.0, 10, 1e-5).is_empty());
+    }
+}

@@ -1,0 +1,82 @@
+//! Exact KNN by blocked brute force — O(N²d), parallel over query
+//! chunks. Used as ground truth for recall curves (Figs 2–3) and as the
+//! exact path on small inputs. The blocked inner loop is also the shape
+//! the `pdist` XLA artifact accelerates (see `vis::batched`).
+
+use crate::data::matrix::Matrix;
+use crate::knn::KnnGraph;
+use crate::util::heap::BoundedMaxHeap;
+use crate::util::pool;
+
+/// Exact K-nearest-neighbor graph over all points.
+pub fn exact_knn(data: &Matrix, k: usize, threads: usize) -> KnnGraph {
+    let ids: Vec<usize> = (0..data.n()).collect();
+    let rows = exact_knn_for(data, &ids, k, threads);
+    KnnGraph { neighbors: rows, k }
+}
+
+/// Exact K nearest neighbors for the given query ids only.
+pub fn exact_knn_for(
+    data: &Matrix,
+    queries: &[usize],
+    k: usize,
+    threads: usize,
+) -> Vec<Vec<(u32, f32)>> {
+    let threads = if threads == 0 { pool::default_threads() } else { threads };
+    pool::parallel_map(queries.len(), threads, |qi| {
+        let q = queries[qi];
+        let qrow = data.row(q);
+        let mut heap = BoundedMaxHeap::new(k);
+        for j in 0..data.n() {
+            if j == q {
+                continue;
+            }
+            let bound = heap.threshold();
+            let d = crate::data::matrix::sqdist_bounded(qrow, data.row(j), bound);
+            if d < bound {
+                heap.push(j as u32, d, false);
+            }
+        }
+        heap.into_sorted().iter().map(|c| (c.id, c.dist)).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+
+    #[test]
+    fn matches_naive_on_small_input() {
+        let (m, _) = gaussian_mixture(60, 8, 3, 0.2, 1);
+        let g = exact_knn(&m, 5, 2);
+        g.check_invariants().unwrap();
+        // Naive check for a few query points.
+        for q in [0usize, 17, 59] {
+            let mut dists: Vec<(u32, f32)> = (0..60)
+                .filter(|&j| j != q)
+                .map(|j| (j as u32, m.sqdist(q, j)))
+                .collect();
+            dists.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            let expect: Vec<u32> = dists.iter().take(5).map(|&(id, _)| id).collect();
+            let got: Vec<u32> = g.neighbors[q].iter().map(|&(id, _)| id).collect();
+            assert_eq!(got, expect, "query {q}");
+        }
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let (m, _) = gaussian_mixture(5, 4, 2, 0.0, 2);
+        let g = exact_knn(&m, 10, 1);
+        assert!(g.neighbors.iter().all(|nb| nb.len() == 4));
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn thread_count_invariant() {
+        let (m, _) = gaussian_mixture(80, 6, 4, 0.1, 3);
+        let a = exact_knn(&m, 4, 1);
+        let b = exact_knn(&m, 4, 7);
+        assert_eq!(a.neighbors, b.neighbors);
+    }
+}

@@ -1,0 +1,213 @@
+//! k-d trees (Bentley 1975; Friedman–Bentley–Finkel 1977) — the
+//! classical space-partitioning baseline the paper's related work
+//! discusses: excellent at low dimensionality, degrading sharply as d
+//! grows (the curse that motivates RP trees).
+//!
+//! Median split on the axis of greatest spread; exact backtracking
+//! search with an optional `max_visits` budget for an anytime
+//! approximate mode (same knob as our vp-tree baseline).
+
+use crate::data::matrix::Matrix;
+use crate::knn::KnnGraph;
+use crate::util::heap::BoundedMaxHeap;
+use crate::util::pool;
+
+/// k-d tree search configuration.
+#[derive(Clone, Debug)]
+pub struct KdTreeConfig {
+    /// Max tree nodes visited per query (`usize::MAX` = exact).
+    pub max_visits: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Max points per leaf bucket.
+    pub leaf_size: usize,
+}
+
+impl Default for KdTreeConfig {
+    fn default() -> Self {
+        KdTreeConfig { max_visits: usize::MAX, threads: 0, leaf_size: 16 }
+    }
+}
+
+enum Node {
+    Split { axis: u32, value: f32, left: u32, right: u32 },
+    Leaf { start: u32, len: u32 },
+}
+
+/// A bucketed k-d tree over the dataset.
+pub struct KdTree {
+    nodes: Vec<Node>,
+    points: Vec<u32>,
+}
+
+impl KdTree {
+    /// Build over all points.
+    pub fn build(data: &Matrix, leaf_size: usize) -> Self {
+        let mut idx: Vec<u32> = (0..data.n() as u32).collect();
+        let mut t = KdTree { nodes: Vec::with_capacity(2 * data.n() / leaf_size.max(1)), points: Vec::new() };
+        t.build_rec(data, &mut idx, leaf_size.max(2));
+        t
+    }
+
+    fn build_rec(&mut self, data: &Matrix, idx: &mut [u32], leaf_size: usize) -> u32 {
+        let node_id = self.nodes.len() as u32;
+        if idx.len() <= leaf_size {
+            let start = self.points.len() as u32;
+            self.points.extend_from_slice(idx);
+            self.nodes.push(Node::Leaf { start, len: idx.len() as u32 });
+            return node_id;
+        }
+        // Axis of greatest spread (sampled for speed on big nodes).
+        let d = data.d();
+        let sample: Vec<u32> = idx.iter().step_by((idx.len() / 64).max(1)).copied().collect();
+        let mut best_axis = 0usize;
+        let mut best_spread = -1f32;
+        for axis in 0..d {
+            let (mut lo, mut hi) = (f32::MAX, f32::MIN);
+            for &p in &sample {
+                let v = data.row(p as usize)[axis];
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            if hi - lo > best_spread {
+                best_spread = hi - lo;
+                best_axis = axis;
+            }
+        }
+        if best_spread <= 0.0 {
+            // All sampled points identical on every axis: make a leaf.
+            let start = self.points.len() as u32;
+            self.points.extend_from_slice(idx);
+            self.nodes.push(Node::Leaf { start, len: idx.len() as u32 });
+            return node_id;
+        }
+        // Median split on that axis.
+        let mid = idx.len() / 2;
+        idx.select_nth_unstable_by(mid, |&a, &b| {
+            data.row(a as usize)[best_axis]
+                .partial_cmp(&data.row(b as usize)[best_axis])
+                .unwrap()
+        });
+        let value = data.row(idx[mid] as usize)[best_axis];
+        self.nodes.push(Node::Split { axis: best_axis as u32, value, left: 0, right: 0 });
+        let (l_idx, r_idx) = idx.split_at_mut(mid);
+        let left = self.build_rec(data, l_idx, leaf_size);
+        let right = self.build_rec(data, r_idx, leaf_size);
+        match &mut self.nodes[node_id as usize] {
+            Node::Split { left: l, right: r, .. } => {
+                *l = left;
+                *r = right;
+            }
+            _ => unreachable!(),
+        }
+        node_id
+    }
+
+    /// K nearest neighbors of `q` (excluding `self_id`), visiting at
+    /// most `max_visits` nodes.
+    pub fn knn(
+        &self,
+        data: &Matrix,
+        q: &[f32],
+        self_id: Option<u32>,
+        k: usize,
+        max_visits: usize,
+    ) -> Vec<(u32, f32)> {
+        let mut heap = BoundedMaxHeap::new(k);
+        let mut visits = 0usize;
+        self.search(data, q, self_id, 0, &mut heap, &mut visits, max_visits);
+        heap.into_sorted().iter().map(|c| (c.id, c.dist)).collect()
+    }
+
+    fn search(
+        &self,
+        data: &Matrix,
+        q: &[f32],
+        self_id: Option<u32>,
+        node: u32,
+        heap: &mut BoundedMaxHeap,
+        visits: &mut usize,
+        max_visits: usize,
+    ) {
+        if *visits >= max_visits {
+            return;
+        }
+        *visits += 1;
+        match &self.nodes[node as usize] {
+            Node::Leaf { start, len } => {
+                for &p in &self.points[*start as usize..(*start + *len) as usize] {
+                    if Some(p) == self_id {
+                        continue;
+                    }
+                    let dist = crate::data::matrix::sqdist(q, data.row(p as usize));
+                    if dist < heap.threshold() {
+                        heap.push(p, dist, false);
+                    }
+                }
+            }
+            Node::Split { axis, value, left, right } => {
+                let diff = q[*axis as usize] - value;
+                let (near, far) = if diff < 0.0 { (*left, *right) } else { (*right, *left) };
+                self.search(data, q, self_id, near, heap, visits, max_visits);
+                // Prune the far side iff the splitting plane is farther
+                // than the current worst kept distance.
+                if diff * diff < heap.threshold() {
+                    self.search(data, q, self_id, far, heap, visits, max_visits);
+                }
+            }
+        }
+    }
+}
+
+/// Build a KNN graph by querying a k-d tree for every point.
+pub fn kd_tree_knn(data: &Matrix, k: usize, cfg: &KdTreeConfig) -> KnnGraph {
+    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
+    let tree = KdTree::build(data, cfg.leaf_size);
+    let neighbors = pool::parallel_map(data.n(), threads, |i| {
+        tree.knn(data, data.row(i), Some(i as u32), k, cfg.max_visits)
+    });
+    KnnGraph { neighbors, k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+    use crate::knn::bruteforce::exact_knn;
+
+    #[test]
+    fn exact_search_matches_bruteforce_low_dim() {
+        let (m, _) = gaussian_mixture(400, 4, 3, 0.2, 1);
+        let truth = exact_knn(&m, 8, 2);
+        let g = kd_tree_knn(&m, 8, &KdTreeConfig::default());
+        let recall = g.recall_against(&truth);
+        assert!(recall > 0.999, "kd exact recall {recall}");
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn high_dim_needs_more_visits_than_low_dim() {
+        // The curse of dimensionality: with the same visit budget, low-d
+        // recall beats high-d recall — the paper's related-work claim.
+        let budget = 60;
+        let (lo, _) = gaussian_mixture(800, 4, 4, 0.2, 2);
+        let (hi, _) = gaussian_mixture(800, 64, 4, 0.2, 2);
+        let t_lo = exact_knn(&lo, 8, 2);
+        let t_hi = exact_knn(&hi, 8, 2);
+        let r_lo = kd_tree_knn(&lo, 8, &KdTreeConfig { max_visits: budget, ..Default::default() })
+            .recall_against(&t_lo);
+        let r_hi = kd_tree_knn(&hi, 8, &KdTreeConfig { max_visits: budget, ..Default::default() })
+            .recall_against(&t_hi);
+        assert!(r_lo > r_hi + 0.15, "lo-d {r_lo} vs hi-d {r_hi}");
+    }
+
+    #[test]
+    fn duplicate_points_handled() {
+        let m = Matrix::from_vec(vec![2.0; 40 * 3], 40, 3);
+        let g = kd_tree_knn(&m, 4, &KdTreeConfig::default());
+        g.check_invariants().unwrap();
+        assert!(g.neighbors.iter().all(|nb| nb.len() == 4));
+    }
+
+    use crate::data::matrix::Matrix;
+}

@@ -1,0 +1,186 @@
+//! Locality-sensitive hashing for Euclidean distance (Datar et al. 2004,
+//! p-stable scheme) — the hashing family of KNN baselines the paper's
+//! related work covers.
+//!
+//! `L` hash tables, each keyed by `m` concatenated p-stable projections
+//! `h(x) = floor((a·x + b) / w)`. Candidates are points sharing a
+//! bucket in any table; recall grows with `L` at linear memory cost.
+
+use crate::data::matrix::{dot, sqdist, Matrix};
+use crate::knn::KnnGraph;
+use crate::util::heap::BoundedMaxHeap;
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+/// LSH parameters.
+#[derive(Clone, Debug)]
+pub struct LshConfig {
+    /// Number of hash tables L (recall knob).
+    pub n_tables: usize,
+    /// Projections concatenated per table key.
+    pub hashes_per_table: usize,
+    /// Bucket width w (relative to the data's scale; see `auto_width`).
+    pub width: f32,
+    /// Derive `width` from a sample of pairwise distances when > 0.
+    pub auto_width_sample: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for LshConfig {
+    fn default() -> Self {
+        LshConfig {
+            n_tables: 8,
+            hashes_per_table: 8,
+            width: 1.0,
+            auto_width_sample: 256,
+            threads: 0,
+            seed: 0x15a,
+        }
+    }
+}
+
+struct HashTable {
+    /// Projection vectors, `m × d` flattened.
+    projections: Vec<f32>,
+    /// Offsets b per projection.
+    offsets: Vec<f32>,
+    /// Bucket map: key -> point ids.
+    buckets: std::collections::HashMap<u64, Vec<u32>>,
+    m: usize,
+    d: usize,
+    width: f32,
+}
+
+impl HashTable {
+    fn key(&self, row: &[f32]) -> u64 {
+        // FNV-style mix of the m bucket indices.
+        let mut h = 0xcbf29ce484222325u64;
+        for j in 0..self.m {
+            let proj = &self.projections[j * self.d..(j + 1) * self.d];
+            let v = ((dot(row, proj) + self.offsets[j]) / self.width).floor() as i64;
+            h ^= v as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+/// Build a KNN graph with p-stable LSH.
+pub fn lsh_knn(data: &Matrix, k: usize, cfg: &LshConfig) -> KnnGraph {
+    let n = data.n();
+    let d = data.d();
+    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
+    let mut rng = Rng::new(cfg.seed);
+
+    // Auto-tune the bucket width to the median sampled pair distance so
+    // the scheme works across datasets of different scales.
+    let width = if cfg.auto_width_sample > 0 && n >= 2 {
+        let mut dists: Vec<f64> = Vec::with_capacity(cfg.auto_width_sample);
+        for _ in 0..cfg.auto_width_sample {
+            let a = rng.below(n);
+            let b = rng.below(n);
+            if a != b {
+                dists.push((sqdist(data.row(a), data.row(b)) as f64).sqrt());
+            }
+        }
+        dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = dists.get(dists.len() / 2).copied().unwrap_or(1.0) as f32;
+        (cfg.width * med / 2.0).max(1e-6)
+    } else {
+        cfg.width
+    };
+
+    // Build tables.
+    let mut tables: Vec<HashTable> = (0..cfg.n_tables)
+        .map(|_| {
+            let m = cfg.hashes_per_table;
+            let projections: Vec<f32> =
+                (0..m * d).map(|_| rng.gaussian() / (d as f32).sqrt()).collect();
+            let offsets: Vec<f32> = (0..m).map(|_| rng.range_f32(0.0, width)).collect();
+            HashTable {
+                projections,
+                offsets,
+                buckets: std::collections::HashMap::new(),
+                m,
+                d,
+                width,
+            }
+        })
+        .collect();
+    for table in tables.iter_mut() {
+        for i in 0..n {
+            let key = table.key(data.row(i));
+            table.buckets.entry(key).or_default().push(i as u32);
+        }
+    }
+
+    // Query: union of buckets across tables.
+    let neighbors = pool::parallel_map(n, threads, |i| {
+        let q = data.row(i);
+        let mut heap = BoundedMaxHeap::new(k);
+        for table in &tables {
+            if let Some(bucket) = table.buckets.get(&table.key(q)) {
+                for &cand in bucket {
+                    if cand as usize == i {
+                        continue;
+                    }
+                    let dist = sqdist(q, data.row(cand as usize));
+                    if dist < heap.threshold() {
+                        heap.push(cand, dist, false);
+                    }
+                }
+            }
+        }
+        heap.into_sorted().iter().map(|c| (c.id, c.dist)).collect::<Vec<_>>()
+    });
+    KnnGraph { neighbors, k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+    use crate::knn::bruteforce::exact_knn;
+
+    #[test]
+    fn recall_grows_with_tables() {
+        let (m, _) = gaussian_mixture(600, 16, 4, 0.2, 1);
+        let truth = exact_knn(&m, 8, 2);
+        let r1 = lsh_knn(&m, 8, &LshConfig { n_tables: 1, ..Default::default() })
+            .recall_against(&truth);
+        let r16 = lsh_knn(&m, 8, &LshConfig { n_tables: 16, ..Default::default() })
+            .recall_against(&truth);
+        assert!(r16 > r1, "tables 16 {r16} <= 1 {r1}");
+        assert!(r16 > 0.3, "16-table recall too low: {r16}");
+    }
+
+    #[test]
+    fn buckets_group_similar_points() {
+        // Two far-apart tight blobs: same-blob pairs should share
+        // buckets far more often than cross-blob pairs.
+        let (m, labels) = gaussian_mixture(300, 8, 2, 0.0, 2);
+        let g = lsh_knn(&m, 5, &LshConfig::default());
+        let mut same = 0usize;
+        let mut total = 0usize;
+        for i in 0..300 {
+            for &(j, _) in &g.neighbors[i] {
+                total += 1;
+                if labels[i] == labels[j as usize] {
+                    same += 1;
+                }
+            }
+        }
+        assert!(total > 0);
+        assert!(same as f64 / total as f64 > 0.9, "{same}/{total}");
+    }
+
+    #[test]
+    fn invariants_hold() {
+        let (m, _) = gaussian_mixture(200, 12, 3, 0.3, 3);
+        let g = lsh_knn(&m, 6, &LshConfig::default());
+        g.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,141 @@
+//! K-nearest-neighbor graph construction (paper §3.1).
+//!
+//! The paper's contribution is [`rptree`] (random projection forest for
+//! a rough graph) + [`explore`] (neighbor-of-neighbor refinement to
+//! ~100% recall). Baselines for Fig 2: [`vptree`] (what t-SNE uses),
+//! [`nndescent`], and plain RP-forests without exploring. [`bruteforce`]
+//! provides exact ground truth for recall evaluation.
+
+pub mod bruteforce;
+pub mod rptree;
+pub mod vptree;
+pub mod kdtree;
+pub mod lsh;
+pub mod nndescent;
+pub mod explore;
+
+use crate::data::matrix::Matrix;
+
+/// A (possibly approximate) K-nearest-neighbor graph: for each point,
+/// up to K neighbors sorted ascending by squared distance.
+#[derive(Clone, Debug)]
+pub struct KnnGraph {
+    /// `neighbors[i]` = sorted `(id, sqdist)` pairs, self excluded.
+    pub neighbors: Vec<Vec<(u32, f32)>>,
+    /// Requested K.
+    pub k: usize,
+}
+
+impl KnnGraph {
+    /// Empty graph over `n` points.
+    pub fn empty(n: usize, k: usize) -> Self {
+        KnnGraph { neighbors: vec![Vec::new(); n], k }
+    }
+
+    /// Number of points.
+    pub fn n(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Mean recall against an exact graph (fraction of true neighbors
+    /// recovered, averaged over points) — the paper's Fig 2/3 "accuracy".
+    pub fn recall_against(&self, truth: &KnnGraph) -> f64 {
+        assert_eq!(self.n(), truth.n());
+        let mut hit = 0usize;
+        let mut total = 0usize;
+        for (mine, real) in self.neighbors.iter().zip(&truth.neighbors) {
+            let truth_set: std::collections::HashSet<u32> =
+                real.iter().map(|&(id, _)| id).collect();
+            total += truth_set.len();
+            hit += mine.iter().filter(|&&(id, _)| truth_set.contains(&id)).count();
+        }
+        if total == 0 {
+            1.0
+        } else {
+            hit as f64 / total as f64
+        }
+    }
+
+    /// Validate structural invariants (no self-loops, sorted, distinct,
+    /// ≤ K entries). Used by tests and debug assertions.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (i, nb) in self.neighbors.iter().enumerate() {
+            if nb.len() > self.k {
+                return Err(format!("node {i}: {} neighbors > k={}", nb.len(), self.k));
+            }
+            let mut seen = std::collections::HashSet::new();
+            let mut last = f32::NEG_INFINITY;
+            for &(id, d) in nb {
+                if id as usize == i {
+                    return Err(format!("node {i}: self-loop"));
+                }
+                if !seen.insert(id) {
+                    return Err(format!("node {i}: duplicate neighbor {id}"));
+                }
+                if d < last {
+                    return Err(format!("node {i}: distances not sorted"));
+                }
+                if !d.is_finite() {
+                    return Err(format!("node {i}: non-finite distance"));
+                }
+                last = d;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Exact recall of `approx` over a random sample of `sample` nodes
+/// (recomputing ground truth only for the sampled nodes — cheap enough
+/// for the big benches).
+pub fn sampled_recall(
+    data: &Matrix,
+    approx: &KnnGraph,
+    sample: usize,
+    seed: u64,
+    threads: usize,
+) -> f64 {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let ids = rng.sample_indices(data.n(), sample.min(data.n()));
+    let truth = bruteforce::exact_knn_for(data, &ids, approx.k, threads);
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for (row, &i) in truth.iter().zip(&ids) {
+        let ts: std::collections::HashSet<u32> = row.iter().map(|&(id, _)| id).collect();
+        total += ts.len();
+        hit += approx.neighbors[i].iter().filter(|&&(id, _)| ts.contains(&id)).count();
+    }
+    if total == 0 {
+        1.0
+    } else {
+        hit as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invariants_catch_problems() {
+        let mut g = KnnGraph::empty(3, 2);
+        g.neighbors[0] = vec![(1, 0.5), (2, 1.0)];
+        assert!(g.check_invariants().is_ok());
+        g.neighbors[1] = vec![(1, 0.1)];
+        assert!(g.check_invariants().unwrap_err().contains("self-loop"));
+        g.neighbors[1] = vec![(0, 1.0), (0, 2.0)];
+        assert!(g.check_invariants().unwrap_err().contains("duplicate"));
+        g.neighbors[1] = vec![(0, 2.0), (2, 1.0)];
+        assert!(g.check_invariants().unwrap_err().contains("sorted"));
+    }
+
+    #[test]
+    fn recall_perfect_and_zero() {
+        let mut a = KnnGraph::empty(2, 2);
+        a.neighbors[0] = vec![(1, 1.0)];
+        a.neighbors[1] = vec![(0, 1.0)];
+        assert_eq!(a.recall_against(&a), 1.0);
+        let empty = KnnGraph::empty(2, 2);
+        assert_eq!(empty.recall_against(&a), 0.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! NN-Descent (Dong, Moses & Li, WWW 2011) — the neighbor-exploring
+//! baseline of Fig 2.
+//!
+//! Starts from a *random* graph (unlike LargeVis which starts from an
+//! RP-forest) and iterates local joins between each node's new/old
+//! neighbors and reverse neighbors until convergence. Efficient at low
+//! dimension, slower to converge at high dimension — the gap the paper
+//! exploits.
+
+use crate::data::matrix::{sqdist, Matrix};
+use crate::knn::KnnGraph;
+use crate::util::heap::BoundedMaxHeap;
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+/// NN-Descent parameters.
+#[derive(Clone, Debug)]
+pub struct NnDescentConfig {
+    /// Max iterations.
+    pub max_iters: usize,
+    /// Sample rate ρ for the local join (1.0 = full join).
+    pub sample_rate: f64,
+    /// Early-stop when updates per node fall below `delta * K * N`.
+    pub delta: f64,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for NnDescentConfig {
+    fn default() -> Self {
+        NnDescentConfig { max_iters: 10, sample_rate: 1.0, delta: 0.001, threads: 0, seed: 0x4e4e }
+    }
+}
+
+/// Run NN-Descent to build an approximate KNN graph.
+pub fn nn_descent(data: &Matrix, k: usize, cfg: &NnDescentConfig) -> KnnGraph {
+    let n = data.n();
+    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
+    let base_rng = Rng::new(cfg.seed);
+
+    // Random initialization: k random neighbors per node.
+    let mut heaps: Vec<BoundedMaxHeap> = pool::parallel_map(n, threads, |i| {
+        let mut rng = base_rng.split(i as u64);
+        let mut h = BoundedMaxHeap::new(k);
+        while h.len() < k.min(n - 1) {
+            let j = rng.below(n);
+            if j != i {
+                h.push(j as u32, sqdist(data.row(i), data.row(j)), true);
+            }
+        }
+        h
+    });
+
+    let sample_k = ((k as f64 * cfg.sample_rate).ceil() as usize).max(1);
+
+    for _iter in 0..cfg.max_iters {
+        // Build sampled new/old lists and reverse lists.
+        let mut new_fwd: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut old_fwd: Vec<Vec<u32>> = vec![Vec::new(); n];
+        {
+            let mut rng = base_rng.split(0xFFFF ^ _iter as u64);
+            for (i, h) in heaps.iter_mut().enumerate() {
+                let cands = h.as_mut_slice();
+                // Sample up to sample_k flagged (new) candidates; clear flags.
+                let mut new_ids: Vec<usize> =
+                    cands.iter().enumerate().filter(|(_, c)| c.flag).map(|(idx, _)| idx).collect();
+                rng.shuffle(&mut new_ids);
+                new_ids.truncate(sample_k);
+                for (idx, c) in cands.iter().enumerate() {
+                    if c.flag && new_ids.contains(&idx) {
+                        new_fwd[i].push(c.id);
+                    } else if !c.flag {
+                        old_fwd[i].push(c.id);
+                    }
+                }
+                for &idx in &new_ids {
+                    cands[idx].flag = false;
+                }
+            }
+        }
+        // Reverse lists (sampled).
+        let mut new_rev: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut old_rev: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for i in 0..n {
+            for &j in &new_fwd[i] {
+                new_rev[j as usize].push(i as u32);
+            }
+            for &j in &old_fwd[i] {
+                old_rev[j as usize].push(i as u32);
+            }
+        }
+        {
+            let mut rng = base_rng.split(0xABCD ^ _iter as u64);
+            for lists in [&mut new_rev, &mut old_rev] {
+                for l in lists.iter_mut() {
+                    if l.len() > sample_k {
+                        rng.shuffle(l);
+                        l.truncate(sample_k);
+                    }
+                }
+            }
+        }
+
+        // Local join: candidates of node i = new[i] ∪ new_rev[i] joined
+        // against (new ∪ old ∪ reverses). Collect updates, then apply —
+        // simple two-phase scheme to stay deterministic per iteration.
+        let updates: Vec<Vec<(u32, u32, f32)>> = pool::parallel_map(n, threads, |i| {
+            let mut ups = Vec::new();
+            let mut news: Vec<u32> = new_fwd[i].clone();
+            news.extend_from_slice(&new_rev[i]);
+            let mut olds: Vec<u32> = old_fwd[i].clone();
+            olds.extend_from_slice(&old_rev[i]);
+            news.sort_unstable();
+            news.dedup();
+            olds.sort_unstable();
+            olds.dedup();
+            for (ai, &a) in news.iter().enumerate() {
+                // new-new pairs
+                for &b in news.iter().skip(ai + 1) {
+                    if a != b {
+                        let d = sqdist(data.row(a as usize), data.row(b as usize));
+                        ups.push((a, b, d));
+                    }
+                }
+                // new-old pairs
+                for &b in &olds {
+                    if a != b {
+                        let d = sqdist(data.row(a as usize), data.row(b as usize));
+                        ups.push((a, b, d));
+                    }
+                }
+            }
+            ups
+        });
+
+        let mut changed = 0usize;
+        for ups in &updates {
+            for &(a, b, d) in ups {
+                if d < heaps[a as usize].threshold() && heaps[a as usize].push(b, d, true) {
+                    changed += 1;
+                }
+                if d < heaps[b as usize].threshold() && heaps[b as usize].push(a, d, true) {
+                    changed += 1;
+                }
+            }
+        }
+        if (changed as f64) < cfg.delta * (n * k) as f64 {
+            break;
+        }
+    }
+
+    let neighbors = heaps
+        .into_iter()
+        .map(|h| h.into_sorted().iter().map(|c| (c.id, c.dist)).collect())
+        .collect();
+    KnnGraph { neighbors, k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+    use crate::knn::bruteforce::exact_knn;
+
+    #[test]
+    fn converges_to_high_recall_low_dim() {
+        let (m, _) = gaussian_mixture(500, 8, 4, 0.2, 1);
+        let truth = exact_knn(&m, 10, 4);
+        let g = nn_descent(&m, 10, &NnDescentConfig { threads: 2, ..Default::default() });
+        let recall = g.recall_against(&truth);
+        assert!(recall > 0.90, "NN-Descent recall {recall}");
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn more_iters_not_worse() {
+        let (m, _) = gaussian_mixture(300, 12, 3, 0.2, 2);
+        let truth = exact_knn(&m, 8, 2);
+        let one = nn_descent(&m, 8, &NnDescentConfig { max_iters: 1, threads: 2, ..Default::default() })
+            .recall_against(&truth);
+        let five = nn_descent(&m, 8, &NnDescentConfig { max_iters: 5, threads: 2, ..Default::default() })
+            .recall_against(&truth);
+        assert!(five >= one - 0.02, "iters hurt: 1->{one}, 5->{five}");
+    }
+
+    #[test]
+    fn tiny_dataset() {
+        let (m, _) = gaussian_mixture(12, 4, 2, 0.2, 3);
+        let g = nn_descent(&m, 5, &NnDescentConfig { threads: 1, ..Default::default() });
+        g.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,299 @@
+//! Random projection trees (Dasgupta & Freund, 2008) — the paper's
+//! starting point for approximate KNN graph construction.
+//!
+//! Every internal node splits its subspace by the hyperplane equidistant
+//! to two randomly sampled points; leaves hold ≤ `leaf_size` points.
+//! Points in the same leaf become mutual neighbor *candidates*; a
+//! forest of `n_trees` unions its candidates. Accuracy grows with
+//! `n_trees` at linear cost — the dilemma the paper breaks with
+//! neighbor exploring ([`crate::knn::explore`]).
+
+use crate::data::matrix::{dot, sqdist, Matrix};
+use crate::knn::KnnGraph;
+use crate::util::heap::BoundedMaxHeap;
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+/// RP-forest build parameters.
+#[derive(Clone, Debug)]
+pub struct RpForestConfig {
+    /// Number of trees (accuracy knob).
+    pub n_trees: usize,
+    /// Max points per leaf.
+    pub leaf_size: usize,
+    /// Leaves visited per query per tree (Annoy-style priority search;
+    /// 1 = own leaf only). Extra leaves cross partition boundaries so
+    /// neighbor exploring can escape single-tree leaf cliques.
+    pub search_leaves: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for RpForestConfig {
+    fn default() -> Self {
+        RpForestConfig { n_trees: 8, leaf_size: 32, search_leaves: 3, threads: 0, seed: 0x8f0 }
+    }
+}
+
+/// One node of an RP-tree, flattened into arrays for cache friendliness.
+enum Node {
+    /// Hyperplane split: normal index into `normals`, offset, children.
+    Split { normal: u32, offset: f32, left: u32, right: u32 },
+    /// Leaf: range into `leaf_points`.
+    Leaf { start: u32, len: u32 },
+}
+
+/// A single random projection tree over the dataset.
+pub struct RpTree {
+    nodes: Vec<Node>,
+    normals: Vec<f32>, // n_splits × d
+    leaf_points: Vec<u32>,
+    d: usize,
+}
+
+impl RpTree {
+    /// Build a tree over all points of `data`.
+    pub fn build(data: &Matrix, leaf_size: usize, rng: &mut Rng) -> Self {
+        let mut t = RpTree {
+            nodes: Vec::new(),
+            normals: Vec::new(),
+            leaf_points: Vec::new(),
+            d: data.d(),
+        };
+        let mut idx: Vec<u32> = (0..data.n() as u32).collect();
+        t.build_rec(data, &mut idx, leaf_size.max(2), rng);
+        t
+    }
+
+    fn build_rec(&mut self, data: &Matrix, idx: &mut [u32], leaf_size: usize, rng: &mut Rng) -> u32 {
+        let node_id = self.nodes.len() as u32;
+        if idx.len() <= leaf_size {
+            let start = self.leaf_points.len() as u32;
+            self.leaf_points.extend_from_slice(idx);
+            self.nodes.push(Node::Leaf { start, len: idx.len() as u32 });
+            return node_id;
+        }
+        // Pick two distinct random points; hyperplane = perpendicular
+        // bisector of the segment between them.
+        let (mut a, mut b) = (0usize, 0usize);
+        for _ in 0..16 {
+            a = idx[rng.below(idx.len())] as usize;
+            b = idx[rng.below(idx.len())] as usize;
+            if a != b && sqdist(data.row(a), data.row(b)) > 0.0 {
+                break;
+            }
+        }
+        if a == b || sqdist(data.row(a), data.row(b)) == 0.0 {
+            // Degenerate (duplicated points): make a leaf.
+            let start = self.leaf_points.len() as u32;
+            self.leaf_points.extend_from_slice(idx);
+            self.nodes.push(Node::Leaf { start, len: idx.len() as u32 });
+            return node_id;
+        }
+        let d = self.d;
+        let normal_idx = (self.normals.len() / d) as u32;
+        let ra = data.row(a);
+        let rb = data.row(b);
+        // normal = a - b; offset = normal · midpoint.
+        let mut offset = 0f32;
+        for k in 0..d {
+            let nk = ra[k] - rb[k];
+            self.normals.push(nk);
+            offset += nk * 0.5 * (ra[k] + rb[k]);
+        }
+        let normal = &self.normals[normal_idx as usize * d..(normal_idx as usize + 1) * d].to_vec();
+        // Partition in place.
+        let mut lo = 0usize;
+        let mut hi = idx.len();
+        while lo < hi {
+            let p = idx[lo] as usize;
+            if dot(data.row(p), normal) < offset {
+                lo += 1;
+            } else {
+                hi -= 1;
+                idx.swap(lo, hi);
+            }
+        }
+        // Guard against empty side (can happen with heavy duplicates):
+        // force a median-ish split.
+        if lo == 0 || lo == idx.len() {
+            lo = idx.len() / 2;
+        }
+        self.nodes.push(Node::Split { normal: normal_idx, offset, left: 0, right: 0 });
+        let (l_idx, r_idx) = idx.split_at_mut(lo);
+        let left = self.build_rec(data, l_idx, leaf_size, rng);
+        let right = self.build_rec(data, r_idx, leaf_size, rng);
+        match &mut self.nodes[node_id as usize] {
+            Node::Split { left: l, right: r, .. } => {
+                *l = left;
+                *r = right;
+            }
+            _ => unreachable!(),
+        }
+        node_id
+    }
+
+    /// Leaf candidate ids for a query vector.
+    pub fn leaf_for(&self, q: &[f32]) -> &[u32] {
+        let mut cur = 0u32;
+        loop {
+            match &self.nodes[cur as usize] {
+                Node::Leaf { start, len } => {
+                    return &self.leaf_points[*start as usize..(*start + *len) as usize];
+                }
+                Node::Split { normal, offset, left, right } => {
+                    let n = &self.normals[*normal as usize * self.d..(*normal as usize + 1) * self.d];
+                    cur = if dot(q, n) < *offset { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    /// Annoy-style priority search: visit up to `max_leaves` leaves in
+    /// order of hyperplane-margin distance, calling `visit` on each
+    /// candidate slice. Crosses partition boundaries, unlike `leaf_for`.
+    pub fn search_leaves(&self, q: &[f32], max_leaves: usize, visit: &mut impl FnMut(&[u32])) {
+        // Min-heap on margin distance via Reverse-ordered f32 bits.
+        let mut heap: std::collections::BinaryHeap<(std::cmp::Reverse<u32>, u32)> =
+            std::collections::BinaryHeap::new();
+        let key = |margin: f32| std::cmp::Reverse(margin.max(0.0).to_bits());
+        heap.push((key(0.0), 0));
+        let mut visited = 0usize;
+        while let Some((_, mut cur)) = heap.pop() {
+            loop {
+                match &self.nodes[cur as usize] {
+                    Node::Leaf { start, len } => {
+                        visit(&self.leaf_points[*start as usize..(*start + *len) as usize]);
+                        visited += 1;
+                        break;
+                    }
+                    Node::Split { normal, offset, left, right } => {
+                        let nvec =
+                            &self.normals[*normal as usize * self.d..(*normal as usize + 1) * self.d];
+                        let margin = dot(q, nvec) - *offset;
+                        let (near, far) = if margin < 0.0 { (*left, *right) } else { (*right, *left) };
+                        heap.push((key(margin.abs()), far));
+                        cur = near;
+                    }
+                }
+            }
+            if visited >= max_leaves {
+                break;
+            }
+        }
+    }
+}
+
+/// Build an approximate KNN graph from an RP-forest: each point's
+/// candidates are the union of its leaves across trees.
+pub fn rp_forest_knn(data: &Matrix, k: usize, cfg: &RpForestConfig) -> KnnGraph {
+    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
+    let base = Rng::new(cfg.seed);
+    // Trees build independently in parallel.
+    let trees: Vec<RpTree> = {
+        let mut trees: Vec<Option<RpTree>> = (0..cfg.n_trees).map(|_| None).collect();
+        std::thread::scope(|s| {
+            for (t, slot) in trees.iter_mut().enumerate() {
+                let mut rng = base.split(t as u64);
+                let data = &data;
+                let leaf = cfg.leaf_size;
+                s.spawn(move || {
+                    *slot = Some(RpTree::build(data, leaf, &mut rng));
+                });
+            }
+        });
+        trees.into_iter().map(|t| t.unwrap()).collect()
+    };
+
+    let neighbors = pool::parallel_map(data.n(), threads, |i| {
+        let q = data.row(i);
+        let mut heap = BoundedMaxHeap::new(k);
+        // Dedup candidates repeated across trees/leaves before paying
+        // for a distance computation (§Perf).
+        let mut seen = std::collections::HashSet::with_capacity(
+            cfg.n_trees * cfg.search_leaves.max(1) * cfg.leaf_size,
+        );
+        seen.insert(i as u32);
+        for tree in &trees {
+            tree.search_leaves(q, cfg.search_leaves.max(1), &mut |leaf| {
+                for &cand in leaf {
+                    if !seen.insert(cand) {
+                        continue;
+                    }
+                    let bound = heap.threshold();
+                    let dist =
+                        crate::data::matrix::sqdist_bounded(q, data.row(cand as usize), bound);
+                    if dist < bound {
+                        heap.push(cand, dist, true);
+                    }
+                }
+            });
+        }
+        heap.into_sorted().iter().map(|c| (c.id, c.dist)).collect::<Vec<_>>()
+    });
+    KnnGraph { neighbors, k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+    use crate::knn::bruteforce::exact_knn;
+
+    #[test]
+    fn leaf_sizes_respected() {
+        let (m, _) = gaussian_mixture(500, 10, 5, 0.2, 1);
+        let mut rng = Rng::new(2);
+        let t = RpTree::build(&m, 16, &mut rng);
+        let mut total = 0usize;
+        for node in &t.nodes {
+            if let Node::Leaf { len, .. } = node {
+                // Degenerate duplicate leaves may exceed; gaussian data won't.
+                assert!(*len <= 16, "leaf of size {len}");
+                total += *len as usize;
+            }
+        }
+        assert_eq!(total, 500); // every point in exactly one leaf
+    }
+
+    #[test]
+    fn every_point_reaches_its_own_leaf() {
+        let (m, _) = gaussian_mixture(200, 8, 4, 0.2, 3);
+        let mut rng = Rng::new(4);
+        let t = RpTree::build(&m, 8, &mut rng);
+        for i in 0..m.n() {
+            let leaf = t.leaf_for(m.row(i));
+            assert!(leaf.contains(&(i as u32)), "point {i} missing from its leaf");
+        }
+    }
+
+    #[test]
+    fn recall_grows_with_trees() {
+        let (m, _) = gaussian_mixture(600, 16, 6, 0.3, 5);
+        let truth = exact_knn(&m, 10, 4);
+        let r1 = rp_forest_knn(&m, 10, &RpForestConfig { n_trees: 1, leaf_size: 24, threads: 2, seed: 6, ..Default::default() })
+            .recall_against(&truth);
+        let r8 = rp_forest_knn(&m, 10, &RpForestConfig { n_trees: 12, leaf_size: 24, threads: 2, seed: 6, ..Default::default() })
+            .recall_against(&truth);
+        assert!(r8 > r1, "recall 12 trees {r8} <= 1 tree {r1}");
+        assert!(r8 > 0.5, "12-tree recall too low: {r8}");
+    }
+
+    #[test]
+    fn graph_invariants_hold() {
+        let (m, _) = gaussian_mixture(300, 12, 3, 0.2, 7);
+        let g = rp_forest_knn(&m, 8, &RpForestConfig::default());
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn handles_duplicate_points() {
+        // All points identical: degenerate splits must not loop forever.
+        let m = Matrix::from_vec(vec![1.0; 50 * 4], 50, 4);
+        let g = rp_forest_knn(&m, 5, &RpForestConfig { n_trees: 2, leaf_size: 8, threads: 1, seed: 1, ..Default::default() });
+        g.check_invariants().unwrap();
+        assert!(g.neighbors.iter().all(|nb| nb.len() == 5));
+    }
+}

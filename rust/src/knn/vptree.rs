@@ -1,0 +1,193 @@
+//! Vantage-point trees (Yianilos, 1993) — the KNN method used by
+//! Barnes–Hut t-SNE, and the paper's main Fig 2 baseline.
+//!
+//! Exact search prunes subtrees by the triangle inequality; in high
+//! dimensions the pruning bound is rarely tight so search degenerates
+//! toward a linear scan — exactly the deterioration the paper reports.
+//! A `max_visits` budget turns the exact search into an anytime
+//! approximate one, tracing Fig 2's time-vs-recall curve.
+
+use crate::data::matrix::Matrix;
+use crate::knn::KnnGraph;
+use crate::util::heap::BoundedMaxHeap;
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+/// VP-tree search configuration.
+#[derive(Clone, Debug)]
+pub struct VpTreeConfig {
+    /// Max nodes visited per query (`usize::MAX` = exact search).
+    pub max_visits: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// RNG seed (vantage points are sampled randomly).
+    pub seed: u64,
+}
+
+impl Default for VpTreeConfig {
+    fn default() -> Self {
+        VpTreeConfig { max_visits: usize::MAX, threads: 0, seed: 0x59 }
+    }
+}
+
+struct VpNode {
+    /// Point id of the vantage point.
+    vantage: u32,
+    /// Median distance (not squared) separating inside from outside.
+    radius: f32,
+    /// Child node indices (u32::MAX = none).
+    inside: u32,
+    outside: u32,
+}
+
+/// A vantage-point tree over the dataset.
+pub struct VpTree {
+    nodes: Vec<VpNode>,
+    root: u32,
+}
+
+const NONE: u32 = u32::MAX;
+
+impl VpTree {
+    /// Build over all points.
+    pub fn build(data: &Matrix, seed: u64) -> Self {
+        let mut items: Vec<u32> = (0..data.n() as u32).collect();
+        let mut t = VpTree { nodes: Vec::with_capacity(data.n()), root: NONE };
+        let mut rng = Rng::new(seed);
+        let root = t.build_rec(data, &mut items, &mut rng);
+        t.root = root;
+        t
+    }
+
+    fn build_rec(&mut self, data: &Matrix, items: &mut [u32], rng: &mut Rng) -> u32 {
+        if items.is_empty() {
+            return NONE;
+        }
+        let node_id = self.nodes.len() as u32;
+        // Random vantage point (swap to front).
+        let v = rng.below(items.len());
+        items.swap(0, v);
+        let vantage = items[0];
+        let rest = &mut items[1..];
+        if rest.is_empty() {
+            self.nodes.push(VpNode { vantage, radius: 0.0, inside: NONE, outside: NONE });
+            return node_id;
+        }
+        // Median split by distance to the vantage point.
+        let vrow = data.row(vantage as usize).to_vec();
+        let mut dists: Vec<(f32, u32)> = rest
+            .iter()
+            .map(|&p| (crate::data::matrix::sqdist(&vrow, data.row(p as usize)).sqrt(), p))
+            .collect();
+        let mid = dists.len() / 2;
+        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let radius = dists[mid.min(dists.len() - 1)].0;
+        for (slot, &(_, p)) in rest.iter_mut().zip(&dists) {
+            *slot = p;
+        }
+        self.nodes.push(VpNode { vantage, radius, inside: NONE, outside: NONE });
+        let (ins, outs) = rest.split_at_mut(mid);
+        let inside = self.build_rec(data, ins, rng);
+        let outside = self.build_rec(data, outs, rng);
+        let node = &mut self.nodes[node_id as usize];
+        node.inside = inside;
+        node.outside = outside;
+        node_id
+    }
+
+    /// K nearest neighbors of `q` (id `self_id` excluded), visiting at
+    /// most `max_visits` tree nodes.
+    pub fn knn(
+        &self,
+        data: &Matrix,
+        q: &[f32],
+        self_id: Option<u32>,
+        k: usize,
+        max_visits: usize,
+    ) -> Vec<(u32, f32)> {
+        let mut heap = BoundedMaxHeap::new(k);
+        let mut visits = 0usize;
+        self.search(data, q, self_id, self.root, &mut heap, &mut visits, max_visits);
+        heap.into_sorted().iter().map(|c| (c.id, c.dist)).collect()
+    }
+
+    fn search(
+        &self,
+        data: &Matrix,
+        q: &[f32],
+        self_id: Option<u32>,
+        node: u32,
+        heap: &mut BoundedMaxHeap,
+        visits: &mut usize,
+        max_visits: usize,
+    ) {
+        if node == NONE || *visits >= max_visits {
+            return;
+        }
+        *visits += 1;
+        let n = &self.nodes[node as usize];
+        let d2 = crate::data::matrix::sqdist(q, data.row(n.vantage as usize));
+        if Some(n.vantage) != self_id && d2 < heap.threshold() {
+            heap.push(n.vantage, d2, false);
+        }
+        let d = d2.sqrt();
+        // Tau = current worst kept distance (in unsquared space).
+        let tau = heap.threshold().sqrt();
+        if d < n.radius {
+            self.search(data, q, self_id, n.inside, heap, visits, max_visits);
+            if d + tau >= n.radius {
+                self.search(data, q, self_id, n.outside, heap, visits, max_visits);
+            }
+        } else {
+            self.search(data, q, self_id, n.outside, heap, visits, max_visits);
+            if d - tau <= n.radius {
+                self.search(data, q, self_id, n.inside, heap, visits, max_visits);
+            }
+        }
+    }
+}
+
+/// Build a KNN graph by querying a VP-tree for every point.
+pub fn vp_tree_knn(data: &Matrix, k: usize, cfg: &VpTreeConfig) -> KnnGraph {
+    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
+    let tree = VpTree::build(data, cfg.seed);
+    let neighbors = pool::parallel_map(data.n(), threads, |i| {
+        tree.knn(data, data.row(i), Some(i as u32), k, cfg.max_visits)
+    });
+    KnnGraph { neighbors, k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+    use crate::knn::bruteforce::exact_knn;
+
+    #[test]
+    fn exact_search_matches_bruteforce() {
+        let (m, _) = gaussian_mixture(300, 6, 3, 0.2, 1);
+        let truth = exact_knn(&m, 8, 2);
+        let g = vp_tree_knn(&m, 8, &VpTreeConfig::default());
+        let recall = g.recall_against(&truth);
+        assert!(recall > 0.999, "exact VP search recall {recall}");
+    }
+
+    #[test]
+    fn budget_trades_recall() {
+        let (m, _) = gaussian_mixture(800, 32, 4, 0.2, 2);
+        let truth = exact_knn(&m, 10, 4);
+        let tight = vp_tree_knn(&m, 10, &VpTreeConfig { max_visits: 12, ..Default::default() })
+            .recall_against(&truth);
+        let loose = vp_tree_knn(&m, 10, &VpTreeConfig { max_visits: 2000, ..Default::default() })
+            .recall_against(&truth);
+        assert!(loose > tight, "loose {loose} <= tight {tight}");
+    }
+
+    #[test]
+    fn graph_invariants() {
+        let (m, _) = gaussian_mixture(150, 10, 3, 0.3, 3);
+        let g = vp_tree_knn(&m, 6, &VpTreeConfig::default());
+        g.check_invariants().unwrap();
+        assert!(g.neighbors.iter().all(|nb| nb.len() == 6));
+    }
+}

@@ -1,0 +1,146 @@
+//! `largevis` — CLI entrypoint for the LargeVis reproduction.
+
+use anyhow::{bail, Result};
+use largevis::cli::{self, Args};
+use largevis::config::{Ini, PipelineConfig};
+use largevis::coordinator::run_pipeline;
+use largevis::data::datasets;
+use largevis::knn::explore::LargeVisKnnConfig;
+use largevis::knn::rptree::RpForestConfig;
+use largevis::vis::ProbFn;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = cli::parse(argv)?;
+    match args.command.as_str() {
+        "" | "help" => {
+            println!("{}", cli::USAGE);
+            Ok(())
+        }
+        "datasets" => cmd_datasets(&args),
+        "info" => cmd_info(),
+        "knn" => cmd_knn(&args),
+        "pipeline" => cmd_pipeline(&args),
+        other => bail!("unknown command {other:?}\n\n{}", cli::USAGE),
+    }
+}
+
+/// Assemble a PipelineConfig from `--config` INI plus CLI overrides.
+fn build_config(args: &Args) -> Result<PipelineConfig> {
+    let mut cfg = match args.get_str("config") {
+        Some(path) => PipelineConfig::from_ini(&Ini::load(std::path::Path::new(path))?)?,
+        None => PipelineConfig::default(),
+    };
+    if let Some(ds) = args.get_str("dataset") {
+        cfg.dataset = ds.to_string();
+    }
+    cfg.scale = args.get_or("scale", if args.get_str("config").is_some() { cfg.scale } else { 0.1 })?;
+    cfg.k = args.get_or("k", cfg.k)?;
+    cfg.knn.forest.n_trees = args.get_or("trees", cfg.knn.forest.n_trees)?;
+    cfg.knn.iters = args.get_or("explore-iters", cfg.knn.iters)?;
+    cfg.weights.perplexity = args.get_or("perplexity", cfg.weights.perplexity)?;
+    cfg.vis.dim = args.get_or("dim", cfg.vis.dim)?;
+    cfg.vis.samples_per_vertex = args.get_or("samples", cfg.vis.samples_per_vertex)?;
+    cfg.vis.negatives = args.get_or("negatives", cfg.vis.negatives)?;
+    cfg.vis.gamma = args.get_or("gamma", cfg.vis.gamma)?;
+    cfg.vis.rho0 = args.get_or("rho0", cfg.vis.rho0)?;
+    let threads: usize = args.get_or("threads", 0)?;
+    cfg.vis.threads = threads;
+    cfg.knn.threads = threads;
+    cfg.knn.forest.threads = threads;
+    cfg.weights.threads = threads;
+    let seed: u64 = args.get_or("seed", cfg.data_seed)?;
+    cfg.data_seed = seed;
+    cfg.vis.seed = seed ^ 0x1a9;
+    if let Some(a) = args.get_str("prob-fn") {
+        cfg.vis.prob_fn = match a {
+            "invquad" => ProbFn::InvQuad { a: args.get_or("prob-a", 1.0f32)? },
+            "sigmoid" => ProbFn::SigmoidSq,
+            other => bail!("--prob-fn: unknown {other:?}"),
+        };
+    }
+    match args.get_str("engine").unwrap_or("hogwild") {
+        "hogwild" => cfg.use_xla = false,
+        "xla" => cfg.use_xla = true,
+        other => bail!("--engine must be hogwild|xla, got {other:?}"),
+    }
+    if let Some(out) = args.get_str("out") {
+        cfg.out_dir = out.into();
+    }
+    Ok(cfg)
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let out = run_pipeline(&cfg)?;
+    out.metrics.report(&cfg.dataset);
+    Ok(())
+}
+
+fn cmd_knn(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let ds = datasets::generate(&cfg.dataset, cfg.scale, cfg.data_seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", cfg.dataset))?;
+    let k = cfg.k.min(ds.points.n() - 1);
+    let knn_cfg = LargeVisKnnConfig {
+        forest: RpForestConfig { n_trees: cfg.knn.forest.n_trees, ..Default::default() },
+        iters: cfg.knn.iters,
+        ..Default::default()
+    };
+    let t = largevis::util::Timer::start("knn total");
+    let g = largevis::knn::explore::largevis_knn(&ds.points, k, &knn_cfg);
+    let secs = t.report();
+    let recall = largevis::knn::sampled_recall(&ds.points, &g, 500, 11, 0);
+    println!(
+        "dataset={} n={} d={} k={k} trees={} iters={} time={:.2}s sampled-recall={recall:.4}",
+        ds.name,
+        ds.points.n(),
+        ds.points.d(),
+        cfg.knn.forest.n_trees,
+        cfg.knn.iters,
+        secs
+    );
+    Ok(())
+}
+
+fn cmd_datasets(_args: &Args) -> Result<()> {
+    println!(
+        "{:<18} {:>12} {:>10} {:>6} {:>9}  {}",
+        "name", "paper N", "our N", "dim", "classes", "paper dataset"
+    );
+    for s in datasets::REGISTRY {
+        println!(
+            "{:<18} {:>12} {:>10} {:>6} {:>9}  {}",
+            s.name,
+            s.paper_n,
+            s.full_n,
+            s.d,
+            if s.classes > 0 { s.classes.to_string() } else { "-".into() },
+            s.paper_name
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("largevis {}", largevis::VERSION);
+    println!("threads: {}", largevis::util::pool::default_threads());
+    match largevis::runtime::Runtime::from_default_dir() {
+        Ok(rt) => {
+            println!("pjrt platform: {}", rt.platform());
+            println!(
+                "artifacts: batch={} M={} dim={} step_n={}",
+                rt.manifest.batch, rt.manifest.negatives, rt.manifest.dim, rt.manifest.step_n
+            );
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}

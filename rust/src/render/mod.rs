@@ -1,0 +1,10 @@
+//! SVG scatter rendering for the qualitative figures (paper Figs 8–10).
+//!
+//! No plotting library exists offline, so this is a small self-contained
+//! SVG writer: categorical palette, point down-sampling for huge
+//! layouts, axes-free themes like the paper's figures.
+
+pub mod palette;
+pub mod svg;
+
+pub use svg::{render_scatter, ScatterStyle};

@@ -1,0 +1,76 @@
+//! Categorical color palettes.
+//!
+//! For ≤ 20 classes a hand-picked qualitative palette (colorblind-aware
+//! first 10); beyond that, evenly spaced HSL hues with alternating
+//! lightness, which is what the paper's 200-cluster figures amount to.
+
+/// A hand-tuned qualitative palette (tab10 + tab10-dark style).
+const QUALITATIVE: [&str; 20] = [
+    "#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd", "#8c564b", "#e377c2", "#7f7f7f",
+    "#bcbd22", "#17becf", "#aec7e8", "#ffbb78", "#98df8a", "#ff9896", "#c5b0d5", "#c49c94",
+    "#f7b6d2", "#c7c7c7", "#dbdb8d", "#9edae5",
+];
+
+/// Color for class `c` out of `n_classes` as an SVG color string.
+pub fn class_color(c: usize, n_classes: usize) -> String {
+    if n_classes <= QUALITATIVE.len() {
+        QUALITATIVE[c % QUALITATIVE.len()].to_string()
+    } else {
+        // Golden-ratio hue walk: adjacent class ids get distant hues.
+        let hue = (c as f64 * 0.618_033_988_749_895).fract() * 360.0;
+        let light = if c % 2 == 0 { 45.0 } else { 62.0 };
+        hsl_to_hex(hue, 0.72, light / 100.0)
+    }
+}
+
+/// Convert HSL (h in degrees, s/l in [0,1]) to `#rrggbb`.
+pub fn hsl_to_hex(h: f64, s: f64, l: f64) -> String {
+    let c = (1.0 - (2.0 * l - 1.0).abs()) * s;
+    let hp = (h.rem_euclid(360.0)) / 60.0;
+    let x = c * (1.0 - (hp % 2.0 - 1.0).abs());
+    let (r1, g1, b1) = match hp as u32 {
+        0 => (c, x, 0.0),
+        1 => (x, c, 0.0),
+        2 => (0.0, c, x),
+        3 => (0.0, x, c),
+        4 => (x, 0.0, c),
+        _ => (c, 0.0, x),
+    };
+    let m = l - c / 2.0;
+    let to8 = |v: f64| ((v + m).clamp(0.0, 1.0) * 255.0).round() as u8;
+    format!("#{:02x}{:02x}{:02x}", to8(r1), to8(g1), to8(b1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_class_counts_use_qualitative() {
+        assert_eq!(class_color(0, 10), "#1f77b4");
+        assert_eq!(class_color(3, 20), "#d62728");
+    }
+
+    #[test]
+    fn large_class_counts_generated() {
+        let a = class_color(0, 200);
+        let b = class_color(1, 200);
+        assert!(a.starts_with('#') && a.len() == 7);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn hsl_known_values() {
+        assert_eq!(hsl_to_hex(0.0, 1.0, 0.5), "#ff0000");
+        assert_eq!(hsl_to_hex(120.0, 1.0, 0.5), "#00ff00");
+        assert_eq!(hsl_to_hex(240.0, 1.0, 0.5), "#0000ff");
+        assert_eq!(hsl_to_hex(0.0, 0.0, 1.0), "#ffffff");
+    }
+
+    #[test]
+    fn all_colors_distinct_up_to_64() {
+        let set: std::collections::HashSet<String> =
+            (0..64).map(|c| class_color(c, 64)).collect();
+        assert_eq!(set.len(), 64);
+    }
+}

@@ -1,0 +1,151 @@
+//! Minimal SVG scatter-plot writer.
+
+use crate::data::matrix::Matrix;
+use crate::render::palette::class_color;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// Rendering options.
+#[derive(Clone, Debug)]
+pub struct ScatterStyle {
+    /// Canvas width/height in px.
+    pub size: u32,
+    /// Point radius in px.
+    pub radius: f32,
+    /// Max points drawn (uniform subsample beyond this).
+    pub max_points: usize,
+    /// Point opacity.
+    pub opacity: f32,
+    /// Background color.
+    pub background: String,
+    /// Figure title (empty = none).
+    pub title: String,
+}
+
+impl Default for ScatterStyle {
+    fn default() -> Self {
+        ScatterStyle {
+            size: 1200,
+            radius: 1.4,
+            max_points: 120_000,
+            opacity: 0.55,
+            background: "#ffffff".to_string(),
+            title: String::new(),
+        }
+    }
+}
+
+/// Render a 2D layout (first two columns) to an SVG file.
+///
+/// `labels` colors points by class; `n_classes` selects the palette.
+pub fn render_scatter(
+    path: &Path,
+    layout: &Matrix,
+    labels: Option<&[u32]>,
+    n_classes: usize,
+    style: &ScatterStyle,
+) -> Result<()> {
+    assert!(layout.d() >= 2, "need at least 2 output dims to render");
+    let n = layout.n();
+    // Bounds.
+    let (mut xmin, mut xmax, mut ymin, mut ymax) = (f32::MAX, f32::MIN, f32::MAX, f32::MIN);
+    for i in 0..n {
+        let r = layout.row(i);
+        xmin = xmin.min(r[0]);
+        xmax = xmax.max(r[0]);
+        ymin = ymin.min(r[1]);
+        ymax = ymax.max(r[1]);
+    }
+    let pad = 0.03 * ((xmax - xmin).max(ymax - ymin)).max(1e-9);
+    let (xmin, xmax) = (xmin - pad, xmax + pad);
+    let (ymin, ymax) = (ymin - pad, ymax + pad);
+    let scale = style.size as f32 / (xmax - xmin).max(ymax - ymin).max(1e-9);
+
+    // Subsample deterministically if huge.
+    let ids: Vec<usize> = if n > style.max_points {
+        let mut rng = Rng::new(0x5caa);
+        rng.sample_indices(n, style.max_points)
+    } else {
+        (0..n).collect()
+    };
+
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(
+        w,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{s}" height="{s}" viewBox="0 0 {s} {s}">"#,
+        s = style.size
+    )?;
+    writeln!(w, r#"<rect width="100%" height="100%" fill="{}"/>"#, style.background)?;
+    if !style.title.is_empty() {
+        writeln!(
+            w,
+            r##"<text x="12" y="24" font-family="sans-serif" font-size="18" fill="#333">{}</text>"##,
+            style.title
+        )?;
+    }
+    for &i in &ids {
+        let r = layout.row(i);
+        let px = (r[0] - xmin) * scale;
+        let py = style.size as f32 - (r[1] - ymin) * scale;
+        let color = match labels {
+            Some(ls) => class_color(ls[i] as usize, n_classes.max(1)),
+            None => "#3366aa".to_string(),
+        };
+        writeln!(
+            w,
+            r#"<circle cx="{px:.1}" cy="{py:.1}" r="{}" fill="{color}" fill-opacity="{}"/>"#,
+            style.radius, style.opacity
+        )?;
+    }
+    writeln!(w, "</svg>")?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("largevis_svg_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn writes_valid_svg() {
+        let m = Matrix::from_vec(vec![0.0, 0.0, 1.0, 1.0, -1.0, 2.0], 3, 2);
+        let p = tmp("a.svg");
+        render_scatter(&p, &m, Some(&[0, 1, 2]), 3, &ScatterStyle::default()).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("<svg"));
+        assert!(text.trim_end().ends_with("</svg>"));
+        assert_eq!(text.matches("<circle").count(), 3);
+    }
+
+    #[test]
+    fn subsamples_when_huge() {
+        let n = 5000;
+        let mut data = Vec::with_capacity(n * 2);
+        for i in 0..n {
+            data.push((i % 71) as f32);
+            data.push((i % 37) as f32);
+        }
+        let m = Matrix::from_vec(data, n, 2);
+        let style = ScatterStyle { max_points: 100, ..Default::default() };
+        let p = tmp("b.svg");
+        render_scatter(&p, &m, None, 0, &style).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.matches("<circle").count(), 100);
+    }
+
+    #[test]
+    fn degenerate_single_point() {
+        let m = Matrix::from_vec(vec![2.0, 3.0], 1, 2);
+        let p = tmp("c.svg");
+        render_scatter(&p, &m, None, 0, &ScatterStyle::default()).unwrap();
+    }
+}

@@ -1,0 +1,185 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the rust hot path (the only place the `xla` crate is touched).
+//!
+//! `make artifacts` (build-time Python) writes `artifacts/*.hlo.txt` and
+//! `manifest.json`; this module compiles them once on the PJRT CPU
+//! client and caches the executables. Python never runs at layout time.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Shapes baked into the artifacts at AOT time (from manifest.json).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Manifest {
+    /// Edge batch size B.
+    pub batch: usize,
+    /// Negatives per edge M.
+    pub negatives: usize,
+    /// Output dimensionality s.
+    pub dim: usize,
+    /// Table size of the fused `largevis_step` artifact.
+    pub step_n: usize,
+    /// pdist tile edge length.
+    pub pdist_tile: usize,
+    /// pdist feature dimension.
+    pub pdist_d: usize,
+}
+
+impl Manifest {
+    /// Parse from manifest.json text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json")?;
+        let field = |k: &str| -> Result<usize> {
+            j.get(k).and_then(Json::as_usize).with_context(|| format!("manifest missing {k}"))
+        };
+        Ok(Manifest {
+            batch: field("batch")?,
+            negatives: field("negatives")?,
+            dim: field("dim")?,
+            step_n: field("step_n")?,
+            pdist_tile: field("pdist_tile")?,
+            pdist_d: field("pdist_d")?,
+        })
+    }
+}
+
+/// PJRT CPU client + compiled-executable cache over an artifact dir.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    /// The baked shapes.
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Default artifact location (`$LARGEVIS_ARTIFACTS` or `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("LARGEVIS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            // Walk up from cwd so examples/tests work from any subdir.
+            let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            loop {
+                let cand = cur.join("artifacts");
+                if cand.join("manifest.json").exists() {
+                    return cand;
+                }
+                if !cur.pop() {
+                    return PathBuf::from("artifacts");
+                }
+            }
+        })
+    }
+
+    /// Create a runtime over an artifact directory.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("{} not found — run `make artifacts` first", manifest_path.display())
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Convenience: runtime over [`Runtime::default_dir`].
+    pub fn from_default_dir() -> Result<Runtime> {
+        Runtime::new(&Self::default_dir())
+    }
+
+    /// PJRT platform name (for `largevis info`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (cached) an artifact by name, e.g. `grad_kernel`.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!("artifact {} missing — run `make artifacts`", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs; returns the tuple elements
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name} result: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple {name}: {e}"))
+    }
+}
+
+/// Build an `[n, d]` f32 literal from a flat row-major slice.
+pub fn literal_f32_2d(data: &[f32], n: usize, d: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), n * d);
+    xla::Literal::vec1(data)
+        .reshape(&[n as i64, d as i64])
+        .map_err(|e| anyhow::anyhow!("reshape literal: {e}"))
+}
+
+/// Build an `[n]` i32 literal.
+pub fn literal_i32_1d(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Build an `[n, m]` i32 literal from a flat slice.
+pub fn literal_i32_2d(data: &[i32], n: usize, m: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), n * m);
+    xla::Literal::vec1(data)
+        .reshape(&[n as i64, m as i64])
+        .map_err(|e| anyhow::anyhow!("reshape literal: {e}"))
+}
+
+/// Scalar f32 literal.
+pub fn literal_f32(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+/// Copy a literal's f32 payload out.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(
+            r#"{"batch":1024,"negatives":5,"dim":2,"step_n":10000,"pdist_tile":256,"pdist_d":100,"artifacts":{}}"#,
+        )
+        .unwrap();
+        assert_eq!(m.batch, 1024);
+        assert_eq!(m.negatives, 5);
+        assert_eq!(m.dim, 2);
+    }
+
+    #[test]
+    fn manifest_missing_field_errors() {
+        assert!(Manifest::parse(r#"{"batch":1}"#).is_err());
+    }
+
+    // Runtime-dependent tests live in rust/tests/xla_parity.rs (they
+    // need artifacts/ built).
+}

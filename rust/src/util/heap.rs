@@ -1,0 +1,206 @@
+//! Bounded max-heaps for K-nearest-neighbor candidate sets.
+//!
+//! [`BoundedMaxHeap`] keeps the K smallest-distance candidates seen so
+//! far (a max-heap on distance, popping the worst when over capacity) —
+//! the structure `H_i` in the paper's Algorithm 1. A `flag` bit per
+//! entry supports NN-Descent's "new vs old" bookkeeping, and a
+//! membership set keeps candidates distinct.
+
+/// One KNN candidate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Candidate {
+    /// Squared distance to the query point (the heap key).
+    pub dist: f32,
+    /// Candidate point id.
+    pub id: u32,
+    /// NN-Descent "new" flag (true until the candidate has been expanded).
+    pub flag: bool,
+}
+
+/// Max-heap on `dist` holding at most `k` *distinct* candidate ids.
+#[derive(Clone, Debug)]
+pub struct BoundedMaxHeap {
+    k: usize,
+    heap: Vec<Candidate>,
+    members: std::collections::HashSet<u32>,
+}
+
+impl Default for BoundedMaxHeap {
+    /// A capacity-1 heap (placeholder value for `parallel_map` slots).
+    fn default() -> Self {
+        BoundedMaxHeap::new(1)
+    }
+}
+
+impl BoundedMaxHeap {
+    /// Create with capacity `k > 0`.
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        BoundedMaxHeap { k, heap: Vec::with_capacity(k + 1), members: std::collections::HashSet::with_capacity(k * 2) }
+    }
+
+    /// Number of stored candidates.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if no candidates stored.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Worst (largest) distance currently kept, or `+inf` when not full.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.heap[0].dist
+        }
+    }
+
+    /// Try to insert; returns true if the candidate was kept.
+    ///
+    /// Duplicates (same `id`) are rejected; when full, a candidate is
+    /// kept only if strictly better than the current worst.
+    pub fn push(&mut self, id: u32, dist: f32, flag: bool) -> bool {
+        if self.members.contains(&id) {
+            return false;
+        }
+        if self.heap.len() < self.k {
+            self.members.insert(id);
+            self.heap.push(Candidate { dist, id, flag });
+            self.sift_up(self.heap.len() - 1);
+            true
+        } else if dist < self.heap[0].dist {
+            self.members.remove(&self.heap[0].id);
+            self.members.insert(id);
+            self.heap[0] = Candidate { dist, id, flag };
+            self.sift_down(0);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Candidates sorted ascending by distance (consumes the heap).
+    pub fn into_sorted(mut self) -> Vec<Candidate> {
+        self.heap.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
+        self.heap
+    }
+
+    /// Unordered view of the stored candidates.
+    #[inline]
+    pub fn as_slice(&self) -> &[Candidate] {
+        &self.heap
+    }
+
+    /// Mutable access (used by NN-Descent to clear flags in place).
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [Candidate] {
+        &mut self.heap
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].dist > self.heap[parent].dist {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < n && self.heap[l].dist > self.heap[largest].dist {
+                largest = l;
+            }
+            if r < n && self.heap[r].dist > self.heap[largest].dist {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_k_smallest() {
+        let mut h = BoundedMaxHeap::new(3);
+        for (id, d) in [(0, 5.0), (1, 1.0), (2, 4.0), (3, 2.0), (4, 3.0)] {
+            h.push(id, d, false);
+        }
+        let out: Vec<u32> = h.into_sorted().iter().map(|c| c.id).collect();
+        assert_eq!(out, vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let mut h = BoundedMaxHeap::new(4);
+        assert!(h.push(7, 1.0, false));
+        assert!(!h.push(7, 0.5, false));
+        assert_eq!(h.len(), 1);
+    }
+
+    #[test]
+    fn threshold_tracks_worst() {
+        let mut h = BoundedMaxHeap::new(2);
+        assert_eq!(h.threshold(), f32::INFINITY);
+        h.push(0, 3.0, false);
+        assert_eq!(h.threshold(), f32::INFINITY);
+        h.push(1, 1.0, false);
+        assert_eq!(h.threshold(), 3.0);
+        h.push(2, 2.0, false);
+        assert_eq!(h.threshold(), 2.0);
+    }
+
+    #[test]
+    fn eviction_maintains_membership() {
+        let mut h = BoundedMaxHeap::new(2);
+        h.push(0, 3.0, false);
+        h.push(1, 2.0, false);
+        h.push(2, 1.0, false); // evicts id=0
+        assert!(h.push(0, 0.5, false)); // id=0 may re-enter
+        let ids: Vec<u32> = h.into_sorted().iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 2]);
+    }
+
+    #[test]
+    fn property_matches_sort_reference() {
+        // Property test: heap result == take-k-smallest of a sorted copy,
+        // across random inputs (distinct keys to avoid tie ambiguity).
+        let mut rng = Rng::new(2024);
+        for trial in 0..50 {
+            let n = 1 + rng.below(200);
+            let k = 1 + rng.below(30);
+            let mut items: Vec<(u32, f32)> =
+                (0..n).map(|i| (i as u32, rng.f32() + i as f32 * 1e-6)).collect();
+            rng.shuffle(&mut items);
+            let mut h = BoundedMaxHeap::new(k);
+            for &(id, d) in &items {
+                h.push(id, d, false);
+            }
+            let got: Vec<u32> = h.into_sorted().iter().map(|c| c.id).collect();
+            let mut sorted = items.clone();
+            sorted.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let expect: Vec<u32> = sorted.iter().take(k).map(|&(id, _)| id).collect();
+            assert_eq!(got, expect, "trial={trial} n={n} k={k}");
+        }
+    }
+}

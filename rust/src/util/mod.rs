@@ -1,0 +1,17 @@
+//! Low-level substrates built from scratch for the offline environment:
+//! PRNG, alias sampling, bounded heaps, a scoped thread pool, timers,
+//! streaming statistics, and a light property-testing driver.
+
+pub mod rng;
+pub mod alias;
+pub mod heap;
+pub mod pool;
+pub mod timer;
+pub mod stats;
+pub mod proptest;
+pub mod json;
+
+pub use alias::AliasTable;
+pub use heap::BoundedMaxHeap;
+pub use rng::Rng;
+pub use timer::Timer;

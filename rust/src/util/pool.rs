@@ -1,0 +1,135 @@
+//! Data-parallel helpers over `std::thread::scope` (no rayon offline).
+//!
+//! The paper parallelizes three things: tree search per node, neighbor
+//! exploring per node, and the asynchronous SGD workers. All are
+//! expressible as a `parallel_for` over an index range with per-worker
+//! state, or as `spawn_workers` for long-lived SGD threads.
+
+/// Number of worker threads to use by default (respects
+/// `LARGEVIS_THREADS`, falling back to available parallelism).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("LARGEVIS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(worker_id, range)` over `n_items` split into contiguous chunks
+/// across `threads` workers. Blocks until all complete.
+pub fn parallel_for_chunks<F>(n_items: usize, threads: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n_items.max(1));
+    if threads == 1 {
+        f(0, 0..n_items);
+        return;
+    }
+    let chunk = n_items.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let f = &f;
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n_items);
+            if lo >= hi {
+                break;
+            }
+            s.spawn(move || f(t, lo..hi));
+        }
+    });
+}
+
+/// Map `f` over `0..n_items` in parallel, collecting results in order.
+///
+/// Results are written into a pre-allocated vector through chunked
+/// disjoint mutable slices, so no locking is involved.
+pub fn parallel_map<T, F>(n_items: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Default + Clone + Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n_items];
+    let threads = threads.max(1).min(n_items.max(1));
+    if threads <= 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f(i);
+        }
+        return out;
+    }
+    let chunk = n_items.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, slice) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            let base = t * chunk;
+            s.spawn(move || {
+                for (off, slot) in slice.iter_mut().enumerate() {
+                    *slot = f(base + off);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Spawn `threads` long-lived workers, each given its id; blocks until
+/// all return. Used by the Hogwild SGD engine and LINE.
+pub fn spawn_workers<F>(threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 {
+        f(0);
+        return;
+    }
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let f = &f;
+            s.spawn(move || f(t));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_all_items_once() {
+        let n = 1003;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(n, 7, |_, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(500, 8, |i| i * 2);
+        assert_eq!(out, (0..500).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn workers_all_run() {
+        let count = AtomicUsize::new(0);
+        spawn_workers(9, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = parallel_map(10, 1, |i| i);
+        assert_eq!(out.len(), 10);
+        parallel_for_chunks(0, 4, |_, r| assert!(r.is_empty()));
+    }
+}

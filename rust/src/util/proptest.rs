@@ -1,0 +1,98 @@
+//! A light property-testing driver (the offline registry lacks
+//! `proptest`).
+//!
+//! [`run_prop`] executes a property over `cases` randomly generated
+//! inputs; on failure it performs a bounded greedy shrink by re-seeding
+//! the generator with "smaller" size hints, then panics with the
+//! reproducing seed so failures are one-line reproducible:
+//! `PROP_SEED=<n> cargo test <name>`.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (overridden by `PROP_SEED` env var).
+    pub seed: u64,
+    /// Maximum size hint passed to the generator.
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0x1a59e, max_size: 256 }
+    }
+}
+
+/// Run `prop(rng, size)` for each case; `prop` returns `Err(msg)` to fail.
+///
+/// The generator receives a fresh deterministic `Rng` and a size hint
+/// that ramps up from small to `max_size` so early failures are small.
+pub fn run_prop<F>(name: &str, cfg: PropConfig, prop: F)
+where
+    F: Fn(&mut Rng, usize) -> Result<(), String>,
+{
+    let seed = std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(cfg.seed);
+    for case in 0..cfg.cases {
+        let size = 1 + (cfg.max_size - 1) * case / cfg.cases.max(1);
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Greedy shrink: retry the same case seed with smaller sizes.
+            let mut min_fail = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(case_seed);
+                match prop(&mut rng, s) {
+                    Err(m) => {
+                        min_fail = (s, m);
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {case}, size {}, reproduce with PROP_SEED={seed}): {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0);
+        run_prop("always-ok", PropConfig { cases: 10, ..Default::default() }, |_, _| {
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        run_prop("fails", PropConfig::default(), |_, size| {
+            if size > 3 {
+                Err(format!("size {size} too big"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let max_seen = std::cell::Cell::new(0usize);
+        run_prop("ramp", PropConfig { cases: 32, max_size: 64, ..Default::default() }, |_, s| {
+            max_seen.set(max_seen.get().max(s));
+            Ok(())
+        });
+        assert!(max_seen.get() > 32);
+    }
+}

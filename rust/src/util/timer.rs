@@ -1,0 +1,84 @@
+//! Wall-clock timing utilities for the bench harness and pipeline logs.
+
+use std::time::Instant;
+
+/// A running wall-clock timer.
+pub struct Timer {
+    start: Instant,
+    label: String,
+}
+
+impl Timer {
+    /// Start a timer with a label used in [`Timer::report`].
+    pub fn start(label: &str) -> Self {
+        Timer { start: Instant::now(), label: label.to_string() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    /// Print `label: N.NNNs` to stderr and return elapsed seconds.
+    pub fn report(&self) -> f64 {
+        let s = self.secs();
+        eprintln!("[timer] {}: {}", self.label, fmt_duration(s));
+        s
+    }
+}
+
+/// Format a duration in seconds adaptively (µs / ms / s / m / h).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2}s")
+    } else if secs < 7200.0 {
+        format!("{:.1}m", secs / 60.0)
+    } else {
+        format!("{:.2}h", secs / 3600.0)
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start("x");
+        let a = t.secs();
+        let b = t.secs();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn formats() {
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(0.005).ends_with("ms"));
+        assert!(fmt_duration(3.0).ends_with('s'));
+        assert!(fmt_duration(300.0).ends_with('m'));
+        assert!(fmt_duration(10_000.0).ends_with('h'));
+    }
+
+    #[test]
+    fn time_returns_result() {
+        let (v, s) = time(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

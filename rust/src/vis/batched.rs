@@ -1,0 +1,111 @@
+//! Batched layout optimizer through the AOT/XLA path — the three-layer
+//! integration: rust samples edges and negatives, the JAX/Pallas
+//! `grad_kernel` artifact computes the fused gradients via PJRT, rust
+//! scatter-applies the updates.
+//!
+//! Semantically this is mini-batch SGD with batch = manifest.batch
+//! (the Hogwild engine is batch = 1); both optimize Eq. 6 and their
+//! gradients agree to float tolerance (see `rust/tests/xla_parity.rs`).
+
+use crate::data::matrix::Matrix;
+use crate::graph::CsrGraph;
+use crate::runtime::{literal_f32, literal_f32_2d, literal_to_f32, Runtime};
+use crate::util::rng::Rng;
+use crate::vis::sampler::GraphSamplers;
+use crate::vis::sgd::SgdReport;
+use crate::vis::LargeVisConfig;
+use anyhow::{ensure, Result};
+
+/// Run batched SGD on `layout` in place using the `grad_kernel`
+/// artifact. `cfg.dim` and `cfg.negatives` must match the manifest.
+pub fn optimize_batched(
+    graph: &CsrGraph,
+    layout: &mut Matrix,
+    cfg: &LargeVisConfig,
+    rt: &Runtime,
+) -> Result<SgdReport> {
+    let mf = rt.manifest;
+    ensure!(cfg.dim == mf.dim, "artifact dim {} != cfg dim {}", mf.dim, cfg.dim);
+    ensure!(
+        cfg.negatives == mf.negatives,
+        "artifact negatives {} != cfg negatives {}",
+        mf.negatives,
+        cfg.negatives
+    );
+    let n = graph.n();
+    let (b, m, s) = (mf.batch, mf.negatives, mf.dim);
+    let samplers = GraphSamplers::new(graph);
+    let mut rng = Rng::new(cfg.seed ^ 0xba7c);
+
+    let total = cfg.total_samples(n);
+    let n_batches = total.div_ceil(b as u64);
+    let t0 = std::time::Instant::now();
+
+    // Reused host buffers.
+    let mut idx_i = vec![0usize; b];
+    let mut idx_j = vec![0usize; b];
+    let mut idx_neg = vec![0usize; b * m];
+    let mut yi = vec![0f32; b * s];
+    let mut yj = vec![0f32; b * s];
+    let mut yneg = vec![0f32; b * m * s];
+
+    for batch in 0..n_batches {
+        // Sample edges + negatives, gather embeddings.
+        for e in 0..b {
+            let (i, j) = samplers.sample_edge(&mut rng);
+            let (i, j) = (i as usize, j as usize);
+            idx_i[e] = i;
+            idx_j[e] = j;
+            yi[e * s..(e + 1) * s].copy_from_slice(layout.row(i));
+            yj[e * s..(e + 1) * s].copy_from_slice(layout.row(j));
+            for k in 0..m {
+                let mut v = samplers.sample_negative(&mut rng) as usize;
+                let mut guard = 0;
+                while (v == i || v == j) && guard < 16 {
+                    v = samplers.sample_negative(&mut rng) as usize;
+                    guard += 1;
+                }
+                idx_neg[e * m + k] = v;
+                let off = (e * m + k) * s;
+                yneg[off..off + s].copy_from_slice(layout.row(v));
+            }
+        }
+        // Learning rate decays over the batch schedule.
+        let frac = (batch * b as u64).min(total) as f32 / total as f32;
+        let rho = (cfg.rho0 * (1.0 - frac)).max(cfg.rho0 * 1e-4);
+
+        // Execute L2/L1: (yi, yj, yneg_flat, gamma) -> (gi, gj, gneg).
+        let inputs = [
+            literal_f32_2d(&yi, b, s)?,
+            literal_f32_2d(&yj, b, s)?,
+            literal_f32_2d(&yneg, b, m * s)?,
+            literal_f32(cfg.gamma),
+        ];
+        let outs = rt.run("grad_kernel", &inputs)?;
+        ensure!(outs.len() == 3, "grad_kernel returned {} outputs", outs.len());
+        let gi = literal_to_f32(&outs[0])?;
+        let gj = literal_to_f32(&outs[1])?;
+        let gneg = literal_to_f32(&outs[2])?;
+
+        // Scatter-apply.
+        for e in 0..b {
+            let ri = layout.row_mut(idx_i[e]);
+            for k in 0..s {
+                ri[k] += rho * gi[e * s + k];
+            }
+            let rj = layout.row_mut(idx_j[e]);
+            for k in 0..s {
+                rj[k] += rho * gj[e * s + k];
+            }
+            for km in 0..m {
+                let rv = layout.row_mut(idx_neg[e * m + km]);
+                let off = (e * m + km) * s;
+                for k in 0..s {
+                    rv[k] += rho * gneg[off + k];
+                }
+            }
+        }
+    }
+
+    Ok(SgdReport { samples: n_batches * b as u64, seconds: t0.elapsed().as_secs_f64() })
+}

@@ -1,0 +1,274 @@
+//! Dynamic data — the paper's stated future work ("handle data
+//! dynamically changing over time"), implemented as incremental point
+//! insertion:
+//!
+//! 1. the new point's K nearest neighbors are found against the current
+//!    index (exact scan per insertion — insertions are assumed rare
+//!    relative to N),
+//! 2. it is spliced into the KNN graph (its own list, plus any existing
+//!    lists it improves),
+//! 3. its layout position is initialized at the weight-averaged
+//!    position of its neighbors, and
+//! 4. a short *localized* SGD pass refines only the new points while
+//!    the old layout stays frozen (landmark semantics), so an
+//!    interactive view never jumps under the user.
+//!
+//! `refreeze()` promotes the frozen points back into a full graph for
+//! a global re-optimization when drift accumulates.
+
+use crate::data::matrix::{sqdist, Matrix};
+use crate::graph::weights::{weighted_graph, WeightConfig};
+use crate::knn::KnnGraph;
+use crate::util::heap::BoundedMaxHeap;
+use crate::util::rng::Rng;
+use crate::vis::objective::clip;
+use crate::vis::sampler::GraphSamplers;
+use crate::vis::LargeVisConfig;
+
+/// An updatable layout over a growing dataset.
+pub struct IncrementalLayout {
+    /// Current high-dimensional points.
+    pub data: Matrix,
+    /// Current KNN graph (kept at `k` neighbors per point).
+    pub knn: KnnGraph,
+    /// Current low-dimensional layout.
+    pub layout: Matrix,
+    /// Weighting config used for localized refreshes.
+    pub weights: WeightConfig,
+    /// Layout config used for localized SGD.
+    pub vis: LargeVisConfig,
+    /// SGD samples per *inserted* point.
+    pub samples_per_insert: usize,
+}
+
+impl IncrementalLayout {
+    /// Wrap an existing pipeline state.
+    pub fn new(
+        data: Matrix,
+        knn: KnnGraph,
+        layout: Matrix,
+        weights: WeightConfig,
+        vis: LargeVisConfig,
+    ) -> Self {
+        assert_eq!(data.n(), knn.n());
+        assert_eq!(data.n(), layout.n());
+        IncrementalLayout { data, knn, layout, weights, vis, samples_per_insert: 2000 }
+    }
+
+    /// Number of points currently embedded.
+    pub fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    /// Insert a batch of new points; returns their ids.
+    ///
+    /// Old points' layout positions are frozen; only the inserted
+    /// points move during the localized refinement.
+    pub fn add_points(&mut self, new_points: &Matrix) -> Vec<usize> {
+        assert_eq!(new_points.d(), self.data.d());
+        let k = self.knn.k;
+        let first_new = self.data.n();
+        let mut new_ids = Vec::with_capacity(new_points.n());
+
+        // 1-2: KNN splice, one point at a time (each new point can be a
+        // neighbor of subsequent ones).
+        for r in 0..new_points.n() {
+            let id = self.data.n();
+            let row = new_points.row(r).to_vec();
+            let mut heap = BoundedMaxHeap::new(k);
+            for j in 0..self.data.n() {
+                let dist = sqdist(&row, self.data.row(j));
+                if dist < heap.threshold() {
+                    heap.push(j as u32, dist, false);
+                }
+            }
+            let mine: Vec<(u32, f32)> =
+                heap.into_sorted().iter().map(|c| (c.id, c.dist)).collect();
+            // Splice into existing lists where the new point improves them.
+            for &(j, dist) in &mine {
+                let list = &mut self.knn.neighbors[j as usize];
+                let worst = list.last().map(|&(_, d)| d).unwrap_or(f32::INFINITY);
+                if list.len() < k || dist < worst {
+                    if list.len() == k {
+                        list.pop();
+                    }
+                    let pos = list.partition_point(|&(_, d)| d <= dist);
+                    list.insert(pos, (id as u32, dist));
+                }
+            }
+            self.knn.neighbors.push(mine);
+            self.data.push_row(&row);
+
+            // 3: place at the similarity-weighted centroid of neighbors.
+            let dim = self.layout.d();
+            let mut pos = vec![0f32; dim];
+            let mut total = 0f32;
+            for &(j, dist) in &self.knn.neighbors[id] {
+                if (j as usize) < self.layout.n() {
+                    let w = 1.0 / (1.0 + dist);
+                    for (p, &y) in pos.iter_mut().zip(self.layout.row(j as usize)) {
+                        *p += w * y;
+                    }
+                    total += w;
+                }
+            }
+            let mut rng = Rng::new(self.vis.seed ^ id as u64);
+            if total > 0.0 {
+                for p in pos.iter_mut() {
+                    *p = *p / total + 1e-3 * rng.gaussian();
+                }
+            } else {
+                for p in pos.iter_mut() {
+                    *p = 1e-4 * rng.gaussian();
+                }
+            }
+            self.layout.push_row(&pos);
+            new_ids.push(id);
+        }
+
+        // 4: localized SGD over the refreshed weighted graph, moving
+        // only the inserted points.
+        let graph = weighted_graph(&self.knn, &self.weights);
+        let samplers = GraphSamplers::new(&graph);
+        let mut rng = Rng::new(self.vis.seed ^ 0x1c2);
+        let total = (self.samples_per_insert * new_points.n()) as u64;
+        let f = self.vis.prob_fn;
+        let gamma = self.vis.gamma;
+        let dim = self.layout.d();
+        let gclip = self.vis.grad_clip;
+        let mut acc = vec![0f32; dim];
+        for t in 0..total {
+            let rho =
+                (self.vis.rho0 * (1.0 - t as f32 / total as f32)).max(self.vis.rho0 * 1e-4);
+            let (i, j) = samplers.sample_edge(&mut rng);
+            let (i, j) = (i as usize, j as usize);
+            // Only steps whose source is a new point move anything.
+            if i < first_new || i == j {
+                continue;
+            }
+            acc.iter_mut().for_each(|a| *a = 0.0);
+            {
+                let d2 = self.layout.sqdist(i, j);
+                let c = f.coeff_pos(d2);
+                for kk in 0..dim {
+                    let g = clip(c * (self.layout.row(i)[kk] - self.layout.row(j)[kk]), gclip);
+                    acc[kk] += g;
+                    if j >= first_new {
+                        self.layout.row_mut(j)[kk] -= rho * g;
+                    }
+                }
+            }
+            let mut drawn = 0;
+            let mut guard = 0;
+            while drawn < self.vis.negatives && guard < self.vis.negatives * 10 {
+                guard += 1;
+                let v = samplers.sample_negative(&mut rng) as usize;
+                if v == i || v == j {
+                    continue;
+                }
+                drawn += 1;
+                let d2 = self.layout.sqdist(i, v);
+                let c = gamma * f.coeff_neg(d2);
+                for kk in 0..dim {
+                    let g = clip(c * (self.layout.row(i)[kk] - self.layout.row(v)[kk]), gclip);
+                    acc[kk] += g;
+                    if v >= first_new {
+                        self.layout.row_mut(v)[kk] -= rho * g;
+                    }
+                }
+            }
+            for kk in 0..dim {
+                self.layout.row_mut(i)[kk] += rho * acc[kk];
+            }
+        }
+        new_ids
+    }
+
+    /// Globally re-optimize (unfreezes everything) — for when many
+    /// insertions have accumulated.
+    pub fn reoptimize(&mut self) {
+        let graph = weighted_graph(&self.knn, &self.weights);
+        crate::vis::sgd::optimize(&graph, &mut self.layout, &self.vis);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+    use crate::eval::knn_classifier::{knn_accuracy, KnnEvalConfig};
+    use crate::knn::bruteforce::exact_knn;
+
+    /// Build a small embedded base state.
+    fn base() -> (IncrementalLayout, Vec<u32>) {
+        let (m, labels) = gaussian_mixture(400, 10, 4, 0.0, 21);
+        let knn = exact_knn(&m, 10, 2);
+        let wcfg = WeightConfig { perplexity: 8.0, ..Default::default() };
+        let vcfg = LargeVisConfig { samples_per_vertex: 2000, threads: 1, ..Default::default() };
+        let graph = weighted_graph(&knn, &wcfg);
+        let mut layout = crate::vis::init_layout(m.n(), 2, 1);
+        crate::vis::sgd::optimize(&graph, &mut layout, &vcfg);
+        (IncrementalLayout::new(m, knn, layout, wcfg, vcfg), labels)
+    }
+
+    #[test]
+    fn inserted_points_land_in_their_cluster() {
+        let (mut inc, mut labels) = base();
+        // New points from the same 4 clusters (same generator, later rows).
+        let (extra, extra_labels) = gaussian_mixture(440, 10, 4, 0.0, 21);
+        let tail = extra.gather_rows(&(400..440).collect::<Vec<_>>());
+        let ids = inc.add_points(&tail);
+        assert_eq!(ids.len(), 40);
+        assert_eq!(inc.n(), 440);
+        labels.extend_from_slice(&extra_labels[400..440]);
+
+        // Quality of the merged layout: classifier accuracy stays high.
+        let acc = knn_accuracy(&inc.layout, &labels, &KnnEvalConfig { k: 5, ..Default::default() });
+        assert!(acc > 0.8, "accuracy after insertion {acc}");
+        // And specifically the new points are classified correctly.
+        let mut correct = 0;
+        for &id in &ids {
+            let mut best = (f32::INFINITY, 0u32);
+            for j in 0..400 {
+                let d = inc.layout.sqdist(id, j);
+                if d < best.0 {
+                    best = (d, labels[j]);
+                }
+            }
+            if best.1 == labels[id] {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 30, "only {correct}/40 new points near their cluster");
+    }
+
+    #[test]
+    fn old_points_do_not_move() {
+        let (mut inc, _) = base();
+        let before = inc.layout.clone();
+        let (extra, _) = gaussian_mixture(10, 10, 4, 0.0, 99);
+        inc.add_points(&extra);
+        for i in 0..400 {
+            assert_eq!(inc.layout.row(i), before.row(i), "frozen point {i} moved");
+        }
+    }
+
+    #[test]
+    fn knn_graph_stays_consistent() {
+        let (mut inc, _) = base();
+        let (extra, _) = gaussian_mixture(20, 10, 4, 0.0, 55);
+        inc.add_points(&extra);
+        inc.knn.check_invariants().unwrap();
+        assert_eq!(inc.knn.n(), 420);
+    }
+
+    #[test]
+    fn reoptimize_unfreezes() {
+        let (mut inc, labels) = base();
+        let before = inc.layout.clone();
+        inc.reoptimize();
+        assert_ne!(inc.layout, before);
+        let acc = knn_accuracy(&inc.layout, &labels, &KnnEvalConfig { k: 5, ..Default::default() });
+        assert!(acc > 0.8);
+    }
+}

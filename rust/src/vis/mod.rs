@@ -1,0 +1,109 @@
+//! The LargeVis layout engine (paper §3.2): a probabilistic model over
+//! the weighted KNN graph, optimized by asynchronous SGD.
+//!
+//! * [`objective`] — the probabilistic functions `f(x)` (Fig 4 family),
+//!   their gradients, and the full objective (Eq. 5/6) for testing.
+//! * [`sampler`] — alias tables for edge sampling (∝ w_ij) and negative
+//!   sampling (∝ deg^0.75).
+//! * [`sgd`] — the Hogwild asynchronous-SGD optimizer (the paper's
+//!   engine; O(N) total work).
+//! * [`batched`] — an alternative optimizer that executes the AOT-
+//!   compiled JAX/Pallas gradient artifact via PJRT (the three-layer
+//!   integration path).
+
+pub mod objective;
+pub mod sampler;
+pub mod sgd;
+pub mod batched;
+pub mod incremental;
+
+use crate::data::matrix::Matrix;
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+pub use objective::ProbFn;
+
+/// LargeVis layout hyper-parameters (paper defaults).
+#[derive(Clone, Debug)]
+pub struct LargeVisConfig {
+    /// Output dimensionality `s` (2 or 3).
+    pub dim: usize,
+    /// Edge samples per vertex; total T = this × N. (Paper: ~10K per
+    /// vertex for 1M nodes; smaller data needs more per vertex.)
+    pub samples_per_vertex: usize,
+    /// Negative samples per positive edge, M (paper default 5).
+    pub negatives: usize,
+    /// Negative-edge weight γ (paper default 7).
+    pub gamma: f32,
+    /// Initial learning rate ρ₀ (paper default 1.0).
+    pub rho0: f32,
+    /// Probabilistic function f(x) (paper settles on 1/(1+x²)).
+    pub prob_fn: ProbFn,
+    /// Gradient clip per component (reference implementation: 5.0).
+    pub grad_clip: f32,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for LargeVisConfig {
+    fn default() -> Self {
+        LargeVisConfig {
+            dim: 2,
+            samples_per_vertex: 2000,
+            negatives: 5,
+            gamma: 7.0,
+            rho0: 1.0,
+            prob_fn: ProbFn::InvQuad { a: 1.0 },
+            grad_clip: 5.0,
+            threads: 0,
+            seed: 0x1a9,
+        }
+    }
+}
+
+impl LargeVisConfig {
+    /// Total number of edge samples for a graph of `n` vertices.
+    pub fn total_samples(&self, n: usize) -> u64 {
+        self.samples_per_vertex as u64 * n as u64
+    }
+}
+
+/// Initialize a layout with small gaussian noise (as t-SNE/LargeVis do).
+pub fn init_layout(n: usize, dim: usize, seed: u64) -> Matrix {
+    let mut m = Matrix::zeros(n, dim);
+    let mut rng = Rng::new(seed);
+    for x in m.as_mut_slice().iter_mut() {
+        *x = 1e-4 * rng.gaussian();
+    }
+    m
+}
+
+/// Lay out a weighted graph with the Hogwild engine (the paper's path).
+pub fn layout(graph: &CsrGraph, cfg: &LargeVisConfig) -> Matrix {
+    let mut y = init_layout(graph.n(), cfg.dim, cfg.seed);
+    sgd::optimize(graph, &mut y, cfg);
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_layout_small_and_seeded() {
+        let a = init_layout(100, 2, 1);
+        let b = init_layout(100, 2, 1);
+        assert_eq!(a, b);
+        assert!(a.as_slice().iter().all(|&x| x.abs() < 1e-2));
+        let c = init_layout(100, 2, 2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn total_samples_scales_with_n() {
+        let cfg = LargeVisConfig { samples_per_vertex: 100, ..Default::default() };
+        assert_eq!(cfg.total_samples(1000), 100_000);
+    }
+}

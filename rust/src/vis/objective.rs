@@ -1,0 +1,198 @@
+//! Probabilistic edge functions and their gradients (paper §3.2).
+//!
+//! The model assigns `P(e_ij = 1) = f(||y_i - y_j||)`. The paper
+//! compares `f(x) = 1/(1+ax²)` for several `a` and `f(x) = 1/(1+e^{x²})`
+//! (Fig 4) and settles on the long-tailed `1/(1+x²)`, which inherits
+//! t-SNE's answer to the crowding problem.
+//!
+//! Gradients below are of the *maximized* objective, i.e. the update is
+//! `y += ρ · grad`:
+//! * positive edge  (keep close):  ∂/∂y_i log f     = −2a·δ/(1+a·d²)
+//! * negative edge  (push apart):  ∂/∂y_i γ·log(1−f) = 2γ·δ/((ε+d²)(1+a·d²))
+//!
+//! with `δ = y_i − y_j`, `d² = ||δ||²`, and `ε` guarding the repulsive
+//! singularity at d → 0 (reference implementation does the same).
+
+/// The probability function family of Fig 4.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ProbFn {
+    /// `f(x) = 1/(1 + a·x²)` — long-tailed; `a = 1` is the paper's pick.
+    InvQuad {
+        /// Scale parameter `a > 0`.
+        a: f32,
+    },
+    /// `f(x) = 1/(1 + e^{x²})` — short-tailed logistic alternative.
+    SigmoidSq,
+}
+
+/// Repulsive-gradient singularity guard.
+pub const EPS: f32 = 0.1;
+
+impl ProbFn {
+    /// Edge probability given squared distance `d2 = ||y_i − y_j||²`.
+    #[inline(always)]
+    pub fn prob(&self, d2: f32) -> f32 {
+        match *self {
+            ProbFn::InvQuad { a } => 1.0 / (1.0 + a * d2),
+            ProbFn::SigmoidSq => {
+                // Stable for large d2: 1/(1+e^{d2}) = e^{-d2}/(1+e^{-d2}).
+                let e = (-d2).exp();
+                e / (1.0 + e)
+            }
+        }
+    }
+
+    /// Scalar coefficient `c_pos(d²)` so the positive-edge gradient on
+    /// `y_i` is `c_pos · δ`.
+    #[inline(always)]
+    pub fn coeff_pos(&self, d2: f32) -> f32 {
+        match *self {
+            ProbFn::InvQuad { a } => -2.0 * a / (1.0 + a * d2),
+            ProbFn::SigmoidSq => {
+                // ∂ log f / ∂ d² = −(1 − f); grad = −2(1−f)·δ.
+                -2.0 * (1.0 - self.prob(d2))
+            }
+        }
+    }
+
+    /// Scalar coefficient `c_neg(d²)` so the negative-edge gradient on
+    /// `y_i` is `γ · c_neg · δ`.
+    #[inline(always)]
+    pub fn coeff_neg(&self, d2: f32) -> f32 {
+        match *self {
+            ProbFn::InvQuad { a } => 2.0 / ((EPS + d2) * (1.0 + a * d2)),
+            ProbFn::SigmoidSq => {
+                // ∂ log(1−f) / ∂ d² = f; grad = 2f·δ.
+                2.0 * self.prob(d2)
+            }
+        }
+    }
+}
+
+/// Clip a gradient component to `[-clip, clip]` (reference impl: 5.0).
+#[inline]
+pub fn clip(g: f32, clip: f32) -> f32 {
+    g.clamp(-clip, clip)
+}
+
+/// Full objective (Eq. 5) evaluated exactly with *all* vertex pairs as
+/// negatives — O(N²·s), for tests and tiny inputs only.
+pub fn exact_objective(
+    layout: &crate::data::matrix::Matrix,
+    edges: &[(u32, u32, f64)],
+    gamma: f32,
+    f: ProbFn,
+) -> f64 {
+    let n = layout.n();
+    let mut pos_pairs = std::collections::HashSet::new();
+    let mut obj = 0.0f64;
+    for &(i, j, w) in edges {
+        let d2 = crate::data::matrix::sqdist(layout.row(i as usize), layout.row(j as usize));
+        let p = f.prob(d2).max(1e-12) as f64;
+        obj += w * p.ln();
+        pos_pairs.insert((i.min(j), i.max(j)));
+    }
+    for i in 0..n as u32 {
+        for j in (i + 1)..n as u32 {
+            if pos_pairs.contains(&(i, j)) {
+                continue;
+            }
+            let d2 = crate::data::matrix::sqdist(layout.row(i as usize), layout.row(j as usize));
+            let q = (1.0 - f.prob(d2)).max(1e-12) as f64;
+            obj += gamma as f64 * q.ln();
+        }
+    }
+    obj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::Matrix;
+
+    #[test]
+    fn prob_monotone_decreasing_in_distance() {
+        for f in [ProbFn::InvQuad { a: 1.0 }, ProbFn::InvQuad { a: 4.0 }, ProbFn::SigmoidSq] {
+            let mut last = f.prob(0.0);
+            assert!(last <= 1.0 && last > 0.4);
+            for step in 1..50 {
+                let p = f.prob(step as f32 * 0.5);
+                assert!(p < last, "{f:?} not monotone at {step}");
+                last = p;
+            }
+        }
+    }
+
+    #[test]
+    fn invquad_matches_closed_form() {
+        let f = ProbFn::InvQuad { a: 2.0 };
+        assert!((f.prob(3.0) - 1.0 / 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sigmoid_stable_at_large_distance() {
+        let f = ProbFn::SigmoidSq;
+        let p = f.prob(1e4);
+        assert!(p >= 0.0 && p < 1e-30);
+        assert!(f.coeff_pos(1e4).is_finite());
+        assert!(f.coeff_neg(1e4).is_finite());
+    }
+
+    #[test]
+    fn gradients_match_finite_difference() {
+        // d/d(d²) of log f and log(1-f) vs numeric differentiation.
+        for f in [ProbFn::InvQuad { a: 1.0 }, ProbFn::InvQuad { a: 0.5 }, ProbFn::SigmoidSq] {
+            for &d2 in &[0.3f32, 1.0, 4.0, 9.0] {
+                let h = 1e-3f32;
+                let num_pos = ((f.prob(d2 + h).ln() - f.prob(d2 - h).ln()) / (2.0 * h)) * 2.0;
+                // coeff_pos = 2 * d(log f)/d(d²)  (δ-direction factor)
+                assert!(
+                    (f.coeff_pos(d2) - num_pos).abs() < 2e-2 * (1.0 + num_pos.abs()),
+                    "{f:?} pos at {d2}: {} vs {num_pos}",
+                    f.coeff_pos(d2)
+                );
+                if let ProbFn::SigmoidSq = f {
+                    let num_neg = (((1.0 - f.prob(d2 + h)).ln() - (1.0 - f.prob(d2 - h)).ln())
+                        / (2.0 * h))
+                        * 2.0;
+                    assert!(
+                        (f.coeff_neg(d2) - num_neg).abs() < 2e-2 * (1.0 + num_neg.abs()),
+                        "{f:?} neg at {d2}: {} vs {num_neg}",
+                        f.coeff_neg(d2)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn invquad_neg_matches_analytic_with_eps() {
+        // For InvQuad the implementation intentionally adds EPS to d²;
+        // verify against the analytic form with the same guard.
+        let f = ProbFn::InvQuad { a: 1.0 };
+        for &d2 in &[0.5f32, 2.0, 8.0] {
+            let expect = 2.0 / ((EPS + d2) * (1.0 + d2));
+            assert!((f.coeff_neg(d2) - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn clip_bounds() {
+        assert_eq!(clip(10.0, 5.0), 5.0);
+        assert_eq!(clip(-7.0, 5.0), -5.0);
+        assert_eq!(clip(0.5, 5.0), 0.5);
+    }
+
+    #[test]
+    fn exact_objective_prefers_good_layout() {
+        // Two clusters {0,1} and {2,3} with strong intra edges: a layout
+        // separating the clusters must score higher than one mixing them.
+        let edges = vec![(0u32, 1u32, 1.0f64), (2, 3, 1.0)];
+        let good = Matrix::from_vec(vec![0.0, 0.0, 0.1, 0.0, 5.0, 5.0, 5.1, 5.0], 4, 2);
+        let bad = Matrix::from_vec(vec![0.0, 0.0, 5.0, 5.0, 0.1, 0.0, 5.1, 5.0], 4, 2);
+        let f = ProbFn::InvQuad { a: 1.0 };
+        let og = exact_objective(&good, &edges, 7.0, f);
+        let ob = exact_objective(&bad, &edges, 7.0, f);
+        assert!(og > ob, "good={og} bad={ob}");
+    }
+}

@@ -1,0 +1,103 @@
+//! Samplers for the SGD hot loop (paper §3.2 "Optimization"):
+//! edges ∝ `w_ij` (edge sampling — decouples step size from weight
+//! variance) and negatives ∝ `deg^0.75` (word2vec's noise distribution).
+
+use crate::graph::CsrGraph;
+use crate::util::alias::AliasTable;
+use crate::util::rng::Rng;
+
+/// Alias samplers bound to one graph.
+pub struct GraphSamplers {
+    edge_table: AliasTable,
+    neg_table: AliasTable,
+    /// Directed edge endpoints, aligned with the alias table indices.
+    endpoints: Vec<(u32, u32)>,
+}
+
+impl GraphSamplers {
+    /// Build both tables from the CSR graph.
+    pub fn new(graph: &CsrGraph) -> Self {
+        let edges = graph.edges();
+        assert!(!edges.is_empty(), "cannot lay out a graph with no edges");
+        let weights: Vec<f64> = edges.iter().map(|&(_, _, w)| w).collect();
+        let endpoints: Vec<(u32, u32)> = edges.iter().map(|&(s, d, _)| (s, d)).collect();
+        let deg: Vec<f64> =
+            (0..graph.n()).map(|v| graph.weighted_degree(v).max(1e-12).powf(0.75)).collect();
+        GraphSamplers {
+            edge_table: AliasTable::new(&weights),
+            neg_table: AliasTable::new(&deg),
+            endpoints,
+        }
+    }
+
+    /// Sample a positive (directed) edge ∝ weight.
+    #[inline]
+    pub fn sample_edge(&self, rng: &mut Rng) -> (u32, u32) {
+        self.endpoints[self.edge_table.sample(rng)]
+    }
+
+    /// Sample a negative vertex ∝ deg^0.75.
+    #[inline]
+    pub fn sample_negative(&self, rng: &mut Rng) -> u32 {
+        self.neg_table.sample(rng) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn star_graph() -> CsrGraph {
+        // Vertex 0 is a hub with heavy edges; 3-4 have a light edge.
+        CsrGraph::from_undirected(
+            5,
+            &[(0, 1, 4.0), (0, 2, 4.0), (0, 3, 1.0), (3, 4, 0.5)],
+        )
+    }
+
+    #[test]
+    fn edges_sampled_by_weight() {
+        let g = star_graph();
+        let s = GraphSamplers::new(&g);
+        let mut rng = Rng::new(1);
+        let mut heavy = 0usize;
+        let mut light = 0usize;
+        for _ in 0..100_000 {
+            let (a, b) = s.sample_edge(&mut rng);
+            let key = (a.min(b), a.max(b));
+            if key == (0, 1) {
+                heavy += 1;
+            }
+            if key == (3, 4) {
+                light += 1;
+            }
+        }
+        // w=4.0 vs 0.5 → ratio ≈ 8.
+        let ratio = heavy as f64 / light.max(1) as f64;
+        assert!((ratio - 8.0).abs() < 1.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn negatives_prefer_high_degree() {
+        let g = star_graph();
+        let s = GraphSamplers::new(&g);
+        let mut rng = Rng::new(2);
+        let mut counts = [0usize; 5];
+        for _ in 0..100_000 {
+            counts[s.sample_negative(&mut rng) as usize] += 1;
+        }
+        // Hub 0 (weighted degree 9) must beat leaf 4 (0.5) but by less
+        // than the raw degree ratio (the 0.75 exponent flattens it).
+        assert!(counts[0] > counts[4] * 3, "{counts:?}");
+        let raw_ratio = (9.0f64 / 0.5).powf(0.75);
+        let got = counts[0] as f64 / counts[4].max(1) as f64;
+        assert!((got - raw_ratio).abs() < raw_ratio * 0.25, "got {got}, want ≈{raw_ratio}");
+    }
+
+    #[test]
+    #[should_panic(expected = "no edges")]
+    fn empty_graph_panics() {
+        let g = CsrGraph::from_undirected(3, &[]);
+        GraphSamplers::new(&g);
+    }
+}

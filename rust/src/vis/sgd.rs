@@ -1,0 +1,293 @@
+//! Asynchronous stochastic gradient descent (Hogwild) for the LargeVis
+//! objective — the paper's optimizer, O(s·M) per step and O(s·M·N)
+//! total.
+//!
+//! Each worker thread independently samples a positive edge (∝ weight),
+//! draws M negatives (∝ deg^0.75), computes the fused gradient of
+//! Eq. (6) and applies it *without locks*. On sparse graphs the touched
+//! vertices rarely collide across threads (Recht et al., 2011), which
+//! is exactly the regime here: each step touches 2 + M vertices out of
+//! millions.
+
+use crate::graph::CsrGraph;
+use crate::util::pool;
+use crate::util::rng::Rng;
+use crate::vis::objective::clip;
+use crate::vis::sampler::GraphSamplers;
+use crate::vis::LargeVisConfig;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared mutable layout for Hogwild updates (see the safety note in
+/// `embed::line::SharedParams`, which this mirrors).
+struct SharedLayout {
+    ptr: *mut f32,
+    len: usize,
+}
+
+unsafe impl Sync for SharedLayout {}
+unsafe impl Send for SharedLayout {}
+
+impl SharedLayout {
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn row(&self, v: usize, dim: usize) -> &mut [f32] {
+        debug_assert!((v + 1) * dim <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(v * dim), dim)
+    }
+}
+
+/// Progress/throughput counters reported by [`optimize`].
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SgdReport {
+    /// Edge samples actually performed.
+    pub samples: u64,
+    /// Wall-clock seconds in the optimization loop.
+    pub seconds: f64,
+}
+
+impl SgdReport {
+    /// Edge-samples per second (the §Perf headline number).
+    pub fn throughput(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.samples as f64 / self.seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run asynchronous SGD on `layout` in place; returns throughput stats.
+pub fn optimize(
+    graph: &CsrGraph,
+    layout: &mut crate::data::matrix::Matrix,
+    cfg: &LargeVisConfig,
+) -> SgdReport {
+    assert_eq!(layout.n(), graph.n());
+    assert_eq!(layout.d(), cfg.dim);
+    let n = graph.n();
+    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
+    let samplers = GraphSamplers::new(graph);
+    let total = cfg.total_samples(n);
+    let dim = cfg.dim;
+    let f = cfg.prob_fn;
+    let gamma = cfg.gamma;
+    let negatives = cfg.negatives;
+    let gclip = cfg.grad_clip;
+    let rho0 = cfg.rho0;
+
+    let shared = SharedLayout { ptr: layout.as_mut_slice().as_mut_ptr(), len: layout.as_slice().len() };
+    let progress = AtomicU64::new(0);
+    let base_rng = Rng::new(cfg.seed ^ 0x5bd1);
+    let t0 = std::time::Instant::now();
+
+    // Monomorphize the hot loop on the output dimension: the layout dim
+    // is 2 (sometimes 3), and a const-length inner loop lets the
+    // compiler keep the accumulator in registers and unroll fully
+    // (§Perf: +13% over the dynamic-dim loop at dim=2).
+    struct LoopArgs<'a> {
+        shared: &'a SharedLayout,
+        samplers: &'a GraphSamplers,
+        progress: &'a AtomicU64,
+        base_rng: &'a Rng,
+        threads: usize,
+        total: u64,
+        f: crate::vis::objective::ProbFn,
+        gamma: f32,
+        negatives: usize,
+        gclip: f32,
+        rho0: f32,
+    }
+
+    fn worker_loop<const DIM: usize>(a: &LoopArgs<'_>, tid: usize) {
+        let mut rng = a.base_rng.split(tid as u64 + 1);
+        let my_samples =
+            a.total / a.threads as u64 + u64::from(tid == 0) * (a.total % a.threads as u64);
+        let mut acc = [0f32; DIM];
+        let mut rho = a.rho0;
+        for s in 0..my_samples {
+            // Refresh the global learning rate every 256 samples (cheap
+            // and smooth enough; exact per-step decay is unnecessary).
+            if s % 256 == 0 {
+                let t = a.progress.fetch_add(256, Ordering::Relaxed) * a.threads as u64;
+                let frac = (t.min(a.total)) as f32 / a.total as f32;
+                rho = (a.rho0 * (1.0 - frac)).max(a.rho0 * 1e-4);
+            }
+            let (i, j) = a.samplers.sample_edge(&mut rng);
+            let (i, j) = (i as usize, j as usize);
+            if i == j {
+                continue;
+            }
+            // SAFETY: indices < n, rows of length DIM; Hogwild races accepted.
+            let yi = unsafe { a.shared.row(i, DIM) };
+            acc.iter_mut().for_each(|x| *x = 0.0);
+
+            // Positive edge: attract.
+            {
+                let yj = unsafe { a.shared.row(j, DIM) };
+                let mut d2 = 0f32;
+                for k in 0..DIM {
+                    let dk = yi[k] - yj[k];
+                    d2 += dk * dk;
+                }
+                let c = a.f.coeff_pos(d2);
+                for k in 0..DIM {
+                    let g = clip(c * (yi[k] - yj[k]), a.gclip);
+                    acc[k] += g;
+                    yj[k] -= rho * g; // opposite force on y_j
+                }
+            }
+            // M negatives: repel.
+            let mut drawn = 0;
+            let mut guard = 0;
+            while drawn < a.negatives && guard < a.negatives * 10 {
+                guard += 1;
+                let v = a.samplers.sample_negative(&mut rng) as usize;
+                if v == i || v == j {
+                    continue;
+                }
+                drawn += 1;
+                let yv = unsafe { a.shared.row(v, DIM) };
+                let mut d2 = 0f32;
+                for k in 0..DIM {
+                    let dk = yi[k] - yv[k];
+                    d2 += dk * dk;
+                }
+                let c = a.gamma * a.f.coeff_neg(d2);
+                for k in 0..DIM {
+                    let g = clip(c * (yi[k] - yv[k]), a.gclip);
+                    acc[k] += g;
+                    yv[k] -= rho * g;
+                }
+            }
+            for k in 0..DIM {
+                yi[k] += rho * acc[k];
+            }
+        }
+    }
+
+    assert!((2..=4).contains(&dim), "hot path supports dim 2..=4 (paper uses 2/3)");
+    let args = LoopArgs {
+        shared: &shared,
+        samplers: &samplers,
+        progress: &progress,
+        base_rng: &base_rng,
+        threads,
+        total,
+        f,
+        gamma,
+        negatives,
+        gclip,
+        rho0,
+    };
+    pool::spawn_workers(threads, |tid| match dim {
+        2 => worker_loop::<2>(&args, tid),
+        3 => worker_loop::<3>(&args, tid),
+        _ => worker_loop::<4>(&args, tid),
+    });
+
+    SgdReport { samples: total, seconds: t0.elapsed().as_secs_f64() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::CsrGraph;
+    use crate::vis::objective::{exact_objective, ProbFn};
+    use crate::vis::{init_layout, LargeVisConfig};
+
+    /// Two 6-cliques joined by one weak edge.
+    fn two_cliques() -> CsrGraph {
+        let mut edges = Vec::new();
+        for c in 0..2u32 {
+            let base = c * 6;
+            for a in 0..6u32 {
+                for b in (a + 1)..6u32 {
+                    edges.push((base + a, base + b, 1.0f64));
+                }
+            }
+        }
+        edges.push((0, 6, 0.05));
+        CsrGraph::from_undirected(12, &edges)
+    }
+
+    #[test]
+    fn objective_increases() {
+        let g = two_cliques();
+        let cfg = LargeVisConfig {
+            samples_per_vertex: 4000,
+            threads: 1,
+            seed: 7,
+            ..Default::default()
+        };
+        let mut y = init_layout(g.n(), 2, 7);
+        let before = exact_objective(&y, g.edges(), cfg.gamma, cfg.prob_fn);
+        optimize(&g, &mut y, &cfg);
+        let after = exact_objective(&y, g.edges(), cfg.gamma, cfg.prob_fn);
+        assert!(after > before, "objective did not improve: {before} -> {after}");
+        assert!(y.as_slice().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn cliques_separate_in_layout() {
+        let g = two_cliques();
+        let cfg = LargeVisConfig { samples_per_vertex: 8000, threads: 2, seed: 3, ..Default::default() };
+        let mut y = init_layout(g.n(), 2, 3);
+        optimize(&g, &mut y, &cfg);
+        // Mean intra-clique distance << inter-clique distance.
+        let mut intra = 0f64;
+        let mut inter = 0f64;
+        let (mut ni, mut nx) = (0, 0);
+        for a in 0..12 {
+            for b in (a + 1)..12 {
+                let d = y.sqdist(a, b) as f64;
+                if (a < 6) == (b < 6) {
+                    intra += d;
+                    ni += 1;
+                } else {
+                    inter += d;
+                    nx += 1;
+                }
+            }
+        }
+        let (mi, mx) = (intra / ni as f64, inter / nx as f64);
+        assert!(mx > 3.0 * mi, "intra={mi:.3} inter={mx:.3}");
+    }
+
+    #[test]
+    fn single_thread_deterministic() {
+        let g = two_cliques();
+        let cfg = LargeVisConfig { samples_per_vertex: 500, threads: 1, seed: 11, ..Default::default() };
+        let mut a = init_layout(g.n(), 2, 11);
+        let mut b = init_layout(g.n(), 2, 11);
+        optimize(&g, &mut a, &cfg);
+        optimize(&g, &mut b, &cfg);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sigmoid_prob_fn_also_converges() {
+        let g = two_cliques();
+        let cfg = LargeVisConfig {
+            samples_per_vertex: 4000,
+            prob_fn: ProbFn::SigmoidSq,
+            threads: 1,
+            seed: 13,
+            ..Default::default()
+        };
+        let mut y = init_layout(g.n(), 2, 13);
+        let before = exact_objective(&y, g.edges(), cfg.gamma, cfg.prob_fn);
+        optimize(&g, &mut y, &cfg);
+        let after = exact_objective(&y, g.edges(), cfg.gamma, cfg.prob_fn);
+        assert!(after > before);
+    }
+
+    #[test]
+    fn report_throughput_positive() {
+        let g = two_cliques();
+        let cfg = LargeVisConfig { samples_per_vertex: 100, threads: 2, ..Default::default() };
+        let mut y = init_layout(g.n(), 2, 1);
+        let rep = optimize(&g, &mut y, &cfg);
+        assert!(rep.throughput() > 0.0);
+        assert_eq!(rep.samples, cfg.total_samples(g.n()));
+    }
+}

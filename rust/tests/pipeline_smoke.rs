@@ -1,0 +1,76 @@
+//! End-to-end pipeline integration tests over several datasets, plus
+//! determinism and CLI/config plumbing.
+
+use largevis::config::{Ini, PipelineConfig};
+use largevis::coordinator::run_pipeline;
+
+fn tiny_cfg(dataset: &str, dir: &str) -> PipelineConfig {
+    let mut cfg = PipelineConfig {
+        dataset: dataset.into(),
+        scale: 0.01,
+        k: 10,
+        out_dir: std::env::temp_dir().join("largevis_it").join(dir),
+        ..Default::default()
+    };
+    cfg.vis.samples_per_vertex = 300;
+    cfg.knn.forest.n_trees = 2;
+    cfg
+}
+
+#[test]
+fn pipeline_all_vector_datasets() {
+    for ds in ["20ng-like", "mnist-like", "wikiword-like", "wikidoc-like"] {
+        let cfg = tiny_cfg(ds, ds);
+        let out = run_pipeline(&cfg).unwrap_or_else(|e| panic!("{ds}: {e:#}"));
+        assert!(out.layout.as_slice().iter().all(|v| v.is_finite()), "{ds}");
+        assert!(out.metrics.get("knn.sampled_recall").unwrap() > 0.3, "{ds}");
+        assert!(cfg.out_dir.join("layout.svg").exists());
+        assert!(cfg.out_dir.join("layout.tsv").exists());
+    }
+}
+
+#[test]
+fn pipeline_network_dataset() {
+    let cfg = tiny_cfg("dblp-like", "dblp");
+    let out = run_pipeline(&cfg).unwrap();
+    assert!(out.labels.is_some());
+    assert!(out.metrics.get("eval.knn_accuracy").is_some());
+}
+
+#[test]
+fn labeled_pipeline_beats_chance() {
+    let mut cfg = tiny_cfg("20ng-like", "acc");
+    cfg.scale = 0.05;
+    cfg.vis.samples_per_vertex = 1500;
+    let out = run_pipeline(&cfg).unwrap();
+    let acc = out.metrics.get("eval.knn_accuracy").unwrap();
+    assert!(acc > 0.25, "accuracy {acc} (chance = 0.05 for 20 classes)");
+}
+
+#[test]
+fn pipeline_seeded_determinism() {
+    // Single-threaded everything => bit-identical layouts.
+    let mk = |dir: &str| {
+        let mut cfg = tiny_cfg("20ng-like", dir);
+        cfg.knn.threads = 1;
+        cfg.knn.forest.threads = 1;
+        cfg.weights.threads = 1;
+        cfg.vis.threads = 1;
+        cfg
+    };
+    let a = run_pipeline(&mk("det_a")).unwrap();
+    let b = run_pipeline(&mk("det_b")).unwrap();
+    assert_eq!(a.layout, b.layout);
+}
+
+#[test]
+fn ini_to_pipeline_roundtrip() {
+    let ini = Ini::parse(
+        "dataset = wikidoc-like\nscale = 0.02\n[knn]\nk = 12\n[vis]\nsamples_per_vertex = 200",
+    )
+    .unwrap();
+    let cfg = PipelineConfig::from_ini(&ini).unwrap();
+    assert_eq!(cfg.dataset, "wikidoc-like");
+    assert_eq!(cfg.k, 12);
+    assert_eq!(cfg.vis.samples_per_vertex, 200);
+}

@@ -1,0 +1,226 @@
+//! Property-based tests over module invariants, driven by the
+//! `util::proptest` harness (seeded, shrink-lite, `PROP_SEED=<n>` to
+//! reproduce).
+
+use largevis::data::matrix::Matrix;
+use largevis::data::synth::gaussian_mixture;
+use largevis::graph::weights::{calibrate_row, weighted_graph, WeightConfig};
+use largevis::graph::CsrGraph;
+use largevis::knn::bruteforce::exact_knn;
+use largevis::knn::explore::{explore_once, LargeVisKnnConfig};
+use largevis::knn::rptree::{rp_forest_knn, RpForestConfig};
+use largevis::util::alias::AliasTable;
+use largevis::util::proptest::{run_prop, PropConfig};
+
+#[test]
+fn prop_alias_table_mean_matches_weights() {
+    run_prop("alias-mean", PropConfig { cases: 20, max_size: 64, ..Default::default() }, |rng, size| {
+        let n = 2 + size.min(40);
+        let w: Vec<f64> = (0..n).map(|_| rng.f64() * 5.0 + 0.05).collect();
+        let t = AliasTable::new(&w);
+        let total: f64 = w.iter().sum();
+        let draws = 40_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..draws {
+            counts[t.sample(rng)] += 1;
+        }
+        for (i, (&c, &wi)) in counts.iter().zip(&w).enumerate() {
+            let p = wi / total;
+            let se = (p * (1.0 - p) / draws as f64).sqrt();
+            let got = c as f64 / draws as f64;
+            if (got - p).abs() > 6.0 * se + 1e-3 {
+                return Err(format!("outcome {i}: freq {got:.4} vs p {p:.4}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_perplexity_calibration_hits_target() {
+    run_prop("perplexity", PropConfig { cases: 30, max_size: 200, ..Default::default() }, |rng, size| {
+        let k = 4 + size.min(180);
+        let dists: Vec<f32> = (0..k).map(|_| rng.f32() * 10.0 + 0.01).collect();
+        let u = 2.0 + rng.f64() * (k as f64 * 0.8 - 2.0);
+        let probs = calibrate_row(&dists, u, 100, 1e-6);
+        let sum: f64 = probs.iter().sum();
+        if (sum - 1.0).abs() > 1e-6 {
+            return Err(format!("probs sum {sum}"));
+        }
+        let entropy: f64 = -probs.iter().filter(|&&p| p > 0.0).map(|p| p * p.ln()).sum::<f64>();
+        let perp = entropy.exp();
+        if (perp - u).abs() > 0.05 * u {
+            return Err(format!("target perplexity {u:.2}, got {perp:.2} (k={k})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_roundtrip_preserves_edges() {
+    run_prop("csr-roundtrip", PropConfig { cases: 30, max_size: 60, ..Default::default() }, |rng, size| {
+        let n = 3 + size;
+        let mut set = std::collections::BTreeSet::new();
+        for _ in 0..(2 * n) {
+            let a = rng.below(n) as u32;
+            let b = rng.below(n) as u32;
+            if a != b {
+                set.insert((a.min(b), a.max(b)));
+            }
+        }
+        let edges: Vec<(u32, u32, f64)> =
+            set.iter().map(|&(a, b)| (a, b, 1.0 + (a + b) as f64)).collect();
+        let g = CsrGraph::from_undirected(n, &edges);
+        if g.n_directed_edges() != 2 * edges.len() {
+            return Err("directed edge count".into());
+        }
+        // Every undirected edge appears in both rows with its weight.
+        for &(a, b, w) in &edges {
+            let fwd = g.row(a as usize).find(|&(c, _)| c == b);
+            let bwd = g.row(b as usize).find(|&(c, _)| c == a);
+            match (fwd, bwd) {
+                (Some((_, wf)), Some((_, wb))) if wf == w && wb == w => {}
+                _ => return Err(format!("edge ({a},{b}) lost")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_knn_recall_monotone_in_trees() {
+    run_prop("rp-trees-monotone", PropConfig { cases: 6, max_size: 40, ..Default::default() }, |rng, size| {
+        let n = 150 + size * 4;
+        let d = 4 + rng.below(20);
+        let (m, _) = gaussian_mixture(n, d, 4, 0.2, rng.next_u64());
+        let truth = exact_knn(&m, 8, 2);
+        let seed = rng.next_u64();
+        let r_few = rp_forest_knn(&m, 8, &RpForestConfig { n_trees: 1, leaf_size: 16, threads: 2, seed, ..Default::default() })
+            .recall_against(&truth);
+        let r_many =
+            rp_forest_knn(&m, 8, &RpForestConfig { n_trees: 10, leaf_size: 16, threads: 2, seed, ..Default::default() })
+                .recall_against(&truth);
+        // Allow small sampling noise but require the trend.
+        if r_many + 0.02 < r_few {
+            return Err(format!("recall decreased with more trees: {r_few:.3} -> {r_many:.3}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_explore_never_regresses_mean_distance() {
+    run_prop("explore-monotone", PropConfig { cases: 6, max_size: 30, ..Default::default() }, |rng, size| {
+        let n = 120 + size * 5;
+        let (m, _) = gaussian_mixture(n, 8, 3, 0.3, rng.next_u64());
+        let cfg = LargeVisKnnConfig {
+            forest: RpForestConfig { n_trees: 1, leaf_size: 8, threads: 2, seed: rng.next_u64(), ..Default::default() },
+            iters: 0,
+            max_candidates: usize::MAX,
+            threads: 2,
+        };
+        let g0 = rp_forest_knn(&m, 6, &cfg.forest);
+        let g1 = explore_once(&m, &g0, &cfg);
+        g1.check_invariants().map_err(|e| e.to_string())?;
+        for i in 0..n {
+            let s0: f32 = g0.neighbors[i].iter().map(|&(_, d)| d).sum();
+            let s1: f32 = g1.neighbors[i].iter().map(|&(_, d)| d).sum();
+            let l0 = g0.neighbors[i].len();
+            let l1 = g1.neighbors[i].len();
+            if l1 < l0 {
+                return Err(format!("node {i} lost neighbors {l0} -> {l1}"));
+            }
+            if l1 == l0 && s1 > s0 + 1e-4 {
+                return Err(format!("node {i} distance sum regressed"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_graph_total_mass_one() {
+    run_prop("weights-mass", PropConfig { cases: 8, max_size: 30, ..Default::default() }, |rng, size| {
+        let n = 60 + 4 * size;
+        let (m, _) = gaussian_mixture(n, 6, 3, 0.2, rng.next_u64());
+        let knn = exact_knn(&m, 8, 2);
+        let g = weighted_graph(&knn, &WeightConfig { perplexity: 5.0, ..Default::default() });
+        let total: f64 = (0..g.n()).map(|i| g.row(i).map(|(_, w)| w).sum::<f64>()).sum();
+        if (total - 1.0).abs() > 1e-6 {
+            return Err(format!("total weight {total}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sgd_objective_improves_on_random_cluster_graphs() {
+    run_prop("sgd-objective", PropConfig { cases: 4, max_size: 20, ..Default::default() }, |rng, size| {
+        // Random 2-4 clique clusters; SGD must increase the objective.
+        let k = 2 + rng.below(3);
+        let per = 5 + size / 4;
+        let n = k * per;
+        let mut edges = Vec::new();
+        for c in 0..k {
+            for a in 0..per {
+                for b in (a + 1)..per {
+                    edges.push(((c * per + a) as u32, (c * per + b) as u32, 1.0f64));
+                }
+            }
+        }
+        let g = CsrGraph::from_undirected(n, &edges);
+        let cfg = largevis::vis::LargeVisConfig {
+            samples_per_vertex: 3000,
+            threads: 1,
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let mut y = largevis::vis::init_layout(n, 2, rng.next_u64());
+        let before =
+            largevis::vis::objective::exact_objective(&y, g.edges(), cfg.gamma, cfg.prob_fn);
+        largevis::vis::sgd::optimize(&g, &mut y, &cfg);
+        let after =
+            largevis::vis::objective::exact_objective(&y, g.edges(), cfg.gamma, cfg.prob_fn);
+        if after <= before {
+            return Err(format!("objective {before:.3} -> {after:.3}"));
+        }
+        if !y.as_slice().iter().all(|v| v.is_finite()) {
+            return Err("non-finite layout".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matrix_sqdist_triangle_inequality() {
+    run_prop("sqdist-triangle", PropConfig { cases: 40, max_size: 64, ..Default::default() }, |rng, size| {
+        let d = 1 + size.min(48);
+        let mut m = Matrix::zeros(3, d);
+        for i in 0..3 {
+            for x in m.row_mut(i).iter_mut() {
+                *x = rng.gaussian() * 3.0;
+            }
+        }
+        let dab = m.sqdist(0, 1).sqrt();
+        let dbc = m.sqdist(1, 2).sqrt();
+        let dac = m.sqdist(0, 2).sqrt();
+        if dac > dab + dbc + 1e-3 {
+            return Err(format!("triangle violated: {dac} > {dab} + {dbc}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_below_never_out_of_range() {
+    run_prop("rng-below", PropConfig { cases: 64, max_size: 1000, ..Default::default() }, |rng, size| {
+        let n = 1 + size;
+        for _ in 0..1000 {
+            let v = rng.below(n);
+            if v >= n {
+                return Err(format!("below({n}) = {v}"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,177 @@
+//! Integration tests for the AOT/PJRT path. These need `artifacts/`
+//! built (`make artifacts`); they are skipped with a notice otherwise
+//! so `cargo test` stays green on a fresh checkout.
+
+use largevis::data::synth::gaussian_mixture;
+use largevis::runtime::{literal_f32, literal_f32_2d, literal_to_f32, Runtime};
+use largevis::util::rng::Rng;
+use largevis::vis::objective::ProbFn;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::from_default_dir() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn grad_kernel_matches_native_math() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mf = rt.manifest;
+    let (b, m, s) = (mf.batch, mf.negatives, mf.dim);
+    let mut rng = Rng::new(42);
+    let yi: Vec<f32> = (0..b * s).map(|_| 2.0 * rng.gaussian()).collect();
+    let yj: Vec<f32> = (0..b * s).map(|_| 2.0 * rng.gaussian()).collect();
+    let yneg: Vec<f32> = (0..b * m * s).map(|_| 2.0 * rng.gaussian()).collect();
+    let gamma = 7.0f32;
+
+    let outs = rt
+        .run(
+            "grad_kernel",
+            &[
+                literal_f32_2d(&yi, b, s).unwrap(),
+                literal_f32_2d(&yj, b, s).unwrap(),
+                literal_f32_2d(&yneg, b, m * s).unwrap(),
+                literal_f32(gamma),
+            ],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 3);
+    let gi = literal_to_f32(&outs[0]).unwrap();
+    let gj = literal_to_f32(&outs[1]).unwrap();
+    let gneg = literal_to_f32(&outs[2]).unwrap();
+    assert_eq!(gi.len(), b * s);
+    assert_eq!(gj.len(), b * s);
+    assert_eq!(gneg.len(), b * m * s);
+
+    let f = ProbFn::InvQuad { a: 1.0 };
+    for e in 0..b {
+        let d2: f32 = (0..s).map(|k| (yi[e * s + k] - yj[e * s + k]).powi(2)).sum();
+        let c = f.coeff_pos(d2);
+        for k in 0..s {
+            let gpos = (c * (yi[e * s + k] - yj[e * s + k])).clamp(-5.0, 5.0);
+            assert!((gj[e * s + k] + gpos).abs() < 1e-4, "gj mismatch at edge {e}");
+        }
+        // gi = gpos + sum of negative terms.
+        let mut want = [0f32; 8];
+        for k in 0..s {
+            want[k] += (c * (yi[e * s + k] - yj[e * s + k])).clamp(-5.0, 5.0);
+        }
+        for neg in 0..m {
+            let off = (e * m + neg) * s;
+            let d2: f32 = (0..s).map(|k| (yi[e * s + k] - yneg[off + k]).powi(2)).sum();
+            let cn = gamma * f.coeff_neg(d2);
+            for k in 0..s {
+                let gterm = (cn * (yi[e * s + k] - yneg[off + k])).clamp(-5.0, 5.0);
+                want[k] += gterm;
+                assert!(
+                    (gneg[off + k] + gterm).abs() < 1e-4,
+                    "gneg mismatch at edge {e} neg {neg}"
+                );
+            }
+        }
+        for k in 0..s {
+            assert!(
+                (gi[e * s + k] - want[k]).abs() < 1e-4,
+                "gi mismatch at edge {e}: {} vs {}",
+                gi[e * s + k],
+                want[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn pdist_artifact_matches_rust_sqdist() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mf = rt.manifest;
+    let (tile, d) = (mf.pdist_tile, mf.pdist_d);
+    let (m, _) = gaussian_mixture(tile, d, 4, 0.2, 7);
+    let xa = m.as_slice().to_vec();
+    let outs = rt
+        .run(
+            "pdist",
+            &[literal_f32_2d(&xa, tile, d).unwrap(), literal_f32_2d(&xa, tile, d).unwrap()],
+        )
+        .unwrap();
+    let dist = literal_to_f32(&outs[0]).unwrap();
+    assert_eq!(dist.len(), tile * tile);
+    let mut rng = Rng::new(9);
+    for _ in 0..200 {
+        let i = rng.below(tile);
+        let j = rng.below(tile);
+        let want = m.sqdist(i, j);
+        let got = dist[i * tile + j];
+        assert!(
+            (got - want).abs() < 1e-2 * (1.0 + want),
+            "pdist[{i},{j}] = {got} vs rust {want}"
+        );
+    }
+}
+
+#[test]
+fn largevis_step_artifact_runs_and_updates() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mf = rt.manifest;
+    let (n, b, m, s) = (mf.step_n, mf.batch, mf.negatives, mf.dim);
+    let mut rng = Rng::new(5);
+    let y: Vec<f32> = (0..n * s).map(|_| 0.01 * rng.gaussian()).collect();
+    let idx_i: Vec<i32> = (0..b).map(|_| rng.below(n) as i32).collect();
+    let idx_j: Vec<i32> = (0..b).map(|_| rng.below(n) as i32).collect();
+    let idx_neg: Vec<i32> = (0..b * m).map(|_| rng.below(n) as i32).collect();
+
+    let outs = rt
+        .run(
+            "largevis_step",
+            &[
+                literal_f32_2d(&y, n, s).unwrap(),
+                largevis::runtime::literal_i32_1d(&idx_i),
+                largevis::runtime::literal_i32_1d(&idx_j),
+                largevis::runtime::literal_i32_2d(&idx_neg, b, m).unwrap(),
+                literal_f32(1.0),
+                literal_f32(7.0),
+            ],
+        )
+        .unwrap();
+    let y2 = literal_to_f32(&outs[0]).unwrap();
+    assert_eq!(y2.len(), n * s);
+    assert!(y2.iter().all(|v| v.is_finite()));
+    // Touched rows changed, untouched identical.
+    let touched: std::collections::HashSet<usize> = idx_i
+        .iter()
+        .chain(&idx_j)
+        .chain(&idx_neg)
+        .map(|&v| v as usize)
+        .collect();
+    let changed = (0..n)
+        .filter(|v| (0..s).any(|k| y2[v * s + k] != y[v * s + k]))
+        .collect::<Vec<_>>();
+    assert!(!changed.is_empty());
+    for &v in &changed {
+        assert!(touched.contains(&v), "untouched row {v} changed");
+    }
+}
+
+#[test]
+fn batched_optimizer_separates_communities() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // A graph large relative to the batch size (B=1024): mini-batch SGD
+    // with stale in-batch gradients needs touched vertices to rarely
+    // repeat within a batch, just like Hogwild needs rare collisions.
+    let g = largevis::data::synth::sbm(2500, 5, 12.0, 1.0, 11);
+    let edges: Vec<(u32, u32, f64)> = g.edges.iter().map(|&(a, b)| (a, b, 1.0)).collect();
+    let graph = largevis::graph::CsrGraph::from_undirected(g.n, &edges);
+    let cfg = largevis::vis::LargeVisConfig { samples_per_vertex: 800, ..Default::default() };
+    let mut y = largevis::vis::init_layout(g.n, 2, 1);
+    largevis::vis::batched::optimize_batched(&graph, &mut y, &cfg, &rt).unwrap();
+    assert!(y.as_slice().iter().all(|v| v.is_finite()));
+    let acc = largevis::eval::knn_classifier::knn_accuracy(
+        &y,
+        &g.communities,
+        &largevis::eval::knn_classifier::KnnEvalConfig { k: 5, sample: 1500, ..Default::default() },
+    );
+    assert!(acc > 0.6, "XLA layout community accuracy {acc} (chance 0.2)");
+}
