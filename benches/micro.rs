@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
 
-    // sqdist throughput at d=100 (the KNN hot scalar).
+    // sqdist throughput at d=100 (the KNN hot scalar; dispatched path).
     {
         let mut rng = Rng::new(2);
         let a: Vec<f32> = (0..100).map(|_| rng.gaussian()).collect();
@@ -50,6 +50,94 @@ fn main() -> anyhow::Result<()> {
             "M dists/s".into(),
             format!("{:.0}", 1.0 / s.p50),
         ]);
+    }
+
+    // Distance-kernel comparison: scalar reference vs the dispatched
+    // SIMD variant vs the batched gather kernel, across the paper's
+    // dimensionality range (d=784 is MNIST). Emits BENCH_kernels.json
+    // so the perf trajectory is recorded from this PR onward.
+    {
+        let active = largevis::kernels::active();
+        let mut json_rows: Vec<String> = Vec::new();
+        for d in [10usize, 50, 100, 200, 784] {
+            let mut rng = Rng::new(0xd15 + d as u64);
+            let a: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+            let b: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+            // Constant-work iteration counts so every d times in ~the
+            // same ballpark.
+            let iters = (20_000_000 / d).max(20_000);
+            let time_pair = |f: fn(&[f32], &[f32]) -> f32| {
+                time_fn(1, 5, || {
+                    let mut acc = 0f32;
+                    for _ in 0..iters {
+                        acc += f(std::hint::black_box(&a), std::hint::black_box(&b));
+                    }
+                    acc
+                })
+            };
+            let scalar_s = time_pair(largevis::kernels::SCALAR.sqdist);
+            let simd_s = time_pair(active.sqdist);
+
+            // Batched: one query against 256 candidate rows scattered
+            // through a larger matrix — shuffled ids so the gather cost
+            // matches the real KNN access pattern (leaf/bucket ids are
+            // not sequential), not a prefetchable sequential copy.
+            let rows = 256usize;
+            let pool_rows = rows * 8;
+            let m = largevis::data::Matrix::from_vec(
+                (0..pool_rows * d).map(|_| rng.gaussian()).collect(),
+                pool_rows,
+                d,
+            );
+            let mut ids: Vec<u32> = (0..pool_rows as u32).collect();
+            rng.shuffle(&mut ids);
+            ids.truncate(rows);
+            let reps = (iters / rows).max(16);
+            let mut out: Vec<f32> = Vec::new();
+            let batch_s = time_fn(1, 5, || {
+                let mut acc = 0f32;
+                for _ in 0..reps {
+                    largevis::kernels::sqdist_batch(
+                        std::hint::black_box(&a),
+                        &m,
+                        std::hint::black_box(&ids),
+                        &mut out,
+                    );
+                    acc += out[0] + out[rows - 1];
+                }
+                acc
+            });
+
+            let scalar_ns = scalar_s.p50 / iters as f64 * 1e9;
+            let simd_ns = simd_s.p50 / iters as f64 * 1e9;
+            let batch_ns = batch_s.p50 / (reps * rows) as f64 * 1e9;
+            let simd_speedup = scalar_ns / simd_ns;
+            let batch_speedup = scalar_ns / batch_ns;
+            table.row(&[
+                format!("kernels.sqdist(d={d})"),
+                format!("ns scalar/{}/batch", active.name),
+                format!("{scalar_ns:.1}/{simd_ns:.1}/{batch_ns:.1}"),
+            ]);
+            table.row(&[
+                format!("kernels.speedup(d={d})"),
+                format!("{}x/batchx vs scalar", active.name),
+                format!("{simd_speedup:.2}/{batch_speedup:.2}"),
+            ]);
+            json_rows.push(format!(
+                concat!(
+                    "{{\"d\":{},\"scalar_ns\":{:.2},\"simd_ns\":{:.2},\"batch_ns\":{:.2},",
+                    "\"simd_speedup\":{:.3},\"batch_speedup\":{:.3}}}"
+                ),
+                d, scalar_ns, simd_ns, batch_ns, simd_speedup, batch_speedup
+            ));
+        }
+        let doc = format!(
+            "{{\"bench\":\"kernels.sqdist\",\"active_kernel\":\"{}\",\"results\":[{}]}}\n",
+            active.name,
+            json_rows.join(",")
+        );
+        std::fs::write("BENCH_kernels.json", &doc)?;
+        eprintln!("[micro] wrote BENCH_kernels.json (active kernel: {})", active.name);
     }
 
     // Hogwild SGD throughput & thread scaling on an SBM graph.

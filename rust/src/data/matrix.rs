@@ -109,93 +109,11 @@ impl Matrix {
     }
 }
 
-/// Squared Euclidean distance between two equal-length vectors.
-///
-/// The single hottest scalar function in KNN construction; written as a
-/// 4-lane unrolled loop the compiler auto-vectorizes.
-#[inline]
-pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    for c in 0..chunks {
-        let i = c * 4;
-        let d0 = a[i] - b[i];
-        let d1 = a[i + 1] - b[i + 1];
-        let d2 = a[i + 2] - b[i + 2];
-        let d3 = a[i + 3] - b[i + 3];
-        s0 += d0 * d0;
-        s1 += d1 * d1;
-        s2 += d2 * d2;
-        s3 += d3 * d3;
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        let d = a[i] - b[i];
-        s += d * d;
-    }
-    s
-}
-
-/// Squared distance with early exit: returns a value `> bound` as soon
-/// as the partial sum exceeds `bound` (checked every 32 lanes).
-///
-/// The KNN inner loops compare candidates against a bounded heap's
-/// current worst distance; at d=784 most candidates exceed it within
-/// the first blocks, so bailing early is a large win (§Perf).
-#[inline]
-pub fn sqdist_bounded(a: &[f32], b: &[f32], bound: f32) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let mut s = 0f32;
-    let mut i = 0;
-    while i + 32 <= n {
-        let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-        for c in 0..8 {
-            let base = i + c * 4;
-            let d0 = a[base] - b[base];
-            let d1 = a[base + 1] - b[base + 1];
-            let d2 = a[base + 2] - b[base + 2];
-            let d3 = a[base + 3] - b[base + 3];
-            s0 += d0 * d0;
-            s1 += d1 * d1;
-            s2 += d2 * d2;
-            s3 += d3 * d3;
-        }
-        s += s0 + s1 + s2 + s3;
-        i += 32;
-        if s > bound {
-            return s;
-        }
-    }
-    for k in i..n {
-        let d = a[k] - b[k];
-        s += d * d;
-    }
-    s
-}
-
-/// Dot product (same unrolling as [`sqdist`]).
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
-    }
-    s
-}
+// The distance kernels moved to the runtime-dispatched SIMD subsystem
+// in `crate::kernels` (scalar reference lives in `kernels::scalar`).
+// Re-exported here so `data::matrix::{sqdist, sqdist_bounded, dot}`
+// remains the stable path every consumer already imports.
+pub use crate::kernels::{dot, sqdist, sqdist_bounded};
 
 #[cfg(test)]
 mod tests {

@@ -3,7 +3,8 @@
 //! K-means clusters of the *high-dimensional* representations (200
 //! clusters). Parallel over points; deterministic under a seed.
 
-use crate::data::matrix::{sqdist, Matrix};
+use crate::data::matrix::Matrix;
+use crate::kernels::{self, sqdist};
 use crate::util::pool;
 use crate::util::rng::Rng;
 
@@ -85,18 +86,24 @@ pub fn kmeans(data: &Matrix, cfg: &KMeansConfig) -> KMeans {
     let mut iters = 0;
     for iter in 0..cfg.max_iters {
         iters = iter + 1;
-        // Assign.
-        let new_assign: Vec<(u32, f64)> = pool::parallel_map(n, threads, |i| {
-            let row = data.row(i);
-            let mut best = (0u32, f64::INFINITY);
-            for c in 0..k {
-                let dist = sqdist(row, centroids.row(c)) as f64;
-                if dist < best.1 {
-                    best = (c as u32, dist);
+        // Assign: every point against the contiguous centroid matrix in
+        // one batched SIMD pass (ties keep the lowest cluster id, as
+        // the sequential scan did).
+        let new_assign: Vec<(u32, f64)> = pool::parallel_map_with(
+            n,
+            threads,
+            |_worker| Vec::<f32>::new(),
+            |dist, i| {
+                kernels::sqdist_to_all(data.row(i), &centroids, dist);
+                let mut best = (0u32, f64::INFINITY);
+                for (c, &d) in dist.iter().enumerate() {
+                    if (d as f64) < best.1 {
+                        best = (c as u32, d as f64);
+                    }
                 }
-            }
-            best
-        });
+                best
+            },
+        );
         let changed = new_assign
             .iter()
             .zip(&assignment)

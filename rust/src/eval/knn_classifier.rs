@@ -3,6 +3,8 @@
 //!
 //! For sampled query points, classify by majority vote of the K nearest
 //! *other* points in the 2D layout and compare with the true label.
+//! The neighbor scan runs through [`exact_knn_for`], i.e. the batched
+//! SIMD distance kernels in [`crate::kernels`].
 
 use crate::data::matrix::Matrix;
 use crate::knn::bruteforce::exact_knn_for;

@@ -1,0 +1,172 @@
+//! One-query-vs-many-candidates batched distance kernel.
+//!
+//! The KNN hot loops (RP-tree leaf scans, neighbor exploring, LSH
+//! buckets, brute force, k-means assignment) all evaluate one query
+//! against a *set* of candidate rows scattered through the data matrix.
+//! Evaluating them one `sqdist` call at a time pays a scattered load
+//! per candidate and re-reads the query from cache every call.
+//!
+//! [`sqdist_batch`] instead gathers the candidate rows into a
+//! thread-local contiguous scratch block (bounded to [`BLOCK_ROWS`]
+//! rows, so the block stays cache-resident at any dimensionality) and
+//! computes the whole set with the dispatched [`KernelSet::sqdist_x4`]
+//! kernel — four candidates per pass sharing each 8-wide query load.
+//! The scratch block is reused across calls on the same thread, so
+//! steady-state batched evaluation performs **no heap allocation**
+//! (callers pass their own reusable `out` buffer).
+//!
+//! Distances are always computed in full (no per-candidate early exit —
+//! the batch amortization replaces it); callers filter against their
+//! heap threshold afterwards. Candidates strictly over the threshold
+//! are rejected either way, but because SIMD lanes re-associate the
+//! sums, a candidate within float tolerance (~1e-4 relative) of the
+//! threshold can be decided differently than under the scalar bounded
+//! path — the same cross-variant tolerance documented in
+//! [`super`]'s module docs and enforced by the parity tests. Workloads
+//! where the early exit matters more than the amortization (the
+//! brute-force ground-truth scan) use [`super::sqdist_bounded`]
+//! instead.
+//!
+//! [`KernelSet::sqdist_x4`]: super::KernelSet::sqdist_x4
+
+use super::KernelSet;
+use crate::data::matrix::Matrix;
+use std::cell::RefCell;
+
+/// Candidate rows gathered per scratch block. 64 rows keeps the block
+/// ≤ 196 KiB even at MNIST's d=784 (L2-resident on every target CPU).
+pub const BLOCK_ROWS: usize = 64;
+
+thread_local! {
+    static GATHER: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// Squared distance from `query` to `data[id]` for every `id` in `ids`,
+/// written into `out` (cleared first; `out[r]` pairs with `ids[r]`).
+///
+/// `query.len()` must equal `data.d()`; every id must be `< data.n()`.
+pub fn sqdist_batch(query: &[f32], data: &Matrix, ids: &[u32], out: &mut Vec<f32>) {
+    let d = data.d();
+    debug_assert_eq!(query.len(), d);
+    out.clear();
+    if ids.is_empty() {
+        return;
+    }
+    out.reserve(ids.len());
+    if d == 0 {
+        out.resize(ids.len(), 0.0);
+        return;
+    }
+    let ks = super::active();
+    GATHER.with(|g| {
+        let mut block = g.borrow_mut();
+        for chunk in ids.chunks(BLOCK_ROWS) {
+            block.clear();
+            block.reserve(chunk.len() * d);
+            for &id in chunk {
+                block.extend_from_slice(data.row(id as usize));
+            }
+            compute_block(ks, query, &block, d, chunk.len(), out);
+        }
+    });
+}
+
+/// Squared distance from `query` to *every* row of `data`, written into
+/// `out` (cleared first). The rows are already contiguous, so this
+/// skips the gather and runs the blocked kernel over the matrix buffer
+/// directly — the k-means assignment inner loop.
+pub fn sqdist_to_all(query: &[f32], data: &Matrix, out: &mut Vec<f32>) {
+    let d = data.d();
+    debug_assert_eq!(query.len(), d);
+    out.clear();
+    if data.n() == 0 {
+        return;
+    }
+    out.reserve(data.n());
+    if d == 0 {
+        out.resize(data.n(), 0.0);
+        return;
+    }
+    compute_block(super::active(), query, data.as_slice(), d, data.n(), out);
+}
+
+/// Distances of `query` against `rows` contiguous `d`-length vectors in
+/// `block`, appended to `out`: 4 rows per pass, remainder one-by-one.
+fn compute_block(
+    ks: &KernelSet,
+    query: &[f32],
+    block: &[f32],
+    d: usize,
+    rows: usize,
+    out: &mut Vec<f32>,
+) {
+    debug_assert!(block.len() >= rows * d);
+    let mut r = 0usize;
+    while r + 4 <= rows {
+        let four = (ks.sqdist_x4)(query, &block[r * d..], d);
+        out.extend_from_slice(&four);
+        r += 4;
+    }
+    while r < rows {
+        out.push((ks.sqdist)(query, &block[r * d..(r + 1) * d]));
+        r += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scalar;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_matrix(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec((0..n * d).map(|_| rng.gaussian()).collect(), n, d)
+    }
+
+    #[test]
+    fn batch_matches_scalar_per_pair() {
+        let mut rng = Rng::new(7);
+        for &d in &[1usize, 3, 7, 8, 31, 33, 100] {
+            let m = random_matrix(120, d, 0xb0 + d as u64);
+            let q: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+            for &cnt in &[0usize, 1, 3, 4, 5, 63, 64, 65, 120] {
+                let ids: Vec<u32> = (0..cnt).map(|_| rng.below(120) as u32).collect();
+                let mut out = Vec::new();
+                sqdist_batch(&q, &m, &ids, &mut out);
+                assert_eq!(out.len(), ids.len());
+                for (&id, &got) in ids.iter().zip(&out) {
+                    let want = scalar::sqdist(&q, m.row(id as usize));
+                    assert!(
+                        (got - want).abs() < 1e-4 * (1.0 + want),
+                        "d={d} cnt={cnt} id={id}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn to_all_matches_batch_over_all_ids() {
+        let d = 17;
+        let m = random_matrix(37, d, 3);
+        let mut rng = Rng::new(4);
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+        let ids: Vec<u32> = (0..37).collect();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        sqdist_batch(&q, &m, &ids, &mut a);
+        sqdist_to_all(&q, &m, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn out_buffer_is_cleared_and_reused() {
+        let m = random_matrix(10, 5, 9);
+        let q = vec![0.5f32; 5];
+        let mut out = vec![99.0; 50];
+        sqdist_batch(&q, &m, &[1, 2], &mut out);
+        assert_eq!(out.len(), 2);
+        sqdist_batch(&q, &m, &[], &mut out);
+        assert!(out.is_empty());
+    }
+}

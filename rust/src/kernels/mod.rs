@@ -1,0 +1,217 @@
+//! Runtime-dispatched SIMD distance kernels — the single home of every
+//! pairwise-distance computation in the system.
+//!
+//! The paper's profile (Figs 2–3, Table 1) shows KNN-graph construction
+//! dominating LargeVis runtime at scale, and inside KNN construction
+//! nearly all cycles go to squared-Euclidean evaluations. This module
+//! turns that hot scalar into a dispatched kernel family:
+//!
+//! * **scalar** — the portable 4-lane unrolled reference ([`scalar`]),
+//!   always available, the parity baseline for every other variant.
+//! * **sse2** / **avx2** — `x86_64` via `std::arch` ([`x86`], compiled
+//!   on x86-64 only). AVX2 uses 8-wide FMA; SSE2 is the 4-wide baseline
+//!   guaranteed by the x86-64 ISA.
+//! * **neon** — `aarch64` 4-wide FMA ([`neon`]; NEON is mandatory on
+//!   aarch64 so no runtime check is needed).
+//!
+//! Each variant provides `sqdist`, `sqdist_bounded` (with the same
+//! 32-lane early-exit blocking as the scalar path), `dot`, and
+//! `sqdist_x4` — one query against four contiguous candidate rows,
+//! which amortizes the query loads and feeds the batched gather kernel
+//! in [`batch`].
+//!
+//! # Dispatch policy
+//!
+//! The active variant is chosen once per process, at first use:
+//!
+//! 1. If `LARGEVIS_KERNEL` is set to `scalar`, `sse2`, `avx2` or
+//!    `neon`, that variant is used when available on this CPU (an
+//!    unavailable request logs a warning and falls back to auto).
+//!    `LARGEVIS_KERNEL=scalar` is the supported way to force the
+//!    portable path for debugging or A/B timing.
+//! 2. Otherwise the best detected variant wins: on `x86_64`,
+//!    AVX2+FMA ≻ SSE2 (checked with `is_x86_feature_detected!`); on
+//!    `aarch64`, NEON; anywhere else, scalar. Non-x86/ARM targets
+//!    therefore build and run unchanged.
+//!
+//! All variants produce results within 1e-4 relative tolerance of the
+//! scalar reference (enforced by `rust/tests/kernel_parity.rs`); exact
+//! bit-equality is *not* guaranteed because SIMD lanes re-associate the
+//! floating-point sums.
+
+pub mod batch;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+pub mod scalar;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+pub use batch::{sqdist_batch, sqdist_to_all};
+
+use std::sync::OnceLock;
+
+/// One dispatchable set of distance kernels.
+#[derive(Clone, Copy)]
+pub struct KernelSet {
+    /// Variant name (`scalar`, `sse2`, `avx2`, `neon`).
+    pub name: &'static str,
+    /// Squared Euclidean distance of two equal-length vectors.
+    pub sqdist: fn(&[f32], &[f32]) -> f32,
+    /// Squared distance with early exit once the partial sum exceeds
+    /// `bound` (checked every 32 lanes). The return value is exact when
+    /// `<= bound`; otherwise it is some partial sum `> bound` (and never
+    /// greater than the true distance).
+    pub sqdist_bounded: fn(&[f32], &[f32], f32) -> f32,
+    /// Dot product of two equal-length vectors.
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// One query against 4 contiguous rows: `rows` holds 4 back-to-back
+    /// `d`-length vectors (`rows.len() >= 4 * d`). Returns the 4 squared
+    /// distances. Amortizes query loads across candidates.
+    pub sqdist_x4: fn(&[f32], &[f32], usize) -> [f32; 4],
+}
+
+/// The portable scalar reference kernels (always available).
+pub static SCALAR: KernelSet = KernelSet {
+    name: "scalar",
+    sqdist: scalar::sqdist,
+    sqdist_bounded: scalar::sqdist_bounded,
+    dot: scalar::dot,
+    sqdist_x4: scalar::sqdist_x4,
+};
+
+/// Every kernel variant usable on this machine, scalar first. Used by
+/// the parity tests and the kernel micro-benchmarks.
+pub fn available() -> Vec<&'static KernelSet> {
+    let mut out: Vec<&'static KernelSet> = vec![&SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("sse2") {
+            out.push(&x86::SSE2);
+        }
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            out.push(&x86::AVX2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        out.push(&neon::NEON);
+    }
+    out
+}
+
+// The trailing `&SCALAR` is unreachable on aarch64 (NEON always wins).
+#[allow(unreachable_code)]
+fn best_available() -> &'static KernelSet {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return &x86::AVX2;
+        }
+        if std::arch::is_x86_feature_detected!("sse2") {
+            return &x86::SSE2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return &neon::NEON;
+    }
+    &SCALAR
+}
+
+fn detect() -> &'static KernelSet {
+    if let Ok(requested) = std::env::var("LARGEVIS_KERNEL") {
+        if requested != "auto" && !requested.is_empty() {
+            if let Some(k) = available().into_iter().find(|k| k.name == requested) {
+                return k;
+            }
+            eprintln!(
+                "[kernels] LARGEVIS_KERNEL={requested:?} not available on this CPU; using auto"
+            );
+        }
+    }
+    best_available()
+}
+
+static ACTIVE: OnceLock<&'static KernelSet> = OnceLock::new();
+
+/// The process-wide active kernel set (detected once, see module docs).
+#[inline]
+pub fn active() -> &'static KernelSet {
+    *ACTIVE.get_or_init(detect)
+}
+
+/// Below this length the dispatched wrappers skip the indirect call
+/// and inline the scalar reference: for 2–3-d layout rows (objective
+/// evaluation, incremental SGD) the OnceLock load + fn-pointer call
+/// would cost more than the arithmetic, and one SIMD iteration needs
+/// ≥ 8 (AVX2) / 4 (SSE2, NEON) lanes to pay for itself anyway.
+const SMALL_DIM: usize = 16;
+
+/// Squared Euclidean distance between two equal-length vectors
+/// (dispatched; the single hottest function in KNN construction).
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    if a.len() < SMALL_DIM {
+        return scalar::sqdist(a, b);
+    }
+    (active().sqdist)(a, b)
+}
+
+/// Squared distance with early exit: returns a value `> bound` as soon
+/// as the partial sum exceeds `bound` (checked every 32 lanes); exact
+/// when the result is `<= bound`.
+///
+/// The KNN inner loops compare candidates against a bounded heap's
+/// current worst distance; at d=784 most candidates exceed it within
+/// the first blocks, so bailing early is a large win (§Perf).
+#[inline]
+pub fn sqdist_bounded(a: &[f32], b: &[f32], bound: f32) -> f32 {
+    if a.len() < SMALL_DIM {
+        return scalar::sqdist_bounded(a, b, bound);
+    }
+    (active().sqdist_bounded)(a, b, bound)
+}
+
+/// Dot product (dispatched).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    if a.len() < SMALL_DIM {
+        return scalar::dot(a, b);
+    }
+    (active().dot)(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_always_listed_first() {
+        let ks = available();
+        assert!(!ks.is_empty());
+        assert_eq!(ks[0].name, "scalar");
+        // Names are unique.
+        let names: std::collections::HashSet<&str> = ks.iter().map(|k| k.name).collect();
+        assert_eq!(names.len(), ks.len());
+    }
+
+    #[test]
+    fn active_is_available() {
+        let act = active();
+        assert!(available().iter().any(|k| k.name == act.name));
+    }
+
+    #[test]
+    fn dispatched_wrappers_match_scalar() {
+        let a: Vec<f32> = (0..97).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..97).map(|i| (i as f32 * 0.71).cos()).collect();
+        let tol = 1e-4 * (1.0 + scalar::sqdist(&a, &b).abs());
+        assert!((sqdist(&a, &b) - scalar::sqdist(&a, &b)).abs() < tol);
+        assert!((dot(&a, &b) - scalar::dot(&a, &b)).abs() < tol);
+        assert!((sqdist_bounded(&a, &b, f32::INFINITY) - scalar::sqdist(&a, &b)).abs() < tol);
+    }
+}

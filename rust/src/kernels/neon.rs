@@ -1,0 +1,170 @@
+//! aarch64 NEON kernels (4-wide FMA). NEON is mandatory in the aarch64
+//! baseline ISA, so no runtime detection is needed — the dispatcher
+//! selects this set unconditionally on aarch64.
+
+use super::KernelSet;
+use std::arch::aarch64::*;
+
+/// NEON kernel set (always available on aarch64).
+pub static NEON: KernelSet = KernelSet {
+    name: "neon",
+    sqdist: sqdist_neon,
+    sqdist_bounded: sqdist_bounded_neon,
+    dot: dot_neon,
+    sqdist_x4: sqdist_x4_neon,
+};
+
+fn sqdist_neon(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    // SAFETY: NEON is part of the aarch64 baseline ISA.
+    unsafe { sqdist_neon_impl(a, b) }
+}
+
+fn sqdist_bounded_neon(a: &[f32], b: &[f32], bound: f32) -> f32 {
+    assert_eq!(a.len(), b.len());
+    // SAFETY: NEON is part of the aarch64 baseline ISA.
+    unsafe { sqdist_bounded_neon_impl(a, b, bound) }
+}
+
+fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    // SAFETY: NEON is part of the aarch64 baseline ISA.
+    unsafe { dot_neon_impl(a, b) }
+}
+
+fn sqdist_x4_neon(q: &[f32], rows: &[f32], d: usize) -> [f32; 4] {
+    assert!(q.len() == d && rows.len() >= 4 * d);
+    // SAFETY: NEON is part of the aarch64 baseline ISA.
+    unsafe { sqdist_x4_neon_impl(q, rows, d) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn sqdist_neon_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let d0 = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        acc0 = vfmaq_f32(acc0, d0, d0);
+        let d1 = vsubq_f32(vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+        acc1 = vfmaq_f32(acc1, d1, d1);
+        i += 8;
+    }
+    if i + 4 <= n {
+        let d = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        acc0 = vfmaq_f32(acc0, d, d);
+        i += 4;
+    }
+    let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+    while i < n {
+        let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+        s += d * d;
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn sqdist_bounded_neon_impl(a: &[f32], b: &[f32], bound: f32) -> f32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut s = 0f32;
+    let mut i = 0usize;
+    // Same 32-lane early-exit blocking as the scalar reference.
+    while i + 32 <= n {
+        let mut acc = vdupq_n_f32(0.0);
+        for c in 0..8 {
+            let d = vsubq_f32(vld1q_f32(pa.add(i + c * 4)), vld1q_f32(pb.add(i + c * 4)));
+            acc = vfmaq_f32(acc, d, d);
+        }
+        s += vaddvq_f32(acc);
+        i += 32;
+        if s > bound {
+            return s;
+        }
+    }
+    while i + 4 <= n {
+        let d = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        s += vaddvq_f32(vmulq_f32(d, d));
+        i += 4;
+    }
+    while i < n {
+        let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+        s += d * d;
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+        i += 8;
+    }
+    if i + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        i += 4;
+    }
+    let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+    while i < n {
+        s += *a.get_unchecked(i) * *b.get_unchecked(i);
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn sqdist_x4_neon_impl(q: &[f32], rows: &[f32], d: usize) -> [f32; 4] {
+    let pq = q.as_ptr();
+    let pr = rows.as_ptr();
+    let mut acc = [vdupq_n_f32(0.0); 4];
+    let mut i = 0usize;
+    while i + 4 <= d {
+        // One query load amortized across the 4 candidate rows.
+        let vq = vld1q_f32(pq.add(i));
+        for (r, a) in acc.iter_mut().enumerate() {
+            let diff = vsubq_f32(vq, vld1q_f32(pr.add(r * d + i)));
+            *a = vfmaq_f32(*a, diff, diff);
+        }
+        i += 4;
+    }
+    let mut out = [vaddvq_f32(acc[0]), vaddvq_f32(acc[1]), vaddvq_f32(acc[2]), vaddvq_f32(acc[3])];
+    while i < d {
+        let qv = *q.get_unchecked(i);
+        for (r, o) in out.iter_mut().enumerate() {
+            let dv = qv - *rows.get_unchecked(r * d + i);
+            *o += dv * dv;
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scalar;
+    use super::*;
+
+    #[test]
+    fn neon_matches_scalar_spot_check() {
+        for d in [1usize, 3, 4, 7, 8, 31, 33, 100] {
+            let a: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin() * 2.0).collect();
+            let b: Vec<f32> = (0..d).map(|i| (i as f32 * 0.53).cos() * 2.0).collect();
+            let want = scalar::sqdist(&a, &b);
+            let got = (NEON.sqdist)(&a, &b);
+            assert!((got - want).abs() < 1e-4 * (1.0 + want), "d={d}: {got} vs {want}");
+        }
+    }
+}

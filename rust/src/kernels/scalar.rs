@@ -1,0 +1,142 @@
+//! Portable scalar reference kernels: 4-lane unrolled loops the
+//! compiler auto-vectorizes. Always available on every target, and the
+//! correctness baseline every SIMD variant is property-tested against
+//! (`rust/tests/kernel_parity.rs`).
+
+/// Squared Euclidean distance between two equal-length vectors.
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Squared distance with early exit: returns a value `> bound` as soon
+/// as the partial sum exceeds `bound` (checked every 32 lanes).
+#[inline]
+pub fn sqdist_bounded(a: &[f32], b: &[f32], bound: f32) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut s = 0f32;
+    let mut i = 0;
+    while i + 32 <= n {
+        let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+        for c in 0..8 {
+            let base = i + c * 4;
+            let d0 = a[base] - b[base];
+            let d1 = a[base + 1] - b[base + 1];
+            let d2 = a[base + 2] - b[base + 2];
+            let d3 = a[base + 3] - b[base + 3];
+            s0 += d0 * d0;
+            s1 += d1 * d1;
+            s2 += d2 * d2;
+            s3 += d3 * d3;
+        }
+        s += s0 + s1 + s2 + s3;
+        i += 32;
+        if s > bound {
+            return s;
+        }
+    }
+    for k in i..n {
+        let d = a[k] - b[k];
+        s += d * d;
+    }
+    s
+}
+
+/// Dot product (same unrolling as [`sqdist`]).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// One query against 4 contiguous `d`-length rows (`rows.len() >= 4*d`).
+#[inline]
+pub fn sqdist_x4(q: &[f32], rows: &[f32], d: usize) -> [f32; 4] {
+    debug_assert!(q.len() == d && rows.len() >= 4 * d);
+    [
+        sqdist(q, &rows[..d]),
+        sqdist(q, &rows[d..2 * d]),
+        sqdist(q, &rows[2 * d..3 * d]),
+        sqdist(q, &rows[3 * d..4 * d]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_sqdist(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    #[test]
+    fn sqdist_matches_naive_all_small_dims() {
+        for d in 0..70usize {
+            let a: Vec<f32> = (0..d).map(|i| (i as f32 * 0.31).sin()).collect();
+            let b: Vec<f32> = (0..d).map(|i| (i as f32 * 0.17).cos()).collect();
+            let naive = naive_sqdist(&a, &b);
+            assert!((sqdist(&a, &b) - naive).abs() < 1e-4 * (1.0 + naive), "d={d}");
+            assert!(
+                (sqdist_bounded(&a, &b, f32::INFINITY) - naive).abs() < 1e-4 * (1.0 + naive),
+                "d={d}"
+            );
+        }
+    }
+
+    #[test]
+    fn bounded_early_exit_exceeds_bound() {
+        let a = vec![0f32; 100];
+        let b = vec![1f32; 100];
+        // True distance 100; a tiny bound must make it exit early with
+        // a partial sum that still exceeds the bound.
+        let got = sqdist_bounded(&a, &b, 0.5);
+        assert!(got > 0.5 && got <= 100.0);
+    }
+
+    #[test]
+    fn x4_matches_individual_rows() {
+        let d = 13;
+        let q: Vec<f32> = (0..d).map(|i| i as f32 * 0.2).collect();
+        let rows: Vec<f32> = (0..4 * d).map(|i| (i as f32 * 0.11).sin()).collect();
+        let got = sqdist_x4(&q, &rows, d);
+        for r in 0..4 {
+            let want = sqdist(&q, &rows[r * d..(r + 1) * d]);
+            assert_eq!(got[r], want, "row {r}");
+        }
+    }
+}

@@ -1,0 +1,375 @@
+//! x86-64 SIMD kernels: AVX2+FMA (8-wide, two accumulators) and SSE2
+//! (4-wide; guaranteed by the x86-64 baseline ISA).
+//!
+//! Safety model: every public function here is a safe `fn` whose body
+//! enters a `#[target_feature]` implementation. The dispatcher
+//! ([`super::available`] / [`super::best_available`]) only hands out
+//! these [`super::KernelSet`]s after `is_x86_feature_detected!`
+//! confirms the features, so the `unsafe` entry is sound. Do not call
+//! the AVX2 set directly on unverified hardware — go through
+//! `kernels::active()` or `kernels::available()`.
+
+use super::KernelSet;
+use std::arch::x86_64::*;
+
+/// AVX2 + FMA kernel set (8-wide).
+pub static AVX2: KernelSet = KernelSet {
+    name: "avx2",
+    sqdist: sqdist_avx2,
+    sqdist_bounded: sqdist_bounded_avx2,
+    dot: dot_avx2,
+    sqdist_x4: sqdist_x4_avx2,
+};
+
+/// SSE2 kernel set (4-wide, always present on x86-64).
+pub static SSE2: KernelSet = KernelSet {
+    name: "sse2",
+    sqdist: sqdist_sse2,
+    sqdist_bounded: sqdist_bounded_sse2,
+    dot: dot_sse2,
+    sqdist_x4: sqdist_x4_sse2,
+};
+
+// ---------------------------------------------------------------- AVX2
+
+fn sqdist_avx2(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    // SAFETY: only dispatched after avx2+fma detection (module docs).
+    unsafe { sqdist_avx2_impl(a, b) }
+}
+
+fn sqdist_bounded_avx2(a: &[f32], b: &[f32], bound: f32) -> f32 {
+    assert_eq!(a.len(), b.len());
+    // SAFETY: only dispatched after avx2+fma detection (module docs).
+    unsafe { sqdist_bounded_avx2_impl(a, b, bound) }
+}
+
+fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    // SAFETY: only dispatched after avx2+fma detection (module docs).
+    unsafe { dot_avx2_impl(a, b) }
+}
+
+fn sqdist_x4_avx2(q: &[f32], rows: &[f32], d: usize) -> [f32; 4] {
+    assert!(q.len() == d && rows.len() >= 4 * d);
+    // SAFETY: only dispatched after avx2+fma detection (module docs).
+    unsafe { sqdist_x4_avx2_impl(q, rows, d) }
+}
+
+// `__m256` by-value needs the avx ABI; annotating keeps the call sites
+// (all avx2+fma) inlining-compatible and silences the vector-ABI lint.
+#[inline]
+#[target_feature(enable = "avx")]
+unsafe fn hsum256(v: __m256) -> f32 {
+    let mut lanes = [0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+    ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+        + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]))
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn sqdist_avx2_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+        acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+        let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
+        acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+        i += 16;
+    }
+    if i + 8 <= n {
+        let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+        acc0 = _mm256_fmadd_ps(d, d, acc0);
+        i += 8;
+    }
+    let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+        s += d * d;
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn sqdist_bounded_avx2_impl(a: &[f32], b: &[f32], bound: f32) -> f32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut s = 0f32;
+    let mut i = 0usize;
+    // Same 32-lane early-exit blocking as the scalar reference.
+    while i + 32 <= n {
+        let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+        let mut acc = _mm256_mul_ps(d0, d0);
+        let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
+        acc = _mm256_fmadd_ps(d1, d1, acc);
+        let d2 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 16)), _mm256_loadu_ps(pb.add(i + 16)));
+        acc = _mm256_fmadd_ps(d2, d2, acc);
+        let d3 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 24)), _mm256_loadu_ps(pb.add(i + 24)));
+        acc = _mm256_fmadd_ps(d3, d3, acc);
+        s += hsum256(acc);
+        i += 32;
+        if s > bound {
+            return s;
+        }
+    }
+    while i + 8 <= n {
+        let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+        s += hsum256(_mm256_mul_ps(d, d));
+        i += 8;
+    }
+    while i < n {
+        let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+        s += d * d;
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_avx2_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+        acc1 =
+            _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)), acc1);
+        i += 16;
+    }
+    if i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+        i += 8;
+    }
+    let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        s += *a.get_unchecked(i) * *b.get_unchecked(i);
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn sqdist_x4_avx2_impl(q: &[f32], rows: &[f32], d: usize) -> [f32; 4] {
+    let pq = q.as_ptr();
+    let pr = rows.as_ptr();
+    let mut acc = [_mm256_setzero_ps(); 4];
+    let mut i = 0usize;
+    while i + 8 <= d {
+        // One query load amortized across the 4 candidate rows.
+        let vq = _mm256_loadu_ps(pq.add(i));
+        for (r, a) in acc.iter_mut().enumerate() {
+            let diff = _mm256_sub_ps(vq, _mm256_loadu_ps(pr.add(r * d + i)));
+            *a = _mm256_fmadd_ps(diff, diff, *a);
+        }
+        i += 8;
+    }
+    let mut out = [hsum256(acc[0]), hsum256(acc[1]), hsum256(acc[2]), hsum256(acc[3])];
+    while i < d {
+        let qv = *q.get_unchecked(i);
+        for (r, o) in out.iter_mut().enumerate() {
+            let dv = qv - *rows.get_unchecked(r * d + i);
+            *o += dv * dv;
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------- SSE2
+
+fn sqdist_sse2(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    // SAFETY: SSE2 is part of the x86-64 baseline ISA.
+    unsafe { sqdist_sse2_impl(a, b) }
+}
+
+fn sqdist_bounded_sse2(a: &[f32], b: &[f32], bound: f32) -> f32 {
+    assert_eq!(a.len(), b.len());
+    // SAFETY: SSE2 is part of the x86-64 baseline ISA.
+    unsafe { sqdist_bounded_sse2_impl(a, b, bound) }
+}
+
+fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    // SAFETY: SSE2 is part of the x86-64 baseline ISA.
+    unsafe { dot_sse2_impl(a, b) }
+}
+
+fn sqdist_x4_sse2(q: &[f32], rows: &[f32], d: usize) -> [f32; 4] {
+    assert!(q.len() == d && rows.len() >= 4 * d);
+    // SAFETY: SSE2 is part of the x86-64 baseline ISA.
+    unsafe { sqdist_x4_sse2_impl(q, rows, d) }
+}
+
+#[inline]
+unsafe fn hsum128(v: __m128) -> f32 {
+    let mut lanes = [0f32; 4];
+    _mm_storeu_ps(lanes.as_mut_ptr(), v);
+    (lanes[0] + lanes[2]) + (lanes[1] + lanes[3])
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn sqdist_sse2_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc0 = _mm_setzero_ps();
+    let mut acc1 = _mm_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let d0 = _mm_sub_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i)));
+        acc0 = _mm_add_ps(acc0, _mm_mul_ps(d0, d0));
+        let d1 = _mm_sub_ps(_mm_loadu_ps(pa.add(i + 4)), _mm_loadu_ps(pb.add(i + 4)));
+        acc1 = _mm_add_ps(acc1, _mm_mul_ps(d1, d1));
+        i += 8;
+    }
+    if i + 4 <= n {
+        let d = _mm_sub_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i)));
+        acc0 = _mm_add_ps(acc0, _mm_mul_ps(d, d));
+        i += 4;
+    }
+    let mut s = hsum128(_mm_add_ps(acc0, acc1));
+    while i < n {
+        let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+        s += d * d;
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn sqdist_bounded_sse2_impl(a: &[f32], b: &[f32], bound: f32) -> f32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut s = 0f32;
+    let mut i = 0usize;
+    // Same 32-lane early-exit blocking as the scalar reference.
+    while i + 32 <= n {
+        let mut acc = _mm_setzero_ps();
+        for c in 0..8 {
+            let d = _mm_sub_ps(_mm_loadu_ps(pa.add(i + c * 4)), _mm_loadu_ps(pb.add(i + c * 4)));
+            acc = _mm_add_ps(acc, _mm_mul_ps(d, d));
+        }
+        s += hsum128(acc);
+        i += 32;
+        if s > bound {
+            return s;
+        }
+    }
+    while i + 4 <= n {
+        let d = _mm_sub_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i)));
+        s += hsum128(_mm_mul_ps(d, d));
+        i += 4;
+    }
+    while i < n {
+        let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+        s += d * d;
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn dot_sse2_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc0 = _mm_setzero_ps();
+    let mut acc1 = _mm_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i))));
+        acc1 = _mm_add_ps(
+            acc1,
+            _mm_mul_ps(_mm_loadu_ps(pa.add(i + 4)), _mm_loadu_ps(pb.add(i + 4))),
+        );
+        i += 8;
+    }
+    if i + 4 <= n {
+        acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i))));
+        i += 4;
+    }
+    let mut s = hsum128(_mm_add_ps(acc0, acc1));
+    while i < n {
+        s += *a.get_unchecked(i) * *b.get_unchecked(i);
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "sse2")]
+unsafe fn sqdist_x4_sse2_impl(q: &[f32], rows: &[f32], d: usize) -> [f32; 4] {
+    let pq = q.as_ptr();
+    let pr = rows.as_ptr();
+    let mut acc = [_mm_setzero_ps(); 4];
+    let mut i = 0usize;
+    while i + 4 <= d {
+        let vq = _mm_loadu_ps(pq.add(i));
+        for (r, a) in acc.iter_mut().enumerate() {
+            let diff = _mm_sub_ps(vq, _mm_loadu_ps(pr.add(r * d + i)));
+            *a = _mm_add_ps(*a, _mm_mul_ps(diff, diff));
+        }
+        i += 4;
+    }
+    let mut out = [hsum128(acc[0]), hsum128(acc[1]), hsum128(acc[2]), hsum128(acc[3])];
+    while i < d {
+        let qv = *q.get_unchecked(i);
+        for (r, o) in out.iter_mut().enumerate() {
+            let dv = qv - *rows.get_unchecked(r * d + i);
+            *o += dv * dv;
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scalar;
+    use super::*;
+
+    fn vecs(d: usize) -> (Vec<f32>, Vec<f32>) {
+        let a: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin() * 2.0).collect();
+        let b: Vec<f32> = (0..d).map(|i| (i as f32 * 0.53).cos() * 2.0).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn sse2_matches_scalar_spot_check() {
+        if !std::arch::is_x86_feature_detected!("sse2") {
+            return;
+        }
+        for d in [1usize, 3, 4, 7, 8, 31, 33, 100] {
+            let (a, b) = vecs(d);
+            let want = scalar::sqdist(&a, &b);
+            let got = (SSE2.sqdist)(&a, &b);
+            assert!((got - want).abs() < 1e-4 * (1.0 + want), "d={d}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn avx2_matches_scalar_spot_check() {
+        if !(std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"))
+        {
+            return;
+        }
+        for d in [1usize, 7, 8, 15, 16, 17, 31, 33, 200] {
+            let (a, b) = vecs(d);
+            let want = scalar::sqdist(&a, &b);
+            let got = (AVX2.sqdist)(&a, &b);
+            assert!((got - want).abs() < 1e-4 * (1.0 + want), "d={d}: {got} vs {want}");
+        }
+    }
+}

@@ -1,9 +1,17 @@
-//! Exact KNN by blocked brute force — O(N²d), parallel over query
-//! chunks. Used as ground truth for recall curves (Figs 2–3) and as the
-//! exact path on small inputs. The blocked inner loop is also the shape
-//! the `pdist` XLA artifact accelerates (see `vis::batched`).
+//! Exact KNN by brute force — O(N²d), parallel over query chunks. Used
+//! as ground truth for recall curves (Figs 2–3) and as the exact path
+//! on small inputs. The blocked inner loop is also the shape the
+//! `pdist` XLA artifact accelerates (see `vis::batched`).
+//!
+//! This scan is the one place where the bounded early-exit kernel beats
+//! the batched gather kernel: the heap fills within the first K rows
+//! and from then on most of the N candidates exceed the threshold
+//! within the first 32-lane blocks, so [`kernels::sqdist_bounded`]
+//! (SIMD inside each block, exit between blocks) skips the bulk of the
+//! d=784 lanes that a full batched evaluation would compute.
 
 use crate::data::matrix::Matrix;
+use crate::kernels;
 use crate::knn::KnnGraph;
 use crate::util::heap::BoundedMaxHeap;
 use crate::util::pool;
@@ -16,6 +24,10 @@ pub fn exact_knn(data: &Matrix, k: usize, threads: usize) -> KnnGraph {
 }
 
 /// Exact K nearest neighbors for the given query ids only.
+///
+/// Kept distances are always exact (the early exit only short-circuits
+/// candidates that are already over the heap threshold), so the result
+/// matches a full per-pair scan of the same kernel variant.
 pub fn exact_knn_for(
     data: &Matrix,
     queries: &[usize],
@@ -23,22 +35,28 @@ pub fn exact_knn_for(
     threads: usize,
 ) -> Vec<Vec<(u32, f32)>> {
     let threads = if threads == 0 { pool::default_threads() } else { threads };
-    pool::parallel_map(queries.len(), threads, |qi| {
-        let q = queries[qi];
-        let qrow = data.row(q);
-        let mut heap = BoundedMaxHeap::new(k);
-        for j in 0..data.n() {
-            if j == q {
-                continue;
+    let n = data.n();
+    pool::parallel_map_with(
+        queries.len(),
+        threads,
+        |_worker| BoundedMaxHeap::new(k),
+        |heap, qi| {
+            let q = queries[qi];
+            let qrow = data.row(q);
+            heap.reset(k);
+            for j in 0..n {
+                if j == q {
+                    continue;
+                }
+                let bound = heap.threshold();
+                let d = kernels::sqdist_bounded(qrow, data.row(j), bound);
+                if d < bound {
+                    heap.push(j as u32, d, false);
+                }
             }
-            let bound = heap.threshold();
-            let d = crate::data::matrix::sqdist_bounded(qrow, data.row(j), bound);
-            if d < bound {
-                heap.push(j as u32, d, false);
-            }
-        }
-        heap.into_sorted().iter().map(|c| (c.id, c.dist)).collect()
-    })
+            heap.drain_sorted_pairs()
+        },
+    )
 }
 
 #[cfg(test)]

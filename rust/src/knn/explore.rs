@@ -5,9 +5,9 @@
 //! fraction of the cost of building more trees (Figs 2–3).
 
 use crate::data::matrix::Matrix;
+use crate::kernels;
 use crate::knn::rptree::{rp_forest_knn, RpForestConfig};
-use crate::knn::KnnGraph;
-use crate::util::heap::BoundedMaxHeap;
+use crate::knn::{KnnGraph, ScanScratch};
 use crate::util::pool;
 
 /// LargeVis KNN configuration: a small forest + exploring iterations.
@@ -36,42 +36,55 @@ impl Default for LargeVisKnnConfig {
 
 /// One neighbor-exploring pass: for every node i, evaluate neighbors of
 /// its current neighbors and keep the best K. Returns the refined graph.
+///
+/// Dedup matters: in dense regions the same candidate appears in many
+/// neighbor lists, and distance evaluations dominate at high d (§Perf).
+/// Distinct candidates are collected first, then evaluated in one
+/// batched SIMD pass ([`kernels::sqdist_batch`]). The per-worker
+/// [`ScanScratch`] (visited set, heap, buffers) is reused across every
+/// node a worker processes, so the hot loop performs **zero per-node
+/// heap allocation** — the only allocation left is the returned
+/// neighbor list itself, which the output graph owns.
 pub fn explore_once(data: &Matrix, graph: &KnnGraph, cfg: &LargeVisKnnConfig) -> KnnGraph {
     let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
     let k = graph.k;
-    let neighbors = pool::parallel_map(data.n(), threads, |i| {
-        let q = data.row(i);
-        let mut heap = BoundedMaxHeap::new(k);
-        // Dedup set: in dense regions the same candidate appears in many
-        // neighbor lists; skipping repeats avoids recomputing distances
-        // (the dominant cost at high d — §Perf).
-        let mut seen =
-            std::collections::HashSet::with_capacity(graph.neighbors[i].len() * (k + 1));
-        seen.insert(i as u32);
-        // Seed with current neighbors so quality never regresses.
-        for &(j, d) in &graph.neighbors[i] {
-            heap.push(j, d, false);
-            seen.insert(j);
-        }
-        let mut budget = cfg.max_candidates;
-        'outer: for &(j, _) in &graph.neighbors[i] {
-            for &(l, _) in &graph.neighbors[j as usize] {
-                if !seen.insert(l) {
-                    continue;
-                }
-                if budget == 0 {
-                    break 'outer;
-                }
-                budget -= 1;
-                let bound = heap.threshold();
-                let d = crate::data::matrix::sqdist_bounded(q, data.row(l as usize), bound);
-                if d < bound {
-                    heap.push(l, d, false);
+    let n = data.n();
+    let neighbors = pool::parallel_map_with(
+        n,
+        threads,
+        |_worker| ScanScratch::new(n, k),
+        |s, i| {
+            let q = data.row(i);
+            s.begin(k, i as u32);
+            // Seed with current neighbors so quality never regresses.
+            for &(j, d) in &graph.neighbors[i] {
+                s.heap.push(j, d, false);
+                s.seen.insert(j);
+            }
+            // Collect the distinct neighbor-of-neighbor candidates.
+            let mut budget = cfg.max_candidates;
+            'outer: for &(j, _) in &graph.neighbors[i] {
+                for &(l, _) in &graph.neighbors[j as usize] {
+                    if !s.seen.insert(l) {
+                        continue;
+                    }
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    budget -= 1;
+                    s.cand.push(l);
                 }
             }
-        }
-        heap.into_sorted().iter().map(|c| (c.id, c.dist)).collect::<Vec<_>>()
-    });
+            // One batched SIMD evaluation of the whole candidate set.
+            kernels::sqdist_batch(q, data, &s.cand, &mut s.dist);
+            for (&l, &d) in s.cand.iter().zip(s.dist.iter()) {
+                if d < s.heap.threshold() {
+                    s.heap.push(l, d, false);
+                }
+            }
+            s.heap.drain_sorted_pairs()
+        },
+    );
     KnnGraph { neighbors, k }
 }
 

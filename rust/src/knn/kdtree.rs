@@ -8,6 +8,7 @@
 //! approximate mode (same knob as our vp-tree baseline).
 
 use crate::data::matrix::Matrix;
+use crate::kernels;
 use crate::knn::KnnGraph;
 use crate::util::heap::BoundedMaxHeap;
 use crate::util::pool;
@@ -114,11 +115,30 @@ impl KdTree {
         max_visits: usize,
     ) -> Vec<(u32, f32)> {
         let mut heap = BoundedMaxHeap::new(k);
-        let mut visits = 0usize;
-        self.search(data, q, self_id, 0, &mut heap, &mut visits, max_visits);
-        heap.into_sorted().iter().map(|c| (c.id, c.dist)).collect()
+        let mut dist = Vec::new();
+        self.knn_with(data, q, self_id, k, max_visits, &mut heap, &mut dist)
     }
 
+    /// [`KdTree::knn`] with caller-provided scratch (heap + distance
+    /// buffer), for allocation-free per-worker reuse.
+    #[allow(clippy::too_many_arguments)]
+    pub fn knn_with(
+        &self,
+        data: &Matrix,
+        q: &[f32],
+        self_id: Option<u32>,
+        k: usize,
+        max_visits: usize,
+        heap: &mut BoundedMaxHeap,
+        dist: &mut Vec<f32>,
+    ) -> Vec<(u32, f32)> {
+        heap.reset(k);
+        let mut visits = 0usize;
+        self.search(data, q, self_id, 0, heap, dist, &mut visits, max_visits);
+        heap.drain_sorted_pairs()
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn search(
         &self,
         data: &Matrix,
@@ -126,6 +146,7 @@ impl KdTree {
         self_id: Option<u32>,
         node: u32,
         heap: &mut BoundedMaxHeap,
+        dist: &mut Vec<f32>,
         visits: &mut usize,
         max_visits: usize,
     ) {
@@ -135,24 +156,27 @@ impl KdTree {
         *visits += 1;
         match &self.nodes[node as usize] {
             Node::Leaf { start, len } => {
-                for &p in &self.points[*start as usize..(*start + *len) as usize] {
+                // Whole-bucket batched SIMD scan; the query's own row
+                // (present in exactly one leaf) is skipped by id.
+                let pts = &self.points[*start as usize..(*start + *len) as usize];
+                kernels::sqdist_batch(q, data, pts, dist);
+                for (&p, &d) in pts.iter().zip(dist.iter()) {
                     if Some(p) == self_id {
                         continue;
                     }
-                    let dist = crate::data::matrix::sqdist(q, data.row(p as usize));
-                    if dist < heap.threshold() {
-                        heap.push(p, dist, false);
+                    if d < heap.threshold() {
+                        heap.push(p, d, false);
                     }
                 }
             }
             Node::Split { axis, value, left, right } => {
                 let diff = q[*axis as usize] - value;
                 let (near, far) = if diff < 0.0 { (*left, *right) } else { (*right, *left) };
-                self.search(data, q, self_id, near, heap, visits, max_visits);
+                self.search(data, q, self_id, near, heap, dist, visits, max_visits);
                 // Prune the far side iff the splitting plane is farther
                 // than the current worst kept distance.
                 if diff * diff < heap.threshold() {
-                    self.search(data, q, self_id, far, heap, visits, max_visits);
+                    self.search(data, q, self_id, far, heap, dist, visits, max_visits);
                 }
             }
         }
@@ -163,9 +187,14 @@ impl KdTree {
 pub fn kd_tree_knn(data: &Matrix, k: usize, cfg: &KdTreeConfig) -> KnnGraph {
     let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
     let tree = KdTree::build(data, cfg.leaf_size);
-    let neighbors = pool::parallel_map(data.n(), threads, |i| {
-        tree.knn(data, data.row(i), Some(i as u32), k, cfg.max_visits)
-    });
+    let neighbors = pool::parallel_map_with(
+        data.n(),
+        threads,
+        |_worker| (BoundedMaxHeap::new(k), Vec::<f32>::new()),
+        |(heap, dist), i| {
+            tree.knn_with(data, data.row(i), Some(i as u32), k, cfg.max_visits, heap, dist)
+        },
+    );
     KnnGraph { neighbors, k }
 }
 

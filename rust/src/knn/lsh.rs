@@ -6,9 +6,9 @@
 //! `h(x) = floor((a·x + b) / w)`. Candidates are points sharing a
 //! bucket in any table; recall grows with `L` at linear memory cost.
 
-use crate::data::matrix::{dot, sqdist, Matrix};
-use crate::knn::KnnGraph;
-use crate::util::heap::BoundedMaxHeap;
+use crate::data::matrix::Matrix;
+use crate::kernels::{self, dot, sqdist};
+use crate::knn::{KnnGraph, ScanScratch};
 use crate::util::pool;
 use crate::util::rng::Rng;
 
@@ -117,25 +117,34 @@ pub fn lsh_knn(data: &Matrix, k: usize, cfg: &LshConfig) -> KnnGraph {
         }
     }
 
-    // Query: union of buckets across tables.
-    let neighbors = pool::parallel_map(n, threads, |i| {
-        let q = data.row(i);
-        let mut heap = BoundedMaxHeap::new(k);
-        for table in &tables {
-            if let Some(bucket) = table.buckets.get(&table.key(q)) {
-                for &cand in bucket {
-                    if cand as usize == i {
-                        continue;
-                    }
-                    let dist = sqdist(q, data.row(cand as usize));
-                    if dist < heap.threshold() {
-                        heap.push(cand, dist, false);
+    // Query: union of buckets across tables, deduped (the query's own
+    // row and cross-table repeats are skipped *before* paying for a
+    // distance), then one batched SIMD pass over the distinct set.
+    let neighbors = pool::parallel_map_with(
+        n,
+        threads,
+        |_worker| ScanScratch::new(n, k),
+        |s, i| {
+            let q = data.row(i);
+            s.begin(k, i as u32);
+            for table in &tables {
+                if let Some(bucket) = table.buckets.get(&table.key(q)) {
+                    for &cand in bucket {
+                        if s.seen.insert(cand) {
+                            s.cand.push(cand);
+                        }
                     }
                 }
             }
-        }
-        heap.into_sorted().iter().map(|c| (c.id, c.dist)).collect::<Vec<_>>()
-    });
+            kernels::sqdist_batch(q, data, &s.cand, &mut s.dist);
+            for (&cand, &d) in s.cand.iter().zip(s.dist.iter()) {
+                if d < s.heap.threshold() {
+                    s.heap.push(cand, d, false);
+                }
+            }
+            s.heap.drain_sorted_pairs()
+        },
+    );
     KnnGraph { neighbors, k }
 }
 

@@ -15,6 +15,46 @@ pub mod nndescent;
 pub mod explore;
 
 use crate::data::matrix::Matrix;
+use crate::util::heap::BoundedMaxHeap;
+use crate::util::visited::VisitedSet;
+
+/// Shared per-worker scratch for the batched KNN scan loops (neighbor
+/// exploring, RP-forest queries, LSH buckets): a visited set for
+/// candidate dedup, the K-best heap, and the candidate-id / distance
+/// buffers fed to [`crate::kernels::sqdist_batch`]. Built once per
+/// worker via `pool::parallel_map_with` and reused for every node, so
+/// the hot loops perform no per-node heap allocation.
+pub(crate) struct ScanScratch {
+    /// Epoch-stamped dedup set over point ids `0..n`.
+    pub seen: VisitedSet,
+    /// Bounded K-best heap, reset per query.
+    pub heap: BoundedMaxHeap,
+    /// Distinct candidate ids for the batched kernel.
+    pub cand: Vec<u32>,
+    /// Batched squared distances, aligned with `cand`.
+    pub dist: Vec<f32>,
+}
+
+impl ScanScratch {
+    /// Scratch for a dataset of `n` points and `k` neighbors.
+    pub fn new(n: usize, k: usize) -> Self {
+        ScanScratch {
+            seen: VisitedSet::new(n),
+            heap: BoundedMaxHeap::new(k),
+            cand: Vec::new(),
+            dist: Vec::new(),
+        }
+    }
+
+    /// Start a new query: empty heap of capacity `k`, fresh visited
+    /// generation with the query itself marked, cleared candidates.
+    pub fn begin(&mut self, k: usize, query_id: u32) {
+        self.heap.reset(k);
+        self.seen.clear();
+        self.seen.insert(query_id);
+        self.cand.clear();
+    }
+}
 
 /// A (possibly approximate) K-nearest-neighbor graph: for each point,
 /// up to K neighbors sorted ascending by squared distance.

@@ -7,7 +7,8 @@
 //! dimension, slower to converge at high dimension — the gap the paper
 //! exploits.
 
-use crate::data::matrix::{sqdist, Matrix};
+use crate::data::matrix::Matrix;
+use crate::kernels::{self, sqdist};
 use crate::knn::KnnGraph;
 use crate::util::heap::BoundedMaxHeap;
 use crate::util::pool;
@@ -106,34 +107,42 @@ pub fn nn_descent(data: &Matrix, k: usize, cfg: &NnDescentConfig) -> KnnGraph {
         // Local join: candidates of node i = new[i] ∪ new_rev[i] joined
         // against (new ∪ old ∪ reverses). Collect updates, then apply —
         // simple two-phase scheme to stay deterministic per iteration.
-        let updates: Vec<Vec<(u32, u32, f32)>> = pool::parallel_map(n, threads, |i| {
-            let mut ups = Vec::new();
-            let mut news: Vec<u32> = new_fwd[i].clone();
-            news.extend_from_slice(&new_rev[i]);
-            let mut olds: Vec<u32> = old_fwd[i].clone();
-            olds.extend_from_slice(&old_rev[i]);
-            news.sort_unstable();
-            news.dedup();
-            olds.sort_unstable();
-            olds.dedup();
-            for (ai, &a) in news.iter().enumerate() {
-                // new-new pairs
-                for &b in news.iter().skip(ai + 1) {
-                    if a != b {
-                        let d = sqdist(data.row(a as usize), data.row(b as usize));
+        // Each anchor `a` evaluates its partners through the batched
+        // SIMD kernel; the id/distance/list buffers are all per-worker
+        // scratch (no per-node allocation beyond the returned updates).
+        let updates: Vec<Vec<(u32, u32, f32)>> = pool::parallel_map_with(
+            n,
+            threads,
+            |_worker| {
+                (Vec::<u32>::new(), Vec::<f32>::new(), Vec::<u32>::new(), Vec::<u32>::new())
+            },
+            |(cand, dist, news, olds), i| {
+                let mut ups = Vec::new();
+                news.clear();
+                news.extend_from_slice(&new_fwd[i]);
+                news.extend_from_slice(&new_rev[i]);
+                olds.clear();
+                olds.extend_from_slice(&old_fwd[i]);
+                olds.extend_from_slice(&old_rev[i]);
+                news.sort_unstable();
+                news.dedup();
+                olds.sort_unstable();
+                olds.dedup();
+                for ai in 0..news.len() {
+                    let a = news[ai];
+                    // new-new partners (news is sorted + deduped, so the
+                    // tail past ai cannot repeat a), then new-old ones.
+                    cand.clear();
+                    cand.extend(news[ai + 1..].iter().copied());
+                    cand.extend(olds.iter().copied().filter(|&b| b != a));
+                    kernels::sqdist_batch(data.row(a as usize), data, cand, dist);
+                    for (&b, &d) in cand.iter().zip(dist.iter()) {
                         ups.push((a, b, d));
                     }
                 }
-                // new-old pairs
-                for &b in &olds {
-                    if a != b {
-                        let d = sqdist(data.row(a as usize), data.row(b as usize));
-                        ups.push((a, b, d));
-                    }
-                }
-            }
-            ups
-        });
+                ups
+            },
+        );
 
         let mut changed = 0usize;
         for ups in &updates {

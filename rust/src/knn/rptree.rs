@@ -8,9 +8,9 @@
 //! `n_trees` at linear cost — the dilemma the paper breaks with
 //! neighbor exploring ([`crate::knn::explore`]).
 
-use crate::data::matrix::{dot, sqdist, Matrix};
-use crate::knn::KnnGraph;
-use crate::util::heap::BoundedMaxHeap;
+use crate::data::matrix::Matrix;
+use crate::kernels::{self, dot, sqdist};
+use crate::knn::{KnnGraph, ScanScratch};
 use crate::util::pool;
 use crate::util::rng::Rng;
 
@@ -207,32 +207,38 @@ pub fn rp_forest_knn(data: &Matrix, k: usize, cfg: &RpForestConfig) -> KnnGraph 
         trees.into_iter().map(|t| t.unwrap()).collect()
     };
 
-    let neighbors = pool::parallel_map(data.n(), threads, |i| {
-        let q = data.row(i);
-        let mut heap = BoundedMaxHeap::new(k);
-        // Dedup candidates repeated across trees/leaves before paying
-        // for a distance computation (§Perf).
-        let mut seen = std::collections::HashSet::with_capacity(
-            cfg.n_trees * cfg.search_leaves.max(1) * cfg.leaf_size,
-        );
-        seen.insert(i as u32);
-        for tree in &trees {
-            tree.search_leaves(q, cfg.search_leaves.max(1), &mut |leaf| {
-                for &cand in leaf {
-                    if !seen.insert(cand) {
-                        continue;
+    // Per-worker scratch reused across every query a worker handles,
+    // so the scan loop allocates nothing per node.
+    let n = data.n();
+    let neighbors = pool::parallel_map_with(
+        n,
+        threads,
+        |_worker| ScanScratch::new(n, k),
+        |s, i| {
+            let q = data.row(i);
+            s.begin(k, i as u32);
+            // Dedup candidates repeated across trees/leaves before
+            // paying for a distance computation (§Perf).
+            let ScanScratch { seen, heap, cand, dist } = s;
+            for tree in &trees {
+                tree.search_leaves(q, cfg.search_leaves.max(1), &mut |leaf| {
+                    for &c in leaf {
+                        if seen.insert(c) {
+                            cand.push(c);
+                        }
                     }
-                    let bound = heap.threshold();
-                    let dist =
-                        crate::data::matrix::sqdist_bounded(q, data.row(cand as usize), bound);
-                    if dist < bound {
-                        heap.push(cand, dist, true);
-                    }
+                });
+            }
+            // Whole candidate set in one batched SIMD pass.
+            kernels::sqdist_batch(q, data, cand, dist);
+            for (&c, &d) in cand.iter().zip(dist.iter()) {
+                if d < heap.threshold() {
+                    heap.push(c, d, true);
                 }
-            });
-        }
-        heap.into_sorted().iter().map(|c| (c.id, c.dist)).collect::<Vec<_>>()
-    });
+            }
+            heap.drain_sorted_pairs()
+        },
+    );
     KnnGraph { neighbors, k }
 }
 

@@ -8,6 +8,7 @@
 //! approximate one, tracing Fig 2's time-vs-recall curve.
 
 use crate::data::matrix::Matrix;
+use crate::kernels;
 use crate::knn::KnnGraph;
 use crate::util::heap::BoundedMaxHeap;
 use crate::util::pool;
@@ -77,7 +78,7 @@ impl VpTree {
         let vrow = data.row(vantage as usize).to_vec();
         let mut dists: Vec<(f32, u32)> = rest
             .iter()
-            .map(|&p| (crate::data::matrix::sqdist(&vrow, data.row(p as usize)).sqrt(), p))
+            .map(|&p| (kernels::sqdist(&vrow, data.row(p as usize)).sqrt(), p))
             .collect();
         let mid = dists.len() / 2;
         dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
@@ -126,7 +127,7 @@ impl VpTree {
         }
         *visits += 1;
         let n = &self.nodes[node as usize];
-        let d2 = crate::data::matrix::sqdist(q, data.row(n.vantage as usize));
+        let d2 = kernels::sqdist(q, data.row(n.vantage as usize));
         if Some(n.vantage) != self_id && d2 < heap.threshold() {
             heap.push(n.vantage, d2, false);
         }

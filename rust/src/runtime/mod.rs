@@ -4,12 +4,20 @@
 //! `make artifacts` (build-time Python) writes `artifacts/*.hlo.txt` and
 //! `manifest.json`; this module compiles them once on the PJRT CPU
 //! client and caches the executables. Python never runs at layout time.
+//!
+//! The external `xla` crate is unavailable in the offline build
+//! environment, so the PJRT-backed implementation is gated behind the
+//! `xla` cargo feature — and that dependency is deliberately left
+//! undeclared, so enabling the feature without vendoring an `xla`
+//! crate fails to compile. The default build compiles an API-identical
+//! stub whose `Runtime` constructors return an error; every consumer
+//! (CLI `info`, benches, the XLA parity tests, `vis::batched` callers)
+//! already treats that as "artifacts unavailable" and degrades
+//! gracefully, so the rest of the system is unaffected.
 
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
 
 /// Shapes baked into the artifacts at AOT time (from manifest.json).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -46,119 +54,219 @@ impl Manifest {
     }
 }
 
-/// PJRT CPU client + compiled-executable cache over an artifact dir.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    /// The baked shapes.
-    pub manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl Runtime {
-    /// Default artifact location (`$LARGEVIS_ARTIFACTS` or `artifacts/`).
-    pub fn default_dir() -> PathBuf {
-        std::env::var("LARGEVIS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
-            // Walk up from cwd so examples/tests work from any subdir.
-            let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
-            loop {
-                let cand = cur.join("artifacts");
-                if cand.join("manifest.json").exists() {
-                    return cand;
-                }
-                if !cur.pop() {
-                    return PathBuf::from("artifacts");
-                }
+/// Default artifact location (`$LARGEVIS_ARTIFACTS` or `artifacts/`).
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("LARGEVIS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+        // Walk up from cwd so examples/tests work from any subdir.
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
             }
-        })
-    }
-
-    /// Create a runtime over an artifact directory.
-    pub fn new(dir: &Path) -> Result<Runtime> {
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
-            format!("{} not found — run `make artifacts` first", manifest_path.display())
-        })?;
-        let manifest = Manifest::parse(&text)?;
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, cache: Mutex::new(HashMap::new()) })
-    }
-
-    /// Convenience: runtime over [`Runtime::default_dir`].
-    pub fn from_default_dir() -> Result<Runtime> {
-        Runtime::new(&Self::default_dir())
-    }
-
-    /// PJRT platform name (for `largevis info`).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile (cached) an artifact by name, e.g. `grad_kernel`.
-    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(exe.clone());
+            if !cur.pop() {
+                return PathBuf::from("artifacts");
+            }
         }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        if !path.exists() {
-            bail!("artifact {} missing — run `make artifacts`", path.display());
+    })
+}
+
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::{default_artifact_dir, Manifest};
+    use anyhow::{bail, Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    pub use xla::Literal;
+
+    /// PJRT CPU client + compiled-executable cache over an artifact dir.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        /// The baked shapes.
+        pub manifest: Manifest,
+        cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    }
+
+    impl Runtime {
+        /// Default artifact location (`$LARGEVIS_ARTIFACTS` or `artifacts/`).
+        pub fn default_dir() -> PathBuf {
+            default_artifact_dir()
         }
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
+
+        /// Create a runtime over an artifact directory.
+        pub fn new(dir: &Path) -> Result<Runtime> {
+            let manifest_path = dir.join("manifest.json");
+            let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+                format!("{} not found — run `make artifacts` first", manifest_path.display())
+            })?;
+            let manifest = Manifest::parse(&text)?;
+            let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                dir: dir.to_path_buf(),
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+            })
+        }
+
+        /// Convenience: runtime over [`Runtime::default_dir`].
+        pub fn from_default_dir() -> Result<Runtime> {
+            Runtime::new(&Self::default_dir())
+        }
+
+        /// PJRT platform name (for `largevis info`).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile (cached) an artifact by name, e.g. `grad_kernel`.
+        pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.cache.lock().unwrap().get(name) {
+                return Ok(exe.clone());
+            }
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                bail!("artifact {} missing — run `make artifacts`", path.display());
+            }
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+            let exe = std::sync::Arc::new(exe);
+            self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Execute an artifact on literal inputs; returns the tuple elements
+        /// (aot.py lowers with `return_tuple=True`).
+        pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let exe = self.executable(name)?;
+            let result = exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch {name} result: {e}"))?;
+            lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple {name}: {e}"))
+        }
     }
 
-    /// Execute an artifact on literal inputs; returns the tuple elements
-    /// (aot.py lowers with `return_tuple=True`).
-    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(name)?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch {name} result: {e}"))?;
-        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple {name}: {e}"))
+    /// Build an `[n, d]` f32 literal from a flat row-major slice.
+    pub fn literal_f32_2d(data: &[f32], n: usize, d: usize) -> Result<xla::Literal> {
+        assert_eq!(data.len(), n * d);
+        xla::Literal::vec1(data)
+            .reshape(&[n as i64, d as i64])
+            .map_err(|e| anyhow::anyhow!("reshape literal: {e}"))
+    }
+
+    /// Build an `[n]` i32 literal.
+    pub fn literal_i32_1d(data: &[i32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    /// Build an `[n, m]` i32 literal from a flat slice.
+    pub fn literal_i32_2d(data: &[i32], n: usize, m: usize) -> Result<xla::Literal> {
+        assert_eq!(data.len(), n * m);
+        xla::Literal::vec1(data)
+            .reshape(&[n as i64, m as i64])
+            .map_err(|e| anyhow::anyhow!("reshape literal: {e}"))
+    }
+
+    /// Scalar f32 literal.
+    pub fn literal_f32(v: f32) -> xla::Literal {
+        xla::Literal::from(v)
+    }
+
+    /// Copy a literal's f32 payload out.
+    pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))
     }
 }
 
-/// Build an `[n, d]` f32 literal from a flat row-major slice.
-pub fn literal_f32_2d(data: &[f32], n: usize, d: usize) -> Result<xla::Literal> {
-    assert_eq!(data.len(), n * d);
-    xla::Literal::vec1(data)
-        .reshape(&[n as i64, d as i64])
-        .map_err(|e| anyhow::anyhow!("reshape literal: {e}"))
+#[cfg(feature = "xla")]
+pub use pjrt::*;
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use super::{default_artifact_dir, Manifest};
+    use anyhow::{bail, Result};
+    use std::path::{Path, PathBuf};
+
+    const DISABLED: &str =
+        "PJRT runtime unavailable: built without the `xla` cargo feature (offline build)";
+
+    /// Opaque stand-in for `xla::Literal` when built without `xla`.
+    pub struct Literal;
+
+    /// Stub runtime: constructors always fail with a clear message.
+    pub struct Runtime {
+        /// The baked shapes (never observable — construction fails).
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        /// Default artifact location (`$LARGEVIS_ARTIFACTS` or `artifacts/`).
+        pub fn default_dir() -> PathBuf {
+            default_artifact_dir()
+        }
+
+        /// Always fails: the PJRT client needs the `xla` feature.
+        pub fn new(_dir: &Path) -> Result<Runtime> {
+            bail!("{DISABLED}")
+        }
+
+        /// Always fails: the PJRT client needs the `xla` feature.
+        pub fn from_default_dir() -> Result<Runtime> {
+            Runtime::new(&Self::default_dir())
+        }
+
+        /// Platform name placeholder.
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        /// Always fails (unreachable: construction already failed).
+        pub fn run(&self, _name: &str, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+            bail!("{DISABLED}")
+        }
+    }
+
+    /// Shape-checked stub (data is dropped; execution can never happen).
+    pub fn literal_f32_2d(data: &[f32], n: usize, d: usize) -> Result<Literal> {
+        assert_eq!(data.len(), n * d);
+        Ok(Literal)
+    }
+
+    /// Stub literal constructor.
+    pub fn literal_i32_1d(_data: &[i32]) -> Literal {
+        Literal
+    }
+
+    /// Shape-checked stub.
+    pub fn literal_i32_2d(data: &[i32], n: usize, m: usize) -> Result<Literal> {
+        assert_eq!(data.len(), n * m);
+        Ok(Literal)
+    }
+
+    /// Stub literal constructor.
+    pub fn literal_f32(_v: f32) -> Literal {
+        Literal
+    }
+
+    /// Always fails (no payload exists without the `xla` feature).
+    pub fn literal_to_f32(_lit: &Literal) -> Result<Vec<f32>> {
+        bail!("{DISABLED}")
+    }
 }
 
-/// Build an `[n]` i32 literal.
-pub fn literal_i32_1d(data: &[i32]) -> xla::Literal {
-    xla::Literal::vec1(data)
-}
-
-/// Build an `[n, m]` i32 literal from a flat slice.
-pub fn literal_i32_2d(data: &[i32], n: usize, m: usize) -> Result<xla::Literal> {
-    assert_eq!(data.len(), n * m);
-    xla::Literal::vec1(data)
-        .reshape(&[n as i64, m as i64])
-        .map_err(|e| anyhow::anyhow!("reshape literal: {e}"))
-}
-
-/// Scalar f32 literal.
-pub fn literal_f32(v: f32) -> xla::Literal {
-    xla::Literal::from(v)
-}
-
-/// Copy a literal's f32 payload out.
-pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))
-}
+#[cfg(not(feature = "xla"))]
+pub use stub::*;
 
 #[cfg(test)]
 mod tests {
@@ -178,6 +286,13 @@ mod tests {
     #[test]
     fn manifest_missing_field_errors() {
         assert!(Manifest::parse(r#"{"batch":1}"#).is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = Runtime::new(std::path::Path::new("artifacts")).unwrap_err();
+        assert!(format!("{err}").contains("xla"), "{err}");
     }
 
     // Runtime-dependent tests live in rust/tests/xla_parity.rs (they

@@ -91,6 +91,25 @@ impl BoundedMaxHeap {
         self.heap
     }
 
+    /// Reset in place to capacity `k`, keeping the allocations — the
+    /// scratch-reuse twin of `new` for per-worker heaps.
+    pub fn reset(&mut self, k: usize) {
+        assert!(k > 0);
+        self.k = k;
+        self.heap.clear();
+        self.members.clear();
+    }
+
+    /// Sorted `(id, dist)` pairs, draining the heap in place — the
+    /// scratch-reuse twin of [`BoundedMaxHeap::into_sorted`]: the heap
+    /// is left empty (capacity retained) and only the returned result
+    /// vector is allocated.
+    pub fn drain_sorted_pairs(&mut self) -> Vec<(u32, f32)> {
+        self.heap.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
+        self.members.clear();
+        self.heap.drain(..).map(|c| (c.id, c.dist)).collect()
+    }
+
     /// Unordered view of the stored candidates.
     #[inline]
     pub fn as_slice(&self) -> &[Candidate] {
@@ -179,6 +198,25 @@ mod tests {
         assert!(h.push(0, 0.5, false)); // id=0 may re-enter
         let ids: Vec<u32> = h.into_sorted().iter().map(|c| c.id).collect();
         assert_eq!(ids, vec![0, 2]);
+    }
+
+    #[test]
+    fn reset_and_drain_reuse() {
+        let mut h = BoundedMaxHeap::new(2);
+        h.push(0, 3.0, false);
+        h.push(1, 1.0, false);
+        h.push(2, 2.0, false);
+        assert_eq!(h.drain_sorted_pairs(), vec![(1, 1.0), (2, 2.0)]);
+        assert!(h.is_empty());
+        // Drained ids may re-enter; reset can change capacity.
+        assert!(h.push(1, 5.0, false));
+        h.reset(3);
+        assert!(h.is_empty());
+        assert_eq!(h.threshold(), f32::INFINITY);
+        for (id, d) in [(9, 0.5), (8, 0.25), (7, 1.0), (6, 0.75)] {
+            h.push(id, d, false);
+        }
+        assert_eq!(h.drain_sorted_pairs(), vec![(8, 0.25), (9, 0.5), (6, 0.75)]);
     }
 
     #[test]

@@ -10,8 +10,10 @@ pub mod timer;
 pub mod stats;
 pub mod proptest;
 pub mod json;
+pub mod visited;
 
 pub use alias::AliasTable;
 pub use heap::BoundedMaxHeap;
 pub use rng::Rng;
 pub use timer::Timer;
+pub use visited::VisitedSet;

@@ -52,11 +52,28 @@ where
     T: Default + Clone + Send,
     F: Fn(usize) -> T + Sync,
 {
+    parallel_map_with(n_items, threads, |_worker| (), |_state, i| f(i))
+}
+
+/// Like [`parallel_map`], but threads reusable per-worker state through
+/// the mapping: `init(worker_id)` builds each worker's scratch once and
+/// `f(&mut scratch, i)` maps every item with it.
+///
+/// This is what makes the KNN hot loops allocation-free: heaps, visited
+/// sets and gather buffers are built once per worker instead of once
+/// per node (§Perf; see `knn::explore`).
+pub fn parallel_map_with<T, S, I, F>(n_items: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Default + Clone + Send,
+    I: Fn(usize) -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     let mut out = vec![T::default(); n_items];
     let threads = threads.max(1).min(n_items.max(1));
     if threads <= 1 {
+        let mut state = init(0);
         for (i, slot) in out.iter_mut().enumerate() {
-            *slot = f(i);
+            *slot = f(&mut state, i);
         }
         return out;
     }
@@ -64,10 +81,12 @@ where
     std::thread::scope(|s| {
         for (t, slice) in out.chunks_mut(chunk).enumerate() {
             let f = &f;
+            let init = &init;
             let base = t * chunk;
             s.spawn(move || {
+                let mut state = init(t);
                 for (off, slot) in slice.iter_mut().enumerate() {
-                    *slot = f(base + off);
+                    *slot = f(&mut state, base + off);
                 }
             });
         }
@@ -131,5 +150,41 @@ mod tests {
         let out = parallel_map(10, 1, |i| i);
         assert_eq!(out.len(), 10);
         parallel_for_chunks(0, 4, |_, r| assert!(r.is_empty()));
+    }
+
+    #[test]
+    fn map_with_state_preserves_order_and_reuses_scratch() {
+        // Each worker counts the items it maps through its own state;
+        // results must still land in item order.
+        let out = parallel_map_with(
+            500,
+            8,
+            |_worker| 0usize,
+            |seen, i| {
+                *seen += 1;
+                (i * 3, *seen)
+            },
+        );
+        assert_eq!(out.len(), 500);
+        for (i, &(v, seen)) in out.iter().enumerate() {
+            assert_eq!(v, i * 3);
+            assert!(seen >= 1); // state threaded through, monotone per worker
+        }
+        // Workers see their chunk sequentially: within a chunk the
+        // per-worker counter increments by one per item.
+        let chunk = 500usize.div_ceil(8);
+        for c in out.chunks(chunk) {
+            for (off, &(_, seen)) in c.iter().enumerate() {
+                assert_eq!(seen, off + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn map_with_single_thread_and_empty() {
+        let out = parallel_map_with(7, 1, |_| Vec::<u8>::new(), |_, i| i);
+        assert_eq!(out, (0..7).collect::<Vec<_>>());
+        let empty = parallel_map_with(0, 4, |_| (), |_, i| i);
+        assert!(empty.is_empty());
     }
 }

@@ -1,0 +1,122 @@
+//! Epoch-stamped visited set — the allocation-free replacement for the
+//! per-node `HashSet`s the KNN hot loops used to build.
+//!
+//! A `u8` stamp per point; membership is `stamp[id] == epoch`. One
+//! byte (not a `u32`) keeps the per-worker footprint at n bytes — at
+//! paper scale (10M points × 32 workers) that is 320 MB instead of
+//! 1.28 GB — at the cost of a full rewind every 255 generations, whose
+//! n-byte memset amortizes to ~n/255 bytes per query (noise next to a
+//! query's candidate scan). Starting a new generation is otherwise a
+//! single increment (no clearing, no rehashing, no allocation), and
+//! lookups are a single indexed load — measurably faster than hashing
+//! in the dedup-heavy neighbor-exploring loop (§Perf).
+
+/// Dense visited set over ids `0..n` with O(1) epoch-based reset.
+pub struct VisitedSet {
+    stamp: Vec<u8>,
+    epoch: u8,
+}
+
+impl VisitedSet {
+    /// Set over ids `0..n`, initially empty.
+    pub fn new(n: usize) -> Self {
+        // Epoch starts at 1 so the zero-filled stamps mean "never seen".
+        VisitedSet { stamp: vec![0; n], epoch: 1 }
+    }
+
+    /// Number of addressable ids.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.stamp.len()
+    }
+
+    /// Start a new empty generation in O(1) (a full rewind happens once
+    /// every `u8::MAX` generations).
+    pub fn clear(&mut self) {
+        if self.epoch == u8::MAX {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+    }
+
+    /// Insert `id`; returns `true` when newly inserted (mirrors
+    /// `HashSet::insert`).
+    #[inline]
+    pub fn insert(&mut self, id: u32) -> bool {
+        let slot = &mut self.stamp[id as usize];
+        if *slot == self.epoch {
+            false
+        } else {
+            *slot = self.epoch;
+            true
+        }
+    }
+
+    /// Membership test.
+    #[inline]
+    pub fn contains(&self, id: u32) -> bool {
+        self.stamp[id as usize] == self.epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_contains() {
+        let mut v = VisitedSet::new(10);
+        assert!(!v.contains(3));
+        assert!(v.insert(3));
+        assert!(!v.insert(3));
+        assert!(v.contains(3));
+        assert!(!v.contains(4));
+    }
+
+    #[test]
+    fn clear_is_a_new_generation() {
+        let mut v = VisitedSet::new(5);
+        v.insert(0);
+        v.insert(4);
+        v.clear();
+        for id in 0..5 {
+            assert!(!v.contains(id));
+        }
+        assert!(v.insert(4));
+    }
+
+    #[test]
+    fn fresh_set_is_empty() {
+        let v = VisitedSet::new(4);
+        assert!((0..4).all(|id| !v.contains(id)));
+        assert_eq!(v.capacity(), 4);
+    }
+
+    #[test]
+    fn epoch_wraparound_resets_stamps() {
+        let mut v = VisitedSet::new(3);
+        v.insert(1);
+        // Force the wraparound path.
+        v.epoch = u8::MAX;
+        v.stamp[2] = u8::MAX; // stale entry that must not survive
+        v.clear();
+        assert!(!v.contains(1));
+        assert!(!v.contains(2));
+        assert!(v.insert(2));
+    }
+
+    #[test]
+    fn many_generations_never_false_positive() {
+        // Drive well past the u8 epoch wrap: a stale stamp from an old
+        // generation must never read as visited in a new one.
+        let mut v = VisitedSet::new(8);
+        for gen in 0..1000u32 {
+            let id = (gen % 8) as u32;
+            assert!(!v.contains(id), "gen {gen}: stale hit");
+            assert!(v.insert(id));
+            assert!(v.contains(id));
+            v.clear();
+        }
+    }
+}

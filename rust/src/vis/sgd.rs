@@ -107,8 +107,12 @@ pub fn optimize(
         for s in 0..my_samples {
             // Refresh the global learning rate every 256 samples (cheap
             // and smooth enough; exact per-step decay is unnecessary).
+            // Every worker adds its own 256 to the shared counter, so
+            // the counter already tracks global progress — scaling it
+            // by the thread count again would decay rho up to threads×
+            // too fast.
             if s % 256 == 0 {
-                let t = a.progress.fetch_add(256, Ordering::Relaxed) * a.threads as u64;
+                let t = a.progress.fetch_add(256, Ordering::Relaxed);
                 let frac = (t.min(a.total)) as f32 / a.total as f32;
                 rho = (a.rho0 * (1.0 - frac)).max(a.rho0 * 1e-4);
             }

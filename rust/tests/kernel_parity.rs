@@ -1,0 +1,157 @@
+//! Parity property tests for the SIMD distance-kernel subsystem: every
+//! variant available on this machine (scalar, sse2, avx2, neon) must
+//! match the scalar reference within 1e-4 relative tolerance across
+//! dimensionalities 1..=200 — including the ragged-tail dims 1, 3, 7,
+//! 31, 33 that exercise every remainder path — and `sqdist_bounded`'s
+//! early exit must never hand a too-small distance to a caller that
+//! would accept it.
+
+use largevis::data::matrix::Matrix;
+use largevis::kernels::{self, scalar};
+use largevis::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, d: usize, scale: f32) -> Vec<f32> {
+    (0..d).map(|_| rng.gaussian() * scale).collect()
+}
+
+fn assert_rel_close(got: f32, want: f32, what: &str) {
+    let tol = 1e-4 * (1.0 + want.abs().max(got.abs()));
+    assert!((got - want).abs() <= tol, "{what}: got {got}, want {want} (tol {tol})");
+}
+
+#[test]
+fn every_variant_matches_scalar_across_dims_1_to_200() {
+    let mut rng = Rng::new(0x5e1);
+    for ks in kernels::available() {
+        for d in 1..=200usize {
+            let a = rand_vec(&mut rng, d, 2.0);
+            let b = rand_vec(&mut rng, d, 2.0);
+            let want_sq = scalar::sqdist(&a, &b);
+            assert_rel_close((ks.sqdist)(&a, &b), want_sq, &format!("{} sqdist d={d}", ks.name));
+            assert_rel_close(
+                (ks.sqdist_bounded)(&a, &b, f32::INFINITY),
+                want_sq,
+                &format!("{} sqdist_bounded(inf) d={d}", ks.name),
+            );
+            assert_rel_close(
+                (ks.dot)(&a, &b),
+                scalar::dot(&a, &b),
+                &format!("{} dot d={d}", ks.name),
+            );
+        }
+    }
+}
+
+#[test]
+fn ragged_tail_dims_with_adversarial_magnitudes() {
+    // Dims around every SIMD width boundary, with large-magnitude
+    // values so lane mis-handling cannot hide below tolerance.
+    let dims = [1usize, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65];
+    let mut rng = Rng::new(0x5e2);
+    for ks in kernels::available() {
+        for &d in &dims {
+            let a = rand_vec(&mut rng, d, 100.0);
+            let b = rand_vec(&mut rng, d, 100.0);
+            assert_rel_close(
+                (ks.sqdist)(&a, &b),
+                scalar::sqdist(&a, &b),
+                &format!("{} sqdist ragged d={d}", ks.name),
+            );
+            assert_rel_close(
+                (ks.dot)(&a, &b),
+                scalar::dot(&a, &b),
+                &format!("{} dot ragged d={d}", ks.name),
+            );
+        }
+    }
+}
+
+#[test]
+fn x4_kernel_matches_scalar_per_row() {
+    let mut rng = Rng::new(0x5e3);
+    for ks in kernels::available() {
+        for d in 1..=200usize {
+            let q = rand_vec(&mut rng, d, 1.5);
+            let rows = rand_vec(&mut rng, 4 * d, 1.5);
+            let got = (ks.sqdist_x4)(&q, &rows, d);
+            for r in 0..4 {
+                let want = scalar::sqdist(&q, &rows[r * d..(r + 1) * d]);
+                assert_rel_close(got[r], want, &format!("{} sqdist_x4 d={d} row={r}", ks.name));
+            }
+        }
+    }
+}
+
+#[test]
+fn bounded_early_exit_never_underestimates_below_the_bound() {
+    // Contract: a result <= bound is the exact distance; a result >
+    // bound may be a partial sum but is never larger than the true
+    // distance. Either way a caller filtering `d < heap.threshold()`
+    // makes exactly the right accept/reject decision.
+    let mut rng = Rng::new(0x5e4);
+    for ks in kernels::available() {
+        for trial in 0..600 {
+            let d = 1 + rng.below(200);
+            let a = rand_vec(&mut rng, d, 2.0);
+            let b = rand_vec(&mut rng, d, 2.0);
+            let truth = scalar::sqdist(&a, &b);
+            // Bounds below, around and above the true distance.
+            let bound = truth * (rng.f32() * 1.5);
+            let got = (ks.sqdist_bounded)(&a, &b, bound);
+            let tol = 1e-4 * (1.0 + truth);
+            if got <= bound {
+                // Claimed exact: must be the true distance.
+                assert!(
+                    (got - truth).abs() <= tol,
+                    "{} trial={trial} d={d}: accepted {got} but truth {truth} (bound {bound})",
+                    ks.name
+                );
+            } else {
+                // Early exit: a partial sum can undershoot the truth but
+                // must never overshoot it (all terms are non-negative).
+                assert!(
+                    got <= truth + tol,
+                    "{} trial={trial} d={d}: partial {got} exceeds truth {truth}",
+                    ks.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_kernel_matches_scalar_across_dims_and_counts() {
+    let mut rng = Rng::new(0x5e5);
+    for &d in &[1usize, 3, 7, 10, 31, 33, 50, 100, 200] {
+        let n = 150;
+        let m = Matrix::from_vec(rand_vec(&mut rng, n * d, 1.5), n, d);
+        let q = rand_vec(&mut rng, d, 1.5);
+        let mut out = Vec::new();
+        // Counts around the x4 unroll and the gather-block boundary.
+        for &cnt in &[0usize, 1, 3, 4, 5, 63, 64, 65, 130] {
+            let ids: Vec<u32> = (0..cnt).map(|_| rng.below(n) as u32).collect();
+            kernels::sqdist_batch(&q, &m, &ids, &mut out);
+            assert_eq!(out.len(), ids.len(), "d={d} cnt={cnt}");
+            for (&id, &got) in ids.iter().zip(&out) {
+                let want = scalar::sqdist(&q, m.row(id as usize));
+                assert_rel_close(got, want, &format!("sqdist_batch d={d} cnt={cnt} id={id}"));
+            }
+        }
+        // The no-gather all-rows variant agrees with the gather path.
+        let all: Vec<u32> = (0..n as u32).collect();
+        let mut via_ids = Vec::new();
+        kernels::sqdist_batch(&q, &m, &all, &mut via_ids);
+        kernels::sqdist_to_all(&q, &m, &mut out);
+        assert_eq!(via_ids, out, "sqdist_to_all divergence at d={d}");
+    }
+}
+
+#[test]
+fn scalar_fallback_is_always_available() {
+    // Non-x86/ARM targets must keep building and running: the scalar
+    // set is unconditionally present and the active set is one of the
+    // available ones.
+    let names: Vec<&str> = kernels::available().iter().map(|k| k.name).collect();
+    assert!(names.contains(&"scalar"), "{names:?}");
+    assert!(names.contains(&kernels::active().name), "{names:?}");
+}

@@ -1,0 +1,214 @@
+//! Minimal, offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this workspace
+//! vendors the small slice of `anyhow` the codebase actually uses:
+//!
+//! * [`Error`] — a context-chain error type (`Display` shows the
+//!   outermost message, `{:#}` the full chain joined by `": "`, `Debug`
+//!   an anyhow-style "Caused by" listing),
+//! * [`Result`] with the `E = Error` default,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   *and* `Option`,
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros,
+//! * `From<E: std::error::Error>` so `?` converts std errors.
+//!
+//! Semantics intentionally mirror the real crate for these paths; the
+//! backtrace/downcast machinery is omitted.
+
+use std::fmt;
+
+/// A context-chain error. Frame 0 is the outermost (most recently
+/// attached) message; later frames are underlying causes.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { frames: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (innermost cause preserved).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.frames.join(": "))
+        } else {
+            write!(f, "{}", self.frames.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real `anyhow::Error`, this type deliberately does NOT
+// implement `std::error::Error`, which keeps the blanket `From` below
+// coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or turn `None` into an error.
+pub trait Context<T> {
+    /// Attach a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err()).context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = anyhow!("root").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing key {}", "k")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key k");
+        assert_eq!(Some(3).context("never").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert!(check(5).is_ok());
+        assert_eq!(format!("{}", check(-1).unwrap_err()), "x must be positive, got -1");
+        assert_eq!(format!("{}", check(200).unwrap_err()), "too big");
+    }
+
+    #[test]
+    fn chain_order_outermost_first() {
+        let e = anyhow!("cause").context("mid").context("top");
+        let frames: Vec<&str> = e.chain().collect();
+        assert_eq!(frames, vec!["top", "mid", "cause"]);
+        assert_eq!(e.root_cause(), "cause");
+    }
+}
