@@ -21,7 +21,7 @@ pub struct Args {
 const VALUE_KEYS: &[&str] = &[
     "dataset", "scale", "k", "trees", "explore-iters", "perplexity", "samples", "negatives",
     "gamma", "rho0", "threads", "seed", "out", "config", "dim", "prob-fn", "prob-a", "engine",
-    "max-visits", "format", "sample",
+    "max-visits", "format", "sample", "input", "labels", "resume-from", "chunk-rows",
 ];
 
 /// Parse a raw argument vector (without argv[0]).
@@ -84,11 +84,15 @@ USAGE:
 COMMANDS:
     pipeline    run the full pipeline: dataset -> KNN -> weights -> layout -> SVG + report
     knn         build a KNN graph and report recall vs exact ground truth
+    convert     convert a dataset between LargeVis text and .lvec binary (streamed)
     datasets    list the dataset registry (paper Table 1 analogs)
     info        print build/runtime information
 
 COMMON OPTIONS:
     --dataset <name>      registry dataset (default 20ng-like); `largevis datasets` lists them
+    --input <file>        read points from disk (LargeVis text or .lvec binary)
+                          instead of generating a registry dataset
+    --labels <file>       .lbl label file accompanying --input
     --scale <f>           fraction of the dataset's full size (default 0.1)
     --k <n>               neighbors per point (default 150)
     --trees <n>           RP-forest trees (default 4)
@@ -102,6 +106,16 @@ COMMON OPTIONS:
     --seed <n>            RNG seed
     --out <dir>           output directory (default target/run)
     --config <file>       INI config file (CLI options override it)
+
+CHECKPOINT / RESUME:
+    --resume-from <stage> resume at a stage boundary (weights|layout), loading
+                          earlier stages from <out>/checkpoints/
+    --no-checkpoints      skip writing stage checkpoints
+    --chunk-rows <n>      rows per chunk for the streaming dataset readers
+
+CONVERT:
+    largevis convert <src> <dst>   format chosen by <dst> extension
+                                   (.txt/.tsv -> text, else binary)
 ";
 
 #[cfg(test)]

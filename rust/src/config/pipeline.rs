@@ -8,6 +8,42 @@ use crate::knn::rptree::RpForestConfig;
 use crate::vis::{LargeVisConfig, ProbFn};
 use anyhow::Result;
 
+/// A pipeline stage boundary — the unit of checkpointing and resume.
+///
+/// Ordered by execution: `Dataset < Knn < Weights < Layout`. Resuming
+/// from stage `S` skips everything before `S` and loads `S`'s inputs
+/// from the checkpoint directory (`<out_dir>/checkpoints/`). Only
+/// `Weights` and `Layout` are valid resume targets (they are the
+/// stages with checkpointed inputs); the coordinator rejects the
+/// other two rather than silently recomputing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Dataset ingestion/generation (a full run).
+    Dataset,
+    /// KNN graph construction.
+    Knn,
+    /// Perplexity weights + symmetrization (loads the KNN checkpoint).
+    Weights,
+    /// SGD layout (loads the weighted-graph checkpoint).
+    Layout,
+}
+
+impl std::str::FromStr for Stage {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "dataset" => Ok(Stage::Dataset),
+            "knn" => Ok(Stage::Knn),
+            "weights" => Ok(Stage::Weights),
+            "layout" => Ok(Stage::Layout),
+            other => anyhow::bail!(
+                "unknown stage {other:?} (expected dataset|knn|weights|layout)"
+            ),
+        }
+    }
+}
+
 /// Everything the coordinator needs for one run.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -29,6 +65,20 @@ pub struct PipelineConfig {
     pub out_dir: std::path::PathBuf,
     /// Seed for dataset generation.
     pub data_seed: u64,
+    /// Input points file (LargeVis text or `.lvec` binary). When set it
+    /// replaces synthetic generation; `dataset`/`scale` are ignored.
+    pub input: Option<std::path::PathBuf>,
+    /// Optional `.lbl` label file accompanying `input`.
+    pub input_labels: Option<std::path::PathBuf>,
+    /// Resume from this stage, loading earlier stages' checkpoints
+    /// from `<out_dir>/checkpoints/`. `None` = full run.
+    pub resume_from: Option<Stage>,
+    /// Write stage checkpoints (KNN graph, weighted graph, labels) into
+    /// `<out_dir>/checkpoints/` so later runs can `resume_from`.
+    pub save_checkpoints: bool,
+    /// Rows per chunk for the streaming dataset readers (bounds parse
+    /// memory; 0 = format default).
+    pub chunk_rows: usize,
 }
 
 impl Default for PipelineConfig {
@@ -43,6 +93,11 @@ impl Default for PipelineConfig {
             use_xla: false,
             out_dir: std::path::PathBuf::from("target/run"),
             data_seed: 0xda7a,
+            input: None,
+            input_labels: None,
+            resume_from: None,
+            save_checkpoints: true,
+            chunk_rows: 0,
         }
     }
 }
@@ -57,6 +112,17 @@ impl PipelineConfig {
         if let Some(dir) = ini.get("", "out_dir") {
             cfg.out_dir = dir.into();
         }
+        if let Some(path) = ini.get("", "input") {
+            cfg.input = Some(path.into());
+        }
+        if let Some(path) = ini.get("", "labels") {
+            cfg.input_labels = Some(path.into());
+        }
+        if let Some(stage) = ini.get("", "resume_from") {
+            cfg.resume_from = Some(stage.parse()?);
+        }
+        cfg.save_checkpoints = ini.get_bool_or("", "checkpoints", cfg.save_checkpoints)?;
+        cfg.chunk_rows = ini.get_or("", "chunk_rows", cfg.chunk_rows)?;
 
         cfg.k = ini.get_or("knn", "k", cfg.k)?;
         cfg.knn.forest = RpForestConfig {
@@ -123,6 +189,35 @@ mod tests {
     #[test]
     fn bad_prob_fn_rejected() {
         let ini = Ini::parse("[vis]\nprob_fn = cosine").unwrap();
+        assert!(PipelineConfig::from_ini(&ini).is_err());
+    }
+
+    #[test]
+    fn ingestion_and_resume_keys() {
+        let ini = Ini::parse(
+            "input = data/points.lvec\nlabels = data/points.lbl\nresume_from = weights\ncheckpoints = no\nchunk_rows = 4096",
+        )
+        .unwrap();
+        let c = PipelineConfig::from_ini(&ini).unwrap();
+        assert_eq!(c.input.as_deref(), Some(std::path::Path::new("data/points.lvec")));
+        assert_eq!(c.input_labels.as_deref(), Some(std::path::Path::new("data/points.lbl")));
+        assert_eq!(c.resume_from, Some(Stage::Weights));
+        assert!(!c.save_checkpoints);
+        assert_eq!(c.chunk_rows, 4096);
+    }
+
+    #[test]
+    fn stage_parse_and_order() {
+        assert!(Stage::Dataset < Stage::Knn);
+        assert!(Stage::Knn < Stage::Weights);
+        assert!(Stage::Weights < Stage::Layout);
+        assert_eq!("layout".parse::<Stage>().unwrap(), Stage::Layout);
+        assert!("nope".parse::<Stage>().is_err());
+    }
+
+    #[test]
+    fn bad_resume_stage_rejected() {
+        let ini = Ini::parse("resume_from = everything").unwrap();
         assert!(PipelineConfig::from_ini(&ini).is_err());
     }
 }

@@ -8,4 +8,4 @@ pub mod metrics;
 pub mod pipeline;
 
 pub use metrics::Metrics;
-pub use pipeline::{run_pipeline, PipelineOutput};
+pub use pipeline::{run_pipeline, CheckpointPaths, PipelineOutput};

@@ -1,17 +1,29 @@
-//! The end-to-end LargeVis pipeline (Figure 1 of the paper).
+//! The end-to-end LargeVis pipeline (Figure 1 of the paper), with
+//! durable stage boundaries.
+//!
+//! Stage 1 ingests real datasets from disk (LargeVis text or `.lvec`
+//! binary, streamed through a bounded chunk buffer) or falls back to
+//! the synthetic registry. After the expensive KNN stage — and after
+//! symmetrization — the intermediate graph is checkpointed into
+//! `<out_dir>/checkpoints/`, so layout experiments re-run with
+//! `resume_from` pay for KNN construction once (paper Table 2: KNN
+//! dominates end-to-end runtime at scale).
 
-use crate::config::PipelineConfig;
+use crate::config::{PipelineConfig, Stage};
 use crate::coordinator::metrics::Metrics;
-use crate::data::datasets;
-use crate::data::io::write_layout_tsv;
+use crate::data::datasets::{self, Dataset};
+use crate::data::formats::{self, checkpoint};
+use crate::data::io::{read_labels, write_labels, write_layout_tsv};
 use crate::data::matrix::Matrix;
 use crate::eval::knn_classifier::{knn_accuracy, KnnEvalConfig};
+use crate::graph::sparse::CsrGraph;
 use crate::graph::weights::weighted_graph;
 use crate::knn::explore::largevis_knn;
-use crate::knn::sampled_recall;
+use crate::knn::{sampled_recall, KnnGraph};
 use crate::render::{render_scatter, ScatterStyle};
 use crate::util::timer::Timer;
 use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
 
 /// Everything a pipeline run produces.
 pub struct PipelineOutput {
@@ -23,36 +35,210 @@ pub struct PipelineOutput {
     pub metrics: Metrics,
 }
 
+/// On-disk locations of the stage checkpoints for one `out_dir`.
+pub struct CheckpointPaths {
+    /// The checkpoint directory (`<out_dir>/checkpoints`).
+    pub dir: PathBuf,
+    /// KNN graph checkpoint.
+    pub knn: PathBuf,
+    /// Symmetrized weighted graph checkpoint.
+    pub graph: PathBuf,
+    /// Labels (`.lbl`), present only for labeled datasets.
+    pub labels: PathBuf,
+    /// Dataset name of the run that wrote the checkpoints (plain text).
+    pub meta: PathBuf,
+}
+
+impl CheckpointPaths {
+    /// Checkpoint paths under `out_dir`.
+    pub fn new(out_dir: &Path) -> Self {
+        let dir = out_dir.join("checkpoints");
+        CheckpointPaths {
+            knn: dir.join("knn.ckpt"),
+            graph: dir.join("graph.ckpt"),
+            labels: dir.join("labels.lbl"),
+            meta: dir.join("dataset.txt"),
+            dir,
+        }
+    }
+}
+
+/// Stage 1: load points + labels from `cfg.input`, or generate the
+/// registry dataset. Disk inputs stream through the chunked readers
+/// into one preallocated matrix.
+fn ingest_dataset(cfg: &PipelineConfig) -> Result<Dataset> {
+    let Some(path) = &cfg.input else {
+        return datasets::generate(&cfg.dataset, cfg.scale, cfg.data_seed)
+            .with_context(|| format!("unknown dataset {:?}", cfg.dataset));
+    };
+    // The peeked shape only sizes the buffer; the shape returned by the
+    // streaming read is authoritative (the file may have changed, or a
+    // streamed writer may have patched its header between the opens).
+    let (est_n, est_d) = formats::peek_shape(path)?;
+    let chunk_rows = if cfg.chunk_rows == 0 { formats::DEFAULT_CHUNK_ROWS } else { cfg.chunk_rows };
+    // Capacity hint clamped — the header is untrusted input.
+    let hint = est_n.saturating_mul(est_d).min(formats::UNTRUSTED_CAPACITY_HINT);
+    let mut data: Vec<f32> = Vec::with_capacity(hint);
+    let (n, d) = formats::stream_any(path, chunk_rows, |vals, _| {
+        data.extend_from_slice(vals);
+        Ok(())
+    })?;
+    if data.len() != n * d {
+        anyhow::bail!("{}: read {} values, expected {n}x{d}", path.display(), data.len());
+    }
+    let points = Matrix::from_vec(data, n, d);
+    let labels = match &cfg.input_labels {
+        Some(lp) => {
+            let ls = read_labels(lp)?;
+            if ls.len() != points.n() {
+                anyhow::bail!(
+                    "{}: {} labels for {} points",
+                    lp.display(),
+                    ls.len(),
+                    points.n()
+                );
+            }
+            Some(ls)
+        }
+        None => None,
+    };
+    let n_classes = labels
+        .as_ref()
+        .map(|ls| ls.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0))
+        .unwrap_or(0);
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "input".to_string());
+    Ok(Dataset { name, points, labels, n_classes })
+}
+
 /// Run the full pipeline per `cfg`, writing layout TSV + SVG + report
-/// JSON into `cfg.out_dir`.
+/// JSON into `cfg.out_dir` (and stage checkpoints into
+/// `<out_dir>/checkpoints/` unless disabled).
 pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineOutput> {
     let mut metrics = Metrics::new();
     std::fs::create_dir_all(&cfg.out_dir)
         .with_context(|| format!("create {}", cfg.out_dir.display()))?;
+    let ckpt = CheckpointPaths::new(&cfg.out_dir);
+    if cfg.save_checkpoints {
+        std::fs::create_dir_all(&ckpt.dir)
+            .with_context(|| format!("create {}", ckpt.dir.display()))?;
+    }
+    if matches!(cfg.resume_from, Some(Stage::Dataset) | Some(Stage::Knn)) {
+        anyhow::bail!(
+            "--resume-from supports `weights` and `layout`; the dataset and knn \
+             stages are always recomputed by a full run (omit --resume-from)"
+        );
+    }
+    let resume = cfg.resume_from.unwrap_or(Stage::Dataset);
 
-    // Stage 1: dataset (generation stands in for I/O offline).
-    let t = Timer::start("dataset");
-    let ds = datasets::generate(&cfg.dataset, cfg.scale, cfg.data_seed)
-        .with_context(|| format!("unknown dataset {:?}", cfg.dataset))?;
-    metrics.set("dataset.secs", t.report());
-    metrics.set("dataset.n", ds.points.n() as f64);
-    metrics.set("dataset.d", ds.points.d() as f64);
-    eprintln!("[pipeline] dataset {} n={} d={}", ds.name, ds.points.n(), ds.points.d());
+    let mut labels: Option<Vec<u32>> = None;
+    let mut n_classes = 0usize;
+    let mut title = cfg.dataset.clone();
 
-    // Stage 2: KNN graph (RP-forest + neighbor exploring).
-    let k = cfg.k.min(ds.points.n().saturating_sub(1)).max(1);
-    let t = Timer::start("knn");
-    let knn = largevis_knn(&ds.points, k, &cfg.knn);
-    metrics.set("knn.secs", t.report());
-    let recall = sampled_recall(&ds.points, &knn, 200, 7, cfg.knn.threads);
-    metrics.set("knn.sampled_recall", recall);
-    eprintln!("[pipeline] knn k={k} sampled-recall={recall:.4}");
+    // Stages 1–2: dataset + KNN graph (skipped when resuming at
+    // `weights` or later; `weights` reloads the KNN checkpoint).
+    let knn: Option<KnnGraph> = if resume <= Stage::Knn {
+        let t = Timer::start("dataset");
+        let ds = ingest_dataset(cfg)?;
+        metrics.set("dataset.secs", t.report());
+        metrics.set("dataset.n", ds.points.n() as f64);
+        metrics.set("dataset.d", ds.points.d() as f64);
+        eprintln!("[pipeline] dataset {} n={} d={}", ds.name, ds.points.n(), ds.points.d());
 
-    // Stage 3: perplexity weights + symmetrization.
-    let t = Timer::start("weights");
-    let graph = weighted_graph(&knn, &cfg.weights);
-    metrics.set("weights.secs", t.report());
+        let k = cfg.k.min(ds.points.n().saturating_sub(1)).max(1);
+        let t = Timer::start("knn");
+        let knn = largevis_knn(&ds.points, k, &cfg.knn);
+        metrics.set("knn.secs", t.report());
+        let recall = sampled_recall(&ds.points, &knn, 200, 7, cfg.knn.threads);
+        metrics.set("knn.sampled_recall", recall);
+        eprintln!("[pipeline] knn k={k} sampled-recall={recall:.4}");
+
+        if cfg.save_checkpoints {
+            checkpoint::write_knn(&ckpt.knn, &knn)
+                .with_context(|| format!("write {}", ckpt.knn.display()))?;
+            std::fs::write(&ckpt.meta, &ds.name)?;
+            match &ds.labels {
+                Some(ls) => write_labels(&ckpt.labels, ls)?,
+                // Drop any stale labels from a previous run of a
+                // different dataset into the same out_dir.
+                None => {
+                    if ckpt.labels.exists() {
+                        std::fs::remove_file(&ckpt.labels)?;
+                    }
+                }
+            }
+        }
+        labels = ds.labels;
+        n_classes = ds.n_classes;
+        title = ds.name;
+        Some(knn)
+    } else {
+        // Resumed run: the dataset is not reloaded; labels and the
+        // dataset name come from the checkpoint directory.
+        if ckpt.labels.exists() {
+            let ls = read_labels(&ckpt.labels)?;
+            n_classes = ls.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0);
+            labels = Some(ls);
+        }
+        if let Ok(name) = std::fs::read_to_string(&ckpt.meta) {
+            title = name.trim().to_string();
+        }
+        title = format!("{title} (resumed)");
+        if resume == Stage::Weights {
+            let t = Timer::start("knn.load");
+            let knn = checkpoint::read_knn(&ckpt.knn).with_context(|| {
+                format!("resume-from weights needs the KNN checkpoint at {}", ckpt.knn.display())
+            })?;
+            metrics.set("knn.load_secs", t.report());
+            eprintln!("[pipeline] resumed KNN graph: n={} k={}", knn.n(), knn.k);
+            Some(knn)
+        } else {
+            None
+        }
+    };
+
+    // Stage 3: perplexity weights + parallel sharded symmetrization
+    // (skipped when resuming at `layout`, which reloads the CSR
+    // checkpoint).
+    let graph: CsrGraph = if resume <= Stage::Weights {
+        let knn = knn.as_ref().expect("knn graph available before weights stage");
+        let t = Timer::start("weights");
+        let graph = weighted_graph(knn, &cfg.weights);
+        metrics.set("weights.secs", t.report());
+        if cfg.save_checkpoints {
+            checkpoint::write_csr(&ckpt.graph, &graph)
+                .with_context(|| format!("write {}", ckpt.graph.display()))?;
+        }
+        graph
+    } else {
+        let t = Timer::start("weights.load");
+        let graph = checkpoint::read_csr(&ckpt.graph).with_context(|| {
+            format!("resume-from layout needs the graph checkpoint at {}", ckpt.graph.display())
+        })?;
+        metrics.set("weights.load_secs", t.report());
+        eprintln!(
+            "[pipeline] resumed weighted graph: n={} edges={}",
+            graph.n(),
+            graph.n_directed_edges()
+        );
+        graph
+    };
     metrics.set("graph.directed_edges", graph.n_directed_edges() as f64);
+
+    // A stale checkpoint directory (labels from a different run) must
+    // fail here, not index out of bounds deep in eval/render.
+    if let Some(ls) = &labels {
+        if ls.len() != graph.n() {
+            anyhow::bail!(
+                "{}: {} labels for a graph of {} vertices — stale checkpoint directory?",
+                ckpt.labels.display(),
+                ls.len(),
+                graph.n()
+            );
+        }
+    }
 
     // Stage 4: layout.
     let t = Timer::start("layout");
@@ -68,7 +254,7 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineOutput> {
     metrics.set("layout.samples_per_sec", report.throughput());
 
     // Stage 5: evaluation (labels permitting).
-    if let Some(labels) = &ds.labels {
+    if let Some(labels) = &labels {
         let t = Timer::start("eval");
         let acc = knn_accuracy(&layout, labels, &KnnEvalConfig::default());
         metrics.set("eval.secs", t.report());
@@ -77,23 +263,28 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineOutput> {
     }
 
     // Stage 6: outputs.
-    write_layout_tsv(&cfg.out_dir.join("layout.tsv"), &layout, ds.labels.as_deref())?;
+    write_layout_tsv(&cfg.out_dir.join("layout.tsv"), &layout, labels.as_deref())?;
     render_scatter(
         &cfg.out_dir.join("layout.svg"),
         &layout,
-        ds.labels.as_deref(),
-        ds.n_classes,
-        &ScatterStyle { title: ds.name.clone(), ..Default::default() },
+        labels.as_deref(),
+        n_classes,
+        &ScatterStyle { title, ..Default::default() },
     )?;
     std::fs::write(cfg.out_dir.join("report.json"), metrics.to_json())?;
     eprintln!("[pipeline] outputs in {}", cfg.out_dir.display());
 
-    Ok(PipelineOutput { layout, labels: ds.labels, metrics })
+    Ok(PipelineOutput { layout, labels, metrics })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let root = format!("largevis_pipeline_test_{}", std::process::id());
+        std::env::temp_dir().join(root).join(name)
+    }
 
     #[test]
     fn tiny_pipeline_end_to_end() {
@@ -101,7 +292,7 @@ mod tests {
             dataset: "20ng-like".into(),
             scale: 0.02, // ~380 points
             k: 10,
-            out_dir: std::env::temp_dir().join("largevis_pipeline_test"),
+            out_dir: test_dir("e2e"),
             ..Default::default()
         };
         cfg.vis.samples_per_vertex = 400;
@@ -113,5 +304,74 @@ mod tests {
         assert!(cfg.out_dir.join("report.json").exists());
         let report = std::fs::read_to_string(cfg.out_dir.join("report.json")).unwrap();
         crate::util::json::Json::parse(&report).unwrap();
+        // Checkpoints written by default.
+        let ckpt = CheckpointPaths::new(&cfg.out_dir);
+        assert!(ckpt.knn.exists());
+        assert!(ckpt.graph.exists());
+        assert!(ckpt.labels.exists());
+    }
+
+    #[test]
+    fn checkpoints_can_be_disabled() {
+        let mut cfg = PipelineConfig {
+            dataset: "20ng-like".into(),
+            scale: 0.02,
+            k: 5,
+            out_dir: test_dir("nockpt"),
+            save_checkpoints: false,
+            ..Default::default()
+        };
+        cfg.vis.samples_per_vertex = 100;
+        cfg.knn.forest.n_trees = 1;
+        run_pipeline(&cfg).unwrap();
+        assert!(!CheckpointPaths::new(&cfg.out_dir).dir.exists());
+    }
+
+    #[test]
+    fn resume_from_early_stages_rejected() {
+        for stage in [crate::config::Stage::Dataset, crate::config::Stage::Knn] {
+            let cfg = PipelineConfig {
+                out_dir: test_dir("early_resume"),
+                resume_from: Some(stage),
+                ..Default::default()
+            };
+            let err = run_pipeline(&cfg).unwrap_err().to_string();
+            assert!(err.contains("--resume-from supports"), "{err}");
+        }
+    }
+
+    #[test]
+    fn resume_without_checkpoint_fails_with_context() {
+        let cfg = PipelineConfig {
+            out_dir: test_dir("missing_ckpt"),
+            resume_from: Some(crate::config::Stage::Weights),
+            ..Default::default()
+        };
+        let err = format!("{:#}", run_pipeline(&cfg).unwrap_err());
+        assert!(err.contains("resume-from weights"), "{err}");
+    }
+
+    #[test]
+    fn ingests_binary_input_file() {
+        let dir = test_dir("ingest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (m, labels) = crate::data::synth::gaussian_mixture(150, 10, 3, 0.3, 9);
+        let input = dir.join("points.lvec");
+        crate::data::formats::binary::write_binary(&input, &m).unwrap();
+        let label_path = dir.join("points.lbl");
+        write_labels(&label_path, &labels).unwrap();
+        let mut cfg = PipelineConfig {
+            k: 5,
+            out_dir: dir.join("out"),
+            input: Some(input),
+            input_labels: Some(label_path),
+            ..Default::default()
+        };
+        cfg.vis.samples_per_vertex = 100;
+        cfg.knn.forest.n_trees = 1;
+        let out = run_pipeline(&cfg).unwrap();
+        assert_eq!(out.layout.n(), 150);
+        assert_eq!(out.labels.as_deref().unwrap(), &labels[..]);
+        assert!(out.metrics.get("eval.knn_accuracy").is_some());
     }
 }

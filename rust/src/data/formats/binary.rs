@@ -1,0 +1,388 @@
+//! Little-endian binary matrix format (`.lvec`) with streaming access.
+//!
+//! Layout: magic `LVEC`, `u32` version, `u64 n`, `u64 d`, then `n*d`
+//! `f32` values row-major. The format is identical to the one
+//! `data::io` has always written, so existing files stay readable; this
+//! module adds the pieces out-of-core ingestion needs:
+//!
+//! * [`ChunkedMatrixReader`] — pulls `chunk_rows` rows at a time into a
+//!   reused bounded buffer, so parsing a 10M-point file holds
+//!   `chunk_rows * d` floats, not `n * d`. The reader exposes its
+//!   buffer capacities so tests can *assert* the memory bound.
+//! * [`MatrixWriter`] — append rows without knowing `n` up front; the
+//!   header's count is patched on [`MatrixWriter::finish`].
+
+use crate::data::formats::{DEFAULT_CHUNK_ROWS, UNTRUSTED_CAPACITY_HINT};
+use crate::data::matrix::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// File magic for binary matrices.
+pub const MAGIC: &[u8; 4] = b"LVEC";
+/// Current format version.
+pub const VERSION: u32 = 1;
+/// Byte offset of the `n` field in the header (after magic + version).
+const N_OFFSET: u64 = 4 + 4;
+
+pub(crate) fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub(crate) fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Values per bulk-I/O block: large arrays are encoded/decoded through
+/// bounded reusable byte blocks instead of one `read_exact`/`write_all`
+/// per value (at target scale the arrays hold 10⁸+ entries).
+pub(crate) const IO_CHUNK: usize = 65_536;
+
+/// Encode `vals` little-endian into `w` through the reusable scratch
+/// `buf`, `IO_CHUNK` values per block. `WIDTH` is one value's byte
+/// width, inferred from `enc`'s return type.
+pub(crate) fn write_array<T: Copy, const WIDTH: usize>(
+    w: &mut impl Write,
+    vals: &[T],
+    buf: &mut Vec<u8>,
+    enc: impl Fn(T) -> [u8; WIDTH],
+) -> Result<()> {
+    for chunk in vals.chunks(IO_CHUNK) {
+        buf.clear();
+        for &v in chunk {
+            buf.extend_from_slice(&enc(v));
+        }
+        w.write_all(buf)?;
+    }
+    Ok(())
+}
+
+/// Read `n` little-endian values of `width` bytes each through a
+/// bounded reusable byte block, appending to `out`. `n` is untrusted:
+/// allocation grows with the data actually read, never with the
+/// header's claim.
+pub(crate) fn read_array<T>(
+    r: &mut impl Read,
+    n: usize,
+    width: usize,
+    out: &mut Vec<T>,
+    dec: impl Fn(&[u8]) -> T,
+) -> Result<()> {
+    let mut buf = vec![0u8; n.min(IO_CHUNK).max(1) * width];
+    let mut remaining = n;
+    while remaining > 0 {
+        let take = remaining.min(IO_CHUNK);
+        let block = &mut buf[..take * width];
+        r.read_exact(block)?;
+        out.extend(block.chunks_exact(width).map(&dec));
+        remaining -= take;
+    }
+    Ok(())
+}
+
+pub(crate) fn dec_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+pub(crate) fn dec_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Validate a 4-byte magic + `u32` version header. Shared by every
+/// on-disk format in the system (matrices, labels, checkpoints) so the
+/// header convention is implemented exactly once.
+pub(crate) fn check_magic(
+    r: &mut impl Read,
+    want: &[u8; 4],
+    want_version: u32,
+    path: &Path,
+) -> Result<()> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)
+        .with_context(|| format!("{}: truncated header", path.display()))?;
+    if &magic != want {
+        bail!(
+            "{}: bad magic {:?} (expected {:?})",
+            path.display(),
+            String::from_utf8_lossy(&magic),
+            String::from_utf8_lossy(want)
+        );
+    }
+    let version = read_u32(r)?;
+    if version != want_version {
+        bail!("{}: unsupported version {version}", path.display());
+    }
+    Ok(())
+}
+
+/// Streaming reader: `chunk_rows` rows per [`ChunkedMatrixReader::next_chunk`]
+/// call, into one reused buffer.
+pub struct ChunkedMatrixReader {
+    r: BufReader<std::fs::File>,
+    n: usize,
+    d: usize,
+    chunk_rows: usize,
+    rows_read: usize,
+    /// Reused decoded-value buffer (≤ chunk_rows * d floats).
+    buf: Vec<f32>,
+    /// Reused raw-byte buffer (≤ chunk_rows * d * 4 bytes).
+    bytes: Vec<u8>,
+}
+
+impl ChunkedMatrixReader {
+    /// Open `path` and parse the header; rows are not read yet.
+    pub fn open(path: &Path, chunk_rows: usize) -> Result<Self> {
+        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        check_magic(&mut r, MAGIC, VERSION, path)?;
+        let n = read_u64(&mut r)? as usize;
+        let d = read_u64(&mut r)? as usize;
+        crate::data::formats::check_shape(path, n, d)?;
+        Ok(ChunkedMatrixReader {
+            r,
+            n,
+            d,
+            chunk_rows: chunk_rows.max(1),
+            rows_read: 0,
+            buf: Vec::new(),
+            bytes: Vec::new(),
+        })
+    }
+
+    /// Total rows per the header.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Row dimensionality per the header.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Rows consumed so far.
+    pub fn rows_read(&self) -> usize {
+        self.rows_read
+    }
+
+    /// Peak size of the parse buffers in bytes — what tests assert the
+    /// memory bound on. Never exceeds `chunk_rows * d * 8` (4 bytes raw
+    /// + 4 bytes decoded per value).
+    pub fn parse_buffer_bytes(&self) -> usize {
+        self.buf.capacity() * 4 + self.bytes.capacity()
+    }
+
+    /// Read the next ≤ `chunk_rows` rows; `None` once all `n` rows are
+    /// consumed. The returned slice (`rows * d` values) aliases the
+    /// internal buffer and is valid until the next call. Chunks are
+    /// additionally capped so `chunk_rows × d` from an untrusted header
+    /// cannot drive a giant buffer allocation (a chunk always holds at
+    /// least one row).
+    pub fn next_chunk(&mut self) -> Result<Option<&[f32]>> {
+        let remaining = self.n - self.rows_read;
+        if remaining == 0 {
+            return Ok(None);
+        }
+        let row_cap = (UNTRUSTED_CAPACITY_HINT / self.d.max(1)).max(1);
+        let rows = remaining.min(self.chunk_rows).min(row_cap);
+        let values = rows * self.d;
+        self.bytes.resize(values * 4, 0);
+        let (lo, hi) = (self.rows_read, self.rows_read + rows);
+        self.r
+            .read_exact(&mut self.bytes)
+            .with_context(|| format!("truncated matrix: failed reading rows {lo}..{hi}"))?;
+        self.buf.clear();
+        self.buf.reserve(values);
+        for c in self.bytes.chunks_exact(4) {
+            self.buf.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        self.rows_read += rows;
+        Ok(Some(&self.buf))
+    }
+}
+
+/// Read a whole binary matrix through the chunked reader (bounded parse
+/// buffers; one final `n × d` allocation for the result).
+pub fn read_binary(path: &Path) -> Result<Matrix> {
+    let mut r = ChunkedMatrixReader::open(path, DEFAULT_CHUNK_ROWS)?;
+    let (n, d) = (r.n(), r.d());
+    // Capacity hint clamped: a lying header must hit a read error, not
+    // drive a terabyte reservation up front.
+    let mut data: Vec<f32> = Vec::with_capacity((n * d).min(UNTRUSTED_CAPACITY_HINT));
+    while let Some(chunk) = r.next_chunk()? {
+        data.extend_from_slice(chunk);
+    }
+    Ok(Matrix::from_vec(data, n, d))
+}
+
+/// Write a whole matrix to `path` in `.lvec` format.
+pub fn write_binary(path: &Path, m: &Matrix) -> Result<()> {
+    let mut w = MatrixWriter::create(path, m.d())?;
+    w.write_values(m.as_slice())?;
+    let n = w.finish()?;
+    debug_assert_eq!(n, m.n());
+    Ok(())
+}
+
+/// Append-only streaming writer; the header's `n` is patched at
+/// [`MatrixWriter::finish`], so callers can stream without knowing the
+/// row count up front.
+pub struct MatrixWriter {
+    w: BufWriter<std::fs::File>,
+    d: usize,
+    rows: usize,
+    partial: usize,
+    /// Reusable encode scratch for [`write_array`].
+    buf: Vec<u8>,
+    path: std::path::PathBuf,
+}
+
+impl MatrixWriter {
+    /// Create `path`, writing a header with a placeholder row count.
+    pub fn create(path: &Path, d: usize) -> Result<Self> {
+        let f =
+            std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&0u64.to_le_bytes())?; // n, patched in finish()
+        w.write_all(&(d as u64).to_le_bytes())?;
+        Ok(MatrixWriter { w, d, rows: 0, partial: 0, buf: Vec::new(), path: path.to_path_buf() })
+    }
+
+    /// Append one `d`-length row.
+    pub fn write_row(&mut self, row: &[f32]) -> Result<()> {
+        if row.len() != self.d {
+            bail!("{}: row of {} values, expected {}", self.path.display(), row.len(), self.d);
+        }
+        self.write_values(row)
+    }
+
+    /// Append raw values (any multiple of rows; partial rows are
+    /// tracked and rejected at finish). Values are block-encoded
+    /// through the reusable scratch buffer, not written one at a time.
+    pub fn write_values(&mut self, values: &[f32]) -> Result<()> {
+        write_array(&mut self.w, values, &mut self.buf, |v: f32| v.to_le_bytes())?;
+        if self.d > 0 {
+            let total = self.partial + values.len();
+            self.rows += total / self.d;
+            self.partial = total % self.d;
+        }
+        Ok(())
+    }
+
+    /// Rows fully written so far.
+    pub fn rows_written(&self) -> usize {
+        self.rows
+    }
+
+    /// Flush, patch the header's row count, and return it.
+    pub fn finish(mut self) -> Result<usize> {
+        if self.partial != 0 {
+            bail!(
+                "{}: {} trailing values do not form a full {}-d row",
+                self.path.display(),
+                self.partial,
+                self.d
+            );
+        }
+        self.w.flush()?;
+        let mut f = self.w.into_inner().map_err(|e| anyhow::anyhow!("flush: {e}"))?;
+        f.seek(SeekFrom::Start(N_OFFSET))?;
+        f.write_all(&(self.rows as u64).to_le_bytes())?;
+        f.flush()?;
+        Ok(self.rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("largevis_binary_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_bits() {
+        let m = Matrix::from_vec(
+            vec![0.0, -0.0, 1.5, f32::MIN_POSITIVE, -1e30, 3.25, 7.0, -2.5],
+            4,
+            2,
+        );
+        let p = tmp("rt.lvec");
+        write_binary(&p, &m).unwrap();
+        let back = read_binary(&p).unwrap();
+        for (a, b) in m.as_slice().iter().zip(back.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn chunked_reader_bounded_and_complete() {
+        let m = Matrix::from_vec((0..70).map(|x| x as f32 * 0.5).collect(), 10, 7);
+        let p = tmp("chunks.lvec");
+        write_binary(&p, &m).unwrap();
+        let mut r = ChunkedMatrixReader::open(&p, 3).unwrap();
+        assert_eq!((r.n(), r.d()), (10, 7));
+        let mut all = Vec::new();
+        while let Some(c) = r.next_chunk().unwrap() {
+            assert!(c.len() <= 3 * 7);
+            all.extend_from_slice(c);
+            assert!(r.parse_buffer_bytes() <= 3 * 7 * 8, "buffer grew past bound");
+        }
+        assert_eq!(all, m.as_slice());
+        assert_eq!(r.rows_read(), 10);
+        assert!(r.next_chunk().unwrap().is_none());
+    }
+
+    #[test]
+    fn streaming_writer_patches_count() {
+        let p = tmp("stream.lvec");
+        let mut w = MatrixWriter::create(&p, 3).unwrap();
+        for i in 0..5 {
+            w.write_row(&[i as f32, 0.5, -1.0]).unwrap();
+        }
+        assert_eq!(w.finish().unwrap(), 5);
+        let m = read_binary(&p).unwrap();
+        assert_eq!((m.n(), m.d()), (5, 3));
+        assert_eq!(m.row(4)[0], 4.0);
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let m = Matrix::from_vec(vec![1.0; 12], 4, 3);
+        let p = tmp("trunc.lvec");
+        write_binary(&p, &m).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 5]).unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+
+    #[test]
+    fn partial_row_rejected_at_finish() {
+        let p = tmp("partial.lvec");
+        let mut w = MatrixWriter::create(&p, 3).unwrap();
+        w.write_values(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert!(w.finish().is_err());
+    }
+
+    #[test]
+    fn bad_magic_and_version() {
+        let p = tmp("magic.lvec");
+        std::fs::write(&p, b"NOPE\x01\x00\x00\x00").unwrap();
+        assert!(read_binary(&p).is_err());
+        let mut good = Vec::new();
+        good.extend_from_slice(MAGIC);
+        good.extend_from_slice(&99u32.to_le_bytes());
+        good.extend_from_slice(&0u64.to_le_bytes());
+        good.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&p, &good).unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! Bit-exact binary checkpoints for the pipeline's expensive
+//! intermediates.
+//!
+//! The KNN stage dominates pipeline runtime (paper Fig 2 / Table 2), so
+//! it should be paid once per dataset, not once per layout experiment.
+//! These checkpoints make the stage boundary durable:
+//!
+//! * `.knn` (magic `LVKN`) — a [`KnnGraph`]: `u64 n`, `u64 k`, then per
+//!   row `u32 len` + `len × (u32 id, f32 sqdist)`.
+//! * `.csr` (magic `LVCS`) — a [`CsrGraph`]: `u64 n`, `u64 m` (directed
+//!   edge count), offsets `(n+1) × u64`, cols `m × u32`, weights
+//!   `m × f64`.
+//!
+//! All values little-endian; floats are serialized by bit pattern, so a
+//! round-trip is bit-identical (property-tested in
+//! `rust/tests/checkpoint_roundtrip.rs`). Reads validate magic,
+//! version, and structural invariants so a corrupt or truncated
+//! checkpoint fails with a message instead of a garbage graph.
+
+use crate::data::formats::binary::{
+    check_magic, dec_u32, dec_u64, read_array, read_u32, read_u64, write_array,
+};
+use crate::data::formats::UNTRUSTED_CAPACITY_HINT;
+use crate::graph::sparse::CsrGraph;
+use crate::knn::KnnGraph;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const KNN_MAGIC: &[u8; 4] = b"LVKN";
+const CSR_MAGIC: &[u8; 4] = b"LVCS";
+const VERSION: u32 = 1;
+
+fn open_writer(path: &Path, magic: &[u8; 4]) -> Result<BufWriter<std::fs::File>> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(magic)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    Ok(w)
+}
+
+fn open_reader(path: &Path, magic: &[u8; 4]) -> Result<BufReader<std::fs::File>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    check_magic(&mut r, magic, VERSION, path)?;
+    Ok(r)
+}
+
+/// Write a KNN graph checkpoint.
+pub fn write_knn(path: &Path, g: &KnnGraph) -> Result<()> {
+    let mut w = open_writer(path, KNN_MAGIC)?;
+    w.write_all(&(g.n() as u64).to_le_bytes())?;
+    w.write_all(&(g.k as u64).to_le_bytes())?;
+    let mut buf: Vec<u8> = Vec::new();
+    for row in &g.neighbors {
+        buf.clear();
+        buf.extend_from_slice(&(row.len() as u32).to_le_bytes());
+        for &(id, dist) in row {
+            buf.extend_from_slice(&id.to_le_bytes());
+            buf.extend_from_slice(&dist.to_bits().to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a KNN graph checkpoint (bit-identical to what was written).
+pub fn read_knn(path: &Path) -> Result<KnnGraph> {
+    let mut r = open_reader(path, KNN_MAGIC)?;
+    let n = read_u64(&mut r)? as usize;
+    let k = read_u64(&mut r)? as usize;
+    if n > (1usize << 40) || k > (1usize << 32) {
+        bail!("{}: implausible knn checkpoint shape n={n} k={k}", path.display());
+    }
+    // Capacity hints are clamped: a corrupt header must not drive a
+    // huge allocation before the reads themselves fail.
+    let mut neighbors = Vec::with_capacity(n.min(UNTRUSTED_CAPACITY_HINT));
+    let mut buf: Vec<u8> = Vec::new();
+    for i in 0..n {
+        let len = read_u32(&mut r)? as usize;
+        if len > n || len > (1 << 24) {
+            bail!("{}: row {i} has implausible length {len} (n={n})", path.display());
+        }
+        buf.clear();
+        buf.resize(len * 8, 0);
+        r.read_exact(&mut buf)
+            .with_context(|| format!("{}: truncated at row {i}", path.display()))?;
+        let mut row = Vec::with_capacity(len);
+        for pair in buf.chunks_exact(8) {
+            let id = dec_u32(&pair[..4]);
+            if id as usize >= n || id as usize == i {
+                bail!("{}: row {i}: invalid neighbor id {id} (n={n})", path.display());
+            }
+            row.push((id, f32::from_bits(dec_u32(&pair[4..]))));
+        }
+        neighbors.push(row);
+    }
+    Ok(KnnGraph { neighbors, k })
+}
+
+/// Write a CSR graph checkpoint.
+pub fn write_csr(path: &Path, g: &CsrGraph) -> Result<()> {
+    let mut w = open_writer(path, CSR_MAGIC)?;
+    w.write_all(&(g.n() as u64).to_le_bytes())?;
+    w.write_all(&(g.cols().len() as u64).to_le_bytes())?;
+    let mut buf: Vec<u8> = Vec::new();
+    write_array(&mut w, g.offsets(), &mut buf, |o: u64| o.to_le_bytes())?;
+    write_array(&mut w, g.cols(), &mut buf, |c: u32| c.to_le_bytes())?;
+    write_array(&mut w, g.weights(), &mut buf, |x: f64| x.to_bits().to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a CSR graph checkpoint; structure is re-validated via
+/// [`CsrGraph::from_raw_parts`], and the flat edge list is rebuilt
+/// deterministically.
+pub fn read_csr(path: &Path) -> Result<CsrGraph> {
+    let mut r = open_reader(path, CSR_MAGIC)?;
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    if n > (1usize << 40) || m > (1usize << 40) {
+        bail!("{}: implausible csr checkpoint shape n={n} m={m}", path.display());
+    }
+    // Capacity hints clamped; `read_array` grows with the data actually
+    // present, so a lying header hits a read error, not a huge alloc.
+    let mut offsets: Vec<u64> = Vec::with_capacity((n + 1).min(UNTRUSTED_CAPACITY_HINT));
+    read_array(&mut r, n + 1, 8, &mut offsets, dec_u64)
+        .with_context(|| format!("{}: truncated offsets", path.display()))?;
+    let mut cols: Vec<u32> = Vec::with_capacity(m.min(UNTRUSTED_CAPACITY_HINT));
+    read_array(&mut r, m, 4, &mut cols, dec_u32)
+        .with_context(|| format!("{}: truncated cols", path.display()))?;
+    let mut weights: Vec<f64> = Vec::with_capacity(m.min(UNTRUSTED_CAPACITY_HINT));
+    read_array(&mut r, m, 8, &mut weights, |b: &[u8]| f64::from_bits(dec_u64(b)))
+        .with_context(|| format!("{}: truncated weights", path.display()))?;
+    CsrGraph::from_raw_parts(offsets, cols, weights)
+        .map_err(|e| anyhow::anyhow!("{}: corrupt checkpoint: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("largevis_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn knn_roundtrip_with_empty_rows() {
+        let mut g = KnnGraph::empty(4, 3);
+        g.neighbors[0] = vec![(1, 0.25), (2, 0.5), (3, 1.0)];
+        g.neighbors[2] = vec![(0, 0.5)];
+        // rows 1 and 3 stay empty
+        let p = tmp("g.knn");
+        write_knn(&p, &g).unwrap();
+        let back = read_knn(&p).unwrap();
+        assert_eq!(back.k, 3);
+        assert_eq!(back.n(), 4);
+        for (a, b) in g.neighbors.iter().zip(&back.neighbors) {
+            assert_eq!(a.len(), b.len());
+            for (&(ia, da), &(ib, db)) in a.iter().zip(b) {
+                assert_eq!(ia, ib);
+                assert_eq!(da.to_bits(), db.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn csr_roundtrip_identical() {
+        let g = CsrGraph::from_undirected(5, &[(0, 1, 0.125), (1, 2, 1e-300), (3, 4, 7.5)]);
+        let p = tmp("g.csr");
+        write_csr(&p, &g).unwrap();
+        let back = read_csr(&p).unwrap();
+        assert_eq!(g, back);
+        assert_eq!(g.edges(), back.edges());
+    }
+
+    #[test]
+    fn cross_format_reads_rejected() {
+        let g = CsrGraph::from_undirected(3, &[(0, 1, 1.0)]);
+        let p = tmp("cross.csr");
+        write_csr(&p, &g).unwrap();
+        assert!(read_knn(&p).is_err(), "knn reader must reject csr magic");
+        let mut k = KnnGraph::empty(2, 1);
+        k.neighbors[0] = vec![(1, 1.0)];
+        let p2 = tmp("cross.knn");
+        write_knn(&p2, &k).unwrap();
+        assert!(read_csr(&p2).is_err(), "csr reader must reject knn magic");
+    }
+
+    #[test]
+    fn truncated_checkpoint_rejected() {
+        let g = CsrGraph::from_undirected(4, &[(0, 1, 1.0), (2, 3, 2.0)]);
+        let p = tmp("trunc.csr");
+        write_csr(&p, &g).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(read_csr(&p).is_err());
+    }
+
+    #[test]
+    fn out_of_range_neighbor_rejected() {
+        let mut g = KnnGraph::empty(2, 1);
+        g.neighbors[0] = vec![(1, 1.0)];
+        let p = tmp("oor.knn");
+        write_knn(&p, &g).unwrap();
+        // Patch the neighbor id to 9 (out of range for n=2).
+        let mut bytes = std::fs::read(&p).unwrap();
+        let row0_id_off = 4 + 4 + 8 + 8 + 4; // magic+ver+n+k+len
+        bytes[row0_id_off..row0_id_off + 4].copy_from_slice(&9u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_knn(&p).is_err());
+    }
+}

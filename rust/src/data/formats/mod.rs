@@ -1,0 +1,241 @@
+//! On-disk dataset and checkpoint formats — the ingestion layer that
+//! replaces "generation stands in for I/O" with real files.
+//!
+//! Three formats live here:
+//!
+//! * [`text`] — the original LargeVis text format (`n d` header, then
+//!   `n` whitespace-separated rows), parsed with a bounded row buffer.
+//! * [`binary`] — the little-endian `.lvec` binary matrix format with
+//!   a streaming chunked reader ([`binary::ChunkedMatrixReader`]) and
+//!   an append-only writer ([`binary::MatrixWriter`]), so a dataset
+//!   never needs to fit in one allocation during parse.
+//! * [`checkpoint`] — bit-exact serialization of the pipeline's two
+//!   expensive intermediates ([`crate::knn::KnnGraph`] and
+//!   [`crate::graph::CsrGraph`]), the substrate for
+//!   `--resume-from <stage>`.
+//!
+//! All integers and floats are little-endian; every format starts with
+//! a 4-byte magic and a `u32` version so corruption and accidental
+//! cross-format reads fail loudly instead of mis-parsing.
+
+pub mod binary;
+pub mod checkpoint;
+pub mod text;
+
+use crate::data::matrix::Matrix;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Default rows per parse chunk for every streaming reader (at d=100
+/// this is ~25 MB of parse buffer).
+pub const DEFAULT_CHUNK_ROWS: usize = 65_536;
+
+/// Cap for capacity *hints* derived from untrusted file headers: the
+/// vectors still grow to the real data size, but a lying header can
+/// only pre-reserve this much before the reads themselves fail.
+pub(crate) const UNTRUSTED_CAPACITY_HINT: usize = 1 << 20;
+
+/// A recognized input-matrix file format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputFormat {
+    /// LargeVis text: `n d` header + whitespace rows.
+    LargeVisText,
+    /// `.lvec` little-endian binary matrix.
+    Binary,
+}
+
+/// Detect the format of `path` by sniffing the first bytes: the binary
+/// magic wins, anything else is treated as text.
+pub fn detect_format(path: &Path) -> Result<InputFormat> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut head = [0u8; 4];
+    match f.read_exact(&mut head) {
+        Ok(()) if &head == binary::MAGIC => Ok(InputFormat::Binary),
+        _ => Ok(InputFormat::LargeVisText),
+    }
+}
+
+/// Read a matrix from `path` in whichever supported format it is in.
+///
+/// Binary files go through the chunked reader (bounded parse buffer);
+/// text files go through the line parser. The returned [`Matrix`] is of
+/// course one allocation — the bound applies to the *parse* buffers.
+pub fn read_any(path: &Path) -> Result<Matrix> {
+    match detect_format(path)? {
+        InputFormat::Binary => binary::read_binary(path),
+        InputFormat::LargeVisText => text::read_text(path),
+    }
+}
+
+/// Stream a matrix from `path` chunk-by-chunk into `sink(rows, n_rows)`
+/// without materializing it; returns `(n, d)`. `chunk_rows` bounds the
+/// parse buffer for both formats.
+pub fn stream_any(
+    path: &Path,
+    chunk_rows: usize,
+    mut sink: impl FnMut(&[f32], usize) -> Result<()>,
+) -> Result<(usize, usize)> {
+    match detect_format(path)? {
+        InputFormat::Binary => {
+            let mut r = binary::ChunkedMatrixReader::open(path, chunk_rows)?;
+            let (n, d) = (r.n(), r.d());
+            while let Some(chunk) = r.next_chunk()? {
+                let rows = chunk.len() / d.max(1);
+                sink(chunk, rows)?;
+            }
+            Ok((n, d))
+        }
+        InputFormat::LargeVisText => text::stream_text(path, chunk_rows, sink),
+    }
+}
+
+/// Convert between the two input formats by extension of `dst`
+/// (`.txt`/`.tsv` → text, anything else → binary), streaming through a
+/// bounded buffer in both directions.
+pub fn convert(src: &Path, dst: &Path, chunk_rows: usize) -> Result<(usize, usize)> {
+    // Creating the destination truncates it — converting a file onto
+    // itself (directly or via a symlink) would destroy the input
+    // before it is ever read.
+    if let (Ok(a), Ok(b)) = (src.canonicalize(), dst.canonicalize()) {
+        if a == b {
+            bail!("{}: source and destination are the same file", src.display());
+        }
+    }
+    let to_text = matches!(
+        dst.extension().and_then(|e| e.to_str()),
+        Some("txt") | Some("tsv") | Some("text")
+    );
+    if to_text {
+        // Text needs n in the header before any row, so probe the
+        // source header first (cheap for both formats). The file could
+        // change between this open and the streaming one, so every
+        // chunk re-checks the row width instead of trusting the peek.
+        let (n, d) = peek_shape(src)?;
+        let mut w = text::TextMatrixWriter::create(dst, n, d)?;
+        stream_any(src, chunk_rows, |rows, n_rows| {
+            let dd = if n_rows > 0 { rows.len() / n_rows } else { d };
+            if dd != d {
+                bail!("{}: dimensionality changed during read ({d} -> {dd})", src.display());
+            }
+            for r in 0..n_rows {
+                w.write_row(&rows[r * d..(r + 1) * d])?;
+            }
+            Ok(())
+        })?;
+        w.finish()?;
+        Ok((n, d))
+    } else {
+        let (_, d) = peek_shape(src)?;
+        let mut w = binary::MatrixWriter::create(dst, d)?;
+        let shape = stream_any(src, chunk_rows, |rows, n_rows| {
+            let dd = if n_rows > 0 { rows.len() / n_rows } else { d };
+            if dd != d {
+                bail!("{}: dimensionality changed during read ({d} -> {dd})", src.display());
+            }
+            w.write_values(rows)
+        })?;
+        w.finish()?;
+        Ok(shape)
+    }
+}
+
+/// Read just the `(n, d)` shape of a matrix file (either format).
+pub fn peek_shape(path: &Path) -> Result<(usize, usize)> {
+    match detect_format(path)? {
+        InputFormat::Binary => {
+            let r = binary::ChunkedMatrixReader::open(path, 1)?;
+            Ok((r.n(), r.d()))
+        }
+        InputFormat::LargeVisText => text::read_header(path),
+    }
+}
+
+/// Guard against absurd headers before allocating (`n*d` must fit and
+/// stay under a sanity cap of 2^40 values).
+pub(crate) fn check_shape(path: &Path, n: usize, d: usize) -> Result<usize> {
+    let total = n.checked_mul(d).with_context(|| format!("{}: n*d overflow", path.display()))?;
+    if d == 0 && n > 0 {
+        bail!("{}: zero-dimensional rows", path.display());
+    }
+    if total > (1usize << 40) {
+        bail!("{}: implausible shape {n}x{d}", path.display());
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("largevis_formats_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample() -> Matrix {
+        Matrix::from_vec((0..40).map(|x| x as f32 * 0.25 - 3.0).collect(), 8, 5)
+    }
+
+    #[test]
+    fn detect_by_magic() {
+        let m = sample();
+        let pb = tmp("detect.lvec");
+        binary::write_binary(&pb, &m).unwrap();
+        assert_eq!(detect_format(&pb).unwrap(), InputFormat::Binary);
+        let pt = tmp("detect.txt");
+        text::write_text(&pt, &m).unwrap();
+        assert_eq!(detect_format(&pt).unwrap(), InputFormat::LargeVisText);
+    }
+
+    #[test]
+    fn read_any_both_formats() {
+        let m = sample();
+        let pb = tmp("any.lvec");
+        binary::write_binary(&pb, &m).unwrap();
+        assert_eq!(read_any(&pb).unwrap(), m);
+        let pt = tmp("any.txt");
+        text::write_text(&pt, &m).unwrap();
+        assert_eq!(read_any(&pt).unwrap(), m);
+    }
+
+    #[test]
+    fn convert_roundtrip_both_ways() {
+        let m = sample();
+        let a = tmp("conv_a.lvec");
+        binary::write_binary(&a, &m).unwrap();
+        let b = tmp("conv_b.txt");
+        assert_eq!(convert(&a, &b, 3).unwrap(), (8, 5));
+        let c = tmp("conv_c.lvec");
+        assert_eq!(convert(&b, &c, 3).unwrap(), (8, 5));
+        assert_eq!(read_any(&c).unwrap(), m);
+    }
+
+    #[test]
+    fn convert_refuses_same_file() {
+        let m = sample();
+        let p = tmp("same.lvec");
+        binary::write_binary(&p, &m).unwrap();
+        assert!(convert(&p, &p, 4).is_err());
+        // The input must be untouched.
+        assert_eq!(read_any(&p).unwrap(), m);
+    }
+
+    #[test]
+    fn stream_any_bounded_chunks() {
+        let m = sample();
+        let p = tmp("stream.lvec");
+        binary::write_binary(&p, &m).unwrap();
+        let mut collected = Vec::new();
+        let (n, d) = stream_any(&p, 3, |rows, n_rows| {
+            assert!(n_rows <= 3);
+            assert_eq!(rows.len(), n_rows * 5);
+            collected.extend_from_slice(rows);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!((n, d), (8, 5));
+        assert_eq!(collected, m.as_slice());
+    }
+}

@@ -1,0 +1,282 @@
+//! The original LargeVis text input format.
+//!
+//! Line 1: `n d` (point count, dimensionality). Then exactly `n` data
+//! rows of `d` whitespace-separated floats. Accepted liberally on the
+//! way in: CRLF or LF line endings, runs of spaces/tabs, scientific
+//! notation (`1e-3`, `-2.5E2`, `+1.5e+2`), and blank lines (skipped).
+//! Rejected loudly: ragged rows (wrong value count), unparsable or
+//! non-finite floats (`nan`/`inf` would silently poison every distance
+//! downstream), and a row count that disagrees with the header — each
+//! with a 1-based line number so multi-gigabyte files are debuggable.
+//!
+//! Parsing is streaming: rows are accumulated into a bounded
+//! `chunk_rows × d` buffer and flushed to the caller's sink, so the
+//! parse never holds more than one chunk regardless of file size.
+
+use crate::data::formats::{DEFAULT_CHUNK_ROWS, UNTRUSTED_CAPACITY_HINT};
+use crate::data::matrix::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Read just the `n d` header of a LargeVis text file.
+pub fn read_header(path: &Path) -> Result<(usize, usize)> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut line = String::new();
+    r.read_line(&mut line).with_context(|| format!("read {}", path.display()))?;
+    parse_header(path, &line)
+}
+
+fn parse_header(path: &Path, line: &str) -> Result<(usize, usize)> {
+    let mut it = line.split_ascii_whitespace();
+    let (Some(ns), Some(ds), None) = (it.next(), it.next(), it.next()) else {
+        bail!("{}:1: header must be exactly `n d`, got {:?}", path.display(), line.trim_end());
+    };
+    let n: usize = ns
+        .parse()
+        .map_err(|_| anyhow::anyhow!("{}:1: bad point count {ns:?}", path.display()))?;
+    let d: usize = ds
+        .parse()
+        .map_err(|_| anyhow::anyhow!("{}:1: bad dimensionality {ds:?}", path.display()))?;
+    crate::data::formats::check_shape(path, n, d)?;
+    Ok((n, d))
+}
+
+/// Stream-parse `path`, delivering rows to `sink(values, n_rows)` in
+/// chunks of at most `chunk_rows` rows (`values.len() == n_rows * d`).
+/// Returns `(n, d)` from the header. The parse buffer is bounded by
+/// `chunk_rows * d` floats.
+pub fn stream_text(
+    path: &Path,
+    chunk_rows: usize,
+    mut sink: impl FnMut(&[f32], usize) -> Result<()>,
+) -> Result<(usize, usize)> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut line = String::new();
+    r.read_line(&mut line).with_context(|| format!("read {}", path.display()))?;
+    let (n, d) = parse_header(path, &line)?;
+
+    let chunk_rows = chunk_rows.max(1);
+    let hint = (chunk_rows.min(n.max(1)) * d).min(UNTRUSTED_CAPACITY_HINT);
+    let mut buf: Vec<f32> = Vec::with_capacity(hint);
+    let mut rows_in_buf = 0usize;
+    let mut rows_seen = 0usize;
+    let mut line_no = 1usize; // header was line 1
+    loop {
+        line.clear();
+        let bytes = r.read_line(&mut line).with_context(|| format!("read {}", path.display()))?;
+        if bytes == 0 {
+            break;
+        }
+        line_no += 1;
+        // `split_ascii_whitespace` treats `\r` as whitespace, so CRLF
+        // endings need no special casing.
+        let mut count = 0usize;
+        for tok in line.split_ascii_whitespace() {
+            let v: f32 = tok.parse().map_err(|_| {
+                anyhow::anyhow!("{}:{line_no}: unparsable value {tok:?}", path.display())
+            })?;
+            if !v.is_finite() {
+                bail!("{}:{line_no}: non-finite value {tok:?}", path.display());
+            }
+            buf.push(v);
+            count += 1;
+        }
+        if count == 0 {
+            continue; // blank line
+        }
+        if count != d {
+            bail!(
+                "{}:{line_no}: ragged row — {count} values, expected {d}",
+                path.display()
+            );
+        }
+        rows_seen += 1;
+        if rows_seen > n {
+            bail!(
+                "{}:{line_no}: more data rows than the header's n={n}",
+                path.display()
+            );
+        }
+        rows_in_buf += 1;
+        if rows_in_buf == chunk_rows {
+            sink(&buf, rows_in_buf)?;
+            buf.clear();
+            rows_in_buf = 0;
+        }
+    }
+    if rows_in_buf > 0 {
+        sink(&buf, rows_in_buf)?;
+    }
+    if rows_seen != n {
+        bail!("{}: {rows_seen} data rows, header says n={n}", path.display());
+    }
+    Ok((n, d))
+}
+
+/// Read a whole LargeVis text file into a [`Matrix`] (streamed through
+/// the chunked parser into one preallocated buffer).
+pub fn read_text(path: &Path) -> Result<Matrix> {
+    let (n, d) = read_header(path)?;
+    // Capacity hint clamped: the header is untrusted input.
+    let mut data: Vec<f32> = Vec::with_capacity((n * d).min(UNTRUSTED_CAPACITY_HINT));
+    stream_text(path, DEFAULT_CHUNK_ROWS, |vals, _| {
+        data.extend_from_slice(vals);
+        Ok(())
+    })?;
+    Ok(Matrix::from_vec(data, n, d))
+}
+
+/// Write a matrix in LargeVis text format. Values are printed with
+/// Rust's shortest-roundtrip float formatting, so text output parses
+/// back bit-identically.
+pub fn write_text(path: &Path, m: &Matrix) -> Result<()> {
+    let mut w = TextMatrixWriter::create(path, m.n(), m.d())?;
+    for i in 0..m.n() {
+        w.write_row(m.row(i))?;
+    }
+    w.finish()
+}
+
+/// Streaming row-by-row text writer (header first, so `n` must be
+/// known up front — use the binary format when it is not).
+pub struct TextMatrixWriter {
+    w: BufWriter<std::fs::File>,
+    n: usize,
+    d: usize,
+    written: usize,
+    path: std::path::PathBuf,
+}
+
+impl TextMatrixWriter {
+    /// Create `path` and write the `n d` header.
+    pub fn create(path: &Path, n: usize, d: usize) -> Result<Self> {
+        let f =
+            std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "{n} {d}")?;
+        Ok(TextMatrixWriter { w, n, d, written: 0, path: path.to_path_buf() })
+    }
+
+    /// Append one row (must be called exactly `n` times).
+    pub fn write_row(&mut self, row: &[f32]) -> Result<()> {
+        if row.len() != self.d {
+            bail!("{}: row of {} values, expected {}", self.path.display(), row.len(), self.d);
+        }
+        for (i, v) in row.iter().enumerate() {
+            if i > 0 {
+                self.w.write_all(b" ")?;
+            }
+            write!(self.w, "{v}")?;
+        }
+        self.w.write_all(b"\n")?;
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Flush and verify the row count matches the header.
+    pub fn finish(mut self) -> Result<()> {
+        self.w.flush()?;
+        if self.written != self.n {
+            bail!("{}: wrote {} rows, header says {}", self.path.display(), self.written, self.n);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("largevis_text_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let m = Matrix::from_vec(
+            vec![0.1, -2.5e-8, 3.0, f32::MIN_POSITIVE, 1e30, -0.0, 7.25, 42.0],
+            4,
+            2,
+        );
+        let p = tmp("rt.txt");
+        write_text(&p, &m).unwrap();
+        let back = read_text(&p).unwrap();
+        assert_eq!(m.n(), back.n());
+        for (a, b) in m.as_slice().iter().zip(back.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn header_errors() {
+        let p = tmp("hdr.txt");
+        std::fs::write(&p, "3\n1 2 3\n").unwrap();
+        assert!(read_text(&p).is_err());
+        std::fs::write(&p, "a b\n").unwrap();
+        assert!(read_text(&p).is_err());
+        std::fs::write(&p, "2 3 4\n").unwrap();
+        assert!(read_text(&p).is_err());
+    }
+
+    #[test]
+    fn row_count_mismatch_detected() {
+        let p = tmp("count.txt");
+        std::fs::write(&p, "3 2\n1 2\n3 4\n").unwrap();
+        let err = read_text(&p).unwrap_err().to_string();
+        assert!(err.contains("header says n=3"), "{err}");
+        std::fs::write(&p, "1 2\n1 2\n3 4\n").unwrap();
+        let err = read_text(&p).unwrap_err().to_string();
+        assert!(err.contains("more data rows"), "{err}");
+    }
+
+    #[test]
+    fn blank_lines_skipped() {
+        let p = tmp("blank.txt");
+        std::fs::write(&p, "2 2\n\n1 2\n\n3 4\n\n").unwrap();
+        let m = read_text(&p).unwrap();
+        assert_eq!(m.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn non_finite_values_rejected() {
+        let p = tmp("nonfinite.txt");
+        for bad in ["nan", "NaN", "inf", "-inf", "1e9999"] {
+            std::fs::write(&p, format!("1 2\n0.5 {bad}\n")).unwrap();
+            let err = read_text(&p).unwrap_err().to_string();
+            assert!(err.contains(":2:"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn chunked_stream_bounded() {
+        let p = tmp("chunk.txt");
+        let m = Matrix::from_vec((0..30).map(|x| x as f32).collect(), 10, 3);
+        write_text(&p, &m).unwrap();
+        let mut all = Vec::new();
+        let mut chunks = 0;
+        stream_text(&p, 4, |vals, rows| {
+            assert!(rows <= 4);
+            assert_eq!(vals.len(), rows * 3);
+            all.extend_from_slice(vals);
+            chunks += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(chunks, 3); // 4 + 4 + 2
+        assert_eq!(all, m.as_slice());
+    }
+
+    #[test]
+    fn writer_checks_shape() {
+        let p = tmp("shape.txt");
+        let mut w = TextMatrixWriter::create(&p, 2, 3).unwrap();
+        assert!(w.write_row(&[1.0, 2.0]).is_err());
+        w.write_row(&[1.0, 2.0, 3.0]).unwrap();
+        assert!(w.finish().is_err()); // only 1 of 2 rows written
+    }
+}

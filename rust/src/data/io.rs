@@ -1,57 +1,30 @@
-//! Binary dataset I/O.
+//! Dataset I/O: labels, layout TSV, and the binary matrix entrypoints.
 //!
-//! Format (`.lvec`, little-endian): magic `LVEC`, u32 version, u64 n,
-//! u64 d, then `n*d` f32 values. Labels (`.lbl`): magic `LLBL`, u32
-//! version, u64 n, then `n` u32 class ids. Layouts re-use `.lvec`.
-//! Simple, mmap-friendly, and round-trips exactly.
+//! The binary matrix format (`.lvec`) is defined in
+//! [`crate::data::formats::binary`] together with its streaming chunked
+//! reader/writer; [`read_matrix`]/[`write_matrix`] here are the stable
+//! whole-matrix convenience wrappers every existing caller imports.
+//! Labels (`.lbl`, little-endian): magic `LLBL`, u32 version, u64 n,
+//! then `n` u32 class ids.
 
+use crate::data::formats::binary;
 use crate::data::matrix::Matrix;
 use anyhow::{bail, Context, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Write};
 use std::path::Path;
 
-const VEC_MAGIC: &[u8; 4] = b"LVEC";
 const LBL_MAGIC: &[u8; 4] = b"LLBL";
 const VERSION: u32 = 1;
 
 /// Write a matrix to `path` in `.lvec` format.
 pub fn write_matrix(path: &Path, m: &Matrix) -> Result<()> {
-    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
-    let mut w = BufWriter::new(f);
-    w.write_all(VEC_MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&(m.n() as u64).to_le_bytes())?;
-    w.write_all(&(m.d() as u64).to_le_bytes())?;
-    for &x in m.as_slice() {
-        w.write_all(&x.to_le_bytes())?;
-    }
-    w.flush()?;
-    Ok(())
+    binary::write_binary(path, m)
 }
 
-/// Read a `.lvec` matrix.
+/// Read a `.lvec` matrix (whole-file; for bounded-memory streaming use
+/// [`crate::data::formats::binary::ChunkedMatrixReader`]).
 pub fn read_matrix(path: &Path) -> Result<Matrix> {
-    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
-    let mut r = BufReader::new(f);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != VEC_MAGIC {
-        bail!("{}: bad magic {:?}", path.display(), magic);
-    }
-    let version = read_u32(&mut r)?;
-    if version != VERSION {
-        bail!("{}: unsupported version {version}", path.display());
-    }
-    let n = read_u64(&mut r)? as usize;
-    let d = read_u64(&mut r)? as usize;
-    let total = n.checked_mul(d).context("n*d overflow")?;
-    let mut bytes = vec![0u8; total * 4];
-    r.read_exact(&mut bytes)?;
-    let data: Vec<f32> = bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect();
-    Ok(Matrix::from_vec(data, n, d))
+    binary::read_binary(path)
 }
 
 /// Write class labels to `path` in `.lbl` format.
@@ -61,30 +34,30 @@ pub fn write_labels(path: &Path, labels: &[u32]) -> Result<()> {
     w.write_all(LBL_MAGIC)?;
     w.write_all(&VERSION.to_le_bytes())?;
     w.write_all(&(labels.len() as u64).to_le_bytes())?;
-    for &l in labels {
-        w.write_all(&l.to_le_bytes())?;
-    }
+    binary::write_array(&mut w, labels, &mut Vec::new(), |l: u32| l.to_le_bytes())?;
     w.flush()?;
     Ok(())
 }
 
 /// Read a `.lbl` label file.
+///
+/// The header's count is untrusted input: it is sanity-capped and the
+/// ids are read through a bounded chunk buffer, so a corrupt or hostile
+/// header yields an error instead of a huge allocation (or, via
+/// `n * 4` overflow, a silently empty result).
 pub fn read_labels(path: &Path) -> Result<Vec<u32>> {
     let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut r = BufReader::new(f);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != LBL_MAGIC {
-        bail!("{}: bad magic {:?}", path.display(), magic);
+    binary::check_magic(&mut r, LBL_MAGIC, VERSION, path)?;
+    let n = binary::read_u64(&mut r)? as usize;
+    if n > (1usize << 40) {
+        bail!("{}: implausible label count {n}", path.display());
     }
-    let version = read_u32(&mut r)?;
-    if version != VERSION {
-        bail!("{}: unsupported version {version}", path.display());
-    }
-    let n = read_u64(&mut r)? as usize;
-    let mut bytes = vec![0u8; n * 4];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    let hint = n.min(crate::data::formats::UNTRUSTED_CAPACITY_HINT);
+    let mut out: Vec<u32> = Vec::with_capacity(hint);
+    binary::read_array(&mut r, n, 4, &mut out, binary::dec_u32)
+        .with_context(|| format!("{}: truncated label file", path.display()))?;
+    Ok(out)
 }
 
 /// Write a 2D layout as TSV (`x<TAB>y[<TAB>label]`) for external tools.
@@ -103,24 +76,12 @@ pub fn write_layout_tsv(path: &Path, layout: &Matrix, labels: Option<&[u32]>) ->
     Ok(())
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn tmp(name: &str) -> std::path::PathBuf {
-        let dir = std::env::temp_dir().join("largevis_io_tests");
+        let dir = std::env::temp_dir().join(format!("largevis_io_tests_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         dir.join(name)
     }
@@ -148,6 +109,27 @@ mod tests {
         std::fs::write(&p, b"NOPE00000000").unwrap();
         assert!(read_matrix(&p).is_err());
         assert!(read_labels(&p).is_err());
+    }
+
+    #[test]
+    fn corrupt_label_header_rejected() {
+        let p = tmp("huge.lbl");
+        // Implausible count must error, not allocate.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"LLBL");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_labels(&p).is_err());
+        // Truncated body: header says 10 labels, only 2 present.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"LLBL");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&10u64.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 8]);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_labels(&p).unwrap_err().to_string();
+        assert!(err.contains("truncated label file"), "{err}");
     }
 
     #[test]

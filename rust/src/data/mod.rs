@@ -8,6 +8,7 @@
 
 pub mod matrix;
 pub mod io;
+pub mod formats;
 pub mod synth;
 pub mod datasets;
 

@@ -3,7 +3,7 @@
 //! edge plus a flat edge list for O(1) alias-sampled access.
 
 /// CSR weighted graph.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CsrGraph {
     /// Row offsets, length n+1.
     offsets: Vec<u64>,
@@ -53,14 +53,48 @@ impl CsrGraph {
                 weights[lo + slot] = w;
             }
         }
-        let mut edges = Vec::with_capacity(m2);
-        for i in 0..n {
-            let (lo, hi) = (offsets[i] as usize, offsets[i + 1] as usize);
-            for e in lo..hi {
-                edges.push((i as u32, cols[e], weights[e]));
-            }
-        }
+        let edges = build_edge_list(&offsets, &cols, &weights);
         CsrGraph { offsets, cols, weights, edges }
+    }
+
+    /// Assemble a graph directly from CSR arrays (e.g. the parallel
+    /// symmetrizer's shard outputs, or a checkpoint read back from
+    /// disk). Validates structure; the flat edge list is rebuilt
+    /// deterministically from the arrays.
+    ///
+    /// Unlike [`CsrGraph::from_undirected`] this does not sort rows or
+    /// deduplicate — the arrays are stored verbatim, which is what
+    /// makes checkpoint round-trips bit-identical.
+    pub fn from_raw_parts(
+        offsets: Vec<u64>,
+        cols: Vec<u32>,
+        weights: Vec<f64>,
+    ) -> Result<Self, String> {
+        if offsets.is_empty() {
+            return Err("offsets must have length n+1 >= 1".into());
+        }
+        if offsets[0] != 0 {
+            return Err(format!("offsets[0] = {} != 0", offsets[0]));
+        }
+        if offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err("offsets not monotone".into());
+        }
+        if *offsets.last().unwrap() != cols.len() as u64 {
+            return Err(format!(
+                "offsets end {} != cols len {}",
+                offsets.last().unwrap(),
+                cols.len()
+            ));
+        }
+        if cols.len() != weights.len() {
+            return Err(format!("cols len {} != weights len {}", cols.len(), weights.len()));
+        }
+        let n = offsets.len() - 1;
+        if let Some(&bad) = cols.iter().find(|&&c| c as usize >= n) {
+            return Err(format!("column {bad} out of range for n={n}"));
+        }
+        let edges = build_edge_list(&offsets, &cols, &weights);
+        Ok(CsrGraph { offsets, cols, weights, edges })
     }
 
     /// Number of vertices.
@@ -99,6 +133,38 @@ impl CsrGraph {
     pub fn edges(&self) -> &[(u32, u32, f64)] {
         &self.edges
     }
+
+    /// Raw row offsets (length n+1) — checkpoint serialization.
+    #[inline]
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    /// Raw column ids aligned with [`CsrGraph::weights`].
+    #[inline]
+    pub fn cols(&self) -> &[u32] {
+        &self.cols
+    }
+
+    /// Raw edge weights aligned with [`CsrGraph::cols`].
+    #[inline]
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+}
+
+/// Flatten CSR arrays into the directed edge list (CSR order) the
+/// alias sampler consumes.
+fn build_edge_list(offsets: &[u64], cols: &[u32], weights: &[f64]) -> Vec<(u32, u32, f64)> {
+    let n = offsets.len() - 1;
+    let mut edges = Vec::with_capacity(cols.len());
+    for i in 0..n {
+        let (lo, hi) = (offsets[i] as usize, offsets[i + 1] as usize);
+        for e in lo..hi {
+            edges.push((i as u32, cols[e], weights[e]));
+        }
+    }
+    edges
 }
 
 /// Iterator over one CSR row, yielding owned `(col, weight)` pairs.
@@ -177,5 +243,41 @@ mod tests {
         let g = CsrGraph::from_undirected(5, &[(0, 1, 1.0)]);
         assert_eq!(g.degree(4), 0);
         assert_eq!(g.row(4).collect_pairs(), vec![]);
+    }
+
+    #[test]
+    fn raw_parts_roundtrip_identical() {
+        let g = sample();
+        let back = CsrGraph::from_raw_parts(
+            g.offsets().to_vec(),
+            g.cols().to_vec(),
+            g.weights().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(g, back);
+        assert_eq!(g.edges(), back.edges());
+    }
+
+    #[test]
+    fn raw_parts_rejects_corruption() {
+        let g = sample();
+        // Truncated cols.
+        assert!(CsrGraph::from_raw_parts(
+            g.offsets().to_vec(),
+            g.cols()[..g.cols().len() - 1].to_vec(),
+            g.weights()[..g.weights().len() - 1].to_vec(),
+        )
+        .is_err());
+        // Out-of-range column.
+        let mut cols = g.cols().to_vec();
+        cols[0] = 99;
+        assert!(CsrGraph::from_raw_parts(g.offsets().to_vec(), cols, g.weights().to_vec())
+            .is_err());
+        // Non-monotone offsets.
+        let mut off = g.offsets().to_vec();
+        off[1] = off[2] + 1;
+        assert!(CsrGraph::from_raw_parts(off, g.cols().to_vec(), g.weights().to_vec()).is_err());
+        // Empty offsets.
+        assert!(CsrGraph::from_raw_parts(vec![], vec![], vec![]).is_err());
     }
 }

@@ -76,19 +76,39 @@ pub fn calibrate_row(dists: &[f32], perplexity: f64, max_iters: usize, tol: f64)
     probs
 }
 
-/// Build the symmetrized weighted graph from a KNN graph (Eqs. 1–2).
-pub fn weighted_graph(knn: &KnnGraph, cfg: &WeightConfig) -> CsrGraph {
-    let n = knn.n();
-    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
-
-    // Conditional p_{j|i} per node, in KNN order.
-    let conds: Vec<Vec<f64>> = pool::parallel_map(n, threads, |i| {
+/// Conditional probabilities `p_{j|i}` for every node, aligned with
+/// each node's KNN order (parallel over nodes).
+fn conditional_probs(knn: &KnnGraph, cfg: &WeightConfig, threads: usize) -> Vec<Vec<f64>> {
+    pool::parallel_map(knn.n(), threads, |i| {
         let dists: Vec<f32> = knn.neighbors[i].iter().map(|&(_, d)| d).collect();
         calibrate_row(&dists, cfg.perplexity, cfg.max_iters, cfg.tol)
-    });
+    })
+}
 
-    // Symmetrize: w_ij = (p_{j|i} + p_{i|j}) / (2N).
-    // Build a map for p_{i|j} lookups.
+/// Build the symmetrized weighted graph from a KNN graph (Eqs. 1–2).
+///
+/// Symmetrization — `w_ij = (p_{j|i} + p_{i|j}) / 2N` — is a parallel
+/// shard-by-source sort-merge that builds the CSR arrays directly (see
+/// [`symmetrize_sharded`]), replacing the single-threaded `HashMap`
+/// pass that used to be the last serial stage between KNN and SGD.
+/// Output is deterministic and bit-identical to the reference
+/// implementation ([`weighted_graph_reference`]) on valid KNN graphs.
+pub fn weighted_graph(knn: &KnnGraph, cfg: &WeightConfig) -> CsrGraph {
+    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
+    let conds = conditional_probs(knn, cfg, threads);
+    symmetrize_sharded(knn, &conds, threads)
+}
+
+/// Reference symmetrization: single-threaded `HashMap` pair
+/// accumulation, then [`CsrGraph::from_undirected`]. Kept as the
+/// differential-testing oracle for [`symmetrize_sharded`]
+/// (`rust/tests/checkpoint_roundtrip.rs` asserts bit-identical CSR on
+/// seeded inputs); not used on the hot path.
+pub fn weighted_graph_reference(knn: &KnnGraph, cfg: &WeightConfig) -> CsrGraph {
+    let n = knn.n();
+    let threads = if cfg.threads == 0 { pool::default_threads() } else { cfg.threads };
+    let conds = conditional_probs(knn, cfg, threads);
+
     let mut pair_weight: std::collections::HashMap<(u32, u32), f64> =
         std::collections::HashMap::with_capacity(n * knn.k);
     for (i, nbrs) in knn.neighbors.iter().enumerate() {
@@ -104,6 +124,99 @@ pub fn weighted_graph(knn: &KnnGraph, cfg: &WeightConfig) -> CsrGraph {
         .map(|((a, b), w)| (a, b, w * scale))
         .collect();
     CsrGraph::from_undirected(n, &edges)
+}
+
+/// Parallel shard-by-source sort-merge symmetrization.
+///
+/// Every directed KNN edge `(i → j, p_{j|i})` contributes two
+/// half-edges — `(i, j, p_{j|i})` into row `i` and `(j, i, p_{j|i})`
+/// into row `j` — so after merging duplicates, row `i`'s entry for `j`
+/// holds exactly `p_{j|i} + p_{i|j}`, which scaled by `1/2N` is Eq. 2.
+///
+/// Three phases, each parallel:
+/// 1. **Shuffle**: workers walk disjoint KNN row ranges and bucket both
+///    half-edges of every entry by the shard owning the *source* row
+///    (shards are contiguous row ranges).
+/// 2. **Sort-merge**: each shard concatenates its buckets, sorts by
+///    `(src, dst, weight bits)` — a total order, so the result is
+///    deterministic regardless of thread interleaving — and merges
+///    duplicate `(src, dst)` runs by summation (IEEE addition of the
+///    two conditionals is commutative, keeping bit-parity with the
+///    reference accumulation order).
+/// 3. **Stitch**: shard outputs are already globally sorted by source
+///    row, so the CSR arrays are a prefix-sum plus disjoint copies.
+fn symmetrize_sharded(knn: &KnnGraph, conds: &[Vec<f64>], threads: usize) -> CsrGraph {
+    let n = knn.n();
+    let shards = threads.max(1).min(n.max(1));
+    let rows_per_shard = n.div_ceil(shards).max(1);
+
+    // Phase 1: shuffle half-edges into per-(worker, shard) buckets.
+    let buckets: Vec<Vec<Vec<(u32, u32, f64)>>> = pool::parallel_map(shards, shards, |w| {
+        let lo = w * rows_per_shard;
+        let hi = ((w + 1) * rows_per_shard).min(n);
+        let mut out: Vec<Vec<(u32, u32, f64)>> = vec![Vec::new(); shards];
+        for i in lo..hi {
+            for (slot, &(j, _)) in knn.neighbors[i].iter().enumerate() {
+                let p = conds[i][slot];
+                out[w].push((i as u32, j, p));
+                out[(j as usize / rows_per_shard).min(shards - 1)].push((j, i as u32, p));
+            }
+        }
+        out
+    });
+
+    // Phase 2: per-shard deterministic sort + duplicate merge + scale.
+    let scale = 1.0 / (2.0 * n as f64);
+    let merged: Vec<(Vec<u32>, Vec<u32>, Vec<f64>)> = pool::parallel_map(shards, shards, |s| {
+        let total: usize = buckets.iter().map(|b| b[s].len()).sum();
+        let mut halves: Vec<(u32, u32, f64)> = Vec::with_capacity(total);
+        for b in &buckets {
+            halves.extend_from_slice(&b[s]);
+        }
+        halves.sort_unstable_by_key(|&(src, dst, p)| (src, dst, p.to_bits()));
+        let mut srcs: Vec<u32> = Vec::with_capacity(halves.len());
+        let mut dsts: Vec<u32> = Vec::with_capacity(halves.len());
+        let mut ws: Vec<f64> = Vec::with_capacity(halves.len());
+        let mut idx = 0;
+        while idx < halves.len() {
+            let (src, dst, _) = halves[idx];
+            let mut w = 0.0f64;
+            while idx < halves.len() && halves[idx].0 == src && halves[idx].1 == dst {
+                w += halves[idx].2;
+                idx += 1;
+            }
+            // Matches the reference's `w > 0.0` pre-scale filter.
+            if w > 0.0 {
+                srcs.push(src);
+                dsts.push(dst);
+                ws.push(w * scale);
+            }
+        }
+        (srcs, dsts, ws)
+    });
+
+    // Phase 3: stitch shard outputs (already globally source-sorted)
+    // into the final CSR arrays.
+    let mut offsets = vec![0u64; n + 1];
+    for (srcs, _, _) in &merged {
+        for &s in srcs {
+            offsets[s as usize + 1] += 1;
+        }
+    }
+    for i in 0..n {
+        offsets[i + 1] += offsets[i];
+    }
+    let m2 = offsets[n] as usize;
+    let mut cols = vec![0u32; m2];
+    let mut weights = vec![0f64; m2];
+    let mut cursor = 0usize;
+    for (_, dsts, ws) in &merged {
+        cols[cursor..cursor + dsts.len()].copy_from_slice(dsts);
+        weights[cursor..cursor + ws.len()].copy_from_slice(ws);
+        cursor += dsts.len();
+    }
+    CsrGraph::from_raw_parts(offsets, cols, weights)
+        .expect("sharded symmetrizer produced invalid CSR")
 }
 
 #[cfg(test)]
@@ -159,5 +272,32 @@ mod tests {
     #[test]
     fn empty_row_ok() {
         assert!(calibrate_row(&[], 30.0, 10, 1e-5).is_empty());
+    }
+
+    #[test]
+    fn sharded_matches_reference_small() {
+        let (m, _) = gaussian_mixture(120, 6, 3, 0.25, 7);
+        let knn = exact_knn(&m, 8, 2);
+        let cfg = WeightConfig { perplexity: 4.0, threads: 3, ..Default::default() };
+        let fast = weighted_graph(&knn, &cfg);
+        let reference = weighted_graph_reference(&knn, &cfg);
+        assert_eq!(fast, reference);
+    }
+
+    #[test]
+    fn sharded_handles_empty_and_tiny_graphs() {
+        // Graph with no edges at all.
+        let g = weighted_graph(&KnnGraph::empty(5, 3), &WeightConfig::default());
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.n_directed_edges(), 0);
+        // Two mutual neighbors.
+        let mut knn = KnnGraph::empty(2, 1);
+        knn.neighbors[0] = vec![(1, 1.0)];
+        knn.neighbors[1] = vec![(0, 1.0)];
+        let g = weighted_graph(&knn, &WeightConfig::default());
+        assert_eq!(g.n_directed_edges(), 2);
+        // Single conditional prob is 1.0 each way: w = (1+1)/(2*2) = 0.5.
+        let (_, w) = g.row(0).next().unwrap();
+        assert!((w - 0.5).abs() < 1e-12);
     }
 }

@@ -28,6 +28,7 @@ fn run(argv: &[String]) -> Result<()> {
         "info" => cmd_info(),
         "knn" => cmd_knn(&args),
         "pipeline" => cmd_pipeline(&args),
+        "convert" => cmd_convert(&args),
         other => bail!("unknown command {other:?}\n\n{}", cli::USAGE),
     }
 }
@@ -74,7 +75,35 @@ fn build_config(args: &Args) -> Result<PipelineConfig> {
     if let Some(out) = args.get_str("out") {
         cfg.out_dir = out.into();
     }
+    if let Some(input) = args.get_str("input") {
+        cfg.input = Some(input.into());
+    }
+    if let Some(labels) = args.get_str("labels") {
+        cfg.input_labels = Some(labels.into());
+    }
+    if let Some(stage) = args.get_str("resume-from") {
+        cfg.resume_from = Some(stage.parse()?);
+    }
+    if args.has_flag("no-checkpoints") {
+        cfg.save_checkpoints = false;
+    }
+    cfg.chunk_rows = args.get_or("chunk-rows", cfg.chunk_rows)?;
     Ok(cfg)
+}
+
+fn cmd_convert(args: &Args) -> Result<()> {
+    let [src, dst] = args.positionals.as_slice() else {
+        bail!("usage: largevis convert <src> <dst>\n\n{}", cli::USAGE);
+    };
+    let chunk_rows: usize =
+        args.get_or("chunk-rows", largevis::data::formats::DEFAULT_CHUNK_ROWS)?;
+    let (n, d) = largevis::data::formats::convert(
+        std::path::Path::new(src),
+        std::path::Path::new(dst),
+        chunk_rows,
+    )?;
+    println!("converted {src} -> {dst} ({n} points, {d} dims)");
+    Ok(())
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {

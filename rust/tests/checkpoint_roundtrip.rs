@@ -1,0 +1,173 @@
+//! Property tests for the checkpoint formats and the parallel
+//! symmetrizer: round-trips must be bit-identical, and the sharded
+//! sort-merge symmetrization must match the single-threaded HashMap
+//! reference exactly.
+
+use largevis::data::formats::checkpoint::{read_csr, read_knn, write_csr, write_knn};
+use largevis::data::synth::gaussian_mixture;
+use largevis::graph::weights::{weighted_graph, weighted_graph_reference, WeightConfig};
+use largevis::graph::CsrGraph;
+use largevis::knn::bruteforce::exact_knn;
+use largevis::knn::KnnGraph;
+use largevis::util::proptest::{run_prop, PropConfig};
+use largevis::util::rng::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("largevis_ckpt_prop_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Random KNN graph: rows of random length (including empty), sorted
+/// ascending by distance, ids in range, no self-loops.
+fn random_knn(rng: &mut Rng, size: usize) -> KnnGraph {
+    let n = 2 + size;
+    let k = 1 + rng.below(8);
+    let mut g = KnnGraph::empty(n, k);
+    for i in 0..n {
+        let len = rng.below(k + 1); // may be 0 (empty row)
+        let mut ids = std::collections::BTreeSet::new();
+        while ids.len() < len.min(n - 1) {
+            let j = rng.below(n) as u32;
+            if j as usize != i {
+                ids.insert(j);
+            }
+        }
+        let mut dists: Vec<f32> = (0..ids.len()).map(|_| rng.f32() * 10.0).collect();
+        dists.sort_by(f32::total_cmp);
+        g.neighbors[i] = ids.into_iter().zip(dists).collect();
+    }
+    g
+}
+
+fn knn_bits(g: &KnnGraph) -> Vec<(usize, Vec<(u32, u32)>)> {
+    g.neighbors
+        .iter()
+        .map(|row| (row.len(), row.iter().map(|&(id, d)| (id, d.to_bits())).collect()))
+        .collect()
+}
+
+fn csr_bits(g: &CsrGraph) -> (Vec<u64>, Vec<u32>, Vec<u64>) {
+    (
+        g.offsets().to_vec(),
+        g.cols().to_vec(),
+        g.weights().iter().map(|w| w.to_bits()).collect(),
+    )
+}
+
+#[test]
+fn prop_knn_checkpoint_roundtrip_bit_identical() {
+    run_prop("knn-ckpt", PropConfig { cases: 30, max_size: 60, ..Default::default() }, |rng, size| {
+        let g = random_knn(rng, size);
+        let p = tmp(&format!("knn_{size}.ckpt"));
+        write_knn(&p, &g).map_err(|e| e.to_string())?;
+        let back = read_knn(&p).map_err(|e| e.to_string())?;
+        if back.k != g.k {
+            return Err(format!("k {} -> {}", g.k, back.k));
+        }
+        if knn_bits(&g) != knn_bits(&back) {
+            return Err("knn rows not bit-identical after round-trip".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_checkpoint_roundtrip_bit_identical() {
+    run_prop("csr-ckpt", PropConfig { cases: 30, max_size: 50, ..Default::default() }, |rng, size| {
+        let n = 3 + size;
+        // Random undirected edges, intentionally including duplicates
+        // (from_undirected keeps parallel edges) and leaving some
+        // vertices isolated (empty CSR rows).
+        let mut edges: Vec<(u32, u32, f64)> = Vec::new();
+        for _ in 0..(2 * n) {
+            let a = rng.below(n) as u32;
+            let b = rng.below(n) as u32;
+            if a != b {
+                let w = rng.f64() * 2.0 + 1e-12;
+                edges.push((a, b, w));
+                if rng.below(4) == 0 {
+                    edges.push((a, b, w * 0.5)); // duplicate edge
+                }
+            }
+        }
+        let g = CsrGraph::from_undirected(n, &edges);
+        let p = tmp(&format!("csr_{size}.ckpt"));
+        write_csr(&p, &g).map_err(|e| e.to_string())?;
+        let back = read_csr(&p).map_err(|e| e.to_string())?;
+        if csr_bits(&g) != csr_bits(&back) {
+            return Err("csr arrays not bit-identical after round-trip".into());
+        }
+        if g.edges() != back.edges() {
+            return Err("rebuilt edge list differs".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_symmetrization_matches_reference() {
+    let prop_cfg = PropConfig { cases: 10, max_size: 40, ..Default::default() };
+    run_prop("sym-parity", prop_cfg, |rng, size| {
+        let n = 40 + 4 * size;
+        let d = 3 + rng.below(8);
+        let (m, _) = gaussian_mixture(n, d, 3, 0.25, rng.next_u64());
+        let k = 3 + rng.below(6);
+        let knn = exact_knn(&m, k, 2);
+        let cfg = WeightConfig {
+            perplexity: 2.0 + rng.f64() * (k as f64 - 2.0).max(0.5),
+            threads: 1 + rng.below(8),
+            ..Default::default()
+        };
+        let fast = weighted_graph(&knn, &cfg);
+        let reference = weighted_graph_reference(&knn, &cfg);
+        if csr_bits(&fast) != csr_bits(&reference) {
+            return Err(format!(
+                "sharded vs reference CSR mismatch (n={n} k={k} threads={})",
+                cfg.threads
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_symmetrization_thread_count_invariant() {
+    // The sharded symmetrizer's output must not depend on the shard
+    // count: per-(src,dst) sums are order-independent and the sort is a
+    // total order.
+    let prop_cfg = PropConfig { cases: 6, max_size: 30, ..Default::default() };
+    run_prop("sym-threads", prop_cfg, |rng, size| {
+        let n = 50 + 4 * size;
+        let (m, _) = gaussian_mixture(n, 6, 3, 0.3, rng.next_u64());
+        let knn = exact_knn(&m, 6, 2);
+        let base = weighted_graph(&knn, &WeightConfig { threads: 1, ..Default::default() });
+        for threads in [2, 3, 7] {
+            let alt = weighted_graph(&knn, &WeightConfig { threads, ..Default::default() });
+            if csr_bits(&base) != csr_bits(&alt) {
+                return Err(format!("threads=1 vs threads={threads} differ"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn knn_checkpoint_empty_graph() {
+    let g = KnnGraph::empty(5, 3);
+    let p = tmp("empty.knn");
+    write_knn(&p, &g).unwrap();
+    let back = read_knn(&p).unwrap();
+    assert_eq!(back.n(), 5);
+    assert!(back.neighbors.iter().all(|r| r.is_empty()));
+}
+
+#[test]
+fn csr_checkpoint_no_edges() {
+    let g = CsrGraph::from_undirected(4, &[]);
+    let p = tmp("noedges.csr");
+    write_csr(&p, &g).unwrap();
+    let back = read_csr(&p).unwrap();
+    assert_eq!(back.n(), 4);
+    assert_eq!(back.n_directed_edges(), 0);
+}

@@ -1,0 +1,51 @@
+//! Golden-file tests for the LargeVis text parser: reference files
+//! checked into `rust/tests/data/` exercise CRLF endings, scientific
+//! notation, ragged rows (error), and unparsable values (error).
+
+use largevis::data::formats::text::read_text;
+use std::path::PathBuf;
+
+fn golden(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data").join(name)
+}
+
+#[test]
+fn basic_file_parses() {
+    let m = read_text(&golden("basic.txt")).unwrap();
+    assert_eq!((m.n(), m.d()), (4, 3));
+    assert_eq!(m.row(0), &[0.0, 1.0, 2.5]);
+    assert_eq!(m.row(1), &[-3.0, 4.25, 5.0]);
+    assert_eq!(m.row(3), &[9.0, 10.5, -11.0]);
+}
+
+#[test]
+fn crlf_endings_accepted() {
+    let m = read_text(&golden("crlf.txt")).unwrap();
+    assert_eq!((m.n(), m.d()), (3, 2));
+    assert_eq!(m.row(0), &[1.5, -2.0]);
+    assert_eq!(m.row(1), &[0.25, 3.0]);
+    assert_eq!(m.row(2), &[-4.0, 5.125]);
+}
+
+#[test]
+fn scientific_notation_parsed() {
+    let m = read_text(&golden("scientific.txt")).unwrap();
+    assert_eq!((m.n(), m.d()), (2, 4));
+    assert_eq!(m.row(0), &[1e-3, -2.5e2, 1.5e2, 3.14159]);
+    assert_eq!(m.row(1), &[1e2, -7e-2, 6.02e23, -1.0e-30]);
+}
+
+#[test]
+fn ragged_row_is_error_with_line_number() {
+    let err = read_text(&golden("ragged.txt")).unwrap_err().to_string();
+    assert!(err.contains("ragged row"), "{err}");
+    assert!(err.contains(":3:"), "error must name line 3: {err}");
+    assert!(err.contains("2 values, expected 3"), "{err}");
+}
+
+#[test]
+fn unparsable_value_is_error_with_line_number() {
+    let err = read_text(&golden("badfloat.txt")).unwrap_err().to_string();
+    assert!(err.contains("unparsable value"), "{err}");
+    assert!(err.contains(":3:"), "error must name line 3: {err}");
+}

@@ -1,15 +1,21 @@
 //! End-to-end pipeline integration tests over several datasets, plus
 //! determinism and CLI/config plumbing.
 
-use largevis::config::{Ini, PipelineConfig};
+use largevis::config::{Ini, PipelineConfig, Stage};
 use largevis::coordinator::run_pipeline;
+
+/// Per-process test root: concurrent `cargo test` runs (or parallel CI
+/// legs) must not collide on a shared fixed path.
+fn it_root() -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("largevis_it_{}", std::process::id()))
+}
 
 fn tiny_cfg(dataset: &str, dir: &str) -> PipelineConfig {
     let mut cfg = PipelineConfig {
         dataset: dataset.into(),
         scale: 0.01,
         k: 10,
-        out_dir: std::env::temp_dir().join("largevis_it").join(dir),
+        out_dir: it_root().join(dir),
         ..Default::default()
     };
     cfg.vis.samples_per_vertex = 300;
@@ -61,6 +67,37 @@ fn pipeline_seeded_determinism() {
     let a = run_pipeline(&mk("det_a")).unwrap();
     let b = run_pipeline(&mk("det_b")).unwrap();
     assert_eq!(a.layout, b.layout);
+}
+
+#[test]
+fn resume_from_weights_bit_identical() {
+    // An uninterrupted single-threaded run writes its KNN checkpoint;
+    // resuming at the weights stage from that checkpoint must produce a
+    // bit-identical layout (same seeds, threads=1 everywhere).
+    let mut cfg = tiny_cfg("20ng-like", "resume");
+    cfg.knn.threads = 1;
+    cfg.knn.forest.threads = 1;
+    cfg.weights.threads = 1;
+    cfg.vis.threads = 1;
+    cfg.save_checkpoints = true;
+    let full = run_pipeline(&cfg).unwrap();
+
+    let mut resumed_cfg = cfg.clone();
+    resumed_cfg.resume_from = Some(Stage::Weights);
+    let resumed = run_pipeline(&resumed_cfg).unwrap();
+    assert_eq!(full.layout, resumed.layout, "resumed layout must be bit-identical");
+    assert_eq!(full.labels, resumed.labels);
+    assert_eq!(
+        full.metrics.get("graph.directed_edges"),
+        resumed.metrics.get("graph.directed_edges")
+    );
+
+    // Resuming at the layout stage (weighted-graph checkpoint) must
+    // also reproduce the layout bit-identically.
+    let mut layout_cfg = cfg.clone();
+    layout_cfg.resume_from = Some(Stage::Layout);
+    let from_graph = run_pipeline(&layout_cfg).unwrap();
+    assert_eq!(full.layout, from_graph.layout);
 }
 
 #[test]
