@@ -1,0 +1,104 @@
+//! Layout-throughput benchmark: flat single-resolution SGD vs the
+//! multilevel coarse-to-fine engine on the same weighted KNN graph.
+//! Reports samples/sec, the exact LargeVis objective, and the
+//! KNN-preservation score, and emits `BENCH_layout.json` so the
+//! layout-stage perf trajectory starts recording (the multilevel entry
+//! runs with **half** the fine-level sample budget, matching the
+//! acceptance criterion). CI runs the smoke variant via
+//! `LARGEVIS_BENCH_SCALE`.
+
+use largevis::bench::{bench_scale, Table};
+use largevis::data::synth::gaussian_mixture;
+use largevis::eval::neighborhood_preservation;
+use largevis::graph::weights::weighted_graph;
+use largevis::knn::explore::{largevis_knn, LargeVisKnnConfig};
+use largevis::knn::rptree::RpForestConfig;
+use largevis::vis::multilevel::{optimize_multilevel, MultilevelConfig};
+use largevis::vis::objective::exact_objective;
+use largevis::vis::{init_layout, sgd, LargeVisConfig};
+
+const FLAT_SPV: usize = 400;
+
+fn main() -> anyhow::Result<()> {
+    let n = ((20_000.0 * bench_scale()) as usize).max(2_000);
+    let (points, _) = gaussian_mixture(n, 16, 10, 0.4, 0xbe7c);
+    let knn_cfg = LargeVisKnnConfig {
+        forest: RpForestConfig { n_trees: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let knn = largevis_knn(&points, 10, &knn_cfg);
+    let graph = weighted_graph(&knn, &Default::default());
+    eprintln!("[layout] n={n} directed edges={}", graph.n_directed_edges());
+
+    let base = LargeVisConfig { samples_per_vertex: FLAT_SPV, seed: 0x1a9, ..Default::default() };
+    let mut table = Table::new("layout engines", &["mode", "metric", "value"]);
+    let mut json_rows: Vec<String> = Vec::new();
+
+    // Flat single-resolution SGD (the paper's engine).
+    {
+        let mut y = init_layout(graph.n(), base.dim, base.seed);
+        let rep = sgd::optimize(&graph, &mut y, &base);
+        let obj = exact_objective(&y, graph.edges(), base.gamma, base.prob_fn);
+        let keep = neighborhood_preservation(&points, &y, 10, 300, 0xe5a1, 0);
+        table.row(&["flat".into(), "samples/s".into(), format!("{:.0}", rep.throughput())]);
+        table.row(&["flat".into(), "objective".into(), format!("{obj:.1}")]);
+        table.row(&["flat".into(), "knn-preservation".into(), format!("{keep:.4}")]);
+        json_rows.push(format!(
+            concat!(
+                "{{\"mode\":\"flat\",\"samples_per_vertex\":{},\"samples\":{},",
+                "\"secs\":{:.4},\"samples_per_sec\":{:.0},\"objective\":{:.2},",
+                "\"knn_preservation\":{:.4}}}"
+            ),
+            FLAT_SPV,
+            rep.samples,
+            rep.seconds,
+            rep.throughput(),
+            obj,
+            keep
+        ));
+    }
+
+    // Multilevel coarse-to-fine at half the fine-level budget.
+    {
+        let cfg = LargeVisConfig { samples_per_vertex: FLAT_SPV / 2, ..base.clone() };
+        let ml = MultilevelConfig::default();
+        let mut y = init_layout(graph.n(), cfg.dim, cfg.seed);
+        let rep = optimize_multilevel(&graph, &mut y, &cfg, &ml, |_, _, _| Ok(()))?;
+        let total = rep.total();
+        let obj = exact_objective(&y, graph.edges(), cfg.gamma, cfg.prob_fn);
+        let keep = neighborhood_preservation(&points, &y, 10, 300, 0xe5a1, 0);
+        table.row(&[
+            "multilevel".into(),
+            "levels".into(),
+            format!("{} (coarsest n={})", rep.levels.len(), rep.levels[0].n),
+        ]);
+        table.row(&["multilevel".into(), "samples/s".into(), format!("{:.0}", total.throughput())]);
+        table.row(&["multilevel".into(), "objective".into(), format!("{obj:.1}")]);
+        table.row(&["multilevel".into(), "knn-preservation".into(), format!("{keep:.4}")]);
+        json_rows.push(format!(
+            concat!(
+                "{{\"mode\":\"multilevel\",\"samples_per_vertex\":{},\"fine_samples\":{},",
+                "\"total_samples\":{},\"levels\":{},\"secs\":{:.4},\"samples_per_sec\":{:.0},",
+                "\"objective\":{:.2},\"knn_preservation\":{:.4}}}"
+            ),
+            FLAT_SPV / 2,
+            rep.fine().samples,
+            total.samples,
+            rep.levels.len(),
+            total.seconds,
+            total.throughput(),
+            obj,
+            keep
+        ));
+    }
+
+    table.print();
+    table.write_tsv("layout_engines")?;
+    let doc = format!(
+        "{{\"bench\":\"layout\",\"n\":{n},\"k\":10,\"results\":[{}]}}\n",
+        json_rows.join(",")
+    );
+    std::fs::write("BENCH_layout.json", &doc)?;
+    eprintln!("[layout] wrote BENCH_layout.json");
+    Ok(())
+}

@@ -21,7 +21,8 @@ pub struct Args {
 const VALUE_KEYS: &[&str] = &[
     "dataset", "scale", "k", "trees", "explore-iters", "perplexity", "samples", "negatives",
     "gamma", "rho0", "threads", "seed", "out", "config", "dim", "prob-fn", "prob-a", "engine",
-    "max-visits", "format", "sample", "input", "labels", "resume-from", "chunk-rows",
+    "max-visits", "format", "sample", "input", "labels", "resume-from", "chunk-rows", "layout",
+    "ml-levels", "ml-min-size", "ml-coarse-samples", "ml-jitter", "ml-rho-decay",
 ];
 
 /// Parse a raw argument vector (without argv[0]).
@@ -102,10 +103,18 @@ COMMON OPTIONS:
     --negatives <n>       negative samples M (default 5)
     --gamma <f>           negative weight gamma (default 7)
     --engine <hogwild|xla>  layout engine (default hogwild)
+    --layout <mode>       layout-stage mode: multilevel (default) or flat
     --threads <n>         worker threads (default: all cores)
     --seed <n>            RNG seed
     --out <dir>           output directory (default target/run)
     --config <file>       INI config file (CLI options override it)
+
+MULTILEVEL LAYOUT (--layout multilevel, the default):
+    --ml-levels <n>          max coarse levels (default 16)
+    --ml-min-size <n>        stop coarsening at this many vertices (default 1024)
+    --ml-coarse-samples <f>  per-vertex sample multiplier at coarse levels (default 1.0)
+    --ml-jitter <f>          prolongation jitter stddev (default 0.01)
+    --ml-rho-decay <f>       initial-learning-rate decay per refinement level (default 0.8)
 
 CHECKPOINT / RESUME:
     --resume-from <stage> resume at a stage boundary (weights|layout), loading

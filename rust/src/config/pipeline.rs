@@ -5,6 +5,7 @@ use crate::config::ini::Ini;
 use crate::graph::weights::WeightConfig;
 use crate::knn::explore::LargeVisKnnConfig;
 use crate::knn::rptree::RpForestConfig;
+use crate::vis::multilevel::MultilevelConfig;
 use crate::vis::{LargeVisConfig, ProbFn};
 use anyhow::Result;
 
@@ -44,6 +45,29 @@ impl std::str::FromStr for Stage {
     }
 }
 
+/// Layout-stage mode: the paper's flat single-resolution SGD, or the
+/// multilevel coarse-to-fine engine (the default — equal-or-better
+/// quality in a fraction of the fine-level gradient samples).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayoutMode {
+    /// Single-resolution Hogwild SGD on the input graph.
+    Flat,
+    /// Coarsen → lay out coarsest → prolongate → refine per level.
+    Multilevel,
+}
+
+impl std::str::FromStr for LayoutMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "flat" => Ok(LayoutMode::Flat),
+            "multilevel" | "ml" => Ok(LayoutMode::Multilevel),
+            other => anyhow::bail!("unknown layout mode {other:?} (expected flat|multilevel)"),
+        }
+    }
+}
+
 /// Everything the coordinator needs for one run.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -59,6 +83,12 @@ pub struct PipelineConfig {
     pub weights: WeightConfig,
     /// Layout engine config.
     pub vis: LargeVisConfig,
+    /// Layout-stage mode (flat vs multilevel coarse-to-fine).
+    pub layout_mode: LayoutMode,
+    /// Multilevel schedule knobs (levels, coarsening floor, budget
+    /// split, prolongation jitter) — used when `layout_mode` is
+    /// [`LayoutMode::Multilevel`].
+    pub multilevel: MultilevelConfig,
     /// Use the AOT/XLA batched optimizer instead of Hogwild.
     pub use_xla: bool,
     /// Output directory for layout/SVG/report.
@@ -90,6 +120,8 @@ impl Default for PipelineConfig {
             knn: LargeVisKnnConfig::default(),
             weights: WeightConfig::default(),
             vis: LargeVisConfig::default(),
+            layout_mode: LayoutMode::Multilevel,
+            multilevel: MultilevelConfig::default(),
             use_xla: false,
             out_dir: std::path::PathBuf::from("target/run"),
             data_seed: 0xda7a,
@@ -152,6 +184,22 @@ impl PipelineConfig {
             other => anyhow::bail!("[vis] prob_fn: unknown function {other:?}"),
         };
         cfg.use_xla = ini.get_bool_or("vis", "use_xla", cfg.use_xla)?;
+        if let Some(mode) = ini.get("vis", "layout") {
+            cfg.layout_mode = mode.parse()?;
+        }
+
+        cfg.multilevel.coarsen.max_levels =
+            ini.get_or("multilevel", "levels", cfg.multilevel.coarsen.max_levels)?;
+        cfg.multilevel.coarsen.min_coarse_size =
+            ini.get_or("multilevel", "min_coarse_size", cfg.multilevel.coarsen.min_coarse_size)?;
+        cfg.multilevel.coarse_samples_multiplier = ini.get_or(
+            "multilevel",
+            "coarse_samples",
+            cfg.multilevel.coarse_samples_multiplier,
+        )?;
+        cfg.multilevel.jitter = ini.get_or("multilevel", "jitter", cfg.multilevel.jitter)?;
+        cfg.multilevel.level_rho_decay =
+            ini.get_or("multilevel", "rho_decay", cfg.multilevel.level_rho_decay)?;
         Ok(cfg)
     }
 }
@@ -204,6 +252,27 @@ mod tests {
         assert_eq!(c.resume_from, Some(Stage::Weights));
         assert!(!c.save_checkpoints);
         assert_eq!(c.chunk_rows, 4096);
+    }
+
+    #[test]
+    fn layout_mode_and_multilevel_keys() {
+        let c = PipelineConfig::default();
+        assert_eq!(c.layout_mode, LayoutMode::Multilevel);
+        let ini = Ini::parse(
+            "[vis]\nlayout = flat\n[multilevel]\nlevels = 5\nmin_coarse_size = 2000\ncoarse_samples = 2.5\njitter = 0.1\nrho_decay = 0.9",
+        )
+        .unwrap();
+        let c = PipelineConfig::from_ini(&ini).unwrap();
+        assert_eq!(c.layout_mode, LayoutMode::Flat);
+        assert_eq!(c.multilevel.coarsen.max_levels, 5);
+        assert_eq!(c.multilevel.coarsen.min_coarse_size, 2000);
+        assert_eq!(c.multilevel.coarse_samples_multiplier, 2.5);
+        assert_eq!(c.multilevel.jitter, 0.1);
+        assert_eq!(c.multilevel.level_rho_decay, 0.9);
+        assert_eq!("ml".parse::<LayoutMode>().unwrap(), LayoutMode::Multilevel);
+        assert!("pyramid".parse::<LayoutMode>().is_err());
+        let bad = Ini::parse("[vis]\nlayout = pyramid").unwrap();
+        assert!(PipelineConfig::from_ini(&bad).is_err());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! `resume_from` pay for KNN construction once (paper Table 2: KNN
 //! dominates end-to-end runtime at scale).
 
-use crate::config::{PipelineConfig, Stage};
+use crate::config::{LayoutMode, PipelineConfig, Stage};
 use crate::coordinator::metrics::Metrics;
 use crate::data::datasets::{self, Dataset};
 use crate::data::formats::{self, checkpoint};
@@ -240,12 +240,69 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineOutput> {
         }
     }
 
-    // Stage 4: layout.
+    // Stage 4: layout — flat Hogwild, multilevel coarse-to-fine (the
+    // default), or the AOT/XLA batched engine. Multilevel checkpoints
+    // every level's layout into `<out>/checkpoints/layout_L<depth>.lvec`
+    // (depth 0 = the finest, i.e. the final layout's own resolution).
     let t = Timer::start("layout");
-    let mut layout = crate::vis::init_layout(graph.n(), cfg.vis.dim, cfg.vis.seed);
+    // Drop per-level layouts left by a previous run into the same
+    // out_dir: a shallower hierarchy (or flat mode) would otherwise
+    // leave deep layout_L<d>.lvec files that present as coarse previews
+    // of *this* run — the same stale-checkpoint hazard handled for
+    // labels.lbl above.
+    if cfg.save_checkpoints && ckpt.dir.exists() {
+        for entry in std::fs::read_dir(&ckpt.dir)? {
+            let path = entry?.path();
+            let name = path.file_name().map(|s| s.to_string_lossy().into_owned());
+            if let Some(name) = name {
+                if name.starts_with("layout_L") && name.ends_with(".lvec") {
+                    std::fs::remove_file(&path)?;
+                }
+            }
+        }
+    }
+    // The multilevel driver ignores the incoming layout (its coarsest
+    // level re-initializes internally), so don't pay n·dim gaussian
+    // draws for a buffer that is fully overwritten.
+    let mut layout = if cfg.use_xla || cfg.layout_mode == LayoutMode::Flat {
+        crate::vis::init_layout(graph.n(), cfg.vis.dim, cfg.vis.seed)
+    } else {
+        Matrix::zeros(graph.n(), cfg.vis.dim)
+    };
     let report = if cfg.use_xla {
+        if cfg.layout_mode == LayoutMode::Multilevel {
+            eprintln!(
+                "[pipeline] note: --engine xla runs the flat batched optimizer; \
+                 the multilevel layout mode is ignored"
+            );
+        }
         let rt = crate::runtime::Runtime::from_default_dir()?;
         crate::vis::batched::optimize_batched(&graph, &mut layout, &cfg.vis, &rt)?
+    } else if cfg.layout_mode == LayoutMode::Multilevel {
+        let ml = crate::vis::multilevel::optimize_multilevel(
+            &graph,
+            &mut layout,
+            &cfg.vis,
+            &cfg.multilevel,
+            |depth, _level_graph, level_layout| {
+                if cfg.save_checkpoints {
+                    let p = ckpt.dir.join(format!("layout_L{depth}.lvec"));
+                    crate::data::formats::binary::write_binary(&p, level_layout)
+                        .with_context(|| format!("write {}", p.display()))?;
+                }
+                Ok(())
+            },
+        )?;
+        eprintln!(
+            "[pipeline] multilevel layout: {} levels (coarsest n={}), fine samples {}",
+            ml.levels.len(),
+            ml.levels[0].n,
+            ml.fine().samples
+        );
+        metrics.set("layout.levels", ml.levels.len() as f64);
+        metrics.set("layout.coarsest_n", ml.levels[0].n as f64);
+        metrics.set("layout.fine_samples", ml.fine().samples as f64);
+        ml.total()
     } else {
         crate::vis::sgd::optimize(&graph, &mut layout, &cfg.vis)
     };
@@ -309,6 +366,56 @@ mod tests {
         assert!(ckpt.knn.exists());
         assert!(ckpt.graph.exists());
         assert!(ckpt.labels.exists());
+    }
+
+    #[test]
+    fn multilevel_mode_checkpoints_every_level() {
+        let mut cfg = PipelineConfig {
+            dataset: "20ng-like".into(),
+            scale: 0.02, // ~380 points
+            k: 8,
+            out_dir: test_dir("mlvl"),
+            ..Default::default()
+        };
+        cfg.vis.samples_per_vertex = 200;
+        cfg.knn.forest.n_trees = 1;
+        cfg.multilevel.coarsen.min_coarse_size = 64; // force real levels
+        let out = run_pipeline(&cfg).unwrap();
+        let levels = out.metrics.get("layout.levels").unwrap() as usize;
+        assert!(levels > 1, "no coarse levels built: {levels}");
+        assert!(out.metrics.get("layout.fine_samples").unwrap() > 0.0);
+        let ckpt = CheckpointPaths::new(&cfg.out_dir);
+        for depth in 0..levels {
+            let p = ckpt.dir.join(format!("layout_L{depth}.lvec"));
+            assert!(p.exists(), "missing per-level layout checkpoint {}", p.display());
+        }
+        // The depth-0 checkpoint is the final layout itself.
+        let finest =
+            crate::data::formats::binary::read_binary(&ckpt.dir.join("layout_L0.lvec")).unwrap();
+        assert_eq!(finest, out.layout);
+        // A stale deeper level from a previous run is cleaned up.
+        let stale = ckpt.dir.join("layout_L9.lvec");
+        std::fs::write(&stale, b"stale").unwrap();
+        run_pipeline(&cfg).unwrap();
+        assert!(!stale.exists(), "stale per-level checkpoint survived a re-run");
+        assert!(ckpt.dir.join("layout_L0.lvec").exists());
+    }
+
+    #[test]
+    fn flat_mode_still_available() {
+        let mut cfg = PipelineConfig {
+            dataset: "20ng-like".into(),
+            scale: 0.02,
+            k: 5,
+            out_dir: test_dir("flatmode"),
+            layout_mode: crate::config::LayoutMode::Flat,
+            ..Default::default()
+        };
+        cfg.vis.samples_per_vertex = 100;
+        cfg.knn.forest.n_trees = 1;
+        let out = run_pipeline(&cfg).unwrap();
+        assert!(out.metrics.get("layout.levels").is_none());
+        assert!(out.layout.as_slice().iter().all(|v| v.is_finite()));
     }
 
     #[test]

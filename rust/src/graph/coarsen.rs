@@ -1,0 +1,281 @@
+//! Heavy-edge-matching graph coarsener — the substrate of the
+//! multilevel coarse-to-fine layout engine (`vis::multilevel`).
+//!
+//! A flat SGD layout spends most of its sample budget untangling the
+//! random initialization; NCVis (Artemenkov & Panov, 2020) and ShapeVis
+//! (Kumari et al., 2020) both show that optimizing a coarsened graph
+//! hierarchy first converges far faster at million-point scale. The
+//! coarsener here is the classic heavy-edge matching (HEM) of
+//! Karypis–Kumar's METIS: visit vertices in random order, match each
+//! unmatched vertex with its heaviest unmatched neighbor, and contract
+//! every matched pair into one coarse vertex. Parallel edges created by
+//! the contraction are merged by summing weights (so total cross-pair
+//! weight — and therefore the edge-sampling distribution's shape — is
+//! conserved), and interior edges collapse away.
+//!
+//! Each level roughly halves the vertex count, so a full hierarchy
+//! costs O(|E|) to build and holds ~2× the input graph in total.
+
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+/// Knobs for hierarchy construction.
+#[derive(Clone, Copy, Debug)]
+pub struct CoarsenConfig {
+    /// Stop coarsening once a level has at most this many vertices.
+    pub min_coarse_size: usize,
+    /// Hard cap on the number of coarse levels built.
+    pub max_levels: usize,
+    /// Stop if a round shrinks the graph by less than this factor
+    /// (matching has degenerated, e.g. on a star graph).
+    pub min_shrink: f64,
+    /// Seed for the random visit order (fixed by default so pipeline
+    /// re-runs and checkpoint resumes see an identical hierarchy).
+    pub seed: u64,
+}
+
+impl Default for CoarsenConfig {
+    fn default() -> Self {
+        CoarsenConfig { min_coarse_size: 1024, max_levels: 16, min_shrink: 0.95, seed: 0xc0a5 }
+    }
+}
+
+/// One coarsening step: the contracted graph plus the vertex mapping.
+#[derive(Clone, Debug)]
+pub struct Coarsening {
+    /// The contracted graph.
+    pub graph: CsrGraph,
+    /// `map[fine_vertex] = coarse_vertex`; every coarse vertex has one
+    /// or two fine preimages.
+    pub map: Vec<u32>,
+}
+
+/// Contract one level: heavy-edge matching, then merge matched pairs.
+pub fn coarsen_once(g: &CsrGraph, rng: &mut Rng) -> Coarsening {
+    let n = g.n();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+
+    // Phase 1: heavy-edge matching. `match_of[u] == u` marks a
+    // singleton (no unmatched neighbor was left, or u is isolated).
+    let unmatched = u32::MAX;
+    let mut match_of: Vec<u32> = vec![unmatched; n];
+    for &u in &order {
+        let ui = u as usize;
+        if match_of[ui] != unmatched {
+            continue;
+        }
+        let mut best: Option<(u32, f64)> = None;
+        for (v, w) in g.row(ui) {
+            if match_of[v as usize] != unmatched {
+                continue;
+            }
+            // Strict `>` keeps the first (lowest-id) neighbor on ties,
+            // so the matching is a function of the visit order alone.
+            let better = match best {
+                None => true,
+                Some((_, bw)) => w > bw,
+            };
+            if better {
+                best = Some((v, w));
+            }
+        }
+        match best {
+            Some((v, _)) => {
+                match_of[ui] = v;
+                match_of[v as usize] = u;
+            }
+            None => match_of[ui] = u,
+        }
+    }
+
+    // Phase 2: assign coarse ids in fine-id order (deterministic given
+    // the matching) and aggregate cross-pair edges.
+    let mut map = vec![unmatched; n];
+    let mut next = 0u32;
+    for u in 0..n {
+        if map[u] != unmatched {
+            continue;
+        }
+        map[u] = next;
+        let p = match_of[u] as usize;
+        if p != u {
+            map[p] = next;
+        }
+        next += 1;
+    }
+    let coarse_n = next as usize;
+
+    // Sum parallel edges; drop edges interior to a matched pair.
+    // Sort-then-merge-runs instead of a hash map: lower constants on
+    // multi-million-edge levels (same reasoning as the sharded
+    // symmetrizer in `graph::weights`) and fully deterministic — the
+    // sort is an unstable but deterministic algorithm, so equal-key
+    // runs always accumulate in the same order.
+    let mut pairs: Vec<(u32, u32, f64)> = Vec::with_capacity(g.n_directed_edges() / 2);
+    for &(s, d, w) in g.edges() {
+        if s >= d {
+            continue; // each undirected edge once
+        }
+        let (a, b) = (map[s as usize], map[d as usize]);
+        if a == b {
+            continue;
+        }
+        pairs.push((a.min(b), a.max(b), w));
+    }
+    pairs.sort_unstable_by_key(|&(a, b, _)| (a, b));
+    let mut edges: Vec<(u32, u32, f64)> = Vec::with_capacity(pairs.len());
+    for (a, b, w) in pairs {
+        match edges.last_mut() {
+            Some(last) if last.0 == a && last.1 == b => last.2 += w,
+            _ => edges.push((a, b, w)),
+        }
+    }
+    Coarsening { graph: CsrGraph::from_undirected(coarse_n, &edges), map }
+}
+
+/// Build the full hierarchy, finest-to-coarsest: `out[0]` is one level
+/// above the input graph and `out.last()` is the coarsest level. Empty
+/// when the input is already at or below `min_coarse_size` (the
+/// multilevel driver then degenerates to a flat optimization).
+pub fn build_hierarchy(g: &CsrGraph, cfg: &CoarsenConfig) -> Vec<Coarsening> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut out: Vec<Coarsening> = Vec::new();
+    loop {
+        if out.len() >= cfg.max_levels {
+            break;
+        }
+        let (c, parent_n) = {
+            let parent = out.last().map_or(g, |c| &c.graph);
+            if parent.n() <= cfg.min_coarse_size {
+                break;
+            }
+            (coarsen_once(parent, &mut rng), parent.n())
+        };
+        // A level the SGD engine cannot lay out (no edges) or that
+        // barely shrinks is useless — stop before pushing it.
+        if c.graph.n_directed_edges() == 0 {
+            break;
+        }
+        if (c.graph.n() as f64) > cfg.min_shrink * parent_n as f64 {
+            break;
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Ring of `n` vertices with unit weights.
+    fn ring(n: usize) -> CsrGraph {
+        let edges: Vec<(u32, u32, f64)> =
+            (0..n as u32).map(|i| (i, (i + 1) % n as u32, 1.0)).collect();
+        CsrGraph::from_undirected(n, &edges)
+    }
+
+    fn check_map(fine_n: usize, c: &Coarsening) {
+        assert_eq!(c.map.len(), fine_n);
+        let coarse_n = c.graph.n();
+        let mut preimages = vec![0usize; coarse_n];
+        for &m in &c.map {
+            assert!((m as usize) < coarse_n, "map out of range");
+            preimages[m as usize] += 1;
+        }
+        for (cv, &k) in preimages.iter().enumerate() {
+            assert!(k == 1 || k == 2, "coarse vertex {cv} has {k} preimages");
+        }
+    }
+
+    #[test]
+    fn ring_roughly_halves() {
+        let g = ring(64);
+        let mut rng = Rng::new(1);
+        let c = coarsen_once(&g, &mut rng);
+        // A ring admits a near-perfect matching; random-order HEM gets
+        // most of it. Bounds: perfect = 32, no matching = 64.
+        assert!(c.graph.n() >= 32 && c.graph.n() < 56, "coarse n = {}", c.graph.n());
+        check_map(64, &c);
+    }
+
+    #[test]
+    fn cross_pair_weight_conserved() {
+        let g = ring(40);
+        let mut rng = Rng::new(2);
+        let c = coarsen_once(&g, &mut rng);
+        // Sum of fine edges whose endpoints land in different coarse
+        // vertices must equal the coarse graph's total weight exactly
+        // (same additions, same deterministic order).
+        let mut expect = 0.0f64;
+        for &(s, d, w) in g.edges() {
+            if s < d && c.map[s as usize] != c.map[d as usize] {
+                expect += w;
+            }
+        }
+        let got: f64 = c.graph.edges().iter().filter(|&&(s, d, _)| s < d).map(|&(_, _, w)| w).sum();
+        assert!((got - expect).abs() < 1e-9, "got {got}, expect {expect}");
+    }
+
+    #[test]
+    fn heavy_edges_matched_first() {
+        // Two heavy pairs joined by light edges: HEM must contract the
+        // heavy pairs, never across the light bridge.
+        let g = CsrGraph::from_undirected(
+            4,
+            &[(0, 1, 100.0), (2, 3, 100.0), (1, 2, 0.1), (0, 3, 0.1)],
+        );
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let c = coarsen_once(&g, &mut rng);
+            assert_eq!(c.graph.n(), 2);
+            assert_eq!(c.map[0], c.map[1], "heavy pair (0,1) split: {:?}", c.map);
+            assert_eq!(c.map[2], c.map[3], "heavy pair (2,3) split: {:?}", c.map);
+        }
+    }
+
+    #[test]
+    fn isolated_vertices_become_singletons() {
+        let g = CsrGraph::from_undirected(5, &[(0, 1, 1.0)]);
+        let mut rng = Rng::new(3);
+        let c = coarsen_once(&g, &mut rng);
+        assert_eq!(c.graph.n(), 4); // {0,1} merged; 2,3,4 singletons
+        check_map(5, &c);
+        // The merged pair's edge was interior: the coarse graph keeps
+        // only vertices, no edges between the singletons appear.
+        assert_eq!(c.graph.n_directed_edges(), 0);
+    }
+
+    #[test]
+    fn hierarchy_shrinks_to_min_size_and_is_deterministic() {
+        let g = ring(600);
+        let cfg = CoarsenConfig { min_coarse_size: 40, ..Default::default() };
+        let h = build_hierarchy(&g, &cfg);
+        assert!(!h.is_empty());
+        let mut prev = g.n();
+        for c in &h {
+            assert!(c.graph.n() < prev, "level did not shrink");
+            prev = c.graph.n();
+        }
+        // Terminated properly: coarsest at/below the floor, or the cap.
+        assert!(
+            h.last().unwrap().graph.n() <= cfg.min_coarse_size || h.len() == cfg.max_levels,
+            "coarsest n = {}",
+            h.last().unwrap().graph.n()
+        );
+        let h2 = build_hierarchy(&g, &cfg);
+        assert_eq!(h.len(), h2.len());
+        for (a, b) in h.iter().zip(&h2) {
+            assert_eq!(a.map, b.map);
+            assert_eq!(a.graph, b.graph);
+        }
+    }
+
+    #[test]
+    fn hierarchy_empty_when_already_small() {
+        let g = ring(16);
+        let cfg = CoarsenConfig { min_coarse_size: 1024, ..Default::default() };
+        assert!(build_hierarchy(&g, &cfg).is_empty());
+    }
+}

@@ -1,9 +1,12 @@
 //! Weighted-graph substrate: perplexity-calibrated edge weights
-//! (paper Eqs. 1–2) and a CSR sparse representation consumed by the
-//! layout engines.
+//! (paper Eqs. 1–2), a CSR sparse representation consumed by the
+//! layout engines, and the heavy-edge-matching coarsener behind the
+//! multilevel coarse-to-fine engine.
 
+pub mod coarsen;
 pub mod weights;
 pub mod sparse;
 
+pub use coarsen::{build_hierarchy, CoarsenConfig, Coarsening};
 pub use sparse::CsrGraph;
 pub use weights::{weighted_graph, WeightConfig};

@@ -72,6 +72,18 @@ fn build_config(args: &Args) -> Result<PipelineConfig> {
         "xla" => cfg.use_xla = true,
         other => bail!("--engine must be hogwild|xla, got {other:?}"),
     }
+    if let Some(mode) = args.get_str("layout") {
+        cfg.layout_mode = mode.parse()?;
+    }
+    cfg.multilevel.coarsen.max_levels =
+        args.get_or("ml-levels", cfg.multilevel.coarsen.max_levels)?;
+    cfg.multilevel.coarsen.min_coarse_size =
+        args.get_or("ml-min-size", cfg.multilevel.coarsen.min_coarse_size)?;
+    cfg.multilevel.coarse_samples_multiplier =
+        args.get_or("ml-coarse-samples", cfg.multilevel.coarse_samples_multiplier)?;
+    cfg.multilevel.jitter = args.get_or("ml-jitter", cfg.multilevel.jitter)?;
+    cfg.multilevel.level_rho_decay =
+        args.get_or("ml-rho-decay", cfg.multilevel.level_rho_decay)?;
     if let Some(out) = args.get_str("out") {
         cfg.out_dir = out.into();
     }

@@ -47,7 +47,15 @@ impl AliasTable {
         }
         while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
             small.pop();
-            prob[s as usize] = scaled[s as usize] as f32;
+            // Clamp the stored residual: under a large weight dynamic
+            // range the repeated `scaled[l] -= …` below drifts, so a
+            // bucket can come back around with a residual slightly
+            // below 0 or above 1. Stored raw, a negative residual makes
+            // the f64→f32 cast produce a negative accept threshold
+            // (outcome silently never sampled directly) and a >1
+            // residual skews the alias branch; clamping bounds the
+            // distortion at one f32 ulp instead.
+            prob[s as usize] = scaled[s as usize].clamp(0.0, 1.0) as f32;
             alias[s as usize] = l;
             scaled[l as usize] -= 1.0 - scaled[s as usize];
             if scaled[l as usize] < 1.0 {
@@ -148,6 +156,47 @@ mod tests {
     #[should_panic]
     fn all_zero_panics() {
         AliasTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn extreme_dynamic_range_residuals_clamped_and_frequencies_match() {
+        // Property: across extreme weight dynamic ranges (1e-12 ..
+        // 1e12), every stored residual probability stays in [0, 1] and
+        // the empirical frequencies still match the weights — heavy
+        // outcomes by chi-square, near-zero-mass outcomes by being
+        // (essentially) never drawn.
+        let mut wrng = Rng::new(0xa11a5);
+        for trial in 0..4u64 {
+            let n = 16 + wrng.below(48);
+            let w: Vec<f64> = (0..n).map(|_| 10f64.powf(wrng.f64() * 24.0 - 12.0)).collect();
+            let t = AliasTable::new(&w);
+            for &p in &t.prob {
+                assert!((0.0..=1.0).contains(&p), "residual probability {p} outside [0,1]");
+            }
+            let draws = 300_000usize;
+            let mut rng = Rng::new(500 + trial);
+            let mut counts = vec![0usize; n];
+            for _ in 0..draws {
+                counts[t.sample(&mut rng)] += 1;
+            }
+            let total: f64 = w.iter().sum();
+            let mut chi2 = 0.0f64;
+            let mut dof = 0usize;
+            let mut rare_hits = 0usize;
+            for (&c, &wi) in counts.iter().zip(&w) {
+                let e = wi / total * draws as f64;
+                if e >= 20.0 {
+                    chi2 += (c as f64 - e) * (c as f64 - e) / e;
+                    dof += 1;
+                } else if e < 0.01 {
+                    rare_hits += c;
+                }
+            }
+            // chi2 99.99th percentile at dof=64 is ~118.
+            assert!(chi2 < 120.0, "chi2={chi2} over {dof} heavy outcomes (n={n})");
+            // The near-zero-mass outcomes jointly expect < 1 draw.
+            assert!(rare_hits < 10, "vanishing-weight outcomes drawn {rare_hits} times");
+        }
     }
 
     #[test]

@@ -59,12 +59,15 @@ pub fn optimize_batched(
             yi[e * s..(e + 1) * s].copy_from_slice(layout.row(i));
             yj[e * s..(e + 1) * s].copy_from_slice(layout.row(j));
             for k in 0..m {
-                let mut v = samplers.sample_negative(&mut rng) as usize;
-                let mut guard = 0;
-                while (v == i || v == j) && guard < 16 {
-                    v = samplers.sample_negative(&mut rng) as usize;
-                    guard += 1;
-                }
+                // Total draw (same fix as the Hogwild engines). The AOT
+                // kernel needs exactly M slots, so when no valid third
+                // vertex exists fall back to `i` itself: a zero-length
+                // difference vector, i.e. an explicit no-op repulsion —
+                // never `j`, which would cancel the pair's attraction.
+                let v = match samplers.sample_negative_excluding(&mut rng, i as u32, j as u32) {
+                    Some(v) => v as usize,
+                    None => i,
+                };
                 idx_neg[e * m + k] = v;
                 let off = (e * m + k) * s;
                 yneg[off..off + s].copy_from_slice(layout.row(v));

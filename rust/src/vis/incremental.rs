@@ -158,15 +158,14 @@ impl IncrementalLayout {
                     }
                 }
             }
-            let mut drawn = 0;
-            let mut guard = 0;
-            while drawn < self.vis.negatives && guard < self.vis.negatives * 10 {
-                guard += 1;
-                let v = samplers.sample_negative(&mut rng) as usize;
-                if v == i || v == j {
-                    continue;
-                }
-                drawn += 1;
+            // Total draw (same fix as the batch optimizer): a bounded
+            // rejection guard can silently drop repulsions on small or
+            // hub-dominated graphs and degenerate to attract-only steps.
+            for _ in 0..self.vis.negatives {
+                let v = match samplers.sample_negative_excluding(&mut rng, i as u32, j as u32) {
+                    Some(v) => v as usize,
+                    None => break,
+                };
                 let d2 = self.layout.sqdist(i, v);
                 let c = gamma * f.coeff_neg(d2);
                 for kk in 0..dim {

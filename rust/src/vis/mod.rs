@@ -7,6 +7,9 @@
 //!   sampling (∝ deg^0.75).
 //! * [`sgd`] — the Hogwild asynchronous-SGD optimizer (the paper's
 //!   engine; O(N) total work).
+//! * [`multilevel`] — the coarse-to-fine driver: optimize a heavy-edge
+//!   contracted hierarchy coarsest-first, prolongate, refine (reaches
+//!   flat quality in a fraction of the fine-level samples).
 //! * [`batched`] — an alternative optimizer that executes the AOT-
 //!   compiled JAX/Pallas gradient artifact via PJRT (the three-layer
 //!   integration path).
@@ -14,6 +17,7 @@
 pub mod objective;
 pub mod sampler;
 pub mod sgd;
+pub mod multilevel;
 pub mod batched;
 pub mod incremental;
 
@@ -84,6 +88,20 @@ pub fn init_layout(n: usize, dim: usize, seed: u64) -> Matrix {
 pub fn layout(graph: &CsrGraph, cfg: &LargeVisConfig) -> Matrix {
     let mut y = init_layout(graph.n(), cfg.dim, cfg.seed);
     sgd::optimize(graph, &mut y, cfg);
+    y
+}
+
+/// Lay out a weighted graph coarse-to-fine (the default pipeline path).
+pub fn layout_multilevel(
+    graph: &CsrGraph,
+    cfg: &LargeVisConfig,
+    ml: &multilevel::MultilevelConfig,
+) -> Matrix {
+    // The driver re-initializes at the coarsest level and overwrites
+    // this buffer completely, so zeros suffice.
+    let mut y = Matrix::zeros(graph.n(), cfg.dim);
+    multilevel::optimize_multilevel(graph, &mut y, cfg, ml, |_, _, _| Ok(()))
+        .expect("infallible hook");
     y
 }
 

@@ -1,0 +1,319 @@
+//! Multilevel coarse-to-fine layout driver.
+//!
+//! The flat Hogwild optimizer ([`crate::vis::sgd`]) spends most of its
+//! sample budget untangling the random initialization. This driver
+//! instead contracts the weighted KNN graph into a heavy-edge-matching
+//! hierarchy ([`crate::graph::coarsen`]), lays out the coarsest level
+//! with the very same Hogwild engine, then walks back down: each fine
+//! vertex is seeded at its coarse parent's position plus a small
+//! gaussian jitter (prolongation) and a refinement pass polishes the
+//! level. Global structure is resolved where it is cheap — on a graph
+//! a few hundred vertices wide — so the finest level needs a fraction
+//! of the flat sample budget to reach equal or better quality.
+//!
+//! Per-level schedule:
+//! * **samples** — every coarse level gets `samples_per_vertex ×
+//!   coarse_samples_multiplier` per (coarse) vertex; the finest level
+//!   gets the configured `samples_per_vertex`. Level vertex counts
+//!   halve going up, so the whole coarse phase costs about one extra
+//!   finest-level pass.
+//! * **learning rate** — the coarsest level (depth `L`) starts at the
+//!   configured `rho0`; a level at depth `d` (0 = finest) starts at
+//!   `rho0 × level_rho_decay^(L − d)`, floored at `0.05·rho0` — each
+//!   refinement step down the hierarchy shrinks the rate, since it
+//!   only adjusts an already-good layout. Within a level the usual
+//!   linear decay runs.
+//!
+//! The Hogwild engine rebuilds its [`crate::vis::sampler::GraphSamplers`]
+//! per level, so each level's edge/negative tables match that level's
+//! contracted graph.
+
+use crate::data::matrix::Matrix;
+use crate::graph::coarsen::{build_hierarchy, CoarsenConfig};
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+use crate::vis::sgd::{self, SgdReport};
+use crate::vis::{init_layout, LargeVisConfig};
+use anyhow::Result;
+
+/// Knobs for the coarse-to-fine schedule (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct MultilevelConfig {
+    /// Hierarchy construction (levels / min-coarse-size / seed).
+    pub coarsen: CoarsenConfig,
+    /// Per-vertex sample multiplier applied at every coarse level.
+    pub coarse_samples_multiplier: f64,
+    /// Stddev of the gaussian jitter added when seeding a fine vertex
+    /// at its coarse parent's position (breaks pair degeneracy).
+    pub jitter: f32,
+    /// Initial learning-rate decay per refinement level (1.0 = every
+    /// level restarts at the full `rho0`).
+    pub level_rho_decay: f32,
+}
+
+impl Default for MultilevelConfig {
+    fn default() -> Self {
+        MultilevelConfig {
+            coarsen: CoarsenConfig::default(),
+            coarse_samples_multiplier: 1.0,
+            jitter: 0.01,
+            level_rho_decay: 0.8,
+        }
+    }
+}
+
+/// What one level's optimization did. `depth` counts from the finest:
+/// 0 is the input graph, `levels.len() - 1` the coarsest.
+#[derive(Clone, Copy, Debug)]
+pub struct LevelReport {
+    /// Distance from the finest level (0 = input graph).
+    pub depth: usize,
+    /// Vertices at this level.
+    pub n: usize,
+    /// Directed edges at this level.
+    pub edges: usize,
+    /// Initial learning rate used at this level.
+    pub rho0: f32,
+    /// Edge samples performed at this level.
+    pub samples: u64,
+    /// Wall-clock seconds in this level's SGD loop.
+    pub seconds: f64,
+}
+
+/// Per-level reports in execution order (coarsest first).
+#[derive(Clone, Debug, Default)]
+pub struct MultilevelReport {
+    /// One entry per optimized level, coarsest first.
+    pub levels: Vec<LevelReport>,
+}
+
+impl MultilevelReport {
+    /// The finest level's report (the one comparable to a flat run).
+    pub fn fine(&self) -> &LevelReport {
+        self.levels.last().expect("at least one level is always optimized")
+    }
+
+    /// Aggregate samples/seconds across all levels.
+    pub fn total(&self) -> SgdReport {
+        let mut samples = 0u64;
+        let mut seconds = 0.0f64;
+        for l in &self.levels {
+            samples += l.samples;
+            seconds += l.seconds;
+        }
+        SgdReport { samples, seconds }
+    }
+}
+
+/// Derive a level's RNG stream from the base seed; depth 0 maps to the
+/// base seed itself so a hierarchy-free run is bit-identical to flat.
+fn level_seed(seed: u64, depth: usize) -> u64 {
+    seed ^ (depth as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Lay out `graph` coarse-to-fine into `layout` (whose incoming values
+/// are ignored — the coarsest level starts from `init_layout`, exactly
+/// like a flat run on a graph below the coarsening floor).
+///
+/// `on_level(depth, level_graph, level_layout)` is called after each
+/// level's refinement, coarsest first (depth counts down to 0, the
+/// input graph) — the pipeline uses it to checkpoint per-level layouts.
+pub fn optimize_multilevel<F>(
+    graph: &CsrGraph,
+    layout: &mut Matrix,
+    cfg: &LargeVisConfig,
+    ml: &MultilevelConfig,
+    mut on_level: F,
+) -> Result<MultilevelReport>
+where
+    F: FnMut(usize, &CsrGraph, &Matrix) -> Result<()>,
+{
+    assert_eq!(layout.n(), graph.n());
+    let hierarchy = build_hierarchy(graph, &ml.coarsen);
+    let top = hierarchy.len();
+    // Graph at `depth` (0 = input, `top` = coarsest).
+    let level_graph = |depth: usize| if depth == 0 { graph } else { &hierarchy[depth - 1].graph };
+
+    let mut report = MultilevelReport::default();
+    let mut y = init_layout(level_graph(top).n(), cfg.dim, cfg.seed);
+    for depth in (0..=top).rev() {
+        let g = level_graph(depth);
+        let mut level_cfg = cfg.clone();
+        level_cfg.seed = level_seed(cfg.seed, depth);
+        if depth > 0 {
+            level_cfg.samples_per_vertex = ((cfg.samples_per_vertex as f64
+                * ml.coarse_samples_multiplier)
+                .ceil() as usize)
+                .max(1);
+        }
+        let rho_scale = ml.level_rho_decay.powi((top - depth) as i32).max(0.05);
+        level_cfg.rho0 = cfg.rho0 * rho_scale;
+        let r = sgd::optimize(g, &mut y, &level_cfg);
+        report.levels.push(LevelReport {
+            depth,
+            n: g.n(),
+            edges: g.n_directed_edges(),
+            rho0: level_cfg.rho0,
+            samples: r.samples,
+            seconds: r.seconds,
+        });
+        on_level(depth, g, &y)?;
+        if depth > 0 {
+            // Prolongate: seed each finer vertex at its coarse parent,
+            // plus jitter so contracted pairs don't sit coincident.
+            let fine = level_graph(depth - 1);
+            let map = &hierarchy[depth - 1].map;
+            let mut jrng = Rng::new(level_seed(cfg.seed ^ 0x317e4, depth));
+            let mut fine_y = Matrix::zeros(fine.n(), cfg.dim);
+            for v in 0..fine.n() {
+                let parent = y.row(map[v] as usize);
+                let row = fine_y.row_mut(v);
+                for (x, &p) in row.iter_mut().zip(parent) {
+                    *x = p + ml.jitter * jrng.gaussian();
+                }
+            }
+            y = fine_y;
+        }
+    }
+    layout.as_mut_slice().copy_from_slice(y.as_slice());
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vis::objective::exact_objective;
+
+    /// Stochastic-block-model-ish graph: `k` cliquish groups of size
+    /// `m` with strong internal and weak external edges.
+    fn blocks(k: usize, m: usize) -> CsrGraph {
+        let n = k * m;
+        let mut edges = Vec::new();
+        for c in 0..k {
+            let base = (c * m) as u32;
+            for a in 0..m as u32 {
+                for b in (a + 1)..m as u32 {
+                    edges.push((base + a, base + b, 1.0));
+                }
+            }
+            let next = (((c + 1) % k) * m) as u32;
+            edges.push((base, next, 0.02));
+        }
+        CsrGraph::from_undirected(n, &edges)
+    }
+
+    fn ml_cfg(min_coarse_size: usize) -> MultilevelConfig {
+        MultilevelConfig {
+            coarsen: CoarsenConfig { min_coarse_size, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn coarse_to_fine_improves_objective_and_separates_blocks() {
+        let g = blocks(6, 10);
+        let cfg = LargeVisConfig {
+            samples_per_vertex: 2000,
+            threads: 1,
+            seed: 21,
+            ..Default::default()
+        };
+        let mut y = init_layout(g.n(), 2, 21);
+        let before = exact_objective(&y, g.edges(), cfg.gamma, cfg.prob_fn);
+        let rep = optimize_multilevel(&g, &mut y, &cfg, &ml_cfg(8), |_, _, _| Ok(())).unwrap();
+        assert!(rep.levels.len() > 1, "no coarse levels were built");
+        let after = exact_objective(&y, g.edges(), cfg.gamma, cfg.prob_fn);
+        assert!(after > before, "objective did not improve: {before} -> {after}");
+        assert!(y.as_slice().iter().all(|x| x.is_finite()));
+        // Mean intra-block distance well below inter-block distance.
+        let (mut intra, mut inter) = (0f64, 0f64);
+        let (mut ni, mut nx) = (0usize, 0usize);
+        for a in 0..g.n() {
+            for b in (a + 1)..g.n() {
+                let d = y.sqdist(a, b) as f64;
+                if a / 10 == b / 10 {
+                    intra += d;
+                    ni += 1;
+                } else {
+                    inter += d;
+                    nx += 1;
+                }
+            }
+        }
+        let (mi, mx) = (intra / ni as f64, inter / nx as f64);
+        assert!(mx > 2.0 * mi, "intra={mi:.3} inter={mx:.3}");
+    }
+
+    #[test]
+    fn depth_order_and_budget_schedule() {
+        let g = blocks(8, 8);
+        let cfg =
+            LargeVisConfig { samples_per_vertex: 50, threads: 1, seed: 3, ..Default::default() };
+        let mut ml = ml_cfg(8);
+        ml.coarse_samples_multiplier = 2.0;
+        let mut y = init_layout(g.n(), 2, 3);
+        let mut seen: Vec<(usize, usize)> = Vec::new();
+        let rep = optimize_multilevel(&g, &mut y, &cfg, &ml, |depth, lg, ly| {
+            assert_eq!(lg.n(), ly.n());
+            seen.push((depth, lg.n()));
+            Ok(())
+        })
+        .unwrap();
+        // Hook fired once per level, coarsest (deepest) first, down to 0.
+        assert_eq!(seen.len(), rep.levels.len());
+        assert_eq!(seen.last().unwrap().0, 0);
+        assert_eq!(seen.last().unwrap().1, g.n());
+        for w in seen.windows(2) {
+            assert_eq!(w[0].0, w[1].0 + 1, "depths not contiguous: {seen:?}");
+            assert!(w[0].1 < w[1].1, "levels not growing: {seen:?}");
+        }
+        // Budget: coarse levels get spv × multiplier, the finest spv.
+        for l in &rep.levels {
+            let spv = if l.depth == 0 { 50 } else { 100 };
+            assert_eq!(l.samples, (spv * l.n) as u64, "depth {}", l.depth);
+        }
+        // Learning rate shrinks toward fine levels, floored at 5%.
+        for w in rep.levels.windows(2) {
+            assert!(w[1].rho0 <= w[0].rho0 + 1e-9);
+            assert!(w[1].rho0 >= cfg.rho0 * 0.05 - 1e-9);
+        }
+        assert!((rep.levels[0].rho0 - cfg.rho0).abs() < 1e-9, "coarsest must start at rho0");
+        // Errors from the hook propagate.
+        let err = optimize_multilevel(&g, &mut y, &cfg, &ml, |_, _, _| anyhow::bail!("stop"));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn no_hierarchy_is_bit_identical_to_flat() {
+        // A graph at/below the coarsening floor must take the exact
+        // flat path: same init, same seed, same sample count.
+        let g = blocks(3, 6);
+        let cfg = LargeVisConfig {
+            samples_per_vertex: 400,
+            threads: 1,
+            seed: 9,
+            ..Default::default()
+        };
+        let mut flat = init_layout(g.n(), 2, cfg.seed);
+        sgd::optimize(&g, &mut flat, &cfg);
+        let mut ml_y = init_layout(g.n(), 2, cfg.seed);
+        let rep =
+            optimize_multilevel(&g, &mut ml_y, &cfg, &ml_cfg(1024), |_, _, _| Ok(())).unwrap();
+        assert_eq!(rep.levels.len(), 1);
+        assert_eq!(rep.fine().depth, 0);
+        assert_eq!(flat, ml_y, "hierarchy-free multilevel diverged from flat SGD");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let g = blocks(6, 10);
+        let cfg =
+            LargeVisConfig { samples_per_vertex: 200, threads: 1, seed: 4, ..Default::default() };
+        let run = || {
+            let mut y = init_layout(g.n(), 2, cfg.seed);
+            optimize_multilevel(&g, &mut y, &cfg, &ml_cfg(8), |_, _, _| Ok(())).unwrap();
+            y
+        };
+        assert_eq!(run(), run());
+    }
+}

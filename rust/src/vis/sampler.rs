@@ -1,6 +1,15 @@
 //! Samplers for the SGD hot loop (paper §3.2 "Optimization"):
 //! edges ∝ `w_ij` (edge sampling — decouples step size from weight
 //! variance) and negatives ∝ `deg^0.75` (word2vec's noise distribution).
+//!
+//! Isolated (zero-degree) vertices are excluded from the negative table
+//! entirely. They appear in no positive edge either, so the optimizer
+//! never touches them: their layout rows stay pinned exactly where they
+//! were initialized (for the multilevel engine, at their coarse
+//! parent's position). The previous behavior — granting them a
+//! `1e-12^0.75` pseudo-mass — meant they were (essentially) never
+//! repelled yet still distorted the residual probabilities of every
+//! real vertex in the alias table.
 
 use crate::graph::CsrGraph;
 use crate::util::alias::AliasTable;
@@ -12,6 +21,9 @@ pub struct GraphSamplers {
     neg_table: AliasTable,
     /// Directed edge endpoints, aligned with the alias table indices.
     endpoints: Vec<(u32, u32)>,
+    /// Vertices with at least one edge — the support of the negative
+    /// table (`neg_table` indexes into this, not into vertex ids).
+    neg_support: Vec<u32>,
 }
 
 impl GraphSamplers {
@@ -21,12 +33,20 @@ impl GraphSamplers {
         assert!(!edges.is_empty(), "cannot lay out a graph with no edges");
         let weights: Vec<f64> = edges.iter().map(|&(_, _, w)| w).collect();
         let endpoints: Vec<(u32, u32)> = edges.iter().map(|&(s, d, _)| (s, d)).collect();
-        let deg: Vec<f64> =
-            (0..graph.n()).map(|v| graph.weighted_degree(v).max(1e-12).powf(0.75)).collect();
+        let mut neg_support: Vec<u32> = Vec::new();
+        let mut deg: Vec<f64> = Vec::new();
+        for v in 0..graph.n() {
+            let d = graph.weighted_degree(v);
+            if d > 0.0 {
+                neg_support.push(v as u32);
+                deg.push(d.powf(0.75));
+            }
+        }
         GraphSamplers {
             edge_table: AliasTable::new(&weights),
             neg_table: AliasTable::new(&deg),
             endpoints,
+            neg_support,
         }
     }
 
@@ -36,10 +56,53 @@ impl GraphSamplers {
         self.endpoints[self.edge_table.sample(rng)]
     }
 
-    /// Sample a negative vertex ∝ deg^0.75.
+    /// Sample a negative vertex ∝ deg^0.75 (never an isolated vertex).
     #[inline]
     pub fn sample_negative(&self, rng: &mut Rng) -> u32 {
-        self.neg_table.sample(rng) as u32
+        self.neg_support[self.neg_table.sample(rng)]
+    }
+
+    /// Sample a negative vertex ∝ deg^0.75 that is neither `i` nor `j`.
+    ///
+    /// A bare rejection loop over [`GraphSamplers::sample_negative`]
+    /// cannot bound its attempts: on small or hub-dominated graphs the
+    /// noise distribution can concentrate almost all mass on the edge's
+    /// own endpoints, and a bounded guard then gives up and silently
+    /// skews the attract/repel balance of the SGD step. This draw is
+    /// total instead — a few alias attempts, then a few uniform draws
+    /// over the support, then a deterministic scan — so it returns
+    /// `None` only when no valid vertex exists at all.
+    #[inline]
+    pub fn sample_negative_excluding(&self, rng: &mut Rng, i: u32, j: u32) -> Option<u32> {
+        const ALIAS_ATTEMPTS: usize = 8;
+        const UNIFORM_ATTEMPTS: usize = 8;
+        for _ in 0..ALIAS_ATTEMPTS {
+            let v = self.sample_negative(rng);
+            if v != i && v != j {
+                return Some(v);
+            }
+        }
+        // Degenerate regime: the ∝ deg^0.75 table keeps returning the
+        // excluded endpoints. Fall back to uniform draws over the
+        // support (still never an isolated vertex) — a mild, bounded
+        // distortion of the noise distribution beats dropping the
+        // repulsion term outright.
+        let m = self.neg_support.len();
+        for _ in 0..UNIFORM_ATTEMPTS {
+            let v = self.neg_support[rng.below(m)];
+            if v != i && v != j {
+                return Some(v);
+            }
+        }
+        // Guaranteed termination: scan the support from a random start.
+        let start = rng.below(m);
+        for off in 0..m {
+            let v = self.neg_support[(start + off) % m];
+            if v != i && v != j {
+                return Some(v);
+            }
+        }
+        None
     }
 }
 
@@ -92,6 +155,44 @@ mod tests {
         let raw_ratio = (9.0f64 / 0.5).powf(0.75);
         let got = counts[0] as f64 / counts[4].max(1) as f64;
         assert!((got - raw_ratio).abs() < raw_ratio * 0.25, "got {got}, want ≈{raw_ratio}");
+    }
+
+    #[test]
+    fn isolated_vertices_never_negative_sampled() {
+        // Vertices 3 and 4 are isolated: zero mass, not ~1e-12^0.75.
+        let g = CsrGraph::from_undirected(5, &[(0, 1, 1.0), (1, 2, 2.0)]);
+        let s = GraphSamplers::new(&g);
+        let mut rng = Rng::new(9);
+        for _ in 0..50_000 {
+            let v = s.sample_negative(&mut rng);
+            assert!(v < 3, "isolated vertex {v} drawn as negative");
+        }
+    }
+
+    #[test]
+    fn excluding_draw_always_finds_the_only_valid_negative() {
+        // Path 0-1-2 with a huge weight disparity: the ∝ deg^0.75 table
+        // holds essentially all its mass on vertices 0 and 1, so plain
+        // alias draws essentially never yield vertex 2. The total draw
+        // must still deliver it, every time.
+        let g = CsrGraph::from_undirected(3, &[(0, 1, 1e9), (1, 2, 1e-9)]);
+        let s = GraphSamplers::new(&g);
+        let mut rng = Rng::new(4);
+        for _ in 0..10_000 {
+            assert_eq!(s.sample_negative_excluding(&mut rng, 0, 1), Some(2));
+        }
+    }
+
+    #[test]
+    fn excluding_draw_none_when_no_candidate_exists() {
+        let g = CsrGraph::from_undirected(2, &[(0, 1, 1.0)]);
+        let s = GraphSamplers::new(&g);
+        let mut rng = Rng::new(8);
+        for _ in 0..100 {
+            assert_eq!(s.sample_negative_excluding(&mut rng, 0, 1), None);
+        }
+        // With only one endpoint excluded the other is still returned.
+        assert_eq!(s.sample_negative_excluding(&mut rng, 0, 0), Some(1));
     }
 
     #[test]

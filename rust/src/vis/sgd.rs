@@ -140,16 +140,17 @@ pub fn optimize(
                     yj[k] -= rho * g; // opposite force on y_j
                 }
             }
-            // M negatives: repel.
-            let mut drawn = 0;
-            let mut guard = 0;
-            while drawn < a.negatives && guard < a.negatives * 10 {
-                guard += 1;
-                let v = a.samplers.sample_negative(&mut rng) as usize;
-                if v == i || v == j {
-                    continue;
-                }
-                drawn += 1;
+            // M negatives: repel. The excluding draw is total, so every
+            // positive update is balanced by exactly M repulsions
+            // whenever the graph has any third connected vertex (the
+            // old bounded rejection guard could run out on small or
+            // hub-dominated graphs and silently apply an attract-only
+            // step, collapsing the layout).
+            for _ in 0..a.negatives {
+                let v = match a.samplers.sample_negative_excluding(&mut rng, i as u32, j as u32) {
+                    Some(v) => v as usize,
+                    None => break,
+                };
                 let yv = unsafe { a.shared.row(v, DIM) };
                 let mut d2 = 0f32;
                 for k in 0..DIM {
@@ -283,6 +284,42 @@ mod tests {
         optimize(&g, &mut y, &cfg);
         let after = exact_objective(&y, g.edges(), cfg.gamma, cfg.prob_fn);
         assert!(after > before);
+    }
+
+    #[test]
+    fn pathological_negative_table_still_repels() {
+        // Path 0-1-2 with a huge weight disparity. Edge sampling all
+        // but always draws (0,1), and the ∝ deg^0.75 noise table holds
+        // essentially all its mass on vertices 0 and 1 — so the old
+        // bounded rejection guard virtually never produced a negative,
+        // and the step degenerated to attract-only: the whole layout
+        // collapsed into the ~1e-4 init ball. With the total draw,
+        // vertex 2 is repelled on every step.
+        let g = CsrGraph::from_undirected(3, &[(0, 1, 1e9), (1, 2, 1e-9)]);
+        let cfg =
+            LargeVisConfig { samples_per_vertex: 3000, threads: 1, seed: 5, ..Default::default() };
+        let mut y = init_layout(g.n(), 2, 5);
+        optimize(&g, &mut y, &cfg);
+        assert!(y.as_slice().iter().all(|x| x.is_finite()));
+        let d02 = y.sqdist(0, 2);
+        let d01 = y.sqdist(0, 1);
+        assert!(d02 > 1.0, "vertex 2 was never repelled: sqdist(0,2) = {d02}");
+        assert!(d01 < d02, "attraction lost to repulsion: d01={d01} d02={d02}");
+    }
+
+    #[test]
+    fn isolated_vertices_stay_pinned() {
+        // Vertex 3 has no edges: it must be excluded from both sampling
+        // tables, so SGD never moves its layout row.
+        let g = CsrGraph::from_undirected(4, &[(0, 1, 1.0), (1, 2, 1.0), (0, 2, 1.0)]);
+        let cfg =
+            LargeVisConfig { samples_per_vertex: 2000, threads: 1, seed: 3, ..Default::default() };
+        let mut y = init_layout(g.n(), 2, 3);
+        let before: Vec<f32> = y.row(3).to_vec();
+        optimize(&g, &mut y, &cfg);
+        assert_eq!(y.row(3), &before[..], "isolated vertex moved");
+        // The connected triangle did move.
+        assert!(y.sqdist(0, 1) > 0.0);
     }
 
     #[test]

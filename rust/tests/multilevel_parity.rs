@@ -1,0 +1,68 @@
+//! Acceptance test for the multilevel coarse-to-fine layout engine
+//! (ISSUE 3 tentpole): on the 100k out-of-core-scale acceptance
+//! dataset, multilevel with **half** the fine-level gradient samples
+//! must reach KNN-preservation at least equal to flat SGD — the coarse
+//! levels resolve the global structure that flat SGD burns most of its
+//! budget untangling.
+
+use largevis::data::synth::gaussian_mixture;
+use largevis::eval::metrics::neighborhood_preservation;
+use largevis::graph::weights::weighted_graph;
+use largevis::knn::explore::{largevis_knn, LargeVisKnnConfig};
+use largevis::knn::rptree::RpForestConfig;
+use largevis::vis::multilevel::{optimize_multilevel, MultilevelConfig};
+use largevis::vis::{init_layout, sgd, LargeVisConfig};
+
+const N: usize = 100_000;
+const D: usize = 8;
+const FLAT_SPV: usize = 40;
+
+#[test]
+fn multilevel_matches_flat_with_half_the_fine_samples() {
+    let (points, _) = gaussian_mixture(N, D, 10, 0.4, 0x100c);
+    let knn_cfg = LargeVisKnnConfig {
+        forest: RpForestConfig { n_trees: 1, search_leaves: 1, ..Default::default() },
+        iters: 0,
+        ..Default::default()
+    };
+    let knn = largevis_knn(&points, 6, &knn_cfg);
+    let graph = weighted_graph(&knn, &Default::default());
+
+    // Single-threaded SGD keeps both layouts bit-deterministic, so this
+    // comparison can never flake on Hogwild race noise.
+    let flat_cfg = LargeVisConfig {
+        samples_per_vertex: FLAT_SPV,
+        threads: 1,
+        seed: 0x5eed,
+        ..Default::default()
+    };
+    let mut flat = init_layout(graph.n(), 2, flat_cfg.seed);
+    let flat_report = sgd::optimize(&graph, &mut flat, &flat_cfg);
+
+    // Half the fine-level budget; default coarse schedule.
+    let ml_cfg = LargeVisConfig { samples_per_vertex: FLAT_SPV / 2, ..flat_cfg.clone() };
+    let ml = MultilevelConfig::default();
+    let mut mlvl = init_layout(graph.n(), 2, ml_cfg.seed);
+    let report = optimize_multilevel(&graph, &mut mlvl, &ml_cfg, &ml, |_, _, _| Ok(())).unwrap();
+    assert!(report.levels.len() > 2, "expected a real hierarchy on 100k points");
+    assert!(
+        report.fine().samples * 2 <= flat_report.samples,
+        "fine budget not halved: {} vs {}",
+        report.fine().samples,
+        flat_report.samples
+    );
+
+    let flat_score = neighborhood_preservation(&points, &flat, 10, 300, 0xe5a1, 4);
+    let ml_score = neighborhood_preservation(&points, &mlvl, 10, 300, 0xe5a1, 4);
+    eprintln!(
+        "[multilevel_parity] knn-preservation: flat({} spv) = {flat_score:.4}, \
+         multilevel({} fine spv, {} levels) = {ml_score:.4}",
+        FLAT_SPV,
+        FLAT_SPV / 2,
+        report.levels.len()
+    );
+    assert!(
+        ml_score >= flat_score,
+        "multilevel ({ml_score:.4}) must reach flat ({flat_score:.4}) with half the fine samples"
+    );
+}
