@@ -22,7 +22,8 @@ const VALUE_KEYS: &[&str] = &[
     "dataset", "scale", "k", "trees", "explore-iters", "perplexity", "samples", "negatives",
     "gamma", "rho0", "threads", "seed", "out", "config", "dim", "prob-fn", "prob-a", "engine",
     "max-visits", "format", "sample", "input", "labels", "resume-from", "chunk-rows", "layout",
-    "ml-levels", "ml-min-size", "ml-coarse-samples", "ml-jitter", "ml-rho-decay",
+    "ml-levels", "ml-min-size", "ml-coarse-samples", "ml-jitter", "ml-rho-decay", "checkpoints",
+    "addr", "embed-samples", "embed-k", "grid", "tile-max-points", "max-body-bytes",
 ];
 
 /// Parse a raw argument vector (without argv[0]).
@@ -84,6 +85,7 @@ USAGE:
 
 COMMANDS:
     pipeline    run the full pipeline: dataset -> KNN -> weights -> layout -> SVG + report
+    serve       HTTP query server over a finished run's checkpoints
     knn         build a KNN graph and report recall vs exact ground truth
     convert     convert a dataset between LargeVis text and .lvec binary (streamed)
     datasets    list the dataset registry (paper Table 1 analogs)
@@ -125,6 +127,18 @@ CHECKPOINT / RESUME:
 CONVERT:
     largevis convert <src> <dst>   format chosen by <dst> extension
                                    (.txt/.tsv -> text, else binary)
+
+SERVE (largevis serve):
+    --checkpoints <dir>   checkpoint directory of a finished run
+                          (or --out <dir> for <dir>/checkpoints)
+    --addr <host:port>    listen address (default 127.0.0.1:7878; port 0 = ephemeral)
+    --threads <n>         accept workers (default: all cores, capped at 16)
+    --embed-samples <n>   localized-SGD steps per /embed point (default 500)
+    --embed-k <n>         neighbors per /embed point (default: checkpointed k)
+    --grid <n>            /viewport spatial-index cells per axis (default 64)
+    --tile-max-points <n> max points rendered per /viewport tile (default 20000)
+    --max-body-bytes <n>  request-body size cap (default 67108864; over it -> 413)
+    Endpoints: POST /embed, POST /knn, GET /viewport, GET /healthz, GET /metrics
 ";
 
 #[cfg(test)]

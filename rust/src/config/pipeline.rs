@@ -134,6 +134,72 @@ impl Default for PipelineConfig {
     }
 }
 
+/// Configuration for the checkpoint-backed layout query server
+/// (`largevis serve`).
+///
+/// The server is read-only over one finished run: it loads the
+/// checkpoint artifacts (`data.lvec`, `knn.ckpt`, `graph.ckpt`,
+/// `layout.lvec`, `labels.lbl`) once at startup and answers `/embed`,
+/// `/knn`, `/viewport`, `/healthz` and `/metrics` from memory. INI keys
+/// live in a `[serve]` section; CLI flags override them.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Checkpoint directory of a finished pipeline run
+    /// (`<out_dir>/checkpoints`).
+    pub checkpoints: std::path::PathBuf,
+    /// Listen address, `host:port` (port 0 = ephemeral).
+    pub addr: String,
+    /// Worker threads accepting connections (0 = auto).
+    pub threads: usize,
+    /// Localized-SGD refinement steps per `/embed` point.
+    pub embed_samples: usize,
+    /// Neighbors per `/embed` point (0 = the checkpointed graph's k).
+    pub embed_k: usize,
+    /// Spatial-index cells per axis for `/viewport` culling.
+    pub grid: usize,
+    /// Max points rendered per `/viewport` tile (deterministic
+    /// subsample beyond this).
+    pub tile_max_points: usize,
+    /// Maximum accepted request-body size in bytes.
+    pub max_body_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            checkpoints: std::path::PathBuf::from("target/run/checkpoints"),
+            addr: "127.0.0.1:7878".to_string(),
+            threads: 0,
+            embed_samples: 500,
+            embed_k: 0,
+            grid: 64,
+            tile_max_points: 20_000,
+            max_body_bytes: 64 << 20,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Build from an INI document's `[serve]` section (missing keys
+    /// keep defaults).
+    pub fn from_ini(ini: &Ini) -> Result<Self> {
+        let mut cfg = ServeConfig::default();
+        if let Some(dir) = ini.get("serve", "checkpoints") {
+            cfg.checkpoints = dir.into();
+        }
+        if let Some(addr) = ini.get("serve", "addr") {
+            cfg.addr = addr.to_string();
+        }
+        cfg.threads = ini.get_or("serve", "threads", cfg.threads)?;
+        cfg.embed_samples = ini.get_or("serve", "embed_samples", cfg.embed_samples)?;
+        cfg.embed_k = ini.get_or("serve", "embed_k", cfg.embed_k)?;
+        cfg.grid = ini.get_or("serve", "grid", cfg.grid)?;
+        cfg.tile_max_points = ini.get_or("serve", "tile_max_points", cfg.tile_max_points)?;
+        cfg.max_body_bytes = ini.get_or("serve", "max_body_bytes", cfg.max_body_bytes)?;
+        Ok(cfg)
+    }
+}
+
 impl PipelineConfig {
     /// Build from an INI document (missing keys keep defaults).
     pub fn from_ini(ini: &Ini) -> Result<Self> {
@@ -282,6 +348,28 @@ mod tests {
         assert!(Stage::Weights < Stage::Layout);
         assert_eq!("layout".parse::<Stage>().unwrap(), Stage::Layout);
         assert!("nope".parse::<Stage>().is_err());
+    }
+
+    #[test]
+    fn serve_section_keys() {
+        let c = ServeConfig::default();
+        assert_eq!(c.addr, "127.0.0.1:7878");
+        assert_eq!(c.embed_k, 0);
+        let ini = Ini::parse(
+            "[serve]\ncheckpoints = target/mnist/checkpoints\naddr = 0.0.0.0:9000\nthreads = 8\nembed_samples = 250\nembed_k = 20\ngrid = 128\ntile_max_points = 5000",
+        )
+        .unwrap();
+        let c = ServeConfig::from_ini(&ini).unwrap();
+        assert_eq!(
+            c.checkpoints,
+            std::path::PathBuf::from("target/mnist/checkpoints")
+        );
+        assert_eq!(c.addr, "0.0.0.0:9000");
+        assert_eq!(c.threads, 8);
+        assert_eq!(c.embed_samples, 250);
+        assert_eq!(c.embed_k, 20);
+        assert_eq!(c.grid, 128);
+        assert_eq!(c.tile_max_points, 5000);
     }
 
     #[test]

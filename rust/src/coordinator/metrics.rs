@@ -25,6 +25,17 @@ impl Metrics {
         }
     }
 
+    /// Add `delta` to a counter-style metric, creating it at `delta` if
+    /// absent — the increment twin of [`Metrics::set`], used by the
+    /// query server's per-endpoint request/error counters.
+    pub fn add(&mut self, name: &str, delta: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += delta;
+        } else {
+            self.entries.push((name.to_string(), delta));
+        }
+    }
+
     /// Fetch a metric.
     pub fn get(&self, name: &str) -> Option<f64> {
         self.entries.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
@@ -65,6 +76,17 @@ mod tests {
         m.set("a", 3.0);
         assert_eq!(m.get("a"), Some(3.0));
         assert_eq!(m.iter().count(), 2);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut m = Metrics::new();
+        m.add("hits", 1.0);
+        m.add("hits", 2.5);
+        assert_eq!(m.get("hits"), Some(3.5));
+        m.set("hits", 0.0);
+        m.add("hits", 4.0);
+        assert_eq!(m.get("hits"), Some(4.0));
     }
 
     #[test]

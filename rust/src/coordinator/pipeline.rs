@@ -36,13 +36,22 @@ pub struct PipelineOutput {
 }
 
 /// On-disk locations of the stage checkpoints for one `out_dir`.
+///
+/// Together these make the directory self-contained for `largevis
+/// serve`: the high-dimensional points (`data.lvec`), the KNN graph,
+/// the weighted graph, the final layout (`layout.lvec`), and labels.
 pub struct CheckpointPaths {
     /// The checkpoint directory (`<out_dir>/checkpoints`).
     pub dir: PathBuf,
+    /// Ingested high-dimensional points (`.lvec`), written so query
+    /// serving never needs the original input file.
+    pub data: PathBuf,
     /// KNN graph checkpoint.
     pub knn: PathBuf,
     /// Symmetrized weighted graph checkpoint.
     pub graph: PathBuf,
+    /// Final layout (`.lvec`), whichever layout mode produced it.
+    pub layout: PathBuf,
     /// Labels (`.lbl`), present only for labeled datasets.
     pub labels: PathBuf,
     /// Dataset name of the run that wrote the checkpoints (plain text).
@@ -50,15 +59,24 @@ pub struct CheckpointPaths {
 }
 
 impl CheckpointPaths {
-    /// Checkpoint paths under `out_dir`.
+    /// Checkpoint paths under `out_dir` (the conventional
+    /// `<out_dir>/checkpoints` location a pipeline run writes to).
     pub fn new(out_dir: &Path) -> Self {
-        let dir = out_dir.join("checkpoints");
+        CheckpointPaths::in_dir(&out_dir.join("checkpoints"))
+    }
+
+    /// Checkpoint paths inside an explicit checkpoint directory — the
+    /// `largevis serve --checkpoints <dir>` entry point, where the
+    /// caller names the directory itself rather than its parent.
+    pub fn in_dir(dir: &Path) -> Self {
         CheckpointPaths {
+            data: dir.join("data.lvec"),
             knn: dir.join("knn.ckpt"),
             graph: dir.join("graph.ckpt"),
+            layout: dir.join("layout.lvec"),
             labels: dir.join("labels.lbl"),
             meta: dir.join("dataset.txt"),
-            dir,
+            dir: dir.to_path_buf(),
         }
     }
 }
@@ -116,6 +134,28 @@ fn ingest_dataset(cfg: &PipelineConfig) -> Result<Dataset> {
 /// Run the full pipeline per `cfg`, writing layout TSV + SVG + report
 /// JSON into `cfg.out_dir` (and stage checkpoints into
 /// `<out_dir>/checkpoints/` unless disabled).
+///
+/// # Example
+///
+/// ```no_run
+/// use largevis::config::PipelineConfig;
+/// use largevis::coordinator::run_pipeline;
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let mut cfg = PipelineConfig {
+///     dataset: "mnist-like".to_string(),
+///     scale: 0.1,
+///     k: 50,
+///     out_dir: "target/mnist".into(),
+///     ..Default::default()
+/// };
+/// cfg.vis.samples_per_vertex = 2000;
+/// let out = run_pipeline(&cfg)?;
+/// println!("laid out {} points in {}D", out.layout.n(), out.layout.d());
+/// // target/mnist/checkpoints/ now holds everything `largevis serve` needs.
+/// # Ok(())
+/// # }
+/// ```
 pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineOutput> {
     let mut metrics = Metrics::new();
     std::fs::create_dir_all(&cfg.out_dir)
@@ -158,6 +198,10 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineOutput> {
         if cfg.save_checkpoints {
             checkpoint::write_knn(&ckpt.knn, &knn)
                 .with_context(|| format!("write {}", ckpt.knn.display()))?;
+            // The raw points make the checkpoint directory self-contained
+            // for `largevis serve` (/embed and /knn scan them).
+            formats::binary::write_binary(&ckpt.data, &ds.points)
+                .with_context(|| format!("write {}", ckpt.data.display()))?;
             std::fs::write(&ckpt.meta, &ds.name)?;
             match &ds.labels {
                 Some(ls) => write_labels(&ckpt.labels, ls)?,
@@ -309,6 +353,13 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineOutput> {
     metrics.set("layout.secs", t.report());
     metrics.set("layout.samples", report.samples as f64);
     metrics.set("layout.samples_per_sec", report.throughput());
+    if cfg.save_checkpoints {
+        // The final layout joins the checkpoint set regardless of
+        // layout mode, so `largevis serve` (and any downstream tool)
+        // has one canonical artifact to load.
+        crate::data::formats::binary::write_binary(&ckpt.layout, &layout)
+            .with_context(|| format!("write {}", ckpt.layout.display()))?;
+    }
 
     // Stage 5: evaluation (labels permitting).
     if let Some(labels) = &labels {
@@ -361,11 +412,18 @@ mod tests {
         assert!(cfg.out_dir.join("report.json").exists());
         let report = std::fs::read_to_string(cfg.out_dir.join("report.json")).unwrap();
         crate::util::json::Json::parse(&report).unwrap();
-        // Checkpoints written by default.
+        // Checkpoints written by default — the full serve set.
         let ckpt = CheckpointPaths::new(&cfg.out_dir);
         assert!(ckpt.knn.exists());
         assert!(ckpt.graph.exists());
         assert!(ckpt.labels.exists());
+        assert!(ckpt.data.exists());
+        assert!(ckpt.layout.exists());
+        // The layout checkpoint is the final layout, bit for bit.
+        let saved = crate::data::formats::binary::read_binary(&ckpt.layout).unwrap();
+        assert_eq!(saved, out.layout);
+        let data = crate::data::formats::binary::read_binary(&ckpt.data).unwrap();
+        assert_eq!(data.n(), out.layout.n());
     }
 
     #[test]

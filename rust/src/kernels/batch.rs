@@ -31,6 +31,7 @@
 
 use super::KernelSet;
 use crate::data::matrix::Matrix;
+use crate::util::heap::BoundedMaxHeap;
 use std::cell::RefCell;
 
 /// Candidate rows gathered per scratch block. 64 rows keeps the block
@@ -88,6 +89,33 @@ pub fn sqdist_to_all(query: &[f32], data: &Matrix, out: &mut Vec<f32>) {
         return;
     }
     compute_block(super::active(), query, data.as_slice(), d, data.n(), out);
+}
+
+/// The `k` (floored at 1) nearest rows of `data` to `query`, as
+/// `(id, sqdist)` pairs sorted ascending by distance — one
+/// [`sqdist_to_all`] batch scan filtered through a bounded max-heap.
+///
+/// This is the single home of the exact one-query scan shared by the
+/// query server's `/knn` endpoint, out-of-sample projection, and
+/// incremental insertion — a fix to threshold or tie handling lands in
+/// all of them at once. `dists` and `heap` are caller-owned scratch so
+/// per-query loops stay allocation-free (the heap is reset to capacity
+/// `k` on entry; ties at equal distance resolve to the lower id).
+pub fn nearest_k(
+    query: &[f32],
+    data: &Matrix,
+    k: usize,
+    dists: &mut Vec<f32>,
+    heap: &mut BoundedMaxHeap,
+) -> Vec<(u32, f32)> {
+    heap.reset(k.max(1));
+    sqdist_to_all(query, data, dists);
+    for (j, &d) in dists.iter().enumerate() {
+        if d < heap.threshold() {
+            heap.push(j as u32, d, false);
+        }
+    }
+    heap.drain_sorted_pairs()
 }
 
 /// Distances of `query` against `rows` contiguous `d`-length vectors in
@@ -157,6 +185,30 @@ mod tests {
         sqdist_batch(&q, &m, &ids, &mut a);
         sqdist_to_all(&q, &m, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn nearest_k_matches_sort_reference() {
+        // Small-integer data: every squared distance is exactly
+        // representable whatever order the SIMD lanes accumulate in, so
+        // ranks are deterministic across kernel variants.
+        let d = 13;
+        let m = Matrix::from_vec(
+            (0..90 * d).map(|x| ((x * 31 + 7) % 17) as f32 - 8.0).collect(),
+            90,
+            d,
+        );
+        let q: Vec<f32> = (0..d).map(|x| ((x * 5 + 3) % 11) as f32 - 5.0).collect();
+        let mut dists = Vec::new();
+        let mut heap = BoundedMaxHeap::new(1);
+        for &k in &[1usize, 5, 89, 90, 200] {
+            let got = nearest_k(&q, &m, k, &mut dists, &mut heap);
+            let mut want: Vec<(u32, f32)> =
+                (0..90u32).map(|j| (j, scalar::sqdist(&q, m.row(j as usize)))).collect();
+            want.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            want.truncate(k.min(90));
+            assert_eq!(got, want, "k={k}");
+        }
     }
 
     #[test]

@@ -8,11 +8,13 @@
 //!
 //! * **scalar** — the portable 4-lane unrolled reference ([`scalar`]),
 //!   always available, the parity baseline for every other variant.
-//! * **sse2** / **avx2** — `x86_64` via `std::arch` ([`x86`], compiled
-//!   on x86-64 only). AVX2 uses 8-wide FMA; SSE2 is the 4-wide baseline
+//! * **sse2** / **avx2** — `x86_64` via `std::arch` (the `x86` module,
+//!   compiled on x86-64 only — a cfg-gated module cannot be doc-linked
+//!   portably). AVX2 uses 8-wide FMA; SSE2 is the 4-wide baseline
 //!   guaranteed by the x86-64 ISA.
-//! * **neon** — `aarch64` 4-wide FMA ([`neon`]; NEON is mandatory on
-//!   aarch64 so no runtime check is needed).
+//! * **neon** — `aarch64` 4-wide FMA (the `neon` module, compiled on
+//!   aarch64 only; NEON is mandatory there so no runtime check is
+//!   needed).
 //!
 //! Each variant provides `sqdist`, `sqdist_bounded` (with the same
 //! 32-lane early-exit blocking as the scalar path), `dot`, and
@@ -46,7 +48,7 @@ pub mod scalar;
 #[cfg(target_arch = "x86_64")]
 pub mod x86;
 
-pub use batch::{sqdist_batch, sqdist_to_all};
+pub use batch::{nearest_k, sqdist_batch, sqdist_to_all};
 
 use std::sync::OnceLock;
 

@@ -3,11 +3,11 @@
 //!
 //! Safety model: every public function here is a safe `fn` whose body
 //! enters a `#[target_feature]` implementation. The dispatcher
-//! ([`super::available`] / [`super::best_available`]) only hands out
-//! these [`super::KernelSet`]s after `is_x86_feature_detected!`
-//! confirms the features, so the `unsafe` entry is sound. Do not call
-//! the AVX2 set directly on unverified hardware — go through
-//! `kernels::active()` or `kernels::available()`.
+//! ([`super::available`] / [`super::active`]) only hands out these
+//! [`super::KernelSet`]s after `is_x86_feature_detected!` confirms the
+//! features, so the `unsafe` entry is sound. Do not call the AVX2 set
+//! directly on unverified hardware — go through `kernels::active()` or
+//! `kernels::available()`.
 
 use super::KernelSet;
 use std::arch::x86_64::*;

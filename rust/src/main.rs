@@ -2,11 +2,12 @@
 
 use anyhow::{bail, Result};
 use largevis::cli::{self, Args};
-use largevis::config::{Ini, PipelineConfig};
+use largevis::config::{Ini, PipelineConfig, ServeConfig};
 use largevis::coordinator::run_pipeline;
 use largevis::data::datasets;
 use largevis::knn::explore::LargeVisKnnConfig;
 use largevis::knn::rptree::RpForestConfig;
+use largevis::serve::{Server, ServerState};
 use largevis::vis::ProbFn;
 
 fn main() {
@@ -28,6 +29,7 @@ fn run(argv: &[String]) -> Result<()> {
         "info" => cmd_info(),
         "knn" => cmd_knn(&args),
         "pipeline" => cmd_pipeline(&args),
+        "serve" => cmd_serve(&args),
         "convert" => cmd_convert(&args),
         other => bail!("unknown command {other:?}\n\n{}", cli::USAGE),
     }
@@ -123,6 +125,47 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let out = run_pipeline(&cfg)?;
     out.metrics.report(&cfg.dataset);
     Ok(())
+}
+
+/// Assemble a ServeConfig from `--config` INI `[serve]` plus CLI
+/// overrides, then run the query server until killed.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.get_str("config") {
+        Some(path) => ServeConfig::from_ini(&Ini::load(std::path::Path::new(path))?)?,
+        None => ServeConfig::default(),
+    };
+    if let Some(dir) = args.get_str("checkpoints") {
+        cfg.checkpoints = dir.into();
+    } else if let Some(out) = args.get_str("out") {
+        cfg.checkpoints = std::path::PathBuf::from(out).join("checkpoints");
+    }
+    if let Some(addr) = args.get_str("addr") {
+        cfg.addr = addr.to_string();
+    }
+    cfg.threads = args.get_or("threads", cfg.threads)?;
+    cfg.embed_samples = args.get_or("embed-samples", cfg.embed_samples)?;
+    cfg.embed_k = args.get_or("embed-k", cfg.embed_k)?;
+    cfg.grid = args.get_or("grid", cfg.grid)?;
+    cfg.tile_max_points = args.get_or("tile-max-points", cfg.tile_max_points)?;
+    cfg.max_body_bytes = args.get_or("max-body-bytes", cfg.max_body_bytes)?;
+
+    let state = ServerState::load(cfg)?;
+    eprintln!(
+        "[serve] loaded {}: {} points (d={}), layout dim {}, knn k={}, {} graph edges",
+        state.dataset,
+        state.data.n(),
+        state.data.d(),
+        state.layout.d(),
+        state.knn.k,
+        state.graph_edges,
+    );
+    let server = Server::bind(state)?;
+    eprintln!(
+        "[serve] listening on http://{} (POST /embed, POST /knn, GET /viewport, \
+         GET /healthz, GET /metrics)",
+        server.local_addr()?
+    );
+    server.run()
 }
 
 fn cmd_knn(args: &Args) -> Result<()> {

@@ -1,0 +1,226 @@
+//! Uniform-grid spatial index over a 2D layout, for viewport queries.
+//!
+//! The query server's `/viewport` endpoint renders an arbitrary
+//! rectangle of the layout. Scanning all N points per tile would make
+//! tile cost O(N) regardless of how little of the layout is visible;
+//! instead the layout is bucketed once at load time into a `g × g`
+//! uniform grid stored CSR-style (one contiguous id array plus cell
+//! offsets), and a viewport query walks only the cells overlapping the
+//! requested rectangle. Tile cost is then proportional to the points in
+//! (a one-cell neighborhood of) the viewport, not to N.
+//!
+//! Coordinates are copied next to the ids so a query never touches the
+//! layout matrix — the index is self-contained and can be shared
+//! read-only across server worker threads.
+
+use crate::data::matrix::Matrix;
+
+/// A point surfaced by a viewport query: `(id, x, y)`.
+pub type GridPoint = (u32, f32, f32);
+
+/// CSR-bucketed uniform grid over the first two layout dimensions.
+#[derive(Clone, Debug)]
+pub struct GridIndex {
+    /// Cells per axis.
+    g: usize,
+    /// Layout bounds (min x, min y, max x, max y).
+    bounds: (f32, f32, f32, f32),
+    /// Cell width / height (always > 0).
+    cell_w: f32,
+    cell_h: f32,
+    /// Cell start offsets into `ids`, row-major, length `g*g + 1`.
+    starts: Vec<u32>,
+    /// Point ids grouped by cell.
+    ids: Vec<u32>,
+    /// `x` coordinate of `ids[i]`'s point.
+    xs: Vec<f32>,
+    /// `y` coordinate of `ids[i]`'s point.
+    ys: Vec<f32>,
+}
+
+impl GridIndex {
+    /// Bucket `layout` (first two columns) into a `cells × cells` grid.
+    ///
+    /// `cells` is clamped to at least 1; degenerate layouts (a single
+    /// point, or all points coincident) still produce a valid index.
+    pub fn build(layout: &Matrix, cells: usize) -> GridIndex {
+        assert!(layout.d() >= 2, "grid index needs a 2D+ layout");
+        let g = cells.max(1);
+        let n = layout.n();
+        let (mut xmin, mut xmax, mut ymin, mut ymax) = (f32::MAX, f32::MIN, f32::MAX, f32::MIN);
+        for i in 0..n {
+            let r = layout.row(i);
+            xmin = xmin.min(r[0]);
+            xmax = xmax.max(r[0]);
+            ymin = ymin.min(r[1]);
+            ymax = ymax.max(r[1]);
+        }
+        if n == 0 {
+            (xmin, xmax, ymin, ymax) = (0.0, 1.0, 0.0, 1.0);
+        }
+        let cell_w = ((xmax - xmin) / g as f32).max(1e-9);
+        let cell_h = ((ymax - ymin) / g as f32).max(1e-9);
+
+        let cell_of = |x: f32, y: f32| -> usize {
+            let cx = (((x - xmin) / cell_w) as usize).min(g - 1);
+            let cy = (((y - ymin) / cell_h) as usize).min(g - 1);
+            cy * g + cx
+        };
+
+        // Counting sort into CSR: count per cell, prefix-sum, scatter.
+        let mut counts = vec![0u32; g * g + 1];
+        for i in 0..n {
+            let r = layout.row(i);
+            counts[cell_of(r[0], r[1]) + 1] += 1;
+        }
+        for c in 1..counts.len() {
+            counts[c] += counts[c - 1];
+        }
+        let starts = counts.clone();
+        let mut cursor = counts;
+        let mut ids = vec![0u32; n];
+        let mut xs = vec![0f32; n];
+        let mut ys = vec![0f32; n];
+        for i in 0..n {
+            let r = layout.row(i);
+            let c = cell_of(r[0], r[1]);
+            let slot = cursor[c] as usize;
+            cursor[c] += 1;
+            ids[slot] = i as u32;
+            xs[slot] = r[0];
+            ys[slot] = r[1];
+        }
+        GridIndex { g, bounds: (xmin, ymin, xmax, ymax), cell_w, cell_h, starts, ids, xs, ys }
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// True if the index holds no points.
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Layout bounds as `(xmin, ymin, xmax, ymax)`.
+    pub fn bounds(&self) -> (f32, f32, f32, f32) {
+        self.bounds
+    }
+
+    /// Collect every point inside `[x0, x1] × [y0, y1]` into `out`
+    /// (cleared first), visiting only the grid cells the rectangle
+    /// overlaps. Returns the number of *candidates examined* — the
+    /// point count of the visited cells — so callers (and tests) can
+    /// assert the cost bound.
+    pub fn query(&self, x0: f32, y0: f32, x1: f32, y1: f32, out: &mut Vec<GridPoint>) -> usize {
+        out.clear();
+        let (bx0, by0, bx1, by1) = self.bounds;
+        if self.ids.is_empty() || x1 < bx0 || x0 > bx1 || y1 < by0 || y0 > by1 {
+            return 0;
+        }
+        let g = self.g;
+        let cell_range = |lo: f32, hi: f32, min: f32, cell: f32| -> (usize, usize) {
+            let a = (((lo - min) / cell).floor().max(0.0) as usize).min(g - 1);
+            let b = (((hi - min) / cell).floor().max(0.0) as usize).min(g - 1);
+            (a, b)
+        };
+        let (cx0, cx1) = cell_range(x0, x1, bx0, self.cell_w);
+        let (cy0, cy1) = cell_range(y0, y1, by0, self.cell_h);
+        let mut examined = 0usize;
+        for cy in cy0..=cy1 {
+            for cx in cx0..=cx1 {
+                let c = cy * g + cx;
+                let (s, e) = (self.starts[c] as usize, self.starts[c + 1] as usize);
+                examined += e - s;
+                for i in s..e {
+                    let (x, y) = (self.xs[i], self.ys[i]);
+                    if x >= x0 && x <= x1 && y >= y0 && y <= y1 {
+                        out.push((self.ids[i], x, y));
+                    }
+                }
+            }
+        }
+        examined
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn uniform_layout(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec((0..n * 2).map(|_| rng.range_f32(-10.0, 10.0)).collect(), n, 2)
+    }
+
+    #[test]
+    fn query_matches_linear_scan() {
+        let m = uniform_layout(2000, 7);
+        let idx = GridIndex::build(&m, 16);
+        assert_eq!(idx.len(), 2000);
+        let mut out = Vec::new();
+        let boxes = [
+            (-10.0f32, -10.0f32, 10.0f32, 10.0f32),
+            (-1.0, -1.0, 1.0, 1.0),
+            (3.0, -9.0, 9.5, -3.0),
+        ];
+        for &(x0, y0, x1, y1) in &boxes {
+            idx.query(x0, y0, x1, y1, &mut out);
+            let mut got: Vec<u32> = out.iter().map(|&(id, _, _)| id).collect();
+            got.sort_unstable();
+            let mut want: Vec<u32> = (0..2000)
+                .filter(|&i| {
+                    let r = m.row(i);
+                    r[0] >= x0 && r[0] <= x1 && r[1] >= y0 && r[1] <= y1
+                })
+                .map(|i| i as u32)
+                .collect();
+            want.sort_unstable();
+            assert_eq!(got, want, "bbox ({x0},{y0})-({x1},{y1})");
+            // Coordinates carried through unchanged.
+            for &(id, x, y) in &out {
+                let r = m.row(id as usize);
+                assert_eq!((x, y), (r[0], r[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn small_tile_examines_few_candidates() {
+        let m = uniform_layout(20_000, 11);
+        let idx = GridIndex::build(&m, 64);
+        let mut out = Vec::new();
+        // A tile of ~1/100 the area must not examine anywhere near all
+        // N candidates — this is the spatial-culling cost bound.
+        let examined = idx.query(0.0, 0.0, 2.0, 2.0, &mut out);
+        assert!(!out.is_empty());
+        assert!(examined < 20_000 / 10, "examined {examined} of 20000");
+        assert!(out.len() <= examined);
+    }
+
+    #[test]
+    fn out_of_bounds_and_empty() {
+        let m = uniform_layout(50, 3);
+        let idx = GridIndex::build(&m, 8);
+        let mut out = vec![(0u32, 0.0f32, 0.0f32)];
+        let examined = idx.query(100.0, 100.0, 200.0, 200.0, &mut out);
+        assert_eq!(examined, 0);
+        assert!(out.is_empty());
+        let empty = GridIndex::build(&Matrix::zeros(0, 2), 8);
+        assert!(empty.is_empty());
+        assert_eq!(empty.query(-1.0, -1.0, 1.0, 1.0, &mut out), 0);
+    }
+
+    #[test]
+    fn degenerate_coincident_points() {
+        let m = Matrix::from_vec(vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0], 3, 2);
+        let idx = GridIndex::build(&m, 4);
+        let mut out = Vec::new();
+        idx.query(0.0, 0.0, 3.0, 3.0, &mut out);
+        assert_eq!(out.len(), 3);
+        idx.query(1.5, 1.5, 3.0, 3.0, &mut out);
+        assert!(out.is_empty());
+    }
+}

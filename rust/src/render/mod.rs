@@ -1,10 +1,16 @@
-//! SVG scatter rendering for the qualitative figures (paper Figs 8–10).
+//! SVG scatter rendering for the qualitative figures (paper Figs 8–10)
+//! and for the query server's viewport tiles.
 //!
 //! No plotting library exists offline, so this is a small self-contained
 //! SVG writer: categorical palette, point down-sampling for huge
-//! layouts, axes-free themes like the paper's figures.
+//! layouts, axes-free themes like the paper's figures. For interactive
+//! serving, [`grid::GridIndex`] buckets the layout once so a viewport
+//! tile ([`svg::viewport_svg`]) renders in time proportional to its own
+//! content rather than the full layout size.
 
+pub mod grid;
 pub mod palette;
 pub mod svg;
 
-pub use svg::{render_scatter, ScatterStyle};
+pub use grid::{GridIndex, GridPoint};
+pub use svg::{render_scatter, viewport_svg, ScatterStyle};

@@ -1,10 +1,15 @@
 //! Minimal SVG scatter-plot writer.
+//!
+//! One emission core ([`svg_document`]) serves both entry points: the
+//! whole-layout figure writer ([`render_scatter`]) and the query
+//! server's viewport tiles ([`viewport_svg`]) — canvas structure,
+//! deterministic subsampling and per-point circles stay in lockstep.
 
 use crate::data::matrix::Matrix;
 use crate::render::palette::class_color;
 use crate::util::rng::Rng;
 use anyhow::Result;
-use std::io::Write;
+use std::fmt::Write as _;
 use std::path::Path;
 
 /// Rendering options.
@@ -37,6 +42,54 @@ impl Default for ScatterStyle {
     }
 }
 
+/// Deterministic choice of which of `n` points to draw: all of them up
+/// to `style.max_points`, a seeded uniform subsample beyond.
+fn draw_ids(n: usize, max_points: usize, seed: u64) -> Vec<usize> {
+    if n > max_points {
+        let mut rng = Rng::new(seed);
+        rng.sample_indices(n, max_points)
+    } else {
+        (0..n).collect()
+    }
+}
+
+/// Emit one complete SVG scatter document: square canvas, background
+/// rect, optional title, then a circle per `(px, py, color)` triple
+/// (already in canvas coordinates).
+fn svg_document(style: &ScatterStyle, pts: impl Iterator<Item = (f32, f32, String)>) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{s}" height="{s}" viewBox="0 0 {s} {s}">"#,
+        s = style.size
+    );
+    let _ = writeln!(out, r#"<rect width="100%" height="100%" fill="{}"/>"#, style.background);
+    if !style.title.is_empty() {
+        let _ = writeln!(
+            out,
+            r##"<text x="12" y="24" font-family="sans-serif" font-size="18" fill="#333">{}</text>"##,
+            style.title
+        );
+    }
+    for (px, py, color) in pts {
+        let _ = writeln!(
+            out,
+            r#"<circle cx="{px:.1}" cy="{py:.1}" r="{}" fill="{color}" fill-opacity="{}"/>"#,
+            style.radius, style.opacity
+        );
+    }
+    out.push_str("</svg>\n");
+    out
+}
+
+/// Color of point `i` under the optional labeling.
+fn point_color(i: usize, labels: Option<&[u32]>, n_classes: usize) -> String {
+    match labels {
+        Some(ls) => class_color(ls[i] as usize, n_classes.max(1)),
+        None => "#3366aa".to_string(),
+    }
+}
+
 /// Render a 2D layout (first two columns) to an SVG file.
 ///
 /// `labels` colors points by class; `n_classes` selects the palette.
@@ -59,50 +112,53 @@ pub fn render_scatter(
         ymax = ymax.max(r[1]);
     }
     let pad = 0.03 * ((xmax - xmin).max(ymax - ymin)).max(1e-9);
-    let (xmin, xmax) = (xmin - pad, xmax + pad);
-    let (ymin, ymax) = (ymin - pad, ymax + pad);
+    let (xmin, ymin) = (xmin - pad, ymin - pad);
+    let (xmax, ymax) = (xmax + pad, ymax + pad);
     let scale = style.size as f32 / (xmax - xmin).max(ymax - ymin).max(1e-9);
 
-    // Subsample deterministically if huge.
-    let ids: Vec<usize> = if n > style.max_points {
-        let mut rng = Rng::new(0x5caa);
-        rng.sample_indices(n, style.max_points)
-    } else {
-        (0..n).collect()
-    };
-
-    let f = std::fs::File::create(path)?;
-    let mut w = std::io::BufWriter::new(f);
-    writeln!(
-        w,
-        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{s}" height="{s}" viewBox="0 0 {s} {s}">"#,
-        s = style.size
-    )?;
-    writeln!(w, r#"<rect width="100%" height="100%" fill="{}"/>"#, style.background)?;
-    if !style.title.is_empty() {
-        writeln!(
-            w,
-            r##"<text x="12" y="24" font-family="sans-serif" font-size="18" fill="#333">{}</text>"##,
-            style.title
-        )?;
-    }
-    for &i in &ids {
-        let r = layout.row(i);
-        let px = (r[0] - xmin) * scale;
-        let py = style.size as f32 - (r[1] - ymin) * scale;
-        let color = match labels {
-            Some(ls) => class_color(ls[i] as usize, n_classes.max(1)),
-            None => "#3366aa".to_string(),
-        };
-        writeln!(
-            w,
-            r#"<circle cx="{px:.1}" cy="{py:.1}" r="{}" fill="{color}" fill-opacity="{}"/>"#,
-            style.radius, style.opacity
-        )?;
-    }
-    writeln!(w, "</svg>")?;
-    w.flush()?;
+    let ids = draw_ids(n, style.max_points, 0x5caa);
+    let doc = svg_document(
+        style,
+        ids.iter().map(|&i| {
+            let r = layout.row(i);
+            let px = (r[0] - xmin) * scale;
+            let py = style.size as f32 - (r[1] - ymin) * scale;
+            (px, py, point_color(i, labels, n_classes))
+        }),
+    );
+    std::fs::write(path, doc)?;
     Ok(())
+}
+
+/// Render a viewport rectangle of a layout to an SVG document string.
+///
+/// `pts` is the `(id, x, y)` set inside the viewport (normally produced
+/// by [`crate::render::grid::GridIndex::query`]); only those points are
+/// emitted, so the cost of a tile is bounded by its own content, never
+/// by the full layout size. The viewport rectangle `bbox =
+/// (x0, y0, x1, y1)` maps to the square canvas with the same
+/// orientation as [`render_scatter`] (y up). Beyond `style.max_points`
+/// the tile is deterministically subsampled.
+pub fn viewport_svg(
+    pts: &[(u32, f32, f32)],
+    labels: Option<&[u32]>,
+    n_classes: usize,
+    bbox: (f32, f32, f32, f32),
+    style: &ScatterStyle,
+) -> String {
+    let (x0, y0, x1, y1) = bbox;
+    let span = (x1 - x0).max(y1 - y0).max(1e-9);
+    let scale = style.size as f32 / span;
+    let ids = draw_ids(pts.len(), style.max_points, 0x711e);
+    svg_document(
+        style,
+        ids.iter().map(|&i| {
+            let (id, x, y) = pts[i];
+            let px = (x - x0) * scale;
+            let py = style.size as f32 - (y - y0) * scale;
+            (px, py, point_color(id as usize, labels, n_classes))
+        }),
+    )
 }
 
 #[cfg(test)]
@@ -147,5 +203,44 @@ mod tests {
         let m = Matrix::from_vec(vec![2.0, 3.0], 1, 2);
         let p = tmp("c.svg");
         render_scatter(&p, &m, None, 0, &ScatterStyle::default()).unwrap();
+    }
+
+    #[test]
+    fn title_emitted_once() {
+        let m = Matrix::from_vec(vec![0.0, 0.0], 1, 2);
+        let p = tmp("t.svg");
+        let style = ScatterStyle { title: "hello".to_string(), ..Default::default() };
+        render_scatter(&p, &m, None, 0, &style).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.matches("<text").count(), 1);
+        assert!(text.contains(">hello</text>"));
+    }
+
+    #[test]
+    fn viewport_emits_only_given_points() {
+        let pts = vec![(0u32, 0.0f32, 0.0f32), (1, 0.5, 0.5), (2, 1.0, 1.0)];
+        let style = ScatterStyle::default();
+        let svg = viewport_svg(&pts, Some(&[0, 1, 2]), 3, (0.0, 0.0, 1.0, 1.0), &style);
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.trim_end().ends_with("</svg>"));
+        assert_eq!(svg.matches("<circle").count(), 3);
+        // Corner points land on the canvas corners (y flipped).
+        assert!(svg.contains("cx=\"0.0\""));
+    }
+
+    #[test]
+    fn viewport_subsamples_beyond_cap() {
+        let pts: Vec<(u32, f32, f32)> =
+            (0..500).map(|i| (i as u32, (i % 23) as f32, (i % 7) as f32)).collect();
+        let style = ScatterStyle { max_points: 40, ..Default::default() };
+        let svg = viewport_svg(&pts, None, 0, (0.0, 0.0, 23.0, 7.0), &style);
+        assert_eq!(svg.matches("<circle").count(), 40);
+    }
+
+    #[test]
+    fn viewport_empty_is_valid_svg() {
+        let svg = viewport_svg(&[], None, 0, (0.0, 0.0, 1.0, 1.0), &ScatterStyle::default());
+        assert!(svg.starts_with("<svg") && svg.contains("</svg>"));
+        assert_eq!(svg.matches("<circle").count(), 0);
     }
 }

@@ -1,0 +1,348 @@
+//! Endpoint handlers and request routing for the query server.
+//!
+//! Every handler is a pure function of `(&Request, &ServerState)` —
+//! the base artifacts are never mutated, so handlers run concurrently
+//! without locks (metrics counters aside). Endpoints:
+//!
+//! | method | path        | body / params                     | returns |
+//! |--------|-------------|-----------------------------------|---------|
+//! | POST   | `/embed`    | `{"points": [[f; d]; n], "k"?, "samples"?}` | projected positions + base neighbors (JSON) |
+//! | POST   | `/knn`      | `{"point": [f; d], "k"?}`         | nearest base ids + squared distances (JSON) |
+//! | GET    | `/viewport` | `x0,y0,x1,y1` (`size` optional)   | SVG tile of the layout region |
+//! | GET    | `/healthz`  | —                                 | dataset/shape summary (JSON) |
+//! | GET    | `/metrics`  | —                                 | request counters (JSON) |
+//!
+//! Malformed input yields `400` with a JSON `{"error": ...}` body;
+//! unknown paths `404`; wrong methods on known paths `405`.
+
+use crate::render::{viewport_svg, ScatterStyle};
+use crate::serve::http::{Request, Response};
+use crate::serve::state::ServerState;
+use crate::util::heap::BoundedMaxHeap;
+use crate::util::json::Json;
+use crate::vis::incremental;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Cap on points per `/embed` request (keeps one request's work and
+/// response bounded; batch more via multiple requests).
+pub const MAX_EMBED_POINTS: usize = 4096;
+/// Cap on per-point SGD steps a request may ask for.
+pub const MAX_EMBED_SAMPLES: usize = 100_000;
+
+/// Dispatch a request to its handler, maintaining the counters.
+pub fn route(req: &Request, st: &ServerState) -> Response {
+    st.count("serve.requests", 1.0);
+    let resp = match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/embed") => embed(req, st),
+        ("POST", "/knn") => knn(req, st),
+        ("GET", "/viewport") => viewport(req, st),
+        ("GET", "/healthz") => healthz(st),
+        ("GET", "/metrics") => Response::json(st.metrics_json()),
+        ("GET", "/") => index(),
+        (_, "/embed" | "/knn") => Response::error(405, "use POST"),
+        (_, "/viewport" | "/healthz" | "/metrics" | "/") => Response::error(405, "use GET"),
+        _ => Response::error(404, "no such endpoint (GET / lists them)"),
+    };
+    if resp.status >= 400 {
+        st.count("serve.errors", 1.0);
+    }
+    resp
+}
+
+/// `GET /` — endpoint listing.
+fn index() -> Response {
+    Response::json(
+        "{\"endpoints\":[\"POST /embed\",\"POST /knn\",\"GET /viewport\",\
+         \"GET /healthz\",\"GET /metrics\"]}"
+            .to_string(),
+    )
+}
+
+/// `GET /healthz` — dataset and artifact summary.
+fn healthz(st: &ServerState) -> Response {
+    let mut o = BTreeMap::new();
+    o.insert("status".to_string(), Json::Str("ok".to_string()));
+    o.insert("dataset".to_string(), Json::Str(st.dataset.clone()));
+    o.insert("points".to_string(), Json::Num(st.data.n() as f64));
+    o.insert("data_dim".to_string(), Json::Num(st.data.d() as f64));
+    o.insert("layout_dim".to_string(), Json::Num(st.layout.d() as f64));
+    o.insert("knn_k".to_string(), Json::Num(st.knn.k as f64));
+    o.insert("graph_edges".to_string(), Json::Num(st.graph_edges as f64));
+    o.insert("labeled".to_string(), Json::Bool(st.labels.is_some()));
+    Response::json(Json::Obj(o).to_string_compact())
+}
+
+/// `POST /embed` — out-of-sample projection of new high-dim points
+/// against the frozen base layout (see [`incremental::project`]).
+fn embed(req: &Request, st: &ServerState) -> Response {
+    st.count("embed.requests", 1.0);
+    let json = match parse_body(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let Some(points) = json.get("points") else {
+        return Response::error(400, "missing \"points\"");
+    };
+    let pts = match points_matrix(points, st.data.d()) {
+        Ok(m) => m,
+        Err(msg) => return Response::error(400, &msg),
+    };
+    if pts.n() > MAX_EMBED_POINTS {
+        return Response::error(
+            400,
+            &format!("{} points exceeds the per-request cap of {MAX_EMBED_POINTS}", pts.n()),
+        );
+    }
+    let samples = json
+        .get("samples")
+        .and_then(|j| j.as_usize())
+        .unwrap_or(st.cfg.embed_samples)
+        .min(MAX_EMBED_SAMPLES);
+    let k = json
+        .get("k")
+        .and_then(|j| j.as_usize())
+        .unwrap_or_else(|| st.embed_k())
+        .clamp(1, st.data.n());
+
+    let (pos, neighbors) = incremental::project(&st.data, &st.layout, &st.vis, &pts, k, samples);
+    st.count("embed.points", pos.n() as f64);
+
+    let mut body = String::with_capacity(64 + pos.n() * (pos.d() * 16 + k * 8));
+    let _ = write!(body, "{{\"n\":{},\"dim\":{},\"positions\":[", pos.n(), pos.d());
+    for r in 0..pos.n() {
+        if r > 0 {
+            body.push(',');
+        }
+        push_f32_array(&mut body, pos.row(r));
+    }
+    body.push_str("],\"neighbors\":[");
+    for (r, nb) in neighbors.iter().enumerate() {
+        if r > 0 {
+            body.push(',');
+        }
+        body.push('[');
+        for (i, &(id, _)) in nb.iter().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            let _ = write!(body, "{id}");
+        }
+        body.push(']');
+    }
+    body.push_str("]}");
+    Response::json(body)
+}
+
+/// `POST /knn` — exact K nearest base points of one query vector via
+/// the batched distance kernel.
+fn knn(req: &Request, st: &ServerState) -> Response {
+    st.count("knn.requests", 1.0);
+    let json = match parse_body(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let Some(point) = json.get("point") else {
+        return Response::error(400, "missing \"point\"");
+    };
+    let q = match f32_array(point, st.data.d()) {
+        Ok(v) => v,
+        Err(msg) => return Response::error(400, &msg),
+    };
+    let k = json
+        .get("k")
+        .and_then(|j| j.as_usize())
+        .unwrap_or(10)
+        .clamp(1, st.data.n());
+
+    // One batched scan of the contiguous base matrix — the same
+    // shared exact-KNN helper the insert/projection paths use.
+    let mut dists: Vec<f32> = Vec::new();
+    let mut heap = BoundedMaxHeap::new(k);
+    let nb = crate::kernels::nearest_k(&q, &st.data, k, &mut dists, &mut heap);
+
+    let mut body = String::with_capacity(32 + nb.len() * 20);
+    let _ = write!(body, "{{\"k\":{},\"ids\":[", nb.len());
+    for (i, &(id, _)) in nb.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        let _ = write!(body, "{id}");
+    }
+    body.push_str("],\"dists\":[");
+    for (i, &(_, d)) in nb.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        let _ = write!(body, "{d}");
+    }
+    body.push_str("]}");
+    Response::json(body)
+}
+
+/// `GET /viewport` — SVG tile of the layout region `[x0,x1]×[y0,y1]`,
+/// culled through the grid spatial index so the cost is bounded by the
+/// tile's own point count.
+fn viewport(req: &Request, st: &ServerState) -> Response {
+    st.count("viewport.requests", 1.0);
+    // Default bounds come from the layout; pad any zero-width axis so
+    // the parameterless "full view" request stays valid even for a
+    // degenerate (line- or point-collapsed) layout.
+    let (mut bx0, mut by0, mut bx1, mut by1) = st.grid.bounds();
+    if bx1 <= bx0 {
+        bx0 -= 0.5;
+        bx1 += 0.5;
+    }
+    if by1 <= by0 {
+        by0 -= 0.5;
+        by1 += 0.5;
+    }
+    let x0 = match param_f32(req, "x0", bx0) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let y0 = match param_f32(req, "y0", by0) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let x1 = match param_f32(req, "x1", bx1) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let y1 = match param_f32(req, "y1", by1) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    if !(x0 < x1 && y0 < y1) {
+        return Response::error(400, "viewport needs x0 < x1 and y0 < y1");
+    }
+    let size = match req.query_param("size") {
+        None => 900u32,
+        Some(raw) => match raw.parse::<u32>() {
+            Ok(v) => v.clamp(64, 4096),
+            Err(_) => return Response::error(400, "size: not an integer"),
+        },
+    };
+
+    let mut pts = Vec::new();
+    let examined = st.grid.query(x0, y0, x1, y1, &mut pts);
+    st.count("viewport.examined", examined as f64);
+    st.count("viewport.points", pts.len() as f64);
+    let style = ScatterStyle {
+        size,
+        max_points: st.cfg.tile_max_points.max(1),
+        ..Default::default()
+    };
+    Response::svg(viewport_svg(&pts, st.labels.as_deref(), st.n_classes, (x0, y0, x1, y1), &style))
+}
+
+/// Parse the request body as JSON (400 on empty/non-UTF-8/bad JSON).
+fn parse_body(req: &Request) -> Result<Json, Response> {
+    let text = req
+        .body_str()
+        .map_err(|_| Response::error(400, "request body is not UTF-8"))?;
+    if text.trim().is_empty() {
+        return Err(Response::error(400, "empty request body (expected JSON)"));
+    }
+    Json::parse(text).map_err(|e| Response::error(400, &format!("bad JSON: {e:#}")))
+}
+
+/// A JSON array of `d` finite numbers as `Vec<f32>`.
+fn f32_array(j: &Json, d: usize) -> Result<Vec<f32>, String> {
+    let Json::Arr(vals) = j else {
+        return Err("expected an array of numbers".to_string());
+    };
+    if vals.len() != d {
+        return Err(format!("vector has {} dims, dataset has {d}", vals.len()));
+    }
+    let mut out = Vec::with_capacity(d);
+    for v in vals {
+        let Json::Num(x) = v else {
+            return Err("expected an array of numbers".to_string());
+        };
+        // Check finiteness *after* the cast: a value finite in f64
+        // (e.g. 1e39) can still overflow to f32 infinity and would
+        // otherwise silently poison every distance downstream.
+        let x32 = *x as f32;
+        if !x32.is_finite() {
+            return Err("non-finite value in vector".to_string());
+        }
+        out.push(x32);
+    }
+    Ok(out)
+}
+
+/// A JSON array of `n` rows, each `d` finite numbers, as a [`Matrix`].
+///
+/// [`Matrix`]: crate::data::matrix::Matrix
+fn points_matrix(j: &Json, d: usize) -> Result<crate::data::matrix::Matrix, String> {
+    let Json::Arr(rows) = j else {
+        return Err("\"points\" must be an array of arrays".to_string());
+    };
+    if rows.is_empty() {
+        return Err("\"points\" is empty".to_string());
+    }
+    let mut flat = Vec::with_capacity(rows.len() * d);
+    for (i, row) in rows.iter().enumerate() {
+        let vals = f32_array(row, d).map_err(|e| format!("points[{i}]: {e}"))?;
+        flat.extend_from_slice(&vals);
+    }
+    Ok(crate::data::matrix::Matrix::from_vec(flat, rows.len(), d))
+}
+
+/// Float query parameter with default; 400 on parse failure.
+fn param_f32(req: &Request, key: &str, default: f32) -> Result<f32, Response> {
+    match req.query_param(key) {
+        None => Ok(default),
+        Some(raw) => raw
+            .parse::<f32>()
+            .ok()
+            .filter(|v| v.is_finite())
+            .ok_or_else(|| Response::error(400, &format!("{key}: not a finite number"))),
+    }
+}
+
+/// Append `[a,b,...]` to `out`.
+fn push_f32_array(out: &mut String, vals: &[f32]) {
+    out.push('[');
+    for (i, v) in vals.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{v}");
+    }
+    out.push(']');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_vector_helpers() {
+        let j = Json::parse("[1, 2.5, -3]").unwrap();
+        assert_eq!(f32_array(&j, 3).unwrap(), vec![1.0, 2.5, -3.0]);
+        assert!(f32_array(&j, 2).unwrap_err().contains("3 dims"));
+        assert!(f32_array(&Json::parse("[1, \"x\"]").unwrap(), 2).is_err());
+        // Finite in f64, infinite once cast to f32: rejected.
+        assert!(f32_array(&Json::parse("[1e39, 0]").unwrap(), 2)
+            .unwrap_err()
+            .contains("non-finite"));
+        let m = points_matrix(&Json::parse("[[1,2],[3,4],[5,6]]").unwrap(), 2).unwrap();
+        assert_eq!((m.n(), m.d()), (3, 2));
+        assert_eq!(m.row(2), &[5.0, 6.0]);
+        assert!(points_matrix(&Json::parse("[[1,2],[3]]").unwrap(), 2)
+            .unwrap_err()
+            .contains("points[1]"));
+        assert!(points_matrix(&Json::parse("[]").unwrap(), 2).is_err());
+    }
+
+    #[test]
+    fn f32_array_formatting_roundtrips() {
+        let mut s = String::new();
+        push_f32_array(&mut s, &[1.5, -0.25, 3.0]);
+        assert_eq!(s, "[1.5,-0.25,3]");
+        let parsed = Json::parse(&s).unwrap();
+        assert_eq!(f32_array(&parsed, 3).unwrap(), vec![1.5, -0.25, 3.0]);
+    }
+}

@@ -1,0 +1,362 @@
+//! Minimal HTTP/1.1 request parsing and response emission.
+//!
+//! The offline crate registry has no hyper/axum, and the query server
+//! needs only a narrow slice of HTTP: one request per connection,
+//! `Content-Length` bodies, query strings, and fixed-size responses
+//! with `Connection: close`. This module implements exactly that over
+//! any `BufRead`/`Write`, so it is unit-testable without sockets.
+//!
+//! Limits are enforced during parse (header count, body size) so a
+//! malformed or hostile client fails fast instead of ballooning
+//! memory.
+
+use anyhow::{bail, Result};
+use std::io::{BufRead, Read, Write};
+
+/// Maximum header lines accepted per request.
+const MAX_HEADERS: usize = 128;
+/// Maximum request-line / header-line length in bytes.
+const MAX_LINE_BYTES: usize = 16 * 1024;
+
+/// A parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Request method (`GET`, `POST`, ...), uppercase as sent.
+    pub method: String,
+    /// Decoded path component (query string stripped).
+    pub path: String,
+    /// Decoded `key=value` query parameters in order of appearance.
+    pub query: Vec<(String, String)>,
+    /// Headers with lowercased names, in order of appearance.
+    pub headers: Vec<(String, String)>,
+    /// Request body (empty when no `Content-Length`).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First query parameter named `key`.
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        self.query.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// First header named `name` (case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Body as UTF-8 text.
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|_| anyhow::anyhow!("request body is not UTF-8"))
+    }
+}
+
+/// Marker prefix of the over-limit body error; the connection handler
+/// maps it to `413 Payload Too Large` instead of a generic `400`.
+pub const BODY_TOO_LARGE: &str = "request body too large";
+
+/// Read one request from `r`, emitting interim output (the
+/// `100 Continue` handshake) to `w`. Returns `Ok(None)` on a clean EOF
+/// before any bytes (client closed without sending a request); errors
+/// on malformed requests, over-limit headers, and bodies over
+/// `max_body`.
+///
+/// `curl` (and other clients) send `Expect: 100-continue` for larger
+/// POST bodies and wait up to a second for the interim response before
+/// transmitting; honoring it here keeps every documented `/embed` and
+/// `/knn` example latency-free.
+pub fn read_request(
+    r: &mut impl BufRead,
+    w: &mut impl Write,
+    max_body: usize,
+) -> Result<Option<Request>> {
+    let Some(line) = read_crlf_line(r)? else {
+        return Ok(None);
+    };
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(target), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        bail!("malformed request line {line:?}");
+    };
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol {version:?}");
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (percent_decode(p), parse_query(q)),
+        None => (percent_decode(target), Vec::new()),
+    };
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let Some(h) = read_crlf_line(r)? else {
+            bail!("connection closed mid-headers");
+        };
+        if h.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            bail!("too many request headers (> {MAX_HEADERS})");
+        }
+        let Some((k, v)) = h.split_once(':') else {
+            bail!("malformed header line {h:?}");
+        };
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+
+    let len = match headers.iter().find(|(k, _)| k == "content-length") {
+        Some((_, v)) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("bad Content-Length {v:?}"))?,
+        None => 0,
+    };
+    if len > max_body {
+        bail!("{BODY_TOO_LARGE}: {len} bytes exceeds the {max_body}-byte limit");
+    }
+    let expects_continue = headers
+        .iter()
+        .any(|(k, v)| k == "expect" && v.eq_ignore_ascii_case("100-continue"));
+    if expects_continue && len > 0 {
+        w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+        w.flush()?;
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(Request { method: method.to_string(), path, query, headers, body }))
+}
+
+/// Read a `\r\n`- (or `\n`-) terminated line, trimmed; `None` on EOF at
+/// a line boundary. Lines are length-limited.
+fn read_crlf_line(r: &mut impl BufRead) -> Result<Option<String>> {
+    let mut line = String::new();
+    let n = r
+        .by_ref()
+        .take(MAX_LINE_BYTES as u64 + 1)
+        .read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if n > MAX_LINE_BYTES {
+        bail!("request line exceeds {MAX_LINE_BYTES} bytes");
+    }
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(Some(line))
+}
+
+/// Decode a query string into ordered `(key, value)` pairs.
+fn parse_query(q: &str) -> Vec<(String, String)> {
+    q.split('&')
+        .filter(|s| !s.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (percent_decode(k), percent_decode(v)),
+            None => (percent_decode(kv), String::new()),
+        })
+        .collect()
+}
+
+/// Percent-decode (`%XX` and `+` → space); invalid escapes pass through.
+pub fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' => {
+                let hex = bytes.get(i + 1..i + 3);
+                match hex
+                    .and_then(|h| std::str::from_utf8(h).ok())
+                    .and_then(|h| u8::from_str_radix(h, 16).ok())
+                {
+                    Some(b) => {
+                        out.push(b);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// An HTTP response ready to serialize.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Response body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A `200 OK` JSON response.
+    pub fn json(body: String) -> Response {
+        Response { status: 200, content_type: "application/json", body: body.into_bytes() }
+    }
+
+    /// A `200 OK` SVG response.
+    pub fn svg(body: String) -> Response {
+        Response { status: 200, content_type: "image/svg+xml", body: body.into_bytes() }
+    }
+
+    /// An error response with a JSON `{"error": ...}` body.
+    pub fn error(status: u16, message: &str) -> Response {
+        let body = crate::util::json::Json::Str(message.to_string()).to_string_compact();
+        Response {
+            status,
+            content_type: "application/json",
+            body: format!("{{\"error\":{body}}}").into_bytes(),
+        }
+    }
+
+    /// Standard reason phrase for the status code.
+    pub fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            413 => "Payload Too Large",
+            500 => "Internal Server Error",
+            _ => "Unknown",
+        }
+    }
+
+    /// Serialize status line, headers and body to `w` (one-shot,
+    /// `Connection: close` framing).
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            self.reason(),
+            self.content_type,
+            self.body.len()
+        )?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Option<Request>> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()), &mut Vec::<u8>::new(), 1 << 20)
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let req = parse("GET /viewport?x0=-1.5&y0=2&x1=3&y1=4 HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/viewport");
+        assert_eq!(req.query_param("x0"), Some("-1.5"));
+        assert_eq!(req.query_param("y1"), Some("4"));
+        assert_eq!(req.query_param("nope"), None);
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let req = parse(
+            "POST /knn HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: 11\r\n\r\n{\"k\":5}junk",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body_str().unwrap(), "{\"k\":5}junk");
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized() {
+        assert!(parse("GARBAGE\r\n\r\n").is_err());
+        assert!(parse("GET / SPDY/3\r\n\r\n").is_err());
+        assert!(parse("GET / HTTP/1.1\r\nbad header line\r\n\r\n").is_err());
+        let huge = read_request(
+            &mut Cursor::new(b"POST / HTTP/1.1\r\nContent-Length: 999999\r\n\r\n".to_vec()),
+            &mut Vec::<u8>::new(),
+            1024,
+        );
+        // Over-limit bodies carry the 413 marker for the connection
+        // handler; no body bytes are read.
+        assert!(format!("{:#}", huge.unwrap_err()).contains(BODY_TOO_LARGE));
+        // Truncated body (content-length longer than stream).
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort").is_err());
+    }
+
+    #[test]
+    fn expect_100_continue_is_acknowledged() {
+        let mut interim = Vec::new();
+        let req = read_request(
+            &mut Cursor::new(
+                b"POST /embed HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\nhi"
+                    .to_vec(),
+            ),
+            &mut interim,
+            1 << 20,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.body_str().unwrap(), "hi");
+        assert_eq!(interim, b"HTTP/1.1 100 Continue\r\n\r\n");
+        // No interim response without the header.
+        let mut interim = Vec::new();
+        read_request(
+            &mut Cursor::new(b"POST / HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi".to_vec()),
+            &mut interim,
+            1 << 20,
+        )
+        .unwrap()
+        .unwrap();
+        assert!(interim.is_empty());
+    }
+
+    #[test]
+    fn percent_decoding() {
+        assert_eq!(percent_decode("a%20b+c"), "a b c");
+        assert_eq!(percent_decode("100%"), "100%");
+        assert_eq!(percent_decode("%2Fpath%3f"), "/path?");
+        assert_eq!(percent_decode("-1.25"), "-1.25");
+    }
+
+    #[test]
+    fn response_serialization() {
+        let mut buf = Vec::new();
+        Response::json("{\"ok\":true}".to_string()).write_to(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+        let mut buf = Vec::new();
+        Response::error(404, "no such endpoint \"x\"").write_to(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(text.contains("{\"error\":\"no such endpoint \\\"x\\\"\"}"));
+    }
+}

@@ -1,0 +1,192 @@
+//! Checkpoint-backed layout query server (`largevis serve`).
+//!
+//! The LargeVis premise is that the expensive work — KNN graph
+//! construction and layout — happens **once**; serving the result
+//! should then be cheap and interactive. This module turns a finished
+//! pipeline run's checkpoint directory into a long-running HTTP/1.1
+//! service, dependency-free over `std::net` plus the existing
+//! [`crate::util::pool`] workers:
+//!
+//! * `POST /embed` — out-of-sample projection: new high-dimensional
+//!   points are placed into the *frozen* base layout via the
+//!   incremental-insertion math ([`crate::vis::incremental::project`]),
+//!   one batched SIMD scan + a short localized SGD per point. The base
+//!   layout is never modified, so concurrent embeds are safe and
+//!   repeatable.
+//! * `POST /knn` — exact K nearest base points of a query vector, one
+//!   [`crate::kernels::sqdist_to_all`] batch scan.
+//! * `GET /viewport` — an SVG tile of a layout rectangle, culled by the
+//!   [`crate::render::grid::GridIndex`] so tile cost tracks the tile's
+//!   content, not the dataset size.
+//! * `GET /healthz`, `GET /metrics` — liveness + JSON counters
+//!   (reusing [`crate::coordinator::metrics::Metrics`]).
+//!
+//! Artifacts are loaded once into [`ServerState`] and shared read-only
+//! across `N` accept workers behind an `Arc`; the only lock on the
+//! request path is the metrics counter mutex.
+//!
+//! # Example
+//!
+//! ```no_run
+//! use largevis::config::ServeConfig;
+//! use largevis::serve::{Server, ServerState};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // After: largevis pipeline --dataset mnist-like --out target/mnist
+//! let cfg = ServeConfig {
+//!     checkpoints: "target/mnist/checkpoints".into(),
+//!     addr: "127.0.0.1:7878".to_string(),
+//!     ..Default::default()
+//! };
+//! let server = Server::bind(ServerState::load(cfg)?)?;
+//! println!("listening on http://{}", server.local_addr()?);
+//! server.run()?; // blocks; a ServerHandle can stop it from elsewhere
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod handlers;
+pub mod http;
+pub mod state;
+
+pub use state::ServerState;
+
+use crate::util::pool;
+use anyhow::{Context, Result};
+use std::io::{BufReader, BufWriter};
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-connection socket read timeout (a stalled client must not pin a
+/// worker forever).
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A bound (but not yet running) query server.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    stop: Arc<AtomicBool>,
+    threads: usize,
+}
+
+/// A cloneable remote control for a running [`Server`]: signals the
+/// accept workers to stop and wakes them up.
+#[derive(Clone)]
+pub struct ServerHandle {
+    stop: Arc<AtomicBool>,
+    addr: Option<SocketAddr>,
+    threads: usize,
+}
+
+impl ServerHandle {
+    /// Ask the server to stop. Blocked `accept` calls are woken by
+    /// loopback connections; [`Server::run`] returns once every worker
+    /// has observed the flag.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(mut addr) = self.addr {
+            // An unspecified bind address (0.0.0.0) is not connectable;
+            // wake via loopback on the same port.
+            if addr.ip().is_unspecified() {
+                addr = SocketAddr::new(IpAddr::V4(Ipv4Addr::LOCALHOST), addr.port());
+            }
+            for _ in 0..self.threads {
+                let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(250));
+            }
+        }
+    }
+}
+
+impl Server {
+    /// Bind the listen socket for `state` (per `state.cfg.addr`; port 0
+    /// picks an ephemeral port, see [`Server::local_addr`]).
+    pub fn bind(state: ServerState) -> Result<Server> {
+        let listener = TcpListener::bind(&state.cfg.addr)
+            .with_context(|| format!("bind {}", state.cfg.addr))?;
+        let threads = if state.cfg.threads == 0 {
+            pool::default_threads().min(16)
+        } else {
+            state.cfg.threads
+        };
+        Ok(Server {
+            listener,
+            state: Arc::new(state),
+            stop: Arc::new(AtomicBool::new(false)),
+            threads: threads.max(1),
+        })
+    }
+
+    /// The bound socket address (resolves an ephemeral port request).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Shared handle to the loaded artifacts (read-only; lets an
+    /// embedding test assert the base layout is untouched while the
+    /// server runs).
+    pub fn state(&self) -> Arc<ServerState> {
+        self.state.clone()
+    }
+
+    /// A control handle usable from another thread to stop [`Server::run`].
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle {
+            stop: self.stop.clone(),
+            addr: self.listener.local_addr().ok(),
+            threads: self.threads,
+        }
+    }
+
+    /// Serve until [`ServerHandle::shutdown`] is called: `threads`
+    /// workers share the listener, each handling one connection at a
+    /// time (one request per connection, `Connection: close`).
+    pub fn run(&self) -> Result<()> {
+        pool::spawn_workers(self.threads, |_worker| loop {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    handle_connection(stream, &self.state);
+                }
+                Err(_) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // Transient accept errors (EMFILE, aborted handshake):
+                    // back off briefly instead of hot-spinning.
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        });
+        Ok(())
+    }
+}
+
+/// Serve one connection: parse a request, dispatch, write the response.
+/// I/O errors are swallowed (the peer is gone; nothing to tell it).
+fn handle_connection(stream: TcpStream, state: &ServerState) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(&stream);
+    let resp = match http::read_request(&mut reader, &mut writer, state.cfg.max_body_bytes) {
+        Ok(Some(req)) => handlers::route(&req, state),
+        Ok(None) => return, // clean EOF: client connected and left
+        Err(e) => {
+            state.count("serve.errors", 1.0);
+            let msg = format!("{e:#}");
+            let status = if msg.contains(http::BODY_TOO_LARGE) { 413 } else { 400 };
+            http::Response::error(status, &msg)
+        }
+    };
+    let _ = resp.write_to(&mut writer);
+}

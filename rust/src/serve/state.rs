@@ -1,0 +1,212 @@
+//! Server state: every artifact of a finished pipeline run, loaded
+//! once and shared read-mostly across worker threads.
+//!
+//! All heavy artifacts (points, KNN graph, layout, spatial index) are
+//! immutable after load — handlers take `&ServerState` and the server
+//! shares it behind an `Arc`, so request handling needs no locking at
+//! all on the data path. The only mutable member is the metrics
+//! registry, a small `Mutex<Metrics>` touched once per request.
+
+use crate::config::ServeConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pipeline::CheckpointPaths;
+use crate::data::formats::{binary, checkpoint};
+use crate::data::io::read_labels;
+use crate::data::matrix::Matrix;
+use crate::knn::KnnGraph;
+use crate::render::grid::GridIndex;
+use crate::vis::LargeVisConfig;
+use anyhow::{bail, Context, Result};
+use std::sync::Mutex;
+
+/// Immutable (post-load) state shared by every server worker.
+pub struct ServerState {
+    /// Server configuration the state was loaded under.
+    pub cfg: ServeConfig,
+    /// Dataset name recorded by the run that wrote the checkpoints.
+    pub dataset: String,
+    /// High-dimensional base points (`data.lvec`).
+    pub data: Matrix,
+    /// KNN graph of the base points (`knn.ckpt`) — kept resident: the
+    /// incremental insert path splices into it, and `/embed` defaults
+    /// its neighbor count to its `k`.
+    pub knn: KnnGraph,
+    /// Directed edge count of the symmetrized graph checkpoint
+    /// (`graph.ckpt`), 0 when absent. The CSR itself is validated at
+    /// load and then dropped — no handler walks its edges, and at
+    /// million-point scale keeping it resident would roughly double
+    /// the server's memory for nothing.
+    pub graph_edges: usize,
+    /// Frozen 2D/3D base layout (`layout.lvec`).
+    pub layout: Matrix,
+    /// Class labels (`labels.lbl`), when the run had them.
+    pub labels: Option<Vec<u32>>,
+    /// Number of distinct classes in `labels` (0 when unlabeled).
+    pub n_classes: usize,
+    /// Uniform-grid spatial index over the layout for `/viewport`.
+    pub grid: GridIndex,
+    /// Gradient/hyper-parameters for `/embed`'s localized SGD.
+    pub vis: LargeVisConfig,
+    /// Request counters, served verbatim by `/metrics`.
+    pub metrics: Mutex<Metrics>,
+}
+
+impl ServerState {
+    /// Load every artifact from `cfg.checkpoints` and cross-validate
+    /// shapes, so a stale or mixed checkpoint directory fails at
+    /// startup instead of serving garbage.
+    pub fn load(cfg: ServeConfig) -> Result<ServerState> {
+        let paths = CheckpointPaths::in_dir(&cfg.checkpoints);
+        let data = binary::read_binary(&paths.data).with_context(|| {
+            format!(
+                "{}: serving needs the raw-points checkpoint (written by a \
+                 full pipeline run with checkpoints enabled)",
+                paths.data.display()
+            )
+        })?;
+        let layout = binary::read_binary(&paths.layout).with_context(|| {
+            format!(
+                "{}: serving needs the final-layout checkpoint (written by a \
+                 pipeline run with checkpoints enabled)",
+                paths.layout.display()
+            )
+        })?;
+        let knn = checkpoint::read_knn(&paths.knn)
+            .with_context(|| format!("{}: serving needs the KNN checkpoint", paths.knn.display()))?;
+        let graph = if paths.graph.exists() {
+            Some(
+                checkpoint::read_csr(&paths.graph)
+                    .with_context(|| format!("read {}", paths.graph.display()))?,
+            )
+        } else {
+            None
+        };
+
+        let n = data.n();
+        if n == 0 {
+            bail!("{}: empty dataset cannot be served", paths.data.display());
+        }
+        if layout.n() != n || knn.n() != n {
+            bail!(
+                "stale checkpoint directory {}: {} points, layout of {}, knn of {}",
+                paths.dir.display(),
+                n,
+                layout.n(),
+                knn.n()
+            );
+        }
+        if layout.d() < 2 {
+            bail!("{}: layout must have >= 2 dims, has {}", paths.layout.display(), layout.d());
+        }
+        let graph_edges = match &graph {
+            Some(g) => {
+                if g.n() != n {
+                    bail!(
+                        "stale checkpoint directory {}: graph of {} vertices for {} points",
+                        paths.dir.display(),
+                        g.n(),
+                        n
+                    );
+                }
+                g.n_directed_edges()
+            }
+            None => 0,
+        };
+        drop(graph);
+        let labels = if paths.labels.exists() {
+            let ls = read_labels(&paths.labels)?;
+            if ls.len() != n {
+                bail!(
+                    "{}: {} labels for {} points — stale checkpoint directory?",
+                    paths.labels.display(),
+                    ls.len(),
+                    n
+                );
+            }
+            Some(ls)
+        } else {
+            None
+        };
+        let n_classes = labels
+            .as_ref()
+            .map(|ls| ls.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0))
+            .unwrap_or(0);
+        let dataset = std::fs::read_to_string(&paths.meta)
+            .map(|s| s.trim().to_string())
+            .unwrap_or_else(|_| "unknown".to_string());
+
+        let grid = GridIndex::build(&layout, cfg.grid.max(1));
+        // Gradient family/hyper-parameters for the localized /embed SGD
+        // (paper defaults; the layout itself fixes the output dim).
+        let vis = LargeVisConfig { dim: layout.d(), threads: 1, ..Default::default() };
+
+        let mut metrics = Metrics::new();
+        metrics.set("serve.points", n as f64);
+        metrics.set("serve.graph_edges", graph_edges as f64);
+        Ok(ServerState {
+            cfg,
+            dataset,
+            data,
+            knn,
+            graph_edges,
+            layout,
+            labels,
+            n_classes,
+            grid,
+            vis,
+            metrics: Mutex::new(metrics),
+        })
+    }
+
+    /// Effective neighbor count for `/embed`: the configured override,
+    /// or the checkpointed graph's `k`, clamped to the base size.
+    pub fn embed_k(&self) -> usize {
+        let k = if self.cfg.embed_k == 0 { self.knn.k } else { self.cfg.embed_k };
+        k.max(1).min(self.data.n())
+    }
+
+    /// Bump a metrics counter (lock-poisoning tolerant: a panicking
+    /// worker must not take the metrics endpoint down with it).
+    pub fn count(&self, name: &str, delta: f64) {
+        let mut m = self.metrics.lock().unwrap_or_else(|e| e.into_inner());
+        m.add(name, delta);
+    }
+
+    /// Snapshot the metrics registry as a JSON object string.
+    pub fn metrics_json(&self) -> String {
+        self.metrics.lock().unwrap_or_else(|e| e.into_inner()).to_json()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_directory_fails_with_context() {
+        let cfg = ServeConfig {
+            checkpoints: std::path::PathBuf::from("/nonexistent/checkpoints"),
+            ..Default::default()
+        };
+        let err = format!("{:#}", ServerState::load(cfg).unwrap_err());
+        assert!(err.contains("data.lvec"), "{err}");
+        assert!(err.contains("full pipeline run"), "{err}");
+    }
+
+    #[test]
+    fn stale_shapes_rejected() {
+        let dir = std::env::temp_dir()
+            .join(format!("largevis_serve_state_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let paths = CheckpointPaths::in_dir(&dir);
+        let data = Matrix::from_vec(vec![0.0; 5 * 3], 5, 3);
+        let layout = Matrix::from_vec(vec![0.0; 4 * 2], 4, 2); // wrong n
+        binary::write_binary(&paths.data, &data).unwrap();
+        binary::write_binary(&paths.layout, &layout).unwrap();
+        checkpoint::write_knn(&paths.knn, &KnnGraph::empty(5, 2)).unwrap();
+        let cfg = ServeConfig { checkpoints: dir.clone(), ..Default::default() };
+        let err = format!("{:#}", ServerState::load(cfg).unwrap_err());
+        assert!(err.contains("stale checkpoint directory"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -16,8 +16,9 @@
 //! `refreeze()` promotes the frozen points back into a full graph for
 //! a global re-optimization when drift accumulates.
 
-use crate::data::matrix::{sqdist, Matrix};
+use crate::data::matrix::Matrix;
 use crate::graph::weights::{weighted_graph, WeightConfig};
+use crate::kernels::nearest_k;
 use crate::knn::KnnGraph;
 use crate::util::heap::BoundedMaxHeap;
 use crate::util::rng::Rng;
@@ -26,6 +27,32 @@ use crate::vis::sampler::GraphSamplers;
 use crate::vis::LargeVisConfig;
 
 /// An updatable layout over a growing dataset.
+///
+/// # Example
+///
+/// ```
+/// use largevis::data::synth::gaussian_mixture;
+/// use largevis::graph::weights::{weighted_graph, WeightConfig};
+/// use largevis::knn::bruteforce::exact_knn;
+/// use largevis::vis::incremental::IncrementalLayout;
+/// use largevis::vis::LargeVisConfig;
+///
+/// // Embed a small base dataset.
+/// let (points, _labels) = gaussian_mixture(120, 8, 3, 0.0, 7);
+/// let knn = exact_knn(&points, 5, 1);
+/// let wcfg = WeightConfig { perplexity: 4.0, ..Default::default() };
+/// let vcfg = LargeVisConfig { samples_per_vertex: 50, threads: 1, ..Default::default() };
+/// let graph = weighted_graph(&knn, &wcfg);
+/// let mut layout = largevis::vis::init_layout(points.n(), 2, 1);
+/// largevis::vis::sgd::optimize(&graph, &mut layout, &vcfg);
+///
+/// // Wrap it and insert new points; old positions stay frozen.
+/// let mut inc = IncrementalLayout::new(points, knn, layout, wcfg, vcfg);
+/// let (extra, _) = gaussian_mixture(10, 8, 3, 0.0, 99);
+/// let ids = inc.add_points(&extra);
+/// assert_eq!(ids.len(), 10);
+/// assert_eq!(inc.n(), 130);
+/// ```
 pub struct IncrementalLayout {
     /// Current high-dimensional points.
     pub data: Matrix,
@@ -71,19 +98,16 @@ impl IncrementalLayout {
         let mut new_ids = Vec::with_capacity(new_points.n());
 
         // 1-2: KNN splice, one point at a time (each new point can be a
-        // neighbor of subsequent ones).
+        // neighbor of subsequent ones). The exact scan goes through the
+        // runtime-dispatched batched kernel ([`nearest_k`]): the data
+        // rows are already contiguous, so one batched call replaces n
+        // scattered scalar `sqdist` calls.
+        let mut dists: Vec<f32> = Vec::new();
+        let mut heap = BoundedMaxHeap::new(k);
         for r in 0..new_points.n() {
             let id = self.data.n();
             let row = new_points.row(r).to_vec();
-            let mut heap = BoundedMaxHeap::new(k);
-            for j in 0..self.data.n() {
-                let dist = sqdist(&row, self.data.row(j));
-                if dist < heap.threshold() {
-                    heap.push(j as u32, dist, false);
-                }
-            }
-            let mine: Vec<(u32, f32)> =
-                heap.into_sorted().iter().map(|c| (c.id, c.dist)).collect();
+            let mine = nearest_k(&row, &self.data, k, &mut dists, &mut heap);
             // Splice into existing lists where the new point improves them.
             for &(j, dist) in &mine {
                 let list = &mut self.knn.neighbors[j as usize];
@@ -191,6 +215,143 @@ impl IncrementalLayout {
     }
 }
 
+/// Out-of-sample projection against a **frozen** base — the query
+/// server's `/embed` path.
+///
+/// Unlike [`IncrementalLayout::add_points`], nothing is mutated: the
+/// base `data`/`layout` are read-only (and can therefore be shared
+/// across server worker threads behind an `Arc`), and the projected
+/// positions are returned instead of spliced in. Per query point:
+///
+/// 1. its `k` nearest base points are found with one [`nearest_k`]
+///    batch scan (runtime-dispatched SIMD),
+/// 2. its position is initialized at the similarity-weighted centroid
+///    of those neighbors' layout positions, and
+/// 3. a short localized SGD pass (`samples_per_point` steps) refines
+///    it — attraction toward its base neighbors sampled ∝ `1/(1+d²)`,
+///    repulsion from uniformly sampled base points — while every base
+///    position stays exactly where it was.
+///
+/// Returns the projected positions (one row per query row) and each
+/// query point's base-neighbor list (sorted ascending by squared
+/// distance), deterministic for a given `vis.seed`.
+pub fn project(
+    data: &Matrix,
+    layout: &Matrix,
+    vis: &LargeVisConfig,
+    new_points: &Matrix,
+    k: usize,
+    samples_per_point: usize,
+) -> (Matrix, Vec<Vec<(u32, f32)>>) {
+    assert_eq!(new_points.d(), data.d(), "query dimensionality mismatch");
+    assert_eq!(data.n(), layout.n(), "base data/layout row mismatch");
+    assert!(data.n() > 0, "cannot project against an empty base");
+    let k = k.max(1).min(data.n());
+    let dim = layout.d();
+    let mut out = Matrix::zeros(new_points.n(), dim);
+    let mut neighbors = Vec::with_capacity(new_points.n());
+
+    let f = vis.prob_fn;
+    let gamma = vis.gamma;
+    let gclip = vis.grad_clip;
+    let mut dists: Vec<f32> = Vec::new();
+    let mut heap = BoundedMaxHeap::new(k);
+    let mut pos = vec![0f32; dim];
+    let mut step = vec![0f32; dim];
+    let mut cum: Vec<f32> = Vec::new();
+
+    for r in 0..new_points.n() {
+        let q = new_points.row(r);
+        let nb = nearest_k(q, data, k, &mut dists, &mut heap);
+
+        // Init at the similarity-weighted centroid (same placement rule
+        // as the insert path), with a tiny seeded jitter so coincident
+        // queries still separate under SGD.
+        let mut rng = Rng::new(vis.seed ^ (0x9e11 + r as u64).wrapping_mul(0x2545F4914F6CDD1D));
+        pos.iter_mut().for_each(|p| *p = 0.0);
+        let mut total_w = 0f32;
+        for &(j, d) in &nb {
+            let w = 1.0 / (1.0 + d);
+            for (p, &y) in pos.iter_mut().zip(layout.row(j as usize)) {
+                *p += w * y;
+            }
+            total_w += w;
+        }
+        if total_w > 0.0 {
+            for p in pos.iter_mut() {
+                *p = *p / total_w + 1e-3 * rng.gaussian();
+            }
+        } else {
+            for p in pos.iter_mut() {
+                *p = 1e-4 * rng.gaussian();
+            }
+        }
+
+        // Cumulative neighbor weights for the attraction draw.
+        cum.clear();
+        let mut acc_w = 0f32;
+        for &(_, d) in &nb {
+            acc_w += 1.0 / (1.0 + d);
+            cum.push(acc_w);
+        }
+
+        // Localized SGD: only `pos` moves; the base layout is never
+        // written. Same gradient family and rho schedule as the batch
+        // optimizer.
+        let steps = samples_per_point as u64;
+        for t in 0..steps {
+            if acc_w <= 0.0 {
+                break;
+            }
+            let rho = (vis.rho0 * (1.0 - t as f32 / steps as f32)).max(vis.rho0 * 1e-4);
+            let u = rng.f32() * acc_w;
+            let idx = cum.partition_point(|&c| c < u).min(nb.len() - 1);
+            let j = nb[idx].0 as usize;
+            step.iter_mut().for_each(|s| *s = 0.0);
+            let jr = layout.row(j);
+            let mut d2 = 0f32;
+            for kk in 0..dim {
+                let diff = pos[kk] - jr[kk];
+                d2 += diff * diff;
+            }
+            let c = f.coeff_pos(d2);
+            for kk in 0..dim {
+                step[kk] += clip(c * (pos[kk] - jr[kk]), gclip);
+            }
+            // Draw negatives uniformly (with replacement) over the
+            // base *excluding* the current attraction target, by
+            // drawing from n-1 and remapping — never silently dropping
+            // a repulsion: the skip-on-collision pattern PR 3 fixed in
+            // the batch and localized optimizers degenerates small
+            // bases to attract-only steps. n == 1 has no repulsion
+            // candidates at all.
+            let negs = if data.n() > 1 { vis.negatives } else { 0 };
+            for _ in 0..negs {
+                let mut v = rng.below(data.n() - 1);
+                if v >= j {
+                    v += 1;
+                }
+                let vr = layout.row(v);
+                let mut d2 = 0f32;
+                for kk in 0..dim {
+                    let diff = pos[kk] - vr[kk];
+                    d2 += diff * diff;
+                }
+                let c = gamma * f.coeff_neg(d2);
+                for kk in 0..dim {
+                    step[kk] += clip(c * (pos[kk] - vr[kk]), gclip);
+                }
+            }
+            for kk in 0..dim {
+                pos[kk] += rho * step[kk];
+            }
+        }
+        out.row_mut(r).copy_from_slice(&pos);
+        neighbors.push(nb);
+    }
+    (out, neighbors)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +420,71 @@ mod tests {
         inc.add_points(&extra);
         inc.knn.check_invariants().unwrap();
         assert_eq!(inc.knn.n(), 420);
+    }
+
+    #[test]
+    fn project_is_read_only_and_lands_in_cluster() {
+        let (inc, labels) = base();
+        let data_before = inc.data.clone();
+        let layout_before = inc.layout.clone();
+        // Project later rows of the same generator (same 4 clusters).
+        let (extra, extra_labels) = gaussian_mixture(440, 10, 4, 0.0, 21);
+        let tail = extra.gather_rows(&(400..440).collect::<Vec<_>>());
+        let (pos, nbs) = project(&inc.data, &inc.layout, &inc.vis, &tail, 10, 500);
+        assert_eq!(pos.n(), 40);
+        assert_eq!(pos.d(), 2);
+        assert_eq!(nbs.len(), 40);
+        // Base untouched, bit for bit.
+        assert_eq!(inc.data, data_before);
+        assert_eq!(inc.layout, layout_before);
+        // Neighbor lists sorted, k entries, valid ids.
+        for nb in &nbs {
+            assert_eq!(nb.len(), 10);
+            for w in nb.windows(2) {
+                assert!(w[0].1 <= w[1].1);
+            }
+            assert!(nb.iter().all(|&(id, _)| (id as usize) < inc.n()));
+        }
+        // Each projected point lands nearest a base point of its class.
+        let mut correct = 0;
+        for r in 0..40 {
+            let mut best = (f32::INFINITY, 0u32);
+            for j in 0..400 {
+                let mut d = 0f32;
+                for kk in 0..2 {
+                    let diff = pos.row(r)[kk] - inc.layout.row(j)[kk];
+                    d += diff * diff;
+                }
+                if d < best.0 {
+                    best = (d, labels[j]);
+                }
+            }
+            if best.1 == extra_labels[400 + r] {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 30, "only {correct}/40 projected points near their cluster");
+    }
+
+    #[test]
+    fn project_deterministic_for_seed() {
+        let (inc, _) = base();
+        let (extra, _) = gaussian_mixture(5, 10, 4, 0.0, 123);
+        let (a, na) = project(&inc.data, &inc.layout, &inc.vis, &extra, 8, 300);
+        let (b, nb) = project(&inc.data, &inc.layout, &inc.vis, &extra, 8, 300);
+        assert_eq!(a, b);
+        assert_eq!(na, nb);
+    }
+
+    #[test]
+    fn project_clamps_k_and_handles_zero_samples() {
+        let (inc, _) = base();
+        let (extra, _) = gaussian_mixture(3, 10, 4, 0.0, 5);
+        // k larger than the base clamps; zero SGD steps = centroid init.
+        let (pos, nbs) = project(&inc.data, &inc.layout, &inc.vis, &extra, 100_000, 0);
+        assert_eq!(pos.n(), 3);
+        assert_eq!(nbs[0].len(), 400);
+        assert!(pos.as_slice().iter().all(|v| v.is_finite()));
     }
 
     #[test]

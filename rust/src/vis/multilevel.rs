@@ -118,6 +118,33 @@ fn level_seed(seed: u64, depth: usize) -> u64 {
 /// `on_level(depth, level_graph, level_layout)` is called after each
 /// level's refinement, coarsest first (depth counts down to 0, the
 /// input graph) — the pipeline uses it to checkpoint per-level layouts.
+///
+/// # Example
+///
+/// ```
+/// use largevis::data::synth::gaussian_mixture;
+/// use largevis::graph::weights::{weighted_graph, WeightConfig};
+/// use largevis::knn::bruteforce::exact_knn;
+/// use largevis::vis::multilevel::{optimize_multilevel, MultilevelConfig};
+/// use largevis::vis::LargeVisConfig;
+/// use largevis::data::matrix::Matrix;
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let (points, _) = gaussian_mixture(200, 8, 4, 0.0, 3);
+/// let knn = exact_knn(&points, 6, 1);
+/// let graph = weighted_graph(&knn, &WeightConfig { perplexity: 5.0, ..Default::default() });
+/// let cfg = LargeVisConfig { samples_per_vertex: 50, threads: 1, ..Default::default() };
+/// let mut ml = MultilevelConfig::default();
+/// ml.coarsen.min_coarse_size = 64; // force at least one coarse level
+///
+/// let mut layout = Matrix::zeros(graph.n(), cfg.dim); // overwritten by the driver
+/// let report = optimize_multilevel(&graph, &mut layout, &cfg, &ml, |_d, _g, _y| Ok(()))?;
+/// assert_eq!(layout.n(), 200);
+/// assert!(report.levels.len() >= 2);
+/// assert!(layout.as_slice().iter().all(|v| v.is_finite()));
+/// # Ok(())
+/// # }
+/// ```
 pub fn optimize_multilevel<F>(
     graph: &CsrGraph,
     layout: &mut Matrix,

@@ -1,0 +1,286 @@
+//! Integration test for the checkpoint-backed query server: run a tiny
+//! pipeline once, then serve its checkpoint directory on an ephemeral
+//! port and exercise every endpoint — including concurrently — with
+//! raw `std::net` HTTP clients. No pipeline stage re-runs at serve
+//! time, and `/embed` must leave the frozen base layout bit-identical.
+
+use largevis::config::{PipelineConfig, ServeConfig};
+use largevis::coordinator::{run_pipeline, CheckpointPaths};
+use largevis::serve::{Server, ServerState};
+use largevis::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn test_dir() -> PathBuf {
+    std::env::temp_dir().join(format!("largevis_serve_it_{}", std::process::id()))
+}
+
+/// One tiny checkpointed pipeline run shared by the whole test.
+fn checkpointed_run(out_dir: &Path) -> largevis::coordinator::PipelineOutput {
+    let mut cfg = PipelineConfig {
+        dataset: "20ng-like".into(),
+        scale: 0.02, // ~380 points
+        k: 8,
+        out_dir: out_dir.to_path_buf(),
+        ..Default::default()
+    };
+    cfg.vis.samples_per_vertex = 300;
+    cfg.knn.forest.n_trees = 2;
+    run_pipeline(&cfg).expect("pipeline run")
+}
+
+/// Minimal blocking HTTP client: one request, returns (status, body).
+fn request(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let header_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("header terminator");
+    let head = std::str::from_utf8(&raw[..header_end]).unwrap();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status code");
+    (status, raw[header_end + 4..].to_vec())
+}
+
+fn request_json(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let (status, body) = request(addr, method, path, body);
+    let text = String::from_utf8(body).expect("utf8 body");
+    (status, Json::parse(&text).expect("json body"))
+}
+
+fn as_f64(j: &Json) -> f64 {
+    match j {
+        Json::Num(n) => *n,
+        other => panic!("expected number, got {other:?}"),
+    }
+}
+
+#[test]
+fn server_end_to_end() {
+    let out_dir = test_dir();
+    let run = checkpointed_run(&out_dir);
+    let n_base = run.layout.n();
+    let ckpt = CheckpointPaths::new(&out_dir);
+
+    let cfg = ServeConfig {
+        checkpoints: ckpt.dir.clone(),
+        addr: "127.0.0.1:0".to_string(), // ephemeral port
+        threads: 4,
+        embed_samples: 200,
+        grid: 32,
+        ..Default::default()
+    };
+    let state = ServerState::load(cfg).expect("load server state");
+    assert_eq!(state.data.n(), n_base);
+    // Serving answers from checkpoints alone: the layout the server
+    // loaded equals the pipeline's final layout bit for bit.
+    assert_eq!(state.layout, run.layout);
+
+    let server = Server::bind(state).expect("bind");
+    let addr = server.local_addr().unwrap();
+    let shared = server.state();
+    let handle = server.handle();
+    let layout_before = shared.layout.clone();
+    let data_before = shared.data.clone();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // --- /healthz ---
+    let (status, health) = request_json(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    assert_eq!(health.get("status").and_then(|j| j.as_str()), Some("ok"));
+    assert_eq!(as_f64(health.get("points").unwrap()) as usize, n_base);
+    assert_eq!(as_f64(health.get("layout_dim").unwrap()) as usize, 2);
+    assert!(as_f64(health.get("graph_edges").unwrap()) > 0.0);
+
+    // --- /knn: query an exact base row -> itself at distance 0 ---
+    let q: Vec<f32> = shared.data.row(5).to_vec();
+    let q_json: Vec<String> = q.iter().map(|v| v.to_string()).collect();
+    let body = format!("{{\"point\":[{}],\"k\":4}}", q_json.join(","));
+    let (status, knn) = request_json(addr, "POST", "/knn", Some(&body));
+    assert_eq!(status, 200);
+    let ids = match knn.get("ids") {
+        Some(Json::Arr(a)) => a.iter().map(as_f64).collect::<Vec<_>>(),
+        other => panic!("ids: {other:?}"),
+    };
+    let dists = match knn.get("dists") {
+        Some(Json::Arr(a)) => a.iter().map(as_f64).collect::<Vec<_>>(),
+        other => panic!("dists: {other:?}"),
+    };
+    assert_eq!(ids.len(), 4);
+    assert_eq!(ids[0] as usize, 5, "nearest neighbor of a base row is itself");
+    assert_eq!(dists[0], 0.0);
+    assert!(dists.windows(2).all(|w| w[0] <= w[1]), "dists sorted: {dists:?}");
+
+    // --- /viewport: full bounds vs a narrow tile ---
+    let (bx0, by0, bx1, by1) = shared.grid.bounds();
+    let (status, svg) = request(
+        addr,
+        "GET",
+        &format!("/viewport?x0={bx0}&y0={by0}&x1={bx1}&y1={by1}"),
+        None,
+    );
+    assert_eq!(status, 200);
+    let svg = String::from_utf8(svg).unwrap();
+    assert!(svg.starts_with("<svg"), "viewport returns SVG");
+    let full_circles = svg.matches("<circle").count();
+    assert_eq!(full_circles, n_base, "full-bounds tile draws every point");
+    // A narrow central tile: the spatial index must cull — the cells
+    // it examines cannot cover the whole layout (the extremal points
+    // defining the bounds live in cells the tile never touches).
+    let (_, before) = request_json(addr, "GET", "/metrics", None);
+    let examined_before = as_f64(before.get("viewport.examined").unwrap());
+    let (cx, cy) = ((bx0 + bx1) / 2.0, (by0 + by1) / 2.0);
+    let (w, h) = ((bx1 - bx0) / 10.0, (by1 - by0) / 10.0);
+    let (status, tile) = request(
+        addr,
+        "GET",
+        &format!("/viewport?x0={cx}&y0={cy}&x1={}&y1={}", cx + w, cy + h),
+        None,
+    );
+    assert_eq!(status, 200);
+    let tile = String::from_utf8(tile).unwrap();
+    let tile_circles = tile.matches("<circle").count();
+    assert!(tile_circles < n_base, "narrow tile rendered all {n_base} points");
+    let (_, after) = request_json(addr, "GET", "/metrics", None);
+    let examined = as_f64(after.get("viewport.examined").unwrap()) - examined_before;
+    assert!(
+        (examined as usize) < n_base,
+        "narrow tile examined {examined} candidates — no spatial culling"
+    );
+
+    // --- /embed: project perturbed copies of base rows ---
+    let d = shared.data.d();
+    let mut rows = Vec::new();
+    for i in 0..6 {
+        let row: Vec<String> = shared
+            .data
+            .row(i * 3)
+            .iter()
+            .map(|v| (v + 0.001).to_string())
+            .collect();
+        rows.push(format!("[{}]", row.join(",")));
+    }
+    let body = format!("{{\"points\":[{}],\"samples\":150}}", rows.join(","));
+    let (status, emb) = request_json(addr, "POST", "/embed", Some(&body));
+    assert_eq!(status, 200);
+    assert_eq!(as_f64(emb.get("n").unwrap()) as usize, 6);
+    assert_eq!(as_f64(emb.get("dim").unwrap()) as usize, 2);
+    let positions = match emb.get("positions") {
+        Some(Json::Arr(a)) => a,
+        other => panic!("positions: {other:?}"),
+    };
+    assert_eq!(positions.len(), 6);
+    for (i, p) in positions.iter().enumerate() {
+        let Json::Arr(xy) = p else { panic!("positions[{i}] not an array") };
+        assert_eq!(xy.len(), 2);
+        for v in xy {
+            assert!(as_f64(v).is_finite(), "positions[{i}] non-finite");
+        }
+    }
+    // A perturbed copy of base row i*3 should list that row among its
+    // base neighbors.
+    let neighbors = match emb.get("neighbors") {
+        Some(Json::Arr(a)) => a,
+        other => panic!("neighbors: {other:?}"),
+    };
+    let Json::Arr(first) = &neighbors[0] else { panic!("neighbors[0]") };
+    assert!(
+        first.iter().map(as_f64).any(|id| id as usize == 0),
+        "row 0's perturbed copy should neighbor row 0"
+    );
+
+    // The frozen base is bit-identical after embedding.
+    assert_eq!(shared.layout, layout_before, "/embed moved the frozen base layout");
+    assert_eq!(shared.data, data_before, "/embed grew the base dataset");
+
+    // --- error paths ---
+    let (status, _) = request(addr, "POST", "/embed", Some("not json"));
+    assert_eq!(status, 400);
+    let (status, _) = request(addr, "POST", "/knn", Some("{\"point\":[1,2]}"));
+    assert_eq!(status, 400, "dimension mismatch rejected");
+    let (status, _) = request(addr, "GET", "/nope", None);
+    assert_eq!(status, 404);
+    let (status, _) = request(addr, "GET", "/embed", None);
+    assert_eq!(status, 405);
+    let (status, _) = request(addr, "GET", "/viewport?x0=9&x1=1", None);
+    assert_eq!(status, 400, "inverted viewport rejected");
+    // Oversized Content-Length is refused up front with 413, before
+    // any body bytes are read.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        s.write_all(b"POST /embed HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n").unwrap();
+        let mut raw = Vec::new();
+        s.read_to_end(&mut raw).unwrap();
+        let head = String::from_utf8_lossy(&raw);
+        assert!(head.starts_with("HTTP/1.1 413 "), "{head}");
+    }
+
+    // --- concurrent clients over every endpoint ---
+    let rounds = 5;
+    let clients = 8;
+    let knn_body = format!("{{\"point\":[{}],\"k\":3}}", q_json.join(","));
+    let embed_body = format!("{{\"points\":[{}],\"samples\":50}}", rows[0]);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let knn_body = &knn_body;
+            let embed_body = &embed_body;
+            s.spawn(move || {
+                for _ in 0..rounds {
+                    match c % 4 {
+                        0 => {
+                            let (st, j) = request_json(addr, "POST", "/knn", Some(knn_body));
+                            assert_eq!(st, 200);
+                            assert!(matches!(j.get("ids"), Some(Json::Arr(_))));
+                        }
+                        1 => {
+                            let (st, j) = request_json(addr, "POST", "/embed", Some(embed_body));
+                            assert_eq!(st, 200);
+                            assert_eq!(as_f64(j.get("n").unwrap()) as usize, 1);
+                        }
+                        2 => {
+                            let (st, b) = request(addr, "GET", "/viewport", None);
+                            assert_eq!(st, 200);
+                            assert!(b.starts_with(b"<svg"));
+                        }
+                        _ => {
+                            let (st, j) = request_json(addr, "GET", "/healthz", None);
+                            assert_eq!(st, 200);
+                            assert_eq!(j.get("status").and_then(|x| x.as_str()), Some("ok"));
+                        }
+                    }
+                }
+            });
+        }
+    });
+    // Still bit-identical after concurrent embeds.
+    assert_eq!(shared.layout, layout_before);
+
+    // --- /metrics reflects the traffic ---
+    let (status, metrics) = request_json(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert!(as_f64(metrics.get("serve.requests").unwrap()) >= (rounds * clients) as f64);
+    assert!(as_f64(metrics.get("embed.requests").unwrap()) >= 1.0 + rounds as f64);
+    assert!(as_f64(metrics.get("knn.requests").unwrap()) >= 1.0 + rounds as f64);
+    assert!(as_f64(metrics.get("viewport.requests").unwrap()) >= 2.0 + rounds as f64);
+    assert!(as_f64(metrics.get("serve.errors").unwrap()) >= 5.0);
+    assert_eq!(as_f64(metrics.get("serve.points").unwrap()) as usize, n_base);
+
+    // --- clean shutdown ---
+    handle.shutdown();
+    server_thread.join().expect("server thread").expect("server run");
+}
