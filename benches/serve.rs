@@ -1,0 +1,160 @@
+//! Serve-throughput smoke benchmark: insert/sec through the live
+//! write path and query/sec through `/knn` — with keep-alive
+//! connections vs one-connection-per-request (`Connection: close`) —
+//! against an in-process server on an ephemeral port. Emits
+//! `BENCH_serve.json` so the serving-perf trajectory starts recording;
+//! CI runs the smoke variant via `LARGEVIS_BENCH_SCALE`.
+
+use largevis::bench::{bench_scale, Table};
+use largevis::config::{PipelineConfig, ServeConfig};
+use largevis::coordinator::CheckpointPaths;
+use largevis::serve::{Server, ServerState};
+use largevis::util::timer::Timer;
+use std::net::SocketAddr;
+
+#[path = "../rust/tests/util/mod.rs"]
+mod util;
+use util::{json_row, request, KeepAlive};
+
+/// One request on a fresh connection (`Connection: close`).
+fn request_close(addr: SocketAddr, method: &str, path: &str, body: &str) -> u16 {
+    request(addr, method, path, Some(body)).0
+}
+
+fn main() -> anyhow::Result<()> {
+    // A small checkpointed pipeline run to serve.
+    let out_dir = std::env::temp_dir().join(format!("largevis_serve_bench_{}", std::process::id()));
+    std::fs::remove_dir_all(&out_dir).ok();
+    let mut cfg = PipelineConfig {
+        dataset: "20ng-like".into(),
+        scale: (0.05 * bench_scale()).clamp(0.01, 1.0),
+        k: 10,
+        out_dir: out_dir.clone(),
+        ..Default::default()
+    };
+    cfg.vis.samples_per_vertex = 300;
+    cfg.knn.forest.n_trees = 2;
+    largevis::coordinator::run_pipeline(&cfg)?;
+    let ckpt = CheckpointPaths::new(&out_dir);
+
+    let serve_cfg = ServeConfig {
+        checkpoints: ckpt.dir.clone(),
+        addr: "127.0.0.1:0".to_string(),
+        threads: 4,
+        insert_samples: 100,
+        refine_interval_ms: 100,
+        ..Default::default()
+    };
+    let state = ServerState::load(serve_cfg)?;
+    let server = Server::bind(state)?;
+    let addr = server.local_addr()?;
+    let shared = server.state();
+    let handle = server.handle();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let snap = shared.snapshot();
+    let n = snap.data.n();
+    let d = snap.data.d();
+    let queries = ((400.0 * bench_scale()) as usize).max(50);
+    let inserts = ((200.0 * bench_scale()) as usize).max(20);
+    eprintln!("[serve-bench] n={n} d={d} queries={queries} inserts={inserts} addr={addr}");
+
+    let knn_body = format!("{{\"point\":{},\"k\":5}}", json_row(snap.data.row(0)));
+    let mut table = Table::new("serve throughput", &["workload", "metric", "value"]);
+    let mut json_rows: Vec<String> = Vec::new();
+
+    // Query throughput, one connection per request.
+    {
+        let t = Timer::start("knn-close");
+        for _ in 0..queries {
+            assert_eq!(request_close(addr, "POST", "/knn", &knn_body), 200);
+        }
+        let secs = t.report();
+        let qps = queries as f64 / secs.max(1e-9);
+        table.row(&["knn/close".into(), "req/s".into(), format!("{qps:.0}")]);
+        json_rows.push(format!(
+            "{{\"workload\":\"knn_close\",\"requests\":{queries},\"secs\":{secs:.4},\"per_sec\":{qps:.1}}}"
+        ));
+    }
+
+    // Query throughput, one persistent keep-alive connection.
+    {
+        let mut conn = KeepAlive::connect(addr);
+        let t = Timer::start("knn-keepalive");
+        for _ in 0..queries {
+            assert_eq!(conn.request("POST", "/knn", &knn_body), 200);
+        }
+        let secs = t.report();
+        let qps = queries as f64 / secs.max(1e-9);
+        table.row(&["knn/keep-alive".into(), "req/s".into(), format!("{qps:.0}")]);
+        json_rows.push(format!(
+            "{{\"workload\":\"knn_keepalive\",\"requests\":{queries},\"secs\":{secs:.4},\"per_sec\":{qps:.1}}}"
+        ));
+    }
+
+    // Insert throughput (single-point inserts over keep-alive; each
+    // request WALs, splices, places and publishes an epoch).
+    {
+        let mut conn = KeepAlive::connect(addr);
+        let t = Timer::start("insert");
+        for i in 0..inserts {
+            let vals: Vec<f32> = snap
+                .data
+                .row(i % n)
+                .iter()
+                .map(|v| v + 0.01 * (i + 1) as f32)
+                .collect();
+            let body = format!("{{\"point\":{}}}", json_row(&vals));
+            assert_eq!(conn.request("POST", "/insert", &body), 200);
+        }
+        let secs = t.report();
+        let ips = inserts as f64 / secs.max(1e-9);
+        table.row(&["insert".into(), "req/s".into(), format!("{ips:.0}")]);
+        json_rows.push(format!(
+            "{{\"workload\":\"insert\",\"requests\":{inserts},\"secs\":{secs:.4},\"per_sec\":{ips:.1}}}"
+        ));
+    }
+
+    // Batched insert throughput (rows/sec, amortizing the epoch swap).
+    {
+        let batch = 32usize;
+        let batches = (inserts / 8).max(3);
+        let mut conn = KeepAlive::connect(addr);
+        let t = Timer::start("insert-batch");
+        for b in 0..batches {
+            let rows: Vec<String> = (0..batch)
+                .map(|r| {
+                    let vals: Vec<f32> = snap
+                        .data
+                        .row((b * batch + r) % n)
+                        .iter()
+                        .map(|v| v + 0.02 * (r + 1) as f32)
+                        .collect();
+                    json_row(&vals)
+                })
+                .collect();
+            let body = format!("{{\"points\":[{}]}}", rows.join(","));
+            assert_eq!(conn.request("POST", "/insert_batch", &body), 200);
+        }
+        let secs = t.report();
+        let rps = (batches * batch) as f64 / secs.max(1e-9);
+        table.row(&["insert_batch".into(), "rows/s".into(), format!("{rps:.0}")]);
+        json_rows.push(format!(
+            "{{\"workload\":\"insert_batch\",\"rows\":{},\"secs\":{secs:.4},\"per_sec\":{rps:.1}}}",
+            batches * batch
+        ));
+    }
+
+    handle.shutdown();
+    server_thread.join().expect("server thread")?;
+
+    table.print();
+    table.write_tsv("serve_throughput")?;
+    let doc = format!(
+        "{{\"bench\":\"serve\",\"n\":{n},\"d\":{d},\"results\":[{}]}}\n",
+        json_rows.join(",")
+    );
+    std::fs::write("BENCH_serve.json", &doc)?;
+    eprintln!("[serve-bench] wrote BENCH_serve.json");
+    Ok(())
+}

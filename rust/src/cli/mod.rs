@@ -24,6 +24,8 @@ const VALUE_KEYS: &[&str] = &[
     "max-visits", "format", "sample", "input", "labels", "resume-from", "chunk-rows", "layout",
     "ml-levels", "ml-min-size", "ml-coarse-samples", "ml-jitter", "ml-rho-decay", "checkpoints",
     "addr", "embed-samples", "embed-k", "grid", "tile-max-points", "max-body-bytes",
+    "insert-samples", "refine-samples", "refine-interval-ms", "keep-alive-max",
+    "idle-timeout-ms",
 ];
 
 /// Parse a raw argument vector (without argv[0]).
@@ -138,7 +140,17 @@ SERVE (largevis serve):
     --grid <n>            /viewport spatial-index cells per axis (default 64)
     --tile-max-points <n> max points rendered per /viewport tile (default 20000)
     --max-body-bytes <n>  request-body size cap (default 67108864; over it -> 413)
-    Endpoints: POST /embed, POST /knn, GET /viewport, GET /healthz, GET /metrics
+    --read-only           refuse POST /insert (and skip the WAL)
+    --insert-samples <n>  localized-SGD steps per /insert point (default 500)
+    --refine-samples <n>  background refinement steps per inserted point
+                          per pass (default 200; 0 disables refinement)
+    --refine-interval-ms <n>  refinement worker wake interval (default 250)
+    --keep-alive-max <n>  requests served per connection (default 1000)
+    --idle-timeout-ms <n> keep-alive idle timeout (default 5000)
+    Endpoints: POST /embed, POST /knn, POST /insert, POST /insert_batch,
+               GET /viewport, GET /healthz, GET /metrics
+    Live inserts are WAL-logged to <checkpoints>/inserts.wal and replayed
+    on startup, so a restarted server recovers them bit-identically.
 ";
 
 #[cfg(test)]

@@ -134,14 +134,14 @@ impl Default for PipelineConfig {
     }
 }
 
-/// Configuration for the checkpoint-backed layout query server
-/// (`largevis serve`).
+/// Configuration for the live layout query server (`largevis serve`).
 ///
-/// The server is read-only over one finished run: it loads the
-/// checkpoint artifacts (`data.lvec`, `knn.ckpt`, `graph.ckpt`,
-/// `layout.lvec`, `labels.lbl`) once at startup and answers `/embed`,
-/// `/knn`, `/viewport`, `/healthz` and `/metrics` from memory. INI keys
-/// live in a `[serve]` section; CLI flags override them.
+/// The server loads the checkpoint artifacts (`data.lvec`, `knn.ckpt`,
+/// `graph.ckpt`, `layout.lvec`, `labels.lbl`) once at startup, replays
+/// the live-insert WAL (`inserts.wal`), and then answers `/embed`,
+/// `/knn`, `/insert`, `/insert_batch`, `/viewport`, `/healthz` and
+/// `/metrics` from epoch-versioned in-memory snapshots. INI keys live
+/// in a `[serve]` section; CLI flags override them.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Checkpoint directory of a finished pipeline run
@@ -162,6 +162,24 @@ pub struct ServeConfig {
     pub tile_max_points: usize,
     /// Maximum accepted request-body size in bytes.
     pub max_body_bytes: usize,
+    /// Refuse `/insert` (403) and skip the WAL entirely.
+    pub read_only: bool,
+    /// Localized-SGD steps per point inside the `/insert` request
+    /// (placement quality vs insert latency; the background refinement
+    /// worker adds more afterwards).
+    pub insert_samples: usize,
+    /// Background refinement: SGD steps per recently-inserted point
+    /// per pass (0 disables refinement).
+    pub refine_samples: usize,
+    /// Background refinement: periodic wake interval in milliseconds
+    /// (the worker is also woken by every insert).
+    pub refine_interval_ms: u64,
+    /// Requests served per connection before the server closes it
+    /// (bounds how long one client can pin a worker).
+    pub keep_alive_max: usize,
+    /// Keep-alive idle timeout in milliseconds: a connection with no
+    /// next request within this window is closed.
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -175,6 +193,12 @@ impl Default for ServeConfig {
             grid: 64,
             tile_max_points: 20_000,
             max_body_bytes: 64 << 20,
+            read_only: false,
+            insert_samples: 500,
+            refine_samples: 200,
+            refine_interval_ms: 250,
+            keep_alive_max: 1000,
+            idle_timeout_ms: 5000,
         }
     }
 }
@@ -196,6 +220,13 @@ impl ServeConfig {
         cfg.grid = ini.get_or("serve", "grid", cfg.grid)?;
         cfg.tile_max_points = ini.get_or("serve", "tile_max_points", cfg.tile_max_points)?;
         cfg.max_body_bytes = ini.get_or("serve", "max_body_bytes", cfg.max_body_bytes)?;
+        cfg.read_only = ini.get_bool_or("serve", "read_only", cfg.read_only)?;
+        cfg.insert_samples = ini.get_or("serve", "insert_samples", cfg.insert_samples)?;
+        cfg.refine_samples = ini.get_or("serve", "refine_samples", cfg.refine_samples)?;
+        cfg.refine_interval_ms =
+            ini.get_or("serve", "refine_interval_ms", cfg.refine_interval_ms)?;
+        cfg.keep_alive_max = ini.get_or("serve", "keep_alive_max", cfg.keep_alive_max)?;
+        cfg.idle_timeout_ms = ini.get_or("serve", "idle_timeout_ms", cfg.idle_timeout_ms)?;
         Ok(cfg)
     }
 }
@@ -355,8 +386,10 @@ mod tests {
         let c = ServeConfig::default();
         assert_eq!(c.addr, "127.0.0.1:7878");
         assert_eq!(c.embed_k, 0);
+        assert!(!c.read_only);
+        assert!(c.keep_alive_max > 1);
         let ini = Ini::parse(
-            "[serve]\ncheckpoints = target/mnist/checkpoints\naddr = 0.0.0.0:9000\nthreads = 8\nembed_samples = 250\nembed_k = 20\ngrid = 128\ntile_max_points = 5000",
+            "[serve]\ncheckpoints = target/mnist/checkpoints\naddr = 0.0.0.0:9000\nthreads = 8\nembed_samples = 250\nembed_k = 20\ngrid = 128\ntile_max_points = 5000\nread_only = yes\ninsert_samples = 300\nrefine_samples = 100\nrefine_interval_ms = 500\nkeep_alive_max = 64\nidle_timeout_ms = 2500",
         )
         .unwrap();
         let c = ServeConfig::from_ini(&ini).unwrap();
@@ -370,6 +403,12 @@ mod tests {
         assert_eq!(c.embed_k, 20);
         assert_eq!(c.grid, 128);
         assert_eq!(c.tile_max_points, 5000);
+        assert!(c.read_only);
+        assert_eq!(c.insert_samples, 300);
+        assert_eq!(c.refine_samples, 100);
+        assert_eq!(c.refine_interval_ms, 500);
+        assert_eq!(c.keep_alive_max, 64);
+        assert_eq!(c.idle_timeout_ms, 2500);
     }
 
     #[test]

@@ -56,6 +56,11 @@ pub struct CheckpointPaths {
     pub labels: PathBuf,
     /// Dataset name of the run that wrote the checkpoints (plain text).
     pub meta: PathBuf,
+    /// Append-only live-insert WAL (`inserts.wal`), written by
+    /// `largevis serve` when `POST /insert` traffic arrives and
+    /// replayed at server startup; a fresh pipeline run removes any
+    /// stale log (the base it referred to is gone).
+    pub wal: PathBuf,
 }
 
 impl CheckpointPaths {
@@ -76,6 +81,7 @@ impl CheckpointPaths {
             layout: dir.join("layout.lvec"),
             labels: dir.join("labels.lbl"),
             meta: dir.join("dataset.txt"),
+            wal: dir.join("inserts.wal"),
             dir: dir.to_path_buf(),
         }
     }
@@ -203,6 +209,13 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineOutput> {
             formats::binary::write_binary(&ckpt.data, &ds.points)
                 .with_context(|| format!("write {}", ckpt.data.display()))?;
             std::fs::write(&ckpt.meta, &ds.name)?;
+            // A live-insert WAL from an earlier serve run is bound to
+            // the base this run just replaced — replaying it against
+            // the new base would be garbage. Same stale-checkpoint
+            // hazard as labels.lbl below.
+            if ckpt.wal.exists() {
+                std::fs::remove_file(&ckpt.wal)?;
+            }
             match &ds.labels {
                 Some(ls) => write_labels(&ckpt.labels, ls)?,
                 // Drop any stale labels from a previous run of a

@@ -13,6 +13,9 @@
 //!   expensive intermediates ([`crate::knn::KnnGraph`] and
 //!   [`crate::graph::CsrGraph`]), the substrate for
 //!   `--resume-from <stage>`.
+//! * [`wal`] — the append-only insert log (`inserts.wal`) the live
+//!   query server writes before applying `POST /insert` batches, and
+//!   replays at startup to recover them bit-identically.
 //!
 //! All integers and floats are little-endian; every format starts with
 //! a 4-byte magic and a `u32` version so corruption and accidental
@@ -21,6 +24,7 @@
 pub mod binary;
 pub mod checkpoint;
 pub mod text;
+pub mod wal;
 
 use crate::data::matrix::Matrix;
 use anyhow::{bail, Context, Result};

@@ -1,0 +1,396 @@
+//! Append-only write-ahead log for live point insertion (`LVWL`).
+//!
+//! The live query server accepts `POST /insert` while running; those
+//! points must survive a restart without rewriting the (potentially
+//! huge) base checkpoints on every request. Each accepted batch is
+//! appended to `inserts.wal` in the checkpoint directory *before* it is
+//! applied to the in-memory state, and replayed in order at startup —
+//! the recovered dataset is bit-identical to the pre-restart one.
+//!
+//! # Record format
+//!
+//! File header: 4-byte magic `LVWL`, `u32` version (LE, like every
+//! other on-disk format here), then `u32 d` — the point dimensionality
+//! the log is bound to (a WAL can never be replayed against a base of
+//! a different width). Records follow back to back:
+//!
+//! ```text
+//! u64 seq        batch sequence number (0-based, strictly increasing)
+//! u32 rows       points in this batch (1 ..= MAX_WAL_BATCH_ROWS)
+//! rows × d × f32 row-major point payload (bit patterns)
+//! u32 checksum   FNV-1a over the payload bytes
+//! ```
+//!
+//! A crash mid-append leaves a torn tail; replay stops at the first
+//! short read, sequence gap, or checksum mismatch and reports how many
+//! complete batches survived — standard WAL semantics. The writer
+//! then continues appending *after* the surviving prefix (the file is
+//! truncated to it on open), so one torn record never poisons the log;
+//! a *failed* append likewise rolls the file back to the last complete
+//! record before surfacing the error (see [`WalWriter::append`]).
+
+use crate::data::formats::binary::{check_magic, read_u32, read_u64};
+use crate::data::matrix::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// WAL file magic.
+pub const MAGIC: &[u8; 4] = b"LVWL";
+/// WAL format version.
+pub const VERSION: u32 = 1;
+/// Cap on rows per WAL record (a lying length prefix must not drive an
+/// unbounded allocation; the server's per-request insert cap is far
+/// smaller).
+pub const MAX_WAL_BATCH_ROWS: usize = 1 << 20;
+
+/// FNV-1a over `bytes` — cheap, dependency-free corruption detection
+/// for the torn-tail case (not an integrity MAC).
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x01000193);
+    }
+    h
+}
+
+/// The surviving content of a WAL file: complete batches only.
+#[derive(Clone, Debug, Default)]
+pub struct WalContents {
+    /// Replayable batches, in append order; every row has the log's
+    /// declared dimensionality.
+    pub batches: Vec<Matrix>,
+    /// Total rows across `batches`.
+    pub rows: usize,
+    /// Byte offset just past the last complete record — the append
+    /// position for a writer resuming this log.
+    pub valid_bytes: u64,
+    /// True when a torn/corrupt tail was detected (and ignored).
+    pub torn_tail: bool,
+}
+
+/// Read every complete batch from the WAL at `path`, validating
+/// sequence numbers, shapes and checksums. `d` is the dimensionality
+/// the caller's base data has; a WAL header disagreeing with it fails
+/// loudly (stale checkpoint directory). A missing file is an empty log.
+pub fn read_wal(path: &Path, d: usize) -> Result<WalContents> {
+    let f = match std::fs::File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(WalContents { valid_bytes: 0, ..Default::default() })
+        }
+        Err(e) => return Err(e).with_context(|| format!("open {}", path.display())),
+    };
+    // A crash between create and header write leaves a short file;
+    // treat it as an empty (torn) log rather than a parse error.
+    let len = f.metadata().map(|m| m.len()).unwrap_or(0);
+    if len < header_bytes() {
+        return Ok(WalContents { valid_bytes: 0, torn_tail: len > 0, ..Default::default() });
+    }
+    let mut r = BufReader::new(f);
+    check_magic(&mut r, MAGIC, VERSION, path)?;
+    let wal_d = read_u32(&mut r)? as usize;
+    if wal_d != d {
+        bail!(
+            "{}: WAL holds {wal_d}-dimensional points, base data is {d}-dimensional — \
+             stale checkpoint directory?",
+            path.display()
+        );
+    }
+    let mut out = WalContents { valid_bytes: header_bytes(), ..Default::default() };
+    let mut payload: Vec<u8> = Vec::new();
+    loop {
+        // Each field read is allowed to hit EOF (torn tail) — only a
+        // *complete* record advances `valid_bytes`.
+        let Ok(seq) = read_u64(&mut r) else {
+            break;
+        };
+        let Ok(rows) = read_u32(&mut r) else {
+            out.torn_tail = true;
+            break;
+        };
+        let rows = rows as usize;
+        if seq != out.batches.len() as u64 || rows == 0 || rows > MAX_WAL_BATCH_ROWS {
+            out.torn_tail = true;
+            break;
+        }
+        payload.clear();
+        payload.resize(rows * d * 4, 0);
+        if r.read_exact(&mut payload).is_err() {
+            out.torn_tail = true;
+            break;
+        }
+        let Ok(want_sum) = read_u32(&mut r) else {
+            out.torn_tail = true;
+            break;
+        };
+        if fnv1a(&payload) != want_sum {
+            out.torn_tail = true;
+            break;
+        }
+        let vals: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|b| f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])))
+            .collect();
+        out.rows += rows;
+        out.batches.push(Matrix::from_vec(vals, rows, d));
+        out.valid_bytes += 8 + 4 + rows as u64 * d as u64 * 4 + 4;
+    }
+    Ok(out)
+}
+
+/// Bytes of the fixed WAL header (magic + version + dimensionality).
+fn header_bytes() -> u64 {
+    4 + 4 + 4
+}
+
+/// Appending writer over a WAL file. Opening replays/validates the
+/// existing log (if any), truncates away a torn tail, and positions at
+/// the end; [`WalWriter::append`] then durably records one batch per
+/// call — the whole record is written with one `write_all` and
+/// `sync_data` **must succeed before the append returns `Ok`**, so an
+/// acknowledged insert survives a process kill or power loss.
+///
+/// A *failed* append rolls the file back to the end of the last
+/// complete record before returning the error: a transient I/O failure
+/// (e.g. `ENOSPC` mid-write) must not leave partial bytes that would
+/// make replay stop early and silently drop *later, acknowledged*
+/// records. If even the rollback fails, the writer poisons itself and
+/// refuses further appends instead of corrupting the log.
+pub struct WalWriter {
+    f: std::fs::File,
+    path: PathBuf,
+    d: usize,
+    next_seq: u64,
+    /// Byte offset just past the last durably recorded record.
+    valid_bytes: u64,
+    /// Set when a failed append could not be rolled back; the log tail
+    /// state is unknown, so appending more would risk corruption.
+    poisoned: bool,
+}
+
+impl WalWriter {
+    /// Open (or create) the WAL at `path` for `d`-dimensional points.
+    /// Returns the writer positioned after the surviving prefix plus
+    /// that prefix's contents (the caller replays them into its state).
+    pub fn open(path: &Path, d: usize) -> Result<(WalWriter, WalContents)> {
+        let contents = read_wal(path, d)?;
+        let mut f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let valid_bytes = if contents.valid_bytes < header_bytes() {
+            // Fresh (or header-torn) log: start it over.
+            f.set_len(0).with_context(|| format!("truncate {}", path.display()))?;
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&(d as u32).to_le_bytes())?;
+            f.sync_data()
+                .with_context(|| format!("sync WAL header {}", path.display()))?;
+            header_bytes()
+        } else {
+            // Drop any torn tail so the resumed log is a clean prefix.
+            f.set_len(contents.valid_bytes)
+                .with_context(|| format!("truncate {}", path.display()))?;
+            contents.valid_bytes
+        };
+        f.seek(SeekFrom::End(0))?;
+        let next_seq = contents.batches.len() as u64;
+        Ok((
+            WalWriter {
+                f,
+                path: path.to_path_buf(),
+                d,
+                next_seq,
+                valid_bytes,
+                poisoned: false,
+            },
+            contents,
+        ))
+    }
+
+    /// Durably append one batch of points (shape-checked against the
+    /// log's dimensionality). Returns the record's sequence number
+    /// only after the record is written **and** fsync'd; on failure
+    /// the file is rolled back to the previous record boundary.
+    pub fn append(&mut self, batch: &Matrix) -> Result<u64> {
+        if self.poisoned {
+            bail!(
+                "{}: WAL writer disabled by an earlier unrecoverable I/O error",
+                self.path.display()
+            );
+        }
+        if batch.d() != self.d {
+            bail!(
+                "{}: appending {}-dimensional rows to a {}-dimensional WAL",
+                self.path.display(),
+                batch.d(),
+                self.d
+            );
+        }
+        if batch.n() == 0 || batch.n() > MAX_WAL_BATCH_ROWS {
+            bail!("{}: WAL batch of {} rows out of range", self.path.display(), batch.n());
+        }
+        let seq = self.next_seq;
+        // Serialize the whole record up front so it hits the file in a
+        // single write_all — no partial-record state to manage in the
+        // common path.
+        let mut record: Vec<u8> = Vec::with_capacity(16 + batch.n() * self.d * 4);
+        record.extend_from_slice(&seq.to_le_bytes());
+        record.extend_from_slice(&(batch.n() as u32).to_le_bytes());
+        let payload_start = record.len();
+        for &v in batch.as_slice() {
+            record.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        let checksum = fnv1a(&record[payload_start..]);
+        record.extend_from_slice(&checksum.to_le_bytes());
+
+        let wrote = self.f.write_all(&record).and_then(|_| self.f.sync_data());
+        match wrote {
+            Ok(()) => {
+                self.valid_bytes += record.len() as u64;
+                self.next_seq += 1;
+                Ok(seq)
+            }
+            Err(e) => {
+                // Roll back to the last complete record so this failure
+                // cannot make replay drop later successful appends.
+                let rolled = self
+                    .f
+                    .set_len(self.valid_bytes)
+                    .and_then(|_| self.f.seek(SeekFrom::End(0)));
+                if rolled.is_err() {
+                    self.poisoned = true;
+                }
+                Err(e).with_context(|| {
+                    format!(
+                        "{}: WAL append of batch {seq} failed{}",
+                        self.path.display(),
+                        if self.poisoned { " (writer disabled: rollback also failed)" } else { "" }
+                    )
+                })
+            }
+        }
+    }
+
+    /// Batches durably recorded so far (surviving prefix + appends).
+    pub fn batches(&self) -> u64 {
+        self.next_seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("largevis_wal_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn batch(vals: &[f32], d: usize) -> Matrix {
+        Matrix::from_vec(vals.to_vec(), vals.len() / d, d)
+    }
+
+    #[test]
+    fn roundtrip_bit_identical() {
+        let p = tmp("rt.wal");
+        std::fs::remove_file(&p).ok();
+        let b1 = batch(&[1.0, -2.5, 3.25, f32::MIN_POSITIVE, 0.0, -0.0], 3);
+        let b2 = batch(&[9.0, 8.0, 7.0], 3);
+        {
+            let (mut w, prior) = WalWriter::open(&p, 3).unwrap();
+            assert_eq!(prior.batches.len(), 0);
+            assert_eq!(w.append(&b1).unwrap(), 0);
+            assert_eq!(w.append(&b2).unwrap(), 1);
+        }
+        let back = read_wal(&p, 3).unwrap();
+        assert!(!back.torn_tail);
+        assert_eq!(back.batches.len(), 2);
+        assert_eq!(back.rows, 3);
+        // Bit-identical payloads (−0.0 and subnormals preserved).
+        for (a, b) in [(&b1, &back.batches[0]), (&b2, &back.batches[1])] {
+            assert_eq!(a.n(), b.n());
+            for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn missing_file_is_empty_log() {
+        let c = read_wal(&tmp("nope.wal"), 4).unwrap();
+        assert_eq!(c.batches.len(), 0);
+        assert!(!c.torn_tail);
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let p = tmp("dim.wal");
+        std::fs::remove_file(&p).ok();
+        {
+            let (mut w, _) = WalWriter::open(&p, 2).unwrap();
+            w.append(&batch(&[1.0, 2.0], 2)).unwrap();
+            assert!(w.append(&batch(&[1.0, 2.0, 3.0], 3)).is_err());
+        }
+        let err = format!("{:#}", read_wal(&p, 3).unwrap_err());
+        assert!(err.contains("2-dimensional"), "{err}");
+    }
+
+    #[test]
+    fn torn_tail_ignored_and_truncated_on_reopen() {
+        let p = tmp("torn.wal");
+        std::fs::remove_file(&p).ok();
+        {
+            let (mut w, _) = WalWriter::open(&p, 2).unwrap();
+            w.append(&batch(&[1.0, 2.0], 2)).unwrap();
+            w.append(&batch(&[3.0, 4.0, 5.0, 6.0], 2)).unwrap();
+        }
+        let full = std::fs::metadata(&p).unwrap().len();
+        // Chop mid-record: the second batch loses its checksum.
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&p)
+            .unwrap()
+            .set_len(full - 3)
+            .unwrap();
+        let c = read_wal(&p, 2).unwrap();
+        assert!(c.torn_tail);
+        assert_eq!(c.batches.len(), 1);
+        assert_eq!(c.rows, 1);
+        // Reopening truncates the torn tail and appends after it with
+        // the right sequence number.
+        {
+            let (mut w, prior) = WalWriter::open(&p, 2).unwrap();
+            assert_eq!(prior.batches.len(), 1);
+            assert_eq!(w.append(&batch(&[7.0, 8.0], 2)).unwrap(), 1);
+        }
+        let c = read_wal(&p, 2).unwrap();
+        assert!(!c.torn_tail);
+        assert_eq!(c.batches.len(), 2);
+        assert_eq!(c.batches[1].row(0), &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn corrupt_payload_detected() {
+        let p = tmp("crc.wal");
+        std::fs::remove_file(&p).ok();
+        {
+            let (mut w, _) = WalWriter::open(&p, 2).unwrap();
+            w.append(&batch(&[1.0, 2.0], 2)).unwrap();
+        }
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Flip a payload bit (first value's low byte, after the
+        // 12-byte header + 8-byte seq + 4-byte row count).
+        let off = 12 + 8 + 4;
+        bytes[off] ^= 1;
+        std::fs::write(&p, &bytes).unwrap();
+        let c = read_wal(&p, 2).unwrap();
+        assert!(c.torn_tail, "bit flip not caught by checksum");
+        assert_eq!(c.batches.len(), 0);
+    }
+}

@@ -62,19 +62,7 @@ pub fn explore_once(data: &Matrix, graph: &KnnGraph, cfg: &LargeVisKnnConfig) ->
                 s.seen.insert(j);
             }
             // Collect the distinct neighbor-of-neighbor candidates.
-            let mut budget = cfg.max_candidates;
-            'outer: for &(j, _) in &graph.neighbors[i] {
-                for &(l, _) in &graph.neighbors[j as usize] {
-                    if !s.seen.insert(l) {
-                        continue;
-                    }
-                    if budget == 0 {
-                        break 'outer;
-                    }
-                    budget -= 1;
-                    s.cand.push(l);
-                }
-            }
+            collect_candidates(graph, i, cfg.max_candidates, s);
             // One batched SIMD evaluation of the whole candidate set.
             kernels::sqdist_batch(q, data, &s.cand, &mut s.dist);
             for (&l, &d) in s.cand.iter().zip(s.dist.iter()) {
@@ -86,6 +74,40 @@ pub fn explore_once(data: &Matrix, graph: &KnnGraph, cfg: &LargeVisKnnConfig) ->
         },
     );
     KnnGraph { neighbors, k }
+}
+
+/// Collect node `i`'s distinct neighbor-of-neighbor candidates into
+/// `s.cand`, at most `max_candidates` of them (`s.seen` must hold the
+/// current generation with `i` and its direct neighbors already
+/// marked — [`ScanScratch::begin`] plus the heap-seeding loop).
+///
+/// The budget check runs *before* a candidate is marked visited: the
+/// previous order inserted the candidate that exhausted the budget
+/// into `seen` and then broke out, so N+1 candidates were marked
+/// visited while only N were ever scored — the exhausting candidate
+/// was silently dropped for the whole query (off-by-one). Now the
+/// visited set and the scored set stay in lockstep: exactly
+/// `min(max_candidates, available)` candidates are marked and scored.
+pub(crate) fn collect_candidates(
+    graph: &KnnGraph,
+    i: usize,
+    max_candidates: usize,
+    s: &mut ScanScratch,
+) {
+    let mut budget = max_candidates;
+    'outer: for &(j, _) in &graph.neighbors[i] {
+        for &(l, _) in &graph.neighbors[j as usize] {
+            if s.seen.contains(l) {
+                continue;
+            }
+            if budget == 0 {
+                break 'outer;
+            }
+            s.seen.insert(l);
+            budget -= 1;
+            s.cand.push(l);
+        }
+    }
 }
 
 /// The full LargeVis KNN pipeline: small RP-forest, then `iters`
@@ -156,6 +178,44 @@ mod tests {
         let g = largevis_knn(&m, 15, &LargeVisKnnConfig::default());
         g.check_invariants().unwrap();
         assert!(g.neighbors.iter().all(|nb| nb.len() == 15));
+    }
+
+    #[test]
+    fn budget_exhaustion_marks_exactly_what_it_scores() {
+        use crate::knn::ScanScratch;
+        // Node 0's neighbors are 1 and 2; their lists fan out to 8
+        // distinct second-hop candidates (3..=10), in a known order.
+        let k = 5;
+        let mut g = KnnGraph::empty(11, k);
+        g.neighbors[0] = vec![(1, 0.1), (2, 0.2)];
+        g.neighbors[1] = vec![(3, 0.1), (4, 0.2), (5, 0.3), (6, 0.4), (0, 0.5)];
+        g.neighbors[2] = vec![(4, 0.1), (7, 0.2), (8, 0.3), (9, 0.4), (10, 0.5)];
+        let run = |budget: usize| -> (Vec<u32>, ScanScratch) {
+            let mut s = ScanScratch::new(11, k);
+            s.begin(k, 0);
+            for &(j, _) in &g.neighbors[0] {
+                s.seen.insert(j);
+            }
+            collect_candidates(&g, 0, budget, &mut s);
+            (s.cand.clone(), s)
+        };
+        // Unlimited: all 8 distinct candidates, duplicates (4) deduped.
+        let (all, _) = run(usize::MAX);
+        assert_eq!(all, vec![3, 4, 5, 6, 7, 8, 9, 10]);
+        // Budgeted: exactly `max_candidates` evaluated — and the
+        // candidate that would exhaust the budget (7, the next distinct
+        // one) is NOT left marked visited-but-unscored, which is the
+        // off-by-one this test pins down.
+        for budget in 1..=7 {
+            let (cand, s) = run(budget);
+            assert_eq!(cand.len(), budget, "budget {budget}");
+            assert_eq!(cand, all[..budget], "budget {budget}");
+            let first_unscored = all[budget];
+            assert!(
+                !s.seen.contains(first_unscored),
+                "budget {budget}: candidate {first_unscored} marked visited but never scored"
+            );
+        }
     }
 
     #[test]

@@ -148,21 +148,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.grid = args.get_or("grid", cfg.grid)?;
     cfg.tile_max_points = args.get_or("tile-max-points", cfg.tile_max_points)?;
     cfg.max_body_bytes = args.get_or("max-body-bytes", cfg.max_body_bytes)?;
+    if args.has_flag("read-only") {
+        cfg.read_only = true;
+    }
+    cfg.insert_samples = args.get_or("insert-samples", cfg.insert_samples)?;
+    cfg.refine_samples = args.get_or("refine-samples", cfg.refine_samples)?;
+    cfg.refine_interval_ms = args.get_or("refine-interval-ms", cfg.refine_interval_ms)?;
+    cfg.keep_alive_max = args.get_or("keep-alive-max", cfg.keep_alive_max)?;
+    cfg.idle_timeout_ms = args.get_or("idle-timeout-ms", cfg.idle_timeout_ms)?;
 
     let state = ServerState::load(cfg)?;
-    eprintln!(
-        "[serve] loaded {}: {} points (d={}), layout dim {}, knn k={}, {} graph edges",
-        state.dataset,
-        state.data.n(),
-        state.data.d(),
-        state.layout.d(),
-        state.knn.k,
-        state.graph_edges,
-    );
+    {
+        let snap = state.snapshot();
+        eprintln!(
+            "[serve] loaded {}: {} points (d={}, {} recovered from WAL), layout dim {}, \
+             knn k={}, {} graph edges, epoch {}",
+            state.dataset,
+            snap.data.n(),
+            snap.data.d(),
+            snap.data.n() - state.base_n,
+            snap.layout.d(),
+            snap.knn.k,
+            state.graph_edges,
+            snap.epoch,
+        );
+    }
     let server = Server::bind(state)?;
     eprintln!(
-        "[serve] listening on http://{} (POST /embed, POST /knn, GET /viewport, \
-         GET /healthz, GET /metrics)",
+        "[serve] listening on http://{} (POST /embed, POST /knn, POST /insert, \
+         POST /insert_batch, GET /viewport, GET /healthz, GET /metrics)",
         server.local_addr()?
     );
     server.run()

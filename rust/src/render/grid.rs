@@ -12,6 +12,14 @@
 //! Coordinates are copied next to the ids so a query never touches the
 //! layout matrix — the index is self-contained and can be shared
 //! read-only across server worker threads.
+//!
+//! The live-serving path grows the layout while the index is in use:
+//! [`GridIndex::insert`] appends new points to a small overflow list
+//! (scanned linearly per query — its length is bounded by the rebuild
+//! threshold, so query cost stays bounded) and re-buckets the whole
+//! CSR only when the overflow exceeds [`GridIndex::rebuild_threshold`].
+//! Per-epoch cost is therefore O(batch) amortized, not O(N)
+//! re-bucketing on every insert batch.
 
 use crate::data::matrix::Matrix;
 
@@ -36,6 +44,9 @@ pub struct GridIndex {
     xs: Vec<f32>,
     /// `y` coordinate of `ids[i]`'s point.
     ys: Vec<f32>,
+    /// Points inserted since the last (re)build, scanned linearly by
+    /// every query; bounded by [`GridIndex::rebuild_threshold`].
+    overflow: Vec<GridPoint>,
 }
 
 impl GridIndex {
@@ -45,15 +56,20 @@ impl GridIndex {
     /// point, or all points coincident) still produce a valid index.
     pub fn build(layout: &Matrix, cells: usize) -> GridIndex {
         assert!(layout.d() >= 2, "grid index needs a 2D+ layout");
-        let g = cells.max(1);
-        let n = layout.n();
+        let pts: Vec<GridPoint> =
+            (0..layout.n()).map(|i| (i as u32, layout.row(i)[0], layout.row(i)[1])).collect();
+        GridIndex::rebucket(cells.max(1), pts)
+    }
+
+    /// Bucket `pts` into a fresh `g × g` CSR grid (bounds recomputed).
+    fn rebucket(g: usize, pts: Vec<GridPoint>) -> GridIndex {
+        let n = pts.len();
         let (mut xmin, mut xmax, mut ymin, mut ymax) = (f32::MAX, f32::MIN, f32::MAX, f32::MIN);
-        for i in 0..n {
-            let r = layout.row(i);
-            xmin = xmin.min(r[0]);
-            xmax = xmax.max(r[0]);
-            ymin = ymin.min(r[1]);
-            ymax = ymax.max(r[1]);
+        for &(_, x, y) in &pts {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
         }
         if n == 0 {
             (xmin, xmax, ymin, ymax) = (0.0, 1.0, 0.0, 1.0);
@@ -69,9 +85,8 @@ impl GridIndex {
 
         // Counting sort into CSR: count per cell, prefix-sum, scatter.
         let mut counts = vec![0u32; g * g + 1];
-        for i in 0..n {
-            let r = layout.row(i);
-            counts[cell_of(r[0], r[1]) + 1] += 1;
+        for &(_, x, y) in &pts {
+            counts[cell_of(x, y) + 1] += 1;
         }
         for c in 1..counts.len() {
             counts[c] += counts[c - 1];
@@ -81,26 +96,74 @@ impl GridIndex {
         let mut ids = vec![0u32; n];
         let mut xs = vec![0f32; n];
         let mut ys = vec![0f32; n];
-        for i in 0..n {
-            let r = layout.row(i);
-            let c = cell_of(r[0], r[1]);
+        for &(id, x, y) in &pts {
+            let c = cell_of(x, y);
             let slot = cursor[c] as usize;
             cursor[c] += 1;
-            ids[slot] = i as u32;
-            xs[slot] = r[0];
-            ys[slot] = r[1];
+            ids[slot] = id;
+            xs[slot] = x;
+            ys[slot] = y;
         }
-        GridIndex { g, bounds: (xmin, ymin, xmax, ymax), cell_w, cell_h, starts, ids, xs, ys }
+        GridIndex {
+            g,
+            bounds: (xmin, ymin, xmax, ymax),
+            cell_w,
+            cell_h,
+            starts,
+            ids,
+            xs,
+            ys,
+            overflow: Vec::new(),
+        }
     }
 
-    /// Number of indexed points.
+    /// Overflow size that triggers a full re-bucketing on the next
+    /// [`GridIndex::insert`]: 1/8 of the bucketed points, floored at
+    /// 256 so small indexes don't rebuild per insert. Until then a
+    /// query pays one extra linear scan of at most this many points.
+    pub fn rebuild_threshold(&self) -> usize {
+        (self.ids.len() / 8).max(256)
+    }
+
+    /// Insert one point incrementally. The point lands in the overflow
+    /// list (O(1)); once the overflow exceeds
+    /// [`GridIndex::rebuild_threshold`] the whole index re-buckets,
+    /// folding the overflow in and re-fitting the bounds. Returns
+    /// `true` when this call triggered a rebuild.
+    pub fn insert(&mut self, id: u32, x: f32, y: f32) -> bool {
+        self.overflow.push((id, x, y));
+        if self.overflow.len() > self.rebuild_threshold() {
+            self.rebuild();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Fold the overflow into the CSR buckets now (bounds re-fitted).
+    pub fn rebuild(&mut self) {
+        let mut pts: Vec<GridPoint> =
+            Vec::with_capacity(self.ids.len() + self.overflow.len());
+        for i in 0..self.ids.len() {
+            pts.push((self.ids[i], self.xs[i], self.ys[i]));
+        }
+        pts.append(&mut self.overflow);
+        *self = GridIndex::rebucket(self.g, pts);
+    }
+
+    /// Number of points awaiting the next re-bucketing.
+    pub fn overflow_len(&self) -> usize {
+        self.overflow.len()
+    }
+
+    /// Number of indexed points (bucketed + overflow).
     pub fn len(&self) -> usize {
-        self.ids.len()
+        self.ids.len() + self.overflow.len()
     }
 
     /// True if the index holds no points.
     pub fn is_empty(&self) -> bool {
-        self.ids.is_empty()
+        self.ids.is_empty() && self.overflow.is_empty()
     }
 
     /// Layout bounds as `(xmin, ymin, xmax, ymax)`.
@@ -115,9 +178,19 @@ impl GridIndex {
     /// assert the cost bound.
     pub fn query(&self, x0: f32, y0: f32, x1: f32, y1: f32, out: &mut Vec<GridPoint>) -> usize {
         out.clear();
+        // The overflow list is scanned on every query — it may hold
+        // points outside the bucketed bounds, so it is checked even
+        // when the rectangle misses the grid entirely. Its length is
+        // bounded by the rebuild threshold, so this stays O(threshold).
+        let mut examined = self.overflow.len();
+        for &(id, x, y) in &self.overflow {
+            if x >= x0 && x <= x1 && y >= y0 && y <= y1 {
+                out.push((id, x, y));
+            }
+        }
         let (bx0, by0, bx1, by1) = self.bounds;
         if self.ids.is_empty() || x1 < bx0 || x0 > bx1 || y1 < by0 || y0 > by1 {
-            return 0;
+            return examined;
         }
         let g = self.g;
         let cell_range = |lo: f32, hi: f32, min: f32, cell: f32| -> (usize, usize) {
@@ -127,7 +200,6 @@ impl GridIndex {
         };
         let (cx0, cx1) = cell_range(x0, x1, bx0, self.cell_w);
         let (cy0, cy1) = cell_range(y0, y1, by0, self.cell_h);
-        let mut examined = 0usize;
         for cy in cy0..=cy1 {
             for cx in cx0..=cx1 {
                 let c = cy * g + cx;
@@ -211,6 +283,72 @@ mod tests {
         let empty = GridIndex::build(&Matrix::zeros(0, 2), 8);
         assert!(empty.is_empty());
         assert_eq!(empty.query(-1.0, -1.0, 1.0, 1.0, &mut out), 0);
+    }
+
+    #[test]
+    fn incremental_insert_visible_and_bounded() {
+        let m = uniform_layout(5000, 13);
+        let mut idx = GridIndex::build(&m, 32);
+        let threshold = idx.rebuild_threshold();
+        // Insert points inside and *outside* the original bounds; all
+        // must be query-visible immediately, without a rebuild.
+        let mut rng = Rng::new(99);
+        let mut inserted: Vec<(u32, f32, f32)> = Vec::new();
+        for i in 0..threshold / 2 {
+            let (x, y) = (rng.range_f32(-15.0, 15.0), rng.range_f32(-15.0, 15.0));
+            let rebuilt = idx.insert((5000 + i) as u32, x, y);
+            assert!(!rebuilt, "rebuild before the threshold");
+            inserted.push(((5000 + i) as u32, x, y));
+        }
+        assert_eq!(idx.len(), 5000 + inserted.len());
+        assert_eq!(idx.overflow_len(), inserted.len());
+        let mut out = Vec::new();
+        let examined = idx.query(-20.0, -20.0, 20.0, 20.0, &mut out);
+        assert_eq!(out.len(), 5000 + inserted.len(), "inserted points missing from query");
+        assert!(examined <= 5000 + inserted.len());
+        // A tile that misses the grid still surfaces overflow points in
+        // it, and examines at most the overflow.
+        let far = idx.query(100.0, 100.0, 200.0, 200.0, &mut out);
+        assert!(far <= idx.overflow_len());
+
+        // The narrow-tile cost bound survives insertion: bucketed cells
+        // plus at most the (threshold-bounded) overflow.
+        let examined = idx.query(0.0, 0.0, 1.0, 1.0, &mut out);
+        assert!(
+            examined < 5000 / 4 + idx.overflow_len(),
+            "examined {examined} — culling lost after inserts"
+        );
+    }
+
+    #[test]
+    fn threshold_triggers_rebuild_and_refits_bounds() {
+        let m = uniform_layout(100, 17);
+        let mut idx = GridIndex::build(&m, 8);
+        let threshold = idx.rebuild_threshold();
+        let mut rng = Rng::new(7);
+        let mut rebuilds = 0;
+        let total = threshold + 10;
+        for i in 0..total {
+            // Outside the original [-10, 10] bounds on purpose.
+            let (x, y) = (rng.range_f32(20.0, 30.0), rng.range_f32(20.0, 30.0));
+            if idx.insert((100 + i) as u32, x, y) {
+                rebuilds += 1;
+            }
+        }
+        assert!(rebuilds >= 1, "no rebuild after {total} inserts (threshold {threshold})");
+        assert!(idx.overflow_len() <= threshold);
+        assert_eq!(idx.len(), 100 + total);
+        // Bounds re-fitted to cover the out-of-range inserts.
+        let (_, _, bx1, by1) = idx.bounds();
+        assert!(bx1 >= 20.0 && by1 >= 20.0, "bounds not refitted: {:?}", idx.bounds());
+        // Every point still query-visible exactly once.
+        let mut out = Vec::new();
+        idx.query(-50.0, -50.0, 50.0, 50.0, &mut out);
+        assert_eq!(out.len(), 100 + total);
+        let mut ids: Vec<u32> = out.iter().map(|&(id, _, _)| id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 100 + total, "duplicate or lost ids after rebuild");
     }
 
     #[test]

@@ -1,23 +1,35 @@
 //! Endpoint handlers and request routing for the query server.
 //!
-//! Every handler is a pure function of `(&Request, &ServerState)` —
-//! the base artifacts are never mutated, so handlers run concurrently
-//! without locks (metrics counters aside). Endpoints:
+//! Every read handler is a pure function of `(&Request, &ServerState,
+//! &Snapshot)` — the snapshot is immutable, so read handlers run
+//! concurrently without locks (metrics counters aside) and every
+//! response is internally consistent with exactly one epoch. Write
+//! handlers (`/insert`, `/insert_batch`) go through
+//! [`ServerState::insert`], which serializes on the writer mutex and
+//! publishes a new epoch without ever blocking readers. Endpoints:
 //!
 //! | method | path        | body / params                     | returns |
 //! |--------|-------------|-----------------------------------|---------|
 //! | POST   | `/embed`    | `{"points": [[f; d]; n], "k"?, "samples"?}` | projected positions + base neighbors (JSON) |
 //! | POST   | `/knn`      | `{"point": [f; d], "k"?}`         | nearest base ids + squared distances (JSON) |
+//! | POST   | `/insert`   | `{"point": [f; d]}`               | assigned id + publishing epoch (JSON) |
+//! | POST   | `/insert_batch` | `{"points": [[f; d]; n]}`     | assigned ids + publishing epoch (JSON) |
 //! | GET    | `/viewport` | `x0,y0,x1,y1` (`size` optional)   | SVG tile of the layout region |
-//! | GET    | `/healthz`  | —                                 | dataset/shape summary (JSON) |
+//! | GET    | `/healthz`  | —                                 | dataset/shape/epoch summary (JSON) |
 //! | GET    | `/metrics`  | —                                 | request counters (JSON) |
 //!
+//! JSON responses that describe the layout carry `"epoch"` and
+//! `"points"` so clients (and the concurrency fuzz test) can check
+//! cross-field consistency; `/viewport` appends the same pair as a
+//! trailing XML comment.
+//!
 //! Malformed input yields `400` with a JSON `{"error": ...}` body;
-//! unknown paths `404`; wrong methods on known paths `405`.
+//! unknown paths `404`; wrong methods on known paths `405`; writes to
+//! a `--read-only` server `403`.
 
 use crate::render::{viewport_svg, ScatterStyle};
 use crate::serve::http::{Request, Response};
-use crate::serve::state::ServerState;
+use crate::serve::state::{ServerState, Snapshot};
 use crate::util::heap::BoundedMaxHeap;
 use crate::util::json::Json;
 use crate::vis::incremental;
@@ -29,18 +41,24 @@ use std::fmt::Write as _;
 pub const MAX_EMBED_POINTS: usize = 4096;
 /// Cap on per-point SGD steps a request may ask for.
 pub const MAX_EMBED_SAMPLES: usize = 100_000;
+/// Cap on points per `/insert_batch` request (bounds one writer
+/// critical section and one WAL record).
+pub const MAX_INSERT_POINTS: usize = 4096;
 
 /// Dispatch a request to its handler, maintaining the counters.
-pub fn route(req: &Request, st: &ServerState) -> Response {
+/// `snap` is the epoch the whole request is answered from.
+pub fn route(req: &Request, st: &ServerState, snap: &Snapshot) -> Response {
     st.count("serve.requests", 1.0);
     let resp = match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/embed") => embed(req, st),
-        ("POST", "/knn") => knn(req, st),
-        ("GET", "/viewport") => viewport(req, st),
-        ("GET", "/healthz") => healthz(st),
+        ("POST", "/embed") => embed(req, st, snap),
+        ("POST", "/knn") => knn(req, st, snap),
+        ("POST", "/insert") => insert(req, st, snap, false),
+        ("POST", "/insert_batch") => insert(req, st, snap, true),
+        ("GET", "/viewport") => viewport(req, st, snap),
+        ("GET", "/healthz") => healthz(st, snap),
         ("GET", "/metrics") => Response::json(st.metrics_json()),
         ("GET", "/") => index(),
-        (_, "/embed" | "/knn") => Response::error(405, "use POST"),
+        (_, "/embed" | "/knn" | "/insert" | "/insert_batch") => Response::error(405, "use POST"),
         (_, "/viewport" | "/healthz" | "/metrics" | "/") => Response::error(405, "use GET"),
         _ => Response::error(404, "no such endpoint (GET / lists them)"),
     };
@@ -53,29 +71,37 @@ pub fn route(req: &Request, st: &ServerState) -> Response {
 /// `GET /` — endpoint listing.
 fn index() -> Response {
     Response::json(
-        "{\"endpoints\":[\"POST /embed\",\"POST /knn\",\"GET /viewport\",\
-         \"GET /healthz\",\"GET /metrics\"]}"
+        "{\"endpoints\":[\"POST /embed\",\"POST /knn\",\"POST /insert\",\
+         \"POST /insert_batch\",\"GET /viewport\",\"GET /healthz\",\"GET /metrics\"]}"
             .to_string(),
     )
 }
 
-/// `GET /healthz` — dataset and artifact summary.
-fn healthz(st: &ServerState) -> Response {
+/// `GET /healthz` — dataset, artifact and epoch summary.
+fn healthz(st: &ServerState, snap: &Snapshot) -> Response {
     let mut o = BTreeMap::new();
     o.insert("status".to_string(), Json::Str("ok".to_string()));
     o.insert("dataset".to_string(), Json::Str(st.dataset.clone()));
-    o.insert("points".to_string(), Json::Num(st.data.n() as f64));
-    o.insert("data_dim".to_string(), Json::Num(st.data.d() as f64));
-    o.insert("layout_dim".to_string(), Json::Num(st.layout.d() as f64));
-    o.insert("knn_k".to_string(), Json::Num(st.knn.k as f64));
+    o.insert("epoch".to_string(), Json::Num(snap.epoch as f64));
+    o.insert("points".to_string(), Json::Num(snap.data.n() as f64));
+    o.insert("base_points".to_string(), Json::Num(snap.base_n as f64));
+    o.insert(
+        "inserted".to_string(),
+        Json::Num((snap.data.n() - snap.base_n) as f64),
+    );
+    o.insert("data_dim".to_string(), Json::Num(snap.data.d() as f64));
+    o.insert("layout_dim".to_string(), Json::Num(snap.layout.d() as f64));
+    o.insert("knn_k".to_string(), Json::Num(snap.knn.k as f64));
     o.insert("graph_edges".to_string(), Json::Num(st.graph_edges as f64));
-    o.insert("labeled".to_string(), Json::Bool(st.labels.is_some()));
+    o.insert("labeled".to_string(), Json::Bool(snap.labels.is_some()));
+    o.insert("read_only".to_string(), Json::Bool(st.cfg.read_only));
     Response::json(Json::Obj(o).to_string_compact())
 }
 
 /// `POST /embed` — out-of-sample projection of new high-dim points
-/// against the frozen base layout (see [`incremental::project`]).
-fn embed(req: &Request, st: &ServerState) -> Response {
+/// against the snapshot's (frozen-for-this-request) layout (see
+/// [`incremental::project`]). Unlike `/insert`, nothing is retained.
+fn embed(req: &Request, st: &ServerState, snap: &Snapshot) -> Response {
     st.count("embed.requests", 1.0);
     let json = match parse_body(req) {
         Ok(j) => j,
@@ -84,7 +110,7 @@ fn embed(req: &Request, st: &ServerState) -> Response {
     let Some(points) = json.get("points") else {
         return Response::error(400, "missing \"points\"");
     };
-    let pts = match points_matrix(points, st.data.d()) {
+    let pts = match points_matrix(points, snap.data.d()) {
         Ok(m) => m,
         Err(msg) => return Response::error(400, &msg),
     };
@@ -102,14 +128,22 @@ fn embed(req: &Request, st: &ServerState) -> Response {
     let k = json
         .get("k")
         .and_then(|j| j.as_usize())
-        .unwrap_or_else(|| st.embed_k())
-        .clamp(1, st.data.n());
+        .unwrap_or_else(|| st.embed_k(snap))
+        .clamp(1, snap.data.n());
 
-    let (pos, neighbors) = incremental::project(&st.data, &st.layout, &st.vis, &pts, k, samples);
+    let (pos, neighbors) =
+        incremental::project(&snap.data, &snap.layout, &st.vis, &pts, k, samples);
     st.count("embed.points", pos.n() as f64);
 
-    let mut body = String::with_capacity(64 + pos.n() * (pos.d() * 16 + k * 8));
-    let _ = write!(body, "{{\"n\":{},\"dim\":{},\"positions\":[", pos.n(), pos.d());
+    let mut body = String::with_capacity(96 + pos.n() * (pos.d() * 16 + k * 8));
+    let _ = write!(
+        body,
+        "{{\"epoch\":{},\"points\":{},\"n\":{},\"dim\":{},\"positions\":[",
+        snap.epoch,
+        snap.data.n(),
+        pos.n(),
+        pos.d()
+    );
     for r in 0..pos.n() {
         if r > 0 {
             body.push(',');
@@ -134,9 +168,10 @@ fn embed(req: &Request, st: &ServerState) -> Response {
     Response::json(body)
 }
 
-/// `POST /knn` — exact K nearest base points of one query vector via
-/// the batched distance kernel.
-fn knn(req: &Request, st: &ServerState) -> Response {
+/// `POST /knn` — exact K nearest points of one query vector via the
+/// batched distance kernel, over the snapshot's full (base + inserted)
+/// dataset.
+fn knn(req: &Request, st: &ServerState, snap: &Snapshot) -> Response {
     st.count("knn.requests", 1.0);
     let json = match parse_body(req) {
         Ok(j) => j,
@@ -145,7 +180,7 @@ fn knn(req: &Request, st: &ServerState) -> Response {
     let Some(point) = json.get("point") else {
         return Response::error(400, "missing \"point\"");
     };
-    let q = match f32_array(point, st.data.d()) {
+    let q = match f32_array(point, snap.data.d()) {
         Ok(v) => v,
         Err(msg) => return Response::error(400, &msg),
     };
@@ -153,16 +188,22 @@ fn knn(req: &Request, st: &ServerState) -> Response {
         .get("k")
         .and_then(|j| j.as_usize())
         .unwrap_or(10)
-        .clamp(1, st.data.n());
+        .clamp(1, snap.data.n());
 
-    // One batched scan of the contiguous base matrix — the same
+    // One batched scan of the contiguous data matrix — the same
     // shared exact-KNN helper the insert/projection paths use.
     let mut dists: Vec<f32> = Vec::new();
     let mut heap = BoundedMaxHeap::new(k);
-    let nb = crate::kernels::nearest_k(&q, &st.data, k, &mut dists, &mut heap);
+    let nb = crate::kernels::nearest_k(&q, &snap.data, k, &mut dists, &mut heap);
 
-    let mut body = String::with_capacity(32 + nb.len() * 20);
-    let _ = write!(body, "{{\"k\":{},\"ids\":[", nb.len());
+    let mut body = String::with_capacity(64 + nb.len() * 20);
+    let _ = write!(
+        body,
+        "{{\"epoch\":{},\"points\":{},\"k\":{},\"ids\":[",
+        snap.epoch,
+        snap.data.n(),
+        nb.len()
+    );
     for (i, &(id, _)) in nb.iter().enumerate() {
         if i > 0 {
             body.push(',');
@@ -180,15 +221,70 @@ fn knn(req: &Request, st: &ServerState) -> Response {
     Response::json(body)
 }
 
+/// `POST /insert` / `POST /insert_batch` — durably append new points
+/// to the live layout. The batch form takes `{"points": [[f; d]; n]}`;
+/// the single form `{"point": [f; d]}`. The response's `epoch` is the
+/// first epoch whose snapshots contain the new ids.
+fn insert(req: &Request, st: &ServerState, snap: &Snapshot, batch: bool) -> Response {
+    st.count("insert.requests", 1.0);
+    if st.cfg.read_only {
+        return Response::error(403, "server is read-only (--read-only)");
+    }
+    let json = match parse_body(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let pts = if batch {
+        let Some(points) = json.get("points") else {
+            return Response::error(400, "missing \"points\"");
+        };
+        match points_matrix(points, snap.data.d()) {
+            Ok(m) => m,
+            Err(msg) => return Response::error(400, &msg),
+        }
+    } else {
+        let Some(point) = json.get("point") else {
+            return Response::error(400, "missing \"point\"");
+        };
+        match f32_array(point, snap.data.d()) {
+            Ok(v) => crate::data::matrix::Matrix::from_vec(v, 1, snap.data.d()),
+            Err(msg) => return Response::error(400, &msg),
+        }
+    };
+    if pts.n() > MAX_INSERT_POINTS {
+        return Response::error(
+            400,
+            &format!("{} points exceeds the per-request cap of {MAX_INSERT_POINTS}", pts.n()),
+        );
+    }
+    match st.insert(&pts) {
+        Ok((ids, epoch)) => {
+            st.count("insert.points", ids.len() as f64);
+            let mut body = String::with_capacity(48 + ids.len() * 10);
+            let _ = write!(body, "{{\"epoch\":{epoch},\"ids\":[");
+            for (i, id) in ids.iter().enumerate() {
+                if i > 0 {
+                    body.push(',');
+                }
+                let _ = write!(body, "{id}");
+            }
+            let total = ids.last().map(|&l| l + 1).unwrap_or(snap.data.n());
+            let _ = write!(body, "],\"points\":{total}}}");
+            Response::json(body)
+        }
+        Err(e) => Response::error(500, &format!("insert failed: {e:#}")),
+    }
+}
+
 /// `GET /viewport` — SVG tile of the layout region `[x0,x1]×[y0,y1]`,
-/// culled through the grid spatial index so the cost is bounded by the
-/// tile's own point count.
-fn viewport(req: &Request, st: &ServerState) -> Response {
+/// culled through the snapshot's grid index so the cost is bounded by
+/// the tile's own point count (plus the bounded insert overflow).
+fn viewport(req: &Request, st: &ServerState, snap: &Snapshot) -> Response {
     st.count("viewport.requests", 1.0);
     // Default bounds come from the layout; pad any zero-width axis so
     // the parameterless "full view" request stays valid even for a
     // degenerate (line- or point-collapsed) layout.
-    let (mut bx0, mut by0, mut bx1, mut by1) = st.grid.bounds();
+    let (mut bx0, mut by0, mut bx1, mut by1) = snap.grid.bounds();
     if bx1 <= bx0 {
         bx0 -= 0.5;
         bx1 += 0.5;
@@ -225,7 +321,7 @@ fn viewport(req: &Request, st: &ServerState) -> Response {
     };
 
     let mut pts = Vec::new();
-    let examined = st.grid.query(x0, y0, x1, y1, &mut pts);
+    let examined = snap.grid.query(x0, y0, x1, y1, &mut pts);
     st.count("viewport.examined", examined as f64);
     st.count("viewport.points", pts.len() as f64);
     let style = ScatterStyle {
@@ -233,7 +329,23 @@ fn viewport(req: &Request, st: &ServerState) -> Response {
         max_points: st.cfg.tile_max_points.max(1),
         ..Default::default()
     };
-    Response::svg(viewport_svg(&pts, st.labels.as_deref(), st.n_classes, (x0, y0, x1, y1), &style))
+    // Live inserts add one pseudo-class past the base classes.
+    let palette_classes = if snap.data.n() > snap.base_n && snap.n_classes > 0 {
+        snap.n_classes + 1
+    } else {
+        snap.n_classes
+    };
+    let mut svg = viewport_svg(
+        &pts,
+        snap.labels.as_deref(),
+        palette_classes,
+        (x0, y0, x1, y1),
+        &style,
+    );
+    // Trailing XML comment (valid after the root element) so SVG
+    // consumers can also check epoch consistency.
+    let _ = writeln!(svg, "<!-- epoch={} points={} -->", snap.epoch, snap.data.n());
+    Response::svg(svg)
 }
 
 /// Parse the request body as JSON (400 on empty/non-UTF-8/bad JSON).

@@ -1,10 +1,20 @@
 //! Minimal HTTP/1.1 request parsing and response emission.
 //!
 //! The offline crate registry has no hyper/axum, and the query server
-//! needs only a narrow slice of HTTP: one request per connection,
-//! `Content-Length` bodies, query strings, and fixed-size responses
-//! with `Connection: close`. This module implements exactly that over
-//! any `BufRead`/`Write`, so it is unit-testable without sockets.
+//! needs only a narrow slice of HTTP: persistent (keep-alive)
+//! connections with `Content-Length` framing, query strings, and
+//! fixed-size responses. This module implements exactly that over any
+//! `BufRead`/`Write`, so it is unit-testable without sockets.
+//!
+//! Keep-alive is the HTTP/1.1 default; answering `Connection: close`
+//! on every response (as this server once did) forces a fresh TCP
+//! handshake per request and dominates small-query latency under
+//! load. [`read_request`] reports the client's own close intent
+//! ([`Request::wants_close`]: an explicit `Connection: close`, or
+//! HTTP/1.0 without `keep-alive`), and [`Response::write_to`] frames
+//! the response for whichever mode the connection loop decides —
+//! bounded per-connection request counts and idle timeouts live in
+//! the server loop, not here.
 //!
 //! Limits are enforced during parse (header count, body size) so a
 //! malformed or hostile client fails fast instead of ballooning
@@ -31,6 +41,10 @@ pub struct Request {
     pub headers: Vec<(String, String)>,
     /// Request body (empty when no `Content-Length`).
     pub body: Vec<u8>,
+    /// True when the client asked this to be the connection's last
+    /// request: an explicit `Connection: close`, or an HTTP/1.0
+    /// request without `Connection: keep-alive`.
+    pub wants_close: bool,
 }
 
 impl Request {
@@ -55,6 +69,12 @@ impl Request {
 /// maps it to `413 Payload Too Large` instead of a generic `400`.
 pub const BODY_TOO_LARGE: &str = "request body too large";
 
+/// Marker of the idle-timeout error: the socket read timed out while
+/// waiting for the *start* of the next request on a kept-alive
+/// connection. The connection handler closes silently — an idle client
+/// is not a protocol error.
+pub const IDLE_TIMEOUT: &str = "idle timeout waiting for the next request";
+
 /// Read one request from `r`, emitting interim output (the
 /// `100 Continue` handshake) to `w`. Returns `Ok(None)` on a clean EOF
 /// before any bytes (client closed without sending a request); errors
@@ -70,8 +90,20 @@ pub fn read_request(
     w: &mut impl Write,
     max_body: usize,
 ) -> Result<Option<Request>> {
-    let Some(line) = read_crlf_line(r)? else {
-        return Ok(None);
+    let line = match read_crlf_line(r) {
+        Ok(None) => return Ok(None),
+        Ok(Some(l)) => l,
+        // A read timeout at a request boundary is the keep-alive idle
+        // case; mark it so the connection loop can close silently.
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+        {
+            bail!("{IDLE_TIMEOUT}")
+        }
+        Err(e) => return Err(e.into()),
     };
     let mut parts = line.split_whitespace();
     let (Some(method), Some(target), Some(version)) = (parts.next(), parts.next(), parts.next())
@@ -121,12 +153,29 @@ pub fn read_request(
     }
     let mut body = vec![0u8; len];
     r.read_exact(&mut body)?;
-    Ok(Some(Request { method: method.to_string(), path, query, headers, body }))
+    let connection = headers
+        .iter()
+        .find(|(k, _)| k == "connection")
+        .map(|(_, v)| v.to_ascii_lowercase());
+    let has_token = |t: &str| {
+        connection
+            .as_deref()
+            .map(|v| v.split(',').any(|tok| tok.trim() == t))
+            .unwrap_or(false)
+    };
+    // An explicit `close` always closes; HTTP/1.0 closes unless the
+    // client explicitly opted into keep-alive (any other Connection
+    // token list does not change the 1.0 default).
+    let wants_close =
+        has_token("close") || (version == "HTTP/1.0" && !has_token("keep-alive"));
+    Ok(Some(Request { method: method.to_string(), path, query, headers, body, wants_close }))
 }
 
 /// Read a `\r\n`- (or `\n`-) terminated line, trimmed; `None` on EOF at
-/// a line boundary. Lines are length-limited.
-fn read_crlf_line(r: &mut impl BufRead) -> Result<Option<String>> {
+/// a line boundary. Lines are length-limited (reported as
+/// `InvalidData`). Returns the raw `io::Error` so the caller can tell
+/// an idle-timeout apart from a malformed request.
+fn read_crlf_line(r: &mut impl BufRead) -> std::io::Result<Option<String>> {
     let mut line = String::new();
     let n = r
         .by_ref()
@@ -136,7 +185,10 @@ fn read_crlf_line(r: &mut impl BufRead) -> Result<Option<String>> {
         return Ok(None);
     }
     if n > MAX_LINE_BYTES {
-        bail!("request line exceeds {MAX_LINE_BYTES} bytes");
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+        ));
     }
     while line.ends_with('\n') || line.ends_with('\r') {
         line.pop();
@@ -228,6 +280,7 @@ impl Response {
         match self.status {
             200 => "OK",
             400 => "Bad Request",
+            403 => "Forbidden",
             404 => "Not Found",
             405 => "Method Not Allowed",
             413 => "Payload Too Large",
@@ -236,16 +289,19 @@ impl Response {
         }
     }
 
-    /// Serialize status line, headers and body to `w` (one-shot,
-    /// `Connection: close` framing).
-    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+    /// Serialize status line, headers and body to `w`. `keep_alive`
+    /// picks the `Connection` framing: the response always carries an
+    /// exact `Content-Length`, so a kept-alive peer knows where the
+    /// next response begins.
+    pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
         write!(
             w,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
             self.status,
             self.reason(),
             self.content_type,
-            self.body.len()
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" }
         )?;
         w.write_all(&self.body)?;
         w.flush()
@@ -274,6 +330,27 @@ mod tests {
         assert_eq!(req.header("host"), Some("x"));
         assert_eq!(req.header("HOST"), Some("x"));
         assert!(req.body.is_empty());
+        // HTTP/1.1 without a Connection header keeps the socket open.
+        assert!(!req.wants_close);
+    }
+
+    #[test]
+    fn connection_intent_parsed() {
+        let req = parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(req.wants_close);
+        let req = parse("GET / HTTP/1.1\r\nConnection: Keep-Alive\r\n\r\n").unwrap().unwrap();
+        assert!(!req.wants_close);
+        // HTTP/1.0 defaults to close unless keep-alive is explicit.
+        let req = parse("GET / HTTP/1.0\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert!(req.wants_close);
+        let req = parse("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().unwrap();
+        assert!(!req.wants_close);
+        // A 1.0 Connection list without keep-alive keeps the default.
+        let req = parse("GET / HTTP/1.0\r\nConnection: TE\r\n\r\n").unwrap().unwrap();
+        assert!(req.wants_close);
+        // ...and a 1.1 list without close stays open.
+        let req = parse("GET / HTTP/1.1\r\nConnection: TE\r\n\r\n").unwrap().unwrap();
+        assert!(!req.wants_close);
     }
 
     #[test]
@@ -347,14 +424,19 @@ mod tests {
     #[test]
     fn response_serialization() {
         let mut buf = Vec::new();
-        Response::json("{\"ok\":true}".to_string()).write_to(&mut buf).unwrap();
+        Response::json("{\"ok\":true}".to_string()).write_to(&mut buf, false).unwrap();
         let text = String::from_utf8(buf).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(text.contains("Content-Type: application/json\r\n"));
         assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
         assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
         let mut buf = Vec::new();
-        Response::error(404, "no such endpoint \"x\"").write_to(&mut buf).unwrap();
+        Response::json("{}".to_string()).write_to(&mut buf, true).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        let mut buf = Vec::new();
+        Response::error(404, "no such endpoint \"x\"").write_to(&mut buf, false).unwrap();
         let text = String::from_utf8(buf).unwrap();
         assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"));
         assert!(text.contains("{\"error\":\"no such endpoint \\\"x\\\"\"}"));

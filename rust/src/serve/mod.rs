@@ -1,19 +1,22 @@
-//! Checkpoint-backed layout query server (`largevis serve`).
+//! Live layout service (`largevis serve`).
 //!
 //! The LargeVis premise is that the expensive work — KNN graph
 //! construction and layout — happens **once**; serving the result
-//! should then be cheap and interactive. This module turns a finished
-//! pipeline run's checkpoint directory into a long-running HTTP/1.1
-//! service, dependency-free over `std::net` plus the existing
-//! [`crate::util::pool`] workers:
+//! should then be cheap, interactive, and (since PR 5) *mutable*: new
+//! points can be inserted while the server answers queries. This
+//! module turns a finished pipeline run's checkpoint directory into a
+//! long-running HTTP/1.1 service, dependency-free over `std::net` plus
+//! the existing [`crate::util::pool`] workers:
 //!
-//! * `POST /embed` — out-of-sample projection: new high-dimensional
-//!   points are placed into the *frozen* base layout via the
-//!   incremental-insertion math ([`crate::vis::incremental::project`]),
-//!   one batched SIMD scan + a short localized SGD per point. The base
-//!   layout is never modified, so concurrent embeds are safe and
-//!   repeatable.
-//! * `POST /knn` — exact K nearest base points of a query vector, one
+//! * `POST /insert`, `POST /insert_batch` — durable live insertion:
+//!   the batch is WAL-logged, spliced into the KNN graph, placed by
+//!   the localized insert path, and published as a new epoch-versioned
+//!   snapshot ([`state::Snapshot`]). A restarted server replays the
+//!   WAL and recovers every acknowledged point bit-identically.
+//! * `POST /embed` — out-of-sample projection against the current
+//!   epoch's layout ([`crate::vis::incremental::project`]); nothing is
+//!   retained.
+//! * `POST /knn` — exact K nearest points of a query vector, one
 //!   [`crate::kernels::sqdist_to_all`] batch scan.
 //! * `GET /viewport` — an SVG tile of a layout rectangle, culled by the
 //!   [`crate::render::grid::GridIndex`] so tile cost tracks the tile's
@@ -21,9 +24,17 @@
 //! * `GET /healthz`, `GET /metrics` — liveness + JSON counters
 //!   (reusing [`crate::coordinator::metrics::Metrics`]).
 //!
-//! Artifacts are loaded once into [`ServerState`] and shared read-only
-//! across `N` accept workers behind an `Arc`; the only lock on the
-//! request path is the metrics counter mutex.
+//! Readers are lock-free in the steady state: every worker caches an
+//! `Arc` of the current snapshot and revalidates it against an atomic
+//! epoch counter per request; writers build the next snapshot off to
+//! the side and swap it in atomically. A background refinement worker
+//! runs localized SGD over recently-inserted points between requests
+//! (see [`ServerState::refine_loop`]).
+//!
+//! Connections are persistent (HTTP/1.1 keep-alive) with a bounded
+//! per-connection request count (`keep_alive_max`) and an idle timeout
+//! (`idle_timeout_ms`); a client can opt out per request with
+//! `Connection: close`.
 //!
 //! # Example
 //!
@@ -49,7 +60,7 @@ pub mod handlers;
 pub mod http;
 pub mod state;
 
-pub use state::ServerState;
+pub use state::{ServerState, Snapshot};
 
 use crate::util::pool;
 use anyhow::{Context, Result};
@@ -58,10 +69,6 @@ use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
-
-/// Per-connection socket read timeout (a stalled client must not pin a
-/// worker forever).
-const READ_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// A bound (but not yet running) query server.
 pub struct Server {
@@ -83,7 +90,9 @@ pub struct ServerHandle {
 impl ServerHandle {
     /// Ask the server to stop. Blocked `accept` calls are woken by
     /// loopback connections; [`Server::run`] returns once every worker
-    /// has observed the flag.
+    /// has observed the flag (workers idling inside a keep-alive
+    /// connection notice at the next request or at the idle timeout,
+    /// whichever comes first).
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(mut addr) = self.addr {
@@ -123,9 +132,8 @@ impl Server {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Shared handle to the loaded artifacts (read-only; lets an
-    /// embedding test assert the base layout is untouched while the
-    /// server runs).
+    /// Shared handle to the server state (epoch counter, snapshots,
+    /// metrics; lets tests take snapshots while the server runs).
     pub fn state(&self) -> Arc<ServerState> {
         self.state.clone()
     }
@@ -141,52 +149,89 @@ impl Server {
 
     /// Serve until [`ServerHandle::shutdown`] is called: `threads`
     /// workers share the listener, each handling one connection at a
-    /// time (one request per connection, `Connection: close`).
+    /// time (multiple requests per connection — HTTP/1.1 keep-alive,
+    /// bounded by `keep_alive_max` and `idle_timeout_ms`). A separate
+    /// background thread runs the insert-refinement loop.
     pub fn run(&self) -> Result<()> {
-        pool::spawn_workers(self.threads, |_worker| loop {
-            if self.stop.load(Ordering::SeqCst) {
-                break;
-            }
-            match self.listener.accept() {
-                Ok((stream, _peer)) => {
+        std::thread::scope(|scope| {
+            let refiner = scope.spawn(|| self.state.refine_loop(&self.stop));
+            pool::spawn_workers(self.threads, |_worker| {
+                // Per-worker snapshot cache: in the steady state a
+                // request revalidates it with one atomic load — no
+                // locks on the read path.
+                let mut cached = self.state.snapshot();
+                loop {
                     if self.stop.load(Ordering::SeqCst) {
                         break;
                     }
-                    handle_connection(stream, &self.state);
-                }
-                Err(_) => {
-                    if self.stop.load(Ordering::SeqCst) {
-                        break;
+                    match self.listener.accept() {
+                        Ok((stream, _peer)) => {
+                            if self.stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            handle_connection(stream, &self.state, &mut cached, &self.stop);
+                        }
+                        Err(_) => {
+                            if self.stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            // Transient accept errors (EMFILE, aborted
+                            // handshake): back off briefly instead of
+                            // hot-spinning.
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
                     }
-                    // Transient accept errors (EMFILE, aborted handshake):
-                    // back off briefly instead of hot-spinning.
-                    std::thread::sleep(Duration::from_millis(10));
                 }
-            }
+            });
+            // Accept workers are done; let the refiner observe `stop`.
+            self.state.wake_refiner();
+            let _ = refiner.join();
         });
         Ok(())
     }
 }
 
-/// Serve one connection: parse a request, dispatch, write the response.
-/// I/O errors are swallowed (the peer is gone; nothing to tell it).
-fn handle_connection(stream: TcpStream, state: &ServerState) {
-    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+/// Serve one connection: up to `keep_alive_max` requests, each answered
+/// from a single consistent snapshot. I/O errors and idle timeouts are
+/// swallowed (the peer is gone or silent; nothing to tell it).
+fn handle_connection(
+    stream: TcpStream,
+    state: &ServerState,
+    cached: &mut Arc<Snapshot>,
+    stop: &AtomicBool,
+) {
+    let idle = Duration::from_millis(state.cfg.idle_timeout_ms.max(100));
+    let _ = stream.set_read_timeout(Some(idle));
     let _ = stream.set_nodelay(true);
     let Ok(read_half) = stream.try_clone() else {
         return;
     };
     let mut reader = BufReader::new(read_half);
     let mut writer = BufWriter::new(&stream);
-    let resp = match http::read_request(&mut reader, &mut writer, state.cfg.max_body_bytes) {
-        Ok(Some(req)) => handlers::route(&req, state),
-        Ok(None) => return, // clean EOF: client connected and left
-        Err(e) => {
-            state.count("serve.errors", 1.0);
-            let msg = format!("{e:#}");
-            let status = if msg.contains(http::BODY_TOO_LARGE) { 413 } else { 400 };
-            http::Response::error(status, &msg)
+    let max_requests = state.cfg.keep_alive_max.max(1);
+    for served in 1..=max_requests {
+        let req = match http::read_request(&mut reader, &mut writer, state.cfg.max_body_bytes) {
+            Ok(Some(req)) => req,
+            Ok(None) => return, // clean EOF between requests
+            Err(e) => {
+                // An idle keep-alive connection hitting the socket
+                // timeout is a normal close, not a protocol error.
+                let msg = format!("{e:#}");
+                if !msg.contains(http::IDLE_TIMEOUT) {
+                    state.count("serve.errors", 1.0);
+                    let status = if msg.contains(http::BODY_TOO_LARGE) { 413 } else { 400 };
+                    let _ = http::Response::error(status, &msg).write_to(&mut writer, false);
+                }
+                return;
+            }
+        };
+        // One snapshot per request: every field of the response comes
+        // from the same epoch.
+        state.snapshot_if_stale(cached);
+        let resp = handlers::route(&req, state, cached);
+        let last = served == max_requests || req.wants_close || stop.load(Ordering::SeqCst);
+        if resp.write_to(&mut writer, !last).is_err() || last {
+            return;
         }
-    };
-    let _ = resp.write_to(&mut writer);
+    }
 }

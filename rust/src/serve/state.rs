@@ -1,60 +1,132 @@
-//! Server state: every artifact of a finished pipeline run, loaded
-//! once and shared read-mostly across worker threads.
+//! Server state: epoch-versioned snapshots over a live, growing layout.
 //!
-//! All heavy artifacts (points, KNN graph, layout, spatial index) are
-//! immutable after load — handlers take `&ServerState` and the server
-//! shares it behind an `Arc`, so request handling needs no locking at
-//! all on the data path. The only mutable member is the metrics
-//! registry, a small `Mutex<Metrics>` touched once per request.
+//! The read path is built around one rule: **a request sees exactly one
+//! epoch**. All heavy artifacts (points, KNN graph, layout, spatial
+//! index, labels) live inside an immutable [`Snapshot`] shared behind
+//! an `Arc`; handlers take `&Snapshot` and can never observe a torn
+//! mix of epochs. Writers (`POST /insert`, the background refinement
+//! worker) mutate a private `Writer` double-buffer under a mutex,
+//! then build a fresh `Arc<Snapshot>` and atomically publish it. The
+//! paper's asynchronous-SGD tolerance for slightly-stale reads is what
+//! makes this safe: a reader finishing on epoch `e` while `e+1` is
+//! published simply rendered a consistent, marginally older layout.
+//!
+//! Readers are lock-free in the steady state: each connection worker
+//! caches its `Arc<Snapshot>` and revalidates it against one
+//! `AtomicU64` epoch counter per request ([`ServerState::snapshot_if_stale`]);
+//! only an actual epoch change takes the (pointer-clone-only) snapshot
+//! mutex. The only other lock on the read path is the metrics counter
+//! mutex, as before.
+//!
+//! Durability: accepted inserts are appended to `inserts.wal` in the
+//! checkpoint directory (see [`crate::data::formats::wal`]) *before*
+//! being applied, and replayed on startup — a restarted server
+//! recovers every acknowledged point bit-identically.
 
 use crate::config::ServeConfig;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::CheckpointPaths;
+use crate::data::formats::wal::WalWriter;
 use crate::data::formats::{binary, checkpoint};
 use crate::data::io::read_labels;
 use crate::data::matrix::Matrix;
+use crate::graph::weights::WeightConfig;
 use crate::knn::KnnGraph;
 use crate::render::grid::GridIndex;
+use crate::vis::incremental::IncrementalLayout;
 use crate::vis::LargeVisConfig;
 use anyhow::{bail, Context, Result};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
-/// Immutable (post-load) state shared by every server worker.
+/// One immutable epoch of the served artifacts. Everything a handler
+/// reads for a single response comes from one `Snapshot`, so every
+/// response is internally consistent even while inserts land.
+pub struct Snapshot {
+    /// Epoch counter: 0 for the freshly loaded checkpoints, +1 per
+    /// publish (insert batch or refinement pass).
+    pub epoch: u64,
+    /// High-dimensional points (base + live inserts).
+    pub data: Matrix,
+    /// KNN graph over `data` (live inserts spliced in).
+    pub knn: KnnGraph,
+    /// Low-dimensional layout aligned with `data`.
+    pub layout: Matrix,
+    /// Class labels; live inserts carry the pseudo-class `n_classes`.
+    pub labels: Option<Vec<u32>>,
+    /// Number of distinct classes in the *base* labels (0 = unlabeled).
+    pub n_classes: usize,
+    /// Spatial index over `layout` for `/viewport`.
+    pub grid: GridIndex,
+    /// Points loaded from the checkpoints (frozen base); ids at or
+    /// above this were inserted live.
+    pub base_n: usize,
+}
+
+/// The single-writer mutable state behind the snapshots.
+struct Writer {
+    /// The growing dataset/graph/layout (its matrices are cloned into
+    /// each published [`Snapshot`]).
+    inc: IncrementalLayout,
+    /// Incrementally maintained spatial index (overflow + threshold
+    /// rebuild; cloned into each snapshot).
+    grid: GridIndex,
+    /// Labels aligned with `inc.data` (base labels + pseudo-class).
+    labels: Option<Vec<u32>>,
+    /// Class id assigned to live-inserted points when the base is
+    /// labeled: the first id past the base classes (palette lookups
+    /// are modulo, so any value is render-safe).
+    pseudo_class: u32,
+    /// Durable insert log; `None` when the server is read-only.
+    wal: Option<WalWriter>,
+    /// Localized-edge windows of batches not yet refined.
+    pending_edges: Vec<(u32, u32, f64)>,
+    /// Rows covered by `pending_edges`.
+    pending_rows: usize,
+}
+
+/// Shared state of a running server: configuration, the epoch-swapped
+/// snapshot cell, the writer double-buffer, and metrics.
 pub struct ServerState {
     /// Server configuration the state was loaded under.
     pub cfg: ServeConfig,
     /// Dataset name recorded by the run that wrote the checkpoints.
     pub dataset: String,
-    /// High-dimensional base points (`data.lvec`).
-    pub data: Matrix,
-    /// KNN graph of the base points (`knn.ckpt`) — kept resident: the
-    /// incremental insert path splices into it, and `/embed` defaults
-    /// its neighbor count to its `k`.
-    pub knn: KnnGraph,
     /// Directed edge count of the symmetrized graph checkpoint
     /// (`graph.ckpt`), 0 when absent. The CSR itself is validated at
     /// load and then dropped — no handler walks its edges, and at
     /// million-point scale keeping it resident would roughly double
     /// the server's memory for nothing.
     pub graph_edges: usize,
-    /// Frozen 2D/3D base layout (`layout.lvec`).
-    pub layout: Matrix,
-    /// Class labels (`labels.lbl`), when the run had them.
-    pub labels: Option<Vec<u32>>,
-    /// Number of distinct classes in `labels` (0 when unlabeled).
+    /// Points loaded from the checkpoints (the frozen base).
+    pub base_n: usize,
+    /// Distinct classes in the base labels (0 when unlabeled).
     pub n_classes: usize,
-    /// Uniform-grid spatial index over the layout for `/viewport`.
-    pub grid: GridIndex,
-    /// Gradient/hyper-parameters for `/embed`'s localized SGD.
+    /// Gradient/hyper-parameters for `/embed` and the insert path's
+    /// localized SGD.
     pub vis: LargeVisConfig,
     /// Request counters, served verbatim by `/metrics`.
     pub metrics: Mutex<Metrics>,
+    /// Current epoch, readable without any lock. Published *after* the
+    /// snapshot cell is updated, so a reader that sees epoch `e` here
+    /// finds a snapshot of epoch `>= e` in the cell.
+    epoch: AtomicU64,
+    /// The current snapshot. The mutex is held only for `Arc` clones
+    /// and swaps — never while building a snapshot.
+    snap: Mutex<Arc<Snapshot>>,
+    /// Writer double-buffer (insert handlers + refinement worker).
+    writer: Mutex<Writer>,
+    /// Refinement worker doorbell: `true` when un-refined insert
+    /// windows are pending.
+    refine_bell: (Mutex<bool>, Condvar),
 }
 
 impl ServerState {
-    /// Load every artifact from `cfg.checkpoints` and cross-validate
-    /// shapes, so a stale or mixed checkpoint directory fails at
-    /// startup instead of serving garbage.
+    /// Load every artifact from `cfg.checkpoints`, cross-validate
+    /// shapes (a stale or mixed checkpoint directory fails at startup
+    /// instead of serving garbage), replay the live-insert WAL, and
+    /// publish epoch `N` (one epoch per recovered WAL batch).
     pub fn load(cfg: ServeConfig) -> Result<ServerState> {
         let paths = CheckpointPaths::in_dir(&cfg.checkpoints);
         let data = binary::read_binary(&paths.data).with_context(|| {
@@ -136,33 +208,259 @@ impl ServerState {
             .unwrap_or_else(|_| "unknown".to_string());
 
         let grid = GridIndex::build(&layout, cfg.grid.max(1));
-        // Gradient family/hyper-parameters for the localized /embed SGD
-        // (paper defaults; the layout itself fixes the output dim).
+        // Gradient family/hyper-parameters for the localized SGD of
+        // `/embed` and `/insert` (paper defaults; the layout itself
+        // fixes the output dim).
         let vis = LargeVisConfig { dim: layout.d(), threads: 1, ..Default::default() };
 
         let mut metrics = Metrics::new();
         metrics.set("serve.points", n as f64);
         metrics.set("serve.graph_edges", graph_edges as f64);
+
+        // The writer wraps the loaded base; insert batches grow it.
+        // Re-weighting of spliced rows uses the default perplexity
+        // (calibrate_row clamps the target to each row's support, so
+        // this is well-defined for any checkpointed k).
+        let mut inc =
+            IncrementalLayout::new(data, knn, layout, WeightConfig::default(), vis.clone());
+        inc.samples_per_insert = cfg.insert_samples;
+        let mut writer = Writer {
+            inc,
+            grid,
+            labels,
+            pseudo_class: n_classes as u32,
+            wal: None,
+            pending_edges: Vec::new(),
+            pending_rows: 0,
+        };
+
+        // Recover acknowledged inserts, then (in live mode) keep the
+        // log open for appending. Replay goes through the exact same
+        // `add_points` path live inserts take, so the recovered
+        // data/KNN state is bit-identical to the pre-restart one.
+        let contents = if cfg.read_only {
+            crate::data::formats::wal::read_wal(&paths.wal, writer.inc.data.d())?
+        } else {
+            let (wal, contents) = WalWriter::open(&paths.wal, writer.inc.data.d())
+                .with_context(|| format!("open insert WAL {}", paths.wal.display()))?;
+            writer.wal = Some(wal);
+            contents
+        };
+        let mut recovered_rows = 0usize;
+        for b in &contents.batches {
+            Self::apply_batch(&mut writer, b);
+            recovered_rows += b.n();
+        }
+        let recovered_batches = contents.batches.len() as u64;
+        if contents.torn_tail {
+            eprintln!(
+                "[serve] {}: torn WAL tail dropped ({recovered_batches} complete batches \
+                 recovered)",
+                paths.wal.display(),
+            );
+        }
+        // Recovered rows count as already-refined (their localized
+        // passes ran during replay; the background worker starts clean).
+        writer.pending_edges.clear();
+        writer.pending_rows = 0;
+        metrics.set("serve.wal_batches", recovered_batches as f64);
+        metrics.set("serve.inserted", recovered_rows as f64);
+
+        let epoch0 = recovered_batches;
+        let snapshot = Arc::new(Self::snapshot_of(&writer, epoch0, n, n_classes));
         Ok(ServerState {
             cfg,
             dataset,
-            data,
-            knn,
             graph_edges,
-            layout,
-            labels,
+            base_n: n,
             n_classes,
-            grid,
             vis,
             metrics: Mutex::new(metrics),
+            epoch: AtomicU64::new(epoch0),
+            snap: Mutex::new(snapshot),
+            writer: Mutex::new(writer),
+            refine_bell: (Mutex::new(false), Condvar::new()),
         })
     }
 
+    /// Apply one insert batch to the writer state (shared by live
+    /// inserts and WAL replay): grow the layout through the localized
+    /// insert path, extend the spatial index incrementally, extend
+    /// labels with the live pseudo-class, record the refinement window.
+    fn apply_batch(w: &mut Writer, pts: &Matrix) -> Vec<usize> {
+        let ids = w.inc.add_points(pts);
+        for &id in &ids {
+            let r = w.inc.layout.row(id);
+            w.grid.insert(id as u32, r[0], r[1]);
+        }
+        if let Some(ls) = &mut w.labels {
+            // All live inserts share one stable pseudo-class so they
+            // stay distinguishable in `/viewport` tiles.
+            let fill = w.pseudo_class;
+            ls.resize(ls.len() + ids.len(), fill);
+        }
+        w.pending_edges.extend_from_slice(&w.inc.last_edges);
+        w.pending_rows += ids.len();
+        ids
+    }
+
+    /// Build a snapshot of the writer's current state (clones the
+    /// heavy artifacts; the caller publishes the result).
+    ///
+    /// Cost note: a publish is an O(N) flat memcpy of the matrices,
+    /// KNN lists and grid — that is the deliberate price of the
+    /// epoch-swap design (readers get torn-proof immutable snapshots
+    /// with zero locking). The *algorithmic* per-insert work — KNN
+    /// splice, reweighting, placement SGD — is bounded by the batch's
+    /// neighborhood ([`crate::vis::incremental::LocalizedStats`]);
+    /// the memcpy amortizes over `/insert_batch` rows and is the first
+    /// thing to replace (chunked/persistent structures) if insert
+    /// throughput at very large N becomes the bottleneck.
+    fn snapshot_of(w: &Writer, epoch: u64, base_n: usize, n_classes: usize) -> Snapshot {
+        Snapshot {
+            epoch,
+            data: w.inc.data.clone(),
+            knn: w.inc.knn.clone(),
+            layout: w.inc.layout.clone(),
+            labels: w.labels.clone(),
+            n_classes,
+            grid: w.grid.clone(),
+            base_n,
+        }
+    }
+
+    /// The current snapshot (one brief mutex for the `Arc` clone).
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        self.snap.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Lock-free epoch hint. A connection worker holding a cached
+    /// snapshot compares its `epoch` against this and re-fetches only
+    /// on mismatch — the steady-state read path touches no mutex.
+    pub fn epoch_hint(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Refresh `cached` if the epoch moved; returns a snapshot no
+    /// older than the hint read at call time.
+    pub fn snapshot_if_stale(&self, cached: &mut Arc<Snapshot>) {
+        if cached.epoch != self.epoch_hint() {
+            *cached = self.snapshot();
+        }
+    }
+
+    /// Publish the writer's state as the next epoch. Called with the
+    /// writer lock held; the snapshot mutex is taken only for the swap.
+    fn publish(&self, w: &Writer) -> u64 {
+        let epoch = self.epoch_hint() + 1;
+        let snapshot = Arc::new(Self::snapshot_of(w, epoch, self.base_n, self.n_classes));
+        *self.snap.lock().unwrap_or_else(|e| e.into_inner()) = snapshot;
+        // Readers that load this hint are guaranteed to find an
+        // epoch >= it in the cell (Release pairs with the Acquire
+        // in `epoch_hint`).
+        self.epoch.store(epoch, Ordering::Release);
+        epoch
+    }
+
+    /// Insert a batch of points: WAL first, then the localized insert
+    /// path, then an atomic snapshot swap. Returns the assigned ids and
+    /// the epoch that contains them. Serialized with other writers by
+    /// the writer mutex; readers are never blocked.
+    pub fn insert(&self, pts: &Matrix) -> Result<(Vec<usize>, u64)> {
+        if self.cfg.read_only {
+            bail!("server is read-only (--read-only)");
+        }
+        let mut w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(wal) = &mut w.wal {
+            wal.append(pts).context("append insert WAL")?;
+        }
+        let ids = Self::apply_batch(&mut w, pts);
+        let epoch = self.publish(&w);
+        drop(w);
+        self.ring_refine_bell();
+        Ok((ids, epoch))
+    }
+
+    /// One background refinement pass: replay the accumulated localized
+    /// windows with `cfg.refine_samples` SGD steps per pending row,
+    /// then republish. Returns the steps run (0 = nothing pending).
+    /// Only points inserted live move; the checkpointed base stays
+    /// frozen, so `/embed` semantics and landmark stability hold.
+    pub fn refine_pass(&self) -> u64 {
+        let mut w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
+        if w.pending_edges.is_empty() || w.pending_rows == 0 {
+            return 0;
+        }
+        let edges = std::mem::take(&mut w.pending_edges);
+        let rows = std::mem::take(&mut w.pending_rows);
+        let samples = (self.cfg.refine_samples * rows) as u64;
+        if samples == 0 {
+            return 0;
+        }
+        let seed = self.vis.seed ^ (0xbeef + self.epoch_hint()).wrapping_mul(0x9E3779B97F4A7C15);
+        let base_n = self.base_n;
+        w.inc.localized_sgd(&edges, base_n, samples, seed);
+        // The refined points moved: re-fit the writer's spatial index
+        // before publishing. This is a bulk O(N) re-bucketing, but it
+        // runs in the background thread (never on the request path)
+        // and one pass coalesces every batch inserted since the last
+        // one — the per-insert grid path stays the O(1) overflow
+        // append. (A base-grid + live-overlay split would make this
+        // O(inserted); not worth the two-index complexity yet.)
+        w.grid = GridIndex::build(&w.inc.layout, self.cfg.grid.max(1));
+        self.publish(&w);
+        self.count("refine.passes", 1.0);
+        self.count("refine.samples", samples as f64);
+        samples
+    }
+
+    /// Wake the refinement worker (new windows are pending).
+    fn ring_refine_bell(&self) {
+        let (lock, cvar) = &self.refine_bell;
+        *lock.lock().unwrap_or_else(|e| e.into_inner()) = true;
+        cvar.notify_all();
+    }
+
+    /// Wake the refinement worker so it can observe `stop` (shutdown).
+    pub fn wake_refiner(&self) {
+        let (lock, cvar) = &self.refine_bell;
+        let _guard = lock.lock().unwrap_or_else(|e| e.into_inner());
+        cvar.notify_all();
+    }
+
+    /// The background refinement loop: wait for the doorbell (or the
+    /// periodic interval), run one pass, repeat until `stop`. Runs the
+    /// SGD between requests — writers queue behind the writer mutex
+    /// for the duration of a pass, readers never wait.
+    pub fn refine_loop(&self, stop: &AtomicBool) {
+        let interval = Duration::from_millis(self.cfg.refine_interval_ms.max(10));
+        let (lock, cvar) = &self.refine_bell;
+        loop {
+            {
+                let mut bell = lock.lock().unwrap_or_else(|e| e.into_inner());
+                while !*bell && !stop.load(Ordering::SeqCst) {
+                    let (guard, timeout) = cvar
+                        .wait_timeout(bell, interval)
+                        .unwrap_or_else(|e| e.into_inner());
+                    bell = guard;
+                    if timeout.timed_out() {
+                        break;
+                    }
+                }
+                *bell = false;
+            }
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            self.refine_pass();
+        }
+    }
+
     /// Effective neighbor count for `/embed`: the configured override,
-    /// or the checkpointed graph's `k`, clamped to the base size.
-    pub fn embed_k(&self) -> usize {
-        let k = if self.cfg.embed_k == 0 { self.knn.k } else { self.cfg.embed_k };
-        k.max(1).min(self.data.n())
+    /// or the checkpointed graph's `k`, clamped to the snapshot's size.
+    pub fn embed_k(&self, snap: &Snapshot) -> usize {
+        let k = if self.cfg.embed_k == 0 { snap.knn.k } else { self.cfg.embed_k };
+        k.max(1).min(snap.data.n())
     }
 
     /// Bump a metrics counter (lock-poisoning tolerant: a panicking

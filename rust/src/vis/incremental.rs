@@ -17,13 +17,13 @@
 //! a global re-optimization when drift accumulates.
 
 use crate::data::matrix::Matrix;
-use crate::graph::weights::{weighted_graph, WeightConfig};
+use crate::graph::weights::{calibrate_row, weighted_graph, WeightConfig};
 use crate::kernels::nearest_k;
 use crate::knn::KnnGraph;
+use crate::util::alias::AliasTable;
 use crate::util::heap::BoundedMaxHeap;
 use crate::util::rng::Rng;
 use crate::vis::objective::clip;
-use crate::vis::sampler::GraphSamplers;
 use crate::vis::LargeVisConfig;
 
 /// An updatable layout over a growing dataset.
@@ -66,6 +66,35 @@ pub struct IncrementalLayout {
     pub vis: LargeVisConfig,
     /// SGD samples per *inserted* point.
     pub samples_per_insert: usize,
+    /// Cost evidence of the most recent [`IncrementalLayout::add_points`]
+    /// call's localized reweighting pass (see [`LocalizedStats`]).
+    pub last_localized: LocalizedStats,
+    /// The directed new-source edges the most recent
+    /// [`IncrementalLayout::add_points`] batch weighted — the sampling
+    /// window a background refinement pass replays via
+    /// [`IncrementalLayout::localized_sgd`].
+    pub last_edges: Vec<(u32, u32, f64)>,
+}
+
+/// Work performed by one localized reweighting pass — the proof that
+/// per-insert cost is bounded by the *touched neighborhood*, never by
+/// the total graph size.
+///
+/// `add_points` used to rebuild the full weighted graph and alias
+/// tables per call (`weighted_graph` + `GraphSamplers::new`, O(|E|)
+/// work and allocation); these counters are populated by the localized
+/// replacement so tests can assert the bound: for a batch of `B`
+/// inserts into a graph with `k` neighbors per vertex,
+/// `calibrations <= B*(k+1)` and `edges <= 4*B*k` — both independent
+/// of the total vertex or edge count.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LocalizedStats {
+    /// Distinct vertices whose conditional distributions were
+    /// recalibrated (the inserted points plus every old vertex whose
+    /// neighbor list the batch spliced).
+    pub calibrations: usize,
+    /// Directed new-source edges weighted for the localized sampler.
+    pub edges: usize,
 }
 
 impl IncrementalLayout {
@@ -79,7 +108,16 @@ impl IncrementalLayout {
     ) -> Self {
         assert_eq!(data.n(), knn.n());
         assert_eq!(data.n(), layout.n());
-        IncrementalLayout { data, knn, layout, weights, vis, samples_per_insert: 2000 }
+        IncrementalLayout {
+            data,
+            knn,
+            layout,
+            weights,
+            vis,
+            samples_per_insert: 2000,
+            last_localized: LocalizedStats::default(),
+            last_edges: Vec::new(),
+        }
     }
 
     /// Number of points currently embedded.
@@ -104,6 +142,7 @@ impl IncrementalLayout {
         // scattered scalar `sqdist` calls.
         let mut dists: Vec<f32> = Vec::new();
         let mut heap = BoundedMaxHeap::new(k);
+        let mut touched_old: Vec<u32> = Vec::new();
         for r in 0..new_points.n() {
             let id = self.data.n();
             let row = new_points.row(r).to_vec();
@@ -118,6 +157,11 @@ impl IncrementalLayout {
                     }
                     let pos = list.partition_point(|&(_, d)| d <= dist);
                     list.insert(pos, (id as u32, dist));
+                    // A spliced old row's conditional distribution is
+                    // stale; record it for the localized recalibration.
+                    if (j as usize) < first_new {
+                        touched_old.push(j);
+                    }
                 }
             }
             self.knn.neighbors.push(mine);
@@ -150,26 +194,65 @@ impl IncrementalLayout {
             new_ids.push(id);
         }
 
-        // 4: localized SGD over the refreshed weighted graph, moving
-        // only the inserted points.
-        let graph = weighted_graph(&self.knn, &self.weights);
-        let samplers = GraphSamplers::new(&graph);
-        let mut rng = Rng::new(self.vis.seed ^ 0x1c2);
+        // 4: localized SGD over a *localized* reweighting. This used to
+        // rebuild the full weighted graph and alias tables per call
+        // (`weighted_graph` + `GraphSamplers::new`, O(|E|) work every
+        // batch) and then discard ~all of its draws (only new-source
+        // edges move anything). Now only the conditional distributions
+        // the batch actually changed are recalibrated and the edge
+        // sampler covers new-source edges alone — O(B·k) per batch of
+        // B inserts, independent of the total graph size (see
+        // [`LocalizedStats`]). Negative draws are uniform over the
+        // current points (the serving-path `project` noise model); the
+        // batch optimizer keeps its ∝ deg^0.75 table.
+        touched_old.sort_unstable();
+        touched_old.dedup();
+        let (edges, stats) = localized_edges(&self.knn, &self.weights, first_new, &touched_old);
+        self.last_localized = stats;
         let total = (self.samples_per_insert * new_points.n()) as u64;
+        self.localized_sgd(&edges, first_new, total, self.vis.seed ^ 0x1c2);
+        self.last_edges = edges;
+        new_ids
+    }
+
+    /// One localized SGD pass over `edges` (directed, `(i, j, w)`),
+    /// sampling edges ∝ weight; only vertices `>= first_movable` move,
+    /// everything below stays frozen. Negative draws are uniform over
+    /// every current point except the sampled edge's endpoints (exact
+    /// two-exclusion remap — no silently dropped repulsions, the same
+    /// fix the batch optimizer and `project` carry). Deterministic for
+    /// a given `seed`; a no-op when `edges` carries no positive mass.
+    ///
+    /// Shared by the insert path and the serving-side background
+    /// refinement worker (which replays the accumulated
+    /// [`IncrementalLayout::last_edges`] windows between requests).
+    pub fn localized_sgd(
+        &mut self,
+        edges: &[(u32, u32, f64)],
+        first_movable: usize,
+        samples: u64,
+        seed: u64,
+    ) {
+        let n_total = self.data.n();
+        let edge_weights: Vec<f64> = edges.iter().map(|&(_, _, w)| w).collect();
+        let total_w: f64 = edge_weights.iter().sum();
+        if edges.is_empty() || total_w <= 0.0 || n_total < 3 || samples == 0 {
+            return;
+        }
+        let table = AliasTable::new(&edge_weights);
+        let mut rng = Rng::new(seed);
         let f = self.vis.prob_fn;
         let gamma = self.vis.gamma;
         let dim = self.layout.d();
         let gclip = self.vis.grad_clip;
         let mut acc = vec![0f32; dim];
-        for t in 0..total {
+        for t in 0..samples {
             let rho =
-                (self.vis.rho0 * (1.0 - t as f32 / total as f32)).max(self.vis.rho0 * 1e-4);
-            let (i, j) = samplers.sample_edge(&mut rng);
+                (self.vis.rho0 * (1.0 - t as f32 / samples as f32)).max(self.vis.rho0 * 1e-4);
+            // Every localized edge has a movable source by construction
+            // (and KNN lists never contain their own vertex, so i != j).
+            let (i, j, _) = edges[table.sample(&mut rng)];
             let (i, j) = (i as usize, j as usize);
-            // Only steps whose source is a new point move anything.
-            if i < first_new || i == j {
-                continue;
-            }
             acc.iter_mut().for_each(|a| *a = 0.0);
             {
                 let d2 = self.layout.sqdist(i, j);
@@ -177,25 +260,26 @@ impl IncrementalLayout {
                 for kk in 0..dim {
                     let g = clip(c * (self.layout.row(i)[kk] - self.layout.row(j)[kk]), gclip);
                     acc[kk] += g;
-                    if j >= first_new {
+                    if j >= first_movable {
                         self.layout.row_mut(j)[kk] -= rho * g;
                     }
                 }
             }
-            // Total draw (same fix as the batch optimizer): a bounded
-            // rejection guard can silently drop repulsions on small or
-            // hub-dominated graphs and degenerate to attract-only steps.
+            let (lo, hi) = (i.min(j), i.max(j));
             for _ in 0..self.vis.negatives {
-                let v = match samplers.sample_negative_excluding(&mut rng, i as u32, j as u32) {
-                    Some(v) => v as usize,
-                    None => break,
-                };
+                let mut v = rng.below(n_total - 2);
+                if v >= lo {
+                    v += 1;
+                }
+                if v >= hi {
+                    v += 1;
+                }
                 let d2 = self.layout.sqdist(i, v);
                 let c = gamma * f.coeff_neg(d2);
                 for kk in 0..dim {
                     let g = clip(c * (self.layout.row(i)[kk] - self.layout.row(v)[kk]), gclip);
                     acc[kk] += g;
-                    if v >= first_new {
+                    if v >= first_movable {
                         self.layout.row_mut(v)[kk] -= rho * g;
                     }
                 }
@@ -204,7 +288,6 @@ impl IncrementalLayout {
                 self.layout.row_mut(i)[kk] += rho * acc[kk];
             }
         }
-        new_ids
     }
 
     /// Globally re-optimize (unfreezes everything) — for when many
@@ -213,6 +296,79 @@ impl IncrementalLayout {
         let graph = weighted_graph(&self.knn, &self.weights);
         crate::vis::sgd::optimize(&graph, &mut self.layout, &self.vis);
     }
+}
+
+/// Localized reweighting: the directed new-source edges of the weighted
+/// graph, computed without touching any untouched vertex.
+///
+/// Vertices `first_new..n` are the batch's inserted points;
+/// `touched_old` (sorted, deduplicated, all `< first_new`) are the old
+/// vertices whose KNN lists the batch spliced. Exactly these rows are
+/// recalibrated ([`calibrate_row`] — the same math `weighted_graph`
+/// runs over *every* row), then pair masses
+/// `w_ab = (p_{b|a} + p_{a|b}) / 2N` are accumulated for every pair
+/// with at least one new endpoint. Both conditional contributions of
+/// such a pair live in calibrated rows: a new id can only appear in an
+/// old list via a splice, which marks that row touched.
+///
+/// Returns the directed edges `(source, target, weight)` with
+/// `source >= first_new`, sorted by `(source, target)` (deterministic
+/// for the replay path), plus the work counters. Weights match a full
+/// [`weighted_graph`] rebuild on the same graph bit-for-bit up to
+/// two-term addition order (property-tested); old-old pair weights —
+/// which a full rebuild would also refresh but which no new-source
+/// sampler can ever draw — are the one thing deliberately skipped.
+pub(crate) fn localized_edges(
+    knn: &KnnGraph,
+    weights: &WeightConfig,
+    first_new: usize,
+    touched_old: &[u32],
+) -> (Vec<(u32, u32, f64)>, LocalizedStats) {
+    use std::collections::HashMap;
+    let n = knn.n();
+    debug_assert!(touched_old.iter().all(|&v| (v as usize) < first_new));
+
+    // Recalibrate exactly the touched rows.
+    let mut cond: HashMap<u32, Vec<f64>> =
+        HashMap::with_capacity(touched_old.len() + n - first_new);
+    let mut dbuf: Vec<f32> = Vec::new();
+    for v in touched_old.iter().copied().chain(first_new as u32..n as u32) {
+        let row = &knn.neighbors[v as usize];
+        dbuf.clear();
+        dbuf.extend(row.iter().map(|&(_, d)| d));
+        cond.insert(v, calibrate_row(&dbuf, weights.perplexity, weights.max_iters, weights.tol));
+    }
+    let calibrations = cond.len();
+
+    // Accumulate undirected pair mass exactly like the symmetrizer,
+    // restricted to pairs with a new endpoint. Each pair receives at
+    // most two contributions (one per direction), so the sum is
+    // order-independent even over HashMap iteration.
+    let mut pair: HashMap<(u32, u32), f64> = HashMap::new();
+    for (&v, pv) in &cond {
+        for (slot, &(b, _)) in knn.neighbors[v as usize].iter().enumerate() {
+            if (v as usize) < first_new && (b as usize) < first_new {
+                continue; // old-old pair: invisible to a new-source sampler
+            }
+            let key = if v < b { (v, b) } else { (b, v) };
+            *pair.entry(key).or_insert(0.0) += pv[slot];
+        }
+    }
+
+    let scale = 1.0 / (2.0 * n as f64);
+    let mut edges: Vec<(u32, u32, f64)> = Vec::with_capacity(pair.len() * 2);
+    for (&(a, b), &mass) in &pair {
+        let w = mass * scale;
+        if (a as usize) >= first_new {
+            edges.push((a, b, w));
+        }
+        if (b as usize) >= first_new {
+            edges.push((b, a, w));
+        }
+    }
+    edges.sort_unstable_by_key(|&(s, t, _)| (s, t));
+    let stats = LocalizedStats { calibrations, edges: edges.len() };
+    (edges, stats)
 }
 
 /// Out-of-sample projection against a **frozen** base — the query
@@ -485,6 +641,84 @@ mod tests {
         assert_eq!(pos.n(), 3);
         assert_eq!(nbs[0].len(), 400);
         assert!(pos.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn localized_weights_match_full_rebuild() {
+        let (mut inc, _) = base();
+        let first_new = inc.n();
+        let (extra, _) = gaussian_mixture(12, 10, 4, 0.0, 77);
+        inc.add_points(&extra);
+
+        // Reconstruct the touched-old set from the final graph state: a
+        // new id enters an old list only via a splice.
+        let touched: Vec<u32> = (0..first_new)
+            .filter(|&j| inc.knn.neighbors[j].iter().any(|&(l, _)| (l as usize) >= first_new))
+            .map(|j| j as u32)
+            .collect();
+        let (edges, stats) = localized_edges(&inc.knn, &inc.weights, first_new, &touched);
+        assert!(!edges.is_empty());
+        assert_eq!(stats.edges, edges.len());
+
+        // Oracle: the full O(|E|) rebuild the localized pass replaced.
+        let full = weighted_graph(&inc.knn, &inc.weights);
+        let mut want: Vec<(u32, u32, f64)> = Vec::new();
+        for i in first_new..inc.n() {
+            for (c, w) in full.row(i).collect_pairs() {
+                want.push((i as u32, c, w));
+            }
+        }
+        want.sort_unstable_by_key(|&(s, t, _)| (s, t));
+        // Same directed new-source edge set, same weights (identical
+        // calibration math; the tolerance only covers two-term
+        // addition reassociation).
+        assert_eq!(edges.len(), want.len(), "edge sets differ in size");
+        for (&(a, b, w), &(wa, wb, ww)) in edges.iter().zip(&want) {
+            assert_eq!((a, b), (wa, wb));
+            assert!(
+                (w - ww).abs() <= ww.abs() * 1e-9 + 1e-300,
+                "edge {a}->{b}: localized {w} vs full {ww}"
+            );
+        }
+    }
+
+    #[test]
+    fn localized_cost_independent_of_base_size() {
+        // Insert the same batch into bases an order of magnitude apart:
+        // the reweighting work must obey bounds that mention only the
+        // batch size B and the graph's k — never the base size.
+        let k = 10;
+        let b = 8;
+        let (extra, _) = gaussian_mixture(b, 10, 4, 0.0, 31);
+        let mut all_stats = Vec::new();
+        for n_base in [200usize, 2000] {
+            let (m, _) = gaussian_mixture(n_base, 10, 4, 0.0, 21);
+            let knn = exact_knn(&m, k, 2);
+            let wcfg = WeightConfig { perplexity: 8.0, ..Default::default() };
+            let vcfg =
+                LargeVisConfig { samples_per_vertex: 100, threads: 1, ..Default::default() };
+            let graph = weighted_graph(&knn, &wcfg);
+            let mut layout = crate::vis::init_layout(m.n(), 2, 1);
+            crate::vis::sgd::optimize(&graph, &mut layout, &vcfg);
+            let mut inc = IncrementalLayout::new(m, knn, layout, wcfg, vcfg);
+            inc.samples_per_insert = 50;
+            inc.add_points(&extra);
+            let stats = inc.last_localized;
+            assert!(
+                stats.calibrations <= b * (k + 1),
+                "n_base={n_base}: {} calibrations for B={b}, k={k}",
+                stats.calibrations
+            );
+            assert!(
+                stats.edges <= 4 * b * k,
+                "n_base={n_base}: {} localized edges for B={b}, k={k}",
+                stats.edges
+            );
+            all_stats.push(stats);
+        }
+        // The bound held at both scales with the identical formula —
+        // the per-insert reweighting cost does not grow with the graph.
+        assert_eq!(all_stats.len(), 2);
     }
 
     #[test]

@@ -1,17 +1,23 @@
-//! Integration test for the checkpoint-backed query server: run a tiny
+//! Integration test for the live layout query server: run a tiny
 //! pipeline once, then serve its checkpoint directory on an ephemeral
-//! port and exercise every endpoint — including concurrently — with
-//! raw `std::net` HTTP clients. No pipeline stage re-runs at serve
-//! time, and `/embed` must leave the frozen base layout bit-identical.
+//! port and exercise every read endpoint — including concurrently —
+//! with raw `std::net` HTTP clients. No pipeline stage re-runs at
+//! serve time, and `/embed` must leave the base layout bit-identical.
+//! (Write-path coverage — `/insert`, WAL recovery, epoch consistency
+//! under concurrent mutation — lives in `serve_live.rs`.)
 
 use largevis::config::{PipelineConfig, ServeConfig};
 use largevis::coordinator::{run_pipeline, CheckpointPaths};
 use largevis::serve::{Server, ServerState};
 use largevis::util::json::Json;
-use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpStream};
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
+
+#[path = "util/mod.rs"]
+mod util;
+use util::{as_f64, read_keepalive_response, request, request_json};
 
 fn test_dir() -> PathBuf {
     std::env::temp_dir().join(format!("largevis_serve_it_{}", std::process::id()))
@@ -31,44 +37,6 @@ fn checkpointed_run(out_dir: &Path) -> largevis::coordinator::PipelineOutput {
     run_pipeline(&cfg).expect("pipeline run")
 }
 
-/// Minimal blocking HTTP client: one request, returns (status, body).
-fn request(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Vec<u8>) {
-    let mut stream = TcpStream::connect(addr).expect("connect");
-    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-    let body = body.unwrap_or("");
-    let req = format!(
-        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
-        body.len()
-    );
-    stream.write_all(req.as_bytes()).unwrap();
-    let mut raw = Vec::new();
-    stream.read_to_end(&mut raw).expect("read response");
-    let header_end = raw
-        .windows(4)
-        .position(|w| w == b"\r\n\r\n")
-        .expect("header terminator");
-    let head = std::str::from_utf8(&raw[..header_end]).unwrap();
-    let status: u16 = head
-        .split_whitespace()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .expect("status code");
-    (status, raw[header_end + 4..].to_vec())
-}
-
-fn request_json(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
-    let (status, body) = request(addr, method, path, body);
-    let text = String::from_utf8(body).expect("utf8 body");
-    (status, Json::parse(&text).expect("json body"))
-}
-
-fn as_f64(j: &Json) -> f64 {
-    match j {
-        Json::Num(n) => *n,
-        other => panic!("expected number, got {other:?}"),
-    }
-}
-
 #[test]
 fn server_end_to_end() {
     let out_dir = test_dir();
@@ -82,20 +50,26 @@ fn server_end_to_end() {
         threads: 4,
         embed_samples: 200,
         grid: 32,
+        idle_timeout_ms: 2000,
         ..Default::default()
     };
     let state = ServerState::load(cfg).expect("load server state");
-    assert_eq!(state.data.n(), n_base);
-    // Serving answers from checkpoints alone: the layout the server
-    // loaded equals the pipeline's final layout bit for bit.
-    assert_eq!(state.layout, run.layout);
+    {
+        let snap = state.snapshot();
+        assert_eq!(snap.data.n(), n_base);
+        // Serving answers from checkpoints alone: the layout the server
+        // loaded equals the pipeline's final layout bit for bit.
+        assert_eq!(snap.layout, run.layout);
+        assert_eq!(snap.epoch, 0, "fresh checkpoint dir starts at epoch 0");
+    }
 
     let server = Server::bind(state).expect("bind");
     let addr = server.local_addr().unwrap();
     let shared = server.state();
     let handle = server.handle();
-    let layout_before = shared.layout.clone();
-    let data_before = shared.data.clone();
+    let snap0 = shared.snapshot();
+    let layout_before = snap0.layout.clone();
+    let data_before = snap0.data.clone();
     let server_thread = std::thread::spawn(move || server.run());
 
     // --- /healthz ---
@@ -103,11 +77,14 @@ fn server_end_to_end() {
     assert_eq!(status, 200);
     assert_eq!(health.get("status").and_then(|j| j.as_str()), Some("ok"));
     assert_eq!(as_f64(health.get("points").unwrap()) as usize, n_base);
+    assert_eq!(as_f64(health.get("base_points").unwrap()) as usize, n_base);
+    assert_eq!(as_f64(health.get("inserted").unwrap()) as usize, 0);
+    assert_eq!(as_f64(health.get("epoch").unwrap()) as u64, 0);
     assert_eq!(as_f64(health.get("layout_dim").unwrap()) as usize, 2);
     assert!(as_f64(health.get("graph_edges").unwrap()) > 0.0);
 
     // --- /knn: query an exact base row -> itself at distance 0 ---
-    let q: Vec<f32> = shared.data.row(5).to_vec();
+    let q: Vec<f32> = snap0.data.row(5).to_vec();
     let q_json: Vec<String> = q.iter().map(|v| v.to_string()).collect();
     let body = format!("{{\"point\":[{}],\"k\":4}}", q_json.join(","));
     let (status, knn) = request_json(addr, "POST", "/knn", Some(&body));
@@ -124,9 +101,12 @@ fn server_end_to_end() {
     assert_eq!(ids[0] as usize, 5, "nearest neighbor of a base row is itself");
     assert_eq!(dists[0], 0.0);
     assert!(dists.windows(2).all(|w| w[0] <= w[1]), "dists sorted: {dists:?}");
+    // Epoch consistency fields present on every layout response.
+    assert_eq!(as_f64(knn.get("epoch").unwrap()) as u64, 0);
+    assert_eq!(as_f64(knn.get("points").unwrap()) as usize, n_base);
 
     // --- /viewport: full bounds vs a narrow tile ---
-    let (bx0, by0, bx1, by1) = shared.grid.bounds();
+    let (bx0, by0, bx1, by1) = snap0.grid.bounds();
     let (status, svg) = request(
         addr,
         "GET",
@@ -136,6 +116,7 @@ fn server_end_to_end() {
     assert_eq!(status, 200);
     let svg = String::from_utf8(svg).unwrap();
     assert!(svg.starts_with("<svg"), "viewport returns SVG");
+    assert!(svg.contains("epoch=0"), "viewport carries the epoch comment");
     let full_circles = svg.matches("<circle").count();
     assert_eq!(full_circles, n_base, "full-bounds tile draws every point");
     // A narrow central tile: the spatial index must cull — the cells
@@ -163,10 +144,9 @@ fn server_end_to_end() {
     );
 
     // --- /embed: project perturbed copies of base rows ---
-    let d = shared.data.d();
     let mut rows = Vec::new();
     for i in 0..6 {
-        let row: Vec<String> = shared
+        let row: Vec<String> = snap0
             .data
             .row(i * 3)
             .iter()
@@ -203,9 +183,38 @@ fn server_end_to_end() {
         "row 0's perturbed copy should neighbor row 0"
     );
 
-    // The frozen base is bit-identical after embedding.
-    assert_eq!(shared.layout, layout_before, "/embed moved the frozen base layout");
-    assert_eq!(shared.data, data_before, "/embed grew the base dataset");
+    // The base is bit-identical after embedding (no epoch published).
+    let snap_now = shared.snapshot();
+    assert_eq!(snap_now.epoch, 0, "/embed must not publish an epoch");
+    assert_eq!(snap_now.layout, layout_before, "/embed moved the base layout");
+    assert_eq!(snap_now.data, data_before, "/embed grew the base dataset");
+
+    // --- keep-alive: several requests on one connection ---
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        for round in 0..3 {
+            writer
+                .write_all(b"GET /healthz HTTP/1.1\r\nHost: test\r\n\r\n")
+                .unwrap();
+            let (status, connection, body) = read_keepalive_response(&mut reader);
+            assert_eq!(status, 200, "keep-alive round {round}");
+            assert_eq!(connection, "keep-alive", "round {round} closed early");
+            Json::parse(&body).expect("healthz json");
+        }
+        // Client-requested close is honored.
+        writer
+            .write_all(b"GET /healthz HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let (status, connection, _) = read_keepalive_response(&mut reader);
+        assert_eq!(status, 200);
+        assert_eq!(connection, "close");
+        let mut rest = Vec::new();
+        reader.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "server kept the connection open after close");
+    }
 
     // --- error paths ---
     let (status, _) = request(addr, "POST", "/embed", Some("not json"));
@@ -268,7 +277,7 @@ fn server_end_to_end() {
         }
     });
     // Still bit-identical after concurrent embeds.
-    assert_eq!(shared.layout, layout_before);
+    assert_eq!(shared.snapshot().layout, layout_before);
 
     // --- /metrics reflects the traffic ---
     let (status, metrics) = request_json(addr, "GET", "/metrics", None);

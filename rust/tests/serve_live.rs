@@ -1,0 +1,307 @@
+//! Concurrency fuzz test for the live (mutable) layout server:
+//! interleave `POST /insert`/`/insert_batch` writers with
+//! `/knn`+`/viewport`+`/healthz` readers and assert every response is
+//! internally consistent with a single epoch — no torn layout/index
+//! reads — while the server keeps answering lock-free. Then simulate a
+//! restart and assert the WAL recovers every inserted point
+//! bit-identically (data *and* spliced KNN graph).
+
+use largevis::config::{PipelineConfig, ServeConfig};
+use largevis::coordinator::{run_pipeline, CheckpointPaths};
+use largevis::serve::{Server, ServerState};
+use largevis::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+#[path = "util/mod.rs"]
+mod util;
+use util::{as_f64, json_row, request, request_json};
+
+fn test_dir() -> PathBuf {
+    std::env::temp_dir().join(format!("largevis_serve_live_{}", std::process::id()))
+}
+
+fn checkpointed_run(out_dir: &Path) -> largevis::coordinator::PipelineOutput {
+    let mut cfg = PipelineConfig {
+        dataset: "20ng-like".into(),
+        scale: 0.02, // ~380 points
+        k: 8,
+        out_dir: out_dir.to_path_buf(),
+        ..Default::default()
+    };
+    cfg.vis.samples_per_vertex = 300;
+    cfg.knn.forest.n_trees = 2;
+    run_pipeline(&cfg).expect("pipeline run")
+}
+
+/// Every observed `(epoch, points)` pair, across every client. The
+/// torn-read detector: one epoch must never report two sizes.
+struct EpochLog {
+    seen: Mutex<HashMap<u64, usize>>,
+}
+
+impl EpochLog {
+    fn new() -> Self {
+        EpochLog { seen: Mutex::new(HashMap::new()) }
+    }
+
+    fn record(&self, epoch: u64, points: usize, what: &str) {
+        let mut seen = self.seen.lock().unwrap();
+        if let Some(&prev) = seen.get(&epoch) {
+            assert_eq!(
+                prev, points,
+                "torn read: epoch {epoch} reported {prev} and {points} points ({what})"
+            );
+        } else {
+            seen.insert(epoch, points);
+        }
+    }
+}
+
+#[test]
+fn concurrent_inserts_epoch_consistency_and_wal_recovery() {
+    let out_dir = test_dir();
+    // A stale run may exist from an earlier failed attempt.
+    std::fs::remove_dir_all(&out_dir).ok();
+    let run = checkpointed_run(&out_dir);
+    let n_base = run.layout.n();
+    let ckpt = CheckpointPaths::new(&out_dir);
+
+    let cfg = ServeConfig {
+        checkpoints: ckpt.dir.clone(),
+        addr: "127.0.0.1:0".to_string(),
+        threads: 4,
+        insert_samples: 60,
+        refine_samples: 40,
+        refine_interval_ms: 50,
+        idle_timeout_ms: 2000,
+        grid: 32,
+        ..Default::default()
+    };
+    let state = ServerState::load(cfg.clone()).expect("load server state");
+    let server = Server::bind(state).expect("bind");
+    let addr = server.local_addr().unwrap();
+    let shared = server.state();
+    let handle = server.handle();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let base_snap = shared.snapshot();
+    let d = base_snap.data.d();
+    assert_eq!(base_snap.epoch, 0);
+
+    // --- phase 1: concurrent writers + readers ---
+    let writers = 3usize;
+    let batches_per_writer = 3usize;
+    let rows_per_batch = 3usize;
+    let readers = 4usize;
+    let reader_rounds = 10usize;
+    let log = EpochLog::new();
+
+    std::thread::scope(|s| {
+        for wid in 0..writers {
+            let log = &log;
+            let base_snap = &base_snap;
+            s.spawn(move || {
+                for b in 0..batches_per_writer {
+                    // Perturbed copies of base rows: valid dims, finite,
+                    // unique per (writer, batch, row).
+                    let mut rows = Vec::new();
+                    for r in 0..rows_per_batch {
+                        let src = (wid * 31 + b * 7 + r) % base_snap.data.n();
+                        let vals: Vec<f32> = base_snap
+                            .data
+                            .row(src)
+                            .iter()
+                            .map(|v| v + 0.01 * (1 + wid + b + r) as f32)
+                            .collect();
+                        rows.push(json_row(&vals));
+                    }
+                    let body = format!("{{\"points\":[{}]}}", rows.join(","));
+                    let (status, resp) =
+                        request_json(addr, "POST", "/insert_batch", Some(&body));
+                    assert_eq!(status, 200, "insert_batch failed: {resp:?}");
+                    let epoch = as_f64(resp.get("epoch").unwrap()) as u64;
+                    let points = as_f64(resp.get("points").unwrap()) as usize;
+                    let ids = match resp.get("ids") {
+                        Some(Json::Arr(a)) => a.iter().map(as_f64).collect::<Vec<_>>(),
+                        other => panic!("ids: {other:?}"),
+                    };
+                    assert_eq!(ids.len(), rows_per_batch);
+                    assert!(epoch >= 1);
+                    // The insert's own ids are inside its epoch's size.
+                    for &id in &ids {
+                        assert!((id as usize) < points, "id {id} outside {points} points");
+                        assert!(id as usize >= n_base, "id {id} collides with the base");
+                    }
+                    log.record(epoch, points, "insert_batch");
+                }
+            });
+        }
+        for rid in 0..readers {
+            let log = &log;
+            let q: Vec<f32> = base_snap.data.row(rid * 2).to_vec();
+            s.spawn(move || {
+                for round in 0..reader_rounds {
+                    match round % 3 {
+                        0 => {
+                            let (status, h) = request_json(addr, "GET", "/healthz", None);
+                            assert_eq!(status, 200);
+                            let epoch = as_f64(h.get("epoch").unwrap()) as u64;
+                            let points = as_f64(h.get("points").unwrap()) as usize;
+                            let inserted = as_f64(h.get("inserted").unwrap()) as usize;
+                            assert_eq!(points, n_base + inserted, "healthz fields disagree");
+                            log.record(epoch, points, "healthz");
+                        }
+                        1 => {
+                            let body = format!("{{\"point\":{},\"k\":3}}", json_row(&q));
+                            let (status, j) = request_json(addr, "POST", "/knn", Some(&body));
+                            assert_eq!(status, 200);
+                            let epoch = as_f64(j.get("epoch").unwrap()) as u64;
+                            let points = as_f64(j.get("points").unwrap()) as usize;
+                            let ids = match j.get("ids") {
+                                Some(Json::Arr(a)) => a.iter().map(as_f64).collect::<Vec<_>>(),
+                                other => panic!("ids: {other:?}"),
+                            };
+                            // Internal consistency: every id addresses
+                            // the same epoch's dataset.
+                            for &id in &ids {
+                                assert!(
+                                    (id as usize) < points,
+                                    "knn id {id} outside epoch {epoch}'s {points} points"
+                                );
+                            }
+                            log.record(epoch, points, "knn");
+                        }
+                        _ => {
+                            let (status, svg) = request(addr, "GET", "/viewport", None);
+                            assert_eq!(status, 200);
+                            let svg = String::from_utf8(svg).unwrap();
+                            // Parse the trailing `<!-- epoch=E points=N -->`.
+                            let tag = svg.rsplit("epoch=").next().unwrap();
+                            let epoch: u64 =
+                                tag.split_whitespace().next().unwrap().parse().unwrap();
+                            let points: usize = tag
+                                .split("points=")
+                                .nth(1)
+                                .unwrap()
+                                .split_whitespace()
+                                .next()
+                                .unwrap()
+                                .trim_end_matches("-->")
+                                .parse()
+                                .unwrap();
+                            let circles = svg.matches("<circle").count();
+                            assert!(
+                                circles <= points,
+                                "viewport drew {circles} points, epoch {epoch} holds {points}"
+                            );
+                            log.record(epoch, points, "viewport");
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let total_inserted = writers * batches_per_writer * rows_per_batch;
+
+    // --- a distinctive point is immediately findable via /knn ---
+    let marker: Vec<f32> = (0..d).map(|i| 42.5 + i as f32).collect();
+    let body = format!("{{\"point\":{}}}", json_row(&marker));
+    let (status, ins) = request_json(addr, "POST", "/insert", Some(&body));
+    assert_eq!(status, 200, "single insert failed: {ins:?}");
+    let marker_id = match ins.get("ids") {
+        Some(Json::Arr(a)) => as_f64(&a[0]) as usize,
+        other => panic!("ids: {other:?}"),
+    };
+    let body = format!("{{\"point\":{},\"k\":2}}", json_row(&marker));
+    let (status, j) = request_json(addr, "POST", "/knn", Some(&body));
+    assert_eq!(status, 200);
+    let (ids, dists) = match (j.get("ids"), j.get("dists")) {
+        (Some(Json::Arr(a)), Some(Json::Arr(b))) => (
+            a.iter().map(as_f64).collect::<Vec<_>>(),
+            b.iter().map(as_f64).collect::<Vec<_>>(),
+        ),
+        other => panic!("knn response: {other:?}"),
+    };
+    assert_eq!(ids[0] as usize, marker_id, "marker point not its own nearest neighbor");
+    assert_eq!(dists[0], 0.0);
+
+    // --- the full set is visible through the spatial index ---
+    let final_snap = shared.snapshot();
+    assert_eq!(final_snap.data.n(), n_base + total_inserted + 1);
+    let (status, svg) = request(
+        addr,
+        "GET",
+        "/viewport?x0=-100000&y0=-100000&x1=100000&y1=100000",
+        None,
+    );
+    assert_eq!(status, 200);
+    let svg = String::from_utf8(svg).unwrap();
+    let circles = svg.matches("<circle").count();
+    assert_eq!(
+        circles,
+        final_snap.data.n(),
+        "wide viewport must draw every live point (base + inserted)"
+    );
+
+    // --- metrics cover the write path ---
+    let (_, metrics) = request_json(addr, "GET", "/metrics", None);
+    assert!(
+        as_f64(metrics.get("insert.points").unwrap()) as usize >= total_inserted + 1,
+        "insert.points metric missing traffic"
+    );
+
+    // The base prefix of the layout never moves, no matter how much
+    // insert/refine traffic happened.
+    for i in 0..n_base {
+        assert_eq!(
+            final_snap.layout.row(i),
+            run.layout.row(i),
+            "frozen base point {i} moved under live traffic"
+        );
+    }
+
+    // --- simulated restart: WAL replay bit-identity ---
+    handle.shutdown();
+    server_thread.join().expect("server thread").expect("server run");
+    let pre_data = final_snap.data.clone();
+    let pre_knn = final_snap.knn.clone();
+    let pre_epoch_points = final_snap.data.n();
+    drop(final_snap);
+    drop(base_snap);
+    drop(shared); // close the old WAL handle before reopening
+
+    assert!(ckpt.wal.exists(), "no WAL written by live inserts");
+    let restarted = ServerState::load(cfg).expect("reload with WAL replay");
+    let snap = restarted.snapshot();
+    // Every acknowledged insert recovered, bit for bit: the raw points
+    // and the spliced KNN graph both match the pre-restart state.
+    assert_eq!(snap.data.n(), pre_epoch_points);
+    assert_eq!(snap.data, pre_data, "WAL replay lost or altered inserted points");
+    assert_eq!(snap.knn.k, pre_knn.k);
+    assert_eq!(
+        snap.knn.neighbors, pre_knn.neighbors,
+        "WAL replay produced a different spliced KNN graph"
+    );
+    // One recovered epoch per WAL batch (insert request).
+    let expected_batches = (writers * batches_per_writer + 1) as u64;
+    assert_eq!(snap.epoch, expected_batches);
+    assert!(snap.layout.as_slice().iter().all(|v| v.is_finite()));
+    assert_eq!(snap.layout.n(), snap.data.n());
+
+    // --- read-only mode refuses writes but still recovers the WAL ---
+    let ro_cfg = ServeConfig {
+        checkpoints: ckpt.dir.clone(),
+        read_only: true,
+        ..ServeConfig::default()
+    };
+    drop(snap);
+    drop(restarted);
+    let ro = ServerState::load(ro_cfg).expect("read-only load");
+    assert_eq!(ro.snapshot().data.n(), pre_epoch_points, "read-only replay incomplete");
+    let one = largevis::data::matrix::Matrix::from_vec(vec![0.5; d], 1, d);
+    let err = format!("{:#}", ro.insert(&one).unwrap_err());
+    assert!(err.contains("read-only"), "{err}");
+}

@@ -1,0 +1,116 @@
+//! Minimal blocking HTTP client helpers shared (via `#[path]`
+//! inclusion) by the serve integration tests and the serve bench — one
+//! copy of the request framing, so a protocol tweak lands everywhere.
+#![allow(dead_code)] // each includer uses a subset
+
+use largevis::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// One request on its own connection (explicit `Connection: close`);
+/// returns `(status, body)`.
+pub fn request(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let header_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("header terminator");
+    let head = std::str::from_utf8(&raw[..header_end]).unwrap();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status code");
+    (status, raw[header_end + 4..].to_vec())
+}
+
+/// [`request`] with the body parsed as JSON.
+pub fn request_json(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let (status, body) = request(addr, method, path, body);
+    let text = String::from_utf8(body).expect("utf8 body");
+    (status, Json::parse(&text).expect("json body"))
+}
+
+/// Extract a JSON number or panic with context.
+pub fn as_f64(j: &Json) -> f64 {
+    match j {
+        Json::Num(n) => *n,
+        other => panic!("expected number, got {other:?}"),
+    }
+}
+
+/// Format a float slice as a JSON array literal.
+pub fn json_row(vals: &[f32]) -> String {
+    let parts: Vec<String> = vals.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", parts.join(","))
+}
+
+/// Read one keep-alive response off a persistent connection: headers
+/// until the blank line, then exactly `Content-Length` body bytes.
+/// Returns `(status, connection_header, body)`.
+pub fn read_keepalive_response(r: &mut BufReader<TcpStream>) -> (u16, String, String) {
+    let mut status_line = String::new();
+    r.read_line(&mut status_line).expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status code");
+    let mut content_length = 0usize;
+    let mut connection = String::new();
+    loop {
+        let mut line = String::new();
+        r.read_line(&mut line).expect("header line");
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        let lower = line.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_length = v.trim().parse().expect("content length");
+        }
+        if let Some(v) = lower.strip_prefix("connection:") {
+            connection = v.trim().to_string();
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body).expect("body");
+    (status, connection, String::from_utf8(body).expect("utf8 body"))
+}
+
+/// A persistent keep-alive connection issuing many requests.
+pub struct KeepAlive {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl KeepAlive {
+    /// Open a persistent connection to `addr`.
+    pub fn connect(addr: SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let writer = stream.try_clone().expect("clone");
+        KeepAlive { writer, reader: BufReader::new(stream) }
+    }
+
+    /// Issue one request on the persistent connection; returns the
+    /// status code (response body is drained by Content-Length).
+    pub fn request(&mut self, method: &str, path: &str, body: &str) -> u16 {
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.writer.write_all(req.as_bytes()).expect("send");
+        read_keepalive_response(&mut self.reader).0
+    }
+}
