@@ -92,6 +92,22 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // Readiness-probe throughput (the endpoint load balancers poll;
+    // keep-alive, no body, no snapshot work).
+    {
+        let mut conn = KeepAlive::connect(addr);
+        let t = Timer::start("readyz");
+        for _ in 0..queries {
+            assert_eq!(conn.request("GET", "/readyz", ""), 200);
+        }
+        let secs = t.report();
+        let qps = queries as f64 / secs.max(1e-9);
+        table.row(&["readyz/keep-alive".into(), "req/s".into(), format!("{qps:.0}")]);
+        json_rows.push(format!(
+            "{{\"workload\":\"readyz\",\"requests\":{queries},\"secs\":{secs:.4},\"per_sec\":{qps:.1}}}"
+        ));
+    }
+
     // Insert throughput (single-point inserts over keep-alive; each
     // request WALs, splices, places and publishes an epoch).
     {

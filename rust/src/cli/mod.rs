@@ -25,7 +25,8 @@ const VALUE_KEYS: &[&str] = &[
     "ml-levels", "ml-min-size", "ml-coarse-samples", "ml-jitter", "ml-rho-decay", "checkpoints",
     "addr", "embed-samples", "embed-k", "grid", "tile-max-points", "max-body-bytes",
     "insert-samples", "refine-samples", "refine-interval-ms", "keep-alive-max",
-    "idle-timeout-ms",
+    "idle-timeout-ms", "max-inflight", "write-timeout-ms", "wal-segment-bytes",
+    "wal-max-segments", "recovery-policy",
 ];
 
 /// Parse a raw argument vector (without argv[0]).
@@ -147,10 +148,19 @@ SERVE (largevis serve):
     --refine-interval-ms <n>  refinement worker wake interval (default 250)
     --keep-alive-max <n>  requests served per connection (default 1000)
     --idle-timeout-ms <n> keep-alive idle timeout (default 5000)
+    --max-inflight <n>    admitted-connection bound; beyond it requests are
+                          shed with 503 + Retry-After (default 0 = 2*threads+8)
+    --write-timeout-ms <n>  per-connection socket write timeout (default 10000)
+    --wal-segment-bytes <n>  rotate the active WAL past this size (default 64MiB)
+    --wal-max-segments <n>   compact into the checkpoints after this many
+                             sealed segments (default 4)
+    --recovery-policy <p>    WAL corruption handling: fail_fast (default) or
+                             truncate (salvage clean prefix, quarantine rest)
     Endpoints: POST /embed, POST /knn, POST /insert, POST /insert_batch,
-               GET /viewport, GET /healthz, GET /metrics
+               GET /viewport, GET /healthz, GET /readyz, GET /metrics
     Live inserts are WAL-logged to <checkpoints>/inserts.wal and replayed
-    on startup, so a restarted server recovers them bit-identically.
+    on startup, so a restarted server recovers them bit-identically;
+    /readyz answers 503 until that replay finishes.
 ";
 
 #[cfg(test)]

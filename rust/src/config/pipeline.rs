@@ -2,6 +2,7 @@
 //! and/or CLI overrides.
 
 use crate::config::ini::Ini;
+use crate::data::formats::wal::RecoveryPolicy;
 use crate::graph::weights::WeightConfig;
 use crate::knn::explore::LargeVisKnnConfig;
 use crate::knn::rptree::RpForestConfig;
@@ -180,6 +181,26 @@ pub struct ServeConfig {
     /// Keep-alive idle timeout in milliseconds: a connection with no
     /// next request within this window is closed.
     pub idle_timeout_ms: u64,
+    /// Maximum connections admitted concurrently; arrivals beyond this
+    /// are shed with `503` + `Retry-After` (0 = auto: `2×threads + 8`).
+    pub max_inflight: usize,
+    /// Per-connection socket write timeout in milliseconds — a stalled
+    /// client cannot pin a worker forever.
+    pub write_timeout_ms: u64,
+    /// Rotate the active WAL segment once it exceeds this many bytes
+    /// (bounds replay work after a crash).
+    pub wal_segment_bytes: u64,
+    /// Compact sealed WAL segments into the checkpoints once this many
+    /// have accumulated.
+    pub wal_max_segments: usize,
+    /// What to do when WAL replay hits a corrupt record: fail fast
+    /// (default) or truncate to the clean prefix, quarantine the rest,
+    /// and count it in `/metrics`.
+    pub recovery_policy: RecoveryPolicy,
+    /// Test hook: expose `GET /__panic` (panics in the handler) so the
+    /// per-connection panic containment can be exercised. Never set
+    /// from INI/CLI.
+    pub debug_panic: bool,
 }
 
 impl Default for ServeConfig {
@@ -199,6 +220,12 @@ impl Default for ServeConfig {
             refine_interval_ms: 250,
             keep_alive_max: 1000,
             idle_timeout_ms: 5000,
+            max_inflight: 0,
+            write_timeout_ms: 10_000,
+            wal_segment_bytes: 64 << 20,
+            wal_max_segments: 4,
+            recovery_policy: RecoveryPolicy::FailFast,
+            debug_panic: false,
         }
     }
 }
@@ -227,6 +254,14 @@ impl ServeConfig {
             ini.get_or("serve", "refine_interval_ms", cfg.refine_interval_ms)?;
         cfg.keep_alive_max = ini.get_or("serve", "keep_alive_max", cfg.keep_alive_max)?;
         cfg.idle_timeout_ms = ini.get_or("serve", "idle_timeout_ms", cfg.idle_timeout_ms)?;
+        cfg.max_inflight = ini.get_or("serve", "max_inflight", cfg.max_inflight)?;
+        cfg.write_timeout_ms = ini.get_or("serve", "write_timeout_ms", cfg.write_timeout_ms)?;
+        cfg.wal_segment_bytes =
+            ini.get_or("serve", "wal_segment_bytes", cfg.wal_segment_bytes)?;
+        cfg.wal_max_segments =
+            ini.get_or("serve", "wal_max_segments", cfg.wal_max_segments)?;
+        cfg.recovery_policy =
+            ini.get_or("serve", "recovery_policy", cfg.recovery_policy)?;
         Ok(cfg)
     }
 }
@@ -388,8 +423,14 @@ mod tests {
         assert_eq!(c.embed_k, 0);
         assert!(!c.read_only);
         assert!(c.keep_alive_max > 1);
+        assert_eq!(c.max_inflight, 0);
+        assert_eq!(c.write_timeout_ms, 10_000);
+        assert_eq!(c.wal_segment_bytes, 64 << 20);
+        assert_eq!(c.wal_max_segments, 4);
+        assert_eq!(c.recovery_policy, RecoveryPolicy::FailFast);
+        assert!(!c.debug_panic);
         let ini = Ini::parse(
-            "[serve]\ncheckpoints = target/mnist/checkpoints\naddr = 0.0.0.0:9000\nthreads = 8\nembed_samples = 250\nembed_k = 20\ngrid = 128\ntile_max_points = 5000\nread_only = yes\ninsert_samples = 300\nrefine_samples = 100\nrefine_interval_ms = 500\nkeep_alive_max = 64\nidle_timeout_ms = 2500",
+            "[serve]\ncheckpoints = target/mnist/checkpoints\naddr = 0.0.0.0:9000\nthreads = 8\nembed_samples = 250\nembed_k = 20\ngrid = 128\ntile_max_points = 5000\nread_only = yes\ninsert_samples = 300\nrefine_samples = 100\nrefine_interval_ms = 500\nkeep_alive_max = 64\nidle_timeout_ms = 2500\nmax_inflight = 32\nwrite_timeout_ms = 1500\nwal_segment_bytes = 1048576\nwal_max_segments = 2\nrecovery_policy = truncate",
         )
         .unwrap();
         let c = ServeConfig::from_ini(&ini).unwrap();
@@ -409,6 +450,13 @@ mod tests {
         assert_eq!(c.refine_interval_ms, 500);
         assert_eq!(c.keep_alive_max, 64);
         assert_eq!(c.idle_timeout_ms, 2500);
+        assert_eq!(c.max_inflight, 32);
+        assert_eq!(c.write_timeout_ms, 1500);
+        assert_eq!(c.wal_segment_bytes, 1_048_576);
+        assert_eq!(c.wal_max_segments, 2);
+        assert_eq!(c.recovery_policy, RecoveryPolicy::Truncate);
+        let bad = Ini::parse("[serve]\nrecovery_policy = maybe").unwrap();
+        assert!(ServeConfig::from_ini(&bad).is_err());
     }
 
     #[test]

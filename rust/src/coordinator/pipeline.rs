@@ -85,6 +85,14 @@ impl CheckpointPaths {
             dir: dir.to_path_buf(),
         }
     }
+
+    /// Commit marker of an in-flight WAL compaction (`compact.commit`).
+    /// Its presence means the staged `*.tmp` checkpoints are complete
+    /// and durable; server startup rolls the compaction forward before
+    /// loading anything.
+    pub fn compact_marker(&self) -> PathBuf {
+        self.dir.join("compact.commit")
+    }
 }
 
 /// Stage 1: load points + labels from `cfg.input`, or generate the
@@ -212,9 +220,27 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineOutput> {
             // A live-insert WAL from an earlier serve run is bound to
             // the base this run just replaced — replaying it against
             // the new base would be garbage. Same stale-checkpoint
-            // hazard as labels.lbl below.
+            // hazard as labels.lbl below. The WAL is a *set* now
+            // (active log + sealed `inserts.wal.N` segments +
+            // quarantined rejects), and a serve-side compaction may
+            // have left a commit marker or staged `*.tmp` artifacts;
+            // all of them refer to the replaced base.
             if ckpt.wal.exists() {
                 std::fs::remove_file(&ckpt.wal)?;
+            }
+            let marker = ckpt.compact_marker();
+            if marker.exists() {
+                std::fs::remove_file(&marker)?;
+            }
+            for entry in std::fs::read_dir(&ckpt.dir)? {
+                let p = entry?.path();
+                let stale = p
+                    .file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("inserts.wal") || n.ends_with(".tmp"));
+                if stale && p.is_file() {
+                    std::fs::remove_file(&p)?;
+                }
             }
             match &ds.labels {
                 Some(ls) => write_labels(&ckpt.labels, ls)?,

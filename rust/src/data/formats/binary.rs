@@ -14,8 +14,9 @@
 
 use crate::data::formats::{DEFAULT_CHUNK_ROWS, UNTRUSTED_CAPACITY_HINT};
 use crate::data::matrix::Matrix;
+use crate::util::faultio::{DurableFile, RealStorage, Storage};
 use anyhow::{bail, Context, Result};
-use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::io::{BufReader, BufWriter, Read, SeekFrom, Write};
 use std::path::Path;
 
 /// File magic for binary matrices.
@@ -220,7 +221,13 @@ pub fn read_binary(path: &Path) -> Result<Matrix> {
 
 /// Write a whole matrix to `path` in `.lvec` format.
 pub fn write_binary(path: &Path, m: &Matrix) -> Result<()> {
-    let mut w = MatrixWriter::create(path, m.d())?;
+    write_binary_with(&RealStorage, path, m)
+}
+
+/// [`write_binary`] through an explicit [`Storage`] — the durable
+/// (fault-injectable) path WAL compaction uses.
+pub fn write_binary_with(storage: &dyn Storage, path: &Path, m: &Matrix) -> Result<()> {
+    let mut w = MatrixWriter::create_with(storage, path, m.d())?;
     w.write_values(m.as_slice())?;
     let n = w.finish()?;
     debug_assert_eq!(n, m.n());
@@ -229,9 +236,11 @@ pub fn write_binary(path: &Path, m: &Matrix) -> Result<()> {
 
 /// Append-only streaming writer; the header's `n` is patched at
 /// [`MatrixWriter::finish`], so callers can stream without knowing the
-/// row count up front.
+/// row count up front. All I/O goes through a [`DurableFile`], and
+/// `finish` syncs file contents before returning, so a completed write
+/// survives a crash.
 pub struct MatrixWriter {
-    w: BufWriter<std::fs::File>,
+    w: BufWriter<Box<dyn DurableFile>>,
     d: usize,
     rows: usize,
     partial: usize,
@@ -241,10 +250,17 @@ pub struct MatrixWriter {
 }
 
 impl MatrixWriter {
-    /// Create `path`, writing a header with a placeholder row count.
+    /// Create `path` on the real filesystem, writing a header with a
+    /// placeholder row count.
     pub fn create(path: &Path, d: usize) -> Result<Self> {
-        let f =
-            std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+        MatrixWriter::create_with(&RealStorage, path, d)
+    }
+
+    /// [`MatrixWriter::create`] through an explicit [`Storage`].
+    pub fn create_with(storage: &dyn Storage, path: &Path, d: usize) -> Result<Self> {
+        let f = storage
+            .create_durable(path)
+            .with_context(|| format!("create {}", path.display()))?;
         let mut w = BufWriter::new(f);
         w.write_all(MAGIC)?;
         w.write_all(&VERSION.to_le_bytes())?;
@@ -279,7 +295,8 @@ impl MatrixWriter {
         self.rows
     }
 
-    /// Flush, patch the header's row count, and return it.
+    /// Flush, patch the header's row count, fsync, and return the
+    /// count. Only after `finish` returns `Ok` is the file durable.
     pub fn finish(mut self) -> Result<usize> {
         if self.partial != 0 {
             bail!(
@@ -293,7 +310,8 @@ impl MatrixWriter {
         let mut f = self.w.into_inner().map_err(|e| anyhow::anyhow!("flush: {e}"))?;
         f.seek(SeekFrom::Start(N_OFFSET))?;
         f.write_all(&(self.rows as u64).to_le_bytes())?;
-        f.flush()?;
+        f.sync_data()
+            .with_context(|| format!("sync {}", self.path.display()))?;
         Ok(self.rows)
     }
 }

@@ -23,6 +23,7 @@ use crate::data::formats::binary::{
 use crate::data::formats::UNTRUSTED_CAPACITY_HINT;
 use crate::graph::sparse::CsrGraph;
 use crate::knn::KnnGraph;
+use crate::util::faultio::{DurableFile, RealStorage, Storage};
 use anyhow::{bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -31,12 +32,28 @@ const KNN_MAGIC: &[u8; 4] = b"LVKN";
 const CSR_MAGIC: &[u8; 4] = b"LVCS";
 const VERSION: u32 = 1;
 
-fn open_writer(path: &Path, magic: &[u8; 4]) -> Result<BufWriter<std::fs::File>> {
-    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+fn open_writer(
+    storage: &dyn Storage,
+    path: &Path,
+    magic: &[u8; 4],
+) -> Result<BufWriter<Box<dyn DurableFile>>> {
+    let f = storage
+        .create_durable(path)
+        .with_context(|| format!("create {}", path.display()))?;
     let mut w = BufWriter::new(f);
     w.write_all(magic)?;
     w.write_all(&VERSION.to_le_bytes())?;
     Ok(w)
+}
+
+/// Flush a checkpoint writer and fsync its contents — only then is the
+/// checkpoint durable (compaction renames it into place afterwards).
+fn finish_writer(mut w: BufWriter<Box<dyn DurableFile>>, path: &Path) -> Result<()> {
+    w.flush()?;
+    let mut f = w.into_inner().map_err(|e| anyhow::anyhow!("flush: {e}"))?;
+    f.sync_data()
+        .with_context(|| format!("sync {}", path.display()))?;
+    Ok(())
 }
 
 fn open_reader(path: &Path, magic: &[u8; 4]) -> Result<BufReader<std::fs::File>> {
@@ -48,7 +65,13 @@ fn open_reader(path: &Path, magic: &[u8; 4]) -> Result<BufReader<std::fs::File>>
 
 /// Write a KNN graph checkpoint.
 pub fn write_knn(path: &Path, g: &KnnGraph) -> Result<()> {
-    let mut w = open_writer(path, KNN_MAGIC)?;
+    write_knn_with(&RealStorage, path, g)
+}
+
+/// [`write_knn`] through an explicit [`Storage`] — the durable
+/// (fault-injectable) path WAL compaction uses.
+pub fn write_knn_with(storage: &dyn Storage, path: &Path, g: &KnnGraph) -> Result<()> {
+    let mut w = open_writer(storage, path, KNN_MAGIC)?;
     w.write_all(&(g.n() as u64).to_le_bytes())?;
     w.write_all(&(g.k as u64).to_le_bytes())?;
     let mut buf: Vec<u8> = Vec::new();
@@ -61,8 +84,7 @@ pub fn write_knn(path: &Path, g: &KnnGraph) -> Result<()> {
         }
         w.write_all(&buf)?;
     }
-    w.flush()?;
-    Ok(())
+    finish_writer(w, path)
 }
 
 /// Read a KNN graph checkpoint (bit-identical to what was written).
@@ -101,15 +123,19 @@ pub fn read_knn(path: &Path) -> Result<KnnGraph> {
 
 /// Write a CSR graph checkpoint.
 pub fn write_csr(path: &Path, g: &CsrGraph) -> Result<()> {
-    let mut w = open_writer(path, CSR_MAGIC)?;
+    write_csr_with(&RealStorage, path, g)
+}
+
+/// [`write_csr`] through an explicit [`Storage`].
+pub fn write_csr_with(storage: &dyn Storage, path: &Path, g: &CsrGraph) -> Result<()> {
+    let mut w = open_writer(storage, path, CSR_MAGIC)?;
     w.write_all(&(g.n() as u64).to_le_bytes())?;
     w.write_all(&(g.cols().len() as u64).to_le_bytes())?;
     let mut buf: Vec<u8> = Vec::new();
     write_array(&mut w, g.offsets(), &mut buf, |o: u64| o.to_le_bytes())?;
     write_array(&mut w, g.cols(), &mut buf, |c: u32| c.to_le_bytes())?;
     write_array(&mut w, g.weights(), &mut buf, |x: f64| x.to_bits().to_le_bytes())?;
-    w.flush()?;
-    Ok(())
+    finish_writer(w, path)
 }
 
 /// Read a CSR graph checkpoint; structure is re-validated via

@@ -3,51 +3,110 @@
 //! The live query server accepts `POST /insert` while running; those
 //! points must survive a restart without rewriting the (potentially
 //! huge) base checkpoints on every request. Each accepted batch is
-//! appended to `inserts.wal` in the checkpoint directory *before* it is
-//! applied to the in-memory state, and replayed in order at startup —
-//! the recovered dataset is bit-identical to the pre-restart one.
+//! appended to the active log *before* it is applied to the in-memory
+//! state, and replayed in order at startup — the recovered dataset is
+//! bit-identical to the pre-restart one.
 //!
-//! # Record format
+//! # Record format (version 2)
 //!
 //! File header: 4-byte magic `LVWL`, `u32` version (LE, like every
-//! other on-disk format here), then `u32 d` — the point dimensionality
-//! the log is bound to (a WAL can never be replayed against a base of
-//! a different width). Records follow back to back:
+//! other on-disk format here), `u32 d` — the point dimensionality the
+//! log is bound to (a WAL can never be replayed against a base of a
+//! different width) — then `u64 base_seq`, the absolute sequence
+//! number of the file's first record (segments after the first start
+//! above zero). Records follow back to back:
 //!
 //! ```text
-//! u64 seq        batch sequence number (0-based, strictly increasing)
+//! u64 seq        absolute batch sequence number (strictly increasing)
 //! u32 rows       points in this batch (1 ..= MAX_WAL_BATCH_ROWS)
 //! rows × d × f32 row-major point payload (bit patterns)
-//! u32 checksum   FNV-1a over the payload bytes
+//! u32 checksum   FNV-1a over seq ‖ rows ‖ payload (v1: payload only)
 //! ```
 //!
-//! A crash mid-append leaves a torn tail; replay stops at the first
-//! short read, sequence gap, or checksum mismatch and reports how many
-//! complete batches survived — standard WAL semantics. The writer
-//! then continues appending *after* the surviving prefix (the file is
-//! truncated to it on open), so one torn record never poisons the log;
-//! a *failed* append likewise rolls the file back to the last complete
-//! record before surfacing the error (see [`WalWriter::append`]).
+//! Version 1 files (12-byte header, implicit `base_seq = 0`, checksum
+//! over the payload only) are still read, and a writer resuming a v1
+//! file keeps appending v1 records so the file stays self-consistent.
+//! Version 2 exists because the v1 checksum left the `seq`/`rows`
+//! fields unprotected: a bit flip there was misdiagnosed as a torn
+//! tail.
+//!
+//! # Tails, corruption, and [`RecoveryPolicy`]
+//!
+//! A crash mid-append leaves a *torn tail*: a prefix of the true final
+//! record. Replay detects it as a short read (or a checksum mismatch
+//! on the final record), truncates it, and continues — that is normal
+//! WAL recovery, not data loss, because a torn record was by
+//! definition never acknowledged. Anything else — a record whose
+//! fully-readable header fields are invalid, a checksum mismatch with
+//! more log after it, a sealed segment that does not end cleanly — is
+//! *corruption*: acknowledged data is at risk, and the configured
+//! [`RecoveryPolicy`] decides between failing fast and salvaging the
+//! surviving prefix (counted, so operators can alert on it).
+//!
+//! # Segments
+//!
+//! [`WalSet`] manages the active log plus its sealed, read-only
+//! predecessors (`inserts.wal.0`, `inserts.wal.1`, …). Sealing is one
+//! atomic rename; compaction absorbs every logged batch into the base
+//! checkpoints and resets the set to a single empty segment (see the
+//! server's checkpoint compaction), which is what keeps replay time
+//! bounded by the segment budget instead of total insert history.
+//!
+//! All file I/O goes through [`crate::util::faultio::Storage`], so the
+//! crash-recovery torture tests can inject short writes, fsync
+//! failures, ENOSPC, and torn writes at every point of this module.
 
-use crate::data::formats::binary::{check_magic, read_u32, read_u64};
 use crate::data::matrix::Matrix;
+use crate::util::faultio::{RealStorage, Storage};
 use anyhow::{bail, Context, Result};
-use std::io::{BufReader, Read, Seek, SeekFrom, Write};
+use std::io::{BufReader, Read, SeekFrom};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// WAL file magic.
 pub const MAGIC: &[u8; 4] = b"LVWL";
-/// WAL format version.
-pub const VERSION: u32 = 1;
+/// WAL format version written to fresh files.
+pub const VERSION: u32 = 2;
 /// Cap on rows per WAL record (a lying length prefix must not drive an
 /// unbounded allocation; the server's per-request insert cap is far
 /// smaller).
 pub const MAX_WAL_BATCH_ROWS: usize = 1 << 20;
 
-/// FNV-1a over `bytes` — cheap, dependency-free corruption detection
-/// for the torn-tail case (not an integrity MAC).
-fn fnv1a(bytes: &[u8]) -> u32 {
-    let mut h: u32 = 0x811c9dc5;
+/// What replay does when it finds *corruption* (as opposed to an
+/// ordinary torn tail, which is always truncated silently).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Refuse to start: surface the corruption to the operator rather
+    /// than silently dropping acknowledged data. The safe default.
+    #[default]
+    FailFast,
+    /// Salvage the longest clean prefix, quarantine the rest, and
+    /// count what was dropped (`serve.wal_corrupt_segments`).
+    Truncate,
+}
+
+impl std::str::FromStr for RecoveryPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fail_fast" | "fail-fast" | "failfast" => Ok(RecoveryPolicy::FailFast),
+            "truncate" | "skip_corrupt" | "skip-corrupt" => Ok(RecoveryPolicy::Truncate),
+            other => Err(format!("unknown recovery policy '{other}' (fail_fast | truncate)")),
+        }
+    }
+}
+
+impl std::fmt::Display for RecoveryPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecoveryPolicy::FailFast => write!(f, "fail_fast"),
+            RecoveryPolicy::Truncate => write!(f, "truncate"),
+        }
+    }
+}
+
+fn fnv1a_update(mut h: u32, bytes: &[u8]) -> u32 {
     for &b in bytes {
         h ^= b as u32;
         h = h.wrapping_mul(0x01000193);
@@ -55,7 +114,59 @@ fn fnv1a(bytes: &[u8]) -> u32 {
     h
 }
 
-/// The surviving content of a WAL file: complete batches only.
+/// FNV-1a over `bytes` — cheap, dependency-free corruption detection
+/// for the torn-tail case (not an integrity MAC).
+pub fn fnv1a(bytes: &[u8]) -> u32 {
+    fnv1a_update(0x811c9dc5, bytes)
+}
+
+/// The checksum a record carries, by format version: v2 covers the
+/// record header (`seq`, `rows`) and the payload; v1 covered only the
+/// payload.
+pub fn record_checksum(version: u32, seq: u64, rows: u32, payload: &[u8]) -> u32 {
+    if version >= 2 {
+        let mut h = fnv1a_update(0x811c9dc5, &seq.to_le_bytes());
+        h = fnv1a_update(h, &rows.to_le_bytes());
+        fnv1a_update(h, payload)
+    } else {
+        fnv1a(payload)
+    }
+}
+
+/// Bytes of the fixed file header for `version`.
+pub fn header_bytes(version: u32) -> u64 {
+    if version >= 2 {
+        4 + 4 + 4 + 8
+    } else {
+        4 + 4 + 4
+    }
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// `read_exact` that reports EOF-before-fill as `Ok(false)` instead of
+/// an error — replay needs to tell "file ended" apart from real I/O
+/// failures.
+fn try_read_exact(r: &mut impl Read, buf: &mut [u8]) -> Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => return Ok(false),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+/// The surviving content of one WAL file: complete batches only.
 #[derive(Clone, Debug, Default)]
 pub struct WalContents {
     /// Replayable batches, in append order; every row has the log's
@@ -68,29 +179,76 @@ pub struct WalContents {
     pub valid_bytes: u64,
     /// True when a torn/corrupt tail was detected (and ignored).
     pub torn_tail: bool,
+    /// True when the tail was *corruption* (not a plain torn record)
+    /// and [`RecoveryPolicy::Truncate`] dropped it.
+    pub corrupt: bool,
+    /// Format version from the file header (0 when headerless).
+    pub version: u32,
+    /// Absolute sequence number of the file's first record.
+    pub base_seq: u64,
+    /// False when the file does not exist.
+    pub present: bool,
+    /// True when a complete, valid file header was read.
+    pub has_header: bool,
 }
 
-/// Read every complete batch from the WAL at `path`, validating
-/// sequence numbers, shapes and checksums. `d` is the dimensionality
-/// the caller's base data has; a WAL header disagreeing with it fails
-/// loudly (stale checkpoint directory). A missing file is an empty log.
-pub fn read_wal(path: &Path, d: usize) -> Result<WalContents> {
+fn fail_corrupt(
+    path: &Path,
+    policy: RecoveryPolicy,
+    mut out: WalContents,
+    pos: u64,
+    why: &str,
+) -> Result<WalContents> {
+    match policy {
+        RecoveryPolicy::FailFast => bail!(
+            "{}: corrupt WAL record at byte {pos}: {why} \
+             (recovery_policy=truncate salvages the clean prefix)",
+            path.display()
+        ),
+        RecoveryPolicy::Truncate => {
+            out.corrupt = true;
+            out.torn_tail = true;
+            Ok(out)
+        }
+    }
+}
+
+/// Read every complete batch from the single WAL file at `path`,
+/// validating sequence numbers, shapes and checksums. `d` is the
+/// dimensionality the caller's base data has; a WAL header disagreeing
+/// with it fails loudly under either policy (stale checkpoint
+/// directory, not corruption). A missing file is an empty log.
+pub fn read_wal_file(path: &Path, d: usize, policy: RecoveryPolicy) -> Result<WalContents> {
     let f = match std::fs::File::open(path) {
         Ok(f) => f,
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-            return Ok(WalContents { valid_bytes: 0, ..Default::default() })
-        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(WalContents::default()),
         Err(e) => return Err(e).with_context(|| format!("open {}", path.display())),
     };
-    // A crash between create and header write leaves a short file;
-    // treat it as an empty (torn) log rather than a parse error.
-    let len = f.metadata().map(|m| m.len()).unwrap_or(0);
-    if len < header_bytes() {
-        return Ok(WalContents { valid_bytes: 0, torn_tail: len > 0, ..Default::default() });
+    let flen = f
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
+    let mut out = WalContents { present: true, ..Default::default() };
+    if flen == 0 {
+        return Ok(out);
     }
     let mut r = BufReader::new(f);
-    check_magic(&mut r, MAGIC, VERSION, path)?;
-    let wal_d = read_u32(&mut r)? as usize;
+
+    // Header. A crash between create and header sync leaves a short
+    // file; that is a torn (empty) log, not a parse error.
+    let mut head = [0u8; 12];
+    if !try_read_exact(&mut r, &mut head)? {
+        out.torn_tail = true;
+        return Ok(out);
+    }
+    if &head[..4] != MAGIC {
+        return fail_corrupt(path, policy, out, 0, "bad magic");
+    }
+    let version = le_u32(&head[4..8]);
+    if version == 0 || version > VERSION {
+        return fail_corrupt(path, policy, out, 4, "unsupported LVWL version");
+    }
+    let wal_d = le_u32(&head[8..12]) as usize;
     if wal_d != d {
         bail!(
             "{}: WAL holds {wal_d}-dimensional points, base data is {d}-dimensional — \
@@ -98,59 +256,276 @@ pub fn read_wal(path: &Path, d: usize) -> Result<WalContents> {
             path.display()
         );
     }
-    let mut out = WalContents { valid_bytes: header_bytes(), ..Default::default() };
+    let mut base_seq = 0u64;
+    if version >= 2 {
+        let mut b = [0u8; 8];
+        if !try_read_exact(&mut r, &mut b)? {
+            out.torn_tail = true;
+            return Ok(out);
+        }
+        base_seq = le_u64(&b);
+    }
+    out.version = version;
+    out.base_seq = base_seq;
+    out.has_header = true;
+    out.valid_bytes = header_bytes(version);
+
+    let mut pos = out.valid_bytes;
     let mut payload: Vec<u8> = Vec::new();
     loop {
-        // Each field read is allowed to hit EOF (torn tail) — only a
-        // *complete* record advances `valid_bytes`.
-        let Ok(seq) = read_u64(&mut r) else {
+        let mut rec_head = [0u8; 12];
+        if !try_read_exact(&mut r, &mut rec_head)? {
+            out.torn_tail = pos < flen;
             break;
-        };
-        let Ok(rows) = read_u32(&mut r) else {
-            out.torn_tail = true;
-            break;
-        };
-        let rows = rows as usize;
-        if seq != out.batches.len() as u64 || rows == 0 || rows > MAX_WAL_BATCH_ROWS {
-            out.torn_tail = true;
-            break;
+        }
+        let seq = le_u64(&rec_head[0..8]);
+        let rows_u = le_u32(&rec_head[8..12]);
+        let rows = rows_u as usize;
+        let expected = base_seq + out.batches.len() as u64;
+        if seq != expected || rows == 0 || rows > MAX_WAL_BATCH_ROWS {
+            // A torn write keeps a *prefix* of the true record, so a
+            // fully-readable head with wrong fields is corruption (the
+            // exact case the v1 payload-only checksum misdiagnosed).
+            let why = format!("invalid record head (seq {seq}, expected {expected}, rows {rows_u})");
+            return fail_corrupt(path, policy, out, pos, &why);
         }
         payload.clear();
         payload.resize(rows * d * 4, 0);
-        if r.read_exact(&mut payload).is_err() {
+        if !try_read_exact(&mut r, &mut payload)? {
             out.torn_tail = true;
             break;
         }
-        let Ok(want_sum) = read_u32(&mut r) else {
+        let mut sum = [0u8; 4];
+        if !try_read_exact(&mut r, &mut sum)? {
             out.torn_tail = true;
             break;
-        };
-        if fnv1a(&payload) != want_sum {
+        }
+        let rec_end = pos + 12 + payload.len() as u64 + 4;
+        if record_checksum(version, seq, rows_u, &payload) != le_u32(&sum) {
+            if rec_end < flen {
+                return fail_corrupt(path, policy, out, pos, "record checksum mismatch mid-log");
+            }
+            // Mismatch on the final record: crash garbage, a torn tail.
             out.torn_tail = true;
             break;
         }
         let vals: Vec<f32> = payload
             .chunks_exact(4)
-            .map(|b| f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])))
+            .map(|b| f32::from_bits(le_u32(b)))
             .collect();
         out.rows += rows;
         out.batches.push(Matrix::from_vec(vals, rows, d));
-        out.valid_bytes += 8 + 4 + rows as u64 * d as u64 * 4 + 4;
+        pos = rec_end;
+        out.valid_bytes = pos;
     }
     Ok(out)
 }
 
-/// Bytes of the fixed WAL header (magic + version + dimensionality).
-fn header_bytes() -> u64 {
-    4 + 4 + 4
+/// [`read_wal_file`] under the fail-fast policy — the historical
+/// single-file entry point.
+pub fn read_wal(path: &Path, d: usize) -> Result<WalContents> {
+    read_wal_file(path, d, RecoveryPolicy::FailFast)
 }
 
-/// Appending writer over a WAL file. Opening replays/validates the
-/// existing log (if any), truncates away a torn tail, and positions at
-/// the end; [`WalWriter::append`] then durably records one batch per
-/// call — the whole record is written with one `write_all` and
-/// `sync_data` **must succeed before the append returns `Ok`**, so an
-/// acknowledged insert survives a process kill or power loss.
+/// Path of sealed segment `idx` for the active log at `active`
+/// (`inserts.wal` → `inserts.wal.3`).
+pub fn segment_path(active: &Path, idx: u64) -> PathBuf {
+    let mut name = active.as_os_str().to_os_string();
+    name.push(format!(".{idx}"));
+    PathBuf::from(name)
+}
+
+/// Sealed segments next to `active`, sorted by segment index. Files
+/// whose suffix is not a plain integer (e.g. quarantined segments) are
+/// ignored.
+pub fn sealed_segments(active: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out: Vec<(u64, PathBuf)> = Vec::new();
+    let Some(stem) = active.file_name().and_then(|n| n.to_str()) else {
+        return Ok(out);
+    };
+    let dir = match active.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => Path::new("."),
+    };
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(e).with_context(|| format!("list {}", dir.display())),
+    };
+    let prefix = format!("{stem}.");
+    for entry in entries {
+        let entry = entry.with_context(|| format!("list {}", dir.display()))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(sfx) = name.strip_prefix(&prefix) {
+            if let Ok(idx) = sfx.parse::<u64>() {
+                out.push((idx, dir.join(name)));
+            }
+        }
+    }
+    out.sort_by_key(|&(i, _)| i);
+    Ok(out)
+}
+
+/// Everything recovered from a WAL set (sealed segments + active log).
+#[derive(Clone, Debug, Default)]
+pub struct WalRecovery {
+    /// Replayable batches across all segments, in append order.
+    pub batches: Vec<Matrix>,
+    /// Total rows across `batches`.
+    pub rows: usize,
+    /// Absolute sequence number the next append will receive.
+    pub next_seq: u64,
+    /// True when a torn tail was truncated from the final segment.
+    pub torn_tail: bool,
+    /// Segments dropped (in whole or in part) as corrupt under
+    /// [`RecoveryPolicy::Truncate`].
+    pub corrupt_segments: usize,
+    /// Segment files inspected (sealed + active, when present).
+    pub segments: usize,
+}
+
+/// How [`WalSet::open`] must treat the on-disk files after a scan.
+struct SetScan {
+    /// Sealed segments that replayed cleanly, in order.
+    good_sealed: Vec<PathBuf>,
+    /// Segment files to quarantine (rename aside) before writing.
+    quarantine: Vec<PathBuf>,
+    /// Whether the active file can be resumed in place.
+    resume_active: bool,
+    /// `base_seq` a recreated active segment must carry.
+    active_base: u64,
+}
+
+fn scan_wal_set(active: &Path, d: usize, policy: RecoveryPolicy) -> Result<(WalRecovery, SetScan)> {
+    let sealed = sealed_segments(active)?;
+    let mut rec = WalRecovery::default();
+    let mut scan = SetScan {
+        good_sealed: Vec::new(),
+        quarantine: Vec::new(),
+        resume_active: false,
+        active_base: 0,
+    };
+    let mut next_seq = 0u64;
+    let mut have_prior = false; // any clean segment read yet
+    let mut stopped = false; // Truncate: corruption found, discard the rest
+
+    for (slot, (idx, p)) in sealed.iter().enumerate() {
+        if stopped {
+            scan.quarantine.push(p.clone());
+            continue;
+        }
+        let broken: Option<String> = if *idx != slot as u64 {
+            Some(format!("segment numbering gap: found index {idx} at position {slot}"))
+        } else {
+            let c = read_wal_file(p, d, policy)?;
+            rec.segments += 1;
+            if c.torn_tail || c.corrupt || !c.has_header {
+                Some("sealed WAL segment does not end cleanly".to_string())
+            } else if have_prior && c.base_seq != next_seq {
+                Some(format!(
+                    "sealed segment base_seq {} does not continue the log at {next_seq}",
+                    c.base_seq
+                ))
+            } else {
+                next_seq = c.base_seq + c.batches.len() as u64;
+                have_prior = true;
+                rec.rows += c.rows;
+                rec.batches.extend(c.batches);
+                scan.good_sealed.push(p.clone());
+                None
+            }
+        };
+        if let Some(why) = broken {
+            match policy {
+                RecoveryPolicy::FailFast => {
+                    bail!("{}: {why} (recovery_policy=truncate quarantines it)", p.display())
+                }
+                RecoveryPolicy::Truncate => {
+                    rec.corrupt_segments += 1;
+                    scan.quarantine.push(p.clone());
+                    stopped = true;
+                }
+            }
+        }
+    }
+
+    if stopped {
+        // Orphaned active log: its sequences no longer follow what we
+        // replayed, so it gets quarantined alongside the bad segment.
+        if active.exists() {
+            scan.quarantine.push(active.to_path_buf());
+        }
+        scan.active_base = next_seq;
+        rec.next_seq = next_seq;
+        return Ok((rec, scan));
+    }
+
+    let c = read_wal_file(active, d, policy)?;
+    if c.present {
+        rec.segments += 1;
+    }
+    if c.has_header && have_prior && c.base_seq != next_seq {
+        match policy {
+            RecoveryPolicy::FailFast => bail!(
+                "{}: active WAL base_seq {} does not continue the sealed segments at {next_seq} \
+                 (recovery_policy=truncate quarantines it)",
+                active.display(),
+                c.base_seq
+            ),
+            RecoveryPolicy::Truncate => {
+                rec.corrupt_segments += 1;
+                scan.quarantine.push(active.to_path_buf());
+                scan.active_base = next_seq;
+                rec.next_seq = next_seq;
+                return Ok((rec, scan));
+            }
+        }
+    }
+    if c.has_header {
+        next_seq = c.base_seq + c.batches.len() as u64;
+    }
+    rec.torn_tail = c.torn_tail;
+    rec.corrupt_segments += c.corrupt as usize;
+    rec.rows += c.rows;
+    rec.batches.extend(c.batches);
+    rec.next_seq = next_seq;
+    scan.resume_active = true;
+    scan.active_base = next_seq;
+    Ok((rec, scan))
+}
+
+/// Read-only replay of a whole WAL set (sealed segments + active log),
+/// without touching any file — the read-only server path and the
+/// bounded-replay assertions use this.
+pub fn read_wal_set(active: &Path, d: usize, policy: RecoveryPolicy) -> Result<WalRecovery> {
+    let (rec, _) = scan_wal_set(active, d, policy)?;
+    Ok(rec)
+}
+
+/// Reset a WAL set on disk to a single fresh, empty active segment
+/// whose sequence numbering starts at `absorbed_seq` — the compaction
+/// roll-forward path, where no live writer exists.
+pub fn reset_wal_set(
+    storage: &dyn Storage,
+    active: &Path,
+    d: usize,
+    absorbed_seq: u64,
+) -> Result<()> {
+    for (_, p) in sealed_segments(active)? {
+        storage
+            .remove(&p)
+            .with_context(|| format!("remove absorbed WAL segment {}", p.display()))?;
+    }
+    WalWriter::create(storage, active, d, absorbed_seq)?;
+    Ok(())
+}
+
+/// Appending writer over one WAL file. [`WalWriter::append`] durably
+/// records one batch per call — the whole record is written with one
+/// `write_all` and `sync_data` **must succeed before the append
+/// returns `Ok`**, so an acknowledged insert survives a process kill
+/// or power loss.
 ///
 /// A *failed* append rolls the file back to the end of the last
 /// complete record before returning the error: a transient I/O failure
@@ -159,9 +534,11 @@ fn header_bytes() -> u64 {
 /// records. If even the rollback fails, the writer poisons itself and
 /// refuses further appends instead of corrupting the log.
 pub struct WalWriter {
-    f: std::fs::File,
+    f: Box<dyn crate::util::faultio::DurableFile>,
     path: PathBuf,
     d: usize,
+    version: u32,
+    base_seq: u64,
     next_seq: u64,
     /// Byte offset just past the last durably recorded record.
     valid_bytes: u64,
@@ -171,51 +548,81 @@ pub struct WalWriter {
 }
 
 impl WalWriter {
-    /// Open (or create) the WAL at `path` for `d`-dimensional points.
-    /// Returns the writer positioned after the surviving prefix plus
-    /// that prefix's contents (the caller replays them into its state).
-    pub fn open(path: &Path, d: usize) -> Result<(WalWriter, WalContents)> {
-        let contents = read_wal(path, d)?;
-        let mut f = std::fs::OpenOptions::new()
-            .read(true)
-            .write(true)
-            .create(true)
-            .open(path)
+    /// Create (truncating) a fresh log at `path` for `d`-dimensional
+    /// points whose first record will carry absolute sequence number
+    /// `base_seq`. The header is fsync'd before returning.
+    pub fn create(storage: &dyn Storage, path: &Path, d: usize, base_seq: u64) -> Result<WalWriter> {
+        let mut f = storage
+            .create_durable(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut header = Vec::with_capacity(header_bytes(VERSION) as usize);
+        header.extend_from_slice(MAGIC);
+        header.extend_from_slice(&VERSION.to_le_bytes());
+        header.extend_from_slice(&(d as u32).to_le_bytes());
+        header.extend_from_slice(&base_seq.to_le_bytes());
+        f.write_all(&header)
+            .and_then(|_| f.sync_data())
+            .with_context(|| format!("write WAL header {}", path.display()))?;
+        Ok(WalWriter {
+            f,
+            path: path.to_path_buf(),
+            d,
+            version: VERSION,
+            base_seq,
+            next_seq: base_seq,
+            valid_bytes: header_bytes(VERSION),
+            poisoned: false,
+        })
+    }
+
+    /// Open the log at `path` for appending: replay/validate the
+    /// existing content under `policy`, truncate away a torn tail, and
+    /// position at the end. A missing or headerless file is started
+    /// fresh with `fresh_base_seq`. Returns the writer plus the
+    /// surviving contents (the caller replays them into its state).
+    pub fn resume(
+        storage: &dyn Storage,
+        path: &Path,
+        d: usize,
+        policy: RecoveryPolicy,
+        fresh_base_seq: u64,
+    ) -> Result<(WalWriter, WalContents)> {
+        let contents = read_wal_file(path, d, policy)?;
+        if !contents.has_header {
+            let w = WalWriter::create(storage, path, d, fresh_base_seq)?;
+            return Ok((w, contents));
+        }
+        let mut f = storage
+            .open_durable(path)
             .with_context(|| format!("open {}", path.display()))?;
-        let valid_bytes = if contents.valid_bytes < header_bytes() {
-            // Fresh (or header-torn) log: start it over.
-            f.set_len(0).with_context(|| format!("truncate {}", path.display()))?;
-            f.write_all(MAGIC)?;
-            f.write_all(&VERSION.to_le_bytes())?;
-            f.write_all(&(d as u32).to_le_bytes())?;
-            f.sync_data()
-                .with_context(|| format!("sync WAL header {}", path.display()))?;
-            header_bytes()
-        } else {
-            // Drop any torn tail so the resumed log is a clean prefix.
-            f.set_len(contents.valid_bytes)
-                .with_context(|| format!("truncate {}", path.display()))?;
-            contents.valid_bytes
+        // Drop any torn tail so the resumed log is a clean prefix.
+        f.set_len(contents.valid_bytes)
+            .with_context(|| format!("truncate {}", path.display()))?;
+        f.seek(SeekFrom::End(0))
+            .with_context(|| format!("seek {}", path.display()))?;
+        let w = WalWriter {
+            f,
+            path: path.to_path_buf(),
+            d,
+            version: contents.version,
+            base_seq: contents.base_seq,
+            next_seq: contents.base_seq + contents.batches.len() as u64,
+            valid_bytes: contents.valid_bytes,
+            poisoned: false,
         };
-        f.seek(SeekFrom::End(0))?;
-        let next_seq = contents.batches.len() as u64;
-        Ok((
-            WalWriter {
-                f,
-                path: path.to_path_buf(),
-                d,
-                next_seq,
-                valid_bytes,
-                poisoned: false,
-            },
-            contents,
-        ))
+        Ok((w, contents))
+    }
+
+    /// Open (or create) the WAL at `path` on the real filesystem with
+    /// fail-fast recovery — the historical single-file entry point.
+    pub fn open(path: &Path, d: usize) -> Result<(WalWriter, WalContents)> {
+        WalWriter::resume(&RealStorage, path, d, RecoveryPolicy::FailFast, 0)
     }
 
     /// Durably append one batch of points (shape-checked against the
-    /// log's dimensionality). Returns the record's sequence number
-    /// only after the record is written **and** fsync'd; on failure
-    /// the file is rolled back to the previous record boundary.
+    /// log's dimensionality). Returns the record's absolute sequence
+    /// number only after the record is written **and** fsync'd; on
+    /// failure the file is rolled back to the previous record boundary.
     pub fn append(&mut self, batch: &Matrix) -> Result<u64> {
         if self.poisoned {
             bail!(
@@ -235,17 +642,18 @@ impl WalWriter {
             bail!("{}: WAL batch of {} rows out of range", self.path.display(), batch.n());
         }
         let seq = self.next_seq;
+        let rows = batch.n() as u32;
         // Serialize the whole record up front so it hits the file in a
         // single write_all — no partial-record state to manage in the
         // common path.
         let mut record: Vec<u8> = Vec::with_capacity(16 + batch.n() * self.d * 4);
         record.extend_from_slice(&seq.to_le_bytes());
-        record.extend_from_slice(&(batch.n() as u32).to_le_bytes());
+        record.extend_from_slice(&rows.to_le_bytes());
         let payload_start = record.len();
         for &v in batch.as_slice() {
             record.extend_from_slice(&v.to_bits().to_le_bytes());
         }
-        let checksum = fnv1a(&record[payload_start..]);
+        let checksum = record_checksum(self.version, seq, rows, &record[payload_start..]);
         record.extend_from_slice(&checksum.to_le_bytes());
 
         let wrote = self.f.write_all(&record).and_then(|_| self.f.sync_data());
@@ -276,9 +684,151 @@ impl WalWriter {
         }
     }
 
-    /// Batches durably recorded so far (surviving prefix + appends).
+    /// Records durably held by this file (surviving prefix + appends).
     pub fn batches(&self) -> u64 {
+        self.next_seq - self.base_seq
+    }
+
+    /// Absolute sequence number the next append will receive.
+    pub fn next_seq(&self) -> u64 {
         self.next_seq
+    }
+
+    /// Byte offset just past the last durable record.
+    pub fn valid_bytes(&self) -> u64 {
+        self.valid_bytes
+    }
+
+    /// Re-fsync the file — a no-op after a clean append (every append
+    /// syncs), kept for the server's drain path.
+    pub fn sync(&mut self) -> Result<()> {
+        if self.poisoned {
+            return Ok(());
+        }
+        self.f
+            .sync_data()
+            .with_context(|| format!("sync {}", self.path.display()))
+    }
+}
+
+/// The active WAL plus its sealed segments, as one appendable log with
+/// rotation and compaction-reset.
+pub struct WalSet {
+    storage: Arc<dyn Storage>,
+    active: PathBuf,
+    d: usize,
+    writer: WalWriter,
+    sealed: Vec<PathBuf>,
+    /// Set when a rotation died half-way; the in-memory picture of the
+    /// segment files is unreliable, so appends are refused until the
+    /// set is reopened (recovery sorts the files out).
+    failed: bool,
+}
+
+impl WalSet {
+    /// Open the WAL set rooted at the active path: replay sealed
+    /// segments in order, then the active log, validating sequence
+    /// continuity across files. Corruption is handled per `policy`
+    /// (fail fast, or quarantine the corrupt suffix and keep going).
+    pub fn open(
+        storage: Arc<dyn Storage>,
+        active: &Path,
+        d: usize,
+        policy: RecoveryPolicy,
+    ) -> Result<(WalSet, WalRecovery)> {
+        let (rec, scan) = scan_wal_set(active, d, policy)?;
+        for p in &scan.quarantine {
+            let mut q = p.as_os_str().to_os_string();
+            q.push(".quarantined");
+            storage
+                .persist(p, Path::new(&q))
+                .with_context(|| format!("quarantine corrupt WAL segment {}", p.display()))?;
+        }
+        let writer = if scan.resume_active {
+            WalWriter::resume(storage.as_ref(), active, d, policy, scan.active_base)?.0
+        } else {
+            WalWriter::create(storage.as_ref(), active, d, scan.active_base)?
+        };
+        let set = WalSet {
+            storage,
+            active: active.to_path_buf(),
+            d,
+            writer,
+            sealed: scan.good_sealed,
+            failed: false,
+        };
+        Ok((set, rec))
+    }
+
+    /// Durably append one batch (see [`WalWriter::append`]).
+    pub fn append(&mut self, batch: &Matrix) -> Result<u64> {
+        if self.failed {
+            bail!("{}: WAL set disabled after a failed rotation", self.active.display());
+        }
+        self.writer.append(batch)
+    }
+
+    /// Bytes of durable records in the active segment.
+    pub fn active_bytes(&self) -> u64 {
+        self.writer.valid_bytes()
+    }
+
+    /// Sealed (rotated, read-only) segments currently on disk.
+    pub fn sealed_count(&self) -> usize {
+        self.sealed.len()
+    }
+
+    /// Absolute sequence number the next append will receive.
+    pub fn next_seq(&self) -> u64 {
+        self.writer.next_seq()
+    }
+
+    /// Seal the active segment (atomic rename to the next `.N` name)
+    /// and start a fresh active log continuing the sequence numbers.
+    pub fn rotate(&mut self) -> Result<()> {
+        if self.failed {
+            bail!("{}: WAL set disabled after a failed rotation", self.active.display());
+        }
+        let sealed_path = segment_path(&self.active, self.sealed.len() as u64);
+        let next_base = self.writer.next_seq();
+        self.storage
+            .persist(&self.active, &sealed_path)
+            .with_context(|| format!("seal WAL segment {}", sealed_path.display()))?;
+        self.sealed.push(sealed_path);
+        match WalWriter::create(self.storage.as_ref(), &self.active, self.d, next_base) {
+            Ok(w) => {
+                self.writer = w;
+                Ok(())
+            }
+            Err(e) => {
+                // The old handle now points at the sealed file; writing
+                // further records there would confuse the next rotation,
+                // so the set refuses appends until reopened.
+                self.failed = true;
+                Err(e.context("start fresh WAL segment after sealing"))
+            }
+        }
+    }
+
+    /// After compaction durably absorbed every batch below absolute
+    /// sequence `absorbed_seq` into the base checkpoints: delete the
+    /// sealed segments and restart the active log empty at that
+    /// sequence. Idempotent on retry (removes tolerate absence).
+    pub fn reset_absorbed(&mut self, absorbed_seq: u64) -> Result<()> {
+        for p in &self.sealed {
+            self.storage
+                .remove(p)
+                .with_context(|| format!("remove absorbed WAL segment {}", p.display()))?;
+        }
+        self.sealed.clear();
+        self.writer = WalWriter::create(self.storage.as_ref(), &self.active, self.d, absorbed_seq)?;
+        self.failed = false;
+        Ok(())
+    }
+
+    /// Final fsync of the active log (the server's shutdown drain).
+    pub fn sync(&mut self) -> Result<()> {
+        self.writer.sync()
     }
 }
 
@@ -310,6 +860,7 @@ mod tests {
         }
         let back = read_wal(&p, 3).unwrap();
         assert!(!back.torn_tail);
+        assert_eq!(back.version, VERSION);
         assert_eq!(back.batches.len(), 2);
         assert_eq!(back.rows, 3);
         // Bit-identical payloads (−0.0 and subnormals preserved).
@@ -326,6 +877,7 @@ mod tests {
         let c = read_wal(&tmp("nope.wal"), 4).unwrap();
         assert_eq!(c.batches.len(), 0);
         assert!(!c.torn_tail);
+        assert!(!c.present);
     }
 
     #[test]
@@ -360,6 +912,7 @@ mod tests {
             .unwrap();
         let c = read_wal(&p, 2).unwrap();
         assert!(c.torn_tail);
+        assert!(!c.corrupt);
         assert_eq!(c.batches.len(), 1);
         assert_eq!(c.rows, 1);
         // Reopening truncates the torn tail and appends after it with
@@ -385,12 +938,161 @@ mod tests {
         }
         let mut bytes = std::fs::read(&p).unwrap();
         // Flip a payload bit (first value's low byte, after the
-        // 12-byte header + 8-byte seq + 4-byte row count).
-        let off = 12 + 8 + 4;
+        // 20-byte v2 header + 8-byte seq + 4-byte row count).
+        let off = header_bytes(VERSION) as usize + 8 + 4;
         bytes[off] ^= 1;
         std::fs::write(&p, &bytes).unwrap();
+        // The flipped record is the log's final one, so this reads as a
+        // (checksum-caught) torn tail and replay salvages the prefix.
         let c = read_wal(&p, 2).unwrap();
         assert!(c.torn_tail, "bit flip not caught by checksum");
         assert_eq!(c.batches.len(), 0);
+    }
+
+    #[test]
+    fn corrupt_record_head_mid_log_is_not_a_torn_tail() {
+        let p = tmp("head.wal");
+        std::fs::remove_file(&p).ok();
+        {
+            let (mut w, _) = WalWriter::open(&p, 2).unwrap();
+            w.append(&batch(&[1.0, 2.0], 2)).unwrap();
+            w.append(&batch(&[3.0, 4.0], 2)).unwrap();
+        }
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Flip the low bit of record 0's `rows` field: the v1 checksum
+        // (payload-only) would never notice.
+        let off = header_bytes(VERSION) as usize + 8;
+        bytes[off] ^= 1;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", read_wal(&p, 2).unwrap_err());
+        assert!(err.contains("corrupt WAL record"), "{err}");
+        // The explicit salvage policy recovers nothing before the flip
+        // but reports the corruption instead of failing.
+        let c = read_wal_file(&p, 2, RecoveryPolicy::Truncate).unwrap();
+        assert!(c.corrupt);
+        assert_eq!(c.batches.len(), 0);
+    }
+
+    #[test]
+    fn v1_logs_still_read_and_resume() {
+        let p = tmp("v1.wal");
+        std::fs::remove_file(&p).ok();
+        // Hand-build a version-1 file: 12-byte header, one record with
+        // a payload-only checksum.
+        let payload: Vec<u8> = [1.5f32, -2.0]
+            .iter()
+            .flat_map(|v| v.to_bits().to_le_bytes())
+            .collect();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // seq
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // rows
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+
+        let c = read_wal(&p, 2).unwrap();
+        assert_eq!(c.version, 1);
+        assert_eq!(c.batches.len(), 1);
+        assert_eq!(c.batches[0].row(0), &[1.5, -2.0]);
+
+        // A writer resuming a v1 file keeps appending v1 records so the
+        // file stays self-consistent.
+        {
+            let (mut w, prior) = WalWriter::open(&p, 2).unwrap();
+            assert_eq!(prior.version, 1);
+            assert_eq!(w.append(&batch(&[7.0, 8.0], 2)).unwrap(), 1);
+        }
+        let c = read_wal(&p, 2).unwrap();
+        assert_eq!(c.version, 1);
+        assert!(!c.torn_tail);
+        assert_eq!(c.batches.len(), 2);
+        assert_eq!(c.batches[1].row(0), &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn rotation_and_set_recovery() {
+        let dir = tmp("set");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let active = dir.join("inserts.wal");
+        let storage: Arc<dyn Storage> = Arc::new(RealStorage);
+        {
+            let (mut set, rec) =
+                WalSet::open(storage.clone(), &active, 2, RecoveryPolicy::FailFast).unwrap();
+            assert_eq!(rec.batches.len(), 0);
+            assert_eq!(set.append(&batch(&[0.0, 0.5], 2)).unwrap(), 0);
+            set.rotate().unwrap();
+            assert_eq!(set.sealed_count(), 1);
+            assert_eq!(set.append(&batch(&[1.0, 1.5], 2)).unwrap(), 1);
+            set.rotate().unwrap();
+            assert_eq!(set.append(&batch(&[2.0, 2.5], 2)).unwrap(), 2);
+        }
+        assert!(segment_path(&active, 0).exists());
+        assert!(segment_path(&active, 1).exists());
+        let rec = read_wal_set(&active, 2, RecoveryPolicy::FailFast).unwrap();
+        assert_eq!(rec.batches.len(), 3);
+        assert_eq!(rec.next_seq, 3);
+        for (i, b) in rec.batches.iter().enumerate() {
+            assert_eq!(b.row(0)[0], i as f32, "batch order scrambled");
+        }
+        // Reopen: same recovery, sequence numbering continues.
+        let (mut set, rec) =
+            WalSet::open(storage.clone(), &active, 2, RecoveryPolicy::FailFast).unwrap();
+        assert_eq!(rec.batches.len(), 3);
+        assert_eq!(set.sealed_count(), 2);
+        assert_eq!(set.append(&batch(&[3.0, 3.5], 2)).unwrap(), 3);
+
+        // Compaction reset: sealed segments vanish, numbering holds.
+        set.reset_absorbed(4).unwrap();
+        assert_eq!(set.sealed_count(), 0);
+        assert!(!segment_path(&active, 0).exists());
+        assert_eq!(set.append(&batch(&[4.0, 4.5], 2)).unwrap(), 4);
+        drop(set);
+        let rec = read_wal_set(&active, 2, RecoveryPolicy::FailFast).unwrap();
+        assert_eq!(rec.batches.len(), 1);
+        assert_eq!(rec.next_seq, 5);
+    }
+
+    #[test]
+    fn corrupt_sealed_segment_policies() {
+        let dir = tmp("corrupt_set");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let active = dir.join("inserts.wal");
+        let storage: Arc<dyn Storage> = Arc::new(RealStorage);
+        {
+            let (mut set, _) =
+                WalSet::open(storage.clone(), &active, 2, RecoveryPolicy::FailFast).unwrap();
+            set.append(&batch(&[0.0, 0.5], 2)).unwrap();
+            set.rotate().unwrap();
+            set.append(&batch(&[1.0, 1.5], 2)).unwrap();
+            set.rotate().unwrap();
+            set.append(&batch(&[2.0, 2.5], 2)).unwrap();
+        }
+        // Corrupt sealed segment 1 mid-record.
+        let seg1 = segment_path(&active, 1);
+        let mut bytes = std::fs::read(&seg1).unwrap();
+        let off = header_bytes(VERSION) as usize + 8 + 4;
+        bytes[off] ^= 0xff;
+        std::fs::write(&seg1, &bytes).unwrap();
+
+        let err = format!("{:#}", read_wal_set(&active, 2, RecoveryPolicy::FailFast).unwrap_err());
+        assert!(err.contains("does not end cleanly"), "{err}");
+
+        // Truncate policy: salvage segment 0, quarantine the rest, and
+        // keep an appendable set whose numbering continues at 1.
+        let (mut set, rec) =
+            WalSet::open(storage.clone(), &active, 2, RecoveryPolicy::Truncate).unwrap();
+        assert_eq!(rec.batches.len(), 1);
+        assert_eq!(rec.corrupt_segments, 1);
+        assert_eq!(rec.next_seq, 1);
+        assert!(!seg1.exists(), "corrupt segment must be quarantined");
+        assert_eq!(set.append(&batch(&[9.0, 9.5], 2)).unwrap(), 1);
+        drop(set);
+        let rec = read_wal_set(&active, 2, RecoveryPolicy::FailFast).unwrap();
+        assert_eq!(rec.batches.len(), 2);
     }
 }

@@ -156,17 +156,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.refine_interval_ms = args.get_or("refine-interval-ms", cfg.refine_interval_ms)?;
     cfg.keep_alive_max = args.get_or("keep-alive-max", cfg.keep_alive_max)?;
     cfg.idle_timeout_ms = args.get_or("idle-timeout-ms", cfg.idle_timeout_ms)?;
+    cfg.max_inflight = args.get_or("max-inflight", cfg.max_inflight)?;
+    cfg.write_timeout_ms = args.get_or("write-timeout-ms", cfg.write_timeout_ms)?;
+    cfg.wal_segment_bytes = args.get_or("wal-segment-bytes", cfg.wal_segment_bytes)?;
+    cfg.wal_max_segments = args.get_or("wal-max-segments", cfg.wal_max_segments)?;
+    cfg.recovery_policy = args.get_or("recovery-policy", cfg.recovery_policy)?;
 
-    let state = ServerState::load(cfg)?;
+    // Two-phase startup: open the checkpoints, start listening, and
+    // replay the insert WAL in the background. The server answers
+    // queries against the base snapshot immediately; `/readyz` (and
+    // inserts) answer 503 until the replay finishes.
+    let state = ServerState::open(cfg)?;
     {
         let snap = state.snapshot();
         eprintln!(
-            "[serve] loaded {}: {} points (d={}, {} recovered from WAL), layout dim {}, \
+            "[serve] loaded {}: {} points (d={}), layout dim {}, \
              knn k={}, {} graph edges, epoch {}",
             state.dataset,
             snap.data.n(),
             snap.data.d(),
-            snap.data.n() - state.base_n,
             snap.layout.d(),
             snap.knn.k,
             state.graph_edges,
@@ -176,10 +184,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = Server::bind(state)?;
     eprintln!(
         "[serve] listening on http://{} (POST /embed, POST /knn, POST /insert, \
-         POST /insert_batch, GET /viewport, GET /healthz, GET /metrics)",
+         POST /insert_batch, GET /viewport, GET /healthz, GET /readyz, GET /metrics)",
         server.local_addr()?
     );
-    server.run()
+    let state = server.state();
+    let handle = server.handle();
+    let recover_err: std::sync::Arc<std::sync::Mutex<Option<anyhow::Error>>> =
+        std::sync::Arc::new(std::sync::Mutex::new(None));
+    let recover_thread = {
+        let state = state.clone();
+        let handle = handle.clone();
+        let recover_err = recover_err.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = state.recover() {
+                // A replay failure is fatal under fail_fast: record it,
+                // stop the server, and let the exit path report it.
+                *recover_err.lock().unwrap_or_else(|p| p.into_inner()) = Some(e);
+                handle.shutdown();
+            } else {
+                let snap = state.snapshot();
+                eprintln!(
+                    "[serve] ready: WAL replay done ({} points recovered, epoch {})",
+                    snap.data.n() - state.base_n,
+                    snap.epoch,
+                );
+            }
+        })
+    };
+    let run_result = server.run();
+    let _ = recover_thread.join();
+    if let Some(e) = recover_err.lock().unwrap_or_else(|p| p.into_inner()).take() {
+        return Err(e.context("insert WAL replay failed"));
+    }
+    run_result
 }
 
 fn cmd_knn(args: &Args) -> Result<()> {

@@ -16,6 +16,7 @@
 //! | POST   | `/insert_batch` | `{"points": [[f; d]; n]}`     | assigned ids + publishing epoch (JSON) |
 //! | GET    | `/viewport` | `x0,y0,x1,y1` (`size` optional)   | SVG tile of the layout region |
 //! | GET    | `/healthz`  | —                                 | dataset/shape/epoch summary (JSON) |
+//! | GET    | `/readyz`   | —                                 | 200 once WAL replay finished; 503 + `Retry-After` before |
 //! | GET    | `/metrics`  | —                                 | request counters (JSON) |
 //!
 //! JSON responses that describe the layout carry `"epoch"` and
@@ -56,10 +57,16 @@ pub fn route(req: &Request, st: &ServerState, snap: &Snapshot) -> Response {
         ("POST", "/insert_batch") => insert(req, st, snap, true),
         ("GET", "/viewport") => viewport(req, st, snap),
         ("GET", "/healthz") => healthz(st, snap),
+        ("GET", "/readyz") => readyz(st),
         ("GET", "/metrics") => Response::json(st.metrics_json()),
         ("GET", "/") => index(),
+        ("GET", "/__panic") if st.cfg.debug_panic => {
+            panic!("debug_panic: deliberate handler panic")
+        }
         (_, "/embed" | "/knn" | "/insert" | "/insert_batch") => Response::error(405, "use POST"),
-        (_, "/viewport" | "/healthz" | "/metrics" | "/") => Response::error(405, "use GET"),
+        (_, "/viewport" | "/healthz" | "/readyz" | "/metrics" | "/") => {
+            Response::error(405, "use GET")
+        }
         _ => Response::error(404, "no such endpoint (GET / lists them)"),
     };
     if resp.status >= 400 {
@@ -72,9 +79,22 @@ pub fn route(req: &Request, st: &ServerState, snap: &Snapshot) -> Response {
 fn index() -> Response {
     Response::json(
         "{\"endpoints\":[\"POST /embed\",\"POST /knn\",\"POST /insert\",\
-         \"POST /insert_batch\",\"GET /viewport\",\"GET /healthz\",\"GET /metrics\"]}"
+         \"POST /insert_batch\",\"GET /viewport\",\"GET /healthz\",\"GET /readyz\",\
+         \"GET /metrics\"]}"
             .to_string(),
     )
+}
+
+/// `GET /readyz` — readiness (distinct from `/healthz` liveness): 200
+/// once WAL replay finished, `503` + `Retry-After` while it is still
+/// running. Load balancers should route traffic on this, not
+/// `/healthz`, so a restarting server replays in peace.
+fn readyz(st: &ServerState) -> Response {
+    if st.is_ready() {
+        Response::json("{\"ready\":true}".to_string())
+    } else {
+        Response::unavailable("not ready: replaying the insert WAL", 1)
+    }
 }
 
 /// `GET /healthz` — dataset, artifact and epoch summary.
@@ -95,6 +115,7 @@ fn healthz(st: &ServerState, snap: &Snapshot) -> Response {
     o.insert("graph_edges".to_string(), Json::Num(st.graph_edges as f64));
     o.insert("labeled".to_string(), Json::Bool(snap.labels.is_some()));
     o.insert("read_only".to_string(), Json::Bool(st.cfg.read_only));
+    o.insert("ready".to_string(), Json::Bool(st.is_ready()));
     Response::json(Json::Obj(o).to_string_compact())
 }
 
@@ -229,6 +250,9 @@ fn insert(req: &Request, st: &ServerState, snap: &Snapshot, batch: bool) -> Resp
     st.count("insert.requests", 1.0);
     if st.cfg.read_only {
         return Response::error(403, "server is read-only (--read-only)");
+    }
+    if !st.is_ready() {
+        return Response::unavailable("not ready: replaying the insert WAL", 1);
     }
     let json = match parse_body(req) {
         Ok(j) => j,

@@ -252,17 +252,31 @@ pub struct Response {
     pub content_type: &'static str,
     /// Response body bytes.
     pub body: Vec<u8>,
+    /// Optional `Retry-After` header value in seconds — set on `503`
+    /// overload/not-ready responses so clients back off instead of
+    /// hammering a saturated server.
+    pub retry_after: Option<u32>,
 }
 
 impl Response {
     /// A `200 OK` JSON response.
     pub fn json(body: String) -> Response {
-        Response { status: 200, content_type: "application/json", body: body.into_bytes() }
+        Response {
+            status: 200,
+            content_type: "application/json",
+            body: body.into_bytes(),
+            retry_after: None,
+        }
     }
 
     /// A `200 OK` SVG response.
     pub fn svg(body: String) -> Response {
-        Response { status: 200, content_type: "image/svg+xml", body: body.into_bytes() }
+        Response {
+            status: 200,
+            content_type: "image/svg+xml",
+            body: body.into_bytes(),
+            retry_after: None,
+        }
     }
 
     /// An error response with a JSON `{"error": ...}` body.
@@ -272,7 +286,16 @@ impl Response {
             status,
             content_type: "application/json",
             body: format!("{{\"error\":{body}}}").into_bytes(),
+            retry_after: None,
         }
+    }
+
+    /// A `503 Service Unavailable` with a `Retry-After` hint — the
+    /// shape of every load-shed and not-yet-ready refusal.
+    pub fn unavailable(message: &str, retry_secs: u32) -> Response {
+        let mut resp = Response::error(503, message);
+        resp.retry_after = Some(retry_secs);
+        resp
     }
 
     /// Standard reason phrase for the status code.
@@ -285,6 +308,7 @@ impl Response {
             405 => "Method Not Allowed",
             413 => "Payload Too Large",
             500 => "Internal Server Error",
+            503 => "Service Unavailable",
             _ => "Unknown",
         }
     }
@@ -296,13 +320,17 @@ impl Response {
     pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
         write!(
             w,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
             self.status,
             self.reason(),
             self.content_type,
             self.body.len(),
             if keep_alive { "keep-alive" } else { "close" }
         )?;
+        if let Some(secs) = self.retry_after {
+            write!(w, "Retry-After: {secs}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
         w.write_all(&self.body)?;
         w.flush()
     }
@@ -440,5 +468,19 @@ mod tests {
         let text = String::from_utf8(buf).unwrap();
         assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"));
         assert!(text.contains("{\"error\":\"no such endpoint \\\"x\\\"\"}"));
+    }
+
+    #[test]
+    fn unavailable_carries_retry_after() {
+        let mut buf = Vec::new();
+        Response::unavailable("server overloaded", 1).write_to(&mut buf, false).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("{\"error\":\"server overloaded\"}"));
+        // Plain responses must not grow the header.
+        let mut buf = Vec::new();
+        Response::json("{}".to_string()).write_to(&mut buf, true).unwrap();
+        assert!(!String::from_utf8(buf).unwrap().contains("Retry-After"));
     }
 }

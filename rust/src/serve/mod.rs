@@ -21,7 +21,8 @@
 //! * `GET /viewport` — an SVG tile of a layout rectangle, culled by the
 //!   [`crate::render::grid::GridIndex`] so tile cost tracks the tile's
 //!   content, not the dataset size.
-//! * `GET /healthz`, `GET /metrics` — liveness + JSON counters
+//! * `GET /healthz`, `GET /readyz`, `GET /metrics` — liveness,
+//!   readiness (503 while the insert WAL replays) and JSON counters
 //!   (reusing [`crate::coordinator::metrics::Metrics`]).
 //!
 //! Readers are lock-free in the steady state: every worker caches an
@@ -30,6 +31,22 @@
 //! the side and swap it in atomically. A background refinement worker
 //! runs localized SGD over recently-inserted points between requests
 //! (see [`ServerState::refine_loop`]).
+//!
+//! # Overload and failure containment
+//!
+//! One acceptor thread owns the listener and hands connections to a
+//! fixed worker pool through a queue. Admission is bounded
+//! (`max_inflight`, default `2×threads + 8`): connections beyond the
+//! bound are *shed* immediately with `503` + `Retry-After` instead of
+//! queueing without limit — under saturation the server degrades into
+//! fast, explicit refusals rather than unbounded latency. Every
+//! connection carries a read timeout (`idle_timeout_ms`) **and** a
+//! write timeout (`write_timeout_ms`), so a stalled or absent client
+//! cannot pin a worker; each request's handler runs under
+//! `catch_unwind`, so a panic costs the client a `500` and the server
+//! nothing (counted in `serve.panics`). Shutdown is a graceful drain:
+//! the acceptor stops, queued and in-flight connections finish, and
+//! the WAL gets a final fsync.
 //!
 //! Connections are persistent (HTTP/1.1 keep-alive) with a bounded
 //! per-connection request count (`keep_alive_max`) and an idle timeout
@@ -64,10 +81,11 @@ pub use state::{ServerState, Snapshot};
 
 use crate::util::pool;
 use anyhow::{Context, Result};
-use std::io::{BufReader, BufWriter};
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Read};
 use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 /// A bound (but not yet running) query server.
@@ -79,20 +97,20 @@ pub struct Server {
 }
 
 /// A cloneable remote control for a running [`Server`]: signals the
-/// accept workers to stop and wakes them up.
+/// acceptor to stop and wakes it up.
 #[derive(Clone)]
 pub struct ServerHandle {
     stop: Arc<AtomicBool>,
     addr: Option<SocketAddr>,
-    threads: usize,
 }
 
 impl ServerHandle {
-    /// Ask the server to stop. Blocked `accept` calls are woken by
-    /// loopback connections; [`Server::run`] returns once every worker
-    /// has observed the flag (workers idling inside a keep-alive
-    /// connection notice at the next request or at the idle timeout,
-    /// whichever comes first).
+    /// Ask the server to stop. The (single) blocked `accept` call is
+    /// woken by a loopback connection; [`Server::run`] returns after
+    /// the drain: queued and in-flight connections finish (workers
+    /// idling inside a keep-alive connection notice at the next
+    /// request or at the idle timeout), then the WAL is fsynced once
+    /// more.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(mut addr) = self.addr {
@@ -101,11 +119,17 @@ impl ServerHandle {
             if addr.ip().is_unspecified() {
                 addr = SocketAddr::new(IpAddr::V4(Ipv4Addr::LOCALHOST), addr.port());
             }
-            for _ in 0..self.threads {
-                let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(250));
-            }
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(250));
         }
     }
+}
+
+/// Hand-off queue between the acceptor and the worker pool. Bounded
+/// implicitly by the admission counter — the acceptor never pushes
+/// beyond `max_inflight`.
+struct Admission {
+    q: Mutex<VecDeque<TcpStream>>,
+    cv: Condvar,
 }
 
 impl Server {
@@ -140,60 +164,147 @@ impl Server {
 
     /// A control handle usable from another thread to stop [`Server::run`].
     pub fn handle(&self) -> ServerHandle {
-        ServerHandle {
-            stop: self.stop.clone(),
-            addr: self.listener.local_addr().ok(),
-            threads: self.threads,
+        ServerHandle { stop: self.stop.clone(), addr: self.listener.local_addr().ok() }
+    }
+
+    /// Admitted-connection bound: the configured value, or
+    /// `2×threads + 8` when 0 (every worker busy, a full hand-off
+    /// queue, and headroom for keep-alive turnaround).
+    fn max_inflight(&self) -> usize {
+        if self.state.cfg.max_inflight == 0 {
+            self.threads * 2 + 8
+        } else {
+            self.state.cfg.max_inflight
         }
     }
 
-    /// Serve until [`ServerHandle::shutdown`] is called: `threads`
-    /// workers share the listener, each handling one connection at a
-    /// time (multiple requests per connection — HTTP/1.1 keep-alive,
+    /// Serve until [`ServerHandle::shutdown`] is called. The calling
+    /// thread becomes the acceptor; `threads` workers drain the
+    /// admission queue, each handling one connection at a time
+    /// (multiple requests per connection — HTTP/1.1 keep-alive,
     /// bounded by `keep_alive_max` and `idle_timeout_ms`). A separate
-    /// background thread runs the insert-refinement loop.
+    /// background thread runs the insert-refinement loop. Connections
+    /// arriving while `max_inflight` are already admitted are shed
+    /// with `503` + `Retry-After` (counted in `serve.shed`).
     pub fn run(&self) -> Result<()> {
+        let max_inflight = self.max_inflight().max(1);
+        let admission = Admission { q: Mutex::new(VecDeque::new()), cv: Condvar::new() };
         std::thread::scope(|scope| {
             let refiner = scope.spawn(|| self.state.refine_loop(&self.stop));
-            pool::spawn_workers(self.threads, |_worker| {
-                // Per-worker snapshot cache: in the steady state a
-                // request revalidates it with one atomic load — no
-                // locks on the read path.
-                let mut cached = self.state.snapshot();
-                loop {
-                    if self.stop.load(Ordering::SeqCst) {
-                        break;
+            let mut workers = Vec::with_capacity(self.threads);
+            for _ in 0..self.threads {
+                let adm = &admission;
+                workers.push(scope.spawn(move || {
+                    // Per-worker snapshot cache: in the steady state a
+                    // request revalidates it with one atomic load — no
+                    // locks on the read path.
+                    let mut cached = self.state.snapshot();
+                    loop {
+                        // Pop before checking `stop`: the drain serves
+                        // every connection admitted before shutdown.
+                        let stream = {
+                            let mut q = adm.q.lock().unwrap_or_else(|e| e.into_inner());
+                            loop {
+                                if let Some(s) = q.pop_front() {
+                                    break Some(s);
+                                }
+                                if self.stop.load(Ordering::SeqCst) {
+                                    break None;
+                                }
+                                q = adm.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+                            }
+                        };
+                        let Some(stream) = stream else { return };
+                        handle_connection(stream, &self.state, &mut cached, &self.stop);
+                        self.state.release_one();
                     }
-                    match self.listener.accept() {
-                        Ok((stream, _peer)) => {
-                            if self.stop.load(Ordering::SeqCst) {
-                                break;
-                            }
-                            handle_connection(stream, &self.state, &mut cached, &self.stop);
+                }));
+            }
+
+            // Acceptor loop (this thread owns the listener).
+            loop {
+                if self.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if self.stop.load(Ordering::SeqCst) {
+                            break;
                         }
-                        Err(_) => {
-                            if self.stop.load(Ordering::SeqCst) {
-                                break;
-                            }
-                            // Transient accept errors (EMFILE, aborted
-                            // handshake): back off briefly instead of
-                            // hot-spinning.
-                            std::thread::sleep(Duration::from_millis(10));
+                        if self.state.inflight() >= max_inflight {
+                            shed(stream, &self.state);
+                            continue;
                         }
+                        self.state.admit_one();
+                        let mut q = admission.q.lock().unwrap_or_else(|e| e.into_inner());
+                        q.push_back(stream);
+                        drop(q);
+                        admission.cv.notify_one();
+                    }
+                    Err(_) => {
+                        if self.stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        // Transient accept errors (EMFILE, aborted
+                        // handshake): back off briefly instead of
+                        // hot-spinning.
+                        std::thread::sleep(Duration::from_millis(10));
                     }
                 }
-            });
-            // Accept workers are done; let the refiner observe `stop`.
+            }
+
+            // Graceful drain: stop accepting, wake every worker (under
+            // the queue lock, so a worker between its empty-check and
+            // its wait cannot miss the signal), let them finish the
+            // admitted connections.
+            {
+                let _guard = admission.q.lock().unwrap_or_else(|e| e.into_inner());
+                admission.cv.notify_all();
+            }
+            for w in workers {
+                let _ = w.join();
+            }
             self.state.wake_refiner();
             let _ = refiner.join();
         });
+        // Final durability point of the drain (a no-op after clean
+        // appends; insurance if the WAL writer was mid-recovery).
+        self.state.final_wal_sync();
         Ok(())
     }
 }
 
+/// Refuse one connection under overload: `503` + `Retry-After: 1`,
+/// then a half-close and a brief read-drain so the client reliably
+/// receives the response instead of a connection reset.
+fn shed(stream: TcpStream, state: &ServerState) {
+    state.count("serve.shed", 1.0);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(1000)));
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    {
+        let mut w = BufWriter::new(&stream);
+        let _ = http::Response::unavailable("server overloaded; retry shortly", 1)
+            .write_to(&mut w, false);
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    // Drain whatever request bytes are in flight; closing with unread
+    // data makes many TCP stacks send RST, which can destroy the 503
+    // sitting in the client's receive buffer.
+    let mut buf = [0u8; 1024];
+    let mut r = &stream;
+    for _ in 0..8 {
+        match r.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => continue,
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
 /// Serve one connection: up to `keep_alive_max` requests, each answered
 /// from a single consistent snapshot. I/O errors and idle timeouts are
-/// swallowed (the peer is gone or silent; nothing to tell it).
+/// swallowed (the peer is gone or silent; nothing to tell it); write
+/// timeouts and handler panics are counted.
 fn handle_connection(
     stream: TcpStream,
     state: &ServerState,
@@ -201,8 +312,19 @@ fn handle_connection(
     stop: &AtomicBool,
 ) {
     let idle = Duration::from_millis(state.cfg.idle_timeout_ms.max(100));
-    let _ = stream.set_read_timeout(Some(idle));
-    let _ = stream.set_nodelay(true);
+    let write_timeout = Duration::from_millis(state.cfg.write_timeout_ms.max(100));
+    // A socket option that cannot be set degrades the timeout story
+    // for this one connection; count it rather than dropping the
+    // error on the floor (or the connection with it).
+    if stream.set_read_timeout(Some(idle)).is_err() {
+        state.count("serve.sockopt_errors", 1.0);
+    }
+    if stream.set_write_timeout(Some(write_timeout)).is_err() {
+        state.count("serve.sockopt_errors", 1.0);
+    }
+    if stream.set_nodelay(true).is_err() {
+        state.count("serve.sockopt_errors", 1.0);
+    }
     let Ok(read_half) = stream.try_clone() else {
         return;
     };
@@ -228,9 +350,29 @@ fn handle_connection(
         // One snapshot per request: every field of the response comes
         // from the same epoch.
         state.snapshot_if_stale(cached);
-        let resp = handlers::route(&req, state, cached);
+        // Contain handler panics to the one request that caused them:
+        // the worker, its siblings, and the connection all survive
+        // (every shared-state mutex acquisition is poison-tolerant).
+        let resp = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handlers::route(&req, state, cached)
+        })) {
+            Ok(resp) => resp,
+            Err(_) => {
+                state.count("serve.panics", 1.0);
+                http::Response::error(500, "internal handler panic")
+            }
+        };
         let last = served == max_requests || req.wants_close || stop.load(Ordering::SeqCst);
-        if resp.write_to(&mut writer, !last).is_err() || last {
+        if let Err(e) = resp.write_to(&mut writer, !last) {
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) {
+                state.count("serve.write_timeouts", 1.0);
+            }
+            return;
+        }
+        if last {
             return;
         }
     }

@@ -18,25 +18,41 @@
 //! mutex. The only other lock on the read path is the metrics counter
 //! mutex, as before.
 //!
-//! Durability: accepted inserts are appended to `inserts.wal` in the
-//! checkpoint directory (see [`crate::data::formats::wal`]) *before*
-//! being applied, and replayed on startup — a restarted server
-//! recovers every acknowledged point bit-identically.
+//! Durability: accepted inserts are appended to the WAL set rooted at
+//! `inserts.wal` (see [`crate::data::formats::wal`]) *before* being
+//! applied, and replayed on startup — a restarted server recovers
+//! every acknowledged point bit-identically. Startup is two-phase:
+//! [`ServerState::open`] loads the checkpoints (and rolls forward any
+//! interrupted compaction) but leaves the server *not ready*;
+//! [`ServerState::recover`] replays the WAL — possibly long — while
+//! `/readyz` reports 503 and inserts are refused. Replay is bounded:
+//! the active segment rotates at `wal_segment_bytes`, and once
+//! `wal_max_segments` sealed segments accumulate they are *compacted*
+//! into the base checkpoints (staged `*.tmp` files + a fsynced commit
+//! marker, so a crash at any byte either replays the old WAL or rolls
+//! the finished compaction forward — never both, never neither).
+//!
+//! All durable writes go through a [`Storage`] handle so the crash
+//! tests can inject short writes, fsync failures and torn writes at
+//! every fault point (`rust/tests/fault_recovery.rs`).
 
 use crate::config::ServeConfig;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::CheckpointPaths;
-use crate::data::formats::wal::WalWriter;
+use crate::data::formats::wal::{self, WalSet};
 use crate::data::formats::{binary, checkpoint};
-use crate::data::io::read_labels;
+use crate::data::io::{read_labels, write_labels};
 use crate::data::matrix::Matrix;
 use crate::graph::weights::WeightConfig;
 use crate::knn::KnnGraph;
 use crate::render::grid::GridIndex;
+use crate::util::faultio::{RealStorage, Storage};
 use crate::vis::incremental::IncrementalLayout;
 use crate::vis::LargeVisConfig;
 use anyhow::{bail, Context, Result};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -78,8 +94,14 @@ struct Writer {
     /// labeled: the first id past the base classes (palette lookups
     /// are modulo, so any value is render-safe).
     pseudo_class: u32,
-    /// Durable insert log; `None` when the server is read-only.
-    wal: Option<WalWriter>,
+    /// Durable insert log; `None` until [`ServerState::recover`] runs,
+    /// and always `None` when the server is read-only.
+    wal: Option<WalSet>,
+    /// Set when a compaction died *after* its commit marker landed:
+    /// the on-disk checkpoints and WAL no longer match this process's
+    /// in-memory picture, so inserts are refused until a restart rolls
+    /// the compaction forward.
+    wal_failed: bool,
     /// Localized-edge windows of batches not yet refined.
     pending_edges: Vec<(u32, u32, f64)>,
     /// Rows covered by `pending_edges`.
@@ -108,6 +130,17 @@ pub struct ServerState {
     pub vis: LargeVisConfig,
     /// Request counters, served verbatim by `/metrics`.
     pub metrics: Mutex<Metrics>,
+    /// Durable-write factory; `RealStorage` in production, a
+    /// fault-injecting implementation in the crash tests.
+    storage: Arc<dyn Storage>,
+    /// Checkpoint-directory layout the state was loaded from.
+    paths: CheckpointPaths,
+    /// False until [`ServerState::recover`] finishes WAL replay;
+    /// `/readyz` and the insert path gate on this.
+    ready: AtomicBool,
+    /// Connections currently admitted (accepted and not yet finished);
+    /// the acceptor sheds above `max_inflight`.
+    admitted: AtomicUsize,
     /// Current epoch, readable without any lock. Published *after* the
     /// snapshot cell is updated, so a reader that sees epoch `e` here
     /// finds a snapshot of epoch `>= e` in the cell.
@@ -122,13 +155,126 @@ pub struct ServerState {
     refine_bell: (Mutex<bool>, Condvar),
 }
 
+/// `<path>.tmp` — the staging name compaction writes next to each
+/// final artifact before the atomic rename.
+fn tmp_path(p: &Path) -> PathBuf {
+    let mut s = p.as_os_str().to_os_string();
+    s.push(".tmp");
+    PathBuf::from(s)
+}
+
+/// Which side of the commit marker a compaction failure landed on —
+/// before it, nothing changed and the next attempt retries; after it,
+/// the on-disk state is ahead of this process and only a restart
+/// (which rolls the compaction forward) is safe.
+enum CompactError {
+    BeforeCommit(anyhow::Error),
+    AfterCommit(anyhow::Error),
+}
+
+/// Complete a committed compaction: rename every staged artifact into
+/// place, drop the now-stale CSR graph checkpoint, reset the WAL to an
+/// empty active segment continuing at `absorbed_seq`, and remove the
+/// marker. Idempotent — every step tolerates having already run, so
+/// crash-then-retry converges.
+fn finish_compaction(
+    storage: &dyn Storage,
+    paths: &CheckpointPaths,
+    absorbed_seq: u64,
+    d: usize,
+    wal: Option<&mut WalSet>,
+) -> Result<()> {
+    for target in [&paths.data, &paths.layout, &paths.knn, &paths.labels] {
+        let staged = tmp_path(target);
+        if staged.exists() {
+            storage
+                .persist(&staged, target)
+                .with_context(|| format!("install compacted {}", target.display()))?;
+        }
+    }
+    // The CSR graph checkpoint describes only the old base (it has one
+    // vertex per pre-compaction point); keeping it would fail the
+    // shape cross-validation on the next load. The server runs fine
+    // without it (`graph_edges` reports 0).
+    storage
+        .remove(&paths.graph)
+        .with_context(|| format!("remove stale {}", paths.graph.display()))?;
+    match wal {
+        Some(set) => set.reset_absorbed(absorbed_seq)?,
+        None => wal::reset_wal_set(storage, &paths.wal, d, absorbed_seq)?,
+    }
+    storage
+        .remove(&paths.compact_marker())
+        .context("remove compaction marker")?;
+    Ok(())
+}
+
+/// Startup crash recovery for compaction: a present commit marker
+/// means the staged checkpoints are complete and durable, so the
+/// compaction is rolled *forward*; no marker means any stray `*.tmp`
+/// files are from an attempt that died before commit and are removed.
+fn roll_forward_compaction(storage: &dyn Storage, paths: &CheckpointPaths) -> Result<()> {
+    let marker = paths.compact_marker();
+    let raw = match std::fs::read_to_string(&marker) {
+        Ok(s) => s,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            for target in [&paths.data, &paths.layout, &paths.knn, &paths.labels, &marker] {
+                storage.remove(&tmp_path(target)).ok();
+            }
+            return Ok(());
+        }
+        Err(e) => return Err(e).with_context(|| format!("read {}", marker.display())),
+    };
+    let mut absorbed: Option<u64> = None;
+    let mut d: Option<usize> = None;
+    for line in raw.lines() {
+        if let Some(v) = line.strip_prefix("absorbed=") {
+            absorbed = v.trim().parse().ok();
+        } else if let Some(v) = line.strip_prefix("d=") {
+            d = v.trim().parse().ok();
+        }
+    }
+    let (Some(absorbed), Some(d)) = (absorbed, d) else {
+        bail!(
+            "{}: unparseable compaction marker (remove it manually to discard the compaction)",
+            marker.display()
+        );
+    };
+    eprintln!("[serve] completing interrupted WAL compaction (absorbed seq < {absorbed})");
+    finish_compaction(storage, paths, absorbed, d, None)
+        .context("roll forward interrupted WAL compaction")
+}
+
 impl ServerState {
-    /// Load every artifact from `cfg.checkpoints`, cross-validate
-    /// shapes (a stale or mixed checkpoint directory fails at startup
-    /// instead of serving garbage), replay the live-insert WAL, and
-    /// publish epoch `N` (one epoch per recovered WAL batch).
+    /// [`ServerState::open`] + [`ServerState::recover`] in one call —
+    /// the convenience entry point for tests and synchronous startup.
     pub fn load(cfg: ServeConfig) -> Result<ServerState> {
+        Self::load_with(cfg, Arc::new(RealStorage))
+    }
+
+    /// [`ServerState::load`] with an explicit [`Storage`].
+    pub fn load_with(cfg: ServeConfig, storage: Arc<dyn Storage>) -> Result<ServerState> {
+        let st = Self::open_with(cfg, storage)?;
+        st.recover()?;
+        Ok(st)
+    }
+
+    /// Load every artifact from `cfg.checkpoints` and cross-validate
+    /// shapes (a stale or mixed checkpoint directory fails at startup
+    /// instead of serving garbage). Rolls forward any interrupted WAL
+    /// compaction first. The returned state serves reads of epoch 0
+    /// but is **not ready**: the WAL has not been replayed — call
+    /// [`ServerState::recover`] (possibly from another thread while
+    /// `/readyz` reports 503).
+    pub fn open(cfg: ServeConfig) -> Result<ServerState> {
+        Self::open_with(cfg, Arc::new(RealStorage))
+    }
+
+    /// [`ServerState::open`] with an explicit [`Storage`] (the crash
+    /// tests inject faults through it).
+    pub fn open_with(cfg: ServeConfig, storage: Arc<dyn Storage>) -> Result<ServerState> {
         let paths = CheckpointPaths::in_dir(&cfg.checkpoints);
+        roll_forward_compaction(storage.as_ref(), &paths)?;
         let data = binary::read_binary(&paths.data).with_context(|| {
             format!(
                 "{}: serving needs the raw-points checkpoint (written by a \
@@ -216,6 +362,23 @@ impl ServerState {
         let mut metrics = Metrics::new();
         metrics.set("serve.points", n as f64);
         metrics.set("serve.graph_edges", graph_edges as f64);
+        // Robustness counters exist from the first `/metrics` scrape,
+        // so dashboards and the overload tests never probe a missing
+        // key.
+        for key in [
+            "serve.shed",
+            "serve.panics",
+            "serve.write_timeouts",
+            "serve.sockopt_errors",
+            "serve.replayed_batches",
+            "serve.wal_rotations",
+            "serve.wal_rotation_errors",
+            "serve.compactions",
+            "serve.compact_errors",
+            "serve.wal_corrupt_segments",
+        ] {
+            metrics.set(key, 0.0);
+        }
 
         // The writer wraps the loaded base; insert batches grow it.
         // Re-weighting of spliced rows uses the default perplexity
@@ -224,50 +387,18 @@ impl ServerState {
         let mut inc =
             IncrementalLayout::new(data, knn, layout, WeightConfig::default(), vis.clone());
         inc.samples_per_insert = cfg.insert_samples;
-        let mut writer = Writer {
+        let writer = Writer {
             inc,
             grid,
             labels,
             pseudo_class: n_classes as u32,
             wal: None,
+            wal_failed: false,
             pending_edges: Vec::new(),
             pending_rows: 0,
         };
 
-        // Recover acknowledged inserts, then (in live mode) keep the
-        // log open for appending. Replay goes through the exact same
-        // `add_points` path live inserts take, so the recovered
-        // data/KNN state is bit-identical to the pre-restart one.
-        let contents = if cfg.read_only {
-            crate::data::formats::wal::read_wal(&paths.wal, writer.inc.data.d())?
-        } else {
-            let (wal, contents) = WalWriter::open(&paths.wal, writer.inc.data.d())
-                .with_context(|| format!("open insert WAL {}", paths.wal.display()))?;
-            writer.wal = Some(wal);
-            contents
-        };
-        let mut recovered_rows = 0usize;
-        for b in &contents.batches {
-            Self::apply_batch(&mut writer, b);
-            recovered_rows += b.n();
-        }
-        let recovered_batches = contents.batches.len() as u64;
-        if contents.torn_tail {
-            eprintln!(
-                "[serve] {}: torn WAL tail dropped ({recovered_batches} complete batches \
-                 recovered)",
-                paths.wal.display(),
-            );
-        }
-        // Recovered rows count as already-refined (their localized
-        // passes ran during replay; the background worker starts clean).
-        writer.pending_edges.clear();
-        writer.pending_rows = 0;
-        metrics.set("serve.wal_batches", recovered_batches as f64);
-        metrics.set("serve.inserted", recovered_rows as f64);
-
-        let epoch0 = recovered_batches;
-        let snapshot = Arc::new(Self::snapshot_of(&writer, epoch0, n, n_classes));
+        let snapshot = Arc::new(Self::snapshot_of(&writer, 0, n, n_classes));
         Ok(ServerState {
             cfg,
             dataset,
@@ -276,11 +407,103 @@ impl ServerState {
             n_classes,
             vis,
             metrics: Mutex::new(metrics),
-            epoch: AtomicU64::new(epoch0),
+            storage,
+            paths,
+            ready: AtomicBool::new(false),
+            admitted: AtomicUsize::new(0),
+            epoch: AtomicU64::new(0),
             snap: Mutex::new(snapshot),
             writer: Mutex::new(writer),
             refine_bell: (Mutex::new(false), Condvar::new()),
         })
+    }
+
+    /// Replay the live-insert WAL set and mark the server ready.
+    /// Replay goes through the exact same `add_points` path live
+    /// inserts take, so the recovered data/KNN state is bit-identical
+    /// to the pre-restart one; the published epoch equals the number
+    /// of replayed batches. Idempotent — a second call is a no-op.
+    /// Corruption is handled per `cfg.recovery_policy`: fail fast
+    /// (default), or salvage the clean prefix, quarantine the corrupt
+    /// files, and count them in `serve.wal_corrupt_segments`.
+    pub fn recover(&self) -> Result<()> {
+        let mut w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
+        if self.ready.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let d = w.inc.data.d();
+        let recovery = if self.cfg.read_only {
+            wal::read_wal_set(&self.paths.wal, d, self.cfg.recovery_policy)?
+        } else {
+            let (set, rec) = WalSet::open(
+                self.storage.clone(),
+                &self.paths.wal,
+                d,
+                self.cfg.recovery_policy,
+            )
+            .with_context(|| format!("open insert WAL {}", self.paths.wal.display()))?;
+            w.wal = Some(set);
+            rec
+        };
+        let mut recovered_rows = 0usize;
+        for b in &recovery.batches {
+            Self::apply_batch(&mut w, b);
+            recovered_rows += b.n();
+        }
+        let recovered_batches = recovery.batches.len() as u64;
+        if recovery.torn_tail {
+            eprintln!(
+                "[serve] {}: torn WAL tail dropped ({recovered_batches} complete batches \
+                 recovered)",
+                self.paths.wal.display(),
+            );
+        }
+        if recovery.corrupt_segments > 0 {
+            eprintln!(
+                "[serve] {}: {} corrupt WAL segment(s) quarantined \
+                 (recovery_policy=truncate)",
+                self.paths.wal.display(),
+                recovery.corrupt_segments,
+            );
+        }
+        // Recovered rows count as already-refined (their localized
+        // passes ran during replay; the background worker starts clean).
+        w.pending_edges.clear();
+        w.pending_rows = 0;
+        {
+            let mut m = self.metrics.lock().unwrap_or_else(|e| e.into_inner());
+            m.set("serve.wal_batches", recovered_batches as f64);
+            m.set("serve.inserted", recovered_rows as f64);
+            m.set("serve.replayed_batches", recovered_batches as f64);
+            m.set("serve.wal_corrupt_segments", recovery.corrupt_segments as f64);
+        }
+
+        let epoch = recovered_batches;
+        let snapshot = Arc::new(Self::snapshot_of(&w, epoch, self.base_n, self.n_classes));
+        *self.snap.lock().unwrap_or_else(|e| e.into_inner()) = snapshot;
+        self.epoch.store(epoch, Ordering::Release);
+        self.ready.store(true, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// True once WAL replay finished; `/readyz` and inserts gate on it.
+    pub fn is_ready(&self) -> bool {
+        self.ready.load(Ordering::SeqCst)
+    }
+
+    /// Connections currently admitted (accepted, not yet finished).
+    pub fn inflight(&self) -> usize {
+        self.admitted.load(Ordering::SeqCst)
+    }
+
+    /// Record one admitted connection (acceptor side).
+    pub fn admit_one(&self) {
+        self.admitted.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Record one finished connection (worker side).
+    pub fn release_one(&self) {
+        self.admitted.fetch_sub(1, Ordering::SeqCst);
     }
 
     /// Apply one insert batch to the writer state (shared by live
@@ -365,20 +588,140 @@ impl ServerState {
     /// Insert a batch of points: WAL first, then the localized insert
     /// path, then an atomic snapshot swap. Returns the assigned ids and
     /// the epoch that contains them. Serialized with other writers by
-    /// the writer mutex; readers are never blocked.
+    /// the writer mutex; readers are never blocked. WAL maintenance
+    /// (segment rotation, compaction) runs after the ack point — its
+    /// failures are counted, never surfaced to an already-durable
+    /// insert.
     pub fn insert(&self, pts: &Matrix) -> Result<(Vec<usize>, u64)> {
         if self.cfg.read_only {
             bail!("server is read-only (--read-only)");
         }
+        if !self.is_ready() {
+            bail!("server is still replaying the insert WAL");
+        }
         let mut w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
-        if let Some(wal) = &mut w.wal {
-            wal.append(pts).context("append insert WAL")?;
+        if w.wal_failed {
+            bail!("inserts disabled after a failed WAL compaction (restart to recover)");
+        }
+        if let Some(set) = &mut w.wal {
+            set.append(pts).context("append insert WAL")?;
         }
         let ids = Self::apply_batch(&mut w, pts);
         let epoch = self.publish(&w);
+        self.maintain_wal(&mut w);
         drop(w);
         self.ring_refine_bell();
         Ok((ids, epoch))
+    }
+
+    /// Post-ack WAL maintenance: rotate the active segment once it
+    /// exceeds `wal_segment_bytes`, and compact once `wal_max_segments`
+    /// sealed segments have accumulated — both bound how much WAL a
+    /// restart must replay.
+    fn maintain_wal(&self, w: &mut Writer) {
+        let seg_bytes = self.cfg.wal_segment_bytes.max(1);
+        let max_segments = self.cfg.wal_max_segments.max(1);
+        let mut want_compact = false;
+        if let Some(set) = w.wal.as_mut() {
+            if set.active_bytes() >= seg_bytes {
+                match set.rotate() {
+                    Ok(()) => self.count("serve.wal_rotations", 1.0),
+                    Err(e) => {
+                        self.count("serve.wal_rotation_errors", 1.0);
+                        eprintln!("[serve] WAL rotation failed: {e:#}");
+                        return;
+                    }
+                }
+            }
+            want_compact = set.sealed_count() >= max_segments;
+        }
+        if want_compact {
+            self.compact(w);
+        }
+    }
+
+    /// Compact the WAL into the base checkpoints; counts success or
+    /// failure and (only for a post-commit failure) disables inserts.
+    fn compact(&self, w: &mut Writer) {
+        match self.try_compact(w) {
+            Ok(()) => self.count("serve.compactions", 1.0),
+            Err(CompactError::BeforeCommit(e)) => {
+                self.count("serve.compact_errors", 1.0);
+                eprintln!("[serve] WAL compaction failed before commit (will retry): {e:#}");
+            }
+            Err(CompactError::AfterCommit(e)) => {
+                self.count("serve.compact_errors", 1.0);
+                w.wal_failed = true;
+                eprintln!(
+                    "[serve] WAL compaction failed after commit; inserts disabled until \
+                     restart rolls it forward: {e:#}"
+                );
+            }
+        }
+    }
+
+    /// Absorb every WAL batch into the base checkpoints. Protocol:
+    /// stage `data/layout/knn/labels` as fsynced `*.tmp` files, then
+    /// atomically rename a fsynced commit marker into place (the
+    /// point of no return), then [`finish_compaction`]. A crash before
+    /// the marker leaves the old checkpoints + full WAL (tmps are
+    /// discarded at the next open); a crash after it is rolled forward
+    /// at the next open. Runs with the writer lock held, so the state
+    /// written is exactly the state every acked insert sees.
+    fn try_compact(&self, w: &mut Writer) -> Result<(), CompactError> {
+        let Some(absorbed) = w.wal.as_ref().map(|set| set.next_seq()) else {
+            return Ok(());
+        };
+        let storage = self.storage.as_ref();
+        let paths = &self.paths;
+        let d = w.inc.data.d();
+        let before = CompactError::BeforeCommit;
+
+        binary::write_binary_with(storage, &tmp_path(&paths.data), &w.inc.data).map_err(before)?;
+        binary::write_binary_with(storage, &tmp_path(&paths.layout), &w.inc.layout)
+            .map_err(before)?;
+        checkpoint::write_knn_with(storage, &tmp_path(&paths.knn), &w.inc.knn).map_err(before)?;
+        if let Some(ls) = &w.labels {
+            let staged = tmp_path(&paths.labels);
+            write_labels(&staged, ls).map_err(before)?;
+            // `write_labels` uses plain buffered I/O; the staged file
+            // must be durable before the marker commits.
+            storage
+                .open_durable(&staged)
+                .and_then(|mut f| f.sync_data())
+                .with_context(|| format!("sync {}", staged.display()))
+                .map_err(before)?;
+        }
+
+        let marker = paths.compact_marker();
+        let staged_marker = tmp_path(&marker);
+        let commit = || -> Result<()> {
+            let mut f = storage
+                .create_durable(&staged_marker)
+                .with_context(|| format!("create {}", staged_marker.display()))?;
+            f.write_all(format!("absorbed={absorbed}\nd={d}\n").as_bytes())?;
+            f.sync_data()?;
+            drop(f);
+            storage.persist(&staged_marker, &marker)?;
+            Ok(())
+        };
+        commit().context("commit WAL compaction marker").map_err(before)?;
+
+        finish_compaction(storage, paths, absorbed, d, w.wal.as_mut())
+            .map_err(CompactError::AfterCommit)
+    }
+
+    /// Final fsync of the active WAL on graceful shutdown — a no-op
+    /// after clean appends (every append syncs), cheap insurance
+    /// otherwise. Failures are logged, not raised: the process is
+    /// exiting either way.
+    pub fn final_wal_sync(&self) {
+        let mut w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(set) = w.wal.as_mut() {
+            if let Err(e) = set.sync() {
+                eprintln!("[serve] final WAL sync failed: {e:#}");
+            }
+        }
     }
 
     /// One background refinement pass: replay the accumulated localized
@@ -505,6 +848,70 @@ mod tests {
         let cfg = ServeConfig { checkpoints: dir.clone(), ..Default::default() };
         let err = format!("{:#}", ServerState::load(cfg).unwrap_err());
         assert!(err.contains("stale checkpoint directory"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Write a minimal valid checkpoint directory: n points on a line,
+    /// each with one KNN neighbor.
+    fn fabricate_checkpoints(dir: &std::path::Path, n: usize) {
+        std::fs::create_dir_all(dir).unwrap();
+        let paths = CheckpointPaths::in_dir(dir);
+        let d = 3;
+        let data: Vec<f32> = (0..n * d).map(|i| i as f32 * 0.25).collect();
+        let layout: Vec<f32> = (0..n * 2).map(|i| i as f32 * 0.5).collect();
+        binary::write_binary(&paths.data, &Matrix::from_vec(data, n, d)).unwrap();
+        binary::write_binary(&paths.layout, &Matrix::from_vec(layout, n, 2)).unwrap();
+        let mut knn = KnnGraph::empty(n, 1);
+        for i in 0..n {
+            knn.neighbors[i] = vec![(((i + 1) % n) as u32, 1.0)];
+        }
+        checkpoint::write_knn(&paths.knn, &knn).unwrap();
+        std::fs::write(&paths.meta, "fabricated").unwrap();
+    }
+
+    #[test]
+    fn open_is_not_ready_until_recover() {
+        let dir = std::env::temp_dir()
+            .join(format!("largevis_serve_ready_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        fabricate_checkpoints(&dir, 6);
+        let cfg = ServeConfig { checkpoints: dir.clone(), ..Default::default() };
+        let st = ServerState::open(cfg).unwrap();
+        assert!(!st.is_ready());
+        let pts = Matrix::from_vec(vec![0.5, 0.5, 0.5], 1, 3);
+        let err = format!("{:#}", st.insert(&pts).unwrap_err());
+        assert!(err.contains("replaying"), "{err}");
+        st.recover().unwrap();
+        assert!(st.is_ready());
+        st.recover().unwrap(); // idempotent
+        let (ids, epoch) = st.insert(&pts).unwrap();
+        assert_eq!(ids, vec![6]);
+        assert_eq!(epoch, 1);
+        // The insert hit the WAL durably; a fresh load replays it.
+        let cfg = ServeConfig { checkpoints: dir.clone(), ..Default::default() };
+        let st2 = ServerState::load(cfg).unwrap();
+        let snap = st2.snapshot();
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(snap.data.n(), 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn admission_counter_tracks() {
+        let dir = std::env::temp_dir()
+            .join(format!("largevis_serve_admit_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        fabricate_checkpoints(&dir, 4);
+        let cfg = ServeConfig { checkpoints: dir.clone(), ..Default::default() };
+        let st = ServerState::load(cfg).unwrap();
+        assert_eq!(st.inflight(), 0);
+        st.admit_one();
+        st.admit_one();
+        assert_eq!(st.inflight(), 2);
+        st.release_one();
+        assert_eq!(st.inflight(), 1);
+        st.release_one();
+        assert_eq!(st.inflight(), 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,430 @@
+//! Injectable durable-file I/O: the seam the crash-recovery torture
+//! harness drives.
+//!
+//! Every write path that must survive a crash (the insert WAL, the
+//! checkpoint matrix/KNN writers, compaction renames) goes through the
+//! [`Storage`] + [`DurableFile`] traits instead of touching
+//! `std::fs::File` directly. Production code uses [`RealStorage`]
+//! (plain files, `fdatasync`, atomic rename + parent-directory sync);
+//! the fault tests swap in [`FaultStorage`], which counts every
+//! write/fsync operation across all files it opened and injects one
+//! seeded fault ([`FaultKind`]) at a chosen operation index. Because
+//! the workload is deterministic, the operation schedule is identical
+//! up to the first fault, so enumerating `trigger_op` from 0 to the
+//! probed operation count visits every injectable fault point exactly
+//! once.
+//!
+//! Fault semantics:
+//! - transient faults ([`FaultKind::ShortWrite`], [`FaultKind::Enospc`],
+//!   [`FaultKind::FsyncFail`]) fire once and later operations succeed,
+//!   exercising the callers' rollback/retry paths;
+//! - [`FaultKind::TornWrite`] persists a prefix of the buffer and then
+//!   marks the whole storage *crashed*: every subsequent operation on
+//!   every file errors, modelling a process kill mid-write;
+//! - a failed fsync drops the bytes written since the last successful
+//!   sync (the page cache was never persisted), which is the disk
+//!   behavior fsync-error handling bugs get wrong.
+
+use std::io::{self, Seek, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A writable file handle with explicit durability operations.
+///
+/// The supertrait bound means a `Box<dyn DurableFile>` can sit inside
+/// a `std::io::BufWriter` exactly like a `std::fs::File`.
+pub trait DurableFile: Write + Send {
+    /// Flush file *contents* to stable storage (`fdatasync`).
+    fn sync_data(&mut self) -> io::Result<()>;
+    /// Truncate (or extend) the file to `len` bytes.
+    fn set_len(&mut self, len: u64) -> io::Result<()>;
+    /// Reposition the write cursor.
+    fn seek(&mut self, pos: io::SeekFrom) -> io::Result<u64>;
+}
+
+/// A file-system factory for [`DurableFile`] handles plus the two
+/// metadata operations crash recovery depends on (atomic rename and
+/// tolerant remove).
+pub trait Storage: Send + Sync {
+    /// Open `path` read/write without truncating, creating it if
+    /// absent (the WAL resume path).
+    fn open_durable(&self, path: &Path) -> io::Result<Box<dyn DurableFile>>;
+    /// Create `path` truncated to zero length (fresh WAL segments,
+    /// checkpoint temporaries).
+    fn create_durable(&self, path: &Path) -> io::Result<Box<dyn DurableFile>>;
+    /// Atomically rename `from` onto `to`, then best-effort sync the
+    /// destination's parent directory so the rename itself is durable.
+    fn persist(&self, from: &Path, to: &Path) -> io::Result<()>;
+    /// Remove a file; a file that is already absent is not an error
+    /// (recovery retries removals idempotently).
+    fn remove(&self, path: &Path) -> io::Result<()>;
+}
+
+/// The production [`Storage`]: plain `std::fs` files.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RealStorage;
+
+struct RealFile(std::fs::File);
+
+impl Write for RealFile {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.0.flush()
+    }
+}
+
+impl DurableFile for RealFile {
+    fn sync_data(&mut self) -> io::Result<()> {
+        self.0.sync_data()
+    }
+
+    fn set_len(&mut self, len: u64) -> io::Result<()> {
+        self.0.set_len(len)
+    }
+
+    fn seek(&mut self, pos: io::SeekFrom) -> io::Result<u64> {
+        self.0.seek(pos)
+    }
+}
+
+fn sync_parent_dir(path: &Path) {
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+}
+
+fn remove_tolerant(path: &Path) -> io::Result<()> {
+    match std::fs::remove_file(path) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(()),
+        Err(e) => Err(e),
+    }
+}
+
+impl Storage for RealStorage {
+    fn open_durable(&self, path: &Path) -> io::Result<Box<dyn DurableFile>> {
+        let f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)?;
+        Ok(Box::new(RealFile(f)))
+    }
+
+    fn create_durable(&self, path: &Path) -> io::Result<Box<dyn DurableFile>> {
+        Ok(Box::new(RealFile(std::fs::File::create(path)?)))
+    }
+
+    fn persist(&self, from: &Path, to: &Path) -> io::Result<()> {
+        std::fs::rename(from, to)?;
+        sync_parent_dir(to);
+        Ok(())
+    }
+
+    fn remove(&self, path: &Path) -> io::Result<()> {
+        remove_tolerant(path)
+    }
+}
+
+/// The kind of storage fault a [`FaultPlan`] injects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A write persists only a seeded prefix of the buffer, then
+    /// errors; later operations succeed (transient).
+    ShortWrite,
+    /// A write fails outright, ENOSPC-style, persisting nothing;
+    /// later operations succeed (transient).
+    Enospc,
+    /// An fsync fails and every byte written since the last successful
+    /// sync is dropped (the page cache was lost); later operations
+    /// succeed (transient).
+    FsyncFail,
+    /// A write tears mid-buffer and the process "crashes": every
+    /// subsequent operation on every file errors until the storage is
+    /// reopened.
+    TornWrite,
+}
+
+impl FaultKind {
+    fn fires_on_write(self) -> bool {
+        matches!(self, FaultKind::ShortWrite | FaultKind::Enospc | FaultKind::TornWrite)
+    }
+
+    fn fires_on_sync(self) -> bool {
+        matches!(self, FaultKind::FsyncFail)
+    }
+}
+
+/// One planned fault: `kind` fires at the first matching operation
+/// whose global index is `>= trigger_op`; `seed` picks the torn byte
+/// for the partial-write kinds.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// What goes wrong.
+    pub kind: FaultKind,
+    /// Global write/fsync operation index at (or after) which the
+    /// fault fires. `u64::MAX` never fires (probe mode).
+    pub trigger_op: u64,
+    /// Picks the persisted prefix length for short/torn writes.
+    pub seed: u64,
+}
+
+/// A [`Storage`] that injects exactly one [`FaultPlan`] fault across
+/// all files it opens. Clones share the operation counter and fault
+/// state, so a single `FaultStorage` can be handed to several writers
+/// while keeping one global, deterministic operation schedule.
+#[derive(Clone)]
+pub struct FaultStorage {
+    plan: FaultPlan,
+    ops: Arc<AtomicU64>,
+    fired: Arc<AtomicBool>,
+    crashed: Arc<AtomicBool>,
+}
+
+impl FaultStorage {
+    /// Storage that injects `plan`.
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultStorage {
+            plan,
+            ops: Arc::new(AtomicU64::new(0)),
+            fired: Arc::new(AtomicBool::new(false)),
+            crashed: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Storage that never faults but still counts operations — run the
+    /// workload once under a probe to learn how many injectable fault
+    /// points it has.
+    pub fn probe() -> Self {
+        let plan = FaultPlan { kind: FaultKind::ShortWrite, trigger_op: u64::MAX, seed: 0 };
+        FaultStorage::new(plan)
+    }
+
+    /// Write/fsync operations observed so far.
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::SeqCst)
+    }
+
+    /// Whether the planned fault has fired.
+    pub fn fired(&self) -> bool {
+        self.fired.load(Ordering::SeqCst)
+    }
+
+    /// Whether a torn write has "crashed" the storage.
+    pub fn crashed(&self) -> bool {
+        self.crashed.load(Ordering::SeqCst)
+    }
+
+    fn check_crashed(&self) -> io::Result<()> {
+        if self.crashed.load(Ordering::SeqCst) {
+            Err(io::Error::other("injected crash: storage is offline"))
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Returns true exactly once: at the first matching op at or past
+    /// the trigger.
+    fn should_fire(&self, op: u64, on_write: bool) -> bool {
+        if op < self.plan.trigger_op || self.fired.load(Ordering::SeqCst) {
+            return false;
+        }
+        let matches = if on_write {
+            self.plan.kind.fires_on_write()
+        } else {
+            self.plan.kind.fires_on_sync()
+        };
+        matches && !self.fired.swap(true, Ordering::SeqCst)
+    }
+}
+
+struct FaultFile {
+    inner: std::fs::File,
+    /// File length as of the last successful sync; a failed sync
+    /// truncates back to this, modelling lost page cache.
+    synced_len: u64,
+    ctl: FaultStorage,
+}
+
+impl Write for FaultFile {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.ctl.check_crashed()?;
+        let op = self.ctl.ops.fetch_add(1, Ordering::SeqCst);
+        if self.ctl.should_fire(op, true) {
+            match self.ctl.plan.kind {
+                FaultKind::ShortWrite => {
+                    let keep = (self.ctl.plan.seed % (buf.len().max(1) as u64)) as usize;
+                    self.inner.write_all(&buf[..keep])?;
+                    return Err(io::Error::other("injected short write"));
+                }
+                FaultKind::Enospc => {
+                    return Err(io::Error::other("injected ENOSPC: no space left on device"));
+                }
+                FaultKind::TornWrite => {
+                    let keep = (self.ctl.plan.seed % (buf.len().max(1) as u64)) as usize;
+                    self.inner.write_all(&buf[..keep])?;
+                    self.ctl.crashed.store(true, Ordering::SeqCst);
+                    return Err(io::Error::other("injected torn write (process crash)"));
+                }
+                FaultKind::FsyncFail => unreachable!("fsync faults fire on sync"),
+            }
+        }
+        self.inner.write_all(buf)?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.ctl.check_crashed()?;
+        self.inner.flush()
+    }
+}
+
+impl DurableFile for FaultFile {
+    fn sync_data(&mut self) -> io::Result<()> {
+        self.ctl.check_crashed()?;
+        let op = self.ctl.ops.fetch_add(1, Ordering::SeqCst);
+        if self.ctl.should_fire(op, false) {
+            // The kernel never promised the unsynced bytes; drop them.
+            self.inner.set_len(self.synced_len)?;
+            return Err(io::Error::other("injected fsync failure; unsynced bytes dropped"));
+        }
+        self.inner.sync_data()?;
+        self.synced_len = self.inner.metadata()?.len();
+        Ok(())
+    }
+
+    fn set_len(&mut self, len: u64) -> io::Result<()> {
+        self.ctl.check_crashed()?;
+        self.inner.set_len(len)?;
+        self.synced_len = self.synced_len.min(len);
+        Ok(())
+    }
+
+    fn seek(&mut self, pos: io::SeekFrom) -> io::Result<u64> {
+        self.ctl.check_crashed()?;
+        self.inner.seek(pos)
+    }
+}
+
+impl Storage for FaultStorage {
+    fn open_durable(&self, path: &Path) -> io::Result<Box<dyn DurableFile>> {
+        self.check_crashed()?;
+        let f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)?;
+        let synced_len = f.metadata()?.len();
+        Ok(Box::new(FaultFile { inner: f, synced_len, ctl: self.clone() }))
+    }
+
+    fn create_durable(&self, path: &Path) -> io::Result<Box<dyn DurableFile>> {
+        self.check_crashed()?;
+        let f = std::fs::File::create(path)?;
+        Ok(Box::new(FaultFile { inner: f, synced_len: 0, ctl: self.clone() }))
+    }
+
+    fn persist(&self, from: &Path, to: &Path) -> io::Result<()> {
+        self.check_crashed()?;
+        std::fs::rename(from, to)?;
+        sync_parent_dir(to);
+        Ok(())
+    }
+
+    fn remove(&self, path: &Path) -> io::Result<()> {
+        self.check_crashed()?;
+        remove_tolerant(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let pid = std::process::id();
+        let p = std::env::temp_dir().join(format!("largevis_faultio_{pid}_{name}"));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn real_storage_roundtrip_and_tolerant_remove() {
+        let p = tmp("real");
+        let s = RealStorage;
+        let mut f = s.create_durable(&p).unwrap();
+        f.write_all(b"abc").unwrap();
+        f.sync_data().unwrap();
+        drop(f);
+        assert_eq!(std::fs::read(&p).unwrap(), b"abc");
+        s.remove(&p).unwrap();
+        s.remove(&p).unwrap(); // absent file is fine
+    }
+
+    #[test]
+    fn short_write_is_transient_and_persists_prefix() {
+        let p = tmp("short");
+        let plan = FaultPlan { kind: FaultKind::ShortWrite, trigger_op: 1, seed: 2 };
+        let s = FaultStorage::new(plan);
+        let mut f = s.create_durable(&p).unwrap();
+        f.write_all(b"aaaa").unwrap(); // op 0: before trigger
+        let err = f.write_all(b"bbbb").unwrap_err(); // op 1: fires, keeps seed % 4 = 2 bytes
+        assert!(err.to_string().contains("short write"), "{err}");
+        assert!(s.fired());
+        f.write_all(b"cccc").unwrap(); // transient: succeeds
+        drop(f);
+        assert_eq!(std::fs::read(&p).unwrap(), b"aaaabbcccc");
+    }
+
+    #[test]
+    fn fsync_failure_drops_unsynced_bytes() {
+        let p = tmp("fsync");
+        // Ops: write(0) sync(1) write(2) sync(3 = trigger).
+        let plan = FaultPlan { kind: FaultKind::FsyncFail, trigger_op: 3, seed: 0 };
+        let s = FaultStorage::new(plan);
+        let mut f = s.create_durable(&p).unwrap();
+        f.write_all(b"hello").unwrap();
+        f.sync_data().unwrap();
+        f.write_all(b"world").unwrap();
+        assert!(f.sync_data().is_err());
+        drop(f);
+        assert_eq!(std::fs::read(&p).unwrap(), b"hello", "unsynced bytes must disappear");
+    }
+
+    #[test]
+    fn torn_write_crashes_all_subsequent_ops() {
+        let p = tmp("torn");
+        let plan = FaultPlan { kind: FaultKind::TornWrite, trigger_op: 0, seed: 3 };
+        let s = FaultStorage::new(plan);
+        let mut f = s.create_durable(&p).unwrap();
+        assert!(f.write_all(b"abcdef").is_err());
+        assert!(s.crashed());
+        assert!(f.write_all(b"x").is_err(), "post-crash writes must fail");
+        assert!(f.sync_data().is_err(), "post-crash syncs must fail");
+        assert!(s.create_durable(&tmp("torn2")).is_err(), "post-crash opens must fail");
+        drop(f);
+        assert_eq!(std::fs::read(&p).unwrap(), b"abc", "torn prefix persists");
+    }
+
+    #[test]
+    fn probe_counts_ops_without_firing() {
+        let p = tmp("probe");
+        let s = FaultStorage::probe();
+        let mut f = s.create_durable(&p).unwrap();
+        f.write_all(b"a").unwrap();
+        f.sync_data().unwrap();
+        f.write_all(b"b").unwrap();
+        drop(f);
+        assert_eq!(s.ops(), 3);
+        assert!(!s.fired());
+    }
+}

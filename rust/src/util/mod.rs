@@ -3,6 +3,7 @@
 //! streaming statistics, and a light property-testing driver.
 
 pub mod rng;
+pub mod faultio;
 pub mod alias;
 pub mod heap;
 pub mod pool;

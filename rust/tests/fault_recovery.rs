@@ -1,0 +1,418 @@
+//! Crash-recovery torture harness: enumerate every injectable fault
+//! point of the durability stack and prove the invariant that matters —
+//! **after a crash at any byte, a restart recovers exactly the
+//! acknowledged prefix**, bit-identically, under the fail-fast policy.
+//!
+//! The harness leans on [`FaultStorage`]'s determinism: the workload's
+//! write/fsync schedule is identical up to the first injected fault, so
+//! one probe run yields the operation count `M`, and sweeping
+//! `trigger_op` over `0..M` for each [`FaultKind`] visits every fault
+//! point exactly once. Each iteration runs the scripted workload in a
+//! fresh directory, records which appends/inserts were acknowledged
+//! (`Ok` returns), simulates the crash by dropping everything, reopens
+//! on the *real* filesystem, and asserts the recovered state equals the
+//! acked prefix.
+//!
+//! Four layers are tortured:
+//! 1. the WAL set itself (append + rotate),
+//! 2. the full server insert path (WAL + rotation + compaction +
+//!    checkpoint rewrite),
+//! 3. bounded replay (compaction keeps restart work proportional to the
+//!    segment budget, not insert history),
+//! 4. the explicit recovery-policy switch (fail-fast vs
+//!    salvage-and-quarantine).
+//!
+//! `LARGEVIS_FAULT_SEED` varies the torn/short-write split points (CI
+//! sweeps several seeds); a per-kind coverage summary is written to
+//! `$LARGEVIS_FAULT_COVERAGE_DIR` (default `target/`) for the CI
+//! artifact upload.
+
+use largevis::config::ServeConfig;
+use largevis::coordinator::pipeline::CheckpointPaths;
+use largevis::data::formats::wal::{self, RecoveryPolicy, WalSet};
+use largevis::data::formats::{binary, checkpoint};
+use largevis::data::matrix::Matrix;
+use largevis::knn::KnnGraph;
+use largevis::serve::ServerState;
+use largevis::util::faultio::{FaultKind, FaultPlan, FaultStorage, RealStorage, Storage};
+use largevis::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const KINDS: &[(FaultKind, &str)] = &[
+    (FaultKind::ShortWrite, "short_write"),
+    (FaultKind::Enospc, "enospc"),
+    (FaultKind::FsyncFail, "fsync_fail"),
+    (FaultKind::TornWrite, "torn_write"),
+];
+
+/// Base RNG seed for fault split points; CI sweeps several values.
+fn fault_seed() -> u64 {
+    std::env::var("LARGEVIS_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42)
+}
+
+/// Per-trigger seed: decorrelate the torn/short split point from the
+/// trigger index so one sweep exercises many prefix lengths.
+fn trigger_seed(base: u64, trigger: u64) -> u64 {
+    (base ^ trigger).wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("largevis_fault_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: value {i} differs ({x} vs {y})");
+    }
+}
+
+/// Write the per-kind coverage summary consumed by the CI artifact.
+fn write_coverage(file: &str, stats: &[(&str, u64, u64, u64)]) {
+    let dir = std::env::var("LARGEVIS_FAULT_COVERAGE_DIR").unwrap_or_else(|_| "target".into());
+    if std::fs::create_dir_all(&dir).is_err() {
+        return;
+    }
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"seed\": {},\n", fault_seed()));
+    for (i, (name, runs, fired, recovered)) in stats.iter().enumerate() {
+        out.push_str(&format!(
+            "  \"{name}\": {{\"runs\": {runs}, \"fired\": {fired}, \"recovered\": {recovered}}}{}\n",
+            if i + 1 < stats.len() { "," } else { "" }
+        ));
+    }
+    out.push('}');
+    out.push('\n');
+    let _ = std::fs::write(Path::new(&dir).join(file), out);
+}
+
+// ---------------------------------------------------------------------
+// Part 1: WAL-set torture — append + rotate under every fault point.
+// ---------------------------------------------------------------------
+
+const WAL_D: usize = 3;
+
+/// Deterministic batch with awkward bit patterns (−0.0, subnormals).
+fn wal_batch(i: u32) -> Matrix {
+    let b = i as f32;
+    let vals = vec![b, -b * 0.5, b * 0.25 + 0.125, b + 0.5, f32::MIN_POSITIVE * (b + 1.0), -0.0];
+    Matrix::from_vec(vals, 2, WAL_D)
+}
+
+/// The scripted WAL workload: 8 appends with rotations after batches 2
+/// and 5. Errors are recorded (not acked) and the workload continues —
+/// transient faults must leave the log appendable. Returns the batches
+/// that were acknowledged (`append` returned `Ok`).
+fn run_wal_workload(storage: Arc<dyn Storage>, active: &Path) -> Vec<Matrix> {
+    let mut acked = Vec::new();
+    let Ok((mut set, _)) = WalSet::open(storage, active, WAL_D, RecoveryPolicy::FailFast) else {
+        return acked;
+    };
+    for i in 0..8u32 {
+        let b = wal_batch(i);
+        if set.append(&b).is_ok() {
+            acked.push(b);
+        }
+        if i == 2 || i == 5 {
+            let _ = set.rotate();
+        }
+    }
+    acked
+}
+
+#[test]
+fn wal_set_recovers_acked_prefix_under_every_fault() {
+    // Probe once to learn the clean workload's operation schedule.
+    let probe = FaultStorage::probe();
+    let dir = fresh_dir("wal_probe");
+    let acked = run_wal_workload(Arc::new(probe.clone()), &dir.join("inserts.wal"));
+    assert_eq!(acked.len(), 8, "probe run must ack everything");
+    let ops = probe.ops();
+    assert!(ops >= 20, "workload too small to be interesting ({ops} ops)");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let seed = fault_seed();
+    let mut stats: Vec<(&str, u64, u64, u64)> = Vec::new();
+    for &(kind, name) in KINDS {
+        let (mut runs, mut fired, mut recovered) = (0u64, 0u64, 0u64);
+        for trigger in 0..ops {
+            runs += 1;
+            let dir = fresh_dir("wal");
+            let active = dir.join("inserts.wal");
+            let plan =
+                FaultPlan { kind, trigger_op: trigger, seed: trigger_seed(seed, trigger) };
+            let storage = FaultStorage::new(plan);
+            let acked = run_wal_workload(Arc::new(storage.clone()), &active);
+            fired += storage.fired() as u64;
+
+            // "Restart": replay on the real filesystem, fail-fast. Any
+            // residue a fault left behind (torn tail, partial header,
+            // empty rotated segment) must read as normal crash state,
+            // never as corruption.
+            let rec = wal::read_wal_set(&active, WAL_D, RecoveryPolicy::FailFast)
+                .unwrap_or_else(|e| {
+                    panic!("{name} at op {trigger}: fail-fast replay refused: {e:#}")
+                });
+            assert_eq!(
+                rec.batches.len(),
+                acked.len(),
+                "{name} at op {trigger}: recovered {} batches, acked {}",
+                rec.batches.len(),
+                acked.len()
+            );
+            assert_eq!(rec.next_seq, acked.len() as u64, "{name} at op {trigger}: seq drift");
+            for (k, (a, b)) in acked.iter().zip(&rec.batches).enumerate() {
+                assert_bits_eq(
+                    a.as_slice(),
+                    b.as_slice(),
+                    &format!("{name} at op {trigger}, batch {k}"),
+                );
+            }
+
+            // The recovered set must also be appendable again.
+            let (mut set2, rec2) = WalSet::open(
+                Arc::new(RealStorage),
+                &active,
+                WAL_D,
+                RecoveryPolicy::FailFast,
+            )
+            .unwrap_or_else(|e| panic!("{name} at op {trigger}: reopen failed: {e:#}"));
+            assert_eq!(rec2.batches.len(), acked.len());
+            let seq = set2.append(&wal_batch(99)).unwrap();
+            assert_eq!(seq, acked.len() as u64, "{name} at op {trigger}: post-recovery seq");
+            recovered += 1;
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        stats.push((name, runs, fired, recovered));
+    }
+    write_coverage("fault_coverage_wal.json", &stats);
+}
+
+// ---------------------------------------------------------------------
+// Part 2: server-level torture — the full insert path (WAL append,
+// rotation, compaction into the checkpoints) under every fault point.
+// ---------------------------------------------------------------------
+
+const SRV_N: usize = 16;
+const SRV_D: usize = 4;
+
+/// Minimal valid checkpoint directory: `n` points, ring KNN, no labels.
+fn fabricate_checkpoints(dir: &Path) -> Vec<f32> {
+    let paths = CheckpointPaths::in_dir(dir);
+    let data: Vec<f32> = (0..SRV_N * SRV_D).map(|i| (i as f32) * 0.375 - 7.0).collect();
+    let layout: Vec<f32> = (0..SRV_N * 2).map(|i| (i as f32) * 0.5).collect();
+    binary::write_binary(&paths.data, &Matrix::from_vec(data.clone(), SRV_N, SRV_D)).unwrap();
+    binary::write_binary(&paths.layout, &Matrix::from_vec(layout, SRV_N, 2)).unwrap();
+    let mut knn = KnnGraph::empty(SRV_N, 1);
+    for (i, nb) in knn.neighbors.iter_mut().enumerate() {
+        *nb = vec![(((i + 1) % SRV_N) as u32, 1.0)];
+    }
+    checkpoint::write_knn(&paths.knn, &knn).unwrap();
+    std::fs::write(&paths.meta, "fault-torture").unwrap();
+    data
+}
+
+/// Tiny segments and an aggressive compaction threshold so the 5-insert
+/// workload crosses every WAL-maintenance code path.
+fn server_cfg(dir: &Path) -> ServeConfig {
+    ServeConfig {
+        checkpoints: dir.to_path_buf(),
+        insert_samples: 8,
+        refine_samples: 0,
+        wal_segment_bytes: 64,
+        wal_max_segments: 2,
+        ..Default::default()
+    }
+}
+
+/// Deterministic 2-row insert batch.
+fn insert_batch(i: u32) -> Matrix {
+    let b = i as f32 + 100.0;
+    let vals: Vec<f32> = (0..2 * SRV_D).map(|j| b + j as f32 * 0.25).collect();
+    Matrix::from_vec(vals, 2, SRV_D)
+}
+
+/// Scripted server workload: load under the given storage, insert 5
+/// batches, record the acked ones. Errors anywhere are the point.
+fn run_server_workload(dir: &Path, storage: Arc<dyn Storage>) -> Vec<Matrix> {
+    let mut acked = Vec::new();
+    let Ok(st) = ServerState::load_with(server_cfg(dir), storage) else {
+        return acked;
+    };
+    for i in 0..5u32 {
+        let b = insert_batch(i);
+        if st.insert(&b).is_ok() {
+            acked.push(b);
+        }
+    }
+    acked
+}
+
+#[test]
+fn server_recovers_acked_inserts_under_every_fault() {
+    // Probe the clean workload for its operation count.
+    let dir = fresh_dir("srv_probe");
+    fabricate_checkpoints(&dir);
+    let probe = FaultStorage::probe();
+    let acked = run_server_workload(&dir, Arc::new(probe.clone()));
+    assert_eq!(acked.len(), 5, "probe run must ack everything");
+    let ops = probe.ops();
+    assert!(ops >= 20, "server workload too small to be interesting ({ops} ops)");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let seed = fault_seed();
+    let mut stats: Vec<(&str, u64, u64, u64)> = Vec::new();
+    for &(kind, name) in KINDS {
+        let (mut runs, mut fired, mut recovered) = (0u64, 0u64, 0u64);
+        for trigger in 0..ops {
+            runs += 1;
+            let dir = fresh_dir("srv");
+            let base = fabricate_checkpoints(&dir);
+            let plan =
+                FaultPlan { kind, trigger_op: trigger, seed: trigger_seed(seed, trigger) };
+            let storage = FaultStorage::new(plan);
+            let acked = run_server_workload(&dir, Arc::new(storage.clone()));
+            fired += storage.fired() as u64;
+
+            // "Restart" on the real filesystem, fail-fast: whatever the
+            // fault interrupted (an append, a rotation, either side of
+            // a compaction commit) must recover to base + acked rows.
+            let st = ServerState::load(server_cfg(&dir)).unwrap_or_else(|e| {
+                panic!("{name} at op {trigger}: restart refused: {e:#}")
+            });
+            let snap = st.snapshot();
+            let acked_rows: usize = acked.iter().map(|b| b.n()).sum();
+            assert_eq!(
+                snap.data.n(),
+                SRV_N + acked_rows,
+                "{name} at op {trigger}: wrong recovered row count ({} acked batches)",
+                acked.len()
+            );
+            assert_eq!(snap.layout.n(), snap.data.n(), "{name} at op {trigger}: layout shape");
+            assert_eq!(snap.knn.n(), snap.data.n(), "{name} at op {trigger}: knn shape");
+            // Base rows survive compaction rewrites bit-identically.
+            assert_bits_eq(
+                &snap.data.as_slice()[..SRV_N * SRV_D],
+                &base,
+                &format!("{name} at op {trigger}: base data"),
+            );
+            // Acked rows are recovered bit-identically, in ack order.
+            let mut row = SRV_N;
+            for (k, b) in acked.iter().enumerate() {
+                for r in 0..b.n() {
+                    assert_bits_eq(
+                        snap.data.row(row),
+                        b.row(r),
+                        &format!("{name} at op {trigger}: acked batch {k} row {r}"),
+                    );
+                    row += 1;
+                }
+            }
+            // And the recovered server accepts new inserts.
+            let (ids, _) = st.insert(&insert_batch(77)).unwrap_or_else(|e| {
+                panic!("{name} at op {trigger}: post-recovery insert refused: {e:#}")
+            });
+            assert_eq!(ids[0], SRV_N + acked_rows);
+            recovered += 1;
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        stats.push((name, runs, fired, recovered));
+    }
+    write_coverage("fault_coverage_server.json", &stats);
+}
+
+// ---------------------------------------------------------------------
+// Part 3: bounded replay — compaction keeps the WAL (and therefore
+// restart work) proportional to the segment budget, not insert history.
+// ---------------------------------------------------------------------
+
+#[test]
+fn compaction_bounds_replay() {
+    let dir = fresh_dir("bounded");
+    fabricate_checkpoints(&dir);
+    let st = ServerState::load(server_cfg(&dir)).unwrap();
+    let total_batches = 12u32;
+    for i in 0..total_batches {
+        st.insert(&insert_batch(i)).unwrap();
+    }
+    let metrics = Json::parse(&st.metrics_json()).unwrap();
+    let compactions = metrics.get("serve.compactions").and_then(Json::as_usize).unwrap();
+    assert!(compactions >= 1, "tiny segments + 12 inserts must compact at least once");
+    drop(st);
+
+    // What a restart must replay is far less than what was inserted.
+    let paths = CheckpointPaths::in_dir(&dir);
+    let rec = wal::read_wal_set(&paths.wal, SRV_D, RecoveryPolicy::FailFast).unwrap();
+    assert!(
+        rec.batches.len() < total_batches as usize,
+        "WAL still holds all {} batches — compaction never absorbed anything",
+        rec.batches.len()
+    );
+
+    // And the restart still recovers every row.
+    let st2 = ServerState::load(server_cfg(&dir)).unwrap();
+    let snap = st2.snapshot();
+    assert_eq!(snap.data.n(), SRV_N + 2 * total_batches as usize);
+    let metrics = Json::parse(&st2.metrics_json()).unwrap();
+    let replayed = metrics.get("serve.replayed_batches").and_then(Json::as_usize).unwrap();
+    assert!(
+        replayed < total_batches as usize,
+        "restart replayed {replayed} batches — replay is unbounded"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Part 4: the recovery policy is an explicit switch — fail-fast refuses
+// to start on corruption; truncate salvages, quarantines, and counts.
+// ---------------------------------------------------------------------
+
+#[test]
+fn recovery_policy_failfast_vs_truncate() {
+    let dir = fresh_dir("policy");
+    fabricate_checkpoints(&dir);
+    // High compaction threshold: rotations happen (tiny segments) but
+    // sealed segments accumulate instead of being absorbed.
+    let mut cfg = server_cfg(&dir);
+    cfg.wal_max_segments = 100;
+    {
+        let st = ServerState::load(cfg.clone()).unwrap();
+        for i in 0..3u32 {
+            st.insert(&insert_batch(i)).unwrap();
+        }
+    }
+    let paths = CheckpointPaths::in_dir(&dir);
+    // Each insert rotated right after its append, so sealed segment 1
+    // holds exactly batch 1: flip one payload byte mid-record.
+    let seg1 = wal::segment_path(&paths.wal, 1);
+    let mut bytes = std::fs::read(&seg1).unwrap();
+    let off = wal::header_bytes(wal::VERSION) as usize + 8 + 4;
+    bytes[off] ^= 0x40;
+    std::fs::write(&seg1, &bytes).unwrap();
+
+    // Fail-fast (the default): refuse to serve rather than silently
+    // dropping acknowledged data.
+    let err = format!("{:#}", ServerState::load(cfg.clone()).unwrap_err());
+    assert!(err.contains("does not end cleanly"), "{err}");
+
+    // Truncate: salvage the clean prefix (batch 0), quarantine the
+    // rest, count the damage, and keep serving.
+    cfg.recovery_policy = RecoveryPolicy::Truncate;
+    let st = ServerState::load(cfg).unwrap();
+    let snap = st.snapshot();
+    assert_eq!(snap.data.n(), SRV_N + 2, "only the pre-corruption batch survives");
+    assert!(!seg1.exists(), "corrupt segment must be quarantined, not left in place");
+    let metrics = Json::parse(&st.metrics_json()).unwrap();
+    let corrupt = metrics.get("serve.wal_corrupt_segments").and_then(Json::as_usize).unwrap();
+    assert!(corrupt >= 1, "quarantined segments must be counted");
+    // The salvaged server keeps accepting inserts.
+    st.insert(&insert_batch(9)).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -72,6 +72,11 @@ fn server_end_to_end() {
     let data_before = snap0.data.clone();
     let server_thread = std::thread::spawn(move || server.run());
 
+    // --- /readyz --- (state came from `load`, so replay is done)
+    let (status, ready) = request_json(addr, "GET", "/readyz", None);
+    assert_eq!(status, 200);
+    assert_eq!(ready.get("ready"), Some(&Json::Bool(true)));
+
     // --- /healthz ---
     let (status, health) = request_json(addr, "GET", "/healthz", None);
     assert_eq!(status, 200);

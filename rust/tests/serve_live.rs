@@ -16,7 +16,7 @@ use std::sync::Mutex;
 
 #[path = "util/mod.rs"]
 mod util;
-use util::{as_f64, json_row, request, request_json};
+use util::{as_f64, header_value, json_row, request, request_full, request_json};
 
 fn test_dir() -> PathBuf {
     std::env::temp_dir().join(format!("largevis_serve_live_{}", std::process::id()))
@@ -304,4 +304,197 @@ fn concurrent_inserts_epoch_consistency_and_wal_recovery() {
     let one = largevis::data::matrix::Matrix::from_vec(vec![0.5; d], 1, d);
     let err = format!("{:#}", ro.insert(&one).unwrap_err());
     assert!(err.contains("read-only"), "{err}");
+}
+
+/// Minimal fabricated checkpoints (no pipeline run): `n` points, ring
+/// KNN — enough for the overload/readiness test, which exercises the
+/// serving layer, not layout quality.
+fn fabricate_checkpoints(dir: &Path, n: usize, d: usize) {
+    use largevis::data::formats::{binary, checkpoint};
+    use largevis::data::matrix::Matrix;
+    use largevis::knn::KnnGraph;
+    std::fs::create_dir_all(dir).unwrap();
+    let paths = CheckpointPaths::in_dir(dir);
+    let data: Vec<f32> = (0..n * d).map(|i| i as f32 * 0.25).collect();
+    let layout: Vec<f32> = (0..n * 2).map(|i| i as f32 * 0.5).collect();
+    binary::write_binary(&paths.data, &Matrix::from_vec(data, n, d)).unwrap();
+    binary::write_binary(&paths.layout, &Matrix::from_vec(layout, n, 2)).unwrap();
+    let mut knn = KnnGraph::empty(n, 1);
+    for (i, nb) in knn.neighbors.iter_mut().enumerate() {
+        *nb = vec![(((i + 1) % n) as u32, 1.0)];
+    }
+    checkpoint::write_knn(&paths.knn, &knn).unwrap();
+    std::fs::write(&paths.meta, "overload-test").unwrap();
+}
+
+/// Overload and failure containment, end to end: `/readyz` answers 503
+/// until WAL replay finishes, connections beyond `max_inflight` are
+/// shed with `503` + `Retry-After`, a handler panic costs one request
+/// a `500` (never the server), every response under concurrent
+/// overload is a valid 200 or 503, and every *acknowledged* insert
+/// survives a restart.
+#[test]
+fn overload_shedding_readiness_and_panic_containment() {
+    let dir = std::env::temp_dir()
+        .join(format!("largevis_serve_overload_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let (n_base, d) = (24usize, 4usize);
+    fabricate_checkpoints(&dir, n_base, d);
+
+    let cfg = ServeConfig {
+        checkpoints: dir.clone(),
+        addr: "127.0.0.1:0".to_string(),
+        threads: 1,
+        max_inflight: 2,
+        insert_samples: 20,
+        refine_samples: 0,
+        idle_timeout_ms: 2000,
+        debug_panic: true,
+        ..Default::default()
+    };
+
+    // Two-phase startup: the server listens (and answers reads) before
+    // WAL replay has run; readiness and inserts gate on the replay.
+    let state = ServerState::open(cfg.clone()).expect("open server state");
+    let server = Server::bind(state).expect("bind");
+    let addr = server.local_addr().unwrap();
+    let shared = server.state();
+    let handle = server.handle();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // --- readiness: 503 + Retry-After before recover(), 200 after ---
+    let (status, headers, _) = request_full(addr, "GET", "/readyz", None);
+    assert_eq!(status, 503, "readyz must fail before WAL replay");
+    assert_eq!(header_value(&headers, "retry-after"), Some("1"));
+    let probe: Vec<f32> = (0..d).map(|i| 500.0 + i as f32).collect();
+    let insert_body = format!("{{\"point\":{}}}", json_row(&probe));
+    let (status, headers, _) = request_full(addr, "POST", "/insert", Some(&insert_body));
+    assert_eq!(status, 503, "inserts must be refused before WAL replay");
+    assert_eq!(header_value(&headers, "retry-after"), Some("1"));
+    let (status, _) = request_json(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200, "healthz (liveness) must answer while not ready");
+    shared.recover().expect("recover");
+    let (status, _, _) = request_full(addr, "GET", "/readyz", None);
+    assert_eq!(status, 200, "readyz must pass after WAL replay");
+
+    // --- deterministic shed: fill max_inflight, then one more ---
+    {
+        // The previous requests' connections release their admission
+        // slots a moment after the response is read; start clean.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while shared.inflight() > 0 {
+            assert!(std::time::Instant::now() < deadline, "stale admissions never drained");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let mut c1 = util::KeepAlive::connect(addr);
+        assert_eq!(c1.request("GET", "/healthz", ""), 200);
+        // A second connection is admitted (queued behind the single
+        // worker, which is parked on c1's keep-alive read).
+        let c2 = std::net::TcpStream::connect(addr).expect("connect c2");
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while shared.inflight() < 2 {
+            assert!(std::time::Instant::now() < deadline, "admission never reached 2");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let (status, headers, body) = request_full(addr, "GET", "/healthz", None);
+        assert_eq!(status, 503, "connection beyond max_inflight must be shed");
+        assert_eq!(header_value(&headers, "retry-after"), Some("1"));
+        assert!(
+            String::from_utf8(body).unwrap().contains("overloaded"),
+            "shed response names the cause"
+        );
+        drop(c2);
+        drop(c1);
+    }
+    // Let the worker drain the two closed connections.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while shared.inflight() > 0 {
+        assert!(std::time::Instant::now() < deadline, "admission never drained");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+
+    // --- panic containment: /__panic costs that request a 500 ---
+    let (status, _, body) = request_full(addr, "GET", "/__panic", None);
+    assert_eq!(status, 500, "handler panic must surface as 500");
+    assert!(String::from_utf8(body).unwrap().contains("panic"));
+    let (status, _) = request_json(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200, "server must survive a handler panic");
+
+    // --- overload fuzz: concurrent writers, every response 200/503,
+    //     every acked insert recorded ---
+    let writer_threads = 8usize;
+    let acked: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for tid in 0..writer_threads {
+            let acked = &acked;
+            s.spawn(move || {
+                let point: Vec<f32> =
+                    (0..d).map(|i| 1000.0 * (tid + 1) as f32 + i as f32).collect();
+                let body = format!("{{\"point\":{}}}", json_row(&point));
+                for _attempt in 0..400 {
+                    let (status, headers, _) =
+                        request_full(addr, "POST", "/insert", Some(&body));
+                    match status {
+                        200 => {
+                            acked.lock().unwrap().push(point.clone());
+                            return;
+                        }
+                        503 => {
+                            // Shed responses must carry backoff advice.
+                            assert!(
+                                header_value(&headers, "retry-after").is_some(),
+                                "503 without Retry-After"
+                            );
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                        other => panic!("unexpected status {other} under overload"),
+                    }
+                }
+                panic!("writer {tid} never got through (all 503)");
+            });
+        }
+    });
+    let acked = acked.into_inner().unwrap();
+    assert_eq!(acked.len(), writer_threads, "every writer retried to success");
+
+    // --- counters: shedding and the panic were observed ---
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while shared.inflight() > 0 {
+        assert!(std::time::Instant::now() < deadline, "fuzz admissions never drained");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let (_, metrics) = request_json(addr, "GET", "/metrics", None);
+    assert!(as_f64(metrics.get("serve.shed").unwrap()) >= 1.0, "shed never counted");
+    assert!(as_f64(metrics.get("serve.panics").unwrap()) >= 1.0, "panic never counted");
+    assert!(metrics.get("serve.write_timeouts").is_some(), "write-timeout counter missing");
+    assert!(metrics.get("serve.sockopt_errors").is_some(), "sockopt counter missing");
+
+    // --- graceful shutdown + restart: acked inserts, exactly once ---
+    handle.shutdown();
+    server_thread.join().expect("server thread").expect("server run");
+    drop(shared);
+
+    let restarted = ServerState::load(cfg).expect("restart with WAL replay");
+    let snap = restarted.snapshot();
+    assert_eq!(
+        snap.data.n(),
+        n_base + acked.len(),
+        "restart must recover exactly the acknowledged inserts"
+    );
+    for point in &acked {
+        let hits = (n_base..snap.data.n())
+            .filter(|&i| {
+                snap.data
+                    .row(i)
+                    .iter()
+                    .zip(point)
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+            })
+            .count();
+        assert_eq!(hits, 1, "acked insert {point:?} recovered {hits} times, want exactly 1");
+    }
+    let (ready, epoch) = (restarted.is_ready(), snap.epoch);
+    assert!(ready, "load() implies ready");
+    assert_eq!(epoch, acked.len() as u64, "one replayed epoch per acked insert batch");
+    std::fs::remove_dir_all(&dir).ok();
 }

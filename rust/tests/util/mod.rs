@@ -34,6 +34,54 @@ pub fn request(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -
     (status, raw[header_end + 4..].to_vec())
 }
 
+/// One request on its own connection, returning the response headers
+/// too: `(status, lowercase header (name, value) pairs, body)`. The
+/// overload tests assert on `Retry-After` with this.
+pub fn request_full(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let header_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("header terminator");
+    let head = std::str::from_utf8(&raw[..header_end]).unwrap();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status code");
+    let headers: Vec<(String, String)> = head
+        .lines()
+        .skip(1)
+        .filter_map(|line| {
+            line.split_once(':')
+                .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        })
+        .collect();
+    (status, headers, raw[header_end + 4..].to_vec())
+}
+
+/// Value of a (lowercase) header from a [`request_full`] response.
+pub fn header_value<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v.as_str())
+}
+
 /// [`request`] with the body parsed as JSON.
 pub fn request_json(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
     let (status, body) = request(addr, method, path, body);
