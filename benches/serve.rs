@@ -6,7 +6,7 @@
 //! CI runs the smoke variant via `LARGEVIS_BENCH_SCALE`.
 
 use largevis::bench::{bench_scale, Table};
-use largevis::config::{PipelineConfig, ServeConfig};
+use largevis::config::{PipelineConfig, SearchMode, ServeConfig};
 use largevis::coordinator::CheckpointPaths;
 use largevis::serve::{Server, ServerState};
 use largevis::util::timer::Timer;
@@ -37,6 +37,69 @@ fn main() -> anyhow::Result<()> {
     largevis::coordinator::run_pipeline(&cfg)?;
     let ckpt = CheckpointPaths::new(&out_dir);
 
+    let mut table = Table::new("serve throughput", &["workload", "metric", "value"]);
+    let mut json_rows: Vec<String> = Vec::new();
+
+    // --- exact vs graph query path: in-process latency + recall ---
+    // Both states load the same checkpoints (no WAL yet, so the loads
+    // are cheap and identical); `query_knn` is the exact dispatch the
+    // `/knn` handler uses, minus HTTP framing, so the ratio isolates
+    // the search algorithms.
+    {
+        let mk = |search: SearchMode| ServeConfig {
+            checkpoints: ckpt.dir.clone(),
+            addr: "127.0.0.1:0".to_string(),
+            search,
+            ..Default::default()
+        };
+        let q_n = ((200.0 * bench_scale()) as usize).max(40);
+
+        let exact = ServerState::load(mk(SearchMode::Exact))?;
+        let qsnap = exact.snapshot();
+        let qn = qsnap.data.n();
+        let k = 10.min(qn);
+        let t = Timer::start("knn-exact-inproc");
+        let oracle: Vec<Vec<(u32, f32)>> =
+            (0..q_n).map(|i| exact.query_knn(&qsnap, qsnap.data.row(i % qn), k)).collect();
+        let secs = t.report();
+        let qps = q_n as f64 / secs.max(1e-9);
+        table.row(&["knn/exact in-proc".into(), "req/s".into(), format!("{qps:.0}")]);
+        json_rows.push(format!(
+            "{{\"workload\":\"knn_exact_inproc\",\"requests\":{q_n},\"secs\":{secs:.4},\"per_sec\":{qps:.1}}}"
+        ));
+        drop(qsnap);
+        drop(exact);
+
+        let graph = ServerState::load(mk(SearchMode::Graph))?;
+        let qsnap = graph.snapshot();
+        let t = Timer::start("knn-graph-inproc");
+        let got: Vec<Vec<(u32, f32)>> =
+            (0..q_n).map(|i| graph.query_knn(&qsnap, qsnap.data.row(i % qn), k)).collect();
+        let secs = t.report();
+        let qps = q_n as f64 / secs.max(1e-9);
+        let mut hit = 0usize;
+        for (o, g) in oracle.iter().zip(&got) {
+            let truth: std::collections::HashSet<u32> = o.iter().map(|&(id, _)| id).collect();
+            hit += g.iter().filter(|&&(id, _)| truth.contains(&id)).count();
+        }
+        let recall = hit as f64 / (q_n * k) as f64;
+        let scored = {
+            let m = graph.metrics.lock().unwrap_or_else(|e| e.into_inner());
+            m.get("serve.search_scored").unwrap_or(0.0)
+        } / q_n as f64;
+        table.row(&["knn/graph in-proc".into(), "req/s".into(), format!("{qps:.0}")]);
+        table.row(&["knn/graph".into(), format!("recall@{k}"), format!("{recall:.4}")]);
+        table.row(&["knn/graph".into(), "scored/query".into(), format!("{scored:.0}")]);
+        json_rows.push(format!(
+            "{{\"workload\":\"knn_graph_inproc\",\"requests\":{q_n},\"secs\":{secs:.4},\"per_sec\":{qps:.1},\"recall_at_{k}\":{recall:.4},\"mean_scored\":{scored:.1}}}"
+        ));
+        eprintln!(
+            "[serve-bench] graph vs exact: recall@{k}={recall:.4}, scored/query={scored:.0}/{qn}"
+        );
+        drop(qsnap);
+        drop(graph);
+    }
+
     let serve_cfg = ServeConfig {
         checkpoints: ckpt.dir.clone(),
         addr: "127.0.0.1:0".to_string(),
@@ -60,10 +123,10 @@ fn main() -> anyhow::Result<()> {
     eprintln!("[serve-bench] n={n} d={d} queries={queries} inserts={inserts} addr={addr}");
 
     let knn_body = format!("{{\"point\":{},\"k\":5}}", json_row(snap.data.row(0)));
-    let mut table = Table::new("serve throughput", &["workload", "metric", "value"]);
-    let mut json_rows: Vec<String> = Vec::new();
 
-    // Query throughput, one connection per request.
+    // Query throughput, one connection per request (graph search mode,
+    // the serving default — the in-proc rows above carry the exact
+    // baseline).
     {
         let t = Timer::start("knn-close");
         for _ in 0..queries {

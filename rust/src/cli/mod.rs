@@ -26,7 +26,7 @@ const VALUE_KEYS: &[&str] = &[
     "addr", "embed-samples", "embed-k", "grid", "tile-max-points", "max-body-bytes",
     "insert-samples", "refine-samples", "refine-interval-ms", "keep-alive-max",
     "idle-timeout-ms", "max-inflight", "write-timeout-ms", "wal-segment-bytes",
-    "wal-max-segments", "recovery-policy",
+    "wal-max-segments", "recovery-policy", "search", "beam-width", "search-seeds",
 ];
 
 /// Parse a raw argument vector (without argv[0]).
@@ -156,6 +156,12 @@ SERVE (largevis serve):
                              sealed segments (default 4)
     --recovery-policy <p>    WAL corruption handling: fail_fast (default) or
                              truncate (salvage clean prefix, quarantine rest)
+    --search <mode>       nearest-neighbor query path for /knn, /embed and
+                          inserts: graph (default, sub-linear beam walk with
+                          automatic exact fallback) or exact (full scan)
+    --beam-width <n>      graph-search candidate pool width (default 64)
+    --search-seeds <n>    graph-search entry points kept per snapshot
+                          (coarse-hierarchy centroids; default 32)
     Endpoints: POST /embed, POST /knn, POST /insert, POST /insert_batch,
                GET /viewport, GET /healthz, GET /readyz, GET /metrics
     Live inserts are WAL-logged to <checkpoints>/inserts.wal and replayed

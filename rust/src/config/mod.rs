@@ -6,4 +6,4 @@ pub mod ini;
 pub mod pipeline;
 
 pub use ini::Ini;
-pub use pipeline::{LayoutMode, PipelineConfig, ServeConfig, Stage};
+pub use pipeline::{LayoutMode, PipelineConfig, SearchMode, ServeConfig, Stage};

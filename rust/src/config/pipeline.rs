@@ -137,6 +137,41 @@ impl Default for PipelineConfig {
 
 /// Configuration for the live layout query server (`largevis serve`).
 ///
+/// How the server answers nearest-neighbor lookups (`/knn`, and the
+/// base-neighbor search behind `/embed` and `/insert`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Full scan over every base point (`kernels::nearest_k`) — exact,
+    /// O(n) per query.
+    Exact,
+    /// Greedy best-first beam search over the checkpointed KNN graph
+    /// (`knn::search`) — sub-linear, with automatic exact fallback
+    /// when the walk cannot produce `k` results within budget.
+    #[default]
+    Graph,
+}
+
+impl std::str::FromStr for SearchMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "exact" => Ok(SearchMode::Exact),
+            "graph" => Ok(SearchMode::Graph),
+            other => Err(format!("unknown search mode {other:?} (expected exact|graph)")),
+        }
+    }
+}
+
+impl std::fmt::Display for SearchMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SearchMode::Exact => write!(f, "exact"),
+            SearchMode::Graph => write!(f, "graph"),
+        }
+    }
+}
+
 /// The server loads the checkpoint artifacts (`data.lvec`, `knn.ckpt`,
 /// `graph.ckpt`, `layout.lvec`, `labels.lbl`) once at startup, replays
 /// the live-insert WAL (`inserts.wal`), and then answers `/embed`,
@@ -197,6 +232,15 @@ pub struct ServeConfig {
     /// (default) or truncate to the clean prefix, quarantine the rest,
     /// and count it in `/metrics`.
     pub recovery_policy: RecoveryPolicy,
+    /// Nearest-neighbor query strategy: `graph` (default, beam search
+    /// over the KNN graph) or `exact` (full scan).
+    pub search: SearchMode,
+    /// Beam width (`ef`) for graph search — candidate pool size; the
+    /// effective width is `max(beam_width, k)` per query.
+    pub beam_width: usize,
+    /// Entry points kept for graph search (coarse-level centroids, or
+    /// grid/stride fallbacks when the hierarchy is degenerate).
+    pub search_seeds: usize,
     /// Test hook: expose `GET /__panic` (panics in the handler) so the
     /// per-connection panic containment can be exercised. Never set
     /// from INI/CLI.
@@ -225,6 +269,9 @@ impl Default for ServeConfig {
             wal_segment_bytes: 64 << 20,
             wal_max_segments: 4,
             recovery_policy: RecoveryPolicy::FailFast,
+            search: SearchMode::Graph,
+            beam_width: 64,
+            search_seeds: 32,
             debug_panic: false,
         }
     }
@@ -262,6 +309,9 @@ impl ServeConfig {
             ini.get_or("serve", "wal_max_segments", cfg.wal_max_segments)?;
         cfg.recovery_policy =
             ini.get_or("serve", "recovery_policy", cfg.recovery_policy)?;
+        cfg.search = ini.get_or("serve", "search", cfg.search)?;
+        cfg.beam_width = ini.get_or("serve", "beam_width", cfg.beam_width)?;
+        cfg.search_seeds = ini.get_or("serve", "search_seeds", cfg.search_seeds)?;
         Ok(cfg)
     }
 }
@@ -428,9 +478,12 @@ mod tests {
         assert_eq!(c.wal_segment_bytes, 64 << 20);
         assert_eq!(c.wal_max_segments, 4);
         assert_eq!(c.recovery_policy, RecoveryPolicy::FailFast);
+        assert_eq!(c.search, SearchMode::Graph);
+        assert_eq!(c.beam_width, 64);
+        assert_eq!(c.search_seeds, 32);
         assert!(!c.debug_panic);
         let ini = Ini::parse(
-            "[serve]\ncheckpoints = target/mnist/checkpoints\naddr = 0.0.0.0:9000\nthreads = 8\nembed_samples = 250\nembed_k = 20\ngrid = 128\ntile_max_points = 5000\nread_only = yes\ninsert_samples = 300\nrefine_samples = 100\nrefine_interval_ms = 500\nkeep_alive_max = 64\nidle_timeout_ms = 2500\nmax_inflight = 32\nwrite_timeout_ms = 1500\nwal_segment_bytes = 1048576\nwal_max_segments = 2\nrecovery_policy = truncate",
+            "[serve]\ncheckpoints = target/mnist/checkpoints\naddr = 0.0.0.0:9000\nthreads = 8\nembed_samples = 250\nembed_k = 20\ngrid = 128\ntile_max_points = 5000\nread_only = yes\ninsert_samples = 300\nrefine_samples = 100\nrefine_interval_ms = 500\nkeep_alive_max = 64\nidle_timeout_ms = 2500\nmax_inflight = 32\nwrite_timeout_ms = 1500\nwal_segment_bytes = 1048576\nwal_max_segments = 2\nrecovery_policy = truncate\nsearch = exact\nbeam_width = 96\nsearch_seeds = 48",
         )
         .unwrap();
         let c = ServeConfig::from_ini(&ini).unwrap();
@@ -455,8 +508,15 @@ mod tests {
         assert_eq!(c.wal_segment_bytes, 1_048_576);
         assert_eq!(c.wal_max_segments, 2);
         assert_eq!(c.recovery_policy, RecoveryPolicy::Truncate);
+        assert_eq!(c.search, SearchMode::Exact);
+        assert_eq!(c.beam_width, 96);
+        assert_eq!(c.search_seeds, 48);
         let bad = Ini::parse("[serve]\nrecovery_policy = maybe").unwrap();
         assert!(ServeConfig::from_ini(&bad).is_err());
+        let bad = Ini::parse("[serve]\nsearch = maybe").unwrap();
+        assert!(ServeConfig::from_ini(&bad).is_err());
+        assert_eq!(SearchMode::Graph.to_string(), "graph");
+        assert_eq!("EXACT".parse::<SearchMode>().unwrap(), SearchMode::Exact);
     }
 
     #[test]

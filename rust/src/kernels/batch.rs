@@ -111,7 +111,11 @@ pub fn nearest_k(
     heap.reset(k.max(1));
     sqdist_to_all(query, data, dists);
     for (j, &d) in dists.iter().enumerate() {
-        if d < heap.threshold() {
+        // `<=` so an equal-distance candidate reaches the heap, whose
+        // (dist, id) order then decides lowest-index-wins; with `<` a
+        // tie arriving after the heap fills would be dropped here and
+        // the result would depend on arrival order.
+        if d <= heap.threshold() {
             heap.push(j as u32, d, false);
         }
     }
@@ -209,6 +213,36 @@ mod tests {
             want.truncate(k.min(90));
             assert_eq!(got, want, "k={k}");
         }
+    }
+
+    #[test]
+    fn nearest_k_duplicate_points_pick_lowest_ids() {
+        // Regression for unpinned tie-breaking: exact duplicate rows
+        // produce exactly equal distances, and the winner used to
+        // depend on heap sift history (which of the tied entries sat at
+        // the root when a closer candidate evicted). Rows 0..3 are the
+        // same point, row 3 is closer to the query: k=2 must return
+        // {3, 0} — never {3, 1} or {3, 2}.
+        let d = 4;
+        let dup = [1.0f32, 2.0, 3.0, 4.0];
+        let near = [0.0f32, 0.0, 0.0, 0.0];
+        let mut rows = Vec::new();
+        for _ in 0..3 {
+            rows.extend_from_slice(&dup);
+        }
+        rows.extend_from_slice(&near);
+        let m = Matrix::from_vec(rows, 4, d);
+        let q = vec![0.0f32; d];
+        let mut dists = Vec::new();
+        let mut heap = BoundedMaxHeap::new(1);
+        let got = nearest_k(&q, &m, 2, &mut dists, &mut heap);
+        let ids: Vec<u32> = got.iter().map(|&(id, _)| id).collect();
+        assert_eq!(ids, vec![3, 0]);
+        // All-duplicates case: k of them, lowest indices, in id order.
+        let got = nearest_k(&dup, &m, 3, &mut dists, &mut heap);
+        let ids: Vec<u32> = got.iter().map(|&(id, _)| id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(got[0].1, 0.0);
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub mod kdtree;
 pub mod lsh;
 pub mod nndescent;
 pub mod explore;
+pub mod search;
 
 use crate::data::matrix::Matrix;
 use crate::util::heap::BoundedMaxHeap;

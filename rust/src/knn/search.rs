@@ -1,0 +1,635 @@
+//! Graph-navigating approximate nearest-neighbor *query* search.
+//!
+//! The offline builders in this module's siblings ([`crate::knn::explore`],
+//! [`crate::knn::nndescent`]) exploit the paper's §3 observation that a
+//! neighbor of a neighbor is likely a neighbor. The same observation
+//! makes the finished KNN graph a navigable search structure at query
+//! time: a greedy best-first walk that repeatedly expands the closest
+//! unexpanded candidate converges on the query's true neighborhood
+//! after touching a tiny, roughly N-independent fraction of the points
+//! — this is how the live server answers `/knn`, `/embed`, and insert
+//! base-neighbor lookups in sub-linear time instead of the O(N·d)
+//! exact scan.
+//!
+//! Three pieces:
+//!
+//! - [`SearchIndex`]: small per-snapshot metadata built once at
+//!   load/publish — entry-point seeds (coarse-level centroids from
+//!   [`crate::graph::coarsen::build_hierarchy`], falling back to
+//!   grid-cell representatives and then a deterministic stride) plus
+//!   the per-level coarsening maps.
+//! - [`search_nearest`]: the beam search itself — an epoch-stamped
+//!   [`VisitedSet`] for dedup, a [`BoundedMaxHeap`] result pool of
+//!   width `beam`, and distances through the batched
+//!   [`crate::kernels::sqdist_batch`] kernel.
+//! - [`QueryStats`]: per-query visited/scored counters and the
+//!   fallback flag, surfaced as `serve.search_*` metrics and asserted
+//!   sub-linear by the recall harness.
+//!
+//! Every behavior here is testable against ground truth because the
+//! exact scan ([`crate::kernels::nearest_k`]) stays available as a
+//! bit-true oracle: when the walk exhausts its scoring budget or
+//! cannot reach `k` candidates (disconnected component, empty graph),
+//! it *falls back to that oracle* rather than returning a silently
+//! truncated result.
+
+use crate::data::matrix::Matrix;
+use crate::graph::coarsen::{build_hierarchy, CoarsenConfig};
+use crate::graph::CsrGraph;
+use crate::kernels;
+use crate::knn::KnnGraph;
+use crate::render::grid::GridIndex;
+use crate::util::heap::BoundedMaxHeap;
+use crate::util::visited::VisitedSet;
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// How the entry-point seeds of a [`SearchIndex`] were obtained.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedSource {
+    /// Coarse-level centroids out of the HEM coarsening hierarchy.
+    Centroid,
+    /// Grid-cell representatives from the layout's spatial index
+    /// (hierarchy unavailable, e.g. an edgeless graph).
+    Grid,
+    /// Deterministic stride over point ids (no hierarchy, no grid).
+    Random,
+}
+
+/// Per-snapshot search metadata: entry seeds and coarsening maps.
+///
+/// Built once at checkpoint load / epoch publish and shared read-only
+/// (behind an `Arc`) by every server worker. Small by construction:
+/// `seeds` is capped at the configured seed count and `maps` holds one
+/// `u32` per point per level (~2·N total across the whole hierarchy).
+#[derive(Clone, Debug)]
+pub struct SearchIndex {
+    /// Entry-point ids the beam search starts from, sorted ascending.
+    seeds: Vec<u32>,
+    /// Per-level fine→coarse vertex maps, finest first — `maps[0]`
+    /// maps original points to level-1 clusters. Retained so future
+    /// multi-level descent (and diagnostics) need not re-coarsen.
+    maps: Vec<Vec<u32>>,
+    /// Provenance of `seeds`.
+    source: SeedSource,
+}
+
+impl SearchIndex {
+    /// Build search metadata for `knn` over `data`.
+    ///
+    /// The preferred path contracts the KNN graph with heavy-edge
+    /// matching down to ~`n_seeds` coarse clusters and picks, per
+    /// cluster, the member nearest the cluster's data-space mean — a
+    /// centroid-like, well-spread entry set (the landmark idea of
+    /// ShapeVis). When no hierarchy can be built (edgeless graph) the
+    /// seeds come from `grid` cell representatives, and failing that
+    /// from a deterministic id stride. Always yields at least one seed
+    /// for a non-empty dataset.
+    pub fn build(data: &Matrix, knn: &KnnGraph, grid: Option<&GridIndex>, n_seeds: usize) -> Self {
+        let n = knn.n();
+        let n_seeds = n_seeds.max(1);
+        assert_eq!(n, data.n(), "search index: knn graph and data disagree on n");
+        if n == 0 {
+            return SearchIndex { seeds: Vec::new(), maps: Vec::new(), source: SeedSource::Random };
+        }
+        if n <= n_seeds {
+            // Seeding every point makes the first beam round an exact
+            // scan of the whole (tiny) dataset — trivially correct.
+            return SearchIndex {
+                seeds: (0..n as u32).collect(),
+                maps: Vec::new(),
+                source: SeedSource::Centroid,
+            };
+        }
+
+        // Undirected, deduplicated edge list from the (directed) KNN
+        // lists. `CsrGraph::from_undirected` does not merge duplicate
+        // pairs, so (i→j, j→i) mutual neighbors must collapse to one
+        // edge here. Weight 1/(1+d²) so HEM matches close pairs first.
+        let mut pairs: Vec<(u32, u32, f64)> = Vec::new();
+        for (i, nb) in knn.neighbors.iter().enumerate() {
+            let i = i as u32;
+            for &(j, d) in nb {
+                if i != j {
+                    pairs.push((i.min(j), i.max(j), 1.0 / (1.0 + d as f64)));
+                }
+            }
+        }
+        pairs.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        pairs.dedup_by_key(|p| (p.0, p.1));
+
+        if !pairs.is_empty() {
+            let g = CsrGraph::from_undirected(n, &pairs);
+            let cfg = CoarsenConfig { min_coarse_size: n_seeds, ..CoarsenConfig::default() };
+            let hierarchy = build_hierarchy(&g, &cfg);
+            if !hierarchy.is_empty() {
+                let maps: Vec<Vec<u32>> = hierarchy.iter().map(|c| c.map.clone()).collect();
+                let seeds = centroid_seeds(data, &maps, hierarchy.last().unwrap().graph.n());
+                if !seeds.is_empty() {
+                    return SearchIndex {
+                        seeds: cap_seeds(seeds, n_seeds),
+                        maps,
+                        source: SeedSource::Centroid,
+                    };
+                }
+            }
+        }
+
+        if let Some(grid) = grid {
+            let mut seeds = grid.cell_representatives(n_seeds);
+            seeds.retain(|&id| (id as usize) < n);
+            if !seeds.is_empty() {
+                seeds.sort_unstable();
+                return SearchIndex { seeds, maps: Vec::new(), source: SeedSource::Grid };
+            }
+        }
+
+        // Deterministic stride: spread over the id range without any
+        // auxiliary structure.
+        let stride = n.div_ceil(n_seeds).max(1);
+        let seeds: Vec<u32> = (0..n as u32).step_by(stride).collect();
+        SearchIndex { seeds, maps: Vec::new(), source: SeedSource::Random }
+    }
+
+    /// Entry-point ids (ascending, distinct).
+    pub fn seeds(&self) -> &[u32] {
+        &self.seeds
+    }
+
+    /// Per-level fine→coarse maps, finest first.
+    pub fn maps(&self) -> &[Vec<u32>] {
+        &self.maps
+    }
+
+    /// Number of coarsening levels behind the seeds (0 for fallbacks).
+    pub fn levels(&self) -> usize {
+        self.maps.len()
+    }
+
+    /// How the seeds were obtained.
+    pub fn source(&self) -> SeedSource {
+        self.source
+    }
+}
+
+/// Per-cluster member closest to the cluster's data-space mean, for
+/// the coarsest level of `maps` (which has `coarse_n` clusters).
+fn centroid_seeds(data: &Matrix, maps: &[Vec<u32>], coarse_n: usize) -> Vec<u32> {
+    let n = data.n();
+    let d = data.d();
+    // Compose the per-level maps into point → coarsest-cluster.
+    let mut cluster = vec![0u32; n];
+    for (i, c) in cluster.iter_mut().enumerate() {
+        let mut v = i as u32;
+        for m in maps {
+            v = m[v as usize];
+        }
+        *c = v;
+    }
+    // Mean of each cluster in data space.
+    let mut sums = vec![0f64; coarse_n * d];
+    let mut counts = vec![0u64; coarse_n];
+    for (i, &c) in cluster.iter().enumerate() {
+        let row = data.row(i);
+        let s = &mut sums[c as usize * d..(c as usize + 1) * d];
+        for (acc, &x) in s.iter_mut().zip(row) {
+            *acc += x as f64;
+        }
+        counts[c as usize] += 1;
+    }
+    // Member nearest the mean; ties to the lowest id because points
+    // are visited in ascending order with a strict `<`.
+    let mut best: Vec<(f64, u32)> = vec![(f64::INFINITY, u32::MAX); coarse_n];
+    for (i, &c) in cluster.iter().enumerate() {
+        let cnt = counts[c as usize];
+        if cnt == 0 {
+            continue;
+        }
+        let mean = &sums[c as usize * d..(c as usize + 1) * d];
+        let mut dist = 0f64;
+        for (&m, &x) in mean.iter().zip(data.row(i)) {
+            let diff = m / cnt as f64 - x as f64;
+            dist += diff * diff;
+        }
+        if dist < best[c as usize].0 {
+            best[c as usize] = (dist, i as u32);
+        }
+    }
+    let mut seeds: Vec<u32> = best.iter().filter(|&&(_, id)| id != u32::MAX).map(|&(_, id)| id).collect();
+    seeds.sort_unstable();
+    seeds.dedup();
+    seeds
+}
+
+/// Stride `seeds` down to at most `cap` entries (keeps the spread).
+fn cap_seeds(seeds: Vec<u32>, cap: usize) -> Vec<u32> {
+    if seeds.len() <= cap {
+        return seeds;
+    }
+    let stride = seeds.len().div_ceil(cap);
+    seeds.into_iter().step_by(stride).collect()
+}
+
+/// Counters for one [`search_nearest`] call.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueryStats {
+    /// Distinct points entered into the visited set (seeds included).
+    pub visited: u64,
+    /// Distance evaluations performed by the graph walk (excludes the
+    /// exact-fallback scan, which is accounted by `fallback`).
+    pub scored: u64,
+    /// True when the result came from the exact oracle instead of the
+    /// graph walk (budget exhausted, unreachable `k`, or no seeds).
+    pub fallback: bool,
+}
+
+/// [`QueryStats`] accumulated over many queries — one insert batch,
+/// one `/embed` request, one metrics flush.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SearchTotals {
+    /// Queries folded in.
+    pub queries: u64,
+    /// Sum of per-query `visited`.
+    pub visited: u64,
+    /// Sum of per-query `scored`.
+    pub scored: u64,
+    /// Queries that fell back to the exact scan.
+    pub fallbacks: u64,
+}
+
+impl SearchTotals {
+    /// Fold one query's counters in.
+    pub fn absorb(&mut self, s: &QueryStats) {
+        self.queries += 1;
+        self.visited += s.visited;
+        self.scored += s.scored;
+        if s.fallback {
+            self.fallbacks += 1;
+        }
+    }
+
+    /// Fold another accumulator in (batch-of-batches aggregation).
+    pub fn merge(&mut self, o: &SearchTotals) {
+        self.queries += o.queries;
+        self.visited += o.visited;
+        self.scored += o.scored;
+        self.fallbacks += o.fallbacks;
+    }
+}
+
+/// A shared [`SearchIndex`] plus the beam width to query it with — the
+/// handle the incremental-insert path holds so its base-neighbor
+/// lookups go through the graph walk instead of the exact scan.
+#[derive(Clone, Debug)]
+pub struct SearchHandle {
+    /// Snapshot-shared index (cheap to clone).
+    pub index: std::sync::Arc<SearchIndex>,
+    /// Beam width passed to [`search_nearest`].
+    pub beam_width: usize,
+}
+
+// Per-thread reusable buffers for the walk, sized lazily to the
+// largest n seen by this thread (same idiom as the GATHER scratch in
+// `kernels::batch`). Keeps the per-query hot path allocation-free
+// beyond the returned result vector.
+struct SearchScratch {
+    seen: VisitedSet,
+    pool: BoundedMaxHeap,
+    exact_heap: BoundedMaxHeap,
+    frontier: BinaryHeap<Reverse<(u32, u32)>>,
+    cand: Vec<u32>,
+    dist: Vec<f32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Option<SearchScratch>> = const { RefCell::new(None) };
+}
+
+/// The scoring budget after which the walk abandons the graph and
+/// falls back to the exact scan: generous enough that a healthy walk
+/// (≈ beam × degree scored) never hits it, and `≥ n` once the beam
+/// covers the dataset so the beam-≥-N degeneration property holds.
+fn score_budget(n: usize, ef: usize) -> u64 {
+    ((n / 10).max(ef * 16).max(256)) as u64
+}
+
+/// Greedy best-first beam search for the `k` nearest rows of `data`
+/// to `query`, walking `knn`'s adjacency from `index`'s seeds.
+///
+/// Returns `(id, sqdist)` pairs sorted ascending by `(dist, id)` —
+/// the same order as the exact [`crate::kernels::nearest_k`] oracle —
+/// plus the per-query [`QueryStats`]. The result pool is
+/// `max(beam_width, k)` wide; the walk stops when the closest
+/// unexpanded candidate is no better than the pool's worst kept
+/// distance. On budget exhaustion or when fewer than `min(k, n)`
+/// points were reachable (disconnected component), the exact scan
+/// answers instead and `stats.fallback` is set — never a silently
+/// short result.
+pub fn search_nearest(
+    query: &[f32],
+    data: &Matrix,
+    knn: &KnnGraph,
+    index: &SearchIndex,
+    k: usize,
+    beam_width: usize,
+) -> (Vec<(u32, f32)>, QueryStats) {
+    let n = data.n();
+    let mut stats = QueryStats::default();
+    if n == 0 {
+        return (Vec::new(), stats);
+    }
+    debug_assert_eq!(knn.n(), n, "search: knn graph and data disagree on n");
+    let k = k.max(1);
+    let ef = beam_width.max(k);
+    let budget = score_budget(n, ef);
+    let want = k.min(n);
+
+    SCRATCH.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let scratch = slot.get_or_insert_with(|| SearchScratch {
+            seen: VisitedSet::new(n),
+            pool: BoundedMaxHeap::new(ef),
+            exact_heap: BoundedMaxHeap::new(1),
+            frontier: BinaryHeap::new(),
+            cand: Vec::new(),
+            dist: Vec::new(),
+        });
+        if scratch.seen.capacity() < n {
+            scratch.seen = VisitedSet::new(n);
+        }
+        scratch.seen.clear();
+        scratch.pool.reset(ef);
+        scratch.frontier.clear();
+
+        // Round 0: score every seed in one batch.
+        scratch.cand.clear();
+        for &s in index.seeds() {
+            if (s as usize) < n && scratch.seen.insert(s) {
+                scratch.cand.push(s);
+            }
+        }
+        let mut fell_back = false;
+        if scratch.cand.is_empty() {
+            fell_back = true; // no usable seeds: straight to the oracle
+        } else {
+            stats.visited += scratch.cand.len() as u64;
+            stats.scored += scratch.cand.len() as u64;
+            let SearchScratch { cand, dist, pool, frontier, .. } = &mut *scratch;
+            kernels::sqdist_batch(query, data, cand, dist);
+            for (&id, &d) in cand.iter().zip(dist.iter()) {
+                pool.push(id, d, false);
+                frontier.push(Reverse((d.to_bits(), id)));
+            }
+
+            // Greedy expansion: always the closest unexpanded point;
+            // `(dist_bits, id)` keys make tie order deterministic
+            // (squared distances are non-negative, so the IEEE bit
+            // pattern is order-preserving).
+            while let Some(Reverse((dbits, u))) = scratch.frontier.pop() {
+                if scratch.pool.len() >= ef && f32::from_bits(dbits) > scratch.pool.threshold() {
+                    break; // nothing in the frontier can improve the pool
+                }
+                scratch.cand.clear();
+                for &(v, _) in &knn.neighbors[u as usize] {
+                    if (v as usize) < n && scratch.seen.insert(v) {
+                        scratch.cand.push(v);
+                    }
+                }
+                if scratch.cand.is_empty() {
+                    continue;
+                }
+                stats.visited += scratch.cand.len() as u64;
+                stats.scored += scratch.cand.len() as u64;
+                let SearchScratch { cand, dist, pool, frontier, .. } = &mut *scratch;
+                kernels::sqdist_batch(query, data, cand, dist);
+                for (&id, &d) in cand.iter().zip(dist.iter()) {
+                    if d <= pool.threshold() {
+                        pool.push(id, d, false);
+                        frontier.push(Reverse((d.to_bits(), id)));
+                    }
+                }
+                if stats.scored > budget {
+                    fell_back = true;
+                    break;
+                }
+            }
+        }
+
+        let mut out = if fell_back {
+            Vec::new()
+        } else {
+            let mut all = scratch.pool.drain_sorted_pairs();
+            all.truncate(k);
+            all
+        };
+        if !fell_back && out.len() < want {
+            fell_back = true; // disconnected / under-reached: use the oracle
+        }
+        if fell_back {
+            stats.fallback = true;
+            out = kernels::nearest_k(query, data, k, &mut scratch.dist, &mut scratch.exact_heap);
+        }
+        (out, stats)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knn::bruteforce;
+    use crate::util::rng::Rng;
+
+    fn gaussian_matrix(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec((0..n * d).map(|_| rng.gaussian()).collect(), n, d)
+    }
+
+    fn exact_graph(data: &Matrix, k: usize) -> KnnGraph {
+        bruteforce::exact_knn(data, k, 2)
+    }
+
+    #[test]
+    fn finds_high_recall_neighbors_on_gaussian_data() {
+        let data = gaussian_matrix(600, 8, 42);
+        let knn = exact_graph(&data, 10);
+        let idx = SearchIndex::build(&data, &knn, None, 16);
+        assert_eq!(idx.source(), SeedSource::Centroid);
+        let mut dists = Vec::new();
+        let mut heap = BoundedMaxHeap::new(1);
+        let (mut hits, mut total, mut fallbacks) = (0usize, 0usize, 0usize);
+        for q in 0..100 {
+            let row: Vec<f32> = data.row(q * 6 % 600).to_vec();
+            let (got, stats) = search_nearest(&row, &data, &knn, &idx, 10, 32);
+            let truth = kernels::nearest_k(&row, &data, 10, &mut dists, &mut heap);
+            let ts: std::collections::HashSet<u32> = truth.iter().map(|&(id, _)| id).collect();
+            hits += got.iter().filter(|&&(id, _)| ts.contains(&id)).count();
+            total += ts.len();
+            fallbacks += stats.fallback as usize;
+            assert!(stats.visited > 0 && stats.scored > 0);
+        }
+        // The release-mode harness (tests/search_recall.rs) holds the
+        // 0.95 line at scale; this debug-mode smoke allows a little
+        // slack on its tiny dataset.
+        let recall = hits as f64 / total as f64;
+        assert!(recall >= 0.90, "recall {recall} too low ({fallbacks} fallbacks)");
+    }
+
+    /// Scalar integer squared distance — exact in f32 for small ints.
+    fn int_sqdist(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    /// Make every stored edge bidirectional and add a ring backbone,
+    /// so the *directed* traversal of [`search_nearest`] can reach the
+    /// whole graph from any seed.
+    fn symmetrize_with_ring(data: &Matrix, g: &mut KnnGraph) {
+        let n = g.n();
+        let mut extra: Vec<(usize, (u32, f32))> = Vec::new();
+        for (i, nb) in g.neighbors.iter().enumerate() {
+            for &(j, d) in nb {
+                extra.push((j as usize, (i as u32, d)));
+            }
+        }
+        for i in 0..n {
+            let j = (i + 1) % n;
+            if i == j {
+                continue;
+            }
+            let d = int_sqdist(data.row(i), data.row(j));
+            extra.push((i, (j as u32, d)));
+            extra.push((j, (i as u32, d)));
+        }
+        for (i, e) in extra {
+            if !g.neighbors[i].iter().any(|&(id, _)| id == e.0) {
+                g.neighbors[i].push(e);
+            }
+        }
+        for nb in &mut g.neighbors {
+            nb.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        }
+    }
+
+    #[test]
+    fn wide_beam_matches_exact_oracle() {
+        // Connected graph + beam ≥ N ⇒ the pool never evicts, the walk
+        // floods the whole graph, result == exact oracle. Small
+        // integer coordinates keep every squared distance exactly
+        // representable, so SIMD lane order cannot perturb ties; the
+        // symmetrized ring backbone guarantees directed reachability.
+        let d = 6;
+        let n = 80;
+        let data = Matrix::from_vec(
+            (0..n * d).map(|x| ((x * 13 + 5) % 97) as f32 - 48.0).collect(),
+            n,
+            d,
+        );
+        let mut knn = exact_graph(&data, 6);
+        symmetrize_with_ring(&data, &mut knn);
+        let idx = SearchIndex::build(&data, &knn, None, 8);
+        let mut dists = Vec::new();
+        let mut heap = BoundedMaxHeap::new(1);
+        for q in 0..n {
+            let row: Vec<f32> = data.row(q).to_vec();
+            let (got, stats) = search_nearest(&row, &data, &knn, &idx, 10, n);
+            let want = kernels::nearest_k(&row, &data, 10, &mut dists, &mut heap);
+            assert!(!stats.fallback, "wide beam must not need the oracle");
+            assert_eq!(got, want, "query {q}");
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let data = Matrix::zeros(0, 4);
+        let knn = KnnGraph::empty(0, 3);
+        let idx = SearchIndex::build(&data, &knn, None, 8);
+        let (out, stats) = search_nearest(&[0.0; 4], &data, &knn, &idx, 3, 8);
+        assert!(out.is_empty() && !stats.fallback);
+
+        // n ≤ seeds: every point is a seed, results are exact.
+        let data = gaussian_matrix(5, 4, 7);
+        let knn = exact_graph(&data, 2);
+        let idx = SearchIndex::build(&data, &knn, None, 8);
+        assert_eq!(idx.seeds().len(), 5);
+        let (out, _) = search_nearest(&data.row(3).to_vec(), &data, &knn, &idx, 2, 8);
+        assert_eq!(out[0].0, 3);
+        assert_eq!(out[0].1, 0.0);
+    }
+
+    #[test]
+    fn disconnected_component_falls_back_to_exact() {
+        // Points 0..40 carry edges; 40..44 are isolated vertices. The
+        // seed cap (4) is below the coarsest level's cluster count
+        // (A's supernodes plus 4 singletons), so the stride can keep
+        // at most 2 of the 4 isolated points as seeds — with k = n the
+        // walk therefore *cannot* reach min(k, n) points and must
+        // answer via the exact oracle, never a short result.
+        let data = gaussian_matrix(44, 4, 11);
+        let full = exact_graph(&data, 4);
+        let mut knn = KnnGraph::empty(44, 4);
+        for i in 0..40 {
+            knn.neighbors[i] =
+                full.neighbors[i].iter().copied().filter(|&(id, _)| id < 40).collect();
+        }
+        let idx = SearchIndex::build(&data, &knn, None, 4);
+        let mut dists = Vec::new();
+        let mut heap = BoundedMaxHeap::new(1);
+        let row: Vec<f32> = data.row(42).to_vec();
+        let (got, stats) = search_nearest(&row, &data, &knn, &idx, 44, 8);
+        let want = kernels::nearest_k(&row, &data, 44, &mut dists, &mut heap);
+        assert!(stats.fallback, "unreachable points must trigger the exact fallback");
+        assert_eq!(got, want);
+        assert_eq!(got[0], (42, 0.0));
+    }
+
+    #[test]
+    fn seed_fallbacks_grid_then_stride() {
+        // Edgeless KNN graph: no hierarchy possible.
+        let data = gaussian_matrix(200, 2, 3);
+        let knn = KnnGraph::empty(200, 4);
+        let grid = GridIndex::build(&data, 8);
+        let idx = SearchIndex::build(&data, &knn, Some(&grid), 16);
+        assert_eq!(idx.source(), SeedSource::Grid);
+        assert!(!idx.seeds().is_empty() && idx.seeds().len() <= 16);
+
+        let idx = SearchIndex::build(&data, &knn, None, 16);
+        assert_eq!(idx.source(), SeedSource::Random);
+        assert!(!idx.seeds().is_empty() && idx.seeds().len() <= 16);
+        // Edgeless graph: nothing beyond the seeds is reachable, so a
+        // k above the seed count must fall back, not come up short.
+        let (out, stats) = search_nearest(&data.row(0).to_vec(), &data, &knn, &idx, 20, 16);
+        assert_eq!(out.len(), 20);
+        assert!(stats.fallback);
+    }
+
+    #[test]
+    fn search_is_deterministic() {
+        let data = gaussian_matrix(300, 6, 5);
+        let knn = exact_graph(&data, 8);
+        let idx = SearchIndex::build(&data, &knn, None, 12);
+        let q: Vec<f32> = data.row(123).iter().map(|v| v + 0.01).collect();
+        let (a, sa) = search_nearest(&q, &data, &knn, &idx, 7, 24);
+        let (b, sb) = search_nearest(&q, &data, &knn, &idx, 7, 24);
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn index_metadata_is_small_and_consistent() {
+        let data = gaussian_matrix(1000, 8, 9);
+        let knn = exact_graph(&data, 6);
+        let idx = SearchIndex::build(&data, &knn, None, 32);
+        assert!(idx.seeds().len() <= 32, "seed cap violated: {}", idx.seeds().len());
+        assert!(idx.levels() >= 1, "1000 → 32 needs at least one level");
+        // Maps chain: level 0 maps all 1000 points, each next level
+        // maps the previous level's cluster count.
+        let mut prev = 1000usize;
+        for m in idx.maps() {
+            assert_eq!(m.len(), prev);
+            prev = (*m.iter().max().unwrap() + 1) as usize;
+        }
+        for w in idx.seeds().windows(2) {
+            assert!(w[0] < w[1], "seeds must be sorted and distinct");
+        }
+    }
+}

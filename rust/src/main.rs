@@ -161,6 +161,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.wal_segment_bytes = args.get_or("wal-segment-bytes", cfg.wal_segment_bytes)?;
     cfg.wal_max_segments = args.get_or("wal-max-segments", cfg.wal_max_segments)?;
     cfg.recovery_policy = args.get_or("recovery-policy", cfg.recovery_policy)?;
+    cfg.search = args.get_or("search", cfg.search)?;
+    cfg.beam_width = args.get_or("beam-width", cfg.beam_width)?;
+    cfg.search_seeds = args.get_or("search-seeds", cfg.search_seeds)?;
 
     // Two-phase startup: open the checkpoints, start listening, and
     // replay the insert WAL in the background. The server answers

@@ -171,6 +171,29 @@ impl GridIndex {
         self.bounds
     }
 
+    /// One representative point id per non-empty cell (the first id in
+    /// each bucket, plus any overflow points), strided down to at most
+    /// `max` ids. Deterministic for a given index state — used as the
+    /// spatially-spread seed fallback for graph-based KNN search when
+    /// no coarsening hierarchy is available.
+    pub fn cell_representatives(&self, max: usize) -> Vec<u32> {
+        let mut reps: Vec<u32> = Vec::new();
+        for c in 0..self.g * self.g {
+            let (s, e) = (self.starts[c] as usize, self.starts[c + 1] as usize);
+            if s < e {
+                reps.push(self.ids[s]);
+            }
+        }
+        reps.extend(self.overflow.iter().map(|&(id, _, _)| id));
+        if max == 0 {
+            reps.clear();
+        } else if reps.len() > max {
+            let stride = reps.len().div_ceil(max);
+            reps = reps.into_iter().step_by(stride).collect();
+        }
+        reps
+    }
+
     /// Collect every point inside `[x0, x1] × [y0, y1]` into `out`
     /// (cleared first), visiting only the grid cells the rectangle
     /// overlaps. Returns the number of *candidates examined* — the
@@ -349,6 +372,25 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), 100 + total, "duplicate or lost ids after rebuild");
+    }
+
+    #[test]
+    fn cell_representatives_spread_and_capped() {
+        let m = uniform_layout(2000, 21);
+        let mut idx = GridIndex::build(&m, 16);
+        let reps = idx.cell_representatives(usize::MAX);
+        assert!(!reps.is_empty() && reps.len() <= 16 * 16);
+        let mut sorted = reps.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), reps.len(), "representatives must be distinct");
+        // Cap honored, deterministic, overflow points included.
+        let capped = idx.cell_representatives(10);
+        assert!(capped.len() <= 10 && !capped.is_empty());
+        assert_eq!(capped, idx.cell_representatives(10));
+        idx.insert(9999, 50.0, 50.0);
+        assert!(idx.cell_representatives(usize::MAX).contains(&9999));
+        assert!(idx.cell_representatives(0).is_empty());
     }
 
     #[test]

@@ -28,10 +28,11 @@
 //! unknown paths `404`; wrong methods on known paths `405`; writes to
 //! a `--read-only` server `403`.
 
+use crate::config::SearchMode;
+use crate::knn::search::{search_nearest, SearchTotals};
 use crate::render::{viewport_svg, ScatterStyle};
 use crate::serve::http::{Request, Response};
 use crate::serve::state::{ServerState, Snapshot};
-use crate::util::heap::BoundedMaxHeap;
 use crate::util::json::Json;
 use crate::vis::incremental;
 use std::collections::BTreeMap;
@@ -152,8 +153,39 @@ fn embed(req: &Request, st: &ServerState, snap: &Snapshot) -> Response {
         .unwrap_or_else(|| st.embed_k(snap))
         .clamp(1, snap.data.n());
 
-    let (pos, neighbors) =
-        incremental::project(&snap.data, &snap.layout, &st.vis, &pts, k, samples);
+    // Base-neighbor lookups follow the configured search mode: the
+    // exact scan, or the navigable-graph walk (sub-linear; counted in
+    // the `serve.search_*` metrics, falls back to exact per query).
+    let (pos, neighbors) = match st.cfg.search {
+        SearchMode::Exact => {
+            incremental::project(&snap.data, &snap.layout, &st.vis, &pts, k, samples)
+        }
+        SearchMode::Graph => {
+            let mut totals = SearchTotals::default();
+            let out = incremental::project_with(
+                &snap.data,
+                &snap.layout,
+                &st.vis,
+                &pts,
+                k,
+                samples,
+                |q, kk| {
+                    let (nb, stats) = search_nearest(
+                        q,
+                        &snap.data,
+                        &snap.knn,
+                        &snap.search,
+                        kk,
+                        st.cfg.beam_width,
+                    );
+                    totals.absorb(&stats);
+                    nb
+                },
+            );
+            st.record_search_totals(&totals);
+            out
+        }
+    };
     st.count("embed.points", pos.n() as f64);
 
     let mut body = String::with_capacity(96 + pos.n() * (pos.d() * 16 + k * 8));
@@ -189,9 +221,11 @@ fn embed(req: &Request, st: &ServerState, snap: &Snapshot) -> Response {
     Response::json(body)
 }
 
-/// `POST /knn` — exact K nearest points of one query vector via the
-/// batched distance kernel, over the snapshot's full (base + inserted)
-/// dataset.
+/// `POST /knn` — K nearest points of one query vector over the
+/// snapshot's full (base + inserted) dataset: the navigable-graph beam
+/// walk by default (`--search graph`, automatic exact fallback), or
+/// the exact batched scan (`--search exact`). Live-inserted points are
+/// reachable through the in-edges the insert path splices.
 fn knn(req: &Request, st: &ServerState, snap: &Snapshot) -> Response {
     st.count("knn.requests", 1.0);
     let json = match parse_body(req) {
@@ -211,11 +245,7 @@ fn knn(req: &Request, st: &ServerState, snap: &Snapshot) -> Response {
         .unwrap_or(10)
         .clamp(1, snap.data.n());
 
-    // One batched scan of the contiguous data matrix — the same
-    // shared exact-KNN helper the insert/projection paths use.
-    let mut dists: Vec<f32> = Vec::new();
-    let mut heap = BoundedMaxHeap::new(k);
-    let nb = crate::kernels::nearest_k(&q, &snap.data, k, &mut dists, &mut heap);
+    let nb = st.query_knn(snap, &q, k);
 
     let mut body = String::with_capacity(64 + nb.len() * 20);
     let _ = write!(

@@ -16,8 +16,15 @@
 //! * `POST /embed` — out-of-sample projection against the current
 //!   epoch's layout ([`crate::vis::incremental::project`]); nothing is
 //!   retained.
-//! * `POST /knn` — exact K nearest points of a query vector, one
-//!   [`crate::kernels::sqdist_to_all`] batch scan.
+//! * `POST /knn` — K nearest points of a query vector. By default
+//!   (`--search graph`) this is the sub-linear navigable-graph beam
+//!   walk of [`crate::knn::search`], seeded from coarse-hierarchy
+//!   centroids carried by each snapshot and falling back to the exact
+//!   scan whenever the walk cannot answer (`serve.search_*` metrics
+//!   count visited/scored points and fallbacks); `--search exact`
+//!   forces the one-batch [`crate::kernels::sqdist_to_all`] scan. The
+//!   same dispatch drives `/embed` and insert base-neighbor lookups
+//!   (`--beam-width`, `--search-seeds` tune it).
 //! * `GET /viewport` — an SVG tile of a layout rectangle, culled by the
 //!   [`crate::render::grid::GridIndex`] so tile cost tracks the tile's
 //!   content, not the dataset size.

@@ -36,7 +36,7 @@
 //! tests can inject short writes, fsync failures and torn writes at
 //! every fault point (`rust/tests/fault_recovery.rs`).
 
-use crate::config::ServeConfig;
+use crate::config::{SearchMode, ServeConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::CheckpointPaths;
 use crate::data::formats::wal::{self, WalSet};
@@ -44,8 +44,10 @@ use crate::data::formats::{binary, checkpoint};
 use crate::data::io::{read_labels, write_labels};
 use crate::data::matrix::Matrix;
 use crate::graph::weights::WeightConfig;
+use crate::knn::search::{search_nearest, SearchHandle, SearchIndex, SearchTotals};
 use crate::knn::KnnGraph;
 use crate::render::grid::GridIndex;
+use crate::util::heap::BoundedMaxHeap;
 use crate::util::faultio::{RealStorage, Storage};
 use crate::vis::incremental::IncrementalLayout;
 use crate::vis::LargeVisConfig;
@@ -75,6 +77,12 @@ pub struct Snapshot {
     pub n_classes: usize,
     /// Spatial index over `layout` for `/viewport`.
     pub grid: GridIndex,
+    /// Navigable-graph search metadata (entry seeds + coarsening maps)
+    /// for sub-linear `/knn` and `/embed` lookups. Built once at load
+    /// (and after each WAL compaction); shared across epochs by `Arc` —
+    /// live inserts stay findable through their spliced in-edges, not
+    /// by rebuilding this.
+    pub search: Arc<SearchIndex>,
     /// Points loaded from the checkpoints (frozen base); ids at or
     /// above this were inserted live.
     pub base_n: usize,
@@ -94,6 +102,9 @@ struct Writer {
     /// labeled: the first id past the base classes (palette lookups
     /// are modulo, so any value is render-safe).
     pseudo_class: u32,
+    /// Search metadata cloned into every published snapshot (see
+    /// [`Snapshot::search`]).
+    search: Arc<SearchIndex>,
     /// Durable insert log; `None` until [`ServerState::recover`] runs,
     /// and always `None` when the server is read-only.
     wal: Option<WalSet>,
@@ -376,6 +387,10 @@ impl ServerState {
             "serve.compactions",
             "serve.compact_errors",
             "serve.wal_corrupt_segments",
+            "serve.search_queries",
+            "serve.search_visited",
+            "serve.search_scored",
+            "serve.search_fallbacks",
         ] {
             metrics.set(key, 0.0);
         }
@@ -387,10 +402,24 @@ impl ServerState {
         let mut inc =
             IncrementalLayout::new(data, knn, layout, WeightConfig::default(), vis.clone());
         inc.samples_per_insert = cfg.insert_samples;
+        // Navigable-graph search metadata over the loaded base. Built
+        // in both modes (it is small and lets tests flip modes without
+        // a reload); the insert path only *uses* it in graph mode.
+        let search = Arc::new(SearchIndex::build(
+            &inc.data,
+            &inc.knn,
+            Some(&grid),
+            cfg.search_seeds.max(1),
+        ));
+        if cfg.search == SearchMode::Graph {
+            inc.search =
+                Some(SearchHandle { index: search.clone(), beam_width: cfg.beam_width });
+        }
         let writer = Writer {
             inc,
             grid,
             labels,
+            search,
             pseudo_class: n_classes as u32,
             wal: None,
             wal_failed: false,
@@ -446,9 +475,11 @@ impl ServerState {
             rec
         };
         let mut recovered_rows = 0usize;
+        let mut replay_totals = SearchTotals::default();
         for b in &recovery.batches {
             Self::apply_batch(&mut w, b);
             recovered_rows += b.n();
+            replay_totals.merge(&w.inc.last_search);
         }
         let recovered_batches = recovery.batches.len() as u64;
         if recovery.torn_tail {
@@ -477,6 +508,7 @@ impl ServerState {
             m.set("serve.replayed_batches", recovered_batches as f64);
             m.set("serve.wal_corrupt_segments", recovery.corrupt_segments as f64);
         }
+        self.record_search_totals(&replay_totals);
 
         let epoch = recovered_batches;
         let snapshot = Arc::new(Self::snapshot_of(&w, epoch, self.base_n, self.n_classes));
@@ -548,6 +580,7 @@ impl ServerState {
             labels: w.labels.clone(),
             n_classes,
             grid: w.grid.clone(),
+            search: w.search.clone(),
             base_n,
         }
     }
@@ -607,11 +640,55 @@ impl ServerState {
             set.append(pts).context("append insert WAL")?;
         }
         let ids = Self::apply_batch(&mut w, pts);
+        let totals = w.inc.last_search;
         let epoch = self.publish(&w);
         self.maintain_wal(&mut w);
         drop(w);
+        self.record_search_totals(&totals);
         self.ring_refine_bell();
         Ok((ids, epoch))
+    }
+
+    /// Answer a `/knn`-style nearest-neighbor query against `snap`,
+    /// dispatching on `cfg.search`: the exact scan, or the
+    /// navigable-graph beam walk with its automatic exact fallback.
+    /// Graph-mode queries bump the `serve.search_*` counters.
+    pub fn query_knn(&self, snap: &Snapshot, query: &[f32], k: usize) -> Vec<(u32, f32)> {
+        match self.cfg.search {
+            SearchMode::Exact => {
+                let mut dists = Vec::new();
+                let mut heap = BoundedMaxHeap::new(k.max(1));
+                crate::kernels::nearest_k(query, &snap.data, k, &mut dists, &mut heap)
+            }
+            SearchMode::Graph => {
+                let (out, stats) = search_nearest(
+                    query,
+                    &snap.data,
+                    &snap.knn,
+                    &snap.search,
+                    k,
+                    self.cfg.beam_width,
+                );
+                let mut totals = SearchTotals::default();
+                totals.absorb(&stats);
+                self.record_search_totals(&totals);
+                out
+            }
+        }
+    }
+
+    /// Fold accumulated walk counters into the `serve.search_*`
+    /// metrics (one lock for all four keys). A no-op for all-zero
+    /// totals, so exact-mode paths can call it unconditionally.
+    pub fn record_search_totals(&self, t: &SearchTotals) {
+        if t.queries == 0 {
+            return;
+        }
+        let mut m = self.metrics.lock().unwrap_or_else(|e| e.into_inner());
+        m.add("serve.search_queries", t.queries as f64);
+        m.add("serve.search_visited", t.visited as f64);
+        m.add("serve.search_scored", t.scored as f64);
+        m.add("serve.search_fallbacks", t.fallbacks as f64);
     }
 
     /// Post-ack WAL maintenance: rotate the active segment once it
@@ -644,7 +721,10 @@ impl ServerState {
     /// failure and (only for a post-commit failure) disables inserts.
     fn compact(&self, w: &mut Writer) {
         match self.try_compact(w) {
-            Ok(()) => self.count("serve.compactions", 1.0),
+            Ok(()) => {
+                self.count("serve.compactions", 1.0);
+                self.rebuild_search(w);
+            }
             Err(CompactError::BeforeCommit(e)) => {
                 self.count("serve.compact_errors", 1.0);
                 eprintln!("[serve] WAL compaction failed before commit (will retry): {e:#}");
@@ -657,6 +737,27 @@ impl ServerState {
                      restart rolls it forward: {e:#}"
                 );
             }
+        }
+    }
+
+    /// Rebuild the search metadata after a WAL compaction absorbed the
+    /// live inserts into the base checkpoints. A process restarted from
+    /// those checkpoints builds its index from exactly this graph, so
+    /// the live index must match it — otherwise WAL batches acked after
+    /// the compaction would replay with different base neighbors and
+    /// break the bit-identical-recovery contract. The grid is freshly
+    /// re-bucketed (what a restart would build) rather than the
+    /// incrementally extended writer copy, for the same reason.
+    fn rebuild_search(&self, w: &mut Writer) {
+        let grid = GridIndex::build(&w.inc.layout, self.cfg.grid.max(1));
+        w.search = Arc::new(SearchIndex::build(
+            &w.inc.data,
+            &w.inc.knn,
+            Some(&grid),
+            self.cfg.search_seeds.max(1),
+        ));
+        if let Some(h) = &mut w.inc.search {
+            h.index = w.search.clone();
         }
     }
 
@@ -893,6 +994,52 @@ mod tests {
         let snap = st2.snapshot();
         assert_eq!(snap.epoch, 1);
         assert_eq!(snap.data.n(), 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn query_knn_dispatch_and_fallback_counter() {
+        let dir = std::env::temp_dir()
+            .join(format!("largevis_serve_qknn_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        fabricate_checkpoints(&dir, 6);
+        // Overwrite the KNN checkpoint with an edgeless graph: with
+        // only 2 entry seeds the walk can reach 2 of the 6 points, so
+        // a k=3 query cannot be satisfied from the graph — it must
+        // fall back to the exact oracle and count the fallback.
+        let paths = CheckpointPaths::in_dir(&dir);
+        checkpoint::write_knn(&paths.knn, &KnnGraph::empty(6, 1)).unwrap();
+        let cfg = ServeConfig { checkpoints: dir.clone(), search_seeds: 2, ..Default::default() };
+        assert_eq!(cfg.search, SearchMode::Graph, "graph search must be the default");
+        let st = ServerState::load(cfg).unwrap();
+        let snap = st.snapshot();
+        let q = vec![0.3f32, 0.6, 0.9];
+        let got = st.query_knn(&snap, &q, 3);
+        let mut dists = Vec::new();
+        let mut heap = BoundedMaxHeap::new(3);
+        let want = crate::kernels::nearest_k(&q, &snap.data, 3, &mut dists, &mut heap);
+        assert_eq!(got, want, "fallback must reproduce the exact oracle");
+        {
+            let m = st.metrics.lock().unwrap();
+            assert_eq!(m.get("serve.search_queries"), Some(1.0));
+            assert_eq!(m.get("serve.search_fallbacks"), Some(1.0));
+            assert!(m.get("serve.search_visited").unwrap() >= 2.0);
+        }
+        drop(snap);
+        drop(st);
+        // Exact mode: same answer, no search counters.
+        let cfg = ServeConfig {
+            checkpoints: dir.clone(),
+            search: SearchMode::Exact,
+            ..Default::default()
+        };
+        let st = ServerState::load(cfg).unwrap();
+        let snap = st.snapshot();
+        assert_eq!(st.query_knn(&snap, &q, 3), want);
+        {
+            let m = st.metrics.lock().unwrap();
+            assert_eq!(m.get("serve.search_queries"), Some(0.0));
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

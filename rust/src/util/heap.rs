@@ -64,7 +64,11 @@ impl BoundedMaxHeap {
     /// Try to insert; returns true if the candidate was kept.
     ///
     /// Duplicates (same `id`) are rejected; when full, a candidate is
-    /// kept only if strictly better than the current worst.
+    /// kept only if strictly better than the current worst under the
+    /// `(dist, id)` order — so on equal distances the *lowest* ids are
+    /// the ones retained, deterministically, regardless of arrival
+    /// order (the oracle-parity contract `kernels::nearest_k` relies
+    /// on).
     pub fn push(&mut self, id: u32, dist: f32, flag: bool) -> bool {
         if self.members.contains(&id) {
             return false;
@@ -74,7 +78,7 @@ impl BoundedMaxHeap {
             self.heap.push(Candidate { dist, id, flag });
             self.sift_up(self.heap.len() - 1);
             true
-        } else if dist < self.heap[0].dist {
+        } else if (dist, id) < (self.heap[0].dist, self.heap[0].id) {
             self.members.remove(&self.heap[0].id);
             self.members.insert(id);
             self.heap[0] = Candidate { dist, id, flag };
@@ -122,10 +126,19 @@ impl BoundedMaxHeap {
         &mut self.heap
     }
 
+    /// Lexicographic `(dist, id)` heap order: the root is the entry
+    /// with the largest distance, ties broken toward the largest id —
+    /// exactly the entry that must be evicted first for deterministic
+    /// lowest-index-wins results.
+    #[inline]
+    fn worse(&self, a: usize, b: usize) -> bool {
+        (self.heap[a].dist, self.heap[a].id) > (self.heap[b].dist, self.heap[b].id)
+    }
+
     fn sift_up(&mut self, mut i: usize) {
         while i > 0 {
             let parent = (i - 1) / 2;
-            if self.heap[i].dist > self.heap[parent].dist {
+            if self.worse(i, parent) {
                 self.heap.swap(i, parent);
                 i = parent;
             } else {
@@ -139,10 +152,10 @@ impl BoundedMaxHeap {
         loop {
             let (l, r) = (2 * i + 1, 2 * i + 2);
             let mut largest = i;
-            if l < n && self.heap[l].dist > self.heap[largest].dist {
+            if l < n && self.worse(l, largest) {
                 largest = l;
             }
-            if r < n && self.heap[r].dist > self.heap[largest].dist {
+            if r < n && self.worse(r, largest) {
                 largest = r;
             }
             if largest == i {
@@ -217,6 +230,28 @@ mod tests {
             h.push(id, d, false);
         }
         assert_eq!(h.drain_sorted_pairs(), vec![(8, 0.25), (9, 0.5), (6, 0.75)]);
+    }
+
+    #[test]
+    fn ties_keep_lowest_ids_regardless_of_arrival_order() {
+        // Regression: with dist-only heap ordering, equal-distance
+        // entries could be evicted by root position (arrival order),
+        // so {0,1} vs {1,2} depended on the sift history. The (dist,
+        // id) order pins lowest-index-wins.
+        let mut h = BoundedMaxHeap::new(2);
+        for (id, d) in [(0, 3.0), (1, 3.0), (2, 3.0), (3, 1.0)] {
+            h.push(id, d, false);
+        }
+        let ids: Vec<u32> = h.into_sorted().iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![3, 0], "lowest id must survive the tie");
+
+        // Same distances presented in reverse id order.
+        let mut h = BoundedMaxHeap::new(2);
+        for (id, d) in [(3, 1.0), (2, 3.0), (1, 3.0), (0, 3.0)] {
+            h.push(id, d, false);
+        }
+        let ids: Vec<u32> = h.into_sorted().iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![3, 0], "arrival order must not matter");
     }
 
     #[test]

@@ -3,8 +3,8 @@
 //! insertion:
 //!
 //! 1. the new point's K nearest neighbors are found against the current
-//!    index (exact scan per insertion — insertions are assumed rare
-//!    relative to N),
+//!    index (the exact scan by default, or the sub-linear navigable-graph
+//!    walk of [`crate::knn::search`] when a [`SearchHandle`] is set),
 //! 2. it is spliced into the KNN graph (its own list, plus any existing
 //!    lists it improves),
 //! 3. its layout position is initialized at the weight-averaged
@@ -19,6 +19,7 @@
 use crate::data::matrix::Matrix;
 use crate::graph::weights::{calibrate_row, weighted_graph, WeightConfig};
 use crate::kernels::nearest_k;
+use crate::knn::search::{search_nearest, SearchHandle, SearchTotals};
 use crate::knn::KnnGraph;
 use crate::util::alias::AliasTable;
 use crate::util::heap::BoundedMaxHeap;
@@ -74,6 +75,15 @@ pub struct IncrementalLayout {
     /// window a background refinement pass replays via
     /// [`IncrementalLayout::localized_sgd`].
     pub last_edges: Vec<(u32, u32, f64)>,
+    /// When set, [`IncrementalLayout::add_points`] finds each new
+    /// point's base neighbors with the navigable-graph walk
+    /// ([`search_nearest`]) instead of the exact scan — sub-linear
+    /// per insert. `None` keeps the exact path.
+    pub search: Option<SearchHandle>,
+    /// Accumulated per-query walk counters of the most recent
+    /// [`IncrementalLayout::add_points`] batch (all zero on the exact
+    /// path) — surfaced as `serve.search_*` metrics by the server.
+    pub last_search: SearchTotals,
 }
 
 /// Work performed by one localized reweighting pass — the proof that
@@ -117,6 +127,8 @@ impl IncrementalLayout {
             samples_per_insert: 2000,
             last_localized: LocalizedStats::default(),
             last_edges: Vec::new(),
+            search: None,
+            last_search: SearchTotals::default(),
         }
     }
 
@@ -143,11 +155,22 @@ impl IncrementalLayout {
         let mut dists: Vec<f32> = Vec::new();
         let mut heap = BoundedMaxHeap::new(k);
         let mut touched_old: Vec<u32> = Vec::new();
+        let search = self.search.clone();
+        self.last_search = SearchTotals::default();
         for r in 0..new_points.n() {
             let id = self.data.n();
             let row = new_points.row(r).to_vec();
-            let mine = nearest_k(&row, &self.data, k, &mut dists, &mut heap);
+            let mine = match &search {
+                Some(h) => {
+                    let (nb, stats) =
+                        search_nearest(&row, &self.data, &self.knn, &h.index, k, h.beam_width);
+                    self.last_search.absorb(&stats);
+                    nb
+                }
+                None => nearest_k(&row, &self.data, k, &mut dists, &mut heap),
+            };
             // Splice into existing lists where the new point improves them.
+            let mut got_in_edge = false;
             for &(j, dist) in &mine {
                 let list = &mut self.knn.neighbors[j as usize];
                 let worst = list.last().map(|&(_, d)| d).unwrap_or(f32::INFINITY);
@@ -157,10 +180,31 @@ impl IncrementalLayout {
                     }
                     let pos = list.partition_point(|&(_, d)| d <= dist);
                     list.insert(pos, (id as u32, dist));
+                    got_in_edge = true;
                     // A spliced old row's conditional distribution is
                     // stale; record it for the localized recalibration.
                     if (j as usize) < first_new {
                         touched_old.push(j);
+                    }
+                }
+            }
+            // Directed reachability guarantee for the graph query walk:
+            // an outlier whose distance beats no existing list would get
+            // zero in-edges and become invisible to `search_nearest`
+            // (which follows stored out-lists only). Force one in-edge
+            // from its nearest neighbor — at most one evicted entry per
+            // insert, and deterministic, so WAL replay stays
+            // bit-identical.
+            if !got_in_edge {
+                if let Some(&(j0, d0)) = mine.first() {
+                    let list = &mut self.knn.neighbors[j0 as usize];
+                    if list.len() == k {
+                        list.pop();
+                    }
+                    let pos = list.partition_point(|&(_, d)| d <= d0);
+                    list.insert(pos, (id as u32, d0));
+                    if (j0 as usize) < first_new {
+                        touched_old.push(j0);
                     }
                 }
             }
@@ -399,6 +443,34 @@ pub fn project(
     k: usize,
     samples_per_point: usize,
 ) -> (Matrix, Vec<Vec<(u32, f32)>>) {
+    let mut dists: Vec<f32> = Vec::new();
+    let mut heap = BoundedMaxHeap::new(k.max(1));
+    project_with(data, layout, vis, new_points, k, samples_per_point, |q, kk| {
+        nearest_k(q, data, kk, &mut dists, &mut heap)
+    })
+}
+
+/// [`project`] with a caller-supplied base-neighbor lookup.
+///
+/// `lookup(query, k)` must return up to `k` base `(id, sqdist)` pairs
+/// sorted ascending — either the exact scan ([`project`] passes
+/// [`nearest_k`]) or the navigable-graph walk
+/// ([`search_nearest`], how the server makes `/embed` sub-linear).
+/// Everything downstream of the lookup (centroid init, localized SGD,
+/// returned neighbor lists) is identical, so the two paths differ only
+/// in which base neighbors they find.
+pub fn project_with<F>(
+    data: &Matrix,
+    layout: &Matrix,
+    vis: &LargeVisConfig,
+    new_points: &Matrix,
+    k: usize,
+    samples_per_point: usize,
+    mut lookup: F,
+) -> (Matrix, Vec<Vec<(u32, f32)>>)
+where
+    F: FnMut(&[f32], usize) -> Vec<(u32, f32)>,
+{
     assert_eq!(new_points.d(), data.d(), "query dimensionality mismatch");
     assert_eq!(data.n(), layout.n(), "base data/layout row mismatch");
     assert!(data.n() > 0, "cannot project against an empty base");
@@ -410,15 +482,14 @@ pub fn project(
     let f = vis.prob_fn;
     let gamma = vis.gamma;
     let gclip = vis.grad_clip;
-    let mut dists: Vec<f32> = Vec::new();
-    let mut heap = BoundedMaxHeap::new(k);
     let mut pos = vec![0f32; dim];
     let mut step = vec![0f32; dim];
     let mut cum: Vec<f32> = Vec::new();
 
     for r in 0..new_points.n() {
         let q = new_points.row(r);
-        let nb = nearest_k(q, data, k, &mut dists, &mut heap);
+        let nb = lookup(q, k);
+        debug_assert!(!nb.is_empty(), "base-neighbor lookup returned nothing");
 
         // Init at the similarity-weighted centroid (same placement rule
         // as the insert path), with a tiny seeded jitter so coincident

@@ -224,3 +224,208 @@ fn prop_rng_below_never_out_of_range() {
         Ok(())
     });
 }
+
+/// Exact integer squared distance — every value representable in f32,
+/// so graph-walk and full-scan paths agree bitwise whatever order the
+/// SIMD lanes accumulate in.
+fn int_sqdist(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[test]
+fn prop_wide_beam_search_matches_exact_oracle() {
+    use largevis::kernels::nearest_k;
+    use largevis::knn::search::{search_nearest, SearchIndex};
+    use largevis::knn::KnnGraph;
+    use largevis::util::heap::BoundedMaxHeap;
+    // A beam at least as wide as the dataset must degenerate to the
+    // exact result set on any *connected* graph: the pool can hold
+    // every point, so the walk only terminates once the frontier is
+    // exhausted, and the (dist, id) ordering ties out to the oracle.
+    run_prop(
+        "wide-beam-exact",
+        PropConfig { cases: 12, max_size: 90, ..Default::default() },
+        |rng, size| {
+            let n = 8 + size;
+            let d = 2 + rng.below(6);
+            let mut m = Matrix::zeros(n, d);
+            for i in 0..n {
+                for x in m.row_mut(i).iter_mut() {
+                    *x = rng.below(17) as f32 - 8.0; // small integers
+                }
+            }
+            // Random directed lists, symmetrized, plus a chain backbone
+            // so every point is reachable from any seed.
+            let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+            let fan = 2 + rng.below(4);
+            for i in 0..n {
+                for _ in 0..fan {
+                    let j = rng.below(n);
+                    if j != i {
+                        adj[i].push(j as u32);
+                        adj[j].push(i as u32);
+                    }
+                }
+            }
+            for i in 0..n - 1 {
+                adj[i].push(i as u32 + 1);
+                adj[i + 1].push(i as u32);
+            }
+            let mut knn = KnnGraph::empty(n, n);
+            for i in 0..n {
+                adj[i].sort_unstable();
+                adj[i].dedup();
+                let mut list: Vec<(u32, f32)> = adj[i]
+                    .iter()
+                    .map(|&j| (j, int_sqdist(m.row(i), m.row(j as usize))))
+                    .collect();
+                list.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+                knn.neighbors[i] = list;
+            }
+            let index = SearchIndex::build(&m, &knn, None, 1 + rng.below(8));
+            let k = 1 + rng.below(n);
+            let qi = rng.below(n);
+            let mut q: Vec<f32> = m.row(qi).to_vec();
+            for x in q.iter_mut() {
+                *x += rng.below(5) as f32 - 2.0;
+            }
+            let (got, stats) = search_nearest(&q, &m, &knn, &index, k, n);
+            if stats.fallback {
+                return Err("wide beam fell back on a connected graph".into());
+            }
+            let mut dists = Vec::new();
+            let mut heap = BoundedMaxHeap::new(k);
+            let want = nearest_k(&q, &m, k, &mut dists, &mut heap);
+            if got != want {
+                return Err(format!("n={n} d={d} k={k}: graph {got:?} vs exact {want:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_disconnected_query_falls_back_never_short() {
+    use largevis::knn::search::{search_nearest, SearchIndex};
+    use largevis::knn::KnnGraph;
+    // Points the walk cannot reach (edgeless component, fewer seeds
+    // than isolated points) must trigger the exact fallback — the
+    // caller always gets min(k, n) results, never a silently truncated
+    // set, and the stats say the oracle answered.
+    run_prop(
+        "disconnected-fallback",
+        PropConfig { cases: 10, max_size: 60, ..Default::default() },
+        |rng, size| {
+            let na = 8 + size; // chained (connected) component
+            let nb = 6 + rng.below(10); // edgeless points, far away
+            let n = na + nb;
+            let d = 3;
+            let mut m = Matrix::zeros(n, d);
+            for i in 0..n {
+                let off = if i < na { 0.0 } else { 100.0 };
+                for x in m.row_mut(i).iter_mut() {
+                    *x = rng.below(9) as f32 - 4.0 + off;
+                }
+            }
+            let mut knn = KnnGraph::empty(n, 2);
+            for i in 0..na - 1 {
+                let dij = int_sqdist(m.row(i), m.row(i + 1));
+                knn.neighbors[i].push((i as u32 + 1, dij));
+                knn.neighbors[i + 1].push((i as u32, dij));
+            }
+            for list in knn.neighbors.iter_mut() {
+                list.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            }
+            // Strictly fewer seeds than isolated points: whatever the
+            // seed picker does, some point stays unreachable.
+            let n_seeds = 1 + rng.below(nb - 1);
+            let index = SearchIndex::build(&m, &knn, None, n_seeds);
+            let q: Vec<f32> = m.row(rng.below(n)).to_vec();
+            let (got, stats) = search_nearest(&q, &m, &knn, &index, n, 8);
+            if !stats.fallback {
+                return Err(format!("na={na} nb={nb} seeds={n_seeds}: no fallback"));
+            }
+            if got.len() != n {
+                return Err(format!("silently short result: {} of {n}", got.len()));
+            }
+            let mut prev = (0u32, f32::NEG_INFINITY);
+            let mut seen = std::collections::HashSet::new();
+            for &(id, dist) in &got {
+                if !seen.insert(id) {
+                    return Err(format!("duplicate id {id}"));
+                }
+                if dist < prev.1 {
+                    return Err("result not sorted".into());
+                }
+                prev = (id, dist);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn disconnected_server_query_counts_fallback_metric() {
+    use largevis::config::{SearchMode, ServeConfig};
+    use largevis::coordinator::pipeline::CheckpointPaths;
+    use largevis::data::formats::{binary, checkpoint};
+    use largevis::kernels::nearest_k;
+    use largevis::knn::KnnGraph;
+    use largevis::serve::ServerState;
+    use largevis::util::heap::BoundedMaxHeap;
+    // End-to-end flavor of the fallback property: a served snapshot
+    // whose graph strands points still answers /knn-style queries
+    // exactly, and the miss is observable in serve.search_fallbacks.
+    let dir = std::env::temp_dir()
+        .join(format!("largevis_prop_fallback_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let paths = CheckpointPaths::in_dir(&dir);
+    let (na, nb, d) = (30usize, 10usize, 3usize);
+    let n = na + nb;
+    let mut data = Matrix::zeros(n, d);
+    for i in 0..n {
+        let off = if i < na { 0.0 } else { 50.0 };
+        for (j, x) in data.row_mut(i).iter_mut().enumerate() {
+            *x = (i * d + j) as f32 * 0.125 + off;
+        }
+    }
+    let mut layout = Matrix::zeros(n, 2);
+    for i in 0..n {
+        layout.row_mut(i)[0] = i as f32;
+    }
+    let mut knn = KnnGraph::empty(n, 2);
+    for i in 0..na {
+        // Symmetric ring over the connected component only; the last
+        // nb points are edgeless.
+        let j = (i + 1) % na;
+        let dij = int_sqdist(data.row(i), data.row(j));
+        knn.neighbors[i].push((j as u32, dij));
+        knn.neighbors[j].push((i as u32, dij));
+    }
+    for list in knn.neighbors.iter_mut() {
+        list.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+    }
+    binary::write_binary(&paths.data, &data).unwrap();
+    binary::write_binary(&paths.layout, &layout).unwrap();
+    checkpoint::write_knn(&paths.knn, &knn).unwrap();
+    std::fs::write(&paths.meta, "prop-fallback").unwrap();
+
+    let cfg = ServeConfig { checkpoints: dir.clone(), search_seeds: 4, ..Default::default() };
+    assert_eq!(cfg.search, SearchMode::Graph);
+    let st = ServerState::load(cfg).unwrap();
+    let snap = st.snapshot();
+    let q: Vec<f32> = data.row(na + 3).to_vec(); // stranded-component point
+    let got = st.query_knn(&snap, &q, n);
+    let mut dists = Vec::new();
+    let mut heap = BoundedMaxHeap::new(n);
+    let want = nearest_k(&q, &snap.data, n, &mut dists, &mut heap);
+    assert_eq!(got, want, "fallback must reproduce the exact oracle");
+    assert_eq!(got.len(), n, "no silent truncation");
+    {
+        let m = st.metrics.lock().unwrap();
+        assert_eq!(m.get("serve.search_queries"), Some(1.0));
+        assert_eq!(m.get("serve.search_fallbacks"), Some(1.0));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,187 @@
+//! Recall@k harness for the navigable-graph query search
+//! (`knn::search`) against the exact `kernels::nearest_k` oracle.
+//!
+//! Sweeps N x d x k over the synthetic gaussian-mixture generator,
+//! asserting the two promises the serving path relies on:
+//!
+//! * **accuracy** — recall@10 >= 0.95 for every (N, d) config, and
+//! * **sub-linearity** — the walk's visited count barely grows with N
+//!   (visited at the large N under 3x the small N, while scoring well
+//!   under 10% of N per query at the large config).
+//!
+//! Scale: the full sweep (10k/50k points) runs under `--release` (the
+//! CI recall-gate leg); plain debug `cargo test` shrinks N by
+//! `LARGEVIS_RECALL_SCALE` (default 0.04) so tier-1 stays fast. A
+//! machine-readable summary is written to
+//! `$LARGEVIS_RECALL_DIR/search_recall.json` (default `target/`),
+//! mirroring the fault-coverage artifacts.
+
+use largevis::data::synth::gaussian_mixture;
+use largevis::kernels::nearest_k;
+use largevis::knn::explore::{largevis_knn, LargeVisKnnConfig};
+use largevis::knn::search::{search_nearest, SearchIndex};
+use largevis::util::heap::BoundedMaxHeap;
+use std::fmt::Write as _;
+
+const GRAPH_K: usize = 16;
+const N_SEEDS: usize = 64;
+const BEAM: usize = 64;
+const QUERIES: usize = 100;
+
+fn scale() -> f64 {
+    if let Ok(s) = std::env::var("LARGEVIS_RECALL_SCALE") {
+        return s.parse().expect("LARGEVIS_RECALL_SCALE must be a float");
+    }
+    if cfg!(debug_assertions) {
+        0.04
+    } else {
+        1.0
+    }
+}
+
+/// One (n, d, k) sweep cell.
+struct Cell {
+    n: usize,
+    d: usize,
+    k: usize,
+    recall: f64,
+    mean_visited: f64,
+    mean_scored: f64,
+    fallbacks: u64,
+    queries: usize,
+}
+
+/// Write the JSON artifact the CI recall gate uploads.
+fn write_report(cells: &[Cell], scale: f64) {
+    let dir = std::env::var("LARGEVIS_RECALL_DIR").unwrap_or_else(|_| "target".into());
+    if std::fs::create_dir_all(&dir).is_err() {
+        return;
+    }
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "{{\n  \"scale\": {scale},\n  \"beam_width\": {BEAM},\n  \"search_seeds\": {N_SEEDS},\n  \"configs\": ["
+    );
+    for (i, c) in cells.iter().enumerate() {
+        let _ = write!(
+            s,
+            "{}\n    {{\"n\": {}, \"d\": {}, \"k\": {}, \"recall\": {:.4}, \
+             \"mean_visited\": {:.1}, \"mean_scored\": {:.1}, \
+             \"fallbacks\": {}, \"queries\": {}}}",
+            if i == 0 { "" } else { "," },
+            c.n,
+            c.d,
+            c.k,
+            c.recall,
+            c.mean_visited,
+            c.mean_scored,
+            c.fallbacks,
+            c.queries,
+        );
+    }
+    s.push_str("\n  ]\n}\n");
+    let path = format!("{dir}/search_recall.json");
+    if std::fs::write(&path, &s).is_ok() {
+        eprintln!("[search_recall] wrote {path}");
+    }
+}
+
+#[test]
+fn graph_search_recall_and_sublinear_visited() {
+    let scale = scale();
+    let base_ns = [10_000usize, 50_000];
+    let ds = [16usize, 128];
+    let ks = [5usize, 10, 20];
+    let ns: Vec<usize> =
+        base_ns.iter().map(|&n| ((n as f64 * scale) as usize).max(200)).collect();
+    // The sub-linearity and scoring-fraction bounds only mean anything
+    // once the large config is genuinely large; debug-scale runs keep
+    // the recall gate but skip them.
+    let full = ns[1] >= 10_000;
+    let mut cells: Vec<Cell> = Vec::new();
+
+    for &d in &ds {
+        let mut visited_at_10 = Vec::new();
+        for &n in &ns {
+            let (data, _labels) =
+                gaussian_mixture(n, d, 10, 0.5, 0xa11ce ^ (n as u64) ^ ((d as u64) << 32));
+            let kcfg = LargeVisKnnConfig { iters: 2, ..Default::default() };
+            let knn = largevis_knn(&data, GRAPH_K, &kcfg);
+            let index = SearchIndex::build(&data, &knn, None, N_SEEDS);
+            let nq = QUERIES.min(n);
+            let kmax = *ks.iter().max().unwrap();
+
+            // Exact oracle once per query at the largest k; the
+            // (dist, id) order makes every smaller k a prefix.
+            let mut dists = Vec::new();
+            let mut heap = BoundedMaxHeap::new(kmax);
+            let oracles: Vec<Vec<(u32, f32)>> = (0..nq)
+                .map(|i| {
+                    let q = data.row(i * n / nq);
+                    nearest_k(q, &data, kmax, &mut dists, &mut heap)
+                })
+                .collect();
+
+            for &k in &ks {
+                let (mut hit, mut visited, mut scored, mut fallbacks) = (0u64, 0u64, 0u64, 0u64);
+                for (i, oracle) in oracles.iter().enumerate() {
+                    let q = data.row(i * n / nq);
+                    let (got, stats) = search_nearest(q, &data, &knn, &index, k, BEAM);
+                    assert_eq!(got.len(), k.min(n), "short result at n={n} d={d} k={k}");
+                    let truth: std::collections::HashSet<u32> =
+                        oracle[..k].iter().map(|&(id, _)| id).collect();
+                    hit += got.iter().filter(|&&(id, _)| truth.contains(&id)).count() as u64;
+                    visited += stats.visited;
+                    scored += stats.scored;
+                    fallbacks += stats.fallback as u64;
+                }
+                let cell = Cell {
+                    n,
+                    d,
+                    k,
+                    recall: hit as f64 / (nq * k) as f64,
+                    mean_visited: visited as f64 / nq as f64,
+                    mean_scored: scored as f64 / nq as f64,
+                    fallbacks,
+                    queries: nq,
+                };
+                eprintln!(
+                    "[search_recall] n={} d={} k={}: recall {:.4}, visited {:.0}, \
+                     scored {:.0}, fallbacks {}",
+                    cell.n, cell.d, cell.k, cell.recall, cell.mean_visited, cell.mean_scored,
+                    cell.fallbacks,
+                );
+                if k == 10 {
+                    visited_at_10.push(cell.mean_visited);
+                    assert!(
+                        cell.recall >= 0.95,
+                        "recall@10 = {:.4} < 0.95 at n={} d={}",
+                        cell.recall,
+                        n,
+                        d
+                    );
+                }
+                if full && n == ns[1] {
+                    assert!(
+                        cell.mean_scored < 0.1 * n as f64,
+                        "graph walk scored {:.0} >= 10% of n={n} (d={d} k={k})",
+                        cell.mean_scored
+                    );
+                }
+                cells.push(cell);
+            }
+        }
+        if full {
+            assert!(
+                visited_at_10[1] < 3.0 * visited_at_10[0],
+                "visited not sub-linear at d={d}: {:.0} (n={}) vs {:.0} (n={})",
+                visited_at_10[1],
+                ns[1],
+                visited_at_10[0],
+                ns[0]
+            );
+        }
+    }
+
+    write_report(&cells, scale);
+}

@@ -1,12 +1,15 @@
 //! Concurrency fuzz test for the live (mutable) layout server:
 //! interleave `POST /insert`/`/insert_batch` writers with
-//! `/knn`+`/viewport`+`/healthz` readers and assert every response is
-//! internally consistent with a single epoch — no torn layout/index
-//! reads — while the server keeps answering lock-free. Then simulate a
-//! restart and assert the WAL recovers every inserted point
-//! bit-identically (data *and* spliced KNN graph).
+//! `/knn`+`/viewport`+`/healthz` readers — the `/knn` readers run in
+//! the default *graph* search mode, so the beam walk is fuzzed against
+//! concurrent graph splices — and assert every response is internally
+//! consistent with a single epoch — no torn layout/index reads — while
+//! the server keeps answering lock-free. Freshly-inserted points must
+//! be findable through the graph walk (in-edge splices) within one
+//! refine pass. Then simulate a restart and assert the WAL recovers
+//! every inserted point bit-identically (data *and* spliced KNN graph).
 
-use largevis::config::{PipelineConfig, ServeConfig};
+use largevis::config::{PipelineConfig, SearchMode, ServeConfig};
 use largevis::coordinator::{run_pipeline, CheckpointPaths};
 use largevis::serve::{Server, ServerState};
 use largevis::util::json::Json;
@@ -79,6 +82,9 @@ fn concurrent_inserts_epoch_consistency_and_wal_recovery() {
         grid: 32,
         ..Default::default()
     };
+    // The fuzz exercises the navigable-graph query path: readers below
+    // issue `/knn` through the beam walk while writers splice the graph.
+    assert_eq!(cfg.search, SearchMode::Graph, "graph search must be the serving default");
     let state = ServerState::load(cfg.clone()).expect("load server state");
     let server = Server::bind(state).expect("bind");
     let addr = server.local_addr().unwrap();
@@ -228,9 +234,53 @@ fn concurrent_inserts_epoch_consistency_and_wal_recovery() {
     assert_eq!(ids[0] as usize, marker_id, "marker point not its own nearest neighbor");
     assert_eq!(dists[0], 0.0);
 
+    // --- fresh inserts stay findable through the graph walk within
+    //     one refine pass: insert one more probe point (guaranteeing
+    //     the refiner has pending work), wait for the pass that
+    //     consumes it, then re-query inserted points ---
+    let refine_passes = |metrics: &Json| -> f64 {
+        metrics.get("refine.passes").map(as_f64).unwrap_or(0.0)
+    };
+    let (_, m0) = request_json(addr, "GET", "/metrics", None);
+    let passes0 = refine_passes(&m0);
+    let probe_pt: Vec<f32> = (0..d).map(|i| -17.25 - i as f32).collect();
+    let body = format!("{{\"point\":{}}}", json_row(&probe_pt));
+    let (status, _) = request_json(addr, "POST", "/insert", Some(&body));
+    assert_eq!(status, 200, "refine-probe insert failed");
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let (_, m) = request_json(addr, "GET", "/metrics", None);
+        if refine_passes(&m) > passes0 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "refine pass never completed");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let probe_snap = shared.snapshot();
+    for probe in (n_base..probe_snap.data.n()).step_by(5).chain([marker_id]) {
+        let q: Vec<f32> = probe_snap.data.row(probe).to_vec();
+        let body = format!("{{\"point\":{},\"k\":1}}", json_row(&q));
+        let (status, j) = request_json(addr, "POST", "/knn", Some(&body));
+        assert_eq!(status, 200);
+        let dist0 = match j.get("dists") {
+            Some(Json::Arr(a)) => as_f64(&a[0]),
+            other => panic!("dists: {other:?}"),
+        };
+        // Not necessarily `probe` itself (concurrent writers can insert
+        // bit-identical rows), but some zero-distance point must be
+        // reachable — an insert the walk cannot see would surface here
+        // as a strictly positive distance.
+        assert_eq!(
+            dist0, 0.0,
+            "inserted point {probe} not findable via the graph walk after a refine pass"
+        );
+    }
+    drop(probe_snap);
+
     // --- the full set is visible through the spatial index ---
     let final_snap = shared.snapshot();
-    assert_eq!(final_snap.data.n(), n_base + total_inserted + 1);
+    // total_inserted batch rows + the marker + the refine probe.
+    assert_eq!(final_snap.data.n(), n_base + total_inserted + 2);
     let (status, svg) = request(
         addr,
         "GET",
@@ -252,6 +302,16 @@ fn concurrent_inserts_epoch_consistency_and_wal_recovery() {
         as_f64(metrics.get("insert.points").unwrap()) as usize >= total_inserted + 1,
         "insert.points metric missing traffic"
     );
+    // Graph-mode accounting: every insert's base-neighbor lookup and
+    // every `/knn` above went through the beam walk, so the search
+    // counters must have moved (and the fallback counter must exist —
+    // a fallback is legal, a missing counter is not).
+    assert!(
+        as_f64(metrics.get("serve.search_queries").unwrap()) as usize >= total_inserted + 2,
+        "serve.search_queries missing graph-walk traffic"
+    );
+    assert!(as_f64(metrics.get("serve.search_visited").unwrap()) > 0.0);
+    assert!(metrics.get("serve.search_fallbacks").is_some(), "fallback counter missing");
 
     // The base prefix of the layout never moves, no matter how much
     // insert/refine traffic happened.
@@ -285,8 +345,9 @@ fn concurrent_inserts_epoch_consistency_and_wal_recovery() {
         snap.knn.neighbors, pre_knn.neighbors,
         "WAL replay produced a different spliced KNN graph"
     );
-    // One recovered epoch per WAL batch (insert request).
-    let expected_batches = (writers * batches_per_writer + 1) as u64;
+    // One recovered epoch per WAL batch (insert request): the writer
+    // batches, the marker, and the refine probe.
+    let expected_batches = (writers * batches_per_writer + 2) as u64;
     assert_eq!(snap.epoch, expected_batches);
     assert!(snap.layout.as_slice().iter().all(|v| v.is_finite()));
     assert_eq!(snap.layout.n(), snap.data.n());
