@@ -58,6 +58,31 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // Flat SGD pinned to one thread: together with the row above this
+    // records the single- vs multi-thread throughput of the atomic
+    // (relaxed per-f32) Hogwild loop, so any regression from the
+    // AtomicU32 layout representation would show up here.
+    {
+        let cfg = LargeVisConfig { threads: 1, ..base.clone() };
+        let mut y = init_layout(graph.n(), cfg.dim, cfg.seed);
+        let rep = sgd::optimize(&graph, &mut y, &cfg);
+        let obj = exact_objective(&y, graph.edges(), cfg.gamma, cfg.prob_fn);
+        let tput = format!("{:.0}", rep.throughput());
+        table.row(&["flat-1thread".into(), "samples/s".into(), tput]);
+        table.row(&["flat-1thread".into(), "objective".into(), format!("{obj:.1}")]);
+        json_rows.push(format!(
+            concat!(
+                "{{\"mode\":\"flat\",\"threads\":1,\"samples_per_vertex\":{},\"samples\":{},",
+                "\"secs\":{:.4},\"samples_per_sec\":{:.0},\"objective\":{:.2}}}"
+            ),
+            FLAT_SPV,
+            rep.samples,
+            rep.seconds,
+            rep.throughput(),
+            obj
+        ));
+    }
+
     // Multilevel coarse-to-fine at half the fine-level budget.
     {
         let cfg = LargeVisConfig { samples_per_vertex: FLAT_SPV / 2, ..base.clone() };

@@ -286,7 +286,12 @@ pub fn run_pipeline(cfg: &PipelineConfig) -> Result<PipelineOutput> {
     // (skipped when resuming at `layout`, which reloads the CSR
     // checkpoint).
     let graph: CsrGraph = if resume <= Stage::Weights {
-        let knn = knn.as_ref().expect("knn graph available before weights stage");
+        let Some(knn) = knn.as_ref() else {
+            // Unreachable by stage ordering (resume <= Weights implies
+            // the KNN stage ran or its checkpoint loaded), but a staging
+            // bug must surface as an error, not a panic.
+            anyhow::bail!("internal: weights stage reached without a KNN graph");
+        };
         let t = Timer::start("weights");
         let graph = weighted_graph(knn, &cfg.weights);
         metrics.set("weights.secs", t.report());

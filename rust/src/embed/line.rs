@@ -60,7 +60,12 @@ pub(crate) struct SharedParams {
     len: usize,
 }
 
+// SAFETY: `ptr`/`len` come from an exclusive borrow that outlives every
+// worker (`spawn_workers` joins before `train_line` returns), so the
+// pointer stays valid for the whole Hogwild phase; cross-thread aliasing
+// through it is the documented tradeoff above.
 unsafe impl Sync for SharedParams {}
+// SAFETY: same argument as `Sync` — the buffer outlives all workers.
 unsafe impl Send for SharedParams {}
 
 impl SharedParams {
@@ -77,7 +82,10 @@ impl SharedParams {
     #[allow(clippy::mut_from_ref)]
     pub(crate) unsafe fn row(&self, v: usize, dim: usize) -> &mut [f32] {
         debug_assert!((v + 1) * dim <= self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(v * dim), dim)
+        // SAFETY: the caller contract keeps `v*dim + dim <= len`, so the
+        // range is in-bounds of the buffer `ptr` was derived from; the
+        // aliasing `&mut` is the accepted Hogwild exception (type docs).
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(v * dim), dim) }
     }
 }
 
@@ -126,8 +134,12 @@ pub fn train_line(n: usize, edges: &[(u32, u32, f32)], cfg: &LineConfig) -> Line
         for s in 0..my_samples {
             // Learning-rate schedule ρ_t = ρ0 (1 - t/T), floored.
             if s % 1024 == 0 {
+                // ordering: Relaxed — `progress` only drives the
+                // statistical learning-rate decay; it publishes no
+                // memory and tolerates arbitrary skew.
                 progress.fetch_add(1024, std::sync::atomic::Ordering::Relaxed);
             }
+            // ordering: Relaxed — see the fetch_add above.
             let t = progress.load(std::sync::atomic::Ordering::Relaxed).min(total);
             let rho = (rho0 * (1.0 - t as f32 / total as f32)).max(rho0 * 1e-4);
 
@@ -150,6 +162,8 @@ pub fn train_line(n: usize, edges: &[(u32, u32, f32)], cfg: &LineConfig) -> Line
                     }
                     (neg, 0.0f32)
                 };
+                // SAFETY: `target` is j or a negative draw, both < n;
+                // row length is dim, so the range stays in-bounds.
                 let vt = unsafe { shared.row(target, dim) };
                 let score: f32 = vi.iter().zip(vt.iter()).map(|(a, b)| a * b).sum();
                 let sig = 1.0 / (1.0 + (-score).exp());

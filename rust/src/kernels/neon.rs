@@ -40,116 +40,136 @@ fn sqdist_x4_neon(q: &[f32], rows: &[f32], d: usize) -> [f32; 4] {
 
 #[target_feature(enable = "neon")]
 unsafe fn sqdist_neon_impl(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len();
-    let pa = a.as_ptr();
-    let pb = b.as_ptr();
-    let mut acc0 = vdupq_n_f32(0.0);
-    let mut acc1 = vdupq_n_f32(0.0);
-    let mut i = 0usize;
-    while i + 8 <= n {
-        let d0 = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
-        acc0 = vfmaq_f32(acc0, d0, d0);
-        let d1 = vsubq_f32(vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
-        acc1 = vfmaq_f32(acc1, d1, d1);
-        i += 8;
+    // SAFETY: equal lengths asserted by the wrapper; every vector load
+    // is guarded by `i + lanes <= n` and the scalar tail by `i < n`;
+    // NEON is baseline on aarch64.
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d0 = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            acc0 = vfmaq_f32(acc0, d0, d0);
+            let d1 = vsubq_f32(vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+            acc1 = vfmaq_f32(acc1, d1, d1);
+            i += 8;
+        }
+        if i + 4 <= n {
+            let d = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            acc0 = vfmaq_f32(acc0, d, d);
+            i += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+            s += d * d;
+            i += 1;
+        }
+        s
     }
-    if i + 4 <= n {
-        let d = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
-        acc0 = vfmaq_f32(acc0, d, d);
-        i += 4;
-    }
-    let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
-    while i < n {
-        let d = *a.get_unchecked(i) - *b.get_unchecked(i);
-        s += d * d;
-        i += 1;
-    }
-    s
 }
 
 #[target_feature(enable = "neon")]
 unsafe fn sqdist_bounded_neon_impl(a: &[f32], b: &[f32], bound: f32) -> f32 {
-    let n = a.len();
-    let pa = a.as_ptr();
-    let pb = b.as_ptr();
-    let mut s = 0f32;
-    let mut i = 0usize;
-    // Same 32-lane early-exit blocking as the scalar reference.
-    while i + 32 <= n {
-        let mut acc = vdupq_n_f32(0.0);
-        for c in 0..8 {
-            let d = vsubq_f32(vld1q_f32(pa.add(i + c * 4)), vld1q_f32(pb.add(i + c * 4)));
-            acc = vfmaq_f32(acc, d, d);
+    // SAFETY: equal lengths asserted by the wrapper; loads guarded by
+    // `i + lanes <= n`; NEON is baseline on aarch64.
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut s = 0f32;
+        let mut i = 0usize;
+        // Same 32-lane early-exit blocking as the scalar reference.
+        while i + 32 <= n {
+            let mut acc = vdupq_n_f32(0.0);
+            for c in 0..8 {
+                let d = vsubq_f32(vld1q_f32(pa.add(i + c * 4)), vld1q_f32(pb.add(i + c * 4)));
+                acc = vfmaq_f32(acc, d, d);
+            }
+            s += vaddvq_f32(acc);
+            i += 32;
+            if s > bound {
+                return s;
+            }
         }
-        s += vaddvq_f32(acc);
-        i += 32;
-        if s > bound {
-            return s;
+        while i + 4 <= n {
+            let d = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            s += vaddvq_f32(vmulq_f32(d, d));
+            i += 4;
         }
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+            s += d * d;
+            i += 1;
+        }
+        s
     }
-    while i + 4 <= n {
-        let d = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
-        s += vaddvq_f32(vmulq_f32(d, d));
-        i += 4;
-    }
-    while i < n {
-        let d = *a.get_unchecked(i) - *b.get_unchecked(i);
-        s += d * d;
-        i += 1;
-    }
-    s
 }
 
 #[target_feature(enable = "neon")]
 unsafe fn dot_neon_impl(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len();
-    let pa = a.as_ptr();
-    let pb = b.as_ptr();
-    let mut acc0 = vdupq_n_f32(0.0);
-    let mut acc1 = vdupq_n_f32(0.0);
-    let mut i = 0usize;
-    while i + 8 <= n {
-        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
-        acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
-        i += 8;
+    // SAFETY: equal lengths asserted by the wrapper; loads guarded by
+    // `i + lanes <= n`; NEON is baseline on aarch64.
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+            i += 8;
+        }
+        if i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            i += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            s += *a.get_unchecked(i) * *b.get_unchecked(i);
+            i += 1;
+        }
+        s
     }
-    if i + 4 <= n {
-        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
-        i += 4;
-    }
-    let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
-    while i < n {
-        s += *a.get_unchecked(i) * *b.get_unchecked(i);
-        i += 1;
-    }
-    s
 }
 
 #[target_feature(enable = "neon")]
 unsafe fn sqdist_x4_neon_impl(q: &[f32], rows: &[f32], d: usize) -> [f32; 4] {
-    let pq = q.as_ptr();
-    let pr = rows.as_ptr();
-    let mut acc = [vdupq_n_f32(0.0); 4];
-    let mut i = 0usize;
-    while i + 4 <= d {
-        // One query load amortized across the 4 candidate rows.
-        let vq = vld1q_f32(pq.add(i));
-        for (r, a) in acc.iter_mut().enumerate() {
-            let diff = vsubq_f32(vq, vld1q_f32(pr.add(r * d + i)));
-            *a = vfmaq_f32(*a, diff, diff);
+    // SAFETY: the wrapper asserts `q.len() == d` and
+    // `rows.len() >= 4 * d`, so `r * d + i + 4 <= 4 * d` holds for
+    // every vector load (r < 4, i + 4 <= d); the scalar tail is
+    // likewise bounded; NEON is baseline on aarch64.
+    unsafe {
+        let pq = q.as_ptr();
+        let pr = rows.as_ptr();
+        let mut acc = [vdupq_n_f32(0.0); 4];
+        let mut i = 0usize;
+        while i + 4 <= d {
+            // One query load amortized across the 4 candidate rows.
+            let vq = vld1q_f32(pq.add(i));
+            for (r, a) in acc.iter_mut().enumerate() {
+                let diff = vsubq_f32(vq, vld1q_f32(pr.add(r * d + i)));
+                *a = vfmaq_f32(*a, diff, diff);
+            }
+            i += 4;
         }
-        i += 4;
-    }
-    let mut out = [vaddvq_f32(acc[0]), vaddvq_f32(acc[1]), vaddvq_f32(acc[2]), vaddvq_f32(acc[3])];
-    while i < d {
-        let qv = *q.get_unchecked(i);
-        for (r, o) in out.iter_mut().enumerate() {
-            let dv = qv - *rows.get_unchecked(r * d + i);
-            *o += dv * dv;
+        let mut out =
+            [vaddvq_f32(acc[0]), vaddvq_f32(acc[1]), vaddvq_f32(acc[2]), vaddvq_f32(acc[3])];
+        while i < d {
+            let qv = *q.get_unchecked(i);
+            for (r, o) in out.iter_mut().enumerate() {
+                let dv = qv - *rows.get_unchecked(r * d + i);
+                *o += dv * dv;
+            }
+            i += 1;
         }
-        i += 1;
+        out
     }
-    out
 }
 
 #[cfg(test)]

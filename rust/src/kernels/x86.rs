@@ -62,127 +62,163 @@ fn sqdist_x4_avx2(q: &[f32], rows: &[f32], d: usize) -> [f32; 4] {
 #[target_feature(enable = "avx")]
 unsafe fn hsum256(v: __m256) -> f32 {
     let mut lanes = [0f32; 8];
-    _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+    // SAFETY: `lanes` is a properly aligned 8-float buffer and the
+    // caller (a target_feature fn) established avx availability.
+    unsafe {
+        _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+    }
     ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
         + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]))
 }
 
 #[target_feature(enable = "avx2,fma")]
 unsafe fn sqdist_avx2_impl(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len();
-    let pa = a.as_ptr();
-    let pb = b.as_ptr();
-    let mut acc0 = _mm256_setzero_ps();
-    let mut acc1 = _mm256_setzero_ps();
-    let mut i = 0usize;
-    while i + 16 <= n {
-        let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
-        acc0 = _mm256_fmadd_ps(d0, d0, acc0);
-        let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
-        acc1 = _mm256_fmadd_ps(d1, d1, acc1);
-        i += 16;
+    // SAFETY: the safe wrappers assert `a.len() == b.len()` before
+    // entering; every vector load reads `i..i+8` only after the
+    // `i + lanes <= n` guard, the scalar tail uses `i < n`, and the
+    // target features were verified by the dispatcher.
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+            let d1 =
+                _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
+            acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            acc0 = _mm256_fmadd_ps(d, d, acc0);
+            i += 8;
+        }
+        let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+            s += d * d;
+            i += 1;
+        }
+        s
     }
-    if i + 8 <= n {
-        let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
-        acc0 = _mm256_fmadd_ps(d, d, acc0);
-        i += 8;
-    }
-    let mut s = hsum256(_mm256_add_ps(acc0, acc1));
-    while i < n {
-        let d = *a.get_unchecked(i) - *b.get_unchecked(i);
-        s += d * d;
-        i += 1;
-    }
-    s
 }
 
 #[target_feature(enable = "avx2,fma")]
 unsafe fn sqdist_bounded_avx2_impl(a: &[f32], b: &[f32], bound: f32) -> f32 {
-    let n = a.len();
-    let pa = a.as_ptr();
-    let pb = b.as_ptr();
-    let mut s = 0f32;
-    let mut i = 0usize;
-    // Same 32-lane early-exit blocking as the scalar reference.
-    while i + 32 <= n {
-        let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
-        let mut acc = _mm256_mul_ps(d0, d0);
-        let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
-        acc = _mm256_fmadd_ps(d1, d1, acc);
-        let d2 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 16)), _mm256_loadu_ps(pb.add(i + 16)));
-        acc = _mm256_fmadd_ps(d2, d2, acc);
-        let d3 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 24)), _mm256_loadu_ps(pb.add(i + 24)));
-        acc = _mm256_fmadd_ps(d3, d3, acc);
-        s += hsum256(acc);
-        i += 32;
-        if s > bound {
-            return s;
+    // SAFETY: same bounds discipline as `sqdist_avx2_impl` — equal
+    // lengths asserted by the wrapper, every load guarded by
+    // `i + lanes <= n`, features verified by the dispatcher.
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut s = 0f32;
+        let mut i = 0usize;
+        // Same 32-lane early-exit blocking as the scalar reference.
+        while i + 32 <= n {
+            let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            let mut acc = _mm256_mul_ps(d0, d0);
+            let d1 =
+                _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
+            acc = _mm256_fmadd_ps(d1, d1, acc);
+            let d2 = _mm256_sub_ps(
+                _mm256_loadu_ps(pa.add(i + 16)),
+                _mm256_loadu_ps(pb.add(i + 16)),
+            );
+            acc = _mm256_fmadd_ps(d2, d2, acc);
+            let d3 = _mm256_sub_ps(
+                _mm256_loadu_ps(pa.add(i + 24)),
+                _mm256_loadu_ps(pb.add(i + 24)),
+            );
+            acc = _mm256_fmadd_ps(d3, d3, acc);
+            s += hsum256(acc);
+            i += 32;
+            if s > bound {
+                return s;
+            }
         }
+        while i + 8 <= n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            s += hsum256(_mm256_mul_ps(d, d));
+            i += 8;
+        }
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+            s += d * d;
+            i += 1;
+        }
+        s
     }
-    while i + 8 <= n {
-        let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
-        s += hsum256(_mm256_mul_ps(d, d));
-        i += 8;
-    }
-    while i < n {
-        let d = *a.get_unchecked(i) - *b.get_unchecked(i);
-        s += d * d;
-        i += 1;
-    }
-    s
 }
 
 #[target_feature(enable = "avx2,fma")]
 unsafe fn dot_avx2_impl(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len();
-    let pa = a.as_ptr();
-    let pb = b.as_ptr();
-    let mut acc0 = _mm256_setzero_ps();
-    let mut acc1 = _mm256_setzero_ps();
-    let mut i = 0usize;
-    while i + 16 <= n {
-        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
-        acc1 =
-            _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)), acc1);
-        i += 16;
+    // SAFETY: equal lengths asserted by the wrapper; loads guarded by
+    // `i + lanes <= n`; features verified by the dispatcher.
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 8)),
+                _mm256_loadu_ps(pb.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            i += 8;
+        }
+        let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s += *a.get_unchecked(i) * *b.get_unchecked(i);
+            i += 1;
+        }
+        s
     }
-    if i + 8 <= n {
-        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
-        i += 8;
-    }
-    let mut s = hsum256(_mm256_add_ps(acc0, acc1));
-    while i < n {
-        s += *a.get_unchecked(i) * *b.get_unchecked(i);
-        i += 1;
-    }
-    s
 }
 
 #[target_feature(enable = "avx2,fma")]
 unsafe fn sqdist_x4_avx2_impl(q: &[f32], rows: &[f32], d: usize) -> [f32; 4] {
-    let pq = q.as_ptr();
-    let pr = rows.as_ptr();
-    let mut acc = [_mm256_setzero_ps(); 4];
-    let mut i = 0usize;
-    while i + 8 <= d {
-        // One query load amortized across the 4 candidate rows.
-        let vq = _mm256_loadu_ps(pq.add(i));
-        for (r, a) in acc.iter_mut().enumerate() {
-            let diff = _mm256_sub_ps(vq, _mm256_loadu_ps(pr.add(r * d + i)));
-            *a = _mm256_fmadd_ps(diff, diff, *a);
+    // SAFETY: the wrapper asserts `q.len() == d` and
+    // `rows.len() >= 4 * d`, so `r * d + i + 8 <= 4 * d` holds for
+    // every vector load (r < 4, i + 8 <= d); the scalar tail is
+    // likewise bounded; features verified by the dispatcher.
+    unsafe {
+        let pq = q.as_ptr();
+        let pr = rows.as_ptr();
+        let mut acc = [_mm256_setzero_ps(); 4];
+        let mut i = 0usize;
+        while i + 8 <= d {
+            // One query load amortized across the 4 candidate rows.
+            let vq = _mm256_loadu_ps(pq.add(i));
+            for (r, a) in acc.iter_mut().enumerate() {
+                let diff = _mm256_sub_ps(vq, _mm256_loadu_ps(pr.add(r * d + i)));
+                *a = _mm256_fmadd_ps(diff, diff, *a);
+            }
+            i += 8;
         }
-        i += 8;
-    }
-    let mut out = [hsum256(acc[0]), hsum256(acc[1]), hsum256(acc[2]), hsum256(acc[3])];
-    while i < d {
-        let qv = *q.get_unchecked(i);
-        for (r, o) in out.iter_mut().enumerate() {
-            let dv = qv - *rows.get_unchecked(r * d + i);
-            *o += dv * dv;
+        let mut out = [hsum256(acc[0]), hsum256(acc[1]), hsum256(acc[2]), hsum256(acc[3])];
+        while i < d {
+            let qv = *q.get_unchecked(i);
+            for (r, o) in out.iter_mut().enumerate() {
+                let dv = qv - *rows.get_unchecked(r * d + i);
+                *o += dv * dv;
+            }
+            i += 1;
         }
-        i += 1;
+        out
     }
-    out
 }
 
 // ---------------------------------------------------------------- SSE2
@@ -214,124 +250,146 @@ fn sqdist_x4_sse2(q: &[f32], rows: &[f32], d: usize) -> [f32; 4] {
 #[inline]
 unsafe fn hsum128(v: __m128) -> f32 {
     let mut lanes = [0f32; 4];
-    _mm_storeu_ps(lanes.as_mut_ptr(), v);
+    // SAFETY: `lanes` is a valid 4-float buffer; SSE2 is baseline.
+    unsafe {
+        _mm_storeu_ps(lanes.as_mut_ptr(), v);
+    }
     (lanes[0] + lanes[2]) + (lanes[1] + lanes[3])
 }
 
 #[target_feature(enable = "sse2")]
 unsafe fn sqdist_sse2_impl(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len();
-    let pa = a.as_ptr();
-    let pb = b.as_ptr();
-    let mut acc0 = _mm_setzero_ps();
-    let mut acc1 = _mm_setzero_ps();
-    let mut i = 0usize;
-    while i + 8 <= n {
-        let d0 = _mm_sub_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i)));
-        acc0 = _mm_add_ps(acc0, _mm_mul_ps(d0, d0));
-        let d1 = _mm_sub_ps(_mm_loadu_ps(pa.add(i + 4)), _mm_loadu_ps(pb.add(i + 4)));
-        acc1 = _mm_add_ps(acc1, _mm_mul_ps(d1, d1));
-        i += 8;
+    // SAFETY: equal lengths asserted by the wrapper; every load is
+    // guarded by `i + lanes <= n`; SSE2 is baseline on x86-64.
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm_setzero_ps();
+        let mut acc1 = _mm_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d0 = _mm_sub_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i)));
+            acc0 = _mm_add_ps(acc0, _mm_mul_ps(d0, d0));
+            let d1 = _mm_sub_ps(_mm_loadu_ps(pa.add(i + 4)), _mm_loadu_ps(pb.add(i + 4)));
+            acc1 = _mm_add_ps(acc1, _mm_mul_ps(d1, d1));
+            i += 8;
+        }
+        if i + 4 <= n {
+            let d = _mm_sub_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i)));
+            acc0 = _mm_add_ps(acc0, _mm_mul_ps(d, d));
+            i += 4;
+        }
+        let mut s = hsum128(_mm_add_ps(acc0, acc1));
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+            s += d * d;
+            i += 1;
+        }
+        s
     }
-    if i + 4 <= n {
-        let d = _mm_sub_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i)));
-        acc0 = _mm_add_ps(acc0, _mm_mul_ps(d, d));
-        i += 4;
-    }
-    let mut s = hsum128(_mm_add_ps(acc0, acc1));
-    while i < n {
-        let d = *a.get_unchecked(i) - *b.get_unchecked(i);
-        s += d * d;
-        i += 1;
-    }
-    s
 }
 
 #[target_feature(enable = "sse2")]
 unsafe fn sqdist_bounded_sse2_impl(a: &[f32], b: &[f32], bound: f32) -> f32 {
-    let n = a.len();
-    let pa = a.as_ptr();
-    let pb = b.as_ptr();
-    let mut s = 0f32;
-    let mut i = 0usize;
-    // Same 32-lane early-exit blocking as the scalar reference.
-    while i + 32 <= n {
-        let mut acc = _mm_setzero_ps();
-        for c in 0..8 {
-            let d = _mm_sub_ps(_mm_loadu_ps(pa.add(i + c * 4)), _mm_loadu_ps(pb.add(i + c * 4)));
-            acc = _mm_add_ps(acc, _mm_mul_ps(d, d));
+    // SAFETY: equal lengths asserted by the wrapper; loads guarded by
+    // `i + lanes <= n`; SSE2 is baseline on x86-64.
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut s = 0f32;
+        let mut i = 0usize;
+        // Same 32-lane early-exit blocking as the scalar reference.
+        while i + 32 <= n {
+            let mut acc = _mm_setzero_ps();
+            for c in 0..8 {
+                let d =
+                    _mm_sub_ps(_mm_loadu_ps(pa.add(i + c * 4)), _mm_loadu_ps(pb.add(i + c * 4)));
+                acc = _mm_add_ps(acc, _mm_mul_ps(d, d));
+            }
+            s += hsum128(acc);
+            i += 32;
+            if s > bound {
+                return s;
+            }
         }
-        s += hsum128(acc);
-        i += 32;
-        if s > bound {
-            return s;
+        while i + 4 <= n {
+            let d = _mm_sub_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i)));
+            s += hsum128(_mm_mul_ps(d, d));
+            i += 4;
         }
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+            s += d * d;
+            i += 1;
+        }
+        s
     }
-    while i + 4 <= n {
-        let d = _mm_sub_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i)));
-        s += hsum128(_mm_mul_ps(d, d));
-        i += 4;
-    }
-    while i < n {
-        let d = *a.get_unchecked(i) - *b.get_unchecked(i);
-        s += d * d;
-        i += 1;
-    }
-    s
 }
 
 #[target_feature(enable = "sse2")]
 unsafe fn dot_sse2_impl(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len();
-    let pa = a.as_ptr();
-    let pb = b.as_ptr();
-    let mut acc0 = _mm_setzero_ps();
-    let mut acc1 = _mm_setzero_ps();
-    let mut i = 0usize;
-    while i + 8 <= n {
-        acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i))));
-        acc1 = _mm_add_ps(
-            acc1,
-            _mm_mul_ps(_mm_loadu_ps(pa.add(i + 4)), _mm_loadu_ps(pb.add(i + 4))),
-        );
-        i += 8;
+    // SAFETY: equal lengths asserted by the wrapper; loads guarded by
+    // `i + lanes <= n`; SSE2 is baseline on x86-64.
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm_setzero_ps();
+        let mut acc1 = _mm_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i))));
+            acc1 = _mm_add_ps(
+                acc1,
+                _mm_mul_ps(_mm_loadu_ps(pa.add(i + 4)), _mm_loadu_ps(pb.add(i + 4))),
+            );
+            i += 8;
+        }
+        if i + 4 <= n {
+            acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i))));
+            i += 4;
+        }
+        let mut s = hsum128(_mm_add_ps(acc0, acc1));
+        while i < n {
+            s += *a.get_unchecked(i) * *b.get_unchecked(i);
+            i += 1;
+        }
+        s
     }
-    if i + 4 <= n {
-        acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i))));
-        i += 4;
-    }
-    let mut s = hsum128(_mm_add_ps(acc0, acc1));
-    while i < n {
-        s += *a.get_unchecked(i) * *b.get_unchecked(i);
-        i += 1;
-    }
-    s
 }
 
 #[target_feature(enable = "sse2")]
 unsafe fn sqdist_x4_sse2_impl(q: &[f32], rows: &[f32], d: usize) -> [f32; 4] {
-    let pq = q.as_ptr();
-    let pr = rows.as_ptr();
-    let mut acc = [_mm_setzero_ps(); 4];
-    let mut i = 0usize;
-    while i + 4 <= d {
-        let vq = _mm_loadu_ps(pq.add(i));
-        for (r, a) in acc.iter_mut().enumerate() {
-            let diff = _mm_sub_ps(vq, _mm_loadu_ps(pr.add(r * d + i)));
-            *a = _mm_add_ps(*a, _mm_mul_ps(diff, diff));
+    // SAFETY: the wrapper asserts `q.len() == d` and
+    // `rows.len() >= 4 * d`, so `r * d + i + 4 <= 4 * d` holds for
+    // every vector load (r < 4, i + 4 <= d); the scalar tail is
+    // likewise bounded; SSE2 is baseline on x86-64.
+    unsafe {
+        let pq = q.as_ptr();
+        let pr = rows.as_ptr();
+        let mut acc = [_mm_setzero_ps(); 4];
+        let mut i = 0usize;
+        while i + 4 <= d {
+            let vq = _mm_loadu_ps(pq.add(i));
+            for (r, a) in acc.iter_mut().enumerate() {
+                let diff = _mm_sub_ps(vq, _mm_loadu_ps(pr.add(r * d + i)));
+                *a = _mm_add_ps(*a, _mm_mul_ps(diff, diff));
+            }
+            i += 4;
         }
-        i += 4;
-    }
-    let mut out = [hsum128(acc[0]), hsum128(acc[1]), hsum128(acc[2]), hsum128(acc[3])];
-    while i < d {
-        let qv = *q.get_unchecked(i);
-        for (r, o) in out.iter_mut().enumerate() {
-            let dv = qv - *rows.get_unchecked(r * d + i);
-            *o += dv * dv;
+        let mut out = [hsum128(acc[0]), hsum128(acc[1]), hsum128(acc[2]), hsum128(acc[3])];
+        while i < d {
+            let qv = *q.get_unchecked(i);
+            for (r, o) in out.iter_mut().enumerate() {
+                let dv = qv - *rows.get_unchecked(r * d + i);
+                *o += dv * dv;
+            }
+            i += 1;
         }
-        i += 1;
+        out
     }
-    out
 }
 
 #[cfg(test)]

@@ -123,9 +123,9 @@ impl SearchIndex {
             let g = CsrGraph::from_undirected(n, &pairs);
             let cfg = CoarsenConfig { min_coarse_size: n_seeds, ..CoarsenConfig::default() };
             let hierarchy = build_hierarchy(&g, &cfg);
-            if !hierarchy.is_empty() {
+            if let Some(coarsest) = hierarchy.last() {
                 let maps: Vec<Vec<u32>> = hierarchy.iter().map(|c| c.map.clone()).collect();
-                let seeds = centroid_seeds(data, &maps, hierarchy.last().unwrap().graph.n());
+                let seeds = centroid_seeds(data, &maps, coarsest.graph.n());
                 if !seeds.is_empty() {
                     return SearchIndex {
                         seeds: cap_seeds(seeds, n_seeds),

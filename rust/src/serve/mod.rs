@@ -119,7 +119,11 @@ impl ServerHandle {
     /// request or at the idle timeout), then the WAL is fsynced once
     /// more.
     pub fn shutdown(&self) {
-        self.stop.store(true, Ordering::SeqCst);
+        // ordering: Relaxed — `stop` is a pure termination flag read
+        // in loop conditions; the loopback connect below (and the
+        // condvar handoffs on the worker side) provide the wakeups,
+        // and no memory is published through the flag.
+        self.stop.store(true, Ordering::Relaxed);
         if let Some(mut addr) = self.addr {
             // An unspecified bind address (0.0.0.0) is not connectable;
             // wake via loopback on the same port.
@@ -215,7 +219,10 @@ impl Server {
                                 if let Some(s) = q.pop_front() {
                                     break Some(s);
                                 }
-                                if self.stop.load(Ordering::SeqCst) {
+                                // ordering: Relaxed — termination flag
+                                // only (see `ServerHandle::shutdown`);
+                                // the queue mutex orders the drain.
+                                if self.stop.load(Ordering::Relaxed) {
                                     break None;
                                 }
                                 q = adm.cv.wait(q).unwrap_or_else(|e| e.into_inner());
@@ -230,12 +237,16 @@ impl Server {
 
             // Acceptor loop (this thread owns the listener).
             loop {
-                if self.stop.load(Ordering::SeqCst) {
+                // ordering: Relaxed — termination flag only (see
+                // `ServerHandle::shutdown`).
+                if self.stop.load(Ordering::Relaxed) {
                     break;
                 }
                 match self.listener.accept() {
                     Ok((stream, _peer)) => {
-                        if self.stop.load(Ordering::SeqCst) {
+                        // ordering: Relaxed — as above; the shutdown
+                        // wake-up connection lands here.
+                        if self.stop.load(Ordering::Relaxed) {
                             break;
                         }
                         if self.state.inflight() >= max_inflight {
@@ -249,7 +260,8 @@ impl Server {
                         admission.cv.notify_one();
                     }
                     Err(_) => {
-                        if self.stop.load(Ordering::SeqCst) {
+                        // ordering: Relaxed — as above.
+                        if self.stop.load(Ordering::Relaxed) {
                             break;
                         }
                         // Transient accept errors (EMFILE, aborted
@@ -369,7 +381,10 @@ fn handle_connection(
                 http::Response::error(500, "internal handler panic")
             }
         };
-        let last = served == max_requests || req.wants_close || stop.load(Ordering::SeqCst);
+        // ordering: Relaxed — termination flag only; worst case the
+        // connection serves one more keep-alive request before the
+        // drain notices.
+        let last = served == max_requests || req.wants_close || stop.load(Ordering::Relaxed);
         if let Err(e) = resp.write_to(&mut writer, !last) {
             if matches!(
                 e.kind(),

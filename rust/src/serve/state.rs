@@ -457,7 +457,10 @@ impl ServerState {
     /// files, and count them in `serve.wal_corrupt_segments`.
     pub fn recover(&self) -> Result<()> {
         let mut w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
-        if self.ready.load(Ordering::SeqCst) {
+        // ordering: Acquire — pairs with the Release store at the end
+        // of this function; a second caller that observes true also
+        // sees the fully replayed state.
+        if self.ready.load(Ordering::Acquire) {
             return Ok(());
         }
         let d = w.inc.data.d();
@@ -513,29 +516,43 @@ impl ServerState {
         let epoch = recovered_batches;
         let snapshot = Arc::new(Self::snapshot_of(&w, epoch, self.base_n, self.n_classes));
         *self.snap.lock().unwrap_or_else(|e| e.into_inner()) = snapshot;
+        // ordering: Release — pairs with the Acquire in `epoch_hint`
+        // (same protocol as `publish`).
         self.epoch.store(epoch, Ordering::Release);
-        self.ready.store(true, Ordering::SeqCst);
+        // ordering: Release — pairs with the Acquire loads in
+        // `is_ready` and above: whoever observes true also sees the
+        // replayed snapshot and metrics written before this store.
+        self.ready.store(true, Ordering::Release);
         Ok(())
     }
 
     /// True once WAL replay finished; `/readyz` and inserts gate on it.
     pub fn is_ready(&self) -> bool {
-        self.ready.load(Ordering::SeqCst)
+        // ordering: Acquire — pairs with the Release in `recover`;
+        // observing true implies the replayed snapshot is visible.
+        self.ready.load(Ordering::Acquire)
     }
 
     /// Connections currently admitted (accepted, not yet finished).
     pub fn inflight(&self) -> usize {
-        self.admitted.load(Ordering::SeqCst)
+        // ordering: Relaxed — an overload gauge; the RMWs below keep
+        // the count exact, and no memory is published through it. An
+        // admission decision made on a slightly stale value only
+        // shifts the shed threshold by one in-flight connection.
+        self.admitted.load(Ordering::Relaxed)
     }
 
     /// Record one admitted connection (acceptor side).
     pub fn admit_one(&self) {
-        self.admitted.fetch_add(1, Ordering::SeqCst);
+        // ordering: Relaxed — RMW atomicity alone keeps the gauge
+        // exact; see `inflight`.
+        self.admitted.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one finished connection (worker side).
     pub fn release_one(&self) {
-        self.admitted.fetch_sub(1, Ordering::SeqCst);
+        // ordering: Relaxed — see `admit_one`.
+        self.admitted.fetch_sub(1, Ordering::Relaxed);
     }
 
     /// Apply one insert batch to the writer state (shared by live
@@ -594,6 +611,8 @@ impl ServerState {
     /// snapshot compares its `epoch` against this and re-fetches only
     /// on mismatch — the steady-state read path touches no mutex.
     pub fn epoch_hint(&self) -> u64 {
+        // ordering: Acquire — pairs with the Release stores in
+        // `publish` and `recover`; see the comment in `publish`.
         self.epoch.load(Ordering::Acquire)
     }
 
@@ -611,9 +630,9 @@ impl ServerState {
         let epoch = self.epoch_hint() + 1;
         let snapshot = Arc::new(Self::snapshot_of(w, epoch, self.base_n, self.n_classes));
         *self.snap.lock().unwrap_or_else(|e| e.into_inner()) = snapshot;
-        // Readers that load this hint are guaranteed to find an
-        // epoch >= it in the cell (Release pairs with the Acquire
-        // in `epoch_hint`).
+        // ordering: Release — readers that load this hint are
+        // guaranteed to find an epoch >= it in the snapshot cell
+        // (pairs with the Acquire in `epoch_hint`).
         self.epoch.store(epoch, Ordering::Release);
         epoch
     }
@@ -882,7 +901,10 @@ impl ServerState {
         loop {
             {
                 let mut bell = lock.lock().unwrap_or_else(|e| e.into_inner());
-                while !*bell && !stop.load(Ordering::SeqCst) {
+                // ordering: Relaxed — `stop` is a pure termination
+                // flag; the bell mutex/condvar provides the wakeup
+                // handoff, and no memory rides on the flag itself.
+                while !*bell && !stop.load(Ordering::Relaxed) {
                     let (guard, timeout) = cvar
                         .wait_timeout(bell, interval)
                         .unwrap_or_else(|e| e.into_inner());
@@ -893,7 +915,8 @@ impl ServerState {
                 }
                 *bell = false;
             }
-            if stop.load(Ordering::SeqCst) {
+            // ordering: Relaxed — see the loop condition above.
+            if stop.load(Ordering::Relaxed) {
                 return;
             }
             self.refine_pass();

@@ -209,21 +209,31 @@ impl FaultStorage {
 
     /// Write/fsync operations observed so far.
     pub fn ops(&self) -> u64 {
-        self.ops.load(Ordering::SeqCst)
+        // ordering: Relaxed — a monotonic counter read for reporting;
+        // the fetch_add RMWs keep it exact without extra ordering.
+        self.ops.load(Ordering::Relaxed)
     }
 
     /// Whether the planned fault has fired.
     pub fn fired(&self) -> bool {
-        self.fired.load(Ordering::SeqCst)
+        // ordering: Relaxed — observer-side flag read; exactly-once
+        // firing is guaranteed by the `swap` in `should_fire`, not by
+        // ordering.
+        self.fired.load(Ordering::Relaxed)
     }
 
     /// Whether a torn write has "crashed" the storage.
     pub fn crashed(&self) -> bool {
-        self.crashed.load(Ordering::SeqCst)
+        // ordering: Relaxed — see `check_crashed`.
+        self.crashed.load(Ordering::Relaxed)
     }
 
     fn check_crashed(&self) -> io::Result<()> {
-        if self.crashed.load(Ordering::SeqCst) {
+        // ordering: Relaxed — the flag only gates error returns; the
+        // on-disk bytes it models are ordered by the file syscalls
+        // themselves, and the harness observes the flag after joining
+        // the workload thread (join provides the happens-before edge).
+        if self.crashed.load(Ordering::Relaxed) {
             Err(io::Error::other("injected crash: storage is offline"))
         } else {
             Ok(())
@@ -233,7 +243,9 @@ impl FaultStorage {
     /// Returns true exactly once: at the first matching op at or past
     /// the trigger.
     fn should_fire(&self, op: u64, on_write: bool) -> bool {
-        if op < self.plan.trigger_op || self.fired.load(Ordering::SeqCst) {
+        // ordering: Relaxed — early-exit fast path; the authoritative
+        // exactly-once decision is the `swap` below.
+        if op < self.plan.trigger_op || self.fired.load(Ordering::Relaxed) {
             return false;
         }
         let matches = if on_write {
@@ -241,7 +253,9 @@ impl FaultStorage {
         } else {
             self.plan.kind.fires_on_sync()
         };
-        matches && !self.fired.swap(true, Ordering::SeqCst)
+        // ordering: Relaxed — RMW atomicity alone makes the swap
+        // exactly-once; no memory is published through the flag.
+        matches && !self.fired.swap(true, Ordering::Relaxed)
     }
 }
 
@@ -256,7 +270,9 @@ struct FaultFile {
 impl Write for FaultFile {
     fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
         self.ctl.check_crashed()?;
-        let op = self.ctl.ops.fetch_add(1, Ordering::SeqCst);
+        // ordering: Relaxed — the RMW hands every op a unique ticket
+        // regardless of ordering; nothing else rides on the counter.
+        let op = self.ctl.ops.fetch_add(1, Ordering::Relaxed);
         if self.ctl.should_fire(op, true) {
             match self.ctl.plan.kind {
                 FaultKind::ShortWrite => {
@@ -270,7 +286,9 @@ impl Write for FaultFile {
                 FaultKind::TornWrite => {
                     let keep = (self.ctl.plan.seed % (buf.len().max(1) as u64)) as usize;
                     self.inner.write_all(&buf[..keep])?;
-                    self.ctl.crashed.store(true, Ordering::SeqCst);
+                    // ordering: Relaxed — see `check_crashed` for why
+                    // the crash flag needs no publication ordering.
+                    self.ctl.crashed.store(true, Ordering::Relaxed);
                     return Err(io::Error::other("injected torn write (process crash)"));
                 }
                 FaultKind::FsyncFail => unreachable!("fsync faults fire on sync"),
@@ -289,7 +307,8 @@ impl Write for FaultFile {
 impl DurableFile for FaultFile {
     fn sync_data(&mut self) -> io::Result<()> {
         self.ctl.check_crashed()?;
-        let op = self.ctl.ops.fetch_add(1, Ordering::SeqCst);
+        // ordering: Relaxed — unique ticket via RMW; see `write`.
+        let op = self.ctl.ops.fetch_add(1, Ordering::Relaxed);
         if self.ctl.should_fire(op, false) {
             // The kernel never promised the unsynced bytes; drop them.
             self.inner.set_len(self.synced_len)?;

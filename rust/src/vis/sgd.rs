@@ -8,6 +8,12 @@
 //! vertices rarely collide across threads (Recht et al., 2011), which
 //! is exactly the regime here: each step touches 2 + M vertices out of
 //! millions.
+//!
+//! The racy updates are expressed as per-`f32` relaxed atomics (see
+//! [`SharedLayout`]), so the Hogwild races are *defined behavior* —
+//! `cargo miri test` and ThreadSanitizer verify this loop instead of
+//! flagging it — at zero cost: a relaxed `AtomicU32` load/store is the
+//! same plain `mov` the unsynchronized code compiled to.
 
 use crate::graph::CsrGraph;
 use crate::util::pool;
@@ -15,24 +21,57 @@ use crate::util::rng::Rng;
 use crate::vis::objective::clip;
 use crate::vis::sampler::GraphSamplers;
 use crate::vis::LargeVisConfig;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
-/// Shared mutable layout for Hogwild updates (see the safety note in
-/// `embed::line::SharedParams`, which this mirrors).
-struct SharedLayout {
-    ptr: *mut f32,
-    len: usize,
+/// Shared mutable layout for Hogwild updates, viewed as relaxed
+/// per-element atomics.
+///
+/// Workers deliberately race on layout rows; going through `AtomicU32`
+/// bit-patterns makes every such race a defined read/write (a reader
+/// sees *some* previously stored value, never tearing within an `f32`,
+/// never UB) while compiling to the same plain loads/stores on x86-64
+/// and aarch64. Single-threaded runs execute the exact same value
+/// sequence as the old in-place implementation, so results stay
+/// bit-identical (pinned by the multilevel parity test).
+struct SharedLayout<'a> {
+    slots: &'a [AtomicU32],
 }
 
-unsafe impl Sync for SharedLayout {}
-unsafe impl Send for SharedLayout {}
+impl<'a> SharedLayout<'a> {
+    fn new(buf: &'a mut [f32]) -> Self {
+        let ptr = buf.as_mut_ptr().cast::<AtomicU32>();
+        let len = buf.len();
+        // SAFETY: `AtomicU32` has the same size and alignment as `f32`
+        // (4 bytes each), and the exclusive borrow on `buf` rules out
+        // any non-atomic access for the lifetime `'a`, so reborrowing
+        // the buffer as a slice of atomics is sound (this mirrors
+        // std's `AtomicU32::from_mut_slice` construction).
+        let slots = unsafe { std::slice::from_raw_parts(ptr, len) };
+        SharedLayout { slots }
+    }
 
-impl SharedLayout {
+    /// Snapshot vertex `v`'s row into a local array.
     #[inline]
-    #[allow(clippy::mut_from_ref)]
-    unsafe fn row(&self, v: usize, dim: usize) -> &mut [f32] {
-        debug_assert!((v + 1) * dim <= self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(v * dim), dim)
+    fn load_row<const DIM: usize>(&self, v: usize) -> [f32; DIM] {
+        let mut out = [0f32; DIM];
+        for (o, slot) in out.iter_mut().zip(&self.slots[v * DIM..v * DIM + DIM]) {
+            // ordering: Relaxed — Hogwild tolerates stale values and
+            // publishes no other memory through the layout cells; the
+            // final happens-before edge is the worker join.
+            *o = f32::from_bits(slot.load(Ordering::Relaxed));
+        }
+        out
+    }
+
+    /// Write vertex `v`'s row back from a local array.
+    #[inline]
+    fn store_row<const DIM: usize>(&self, v: usize, row: &[f32; DIM]) {
+        for (x, slot) in row.iter().zip(&self.slots[v * DIM..v * DIM + DIM]) {
+            // ordering: Relaxed — counterpart of `load_row`; the join
+            // in `spawn_workers` orders these before the caller reads
+            // the finished layout.
+            slot.store(x.to_bits(), Ordering::Relaxed);
+        }
     }
 }
 
@@ -75,7 +114,7 @@ pub fn optimize(
     let gclip = cfg.grad_clip;
     let rho0 = cfg.rho0;
 
-    let shared = SharedLayout { ptr: layout.as_mut_slice().as_mut_ptr(), len: layout.as_slice().len() };
+    let shared = SharedLayout::new(layout.as_mut_slice());
     let progress = AtomicU64::new(0);
     let base_rng = Rng::new(cfg.seed ^ 0x5bd1);
     let t0 = std::time::Instant::now();
@@ -85,7 +124,7 @@ pub fn optimize(
     // compiler keep the accumulator in registers and unroll fully
     // (§Perf: +13% over the dynamic-dim loop at dim=2).
     struct LoopArgs<'a> {
-        shared: &'a SharedLayout,
+        shared: &'a SharedLayout<'a>,
         samplers: &'a GraphSamplers,
         progress: &'a AtomicU64,
         base_rng: &'a Rng,
@@ -112,6 +151,9 @@ pub fn optimize(
             // by the thread count again would decay rho up to threads×
             // too fast.
             if s % 256 == 0 {
+                // ordering: Relaxed — the counter only feeds the
+                // statistical rho schedule; skew between workers is
+                // harmless and nothing is published through it.
                 let t = a.progress.fetch_add(256, Ordering::Relaxed);
                 let frac = (t.min(a.total)) as f32 / a.total as f32;
                 rho = (a.rho0 * (1.0 - frac)).max(a.rho0 * 1e-4);
@@ -121,13 +163,18 @@ pub fn optimize(
             if i == j {
                 continue;
             }
-            // SAFETY: indices < n, rows of length DIM; Hogwild races accepted.
-            let yi = unsafe { a.shared.row(i, DIM) };
+            // Within one step, i, j and every negative v are pairwise
+            // distinct (the excluding draw skips i and j), so the local
+            // row copies below cannot alias; a repeated draw of the
+            // same negative re-loads the row and therefore observes
+            // the preceding store. Single-threaded, this reproduces the
+            // old in-place value sequence bit-for-bit.
+            let mut yi = a.shared.load_row::<DIM>(i);
             acc.iter_mut().for_each(|x| *x = 0.0);
 
             // Positive edge: attract.
             {
-                let yj = unsafe { a.shared.row(j, DIM) };
+                let mut yj = a.shared.load_row::<DIM>(j);
                 let mut d2 = 0f32;
                 for k in 0..DIM {
                     let dk = yi[k] - yj[k];
@@ -139,6 +186,7 @@ pub fn optimize(
                     acc[k] += g;
                     yj[k] -= rho * g; // opposite force on y_j
                 }
+                a.shared.store_row(j, &yj);
             }
             // M negatives: repel. The excluding draw is total, so every
             // positive update is balanced by exactly M repulsions
@@ -151,7 +199,7 @@ pub fn optimize(
                     Some(v) => v as usize,
                     None => break,
                 };
-                let yv = unsafe { a.shared.row(v, DIM) };
+                let mut yv = a.shared.load_row::<DIM>(v);
                 let mut d2 = 0f32;
                 for k in 0..DIM {
                     let dk = yi[k] - yv[k];
@@ -163,10 +211,12 @@ pub fn optimize(
                     acc[k] += g;
                     yv[k] -= rho * g;
                 }
+                a.shared.store_row(v, &yv);
             }
             for k in 0..DIM {
                 yi[k] += rho * acc[k];
             }
+            a.shared.store_row(i, &yi);
         }
     }
 

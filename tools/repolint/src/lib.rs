@@ -1,0 +1,825 @@
+//! Repo-invariant linter for the largevis sources.
+//!
+//! A dependency-free static-analysis pass that lexes Rust source files
+//! (comment- and string-aware, with `#[cfg(test)]`-scope tracking) and
+//! enforces the invariants the test suite cannot express:
+//!
+//! - **no-panic** — no `unwrap()` / `expect()` / `panic!` / `todo!` in
+//!   non-test code on the serving and durability paths (`serve/`,
+//!   `data/formats/`, `coordinator/`, `util/faultio.rs`,
+//!   `knn/search.rs`). These paths must propagate errors: a panic in a
+//!   handler thread or mid-WAL-write is an availability or durability
+//!   bug, not a programming convenience.
+//! - **unsafe-safety** — every `unsafe` block and `unsafe impl` must be
+//!   preceded by (or carry) a `// SAFETY:` comment stating why the
+//!   obligation holds.
+//! - **replay-determinism** — no `Instant::now` / `SystemTime` /
+//!   `thread_rng` in the deterministic replay path (`wal.rs`,
+//!   `vis/incremental.rs`): WAL replay must be a pure function of the
+//!   log bytes.
+//! - **ordering-justified** — every `Ordering::Relaxed` /
+//!   `Ordering::SeqCst` use must carry an `// ordering:` comment
+//!   justifying the choice (what happens-before edge it provides, or
+//!   why none is needed).
+//!
+//! The lexer is not a full Rust parser: it splits each line into a
+//! *code* part (string/char-literal contents blanked) and a *comment*
+//! part, and marks lines belonging to items gated behind a
+//! definitely-false `cfg` predicate (three-valued evaluation with
+//! `test` = false and unknown atoms left indeterminate, so
+//! `cfg(not(test))` and `cfg(any(test, unix))` still count as non-test
+//! code). That is exactly enough to make the four rules above immune to
+//! false positives from strings, comments, and test modules.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Rule id: panic-family calls on no-panic paths.
+pub const RULE_NO_PANIC: &str = "no-panic";
+/// Rule id: `unsafe` block/impl without a `// SAFETY:` comment.
+pub const RULE_UNSAFE_SAFETY: &str = "unsafe-safety";
+/// Rule id: wall-clock/random sources in the replay path.
+pub const RULE_REPLAY_DETERMINISM: &str = "replay-determinism";
+/// Rule id: unannotated `Ordering::Relaxed`/`Ordering::SeqCst`.
+pub const RULE_ORDERING_JUSTIFIED: &str = "ordering-justified";
+
+/// All rule ids, in report order.
+pub const RULES: [&str; 4] =
+    [RULE_NO_PANIC, RULE_UNSAFE_SAFETY, RULE_REPLAY_DETERMINISM, RULE_ORDERING_JUSTIFIED];
+
+/// One source line after lexing.
+#[derive(Debug, Default, Clone)]
+pub struct LexedLine {
+    /// Code on this line, with string/char-literal contents blanked and
+    /// comments stripped (quotes are kept as markers).
+    pub code: String,
+    /// Concatenated comment text appearing on this line.
+    pub comment: String,
+    /// True when the line belongs to an item gated behind a cfg
+    /// predicate that is definitely false outside `cfg(test)` builds.
+    pub in_test: bool,
+}
+
+/// A single rule violation.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Which rule fired (one of [`RULES`]).
+    pub rule: &'static str,
+    /// `/`-separated path relative to the scan root.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The offending source line, trimmed.
+    pub text: String,
+    /// True when an allow-list entry covers this violation.
+    pub allowed: bool,
+}
+
+/// One allow-list entry: `rule path-substring [line-substring]`.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    /// Rule id the entry applies to.
+    pub rule: String,
+    /// Substring that must occur in the violation's relative path.
+    pub path_sub: String,
+    /// Optional substring that must occur in the offending line.
+    pub line_sub: Option<String>,
+}
+
+impl AllowEntry {
+    fn matches(&self, v: &Violation) -> bool {
+        let line_ok = match &self.line_sub {
+            Some(s) => v.text.contains(s.as_str()),
+            None => true,
+        };
+        self.rule == v.rule && v.path.contains(&self.path_sub) && line_ok
+    }
+}
+
+/// Scan configuration: which paths each scoped rule applies to, plus
+/// the allow-list. Paths are matched as substrings of the
+/// `/`-separated path relative to the scan root.
+#[derive(Debug, Clone)]
+pub struct Options {
+    /// Scope of the no-panic rule.
+    pub panic_scope: Vec<String>,
+    /// Scope of the replay-determinism rule.
+    pub determinism_scope: Vec<String>,
+    /// Allow-list entries (see [`AllowEntry`]).
+    pub allow: Vec<AllowEntry>,
+}
+
+impl Options {
+    /// The scopes codified for this repository (relative to
+    /// `rust/src`).
+    pub fn repo_defaults() -> Options {
+        Options {
+            panic_scope: vec![
+                "serve/".to_string(),
+                "data/formats/".to_string(),
+                "coordinator/".to_string(),
+                "util/faultio.rs".to_string(),
+                "knn/search.rs".to_string(),
+            ],
+            determinism_scope: vec![
+                "data/formats/wal.rs".to_string(),
+                "vis/incremental.rs".to_string(),
+            ],
+            allow: Vec::new(),
+        }
+    }
+}
+
+/// Parse an allow-list file: one entry per line,
+/// `rule path-substring [line-substring...]`; `#` starts a comment.
+pub fn parse_allow(text: &str) -> Vec<AllowEntry> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(rule), Some(path_sub)) = (parts.next(), parts.next()) else {
+            continue;
+        };
+        let rest: Vec<&str> = parts.collect();
+        let line_sub = if rest.is_empty() { None } else { Some(rest.join(" ")) };
+        out.push(AllowEntry {
+            rule: rule.to_string(),
+            path_sub: path_sub.to_string(),
+            line_sub,
+        });
+    }
+    out
+}
+
+// --------------------------------------------------------------- lexer
+
+fn flush(lines: &mut Vec<LexedLine>, code: &mut String, comment: &mut String) {
+    lines.push(LexedLine {
+        code: std::mem::take(code),
+        comment: std::mem::take(comment),
+        in_test: false,
+    });
+}
+
+/// Lex `source` into per-line code/comment splits with
+/// `#[cfg(test)]`-scope marking. Never fails: malformed input degrades
+/// to treating the remainder as code.
+pub fn lex(source: &str) -> Vec<LexedLine> {
+    let chars: Vec<char> = source.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        match c {
+            '\n' => {
+                flush(&mut lines, &mut code, &mut comment);
+                i += 1;
+            }
+            '/' if chars.get(i + 1) == Some(&'/') => {
+                i += 2;
+                while i < n && chars[i] != '\n' {
+                    comment.push(chars[i]);
+                    i += 1;
+                }
+            }
+            '/' if chars.get(i + 1) == Some(&'*') => {
+                i += 2;
+                let mut depth = 1u32;
+                while i < n && depth > 0 {
+                    if chars[i] == '\n' {
+                        flush(&mut lines, &mut code, &mut comment);
+                        i += 1;
+                    } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        comment.push_str("/*");
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        comment.push(chars[i]);
+                        i += 1;
+                    }
+                }
+            }
+            '"' => {
+                code.push('"');
+                i += 1;
+                i = consume_str_body(&chars, i, &mut lines, &mut code, &mut comment);
+            }
+            'r' | 'b' if !prev_is_ident(&code) && raw_str_hashes(&chars, i).is_some() => {
+                // raw (byte) string: r"..", r#".."#, br#".."# ...
+                let (hashes, quote) = raw_str_hashes(&chars, i).unwrap_or((0, i));
+                code.push('"');
+                i = quote + 1;
+                i = consume_raw_body(&chars, i, hashes, &mut lines, &mut code, &mut comment);
+            }
+            'b' if !prev_is_ident(&code) && chars.get(i + 1) == Some(&'"') => {
+                // byte string b"..": escapes work like a normal string
+                code.push('"');
+                i += 2;
+                i = consume_str_body(&chars, i, &mut lines, &mut code, &mut comment);
+            }
+            '\'' => {
+                let is_char = chars.get(i + 1) == Some(&'\\')
+                    || (chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\''));
+                if is_char {
+                    code.push('\'');
+                    code.push('\'');
+                    i += 1;
+                    while i < n {
+                        match chars[i] {
+                            '\\' => i += 2,
+                            '\'' => {
+                                i += 1;
+                                break;
+                            }
+                            '\n' => {
+                                // malformed; keep line structure intact
+                                flush(&mut lines, &mut code, &mut comment);
+                                i += 1;
+                            }
+                            _ => i += 1,
+                        }
+                    }
+                } else {
+                    // lifetime marker
+                    code.push('\'');
+                    i += 1;
+                }
+            }
+            _ => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        flush(&mut lines, &mut code, &mut comment);
+    }
+    mark_test_lines(&mut lines);
+    lines
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// At `chars[i] == 'r' | 'b'`: if this starts a raw (byte) string,
+/// return (hash count, index of the opening quote).
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i + 1;
+    if chars[i] == 'b' {
+        if chars.get(j) != Some(&'r') {
+            return None;
+        }
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j))
+    } else {
+        None
+    }
+}
+
+fn consume_str_body(
+    chars: &[char],
+    mut i: usize,
+    lines: &mut Vec<LexedLine>,
+    code: &mut String,
+    comment: &mut String,
+) -> usize {
+    let n = chars.len();
+    while i < n {
+        match chars[i] {
+            '\\' => i += 2,
+            '"' => {
+                code.push('"');
+                return i + 1;
+            }
+            '\n' => {
+                flush(lines, code, comment);
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+fn consume_raw_body(
+    chars: &[char],
+    mut i: usize,
+    hashes: usize,
+    lines: &mut Vec<LexedLine>,
+    code: &mut String,
+    comment: &mut String,
+) -> usize {
+    let n = chars.len();
+    while i < n {
+        if chars[i] == '"' {
+            let closed = (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'));
+            if closed {
+                code.push('"');
+                return i + 1 + hashes;
+            }
+            i += 1;
+        } else if chars[i] == '\n' {
+            flush(lines, code, comment);
+            i += 1;
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+// ------------------------------------------------- cfg(test) tracking
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Tri {
+    True,
+    False,
+    Unknown,
+}
+
+fn tri_not(t: Tri) -> Tri {
+    match t {
+        Tri::True => Tri::False,
+        Tri::False => Tri::True,
+        Tri::Unknown => Tri::Unknown,
+    }
+}
+
+/// Evaluate a cfg predicate under `test = false`, every other atom
+/// unknown. `False` means the item definitely does not exist outside
+/// test builds.
+fn eval_cfg_pred(pred: &str) -> Tri {
+    let pred = pred.trim();
+    if let Some(open) = pred.find('(') {
+        if !pred.ends_with(')') {
+            return Tri::Unknown;
+        }
+        let name = pred[..open].trim();
+        let inner = &pred[open + 1..pred.len() - 1];
+        match name {
+            "not" => tri_not(eval_cfg_pred(inner)),
+            "all" => {
+                let mut acc = Tri::True;
+                for part in split_top_commas(inner) {
+                    match eval_cfg_pred(&part) {
+                        Tri::False => return Tri::False,
+                        Tri::Unknown => acc = Tri::Unknown,
+                        Tri::True => {}
+                    }
+                }
+                acc
+            }
+            "any" => {
+                let mut acc = Tri::False;
+                for part in split_top_commas(inner) {
+                    match eval_cfg_pred(&part) {
+                        Tri::True => return Tri::True,
+                        Tri::Unknown => acc = Tri::Unknown,
+                        Tri::False => {}
+                    }
+                }
+                acc
+            }
+            _ => Tri::Unknown,
+        }
+    } else if pred == "test" {
+        Tri::False
+    } else {
+        Tri::Unknown
+    }
+}
+
+/// Split on commas at paren depth 0. Input comes from lexed code, so
+/// string contents are already blanked and cannot hide commas.
+fn split_top_commas(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '(' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ')' => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 => out.push(std::mem::take(&mut cur)),
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Mark lines belonging to items behind a definitely-false cfg.
+fn mark_test_lines(lines: &mut [LexedLine]) {
+    let mut chars: Vec<(usize, char)> = Vec::new();
+    for (li, l) in lines.iter().enumerate() {
+        for c in l.code.chars() {
+            chars.push((li, c));
+        }
+        chars.push((li, '\n'));
+    }
+    let n = chars.len();
+    let mut i = 0usize;
+    while i < n {
+        if chars[i].1 != '#' {
+            i += 1;
+            continue;
+        }
+        let open = skip_ws(&chars, i + 1);
+        if open >= n || chars[open].1 != '[' {
+            i += 1;
+            continue;
+        }
+        let (content, close) = balanced(&chars, open, '[', ']');
+        let trimmed = content.trim_start();
+        let is_off = trimmed
+            .strip_prefix("cfg")
+            .map(|rest| rest.trim_start())
+            .and_then(|rest| rest.strip_prefix('('))
+            .and_then(|rest| rest.strip_suffix(')'))
+            .is_some_and(|pred| eval_cfg_pred(pred) == Tri::False);
+        if !is_off {
+            i = close + 1;
+            continue;
+        }
+        let attr_line = chars[i].0;
+        // Skip whitespace and any further attributes to the item start.
+        let mut j = close + 1;
+        loop {
+            j = skip_ws(&chars, j);
+            if j < n && chars[j].1 == '#' {
+                let o2 = skip_ws(&chars, j + 1);
+                if o2 < n && chars[o2].1 == '[' {
+                    let (_, c2) = balanced(&chars, o2, '[', ']');
+                    j = c2 + 1;
+                    continue;
+                }
+            }
+            break;
+        }
+        // Scan the item header for its body `{...}` or terminating `;`.
+        let mut depth = 0i32;
+        let mut k = j;
+        let mut end_line = if j < n { chars[j].0 } else { attr_line };
+        while k < n {
+            match chars[k].1 {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth -= 1,
+                '{' => {
+                    let mut bd = 1i32;
+                    let mut m = k + 1;
+                    while m < n && bd > 0 {
+                        match chars[m].1 {
+                            '{' => bd += 1,
+                            '}' => bd -= 1,
+                            _ => {}
+                        }
+                        m += 1;
+                    }
+                    end_line = chars[m.saturating_sub(1)].0;
+                    k = m;
+                    break;
+                }
+                ';' if depth <= 0 => {
+                    end_line = chars[k].0;
+                    k += 1;
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        for line in lines.iter_mut().take(end_line + 1).skip(attr_line) {
+            line.in_test = true;
+        }
+        i = k.max(close + 1);
+    }
+}
+
+fn skip_ws(chars: &[(usize, char)], mut i: usize) -> usize {
+    while i < chars.len() && chars[i].1.is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Collect the contents between `chars[open]` (== `open_c`) and its
+/// matching `close_c`; returns (content, index of the closer).
+fn balanced(chars: &[(usize, char)], open: usize, open_c: char, close_c: char) -> (String, usize) {
+    let mut depth = 0i32;
+    let mut content = String::new();
+    let mut i = open;
+    while i < chars.len() {
+        let c = chars[i].1;
+        if c == open_c {
+            depth += 1;
+            if depth > 1 {
+                content.push(c);
+            }
+        } else if c == close_c {
+            depth -= 1;
+            if depth == 0 {
+                return (content, i);
+            }
+            content.push(c);
+        } else if depth > 0 {
+            content.push(c);
+        }
+        i += 1;
+    }
+    (content, chars.len().saturating_sub(1))
+}
+
+// ---------------------------------------------------------------- rules
+
+fn method_call(code: &str, name: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(name) {
+        let after = start + pos + name.len();
+        if code[after..].starts_with('(') {
+            return true;
+        }
+        start = after;
+    }
+    false
+}
+
+fn bang_macro(code: &str, name: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(name) {
+        let p = start + pos;
+        let ok_before = p == 0 || {
+            let c = bytes[p - 1] as char;
+            !(c.is_ascii_alphanumeric() || c == '_')
+        };
+        if ok_before {
+            return true;
+        }
+        start = p + name.len();
+    }
+    false
+}
+
+/// Does this line open an `unsafe` block or `unsafe impl`? (`unsafe
+/// fn`/`unsafe trait`/`unsafe extern` declare obligations rather than
+/// discharge them, so they are not flagged — their bodies hold the
+/// `unsafe {}` blocks that are.)
+fn opens_unsafe_block_or_impl(lexed: &[LexedLine], idx: usize) -> bool {
+    let code = &lexed[idx].code;
+    let bytes = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find("unsafe") {
+        let p = start + pos;
+        start = p + "unsafe".len();
+        let ok_before = p == 0 || {
+            let c = bytes[p - 1] as char;
+            !(c.is_ascii_alphanumeric() || c == '_')
+        };
+        let ok_after = match code[start..].chars().next() {
+            Some(c) => !(c.is_ascii_alphanumeric() || c == '_'),
+            None => true,
+        };
+        if !ok_before || !ok_after {
+            continue;
+        }
+        // What follows the keyword: rest of this line, else the first
+        // non-empty code on following lines (rustfmt can wrap here).
+        let mut rest = code[start..].trim_start().to_string();
+        let mut j = idx + 1;
+        while rest.is_empty() && j < lexed.len() {
+            rest = lexed[j].code.trim().to_string();
+            j += 1;
+        }
+        if rest.starts_with('{') || rest.starts_with("impl") {
+            return true;
+        }
+    }
+    false
+}
+
+/// True when the line (or the contiguous comment block directly above
+/// it) carries `tag`.
+fn annotated(lexed: &[LexedLine], idx: usize, tag: &str) -> bool {
+    if lexed[idx].comment.contains(tag) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        if !lexed[j].code.trim().is_empty() {
+            return false;
+        }
+        if lexed[j].comment.contains(tag) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Run every rule over one file's source. `rel_path` is the
+/// `/`-separated path relative to the scan root (it selects which
+/// scoped rules apply).
+pub fn scan_source(rel_path: &str, source: &str, opts: &Options) -> Vec<Violation> {
+    let lexed = lex(source);
+    let raw: Vec<&str> = source.lines().collect();
+    let in_scope = |scope: &[String]| scope.iter().any(|s| rel_path.contains(s.as_str()));
+    let panic_scoped = in_scope(&opts.panic_scope);
+    let determinism_scoped = in_scope(&opts.determinism_scope);
+    let mut out: Vec<Violation> = Vec::new();
+    let mut push = |rule: &'static str, idx: usize, out: &mut Vec<Violation>| {
+        out.push(Violation {
+            rule,
+            path: rel_path.to_string(),
+            line: idx + 1,
+            text: raw.get(idx).map(|s| s.trim().to_string()).unwrap_or_default(),
+            allowed: false,
+        });
+    };
+    for (idx, line) in lexed.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        if panic_scoped {
+            for name in [".unwrap", ".expect"] {
+                if method_call(code, name) {
+                    push(RULE_NO_PANIC, idx, &mut out);
+                }
+            }
+            for name in ["panic!", "todo!"] {
+                if bang_macro(code, name) {
+                    push(RULE_NO_PANIC, idx, &mut out);
+                }
+            }
+        }
+        if determinism_scoped {
+            for pat in ["Instant::now", "SystemTime", "thread_rng"] {
+                if code.contains(pat) {
+                    push(RULE_REPLAY_DETERMINISM, idx, &mut out);
+                }
+            }
+        }
+        if (code.contains("Ordering::Relaxed") || code.contains("Ordering::SeqCst"))
+            && !annotated(&lexed, idx, "ordering:")
+        {
+            push(RULE_ORDERING_JUSTIFIED, idx, &mut out);
+        }
+        if opens_unsafe_block_or_impl(&lexed, idx) && !annotated(&lexed, idx, "SAFETY:") {
+            push(RULE_UNSAFE_SAFETY, idx, &mut out);
+        }
+    }
+    for v in &mut out {
+        v.allowed = opts.allow.iter().any(|a| a.matches(v));
+    }
+    out
+}
+
+// --------------------------------------------------------------- report
+
+/// Aggregate scan result over a file tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Every violation found, allowed or not.
+    pub violations: Vec<Violation>,
+}
+
+impl Report {
+    /// Violations not covered by the allow-list.
+    pub fn denied(&self) -> usize {
+        self.violations.iter().filter(|v| !v.allowed).count()
+    }
+
+    /// Violations covered by the allow-list.
+    pub fn allowed(&self) -> usize {
+        self.violations.iter().filter(|v| v.allowed).count()
+    }
+
+    /// Per-rule (denied, allowed) counts; every rule id is present.
+    pub fn per_rule(&self) -> BTreeMap<&'static str, (usize, usize)> {
+        let mut map: BTreeMap<&'static str, (usize, usize)> =
+            RULES.iter().map(|&r| (r, (0, 0))).collect();
+        for v in &self.violations {
+            let e = map.entry(v.rule).or_insert((0, 0));
+            if v.allowed {
+                e.1 += 1;
+            } else {
+                e.0 += 1;
+            }
+        }
+        map
+    }
+
+    /// Render the machine-readable JSON report.
+    pub fn to_json(&self) -> String {
+        let mut rules = String::new();
+        for (i, (rule, (denied, allowed))) in self.per_rule().into_iter().enumerate() {
+            if i > 0 {
+                rules.push(',');
+            }
+            rules.push_str(&format!(
+                "\"{}\":{{\"violations\":{},\"allowed\":{}}}",
+                rule, denied, allowed
+            ));
+        }
+        let mut items = String::new();
+        for (i, v) in self.violations.iter().enumerate() {
+            if i > 0 {
+                items.push(',');
+            }
+            items.push_str(&format!(
+                "{{\"rule\":\"{}\",\"path\":\"{}\",\"line\":{},\"allowed\":{},\"text\":\"{}\"}}",
+                v.rule,
+                json_escape(&v.path),
+                v.line,
+                v.allowed,
+                json_escape(&v.text)
+            ));
+        }
+        format!(
+            concat!(
+                "{{\"files_scanned\":{},\"violations\":{},\"allowed\":{},",
+                "\"rules\":{{{}}},\"items\":[{}]}}\n"
+            ),
+            self.files_scanned,
+            self.denied(),
+            self.allowed(),
+            rules,
+            items
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Scan every `.rs` file under `root` (recursively, sorted order).
+pub fn scan_path(root: &Path, opts: &Options) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    let mut report = Report::default();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let source = std::fs::read_to_string(&path)?;
+        report.violations.extend(scan_source(&rel, &source, opts));
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|s| s.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

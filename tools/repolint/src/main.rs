@@ -1,0 +1,105 @@
+//! `cargo run -p repolint` — scan `rust/src` for invariant violations.
+//!
+//! Exit codes: 0 clean (or fully allow-listed), 1 violations, 2 usage
+//! or I/O error.
+//!
+//! Flags:
+//! - `--root <dir>`: repository root (default: inferred from this
+//!   crate's manifest location, i.e. two levels up from
+//!   `tools/repolint`).
+//! - `--allow <file>`: allow-list file (default: `<root>/repolint.allow`
+//!   when it exists). Format: `rule path-substring [line-substring]`
+//!   per line, `#` comments.
+//! - `--report <file>`: also write the JSON report here.
+//! - `--quiet`: suppress the per-violation listing.
+
+use repolint::{parse_allow, scan_path, Options};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn default_root() -> PathBuf {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.ancestors().nth(2).unwrap_or(manifest).to_path_buf()
+}
+
+fn main() -> ExitCode {
+    let mut root = default_root();
+    let mut allow_path: Option<PathBuf> = None;
+    let mut report_path: Option<PathBuf> = None;
+    let mut quiet = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => return usage("--root needs a value"),
+            },
+            "--allow" => match args.next() {
+                Some(v) => allow_path = Some(PathBuf::from(v)),
+                None => return usage("--allow needs a value"),
+            },
+            "--report" => match args.next() {
+                Some(v) => report_path = Some(PathBuf::from(v)),
+                None => return usage("--report needs a value"),
+            },
+            "--quiet" => quiet = true,
+            other => return usage(&format!("unknown argument: {other}")),
+        }
+    }
+
+    let mut opts = Options::repo_defaults();
+    let allow_file = allow_path.unwrap_or_else(|| root.join("repolint.allow"));
+    if allow_file.exists() {
+        match std::fs::read_to_string(&allow_file) {
+            Ok(text) => opts.allow = parse_allow(&text),
+            Err(e) => {
+                eprintln!("repolint: cannot read {}: {e}", allow_file.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let src = root.join("rust").join("src");
+    let report = match scan_path(&src, &opts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("repolint: scan of {} failed: {e}", src.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if !quiet {
+        for v in &report.violations {
+            let marker = if v.allowed { " (allowed)" } else { "" };
+            eprintln!("[{}] {}:{}{}: {}", v.rule, v.path, v.line, marker, v.text);
+        }
+    }
+    for (rule, (denied, allowed)) in report.per_rule() {
+        eprintln!("repolint: {rule}: {denied} violations, {allowed} allowed");
+    }
+    eprintln!(
+        "repolint: {} files scanned, {} violations ({} allowed)",
+        report.files_scanned,
+        report.denied(),
+        report.allowed()
+    );
+
+    if let Some(path) = report_path {
+        if let Err(e) = std::fs::write(&path, report.to_json()) {
+            eprintln!("repolint: cannot write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    if report.denied() > 0 {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("repolint: {msg}");
+    eprintln!("usage: repolint [--root DIR] [--allow FILE] [--report FILE] [--quiet]");
+    ExitCode::from(2)
+}

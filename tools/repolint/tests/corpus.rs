@@ -1,0 +1,98 @@
+//! Fixture corpus for repolint: known-bad snippets with exact expected
+//! per-rule violation counts, plus false-positive traps that must stay
+//! at zero findings.
+
+use repolint::{
+    lex, parse_allow, scan_source, Options, Violation, RULE_NO_PANIC, RULE_ORDERING_JUSTIFIED,
+    RULE_REPLAY_DETERMINISM, RULE_UNSAFE_SAFETY,
+};
+
+fn count(vs: &[Violation], rule: &str) -> usize {
+    vs.iter().filter(|v| v.rule == rule && !v.allowed).count()
+}
+
+#[test]
+fn unannotated_unsafe_counts() {
+    let src = include_str!("fixtures/unsafe_unannotated.rs");
+    let vs = scan_source("kernels/fixture.rs", src, &Options::repo_defaults());
+    assert_eq!(count(&vs, RULE_UNSAFE_SAFETY), 3, "{vs:?}");
+    assert_eq!(count(&vs, RULE_NO_PANIC), 0, "{vs:?}");
+    assert_eq!(count(&vs, RULE_ORDERING_JUSTIFIED), 0, "{vs:?}");
+    assert_eq!(count(&vs, RULE_REPLAY_DETERMINISM), 0, "{vs:?}");
+}
+
+#[test]
+fn test_gated_vs_live_unwraps() {
+    let src = include_str!("fixtures/unwrap_scopes.rs");
+    let vs = scan_source("serve/fixture.rs", src, &Options::repo_defaults());
+    // unwrap + expect + panic! + cfg(not(test)) unwrap + cfg(any(test,
+    // unix)) todo! are live; everything under cfg(test)/cfg(all(test,
+    // ..)) is exempt, and unwrap_or/unwrap_or_else never count.
+    assert_eq!(count(&vs, RULE_NO_PANIC), 5, "{vs:?}");
+    let lines: Vec<usize> =
+        vs.iter().filter(|v| v.rule == RULE_NO_PANIC).map(|v| v.line).collect();
+    assert_eq!(lines, vec![4, 5, 7, 19, 24], "{vs:?}");
+}
+
+#[test]
+fn out_of_scope_path_skips_panic_rule() {
+    let src = include_str!("fixtures/unwrap_scopes.rs");
+    let vs = scan_source("vis/fixture.rs", src, &Options::repo_defaults());
+    assert_eq!(count(&vs, RULE_NO_PANIC), 0, "{vs:?}");
+}
+
+#[test]
+fn string_and_comment_traps_stay_clean() {
+    let src = include_str!("fixtures/traps.rs");
+    let vs = scan_source("serve/traps.rs", src, &Options::repo_defaults());
+    assert!(vs.is_empty(), "false positives: {vs:?}");
+}
+
+#[test]
+fn ordering_and_replay_counts() {
+    let src = include_str!("fixtures/ordering_and_replay.rs");
+    let vs = scan_source("data/formats/wal.rs", src, &Options::repo_defaults());
+    // Acquire/Release are exempt; annotated Relaxed/SeqCst (same line
+    // or contiguous comment above) are compliant.
+    assert_eq!(count(&vs, RULE_ORDERING_JUSTIFIED), 2, "{vs:?}");
+    assert_eq!(count(&vs, RULE_REPLAY_DETERMINISM), 2, "{vs:?}");
+}
+
+#[test]
+fn replay_rule_is_scoped() {
+    let src = include_str!("fixtures/ordering_and_replay.rs");
+    let vs = scan_source("serve/state.rs", src, &Options::repo_defaults());
+    assert_eq!(count(&vs, RULE_REPLAY_DETERMINISM), 0, "{vs:?}");
+    // The ordering rule is repo-wide, so those findings remain.
+    assert_eq!(count(&vs, RULE_ORDERING_JUSTIFIED), 2, "{vs:?}");
+}
+
+#[test]
+fn allow_list_downgrades_matching_violations() {
+    let src = include_str!("fixtures/unwrap_scopes.rs");
+    let mut opts = Options::repo_defaults();
+    opts.allow = parse_allow(
+        "# comment lines and blanks are ignored\n\n\
+         no-panic serve/fixture.rs panic!(\"too big\")\n",
+    );
+    let vs = scan_source("serve/fixture.rs", src, &opts);
+    assert_eq!(count(&vs, RULE_NO_PANIC), 4, "{vs:?}");
+    assert_eq!(vs.iter().filter(|v| v.allowed).count(), 1, "{vs:?}");
+}
+
+#[test]
+fn lexer_splits_code_and_comments() {
+    let lines = lex("let x = 1; // trailing note\n\"str // not comment\";\n");
+    assert_eq!(lines.len(), 2);
+    assert_eq!(lines[0].code.trim(), "let x = 1;");
+    assert!(lines[0].comment.contains("trailing note"));
+    assert!(!lines[1].code.contains("not comment"));
+    assert!(lines[1].comment.is_empty());
+}
+
+#[test]
+fn cfg_test_marking_handles_semicolon_items() {
+    let lines = lex("#[cfg(test)]\nmod tests;\nfn live() {}\n");
+    assert!(lines[0].in_test && lines[1].in_test);
+    assert!(!lines[2].in_test);
+}

@@ -1,0 +1,35 @@
+// Fixture: atomics with and without justifications, plus wall-clock
+// reads in the replay-determinism scope.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn annotated_above(c: &AtomicU64) -> u64 {
+    // ordering: Relaxed — pure counter, no data guarded.
+    c.fetch_add(1, Ordering::Relaxed)
+}
+
+fn annotated_trailing(c: &AtomicU64) -> u64 {
+    c.load(Ordering::SeqCst) // ordering: SeqCst, total order for determinism
+}
+
+fn missing_justification(c: &AtomicU64) -> u64 {
+    c.load(Ordering::Relaxed) // finding 1
+}
+
+fn missing_justification_seqcst(c: &AtomicU64) {
+    c.store(7, Ordering::SeqCst); // finding 2
+}
+
+fn acquire_release_exempt(c: &AtomicU64) -> u64 {
+    c.store(1, Ordering::Release);
+    c.load(Ordering::Acquire)
+}
+
+fn wall_clock() -> std::time::Duration {
+    let t = std::time::Instant::now(); // finding 3 (replay scope)
+    t.elapsed()
+}
+
+fn system_time_epoch() {
+    let _ = std::time::SystemTime::now(); // finding 4 (replay scope)
+}

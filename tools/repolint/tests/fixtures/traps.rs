@@ -1,0 +1,31 @@
+//! Fixture: strings and comments that look like violations but are not.
+// A comment mentioning .unwrap() and panic!("boom") must not count.
+/* block comment with unsafe { *p } and Ordering::SeqCst inside */
+
+fn strings() -> Vec<String> {
+    vec![
+        "call .unwrap() and .expect(\"x\") here".to_string(),
+        "panic!(\"not real\") and todo!()".to_string(),
+        r#"raw: unsafe { Ordering::Relaxed } and Instant::now()"#.to_string(),
+        r##"hashed raw: .unwrap() "# still inside "## .to_string(),
+        "escaped quote \" then panic!(\"still a string\")".to_string(),
+        b"byte string with .unwrap() inside"
+            .iter()
+            .map(|&b| b as char)
+            .collect(),
+    ]
+}
+
+fn chars_and_lifetimes<'a>(x: &'a str) -> (&'a str, char, char) {
+    let quote = '"';
+    let brace = '{';
+    (x, quote, brace)
+}
+
+/* nested /* block */ comments: .expect("ignored") */
+
+fn multi_line_string() -> String {
+    "line one .unwrap()
+     line two panic!(\"x\")"
+        .to_string()
+}

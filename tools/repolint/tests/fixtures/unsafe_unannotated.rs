@@ -1,0 +1,23 @@
+// Fixture: unsafe blocks/impls with and without annotations.
+
+struct Wrapper(*mut f32);
+
+// SAFETY: single-owner pointer; the annotated impl is compliant.
+unsafe impl Send for Wrapper {}
+
+unsafe impl Sync for Wrapper {} // first finding: unannotated impl
+
+fn annotated_block(p: *const f32) -> f32 {
+    // SAFETY: caller guarantees p is valid and aligned.
+    unsafe { *p }
+}
+
+fn unannotated_block(p: *const f32) -> f32 {
+    unsafe { *p } // second finding: unannotated block
+}
+
+unsafe fn declares_obligation(p: *const f32) -> f32 {
+    // The `unsafe fn` header is not flagged; the body block without an
+    // annotation is the third finding.
+    unsafe { *p }
+}

@@ -1,0 +1,40 @@
+// Fixture: test-gated vs non-test panic-family calls.
+
+fn hot_path(v: &[u32]) -> u32 {
+    let first = v.first().unwrap(); // finding 1
+    let second = v.get(1).expect("second"); // finding 2
+    if v.len() > 9000 {
+        panic!("too big"); // finding 3
+    }
+    first + second
+}
+
+fn tolerated(v: &[u32]) -> u32 {
+    // unwrap_or / unwrap_or_else cannot panic and must not count.
+    v.first().copied().unwrap_or_else(|| 0) + v.get(1).copied().unwrap_or(0)
+}
+
+#[cfg(not(test))]
+fn also_production(v: &[u32]) -> u32 {
+    v.first().copied().unwrap() // finding 4: cfg(not(test)) is live code
+}
+
+#[cfg(any(test, unix))]
+fn maybe_production() {
+    todo!() // finding 5: may still compile outside test builds
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn gated_calls_do_not_count() {
+        super::hot_path(&[1, 2]).to_string().parse::<u32>().unwrap();
+        assert!(std::panic::catch_unwind(|| panic!("in test")).is_err());
+        Vec::<u32>::new().first().expect("still in tests");
+    }
+}
+
+#[cfg(all(test, feature = "slow"))]
+fn gated_helper() {
+    Vec::<u32>::new().first().unwrap();
+}
