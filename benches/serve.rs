@@ -8,6 +8,7 @@
 use largevis::bench::{bench_scale, Table};
 use largevis::config::{PipelineConfig, SearchMode, ServeConfig};
 use largevis::coordinator::CheckpointPaths;
+use largevis::data::chunked::copied_bytes;
 use largevis::serve::{Server, ServerState};
 use largevis::util::timer::Timer;
 use std::net::SocketAddr;
@@ -19,6 +20,40 @@ use util::{json_row, request, KeepAlive};
 /// One request on a fresh connection (`Connection: close`).
 fn request_close(addr: SocketAddr, method: &str, path: &str, body: &str) -> u16 {
     request(addr, method, path, Some(body)).0
+}
+
+/// Fabricated checkpoint directory for the publish-scaling rows: `n`
+/// collinear 4-d points with a degree-4 ring KNN (the same shape the
+/// `publish_cost` test uses, so bench and regression test measure the
+/// same path).
+fn fabricate_base(dir: &std::path::Path, n: usize) -> anyhow::Result<()> {
+    use largevis::data::formats::{binary, checkpoint};
+    use largevis::data::matrix::Matrix;
+    use largevis::knn::KnnGraph;
+    std::fs::create_dir_all(dir)?;
+    let paths = CheckpointPaths::in_dir(dir);
+    let data: Vec<f32> = (0..n).flat_map(|i| [i as f32 * 0.25; 4]).collect();
+    let data = Matrix::from_vec(data, n, 4);
+    let layout: Vec<f32> = (0..n * 2).map(|i| i as f32 * 0.5).collect();
+    binary::write_binary(&paths.data, &data)?;
+    binary::write_binary(&paths.layout, &Matrix::from_vec(layout, n, 2))?;
+    let mut knn = KnnGraph::empty(n, 4);
+    for i in 0..n {
+        let mut row: Vec<(u32, f32)> = [n - 2, n - 1, 1, 2]
+            .iter()
+            .map(|&off| {
+                let j = (i + off) % n;
+                let dd: f32 =
+                    data.row(i).iter().zip(data.row(j)).map(|(a, b)| (a - b) * (a - b)).sum();
+                (j as u32, dd)
+            })
+            .collect();
+        row.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        knn.neighbors[i] = row;
+    }
+    checkpoint::write_knn(&paths.knn, &knn)?;
+    std::fs::write(&paths.meta, "publish-bench")?;
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -226,6 +261,65 @@ fn main() -> anyhow::Result<()> {
 
     handle.shutdown();
     server_thread.join().expect("server thread")?;
+
+    // Publish scaling: insert rows/sec and per-publish latency +
+    // copied bytes at three chunk-aligned base sizes (in-process, no
+    // HTTP framing). The chunked copy-on-write snapshot store makes a
+    // publish O(batch); these three rows catch any super-constant
+    // degradation with the base size.
+    for &full_base in &[4096usize, 16_384, 65_536] {
+        let chunks =
+            ((full_base as f64 * bench_scale() / 1024.0).round() as usize).max(1);
+        let base_n = chunks * 1024;
+        let dir = std::env::temp_dir()
+            .join(format!("largevis_serve_bench_pub_{}_{base_n}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        fabricate_base(&dir, base_n)?;
+        let st = ServerState::load(ServeConfig {
+            checkpoints: dir.clone(),
+            search: SearchMode::Exact,
+            insert_samples: 8,
+            refine_samples: 0,
+            ..Default::default()
+        })?;
+        let (batch_rows, batches) = (8usize, 12usize);
+        let bytes0 = copied_bytes();
+        let t = Timer::start("insert-batch-publish");
+        for b in 0..batches {
+            let mut vals = Vec::with_capacity(batch_rows * 4);
+            for r in 0..batch_rows {
+                let near = (100 + 40 * r + 3 * b) as f32;
+                vals.extend_from_slice(&[near * 0.25 + 0.1; 4]);
+            }
+            st.insert(&largevis::data::matrix::Matrix::from_vec(vals, batch_rows, 4))?;
+        }
+        let secs = t.report();
+        let rows = batch_rows * batches;
+        let rps = rows as f64 / secs.max(1e-9);
+        let publish_us = secs * 1e6 / batches as f64;
+        let copied_per_publish = (copied_bytes() - bytes0) / batches as u64;
+        table.row(&[
+            format!("insert_batch/base={base_n}"),
+            "rows/s".into(),
+            format!("{rps:.0}"),
+        ]);
+        table.row(&[
+            format!("insert_batch/base={base_n}"),
+            "us/publish".into(),
+            format!("{publish_us:.0}"),
+        ]);
+        table.row(&[
+            format!("insert_batch/base={base_n}"),
+            "copied B/publish".into(),
+            format!("{copied_per_publish}"),
+        ]);
+        json_rows.push(format!(
+            "{{\"workload\":\"insert_batch_publish\",\"base_rows\":{base_n},\"rows\":{rows},\
+             \"secs\":{secs:.4},\"per_sec\":{rps:.1},\"publish_us\":{publish_us:.1},\
+             \"copied_bytes_per_publish\":{copied_per_publish}}}"
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     table.print();
     table.write_tsv("serve_throughput")?;

@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
         inc.add_points(&points);
         let secs = t.report();
         let acc = knn_accuracy(
-            &inc.layout,
+            &inc.layout.to_matrix(),
             &labels[..inc.n()],
             &KnnEvalConfig { k: 5, sample: 2000, ..Default::default() },
         );
@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
 
     render_scatter(
         std::path::Path::new("target/run/dynamic_updates.svg"),
-        &inc.layout,
+        &inc.layout.to_matrix(),
         Some(&labels),
         8,
         &ScatterStyle { title: "incremental insertions (frozen base)".into(), ..Default::default() },
@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
     inc.reoptimize();
     t.report();
     let acc = knn_accuracy(
-        &inc.layout,
+        &inc.layout.to_matrix(),
         &labels,
         &KnnEvalConfig { k: 5, sample: 2000, ..Default::default() },
     );

@@ -1,0 +1,602 @@
+//! Chunked copy-on-write storage for the serving snapshot path.
+//!
+//! The epoch-swap serving design (see `serve/state.rs`) publishes a
+//! fresh immutable [`Snapshot`] per insert batch. With flat matrices a
+//! publish is an O(N) memcpy of every row, so insert throughput decays
+//! with base size. The types here split each store into fixed-size
+//! immutable chunks behind [`Arc`]s:
+//!
+//! - [`ChunkedMatrix`] — row-major `f32` rows (data and layout),
+//!   [`MATRIX_CHUNK_ROWS`] rows per chunk;
+//! - [`ChunkedKnn`] — per-point sorted neighbor lists,
+//!   [`KNN_CHUNK_ROWS`] rows per chunk (smaller, because the insert
+//!   path splices in-edges into *scattered* base rows);
+//! - [`ChunkedLabels`] — class labels, [`LABEL_CHUNK_LEN`] per chunk.
+//!
+//! `Clone` on any of them copies only the chunk *pointers*; mutation
+//! goes through copy-on-write handles ([`ChunkedMatrix::row_mut`],
+//! [`ChunkedKnn::row_mut`], `push_*`) that clone a chunk's payload only
+//! when it is still shared with an older epoch. A publish therefore
+//! copies O(batch · chunk_size) bytes, independent of N, and a reader
+//! holding an old snapshot keeps bit-identical rows forever.
+//!
+//! The chunk layout is a pure function of `(len, chunk_size)` — chunk
+//! `c` always holds rows `[c·chunk_size, min((c+1)·chunk_size, len))`
+//! — so WAL replay reproduces the exact same structure and the
+//! checkpoint writers can stream chunk blocks without changing the
+//! on-disk bytes.
+//!
+//! Every payload byte copied by a copy-on-write clone is added to a
+//! process-global counter ([`copied_bytes`]); the publish-cost
+//! regression harness (`rust/tests/publish_cost.rs`) reads it to prove
+//! publishes stay O(batch) as the base grows.
+//!
+//! [`Snapshot`]: crate::serve::state::Snapshot
+
+use crate::data::matrix::{Matrix, RowStore};
+use crate::knn::{KnnGraph, NeighborStore};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Rows per [`ChunkedMatrix`] chunk. 1024 rows × d=100 floats is
+/// ~400 KiB — big enough that the pointer vector stays tiny, small
+/// enough that one touched row costs a bounded copy.
+pub const MATRIX_CHUNK_ROWS: usize = 1024;
+
+/// Rows per [`ChunkedKnn`] chunk. Kept small because an insert splices
+/// in-edges into up to `k+1` *scattered* base rows, each dirtying its
+/// whole chunk; 32 rows bounds that collateral copying.
+pub const KNN_CHUNK_ROWS: usize = 32;
+
+/// Labels per [`ChunkedLabels`] chunk (labels are 4 bytes each, so the
+/// append path touches one small tail chunk per batch).
+pub const LABEL_CHUNK_LEN: usize = 4096;
+
+/// Process-global count of payload bytes copied by copy-on-write chunk
+/// clones (monotone; never reset). Construction and explicit
+/// conversions do not count — only clones forced by mutating a chunk
+/// still shared with another epoch, plus the grid's bounded
+/// overflow-list copy per snapshot clone.
+static COPIED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Total copy-on-write bytes copied so far in this process (see
+/// [`COPIED_BYTES`] for what is counted). The publish-cost harness
+/// samples this before/after an insert to measure bytes per publish.
+pub fn copied_bytes() -> u64 {
+    // ordering: Relaxed — standalone statistics counter; readers only
+    // need an eventually-consistent total, no happens-before edges.
+    COPIED_BYTES.load(Ordering::Relaxed)
+}
+
+/// Record `bytes` of copy-on-write copying (also used by
+/// `render::grid` for its per-clone overflow-list copy).
+pub(crate) fn count_copied(bytes: usize) {
+    // ordering: Relaxed — standalone statistics counter; no
+    // happens-before needed, torn totals are impossible on u64 RMW.
+    COPIED_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Row-major `f32` matrix stored as fixed-size immutable chunks shared
+/// between epochs via [`Arc`]. `Clone` is O(chunk count) pointer
+/// copies; mutation copies only the touched chunk, and only if shared.
+#[derive(Clone, Debug)]
+pub struct ChunkedMatrix {
+    /// Chunk `c` holds rows `[c*chunk_rows, min((c+1)*chunk_rows, n))`,
+    /// each chunk vector exactly `rows_in_chunk * d` floats.
+    chunks: Vec<Arc<Vec<f32>>>,
+    chunk_rows: usize,
+    n: usize,
+    d: usize,
+}
+
+impl ChunkedMatrix {
+    /// Chunk a flat matrix (`chunk_rows` must be non-zero). The
+    /// conversion copy is construction, not COW, and is not counted.
+    pub fn from_matrix(m: &Matrix, chunk_rows: usize) -> Self {
+        assert!(chunk_rows > 0, "chunk_rows must be non-zero");
+        let (n, d) = (m.n(), m.d());
+        let mut chunks = Vec::with_capacity(n.div_ceil(chunk_rows));
+        let mut i = 0;
+        while i < n {
+            let hi = (i + chunk_rows).min(n);
+            chunks.push(Arc::new(m.as_slice()[i * d..hi * d].to_vec()));
+            i = hi;
+        }
+        ChunkedMatrix { chunks, chunk_rows, n, d }
+    }
+
+    /// Flatten back into a contiguous [`Matrix`] (O(N) copy; used by
+    /// rarely-run full rebuilds, not the serving hot path).
+    pub fn to_matrix(&self) -> Matrix {
+        let mut data = Vec::with_capacity(self.n * self.d);
+        for c in &self.chunks {
+            data.extend_from_slice(c);
+        }
+        Matrix::from_vec(data, self.n, self.d)
+    }
+
+    /// Number of rows (points).
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of columns (dimensions).
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Row `i` as a slice — rows never straddle a chunk boundary, so
+    /// this has the same shape as [`Matrix::row`].
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.n, "row {i} out of bounds (n={})", self.n);
+        let (ci, ri) = (i / self.chunk_rows, i % self.chunk_rows);
+        &self.chunks[ci][ri * self.d..(ri + 1) * self.d]
+    }
+
+    /// Copy-on-write handle for chunk `ci`: clones the payload (and
+    /// counts the bytes) only if the chunk is still shared.
+    fn chunk_mut(&mut self, ci: usize) -> &mut Vec<f32> {
+        let arc = &mut self.chunks[ci];
+        if Arc::get_mut(arc).is_none() {
+            count_copied(arc.len() * std::mem::size_of::<f32>());
+        }
+        Arc::make_mut(arc)
+    }
+
+    /// Row `i` as a mutable slice, copy-on-write: dirties (at most)
+    /// one chunk.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert!(i < self.n, "row {i} out of bounds (n={})", self.n);
+        let (ci, ri) = (i / self.chunk_rows, i % self.chunk_rows);
+        let d = self.d;
+        &mut self.chunk_mut(ci)[ri * d..(ri + 1) * d]
+    }
+
+    /// Append a row, copy-on-write on the tail chunk (a fresh chunk is
+    /// started whenever the previous one is full, so the layout
+    /// invariant is preserved).
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.d, "row length {} != d {}", row.len(), self.d);
+        if self.n % self.chunk_rows == 0 {
+            self.chunks.push(Arc::new(Vec::with_capacity(self.chunk_rows * self.d)));
+        }
+        let ci = self.n / self.chunk_rows;
+        self.chunk_mut(ci).extend_from_slice(row);
+        self.n += 1;
+    }
+
+    /// Squared Euclidean distance between rows `i` and `j`.
+    #[inline]
+    pub fn sqdist(&self, i: usize, j: usize) -> f32 {
+        crate::kernels::sqdist(self.row(i), self.row(j))
+    }
+
+    /// All values in row-major order (chunk-aware; used by tests and
+    /// finiteness sweeps instead of `as_slice`).
+    pub fn values(&self) -> impl Iterator<Item = f32> + '_ {
+        self.chunks.iter().flat_map(|c| c.iter().copied())
+    }
+
+    /// Number of chunks currently backing the matrix.
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Whether chunk `ci` of `a` and `b` is the *same* shared
+    /// allocation (`Arc::ptr_eq`) — the sharing probe used by the
+    /// chunk-sharing property tests.
+    pub fn chunk_shared(a: &ChunkedMatrix, b: &ChunkedMatrix, ci: usize) -> bool {
+        Arc::ptr_eq(&a.chunks[ci], &b.chunks[ci])
+    }
+
+    /// Rows per chunk this matrix was built with.
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+}
+
+/// Bitwise row equality (`f32::to_bits`), so replay/restart identity
+/// checks are exact and NaN-proof regardless of chunk boundaries.
+impl PartialEq for ChunkedMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n
+            && self.d == other.d
+            && (0..self.n).all(|i| {
+                self.row(i).iter().zip(other.row(i)).all(|(a, b)| a.to_bits() == b.to_bits())
+            })
+    }
+}
+
+impl RowStore for ChunkedMatrix {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn row(&self, i: usize) -> &[f32] {
+        ChunkedMatrix::row(self, i)
+    }
+    fn row_block(&self, i: usize) -> (&[f32], usize) {
+        assert!(i < self.n, "row {i} out of bounds (n={})", self.n);
+        let (ci, ri) = (i / self.chunk_rows, i % self.chunk_rows);
+        let hi = ((ci + 1) * self.chunk_rows).min(self.n);
+        (&self.chunks[ci][ri * self.d..], hi - i)
+    }
+}
+
+/// K-nearest-neighbor lists stored as fixed-size immutable chunks of
+/// rows shared between epochs via [`Arc`]. Mirrors
+/// [`KnnGraph`]'s invariants (sorted, distinct, no self-loops, ≤ k).
+#[derive(Clone, Debug)]
+pub struct ChunkedKnn {
+    /// Chunk `c` holds rows `[c*chunk_rows, min((c+1)*chunk_rows, n))`.
+    chunks: Vec<Arc<Vec<Vec<(u32, f32)>>>>,
+    chunk_rows: usize,
+    n: usize,
+    /// Requested K (public for parity with [`KnnGraph::k`]).
+    pub k: usize,
+}
+
+impl ChunkedKnn {
+    /// Chunk a flat graph (`chunk_rows` must be non-zero); the
+    /// conversion copy is not counted as COW.
+    pub fn from_graph(g: &KnnGraph, chunk_rows: usize) -> Self {
+        assert!(chunk_rows > 0, "chunk_rows must be non-zero");
+        let n = g.n();
+        let mut chunks = Vec::with_capacity(n.div_ceil(chunk_rows));
+        let mut i = 0;
+        while i < n {
+            let hi = (i + chunk_rows).min(n);
+            chunks.push(Arc::new(g.neighbors[i..hi].to_vec()));
+            i = hi;
+        }
+        ChunkedKnn { chunks, chunk_rows, n, k: g.k }
+    }
+
+    /// Flatten back into a [`KnnGraph`] (O(N) copy; full-rebuild path
+    /// only).
+    pub fn to_graph(&self) -> KnnGraph {
+        let mut neighbors = Vec::with_capacity(self.n);
+        for c in &self.chunks {
+            neighbors.extend(c.iter().cloned());
+        }
+        KnnGraph { neighbors, k: self.k }
+    }
+
+    /// Number of points.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Neighbor list of point `i`: sorted `(id, sqdist)` pairs.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[(u32, f32)] {
+        debug_assert!(i < self.n, "row {i} out of bounds (n={})", self.n);
+        let (ci, ri) = (i / self.chunk_rows, i % self.chunk_rows);
+        &self.chunks[ci][ri]
+    }
+
+    /// Copy-on-write handle for chunk `ci`, counting the payload bytes
+    /// of all lists in the chunk when a shared chunk must be cloned.
+    fn chunk_mut(&mut self, ci: usize) -> &mut Vec<Vec<(u32, f32)>> {
+        let arc = &mut self.chunks[ci];
+        if Arc::get_mut(arc).is_none() {
+            let bytes: usize =
+                arc.iter().map(|r| r.len() * std::mem::size_of::<(u32, f32)>()).sum();
+            count_copied(bytes);
+        }
+        Arc::make_mut(arc)
+    }
+
+    /// Mutable neighbor list of point `i`, copy-on-write: dirties (at
+    /// most) one chunk. The insert path splices in-edges through this.
+    pub fn row_mut(&mut self, i: usize) -> &mut Vec<(u32, f32)> {
+        assert!(i < self.n, "row {i} out of bounds (n={})", self.n);
+        let (ci, ri) = (i / self.chunk_rows, i % self.chunk_rows);
+        &mut self.chunk_mut(ci)[ri]
+    }
+
+    /// Append a point's neighbor list, copy-on-write on the tail chunk.
+    pub fn push_row(&mut self, row: Vec<(u32, f32)>) {
+        if self.n % self.chunk_rows == 0 {
+            self.chunks.push(Arc::new(Vec::with_capacity(self.chunk_rows)));
+        }
+        let ci = self.n / self.chunk_rows;
+        self.chunk_mut(ci).push(row);
+        self.n += 1;
+    }
+
+    /// Validate the same structural invariants as
+    /// [`KnnGraph::check_invariants`] (no self-loops, sorted, distinct,
+    /// finite, ≤ K entries).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for i in 0..self.n {
+            let nb = self.row(i);
+            if nb.len() > self.k {
+                return Err(format!("node {i}: {} neighbors > k={}", nb.len(), self.k));
+            }
+            let mut seen = std::collections::HashSet::new();
+            let mut last = f32::NEG_INFINITY;
+            for &(id, d) in nb {
+                if id as usize == i {
+                    return Err(format!("node {i}: self-loop"));
+                }
+                if !seen.insert(id) {
+                    return Err(format!("node {i}: duplicate neighbor {id}"));
+                }
+                if d < last {
+                    return Err(format!("node {i}: distances not sorted"));
+                }
+                if !d.is_finite() {
+                    return Err(format!("node {i}: non-finite distance"));
+                }
+                last = d;
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of chunks currently backing the graph.
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Whether chunk `ci` of `a` and `b` is the same shared allocation.
+    pub fn chunk_shared(a: &ChunkedKnn, b: &ChunkedKnn, ci: usize) -> bool {
+        Arc::ptr_eq(&a.chunks[ci], &b.chunks[ci])
+    }
+
+    /// Rows per chunk this graph was built with.
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+}
+
+/// Bitwise equality of every neighbor list (ids and distance bits).
+impl PartialEq for ChunkedKnn {
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n
+            && self.k == other.k
+            && (0..self.n).all(|i| {
+                let (a, b) = (self.row(i), other.row(i));
+                a.len() == b.len()
+                    && a.iter()
+                        .zip(b)
+                        .all(|(&(ia, da), &(ib, db))| ia == ib && da.to_bits() == db.to_bits())
+            })
+    }
+}
+
+impl NeighborStore for ChunkedKnn {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn row(&self, i: usize) -> &[(u32, f32)] {
+        ChunkedKnn::row(self, i)
+    }
+}
+
+/// Class labels stored as fixed-size immutable chunks shared between
+/// epochs via [`Arc`]; the insert path only ever appends.
+#[derive(Clone, Debug)]
+pub struct ChunkedLabels {
+    /// Chunk `c` holds labels `[c*chunk_len, min((c+1)*chunk_len, len))`.
+    chunks: Vec<Arc<Vec<u32>>>,
+    chunk_len: usize,
+    len: usize,
+}
+
+impl ChunkedLabels {
+    /// Chunk a flat label array (`chunk_len` must be non-zero).
+    pub fn from_slice(labels: &[u32], chunk_len: usize) -> Self {
+        assert!(chunk_len > 0, "chunk_len must be non-zero");
+        let chunks =
+            labels.chunks(chunk_len).map(|c| Arc::new(c.to_vec())).collect::<Vec<_>>();
+        ChunkedLabels { chunks, chunk_len, len: labels.len() }
+    }
+
+    /// Number of labels.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether there are no labels.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Label of point `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        debug_assert!(i < self.len, "label {i} out of bounds (len={})", self.len);
+        self.chunks[i / self.chunk_len][i % self.chunk_len]
+    }
+
+    /// Append a label, copy-on-write on the tail chunk.
+    pub fn push(&mut self, v: u32) {
+        if self.len % self.chunk_len == 0 {
+            self.chunks.push(Arc::new(Vec::with_capacity(self.chunk_len)));
+        }
+        let ci = self.len / self.chunk_len;
+        let arc = &mut self.chunks[ci];
+        if Arc::get_mut(arc).is_none() {
+            count_copied(arc.len() * std::mem::size_of::<u32>());
+        }
+        Arc::make_mut(arc).push(v);
+        self.len += 1;
+    }
+
+    /// Flatten into a contiguous vector (compaction path only).
+    pub fn to_vec(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.len);
+        for c in &self.chunks {
+            out.extend_from_slice(c);
+        }
+        out
+    }
+}
+
+/// Value equality regardless of chunk boundaries.
+impl PartialEq for ChunkedLabels {
+    fn eq(&self, other: &Self) -> bool {
+        self.len == other.len && (0..self.len).all(|i| self.get(i) == other.get(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_matrix(n: usize, d: usize) -> Matrix {
+        Matrix::from_vec((0..n * d).map(|x| x as f32).collect(), n, d)
+    }
+
+    #[test]
+    fn roundtrip_and_row_access() {
+        let m = seq_matrix(10, 3);
+        let c = ChunkedMatrix::from_matrix(&m, 4);
+        assert_eq!((c.n(), c.d(), c.n_chunks()), (10, 3, 3));
+        for i in 0..10 {
+            assert_eq!(c.row(i), m.row(i));
+        }
+        assert_eq!(c.to_matrix(), m);
+        assert_eq!(c.values().collect::<Vec<_>>(), m.as_slice());
+        assert_eq!(c.sqdist(0, 1), m.sqdist(0, 1));
+    }
+
+    #[test]
+    fn row_block_covers_matrix_in_chunk_steps() {
+        let m = seq_matrix(11, 2);
+        let c = ChunkedMatrix::from_matrix(&m, 4);
+        let mut i = 0;
+        let mut flat = Vec::new();
+        while i < RowStore::n(&c) {
+            let (block, rows) = c.row_block(i);
+            assert!(rows > 0 && block.len() >= rows * 2);
+            flat.extend_from_slice(&block[..rows * 2]);
+            i += rows;
+        }
+        assert_eq!(flat, m.as_slice());
+        // The flat Matrix's row_block is the whole remainder.
+        let (block, rows) = m.row_block(3);
+        assert_eq!((block.len(), rows), (16, 8));
+    }
+
+    #[test]
+    fn clone_shares_and_cow_unshares_one_chunk() {
+        let m = seq_matrix(8, 2);
+        let mut a = ChunkedMatrix::from_matrix(&m, 4);
+        let b = a.clone();
+        assert!(ChunkedMatrix::chunk_shared(&a, &b, 0));
+        assert!(ChunkedMatrix::chunk_shared(&a, &b, 1));
+        let before = copied_bytes();
+        a.row_mut(1)[0] = 99.0;
+        // The shared chunk was cloned (4 rows × 2 floats × 4 bytes)...
+        assert!(copied_bytes() - before >= 32);
+        assert!(!ChunkedMatrix::chunk_shared(&a, &b, 0));
+        // ...the untouched chunk is still the same allocation...
+        assert!(ChunkedMatrix::chunk_shared(&a, &b, 1));
+        // ...and the old epoch still sees the original bits.
+        assert_eq!(b.row(1), m.row(1));
+        assert_eq!(a.row(1)[0], 99.0);
+        // Mutating an unshared chunk copies nothing further.
+        let before = copied_bytes();
+        a.row_mut(1)[1] = 7.0;
+        assert_eq!(copied_bytes(), before);
+    }
+
+    #[test]
+    fn push_row_extends_tail_and_starts_new_chunks() {
+        let m = seq_matrix(3, 2);
+        let mut c = ChunkedMatrix::from_matrix(&m, 4);
+        let old = c.clone();
+        c.push_row(&[50.0, 51.0]);
+        c.push_row(&[52.0, 53.0]);
+        assert_eq!((c.n(), c.n_chunks()), (5, 2));
+        assert_eq!(c.row(3), &[50.0, 51.0]);
+        assert_eq!(c.row(4), &[52.0, 53.0]);
+        // The old epoch still has exactly its 3 rows, bit-identical.
+        assert_eq!((old.n(), old.n_chunks()), (3, 1));
+        assert_eq!(old.row(2), m.row(2));
+        // Layout matches a fresh conversion of the flattened result.
+        let rebuilt = ChunkedMatrix::from_matrix(&c.to_matrix(), 4);
+        assert_eq!(rebuilt, c);
+        assert_eq!(rebuilt.n_chunks(), c.n_chunks());
+    }
+
+    #[test]
+    fn bitwise_equality_is_nan_aware() {
+        let m = Matrix::from_vec(vec![f32::NAN, 1.0], 1, 2);
+        let a = ChunkedMatrix::from_matrix(&m, 4);
+        let b = a.clone();
+        assert_eq!(a, b); // NaN bits equal => equal
+        let flat = Matrix::from_vec(vec![f32::NAN, 2.0], 1, 2);
+        assert_ne!(a, ChunkedMatrix::from_matrix(&flat, 4));
+    }
+
+    fn ring_graph(n: usize) -> KnnGraph {
+        let mut g = KnnGraph::empty(n, 2);
+        for i in 0..n {
+            g.neighbors[i] = vec![(((i + 1) % n) as u32, 1.0)];
+        }
+        g
+    }
+
+    #[test]
+    fn knn_roundtrip_cow_and_invariants() {
+        let g = ring_graph(10);
+        let mut a = ChunkedKnn::from_graph(&g, 4);
+        assert_eq!((a.n(), a.k, a.n_chunks()), (10, 2, 3));
+        assert!(a.check_invariants().is_ok());
+        let b = a.clone();
+        let before = copied_bytes();
+        a.row_mut(0).push((5, 2.0));
+        assert!(copied_bytes() > before);
+        assert!(!ChunkedKnn::chunk_shared(&a, &b, 0));
+        assert!(ChunkedKnn::chunk_shared(&a, &b, 1));
+        assert_eq!(b.row(0), g.neighbors[0].as_slice());
+        assert_eq!(a.row(0).len(), 2);
+        // Append keeps the old epoch intact and the flat roundtrip exact.
+        a.push_row(vec![(0, 3.0)]);
+        assert_eq!(a.n(), 11);
+        assert_eq!(b.n(), 10);
+        let flat = a.to_graph();
+        assert_eq!(ChunkedKnn::from_graph(&flat, 4), a);
+    }
+
+    #[test]
+    fn labels_append_only_sharing() {
+        let mut a = ChunkedLabels::from_slice(&[1, 2, 3], 4);
+        let b = a.clone();
+        a.push(9);
+        assert_eq!((a.len(), b.len()), (4, 3));
+        assert_eq!(a.get(3), 9);
+        assert_eq!(b.to_vec(), vec![1, 2, 3]);
+        assert_eq!(a.to_vec(), vec![1, 2, 3, 9]);
+        // Chunk boundary: pushing past chunk_len opens a new chunk.
+        let mut c = ChunkedLabels::from_slice(&[0; 4], 4);
+        c.push(7);
+        assert_eq!((c.len(), c.get(4)), (5, 7));
+        assert_eq!(ChunkedLabels::from_slice(&c.to_vec(), 4), c);
+        assert!(ChunkedLabels::from_slice(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn copied_bytes_is_monotone() {
+        let before = copied_bytes();
+        let m = seq_matrix(4, 2);
+        let mut a = ChunkedMatrix::from_matrix(&m, 4);
+        let _keep = a.clone();
+        a.row_mut(0)[0] = 1.0;
+        assert!(copied_bytes() >= before);
+    }
+}

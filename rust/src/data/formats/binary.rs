@@ -13,7 +13,7 @@
 //!   header's count is patched on [`MatrixWriter::finish`].
 
 use crate::data::formats::{DEFAULT_CHUNK_ROWS, UNTRUSTED_CAPACITY_HINT};
-use crate::data::matrix::Matrix;
+use crate::data::matrix::{Matrix, RowStore};
 use crate::util::faultio::{DurableFile, RealStorage, Storage};
 use anyhow::{bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, SeekFrom, Write};
@@ -219,18 +219,29 @@ pub fn read_binary(path: &Path) -> Result<Matrix> {
     Ok(Matrix::from_vec(data, n, d))
 }
 
-/// Write a whole matrix to `path` in `.lvec` format.
-pub fn write_binary(path: &Path, m: &Matrix) -> Result<()> {
+/// Write a whole matrix to `path` in `.lvec` format. Generic over
+/// [`RowStore`], so both the flat [`Matrix`] and the serving path's
+/// chunked store serialize through the same code — the bytes written
+/// depend only on the row values, never on the chunk layout.
+pub fn write_binary(path: &Path, m: &impl RowStore) -> Result<()> {
     write_binary_with(&RealStorage, path, m)
 }
 
 /// [`write_binary`] through an explicit [`Storage`] — the durable
-/// (fault-injectable) path WAL compaction uses.
-pub fn write_binary_with(storage: &dyn Storage, path: &Path, m: &Matrix) -> Result<()> {
-    let mut w = MatrixWriter::create_with(storage, path, m.d())?;
-    w.write_values(m.as_slice())?;
-    let n = w.finish()?;
-    debug_assert_eq!(n, m.n());
+/// (fault-injectable) path WAL compaction uses. Streams one
+/// [`RowStore::row_block`] at a time, so a chunked store is written
+/// without materializing a contiguous copy.
+pub fn write_binary_with(storage: &dyn Storage, path: &Path, m: &impl RowStore) -> Result<()> {
+    let (n, d) = (m.n(), m.d());
+    let mut w = MatrixWriter::create_with(storage, path, d)?;
+    let mut i = 0;
+    while i < n {
+        let (block, rows) = m.row_block(i);
+        w.write_values(&block[..rows * d])?;
+        i += rows;
+    }
+    let written = w.finish()?;
+    debug_assert_eq!(written, n);
     Ok(())
 }
 

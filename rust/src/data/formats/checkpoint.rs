@@ -22,7 +22,7 @@ use crate::data::formats::binary::{
 };
 use crate::data::formats::UNTRUSTED_CAPACITY_HINT;
 use crate::graph::sparse::CsrGraph;
-use crate::knn::KnnGraph;
+use crate::knn::{KnnGraph, NeighborStore};
 use crate::util::faultio::{DurableFile, RealStorage, Storage};
 use anyhow::{bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -63,19 +63,22 @@ fn open_reader(path: &Path, magic: &[u8; 4]) -> Result<BufReader<std::fs::File>>
     Ok(r)
 }
 
-/// Write a KNN graph checkpoint.
-pub fn write_knn(path: &Path, g: &KnnGraph) -> Result<()> {
+/// Write a KNN graph checkpoint. Generic over [`NeighborStore`]: the
+/// format is written row by row, so the flat [`KnnGraph`] and the
+/// serving path's chunked store produce byte-identical files.
+pub fn write_knn(path: &Path, g: &impl NeighborStore) -> Result<()> {
     write_knn_with(&RealStorage, path, g)
 }
 
 /// [`write_knn`] through an explicit [`Storage`] — the durable
 /// (fault-injectable) path WAL compaction uses.
-pub fn write_knn_with(storage: &dyn Storage, path: &Path, g: &KnnGraph) -> Result<()> {
+pub fn write_knn_with(storage: &dyn Storage, path: &Path, g: &impl NeighborStore) -> Result<()> {
     let mut w = open_writer(storage, path, KNN_MAGIC)?;
     w.write_all(&(g.n() as u64).to_le_bytes())?;
-    w.write_all(&(g.k as u64).to_le_bytes())?;
+    w.write_all(&(g.k() as u64).to_le_bytes())?;
     let mut buf: Vec<u8> = Vec::new();
-    for row in &g.neighbors {
+    for i in 0..g.n() {
+        let row = g.row(i);
         buf.clear();
         buf.extend_from_slice(&(row.len() as u32).to_le_bytes());
         for &(id, dist) in row {

@@ -109,6 +109,41 @@ impl Matrix {
     }
 }
 
+/// Read-only row access shared by the flat [`Matrix`] and the serving
+/// path's chunked copy-on-write store
+/// ([`ChunkedMatrix`](crate::data::chunked::ChunkedMatrix)). Rows never
+/// straddle chunk boundaries, so `row` keeps the familiar slice shape;
+/// block-oriented consumers (the batched distance kernels, checkpoint
+/// writers) iterate [`RowStore::row_block`] instead of assuming one
+/// contiguous buffer.
+pub trait RowStore {
+    /// Number of rows.
+    fn n(&self) -> usize;
+    /// Number of columns.
+    fn d(&self) -> usize;
+    /// Row `i` as a slice.
+    fn row(&self, i: usize) -> &[f32];
+    /// Longest contiguous block starting at row `i`: the backing slice
+    /// (at least `rows * d` values) and `rows`, the number of full rows
+    /// it holds. Iterating `i += rows` visits every row exactly once.
+    fn row_block(&self, i: usize) -> (&[f32], usize);
+}
+
+impl RowStore for Matrix {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn row(&self, i: usize) -> &[f32] {
+        Matrix::row(self, i)
+    }
+    fn row_block(&self, i: usize) -> (&[f32], usize) {
+        (&self.data[i * self.d..], self.n - i)
+    }
+}
+
 // The distance kernels moved to the runtime-dispatched SIMD subsystem
 // in `crate::kernels` (scalar reference lives in `kernels::scalar`).
 // Re-exported here so `data::matrix::{sqdist, sqdist_bounded, dot}`

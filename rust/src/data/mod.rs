@@ -7,6 +7,7 @@
 //! `DESIGN.md` §Data-substitutions for the mapping rationale.
 
 pub mod matrix;
+pub mod chunked;
 pub mod io;
 pub mod formats;
 pub mod synth;

@@ -30,7 +30,7 @@
 //! [`KernelSet::sqdist_x4`]: super::KernelSet::sqdist_x4
 
 use super::KernelSet;
-use crate::data::matrix::Matrix;
+use crate::data::matrix::RowStore;
 use crate::util::heap::BoundedMaxHeap;
 use std::cell::RefCell;
 
@@ -46,7 +46,7 @@ thread_local! {
 /// written into `out` (cleared first; `out[r]` pairs with `ids[r]`).
 ///
 /// `query.len()` must equal `data.d()`; every id must be `< data.n()`.
-pub fn sqdist_batch(query: &[f32], data: &Matrix, ids: &[u32], out: &mut Vec<f32>) {
+pub fn sqdist_batch(query: &[f32], data: &impl RowStore, ids: &[u32], out: &mut Vec<f32>) {
     let d = data.d();
     debug_assert_eq!(query.len(), d);
     out.clear();
@@ -73,10 +73,13 @@ pub fn sqdist_batch(query: &[f32], data: &Matrix, ids: &[u32], out: &mut Vec<f32
 }
 
 /// Squared distance from `query` to *every* row of `data`, written into
-/// `out` (cleared first). The rows are already contiguous, so this
-/// skips the gather and runs the blocked kernel over the matrix buffer
-/// directly — the k-means assignment inner loop.
-pub fn sqdist_to_all(query: &[f32], data: &Matrix, out: &mut Vec<f32>) {
+/// `out` (cleared first). Rows are contiguous within each
+/// [`RowStore::row_block`], so this skips the gather and runs the
+/// blocked kernel over the store's own buffers — one block for the flat
+/// [`Matrix`](crate::data::matrix::Matrix) (the k-means assignment
+/// inner loop), one per chunk for the serving path's
+/// [`ChunkedMatrix`](crate::data::chunked::ChunkedMatrix).
+pub fn sqdist_to_all(query: &[f32], data: &impl RowStore, out: &mut Vec<f32>) {
     let d = data.d();
     debug_assert_eq!(query.len(), d);
     out.clear();
@@ -88,7 +91,13 @@ pub fn sqdist_to_all(query: &[f32], data: &Matrix, out: &mut Vec<f32>) {
         out.resize(data.n(), 0.0);
         return;
     }
-    compute_block(super::active(), query, data.as_slice(), d, data.n(), out);
+    let ks = super::active();
+    let mut i = 0;
+    while i < data.n() {
+        let (block, rows) = data.row_block(i);
+        compute_block(ks, query, block, d, rows, out);
+        i += rows;
+    }
 }
 
 /// The `k` (floored at 1) nearest rows of `data` to `query`, as
@@ -103,7 +112,7 @@ pub fn sqdist_to_all(query: &[f32], data: &Matrix, out: &mut Vec<f32>) {
 /// `k` on entry; ties at equal distance resolve to the lower id).
 pub fn nearest_k(
     query: &[f32],
-    data: &Matrix,
+    data: &impl RowStore,
     k: usize,
     dists: &mut Vec<f32>,
     heap: &mut BoundedMaxHeap,
@@ -149,6 +158,7 @@ fn compute_block(
 mod tests {
     use super::super::scalar;
     use super::*;
+    use crate::data::matrix::Matrix;
     use crate::util::rng::Rng;
 
     fn random_matrix(n: usize, d: usize, seed: u64) -> Matrix {

@@ -57,6 +57,32 @@ impl ScanScratch {
     }
 }
 
+/// Read-only neighbor-list access shared by the flat [`KnnGraph`] and
+/// the serving path's chunked copy-on-write store
+/// ([`ChunkedKnn`](crate::data::chunked::ChunkedKnn)); the navigable
+/// graph walk and the incremental edge calibration read through this so
+/// they serve both representations.
+pub trait NeighborStore {
+    /// Number of points.
+    fn n(&self) -> usize;
+    /// Requested K.
+    fn k(&self) -> usize;
+    /// Neighbor list of point `i`: sorted `(id, sqdist)` pairs.
+    fn row(&self, i: usize) -> &[(u32, f32)];
+}
+
+impl NeighborStore for KnnGraph {
+    fn n(&self) -> usize {
+        self.neighbors.len()
+    }
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn row(&self, i: usize) -> &[(u32, f32)] {
+        &self.neighbors[i]
+    }
+}
+
 /// A (possibly approximate) K-nearest-neighbor graph: for each point,
 /// up to K neighbors sorted ascending by squared distance.
 #[derive(Clone, Debug)]

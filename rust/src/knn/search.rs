@@ -33,11 +33,11 @@
 //! it *falls back to that oracle* rather than returning a silently
 //! truncated result.
 
-use crate::data::matrix::Matrix;
+use crate::data::matrix::RowStore;
 use crate::graph::coarsen::{build_hierarchy, CoarsenConfig};
 use crate::graph::CsrGraph;
 use crate::kernels;
-use crate::knn::KnnGraph;
+use crate::knn::NeighborStore;
 use crate::render::grid::GridIndex;
 use crate::util::heap::BoundedMaxHeap;
 use crate::util::visited::VisitedSet;
@@ -86,7 +86,16 @@ impl SearchIndex {
     /// seeds come from `grid` cell representatives, and failing that
     /// from a deterministic id stride. Always yields at least one seed
     /// for a non-empty dataset.
-    pub fn build(data: &Matrix, knn: &KnnGraph, grid: Option<&GridIndex>, n_seeds: usize) -> Self {
+    ///
+    /// Generic over [`RowStore`]/[`NeighborStore`] so both the offline
+    /// flat matrices and the serving path's chunked stores build the
+    /// same index.
+    pub fn build(
+        data: &impl RowStore,
+        knn: &impl NeighborStore,
+        grid: Option<&GridIndex>,
+        n_seeds: usize,
+    ) -> Self {
         let n = knn.n();
         let n_seeds = n_seeds.max(1);
         assert_eq!(n, data.n(), "search index: knn graph and data disagree on n");
@@ -108,7 +117,8 @@ impl SearchIndex {
         // pairs, so (i→j, j→i) mutual neighbors must collapse to one
         // edge here. Weight 1/(1+d²) so HEM matches close pairs first.
         let mut pairs: Vec<(u32, u32, f64)> = Vec::new();
-        for (i, nb) in knn.neighbors.iter().enumerate() {
+        for i in 0..n {
+            let nb = knn.row(i);
             let i = i as u32;
             for &(j, d) in nb {
                 if i != j {
@@ -175,7 +185,7 @@ impl SearchIndex {
 
 /// Per-cluster member closest to the cluster's data-space mean, for
 /// the coarsest level of `maps` (which has `coarse_n` clusters).
-fn centroid_seeds(data: &Matrix, maps: &[Vec<u32>], coarse_n: usize) -> Vec<u32> {
+fn centroid_seeds(data: &impl RowStore, maps: &[Vec<u32>], coarse_n: usize) -> Vec<u32> {
     let n = data.n();
     let d = data.d();
     // Compose the per-level maps into point → coarsest-cluster.
@@ -328,8 +338,8 @@ fn score_budget(n: usize, ef: usize) -> u64 {
 /// short result.
 pub fn search_nearest(
     query: &[f32],
-    data: &Matrix,
-    knn: &KnnGraph,
+    data: &impl RowStore,
+    knn: &impl NeighborStore,
     index: &SearchIndex,
     k: usize,
     beam_width: usize,
@@ -391,7 +401,7 @@ pub fn search_nearest(
                     break; // nothing in the frontier can improve the pool
                 }
                 scratch.cand.clear();
-                for &(v, _) in &knn.neighbors[u as usize] {
+                for &(v, _) in knn.row(u as usize) {
                     if (v as usize) < n && scratch.seen.insert(v) {
                         scratch.cand.push(v);
                     }
@@ -437,7 +447,8 @@ pub fn search_nearest(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::knn::bruteforce;
+    use crate::data::matrix::Matrix;
+    use crate::knn::{bruteforce, KnnGraph};
     use crate::util::rng::Rng;
 
     fn gaussian_matrix(n: usize, d: usize, seed: u64) -> Matrix {

@@ -20,17 +20,26 @@
 //! CSR only when the overflow exceeds [`GridIndex::rebuild_threshold`].
 //! Per-epoch cost is therefore O(batch) amortized, not O(N)
 //! re-bucketing on every insert batch.
+//!
+//! The immutable CSR arrays live behind an [`Arc`] ([`GridBuckets`]),
+//! so cloning the index for a new snapshot epoch copies one pointer
+//! plus the bounded overflow list — O(batch), never O(N). The
+//! overflow-copy bytes are charged to the copy-on-write counter
+//! ([`crate::data::chunked::copied_bytes`]) alongside the chunk store's
+//! own copies, and a rebuild charges the fresh CSR arrays it writes.
 
-use crate::data::matrix::Matrix;
+use crate::data::chunked;
+use crate::data::matrix::RowStore;
+use std::sync::Arc;
 
 /// A point surfaced by a viewport query: `(id, x, y)`.
 pub type GridPoint = (u32, f32, f32);
 
-/// CSR-bucketed uniform grid over the first two layout dimensions.
-#[derive(Clone, Debug)]
-pub struct GridIndex {
-    /// Cells per axis.
-    g: usize,
+/// The immutable bucketed core of a [`GridIndex`]: bounds, cell
+/// geometry and the CSR arrays. Shared between snapshot epochs via
+/// [`Arc`]; replaced wholesale by a rebuild.
+#[derive(Debug)]
+struct GridBuckets {
     /// Layout bounds (min x, min y, max x, max y).
     bounds: (f32, f32, f32, f32),
     /// Cell width / height (always > 0).
@@ -44,9 +53,32 @@ pub struct GridIndex {
     xs: Vec<f32>,
     /// `y` coordinate of `ids[i]`'s point.
     ys: Vec<f32>,
+}
+
+/// CSR-bucketed uniform grid over the first two layout dimensions.
+#[derive(Debug)]
+pub struct GridIndex {
+    /// Cells per axis.
+    g: usize,
+    /// Shared immutable buckets (epoch-shared; swapped on rebuild).
+    buckets: Arc<GridBuckets>,
     /// Points inserted since the last (re)build, scanned linearly by
     /// every query; bounded by [`GridIndex::rebuild_threshold`].
     overflow: Vec<GridPoint>,
+}
+
+/// Cloning bumps the shared bucket pointer and copies only the bounded
+/// overflow list — the O(batch) snapshot-publish path. The overflow
+/// bytes are charged to the global copy-on-write counter.
+impl Clone for GridIndex {
+    fn clone(&self) -> Self {
+        chunked::count_copied(self.overflow.len() * std::mem::size_of::<GridPoint>());
+        GridIndex {
+            g: self.g,
+            buckets: Arc::clone(&self.buckets),
+            overflow: self.overflow.clone(),
+        }
+    }
 }
 
 impl GridIndex {
@@ -54,7 +86,9 @@ impl GridIndex {
     ///
     /// `cells` is clamped to at least 1; degenerate layouts (a single
     /// point, or all points coincident) still produce a valid index.
-    pub fn build(layout: &Matrix, cells: usize) -> GridIndex {
+    /// Generic over [`RowStore`] so both flat and chunked layouts feed
+    /// the same bucketing.
+    pub fn build(layout: &impl RowStore, cells: usize) -> GridIndex {
         assert!(layout.d() >= 2, "grid index needs a 2D+ layout");
         let pts: Vec<GridPoint> =
             (0..layout.n()).map(|i| (i as u32, layout.row(i)[0], layout.row(i)[1])).collect();
@@ -106,13 +140,15 @@ impl GridIndex {
         }
         GridIndex {
             g,
-            bounds: (xmin, ymin, xmax, ymax),
-            cell_w,
-            cell_h,
-            starts,
-            ids,
-            xs,
-            ys,
+            buckets: Arc::new(GridBuckets {
+                bounds: (xmin, ymin, xmax, ymax),
+                cell_w,
+                cell_h,
+                starts,
+                ids,
+                xs,
+                ys,
+            }),
             overflow: Vec::new(),
         }
     }
@@ -122,7 +158,7 @@ impl GridIndex {
     /// 256 so small indexes don't rebuild per insert. Until then a
     /// query pays one extra linear scan of at most this many points.
     pub fn rebuild_threshold(&self) -> usize {
-        (self.ids.len() / 8).max(256)
+        (self.buckets.ids.len() / 8).max(256)
     }
 
     /// Insert one point incrementally. The point lands in the overflow
@@ -141,14 +177,24 @@ impl GridIndex {
     }
 
     /// Fold the overflow into the CSR buckets now (bounds re-fitted).
+    /// The new bucket arrays replace the shared `Arc` — older epochs
+    /// keep the previous buckets untouched. The bytes written into the
+    /// fresh CSR are charged to the copy counter (amortized O(1) per
+    /// insert thanks to the threshold).
     pub fn rebuild(&mut self) {
         let mut pts: Vec<GridPoint> =
-            Vec::with_capacity(self.ids.len() + self.overflow.len());
-        for i in 0..self.ids.len() {
-            pts.push((self.ids[i], self.xs[i], self.ys[i]));
+            Vec::with_capacity(self.buckets.ids.len() + self.overflow.len());
+        for i in 0..self.buckets.ids.len() {
+            pts.push((self.buckets.ids[i], self.buckets.xs[i], self.buckets.ys[i]));
         }
         pts.append(&mut self.overflow);
         *self = GridIndex::rebucket(self.g, pts);
+        let b = &self.buckets;
+        chunked::count_copied(
+            b.starts.len() * std::mem::size_of::<u32>()
+                + b.ids.len() * std::mem::size_of::<u32>()
+                + (b.xs.len() + b.ys.len()) * std::mem::size_of::<f32>(),
+        );
     }
 
     /// Number of points awaiting the next re-bucketing.
@@ -158,17 +204,23 @@ impl GridIndex {
 
     /// Number of indexed points (bucketed + overflow).
     pub fn len(&self) -> usize {
-        self.ids.len() + self.overflow.len()
+        self.buckets.ids.len() + self.overflow.len()
     }
 
     /// True if the index holds no points.
     pub fn is_empty(&self) -> bool {
-        self.ids.is_empty() && self.overflow.is_empty()
+        self.buckets.ids.is_empty() && self.overflow.is_empty()
     }
 
     /// Layout bounds as `(xmin, ymin, xmax, ymax)`.
     pub fn bounds(&self) -> (f32, f32, f32, f32) {
-        self.bounds
+        self.buckets.bounds
+    }
+
+    /// Whether `a` and `b` share the same bucket allocation — the
+    /// sharing probe used by the chunk-sharing property tests.
+    pub fn buckets_shared(a: &GridIndex, b: &GridIndex) -> bool {
+        Arc::ptr_eq(&a.buckets, &b.buckets)
     }
 
     /// One representative point id per non-empty cell (the first id in
@@ -177,11 +229,12 @@ impl GridIndex {
     /// spatially-spread seed fallback for graph-based KNN search when
     /// no coarsening hierarchy is available.
     pub fn cell_representatives(&self, max: usize) -> Vec<u32> {
+        let b = &self.buckets;
         let mut reps: Vec<u32> = Vec::new();
         for c in 0..self.g * self.g {
-            let (s, e) = (self.starts[c] as usize, self.starts[c + 1] as usize);
+            let (s, e) = (b.starts[c] as usize, b.starts[c + 1] as usize);
             if s < e {
-                reps.push(self.ids[s]);
+                reps.push(b.ids[s]);
             }
         }
         reps.extend(self.overflow.iter().map(|&(id, _, _)| id));
@@ -211,27 +264,28 @@ impl GridIndex {
                 out.push((id, x, y));
             }
         }
-        let (bx0, by0, bx1, by1) = self.bounds;
-        if self.ids.is_empty() || x1 < bx0 || x0 > bx1 || y1 < by0 || y0 > by1 {
+        let b = &self.buckets;
+        let (bx0, by0, bx1, by1) = b.bounds;
+        if b.ids.is_empty() || x1 < bx0 || x0 > bx1 || y1 < by0 || y0 > by1 {
             return examined;
         }
         let g = self.g;
         let cell_range = |lo: f32, hi: f32, min: f32, cell: f32| -> (usize, usize) {
             let a = (((lo - min) / cell).floor().max(0.0) as usize).min(g - 1);
-            let b = (((hi - min) / cell).floor().max(0.0) as usize).min(g - 1);
-            (a, b)
+            let bb = (((hi - min) / cell).floor().max(0.0) as usize).min(g - 1);
+            (a, bb)
         };
-        let (cx0, cx1) = cell_range(x0, x1, bx0, self.cell_w);
-        let (cy0, cy1) = cell_range(y0, y1, by0, self.cell_h);
+        let (cx0, cx1) = cell_range(x0, x1, bx0, b.cell_w);
+        let (cy0, cy1) = cell_range(y0, y1, by0, b.cell_h);
         for cy in cy0..=cy1 {
             for cx in cx0..=cx1 {
                 let c = cy * g + cx;
-                let (s, e) = (self.starts[c] as usize, self.starts[c + 1] as usize);
+                let (s, e) = (b.starts[c] as usize, b.starts[c + 1] as usize);
                 examined += e - s;
                 for i in s..e {
-                    let (x, y) = (self.xs[i], self.ys[i]);
+                    let (x, y) = (b.xs[i], b.ys[i]);
                     if x >= x0 && x <= x1 && y >= y0 && y <= y1 {
-                        out.push((self.ids[i], x, y));
+                        out.push((b.ids[i], x, y));
                     }
                 }
             }
@@ -243,6 +297,7 @@ impl GridIndex {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::matrix::Matrix;
     use crate::util::rng::Rng;
 
     fn uniform_layout(n: usize, seed: u64) -> Matrix {
@@ -402,5 +457,26 @@ mod tests {
         assert_eq!(out.len(), 3);
         idx.query(1.5, 1.5, 3.0, 3.0, &mut out);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn clone_shares_buckets_until_rebuild() {
+        let m = uniform_layout(400, 5);
+        let mut idx = GridIndex::build(&m, 8);
+        idx.insert(400, 0.5, 0.5);
+        let snap = idx.clone();
+        assert!(GridIndex::buckets_shared(&idx, &snap));
+        // More overflow inserts never touch the shared buckets.
+        idx.insert(401, 0.25, 0.25);
+        assert!(GridIndex::buckets_shared(&idx, &snap));
+        assert_eq!(snap.len(), 401);
+        assert_eq!(idx.len(), 402);
+        // A rebuild swaps in a new allocation; the old snapshot keeps
+        // the previous one and stays fully queryable.
+        idx.rebuild();
+        assert!(!GridIndex::buckets_shared(&idx, &snap));
+        let mut out = Vec::new();
+        snap.query(-50.0, -50.0, 50.0, 50.0, &mut out);
+        assert_eq!(out.len(), 401);
     }
 }

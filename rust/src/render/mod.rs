@@ -13,4 +13,4 @@ pub mod palette;
 pub mod svg;
 
 pub use grid::{GridIndex, GridPoint};
-pub use svg::{render_scatter, viewport_svg, ScatterStyle};
+pub use svg::{render_scatter, viewport_svg, viewport_svg_with, ScatterStyle};

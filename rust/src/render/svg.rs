@@ -146,6 +146,21 @@ pub fn viewport_svg(
     bbox: (f32, f32, f32, f32),
     style: &ScatterStyle,
 ) -> String {
+    viewport_svg_with(pts, |i| labels.map(|ls| ls[i]), n_classes, bbox, style)
+}
+
+/// [`viewport_svg`] with a point-id → label closure instead of a flat
+/// label slice, so label stores without a contiguous buffer (the query
+/// server's chunked copy-on-write labels) can color tiles without an
+/// O(N) flatten per request. `label_of` returning `None` draws the
+/// unlabeled default color.
+pub fn viewport_svg_with<F: Fn(usize) -> Option<u32>>(
+    pts: &[(u32, f32, f32)],
+    label_of: F,
+    n_classes: usize,
+    bbox: (f32, f32, f32, f32),
+    style: &ScatterStyle,
+) -> String {
     let (x0, y0, x1, y1) = bbox;
     let span = (x1 - x0).max(y1 - y0).max(1e-9);
     let scale = style.size as f32 / span;
@@ -156,7 +171,11 @@ pub fn viewport_svg(
             let (id, x, y) = pts[i];
             let px = (x - x0) * scale;
             let py = style.size as f32 - (y - y0) * scale;
-            (px, py, point_color(id as usize, labels, n_classes))
+            let color = match label_of(id as usize) {
+                Some(l) => class_color(l as usize, n_classes.max(1)),
+                None => "#3366aa".to_string(),
+            };
+            (px, py, color)
         }),
     )
 }

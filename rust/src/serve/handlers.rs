@@ -30,7 +30,7 @@
 
 use crate::config::SearchMode;
 use crate::knn::search::{search_nearest, SearchTotals};
-use crate::render::{viewport_svg, ScatterStyle};
+use crate::render::{viewport_svg_with, ScatterStyle};
 use crate::serve::http::{Request, Response};
 use crate::serve::state::{ServerState, Snapshot};
 use crate::util::json::Json;
@@ -389,9 +389,11 @@ fn viewport(req: &Request, st: &ServerState, snap: &Snapshot) -> Response {
     } else {
         snap.n_classes
     };
-    let mut svg = viewport_svg(
+    // Labels are chunked (copy-on-write); color through the per-id
+    // lookup closure instead of flattening them per request.
+    let mut svg = viewport_svg_with(
         &pts,
-        snap.labels.as_deref(),
+        |i| snap.labels.as_ref().map(|ls| ls.get(i)),
         palette_classes,
         (x0, y0, x1, y1),
         &style,

@@ -39,13 +39,13 @@
 use crate::config::{SearchMode, ServeConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::CheckpointPaths;
+use crate::data::chunked::{ChunkedKnn, ChunkedLabels, ChunkedMatrix, LABEL_CHUNK_LEN};
 use crate::data::formats::wal::{self, WalSet};
 use crate::data::formats::{binary, checkpoint};
 use crate::data::io::{read_labels, write_labels};
 use crate::data::matrix::Matrix;
 use crate::graph::weights::WeightConfig;
 use crate::knn::search::{search_nearest, SearchHandle, SearchIndex, SearchTotals};
-use crate::knn::KnnGraph;
 use crate::render::grid::GridIndex;
 use crate::util::heap::BoundedMaxHeap;
 use crate::util::faultio::{RealStorage, Storage};
@@ -65,14 +65,18 @@ pub struct Snapshot {
     /// Epoch counter: 0 for the freshly loaded checkpoints, +1 per
     /// publish (insert batch or refinement pass).
     pub epoch: u64,
-    /// High-dimensional points (base + live inserts).
-    pub data: Matrix,
-    /// KNN graph over `data` (live inserts spliced in).
-    pub knn: KnnGraph,
-    /// Low-dimensional layout aligned with `data`.
-    pub layout: Matrix,
+    /// High-dimensional points (base + live inserts). Chunked
+    /// copy-on-write: untouched chunks are shared with every other
+    /// epoch by `Arc`, so holding old snapshots costs O(changed), not
+    /// O(N) each.
+    pub data: ChunkedMatrix,
+    /// KNN graph over `data` (live inserts spliced in); chunked like
+    /// `data`.
+    pub knn: ChunkedKnn,
+    /// Low-dimensional layout aligned with `data`; chunked like `data`.
+    pub layout: ChunkedMatrix,
     /// Class labels; live inserts carry the pseudo-class `n_classes`.
-    pub labels: Option<Vec<u32>>,
+    pub labels: Option<ChunkedLabels>,
     /// Number of distinct classes in the *base* labels (0 = unlabeled).
     pub n_classes: usize,
     /// Spatial index over `layout` for `/viewport`.
@@ -90,14 +94,17 @@ pub struct Snapshot {
 
 /// The single-writer mutable state behind the snapshots.
 struct Writer {
-    /// The growing dataset/graph/layout (its matrices are cloned into
-    /// each published [`Snapshot`]).
+    /// The growing dataset/graph/layout. Its chunked stores are cloned
+    /// into each published [`Snapshot`] — a pointer copy per chunk;
+    /// the first mutation of a chunk after a publish copies just that
+    /// chunk (copy-on-write).
     inc: IncrementalLayout,
     /// Incrementally maintained spatial index (overflow + threshold
-    /// rebuild; cloned into each snapshot).
+    /// rebuild; cloned into each snapshot — the bucket CSR is shared
+    /// by `Arc`, only the small overflow list is copied).
     grid: GridIndex,
     /// Labels aligned with `inc.data` (base labels + pseudo-class).
-    labels: Option<Vec<u32>>,
+    labels: Option<ChunkedLabels>,
     /// Class id assigned to live-inserted points when the base is
     /// labeled: the first id past the base classes (palette lookups
     /// are modulo, so any value is render-safe).
@@ -360,6 +367,7 @@ impl ServerState {
             .as_ref()
             .map(|ls| ls.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0))
             .unwrap_or(0);
+        let labels = labels.map(|ls| ChunkedLabels::from_slice(&ls, LABEL_CHUNK_LEN));
         let dataset = std::fs::read_to_string(&paths.meta)
             .map(|s| s.trim().to_string())
             .unwrap_or_else(|_| "unknown".to_string());
@@ -569,25 +577,32 @@ impl ServerState {
             // All live inserts share one stable pseudo-class so they
             // stay distinguishable in `/viewport` tiles.
             let fill = w.pseudo_class;
-            ls.resize(ls.len() + ids.len(), fill);
+            for _ in 0..ids.len() {
+                ls.push(fill);
+            }
         }
         w.pending_edges.extend_from_slice(&w.inc.last_edges);
         w.pending_rows += ids.len();
         ids
     }
 
-    /// Build a snapshot of the writer's current state (clones the
-    /// heavy artifacts; the caller publishes the result).
+    /// Build a snapshot of the writer's current state (the caller
+    /// publishes the result).
     ///
-    /// Cost note: a publish is an O(N) flat memcpy of the matrices,
-    /// KNN lists and grid — that is the deliberate price of the
-    /// epoch-swap design (readers get torn-proof immutable snapshots
-    /// with zero locking). The *algorithmic* per-insert work — KNN
-    /// splice, reweighting, placement SGD — is bounded by the batch's
-    /// neighborhood ([`crate::vis::incremental::LocalizedStats`]);
-    /// the memcpy amortizes over `/insert_batch` rows and is the first
-    /// thing to replace (chunked/persistent structures) if insert
-    /// throughput at very large N becomes the bottleneck.
+    /// Cost note: a publish is **O(batch), not O(N)**. Every heavy
+    /// artifact is a chunked copy-on-write store
+    /// ([`crate::data::chunked`]) or `Arc`-shared (grid buckets,
+    /// search index): cloning it here copies one `Arc` pointer per
+    /// chunk, and the *data* of a chunk is copied at most once per
+    /// epoch, on the writer's first mutation of it after the previous
+    /// publish. An insert batch touches the tail chunks it appends to
+    /// plus the chunks holding the spliced KNN rows of its neighbors —
+    /// a set bounded by the batch's neighborhood, independent of the
+    /// base size (measured by `rust/tests/publish_cost.rs` via
+    /// [`crate::data::chunked::copied_bytes`]). The algorithmic
+    /// per-insert work — KNN splice, reweighting, placement SGD — is
+    /// bounded the same way
+    /// ([`crate::vis::incremental::LocalizedStats`]).
     fn snapshot_of(w: &Writer, epoch: u64, base_n: usize, n_classes: usize) -> Snapshot {
         Snapshot {
             epoch,
@@ -803,7 +818,10 @@ impl ServerState {
         checkpoint::write_knn_with(storage, &tmp_path(&paths.knn), &w.inc.knn).map_err(before)?;
         if let Some(ls) = &w.labels {
             let staged = tmp_path(&paths.labels);
-            write_labels(&staged, ls).map_err(before)?;
+            // The label file format wants a flat slice; labels are one
+            // u32 per point, so this transient flatten is tiny next to
+            // the matrix/KNN writes above.
+            write_labels(&staged, &ls.to_vec()).map_err(before)?;
             // `write_labels` uses plain buffered I/O; the staged file
             // must be durable before the marker commits.
             storage
@@ -946,6 +964,7 @@ impl ServerState {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::knn::KnnGraph;
 
     #[test]
     fn missing_directory_fails_with_context() {

@@ -16,11 +16,12 @@
 //! `refreeze()` promotes the frozen points back into a full graph for
 //! a global re-optimization when drift accumulates.
 
-use crate::data::matrix::Matrix;
+use crate::data::chunked::{ChunkedKnn, ChunkedMatrix, KNN_CHUNK_ROWS, MATRIX_CHUNK_ROWS};
+use crate::data::matrix::{Matrix, RowStore};
 use crate::graph::weights::{calibrate_row, weighted_graph, WeightConfig};
 use crate::kernels::nearest_k;
 use crate::knn::search::{search_nearest, SearchHandle, SearchTotals};
-use crate::knn::KnnGraph;
+use crate::knn::{KnnGraph, NeighborStore};
 use crate::util::alias::AliasTable;
 use crate::util::heap::BoundedMaxHeap;
 use crate::util::rng::Rng;
@@ -55,12 +56,14 @@ use crate::vis::LargeVisConfig;
 /// assert_eq!(inc.n(), 130);
 /// ```
 pub struct IncrementalLayout {
-    /// Current high-dimensional points.
-    pub data: Matrix,
-    /// Current KNN graph (kept at `k` neighbors per point).
-    pub knn: KnnGraph,
-    /// Current low-dimensional layout.
-    pub layout: Matrix,
+    /// Current high-dimensional points (chunked copy-on-write, so the
+    /// serving path's per-epoch snapshot clone is O(batch), not O(N)).
+    pub data: ChunkedMatrix,
+    /// Current KNN graph (kept at `k` neighbors per point; chunked so
+    /// a splice dirties one small chunk instead of the whole graph).
+    pub knn: ChunkedKnn,
+    /// Current low-dimensional layout (chunked copy-on-write).
+    pub layout: ChunkedMatrix,
     /// Weighting config used for localized refreshes.
     pub weights: WeightConfig,
     /// Layout config used for localized SGD.
@@ -108,7 +111,9 @@ pub struct LocalizedStats {
 }
 
 impl IncrementalLayout {
-    /// Wrap an existing pipeline state.
+    /// Wrap an existing pipeline state. The flat inputs are chunked
+    /// once here (one O(N) conversion at load time); every subsequent
+    /// snapshot clone and insert batch is O(batch).
     pub fn new(
         data: Matrix,
         knn: KnnGraph,
@@ -119,9 +124,9 @@ impl IncrementalLayout {
         assert_eq!(data.n(), knn.n());
         assert_eq!(data.n(), layout.n());
         IncrementalLayout {
-            data,
-            knn,
-            layout,
+            data: ChunkedMatrix::from_matrix(&data, MATRIX_CHUNK_ROWS),
+            knn: ChunkedKnn::from_graph(&knn, KNN_CHUNK_ROWS),
+            layout: ChunkedMatrix::from_matrix(&layout, MATRIX_CHUNK_ROWS),
             weights,
             vis,
             samples_per_insert: 2000,
@@ -169,10 +174,12 @@ impl IncrementalLayout {
                 }
                 None => nearest_k(&row, &self.data, k, &mut dists, &mut heap),
             };
-            // Splice into existing lists where the new point improves them.
+            // Splice into existing lists where the new point improves
+            // them — `row_mut` is a copy-on-write handle, so a splice
+            // dirties only the target's (small) chunk.
             let mut got_in_edge = false;
             for &(j, dist) in &mine {
-                let list = &mut self.knn.neighbors[j as usize];
+                let list = self.knn.row_mut(j as usize);
                 let worst = list.last().map(|&(_, d)| d).unwrap_or(f32::INFINITY);
                 if list.len() < k || dist < worst {
                     if list.len() == k {
@@ -197,7 +204,7 @@ impl IncrementalLayout {
             // bit-identical.
             if !got_in_edge {
                 if let Some(&(j0, d0)) = mine.first() {
-                    let list = &mut self.knn.neighbors[j0 as usize];
+                    let list = self.knn.row_mut(j0 as usize);
                     if list.len() == k {
                         list.pop();
                     }
@@ -208,14 +215,14 @@ impl IncrementalLayout {
                     }
                 }
             }
-            self.knn.neighbors.push(mine);
+            self.knn.push_row(mine);
             self.data.push_row(&row);
 
             // 3: place at the similarity-weighted centroid of neighbors.
             let dim = self.layout.d();
             let mut pos = vec![0f32; dim];
             let mut total = 0f32;
-            for &(j, dist) in &self.knn.neighbors[id] {
+            for &(j, dist) in self.knn.row(id) {
                 if (j as usize) < self.layout.n() {
                     let w = 1.0 / (1.0 + dist);
                     for (p, &y) in pos.iter_mut().zip(self.layout.row(j as usize)) {
@@ -335,10 +342,14 @@ impl IncrementalLayout {
     }
 
     /// Globally re-optimize (unfreezes everything) — for when many
-    /// insertions have accumulated.
+    /// insertions have accumulated. Runs on flat copies (the batch
+    /// optimizer wants contiguous storage) and re-chunks the result —
+    /// an O(N) round-trip, acceptable for this rarely-run full rebuild.
     pub fn reoptimize(&mut self) {
-        let graph = weighted_graph(&self.knn, &self.weights);
-        crate::vis::sgd::optimize(&graph, &mut self.layout, &self.vis);
+        let graph = weighted_graph(&self.knn.to_graph(), &self.weights);
+        let mut layout = self.layout.to_matrix();
+        crate::vis::sgd::optimize(&graph, &mut layout, &self.vis);
+        self.layout = ChunkedMatrix::from_matrix(&layout, MATRIX_CHUNK_ROWS);
     }
 }
 
@@ -363,7 +374,7 @@ impl IncrementalLayout {
 /// which a full rebuild would also refresh but which no new-source
 /// sampler can ever draw — are the one thing deliberately skipped.
 pub(crate) fn localized_edges(
-    knn: &KnnGraph,
+    knn: &impl NeighborStore,
     weights: &WeightConfig,
     first_new: usize,
     touched_old: &[u32],
@@ -377,7 +388,7 @@ pub(crate) fn localized_edges(
         HashMap::with_capacity(touched_old.len() + n - first_new);
     let mut dbuf: Vec<f32> = Vec::new();
     for v in touched_old.iter().copied().chain(first_new as u32..n as u32) {
-        let row = &knn.neighbors[v as usize];
+        let row = knn.row(v as usize);
         dbuf.clear();
         dbuf.extend(row.iter().map(|&(_, d)| d));
         cond.insert(v, calibrate_row(&dbuf, weights.perplexity, weights.max_iters, weights.tol));
@@ -390,7 +401,7 @@ pub(crate) fn localized_edges(
     // order-independent even over HashMap iteration.
     let mut pair: HashMap<(u32, u32), f64> = HashMap::new();
     for (&v, pv) in &cond {
-        for (slot, &(b, _)) in knn.neighbors[v as usize].iter().enumerate() {
+        for (slot, &(b, _)) in knn.row(v as usize).iter().enumerate() {
             if (v as usize) < first_new && (b as usize) < first_new {
                 continue; // old-old pair: invisible to a new-source sampler
             }
@@ -436,8 +447,8 @@ pub(crate) fn localized_edges(
 /// query point's base-neighbor list (sorted ascending by squared
 /// distance), deterministic for a given `vis.seed`.
 pub fn project(
-    data: &Matrix,
-    layout: &Matrix,
+    data: &impl RowStore,
+    layout: &impl RowStore,
     vis: &LargeVisConfig,
     new_points: &Matrix,
     k: usize,
@@ -460,8 +471,8 @@ pub fn project(
 /// returned neighbor lists) is identical, so the two paths differ only
 /// in which base neighbors they find.
 pub fn project_with<F>(
-    data: &Matrix,
-    layout: &Matrix,
+    data: &impl RowStore,
+    layout: &impl RowStore,
     vis: &LargeVisConfig,
     new_points: &Matrix,
     k: usize,
@@ -610,7 +621,11 @@ mod tests {
         labels.extend_from_slice(&extra_labels[400..440]);
 
         // Quality of the merged layout: classifier accuracy stays high.
-        let acc = knn_accuracy(&inc.layout, &labels, &KnnEvalConfig { k: 5, ..Default::default() });
+        let acc = knn_accuracy(
+            &inc.layout.to_matrix(),
+            &labels,
+            &KnnEvalConfig { k: 5, ..Default::default() },
+        );
         assert!(acc > 0.8, "accuracy after insertion {acc}");
         // And specifically the new points are classified correctly.
         let mut correct = 0;
@@ -724,7 +739,7 @@ mod tests {
         // Reconstruct the touched-old set from the final graph state: a
         // new id enters an old list only via a splice.
         let touched: Vec<u32> = (0..first_new)
-            .filter(|&j| inc.knn.neighbors[j].iter().any(|&(l, _)| (l as usize) >= first_new))
+            .filter(|&j| inc.knn.row(j).iter().any(|&(l, _)| (l as usize) >= first_new))
             .map(|j| j as u32)
             .collect();
         let (edges, stats) = localized_edges(&inc.knn, &inc.weights, first_new, &touched);
@@ -732,7 +747,7 @@ mod tests {
         assert_eq!(stats.edges, edges.len());
 
         // Oracle: the full O(|E|) rebuild the localized pass replaced.
-        let full = weighted_graph(&inc.knn, &inc.weights);
+        let full = weighted_graph(&inc.knn.to_graph(), &inc.weights);
         let mut want: Vec<(u32, u32, f64)> = Vec::new();
         for i in first_new..inc.n() {
             for (c, w) in full.row(i).collect_pairs() {
@@ -798,7 +813,11 @@ mod tests {
         let before = inc.layout.clone();
         inc.reoptimize();
         assert_ne!(inc.layout, before);
-        let acc = knn_accuracy(&inc.layout, &labels, &KnnEvalConfig { k: 5, ..Default::default() });
+        let acc = knn_accuracy(
+            &inc.layout.to_matrix(),
+            &labels,
+            &KnnEvalConfig { k: 5, ..Default::default() },
+        );
         assert!(acc > 0.8);
     }
 }

@@ -298,8 +298,9 @@ fn server_recovers_acked_inserts_under_every_fault() {
             assert_eq!(snap.layout.n(), snap.data.n(), "{name} at op {trigger}: layout shape");
             assert_eq!(snap.knn.n(), snap.data.n(), "{name} at op {trigger}: knn shape");
             // Base rows survive compaction rewrites bit-identically.
+            let base_rows: Vec<f32> = snap.data.values().take(SRV_N * SRV_D).collect();
             assert_bits_eq(
-                &snap.data.as_slice()[..SRV_N * SRV_D],
+                &base_rows,
                 &base,
                 &format!("{name} at op {trigger}: base data"),
             );

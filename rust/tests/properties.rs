@@ -429,3 +429,147 @@ fn disconnected_server_query_counts_fallback_metric() {
     }
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn prop_chunked_cow_shares_untouched_chunks_across_epochs() {
+    use largevis::data::chunked::{ChunkedKnn, ChunkedMatrix};
+    use largevis::knn::KnnGraph;
+    use std::collections::BTreeSet;
+
+    run_prop("chunked-cow", PropConfig { cases: 30, max_size: 60, ..Default::default() }, |rng, size| {
+        let chunk_rows = 1 + rng.below(6);
+        let n = 4 + size;
+        let d = 1 + rng.below(4);
+        let mut m = Matrix::zeros(n, d);
+        for i in 0..n {
+            for v in m.row_mut(i) {
+                // Include NaN payloads: sharing and old-epoch identity
+                // must be bitwise, not semantic.
+                *v = if rng.below(16) == 0 { f32::NAN } else { rng.f32() * 8.0 - 4.0 };
+            }
+        }
+        let mut g = KnnGraph::empty(n, 2);
+        for i in 0..n {
+            g.neighbors[i] = vec![((i as u32 + 1) % n as u32, rng.f32())];
+        }
+
+        // "Epoch": clone the writer's stores, then keep mutating the
+        // writer — the moral equivalent of `publish` + more inserts.
+        let mut wm = ChunkedMatrix::from_matrix(&m, chunk_rows);
+        let mut wg = ChunkedKnn::from_graph(&g, chunk_rows);
+        let epoch_m = wm.clone();
+        let epoch_g = wg.clone();
+
+        let mut touched = BTreeSet::new();
+        for _ in 0..1 + rng.below(4) {
+            let i = rng.below(n);
+            wm.row_mut(i)[rng.below(d)] = 99.0;
+            wg.row_mut(i).push((((i + 2) % n) as u32, 0.5));
+            touched.insert(i / chunk_rows);
+        }
+        // Appends touch only the (possibly partial) tail chunk.
+        let grows = rng.below(3);
+        if grows > 0 && n % chunk_rows != 0 {
+            touched.insert(n / chunk_rows);
+        }
+        for _ in 0..grows {
+            wm.push_row(&vec![1.5; d]);
+            wg.push_row(vec![(0, 1.0)]);
+        }
+
+        // Untouched chunks are pointer-shared with the old epoch;
+        // touched ones were copied.
+        for ci in 0..epoch_m.n_chunks() {
+            let shared = ChunkedMatrix::chunk_shared(&wm, &epoch_m, ci)
+                && ChunkedKnn::chunk_shared(&wg, &epoch_g, ci);
+            if shared == touched.contains(&ci) {
+                return Err(format!(
+                    "chunk {ci}: shared={shared}, touched={} (chunk_rows={chunk_rows}, n={n})",
+                    touched.contains(&ci)
+                ));
+            }
+        }
+
+        // A reader holding the old epoch sees the original rows bit
+        // for bit, no matter what the writer did since.
+        for i in 0..n {
+            let same = epoch_m
+                .row(i)
+                .iter()
+                .zip(m.row(i))
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            if !same || epoch_m.n() != n {
+                return Err(format!("old epoch row {i} changed under the reader"));
+            }
+            if epoch_g.row(i) != g.neighbors[i].as_slice() {
+                return Err(format!("old epoch knn row {i} changed under the reader"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunked_incremental_equals_full_rebuild() {
+    use largevis::data::chunked::{ChunkedKnn, ChunkedLabels, ChunkedMatrix};
+    use largevis::knn::KnnGraph;
+
+    run_prop("chunked-rebuild", PropConfig { cases: 30, max_size: 80, ..Default::default() }, |rng, size| {
+        let chunk_rows = 1 + rng.below(7);
+        let n = 1 + size;
+        let d = 1 + rng.below(4);
+        let mut m = Matrix::zeros(n, d);
+        for i in 0..n {
+            for v in m.row_mut(i) {
+                *v = if rng.below(16) == 0 { f32::NAN } else { rng.f32() * 8.0 - 4.0 };
+            }
+        }
+        let mut g = KnnGraph::empty(n, 3);
+        for i in 0..n {
+            let deg = rng.below(3);
+            g.neighbors[i] =
+                (0..deg).map(|j| (((i + j + 1) % n) as u32, rng.f32())).collect();
+        }
+        let labels: Vec<u32> = (0..n).map(|_| rng.below(7) as u32).collect();
+
+        // Grow row by row (the serving insert path)...
+        let mut im = ChunkedMatrix::from_matrix(&Matrix::zeros(0, d), chunk_rows);
+        let mut ig = ChunkedKnn::from_graph(&KnnGraph::empty(0, 3), chunk_rows);
+        let mut il = ChunkedLabels::from_slice(&[], chunk_rows);
+        for i in 0..n {
+            im.push_row(m.row(i));
+            ig.push_row(g.neighbors[i].clone());
+            il.push(labels[i]);
+        }
+        // ...and rebuild from scratch (the restart path).
+        let fm = ChunkedMatrix::from_matrix(&m, chunk_rows);
+        let fg = ChunkedKnn::from_graph(&g, chunk_rows);
+        let fl = ChunkedLabels::from_slice(&labels, chunk_rows);
+
+        if im != fm {
+            return Err(format!("matrix: incremental != rebuild (n={n}, cr={chunk_rows})"));
+        }
+        if ig != fg {
+            return Err(format!("knn: incremental != rebuild (n={n}, cr={chunk_rows})"));
+        }
+        if il != fl {
+            return Err(format!("labels: incremental != rebuild (n={n}, cr={chunk_rows})"));
+        }
+        // Same chunk structure too — replay must reproduce the exact
+        // layout, not just the logical contents.
+        if im.n_chunks() != fm.n_chunks() || ig.n_chunks() != fg.n_chunks() {
+            return Err("chunk layout diverged between incremental and rebuild".into());
+        }
+        // And the flat round-trip is bit-identical to the source.
+        let back = im.to_matrix();
+        for i in 0..n {
+            if back.row(i).iter().zip(m.row(i)).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(format!("to_matrix row {i} not bit-identical"));
+            }
+        }
+        if ig.to_graph().neighbors != g.neighbors || il.to_vec() != labels {
+            return Err("knn/labels round-trip diverged".into());
+        }
+        Ok(())
+    });
+}

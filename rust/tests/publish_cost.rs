@@ -1,0 +1,241 @@
+//! Publish-cost regression harness for the chunked copy-on-write
+//! snapshot store (`data::chunked`).
+//!
+//! The serving path's contract is that publishing a new epoch after an
+//! insert batch costs **O(batch), not O(N)**: a publish clones chunk
+//! pointers, and the only chunk *data* copied is what the batch
+//! actually touched — the tail chunks it appends to plus the chunks
+//! holding the spliced KNN rows of its base neighbors. This test
+//! proves the contract with the library's bytes-copied counter
+//! ([`largevis::data::chunked::copied_bytes`]):
+//!
+//! * **bounded** — the steady-state bytes copied per `insert` publish
+//!   stay under a fixed budget derived from the chunk sizes, far below
+//!   the O(N) bytes a full-snapshot memcpy would count, and
+//! * **flat** — the per-publish cost at a ~10x larger base is within
+//!   1.5x of the small base's. Bases are chunk-aligned and the insert
+//!   batches target the same base row neighborhoods at both sizes, so
+//!   the touched-chunk sets match and any growth would be a real
+//!   O(N) leak.
+//!
+//! Scale: the full pair (10240 / 102400 base rows) runs under
+//! `--release`; plain debug `cargo test` shrinks both by
+//! `LARGEVIS_PUBLISH_SCALE` (default 0.04, floored at one data chunk)
+//! so tier-1 stays fast. A machine-readable summary is written to
+//! `$LARGEVIS_PUBLISH_DIR/publish_cost.json` (default `target/`),
+//! mirroring the recall and fault-coverage artifacts.
+//!
+//! The counter is process-global, so this file is its own test binary
+//! with a single `#[test]` — nothing else may copy chunks while the
+//! deltas are being read.
+
+use largevis::config::{SearchMode, ServeConfig};
+use largevis::coordinator::CheckpointPaths;
+use largevis::data::chunked::{copied_bytes, MATRIX_CHUNK_ROWS};
+use largevis::data::formats::{binary, checkpoint};
+use largevis::data::matrix::Matrix;
+use largevis::knn::KnnGraph;
+use largevis::serve::ServerState;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Data dimensionality (small so exact insert lookups stay fast at the
+/// 102400-row release base).
+const D: usize = 4;
+/// Fabricated graph degree: ring neighbors `i±1`, `i±2`.
+const K: usize = 4;
+/// Rows per insert batch.
+const BATCH: usize = 2;
+/// Insert batches per base size; the first publish is warmup (it cuts
+/// fresh tail chunks), the rest are the steady-state measurement.
+const BATCHES: usize = 6;
+
+/// Steady-state per-publish budget, in bytes. Generous against the
+/// real cost (tail-chunk copies of a few freshly inserted rows plus at
+/// most `BATCH * K` spliced base KNN chunks of 32 rows each — a few
+/// KiB), but far below a full O(N) snapshot copy even at the smallest
+/// debug-scale base (1024 rows ≈ 56 KiB of data + layout + graph).
+const PUBLISH_BUDGET: u64 = 48 * 1024;
+
+fn scale() -> f64 {
+    if let Ok(s) = std::env::var("LARGEVIS_PUBLISH_SCALE") {
+        return s.parse().expect("LARGEVIS_PUBLISH_SCALE must be a float");
+    }
+    if cfg!(debug_assertions) {
+        0.04
+    } else {
+        1.0
+    }
+}
+
+/// Scale a full-size base row count, rounded to whole data chunks so
+/// every fabricated base is chunk-aligned (inserts then open fresh
+/// tail chunks instead of copying a partially-filled base chunk whose
+/// size would depend on `n % chunk_rows`).
+fn scaled_base(full_rows: usize, scale: f64) -> usize {
+    let chunks = ((full_rows as f64 * scale / MATRIX_CHUNK_ROWS as f64).round() as usize).max(1);
+    chunks * MATRIX_CHUNK_ROWS
+}
+
+/// Row `i`'s data vector: a line in feature space, so exact nearest
+/// neighbors of a query near row `i` are the same row indices at every
+/// base size.
+fn feature(i: usize) -> [f32; D] {
+    [i as f32 * 0.25; D]
+}
+
+fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Minimal valid checkpoint directory: `n` collinear points, circular
+/// ring KNN of degree [`K`], no labels.
+fn fabricate_checkpoints(dir: &Path, n: usize) {
+    std::fs::create_dir_all(dir).unwrap();
+    let paths = CheckpointPaths::in_dir(dir);
+    let mut data = Vec::with_capacity(n * D);
+    for i in 0..n {
+        data.extend_from_slice(&feature(i));
+    }
+    let data = Matrix::from_vec(data, n, D);
+    let layout: Vec<f32> = (0..n * 2).map(|i| i as f32 * 0.5).collect();
+    binary::write_binary(&paths.data, &data).unwrap();
+    binary::write_binary(&paths.layout, &Matrix::from_vec(layout, n, 2)).unwrap();
+    let mut knn = KnnGraph::empty(n, K);
+    for i in 0..n {
+        let mut row: Vec<(u32, f32)> = [n - 2, n - 1, 1, 2]
+            .iter()
+            .map(|&off| {
+                let j = (i + off) % n;
+                (j as u32, sqdist(data.row(i), data.row(j)))
+            })
+            .collect();
+        row.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        knn.neighbors[i] = row;
+    }
+    checkpoint::write_knn(&paths.knn, &knn).unwrap();
+    std::fs::write(&paths.meta, "publish-cost").unwrap();
+}
+
+/// Batch `b`: [`BATCH`] points just off base rows 100.. and 300.. —
+/// inside the smallest (one-chunk) base, so the spliced neighborhoods
+/// are the same chunk indices at every base size.
+fn insert_batch(b: usize) -> Matrix {
+    let mut vals = Vec::with_capacity(BATCH * D);
+    for r in 0..BATCH {
+        let near = 100 + 200 * r + 3 * b;
+        for v in feature(near) {
+            vals.push(v + 0.1);
+        }
+    }
+    Matrix::from_vec(vals, BATCH, D)
+}
+
+/// Run the insert workload against a fresh server over an `n`-row base
+/// and return the copied-bytes delta of every `insert` publish.
+fn measure(n: usize) -> Vec<u64> {
+    let dir = std::env::temp_dir()
+        .join(format!("largevis_publish_cost_{}_{n}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    fabricate_checkpoints(&dir, n);
+    let cfg = ServeConfig {
+        checkpoints: dir.clone(),
+        // Exact base-neighbor lookups: no search-index maintenance in
+        // the measured path, and identical neighbor choices per base.
+        search: SearchMode::Exact,
+        insert_samples: 8,
+        refine_samples: 0,
+        // Keep WAL rotation + compaction out of the measured inserts.
+        wal_segment_bytes: 1 << 30,
+        wal_max_segments: 1 << 20,
+        ..Default::default()
+    };
+    let st = ServerState::load(cfg).unwrap_or_else(|e| panic!("load base n={n}: {e:#}"));
+    let mut deltas = Vec::with_capacity(BATCHES);
+    for b in 0..BATCHES {
+        let before = copied_bytes();
+        st.insert(&insert_batch(b)).unwrap_or_else(|e| panic!("insert {b} at n={n}: {e:#}"));
+        deltas.push(copied_bytes() - before);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    deltas
+}
+
+/// Worst steady-state publish (every batch after the warmup).
+fn steady_max(deltas: &[u64]) -> u64 {
+    deltas[1..].iter().copied().max().unwrap()
+}
+
+/// The O(N) yardstick: bytes a full-snapshot copy of the base would
+/// count (data + layout + KNN pairs).
+fn full_copy_bytes(n: usize) -> u64 {
+    (n * D * 4 + n * 2 * 4 + n * K * 8) as u64
+}
+
+fn write_report(pairs: &[(usize, &[u64])], scale: f64) {
+    let dir = std::env::var("LARGEVIS_PUBLISH_DIR").unwrap_or_else(|_| "target".into());
+    if std::fs::create_dir_all(&dir).is_err() {
+        return;
+    }
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "{{\n  \"scale\": {scale},\n  \"batch\": {BATCH},\n  \
+         \"publish_budget_bytes\": {PUBLISH_BUDGET},\n  \"bases\": ["
+    );
+    for (i, (n, deltas)) in pairs.iter().enumerate() {
+        let _ = write!(
+            s,
+            "{}\n    {{\"base_rows\": {n}, \"full_copy_bytes\": {}, \
+             \"steady_max_bytes\": {}, \"per_publish_bytes\": {deltas:?}}}",
+            if i == 0 { "" } else { "," },
+            full_copy_bytes(*n),
+            steady_max(deltas),
+        );
+    }
+    s.push_str("\n  ]\n}\n");
+    let path = format!("{dir}/publish_cost.json");
+    if std::fs::write(&path, &s).is_ok() {
+        eprintln!("[publish_cost] wrote {path}");
+    }
+}
+
+#[test]
+fn publish_bytes_are_o_batch_and_flat_across_base_sizes() {
+    let scale = scale();
+    let small_n = scaled_base(10_240, scale);
+    let large_n = scaled_base(102_400, scale).max(small_n * 2);
+
+    let small = measure(small_n);
+    let large = measure(large_n);
+    eprintln!("[publish_cost] n={small_n}: per-publish bytes {small:?}");
+    eprintln!("[publish_cost] n={large_n}: per-publish bytes {large:?}");
+
+    let (s_max, l_max) = (steady_max(&small), steady_max(&large));
+
+    // Bounded: O(batch * chunk), never anywhere near an O(N) copy.
+    assert!(
+        s_max <= PUBLISH_BUDGET,
+        "steady publish copied {s_max} bytes at n={small_n}, budget {PUBLISH_BUDGET}"
+    );
+    assert!(
+        l_max <= PUBLISH_BUDGET,
+        "steady publish copied {l_max} bytes at n={large_n}, budget {PUBLISH_BUDGET}"
+    );
+    assert!(
+        l_max * 8 < full_copy_bytes(large_n),
+        "publish copied {l_max} bytes — within 8x of a full {}-byte snapshot copy \
+         at n={large_n}; the store is not copy-on-write",
+        full_copy_bytes(large_n)
+    );
+
+    // Flat: a ~10x larger base must not raise the per-publish cost.
+    // (The 1 KiB floor keeps the ratio meaningful for tiny deltas.)
+    let (lo, hi) = (s_max.min(l_max), s_max.max(l_max));
+    assert!(
+        hi as f64 <= 1.5 * (lo.max(1024) as f64),
+        "publish cost not flat: {s_max} bytes at n={small_n} vs {l_max} at n={large_n}"
+    );
+
+    write_report(&[(small_n, &small[..]), (large_n, &large[..])], scale);
+}

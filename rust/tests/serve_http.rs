@@ -59,7 +59,7 @@ fn server_end_to_end() {
         assert_eq!(snap.data.n(), n_base);
         // Serving answers from checkpoints alone: the layout the server
         // loaded equals the pipeline's final layout bit for bit.
-        assert_eq!(snap.layout, run.layout);
+        assert_eq!(snap.layout.to_matrix(), run.layout);
         assert_eq!(snap.epoch, 0, "fresh checkpoint dir starts at epoch 0");
     }
 

@@ -323,6 +323,29 @@ fn concurrent_inserts_epoch_consistency_and_wal_recovery() {
         );
     }
 
+    // Reader isolation under chunked copy-on-write storage: the epoch-0
+    // snapshot held across the entire concurrent fuzz still shows
+    // exactly the pre-insert state, bit for bit — no writer mutation
+    // ever reached a published chunk.
+    assert_eq!(base_snap.epoch, 0, "held snapshot changed epoch");
+    assert_eq!(base_snap.data.n(), n_base, "held epoch-0 snapshot grew");
+    for i in 0..n_base {
+        assert!(
+            base_snap
+                .data
+                .row(i)
+                .iter()
+                .zip(final_snap.data.row(i))
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "base data row {i} differs between epoch 0 and the final epoch"
+        );
+        assert_eq!(
+            base_snap.layout.row(i),
+            run.layout.row(i),
+            "held epoch-0 layout row {i} moved under live traffic"
+        );
+    }
+
     // --- simulated restart: WAL replay bit-identity ---
     handle.shutdown();
     server_thread.join().expect("server thread").expect("server run");
@@ -342,14 +365,14 @@ fn concurrent_inserts_epoch_consistency_and_wal_recovery() {
     assert_eq!(snap.data, pre_data, "WAL replay lost or altered inserted points");
     assert_eq!(snap.knn.k, pre_knn.k);
     assert_eq!(
-        snap.knn.neighbors, pre_knn.neighbors,
+        snap.knn, pre_knn,
         "WAL replay produced a different spliced KNN graph"
     );
     // One recovered epoch per WAL batch (insert request): the writer
     // batches, the marker, and the refine probe.
     let expected_batches = (writers * batches_per_writer + 2) as u64;
     assert_eq!(snap.epoch, expected_batches);
-    assert!(snap.layout.as_slice().iter().all(|v| v.is_finite()));
+    assert!(snap.layout.values().all(|v| v.is_finite()));
     assert_eq!(snap.layout.n(), snap.data.n());
 
     // --- read-only mode refuses writes but still recovers the WAL ---
