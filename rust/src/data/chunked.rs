@@ -35,8 +35,8 @@
 
 use crate::data::matrix::{Matrix, RowStore};
 use crate::knn::{KnnGraph, NeighborStore};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Arc;
 
 /// Rows per [`ChunkedMatrix`] chunk. 1024 rows × d=100 floats is
 /// ~400 KiB — big enough that the pointer vector stays tiny, small

@@ -61,7 +61,7 @@ use crate::util::faultio::{RealStorage, Storage};
 use anyhow::{bail, Context, Result};
 use std::io::{BufReader, Read, SeekFrom};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 /// WAL file magic.
 pub const MAGIC: &[u8; 4] = b"LVWL";
@@ -666,10 +666,19 @@ impl WalWriter {
             Err(e) => {
                 // Roll back to the last complete record so this failure
                 // cannot make replay drop later successful appends.
+                #[cfg(not(modelcheck_mutant_wal_no_rollback))]
                 let rolled = self
                     .f
                     .set_len(self.valid_bytes)
                     .and_then(|_| self.f.seek(SeekFrom::End(0)));
+                // Seeded durability bug for the mutation corpus: leave
+                // the torn tail in place after a failed append. A later
+                // successful append then lands *after* garbage bytes,
+                // so replay truncates at the tear and silently drops an
+                // acked record — exactly the acked-prefix violation the
+                // WAL model test pins. The checker must catch this.
+                #[cfg(modelcheck_mutant_wal_no_rollback)]
+                let rolled = self.f.seek(SeekFrom::End(0));
                 if rolled.is_err() {
                     self.poisoned = true;
                 }

@@ -1,0 +1,107 @@
+//! Epoch-swapped snapshot cell: the publication protocol between the
+//! single writer and the lock-free readers, extracted from
+//! `ServerState` so the model checker can drive it as a closed
+//! protocol (see `tools/modelcheck`).
+//!
+//! The protocol couples a mutex-protected `Arc<T>` cell with a
+//! lock-free epoch counter and guarantees one invariant to readers:
+//! **a reader that observes epoch `e` via [`EpochCell::hint`] finds a
+//! value of epoch `>= e` in the cell.** That is what lets connection
+//! workers cache a snapshot and re-fetch only when the hint moves —
+//! the steady-state read path touches no mutex. The invariant holds
+//! because [`EpochCell::publish`] swaps the cell *before* the
+//! `Release` store of the counter (and the `Acquire` hint load pairs
+//! with that store); bumping the counter first reintroduces the
+//! torn-read window, which is exactly the seeded bug under
+//! `--cfg modelcheck_mutant_epoch_first` that CI asserts the checker
+//! catches.
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex};
+
+/// A mutex-protected `Arc<T>` current-value cell plus a lock-free
+/// epoch hint, swapped together by a single writer.
+///
+/// The mutex is held only for `Arc` clones and swaps — never while
+/// building a value — so readers are never blocked behind snapshot
+/// construction.
+pub struct EpochCell<T> {
+    /// Epoch of the newest published value, readable without a lock.
+    epoch: AtomicU64,
+    /// The current value.
+    cell: Mutex<Arc<T>>,
+}
+
+impl<T> EpochCell<T> {
+    /// A cell holding `initial` at epoch 0.
+    pub fn new(initial: Arc<T>) -> Self {
+        EpochCell { epoch: AtomicU64::new(0), cell: Mutex::new(initial) }
+    }
+
+    /// Lock-free epoch hint. A reader holding a cached value compares
+    /// its epoch against this and calls [`EpochCell::get`] only on
+    /// mismatch.
+    pub fn hint(&self) -> u64 {
+        // ordering: Acquire — pairs with the Release store in
+        // `publish`: a reader that observes epoch `e` here is
+        // guaranteed the swap that preceded that store is visible, so
+        // the cell holds a value of epoch >= e.
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// The current value (one brief mutex for the `Arc` clone).
+    pub fn get(&self) -> Arc<T> {
+        self.cell.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Publish `value` as epoch `epoch`: swap the cell, then release
+    /// the counter. Epochs must be produced by a single writer (or
+    /// under an external writer lock, as `ServerState` does); the cell
+    /// itself only guarantees the hint/cell coupling.
+    pub fn publish(&self, epoch: u64, value: Arc<T>) {
+        #[cfg(not(modelcheck_mutant_epoch_first))]
+        {
+            *self.cell.lock().unwrap_or_else(|e| e.into_inner()) = value;
+            // ordering: Release — pairs with the Acquire in `hint`;
+            // the swap above must be visible to any reader that
+            // observes this epoch (see the module docs).
+            self.epoch.store(epoch, Ordering::Release);
+        }
+        // Seeded publication-order bug for the mutation corpus: bump
+        // the counter before the swap. A reader interleaved between
+        // the two observes hint `e` but fetches the previous epoch's
+        // value — the torn-read window the real ordering closes. The
+        // checker must catch this.
+        #[cfg(modelcheck_mutant_epoch_first)]
+        {
+            // ordering: Release — deliberate mutant, see above.
+            self.epoch.store(epoch, Ordering::Release);
+            *self.cell.lock().unwrap_or_else(|e| e.into_inner()) = value;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hint_tracks_publishes_and_get_returns_newest() {
+        let c = EpochCell::new(Arc::new(0u64));
+        assert_eq!(c.hint(), 0);
+        assert_eq!(*c.get(), 0);
+        c.publish(1, Arc::new(10));
+        c.publish(2, Arc::new(20));
+        assert_eq!(c.hint(), 2);
+        assert_eq!(*c.get(), 20);
+    }
+
+    #[test]
+    fn held_value_survives_later_publishes() {
+        let c = EpochCell::new(Arc::new(vec![1u8, 2, 3]));
+        let held = c.get();
+        c.publish(1, Arc::new(vec![9, 9, 9]));
+        assert_eq!(*held, vec![1, 2, 3]);
+        assert_eq!(*c.get(), vec![9, 9, 9]);
+    }
+}

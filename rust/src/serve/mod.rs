@@ -80,6 +80,7 @@
 //! # }
 //! ```
 
+pub mod epoch;
 pub mod handlers;
 pub mod http;
 pub mod state;
@@ -91,8 +92,8 @@ use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter, Read};
 use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{thread, Arc, Condvar, Mutex};
 use std::time::Duration;
 
 /// A bound (but not yet running) query server.
@@ -200,7 +201,7 @@ impl Server {
     pub fn run(&self) -> Result<()> {
         let max_inflight = self.max_inflight().max(1);
         let admission = Admission { q: Mutex::new(VecDeque::new()), cv: Condvar::new() };
-        std::thread::scope(|scope| {
+        thread::scope(|scope| {
             let refiner = scope.spawn(|| self.state.refine_loop(&self.stop));
             let mut workers = Vec::with_capacity(self.threads);
             for _ in 0..self.threads {
@@ -267,7 +268,7 @@ impl Server {
                         // Transient accept errors (EMFILE, aborted
                         // handshake): back off briefly instead of
                         // hot-spinning.
-                        std::thread::sleep(Duration::from_millis(10));
+                        thread::sleep(Duration::from_millis(10));
                     }
                 }
             }

@@ -47,15 +47,17 @@ use crate::data::matrix::Matrix;
 use crate::graph::weights::WeightConfig;
 use crate::knn::search::{search_nearest, SearchHandle, SearchIndex, SearchTotals};
 use crate::render::grid::GridIndex;
+use crate::serve::epoch::EpochCell;
 use crate::util::heap::BoundedMaxHeap;
 use crate::util::faultio::{RealStorage, Storage};
+use crate::util::notify::Doorbell;
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::{Arc, Mutex};
 use crate::vis::incremental::IncrementalLayout;
 use crate::vis::LargeVisConfig;
 use anyhow::{bail, Context, Result};
 use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 /// One immutable epoch of the served artifacts. Everything a handler
@@ -159,18 +161,15 @@ pub struct ServerState {
     /// Connections currently admitted (accepted and not yet finished);
     /// the acceptor sheds above `max_inflight`.
     admitted: AtomicUsize,
-    /// Current epoch, readable without any lock. Published *after* the
-    /// snapshot cell is updated, so a reader that sees epoch `e` here
-    /// finds a snapshot of epoch `>= e` in the cell.
-    epoch: AtomicU64,
-    /// The current snapshot. The mutex is held only for `Arc` clones
-    /// and swaps — never while building a snapshot.
-    snap: Mutex<Arc<Snapshot>>,
+    /// The current snapshot plus its lock-free epoch hint, swapped
+    /// together by [`EpochCell::publish`]: a reader that sees epoch
+    /// `e` in the hint finds a snapshot of epoch `>= e` in the cell.
+    snap: EpochCell<Snapshot>,
     /// Writer double-buffer (insert handlers + refinement worker).
     writer: Mutex<Writer>,
-    /// Refinement worker doorbell: `true` when un-refined insert
-    /// windows are pending.
-    refine_bell: (Mutex<bool>, Condvar),
+    /// Refinement worker doorbell: rung when un-refined insert windows
+    /// are pending.
+    refine_bell: Doorbell,
 }
 
 /// `<path>.tmp` — the staging name compaction writes next to each
@@ -448,10 +447,9 @@ impl ServerState {
             paths,
             ready: AtomicBool::new(false),
             admitted: AtomicUsize::new(0),
-            epoch: AtomicU64::new(0),
-            snap: Mutex::new(snapshot),
+            snap: EpochCell::new(snapshot),
             writer: Mutex::new(writer),
-            refine_bell: (Mutex::new(false), Condvar::new()),
+            refine_bell: Doorbell::new(),
         })
     }
 
@@ -523,10 +521,7 @@ impl ServerState {
 
         let epoch = recovered_batches;
         let snapshot = Arc::new(Self::snapshot_of(&w, epoch, self.base_n, self.n_classes));
-        *self.snap.lock().unwrap_or_else(|e| e.into_inner()) = snapshot;
-        // ordering: Release — pairs with the Acquire in `epoch_hint`
-        // (same protocol as `publish`).
-        self.epoch.store(epoch, Ordering::Release);
+        self.snap.publish(epoch, snapshot);
         // ordering: Release — pairs with the Acquire loads in
         // `is_ready` and above: whoever observes true also sees the
         // replayed snapshot and metrics written before this store.
@@ -619,16 +614,15 @@ impl ServerState {
 
     /// The current snapshot (one brief mutex for the `Arc` clone).
     pub fn snapshot(&self) -> Arc<Snapshot> {
-        self.snap.lock().unwrap_or_else(|e| e.into_inner()).clone()
+        self.snap.get()
     }
 
     /// Lock-free epoch hint. A connection worker holding a cached
     /// snapshot compares its `epoch` against this and re-fetches only
     /// on mismatch — the steady-state read path touches no mutex.
+    /// (The Acquire/Release pairing lives in [`EpochCell`].)
     pub fn epoch_hint(&self) -> u64 {
-        // ordering: Acquire — pairs with the Release stores in
-        // `publish` and `recover`; see the comment in `publish`.
-        self.epoch.load(Ordering::Acquire)
+        self.snap.hint()
     }
 
     /// Refresh `cached` if the epoch moved; returns a snapshot no
@@ -644,11 +638,7 @@ impl ServerState {
     fn publish(&self, w: &Writer) -> u64 {
         let epoch = self.epoch_hint() + 1;
         let snapshot = Arc::new(Self::snapshot_of(w, epoch, self.base_n, self.n_classes));
-        *self.snap.lock().unwrap_or_else(|e| e.into_inner()) = snapshot;
-        // ordering: Release — readers that load this hint are
-        // guaranteed to find an epoch >= it in the snapshot cell
-        // (pairs with the Acquire in `epoch_hint`).
-        self.epoch.store(epoch, Ordering::Release);
+        self.snap.publish(epoch, snapshot);
         epoch
     }
 
@@ -897,16 +887,12 @@ impl ServerState {
 
     /// Wake the refinement worker (new windows are pending).
     fn ring_refine_bell(&self) {
-        let (lock, cvar) = &self.refine_bell;
-        *lock.lock().unwrap_or_else(|e| e.into_inner()) = true;
-        cvar.notify_all();
+        self.refine_bell.ring();
     }
 
     /// Wake the refinement worker so it can observe `stop` (shutdown).
     pub fn wake_refiner(&self) {
-        let (lock, cvar) = &self.refine_bell;
-        let _guard = lock.lock().unwrap_or_else(|e| e.into_inner());
-        cvar.notify_all();
+        self.refine_bell.knock();
     }
 
     /// The background refinement loop: wait for the doorbell (or the
@@ -915,25 +901,12 @@ impl ServerState {
     /// for the duration of a pass, readers never wait.
     pub fn refine_loop(&self, stop: &AtomicBool) {
         let interval = Duration::from_millis(self.cfg.refine_interval_ms.max(10));
-        let (lock, cvar) = &self.refine_bell;
         loop {
-            {
-                let mut bell = lock.lock().unwrap_or_else(|e| e.into_inner());
-                // ordering: Relaxed — `stop` is a pure termination
-                // flag; the bell mutex/condvar provides the wakeup
-                // handoff, and no memory rides on the flag itself.
-                while !*bell && !stop.load(Ordering::Relaxed) {
-                    let (guard, timeout) = cvar
-                        .wait_timeout(bell, interval)
-                        .unwrap_or_else(|e| e.into_inner());
-                    bell = guard;
-                    if timeout.timed_out() {
-                        break;
-                    }
-                }
-                *bell = false;
-            }
-            // ordering: Relaxed — see the loop condition above.
+            // ordering: Relaxed — `stop` is a pure termination flag;
+            // the doorbell provides the wakeup handoff, and no memory
+            // rides on the flag itself.
+            self.refine_bell.wait_or(interval, || stop.load(Ordering::Relaxed));
+            // ordering: Relaxed — see above.
             if stop.load(Ordering::Relaxed) {
                 return;
             }

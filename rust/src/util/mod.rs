@@ -6,7 +6,9 @@ pub mod rng;
 pub mod faultio;
 pub mod alias;
 pub mod heap;
+pub mod notify;
 pub mod pool;
+pub mod sync;
 pub mod timer;
 pub mod stats;
 pub mod proptest;

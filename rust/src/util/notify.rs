@@ -1,0 +1,142 @@
+//! Condvar doorbell: the flag-under-lock wakeup protocol used by the
+//! serve-side refine loop, extracted so the model checker can drive it
+//! as a small closed protocol (see `tools/modelcheck`).
+//!
+//! The protocol has exactly one liveness-bearing rule: **the flag is
+//! set under the same lock the waiter's predicate check and park run
+//! under**. A waiter therefore either observes the flag already set
+//! (and never parks) or parks *before* the ringer can take the lock —
+//! in which case the ringer's notify finds it parked. Setting the flag
+//! outside that critical section, or notifying without setting it,
+//! reintroduces the classic lost-wakeup race; the mutation corpus
+//! seeds exactly that bug under `--cfg modelcheck_mutant_bell_no_flag`
+//! and CI asserts the checker reports it as a deadlock.
+
+use crate::util::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// A lossless one-bit doorbell over `Mutex<bool>` + `Condvar`.
+///
+/// `ring` wakes current *and future* waiters (the bit stays set until
+/// a waiter consumes it); `knock` wakes only currently parked waiters
+/// and is meant for "recheck your own predicate" nudges where the
+/// caller owns a separate stop condition.
+pub struct Doorbell {
+    flag: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Doorbell {
+    /// Creates a doorbell with the bit clear.
+    pub fn new() -> Self {
+        Doorbell { flag: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    /// Sets the bit and wakes every waiter. The set happens under the
+    /// doorbell lock, which is what makes the wakeup lossless (see the
+    /// module docs).
+    pub fn ring(&self) {
+        let mut flag = self.flag.lock().unwrap_or_else(|e| e.into_inner());
+        // Seeded lost-wakeup bug for the mutation corpus: skip setting
+        // the bit, so a ring that fires before the waiter parks leaves
+        // nothing behind for the waiter's predicate check and the
+        // waiter sleeps forever. The checker must flag this as a
+        // deadlock on some schedule.
+        #[cfg(not(modelcheck_mutant_bell_no_flag))]
+        {
+            *flag = true;
+        }
+        #[cfg(modelcheck_mutant_bell_no_flag)]
+        {
+            let _ = &mut flag;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Wakes currently parked waiters without setting the bit. A
+    /// knock that fires while nobody is parked is deliberately lost;
+    /// callers pair it with their own stop/recheck condition (the
+    /// refine loop pairs it with the server stop flag).
+    pub fn knock(&self) {
+        let _flag = self.flag.lock().unwrap_or_else(|e| e.into_inner());
+        self.cv.notify_all();
+    }
+
+    /// Parks until the bit is set, `stop()` returns true, or `interval`
+    /// elapses; consumes the bit before returning. Returns true when
+    /// the doorbell was actually rung (the bit was set), false on a
+    /// stop-request or timeout wakeup.
+    ///
+    /// Under the model checker the timeout never fires (model time
+    /// does not exist), so a lost wakeup surfaces as a deadlock
+    /// instead of being papered over by the periodic timeout.
+    pub fn wait_or(&self, interval: Duration, stop: impl Fn() -> bool) -> bool {
+        let mut flag = self.flag.lock().unwrap_or_else(|e| e.into_inner());
+        while !*flag && !stop() {
+            let (f, timeout) = self
+                .cv
+                .wait_timeout(flag, interval)
+                .unwrap_or_else(|e| e.into_inner());
+            flag = f;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let rung = *flag;
+        *flag = false;
+        rung
+    }
+}
+
+impl Default for Doorbell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    #[cfg(not(modelcheck_mutant_bell_no_flag))]
+    fn ring_before_wait_is_not_lost() {
+        let bell = Doorbell::new();
+        bell.ring();
+        // The bit persists, so a wait that starts after the ring
+        // returns immediately without relying on the notify.
+        assert!(bell.wait_or(Duration::from_secs(5), || false));
+        // ...and is consumed exactly once.
+        assert!(!bell.wait_or(Duration::from_millis(1), || false));
+    }
+
+    #[test]
+    fn stop_predicate_short_circuits() {
+        let bell = Doorbell::new();
+        let stop = AtomicBool::new(true);
+        assert!(!bell.wait_or(Duration::from_secs(5), || stop.load(Ordering::Relaxed)));
+    }
+
+    #[test]
+    #[cfg(not(modelcheck_mutant_bell_no_flag))]
+    fn ring_wakes_parked_waiter() {
+        let bell = Doorbell::new();
+        std::thread::scope(|s| {
+            let h = s.spawn(|| bell.wait_or(Duration::from_secs(30), || false));
+            // Give the waiter a moment to park, then ring; either way
+            // (parked or not yet parked) the wakeup must not be lost.
+            std::thread::sleep(Duration::from_millis(20));
+            bell.ring();
+            assert!(h.join().unwrap());
+        });
+    }
+
+    #[test]
+    fn knock_without_bit_times_out() {
+        let bell = Doorbell::new();
+        bell.knock(); // nobody parked: deliberately lost
+        assert!(!bell.wait_or(Duration::from_millis(5), || false));
+    }
+}

@@ -1,9 +1,71 @@
-//! Data-parallel helpers over `std::thread::scope` (no rayon offline).
+//! Data-parallel helpers over scoped threads (no rayon offline).
 //!
 //! The paper parallelizes three things: tree search per node, neighbor
 //! exploring per node, and the asynchronous SGD workers. All are
 //! expressible as a `parallel_for` over an index range with per-worker
 //! state, or as `spawn_workers` for long-lived SGD threads.
+//!
+//! Threads come from `util::sync::thread` (the sync shim), so under
+//! `--cfg modelcheck` every worker is a schedulable model thread and
+//! the teardown handshake below is explored, not sampled.
+
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::thread;
+
+/// Worker-teardown completion latch, reviewed under the model checker.
+///
+/// Each worker calls [`DoneLatch::arrive`] as its last action; any
+/// thread that observes [`DoneLatch::is_done`] may then read data the
+/// workers wrote *without further synchronization*. That guarantee is
+/// exactly the Release/Acquire pair documented on the two methods —
+/// the regression model test `pool_latch_publishes_worker_writes` in
+/// `tools/modelcheck` pins it, and the
+/// `modelcheck_mutant_latch_relaxed` corpus entry proves the checker
+/// notices when the Release half is dropped.
+pub struct DoneLatch {
+    remaining: AtomicUsize,
+}
+
+impl DoneLatch {
+    /// Latch that opens after `n` arrivals.
+    pub fn new(n: usize) -> Self {
+        DoneLatch { remaining: AtomicUsize::new(n) }
+    }
+
+    /// Records one worker's completion; returns true for the final
+    /// arrival.
+    pub fn arrive(&self) -> bool {
+        // ordering: AcqRel — the Release half publishes everything
+        // this worker wrote before arriving to whoever sees the count
+        // reach zero (pairs with the Acquire in `is_done`); the
+        // Acquire half makes the *last* arriver see every earlier
+        // worker's writes, so it can safely tear shared state down.
+        #[cfg(not(modelcheck_mutant_latch_relaxed))]
+        let prev = self.remaining.fetch_sub(1, Ordering::AcqRel);
+        // Seeded ordering bug for the mutation corpus: dropping the
+        // Release half means observers of zero may still read stale
+        // pre-arrival data. The checker must catch this.
+        // ordering: Relaxed — deliberate mutant, see above.
+        #[cfg(modelcheck_mutant_latch_relaxed)]
+        let prev = self.remaining.fetch_sub(1, Ordering::Relaxed);
+        prev == 1
+    }
+
+    /// True once every worker has arrived. Observing true makes all
+    /// workers' pre-arrival writes visible to the caller.
+    pub fn is_done(&self) -> bool {
+        // ordering: Acquire — pairs with the Release half of the
+        // AcqRel in `arrive`; see the struct docs.
+        #[cfg(not(modelcheck_mutant_latch_weak_poll))]
+        return self.remaining.load(Ordering::Acquire) == 0;
+        // Seeded ordering bug for the mutation corpus: polling with a
+        // Relaxed load observes the count hit zero without acquiring
+        // the arrivers' writes, so the caller can read stale payloads.
+        // ordering: Relaxed — deliberate mutant, see above.
+        #[cfg(modelcheck_mutant_latch_weak_poll)]
+        return self.remaining.load(Ordering::Relaxed) == 0;
+    }
+}
 
 /// Number of worker threads to use by default (respects
 /// `LARGEVIS_THREADS`, falling back to available parallelism).
@@ -30,7 +92,7 @@ where
         return;
     }
     let chunk = n_items.div_ceil(threads);
-    std::thread::scope(|s| {
+    thread::scope(|s| {
         for t in 0..threads {
             let f = &f;
             let lo = t * chunk;
@@ -78,7 +140,7 @@ where
         return out;
     }
     let chunk = n_items.div_ceil(threads);
-    std::thread::scope(|s| {
+    thread::scope(|s| {
         for (t, slice) in out.chunks_mut(chunk).enumerate() {
             let f = &f;
             let init = &init;
@@ -105,12 +167,21 @@ where
         f(0);
         return;
     }
-    std::thread::scope(|s| {
+    let latch = DoneLatch::new(threads);
+    thread::scope(|s| {
         for t in 0..threads {
             let f = &f;
-            s.spawn(move || f(t));
+            let latch = &latch;
+            s.spawn(move || {
+                f(t);
+                latch.arrive();
+            });
         }
     });
+    // The scope join above already synchronizes, so this is an
+    // invariant check of the latch protocol, not a synchronization
+    // point: every worker must have arrived exactly once.
+    debug_assert!(latch.is_done());
 }
 
 #[cfg(test)]

@@ -1,0 +1,85 @@
+//! Sync-primitive shim: `std::sync` in normal builds, a deterministic
+//! model-checking runtime under `--cfg modelcheck`.
+//!
+//! Every concurrency-bearing module of the serving/durability stack
+//! (`serve/`, `data/chunked.rs`, `data/formats/wal.rs`, `util/pool.rs`)
+//! imports its atomics, locks, condvars and threads from here instead
+//! of `std::sync` / `std::thread` (enforced by repolint's `sync-shim`
+//! rule). In a normal build the module is a zero-cost facade: every
+//! name is a re-export of the `std` type, so release binaries are
+//! bit-identical to direct `std::sync` use.
+//!
+//! Under `RUSTFLAGS="--cfg modelcheck"` the same names resolve to
+//! instrumented wrappers (see `shim`) that route every
+//! load/store/RMW, lock/unlock, condvar wait/notify and thread
+//! spawn/join through a deterministic scheduler ([`model`]): a
+//! bounded-exhaustive DFS with a preemption bound for small models, or
+//! seeded PCT-style random scheduling for larger ones. The scheduler
+//! honors the declared [`atomic::Ordering`] when deciding which stored
+//! value a load may observe — `Relaxed` loads can return stale values,
+//! while a `Release` store / `Acquire` load pair transfers the
+//! writer's vector clock and prunes the staleness window. The model
+//! tests live in `tools/modelcheck` (`cargo test -p modelcheck`); see
+//! ARCHITECTURE.md "Schedule exploration".
+//!
+//! Outside an active exploration (e.g. a plain binary accidentally
+//! built with the cfg), the instrumented types fall back to their real
+//! `std` counterparts, so the shim is drop-in in both directions.
+
+#[cfg(modelcheck)]
+mod sched;
+#[cfg(modelcheck)]
+mod shim;
+
+/// Deterministic schedule exploration entry points (modelcheck builds
+/// only): [`model::explore`] runs a closure under every schedule the
+/// configured budget allows and returns a [`model::Report`];
+/// [`model::check`] panics with the failing trace.
+#[cfg(modelcheck)]
+pub mod model {
+    pub use super::sched::{check, explore, Config, Failure, Mode, Report};
+}
+
+#[cfg(not(modelcheck))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+// The poison-handling vocabulary types are plain data carriers; they
+// are shared verbatim between both builds so call sites like
+// `lock().unwrap_or_else(|e| e.into_inner())` are mode-independent.
+pub use std::sync::{LockResult, PoisonError};
+
+#[cfg(modelcheck)]
+pub use shim::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+// `Arc` is never instrumented: its reference counting is not part of
+// any protocol under test, and leaving it real keeps model state
+// ownership simple. It is still re-exported so shim users need a
+// single import root.
+#[cfg(modelcheck)]
+pub use std::sync::Arc;
+
+/// Atomic integer/bool types plus [`atomic::Ordering`]. Normal builds
+/// re-export `std::sync::atomic`; modelcheck builds substitute
+/// scheduler-instrumented cells with the same method surface.
+pub mod atomic {
+    #[cfg(not(modelcheck))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+
+    #[cfg(modelcheck)]
+    pub use super::shim::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+
+    // `Ordering` is always the real enum: the instrumented cells take
+    // it as an argument and interpret it, so call sites never change.
+    pub use std::sync::atomic::Ordering;
+}
+
+/// Thread spawn/scope/join. Normal builds re-export `std::thread`;
+/// modelcheck builds register every spawned thread with the scheduler
+/// so it becomes a schedulable entity with its own vector clock.
+pub mod thread {
+    #[cfg(not(modelcheck))]
+    pub use std::thread::{scope, sleep, spawn, JoinHandle, Scope, ScopedJoinHandle};
+
+    #[cfg(modelcheck)]
+    pub use super::shim::thread_shim::{scope, sleep, spawn, JoinHandle, Scope, ScopedJoinHandle};
+}

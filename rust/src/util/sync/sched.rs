@@ -1,0 +1,974 @@
+//! Deterministic schedule-exploration engine behind the sync shim
+//! (`--cfg modelcheck` builds only).
+//!
+//! One *exploration* ([`explore`]) runs a test closure under many
+//! thread interleavings. Within one *schedule* (a single run of the
+//! closure) exactly one model thread executes at a time: every
+//! instrumented operation — atomic load/store/RMW, mutex lock/unlock,
+//! condvar wait/notify, thread spawn/join — is a *decision point*
+//! where the engine consults the schedule driver for (a) which thread
+//! runs next and (b), on atomic loads with several legal values, which
+//! store the load observes.
+//!
+//! Two drivers:
+//! - **DFS** — bounded-exhaustive depth-first search over the decision
+//!   tree with a preemption bound (Musuvathi/Qadeer-style iterative
+//!   context bounding): option 0 at every thread node keeps the
+//!   current thread running, so the default path is the sequential
+//!   execution and each backtracked branch spends preemptions
+//!   explicitly. Complete (up to the bound) for the small models the
+//!   invariant tests build.
+//! - **PCT** — seeded probabilistic concurrency testing: random thread
+//!   priorities with `pct_depth - 1` priority-change points per
+//!   schedule, which gives a known lower bound on the probability of
+//!   hitting any bug of depth `pct_depth`. Used for sweeps above the
+//!   exhaustive budget.
+//!
+//! Memory-model approximation (documented, deliberately simple): every
+//! store to an atomic cell is kept in the cell's modification-order
+//! history together with the writer's vector clock. A load may observe
+//! any store that is not *known-overwritten* — i.e. no later store of
+//! the same cell happens-before the loading thread's current clock —
+//! and not older than anything the thread already read or wrote there
+//! (per-thread coherence). `Release`/`AcqRel`/`SeqCst` stores attach
+//! the writer's clock; `Acquire`/`AcqRel`/`SeqCst` loads that observe
+//! such a store join it, creating the happens-before edge that prunes
+//! staleness. `Relaxed` transfers nothing, so downgrading a
+//! publication store is an observable model change — exactly what the
+//! mutation corpus relies on. RMWs always read the newest store
+//! (coherence requires it). `SeqCst` is approximated as `AcqRel`: the
+//! single total order is not modeled, which can only make the checker
+//! *more* suspicious of SeqCst-dependent code, never less. Mutexes and
+//! condvars are sequentially consistent (as in practice); condvar
+//! waits never time out spuriously inside the model, so a lost wakeup
+//! manifests as a detected deadlock instead of being masked by a
+//! timeout retry.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc as StdArc, Condvar as StdCondvar, Mutex as StdMutex};
+
+// ------------------------------------------------------------- config
+
+/// Which schedule driver an exploration uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Bounded-exhaustive DFS with a preemption bound.
+    Dfs,
+    /// Seeded PCT-style random priority scheduling.
+    Pct,
+}
+
+/// Exploration configuration. [`Config::from_env`] reads the CI knobs;
+/// every field can also be set directly by a test.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Driver choice (`LARGEVIS_MODELCHECK_MODE` = `dfs` | `pct`).
+    pub mode: Mode,
+    /// PCT seed (`LARGEVIS_MODELCHECK_SEED`); ignored by DFS.
+    pub seed: u64,
+    /// Schedule budget (`LARGEVIS_MODELCHECK_SCHEDULES`): DFS stops
+    /// early (reported as incomplete), PCT runs exactly this many.
+    pub max_schedules: u64,
+    /// DFS preemption bound (`LARGEVIS_MODELCHECK_PREEMPTIONS`).
+    pub preemption_bound: u32,
+    /// Per-schedule step guard against accidental livelock.
+    pub max_steps: u64,
+    /// PCT priority-change points per schedule.
+    pub pct_depth: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            mode: Mode::Dfs,
+            seed: 1,
+            max_schedules: 20_000,
+            preemption_bound: 2,
+            max_steps: 50_000,
+            pct_depth: 3,
+        }
+    }
+}
+
+impl Config {
+    /// Defaults overridden by the `LARGEVIS_MODELCHECK_*` environment
+    /// knobs (the CI sweep's interface).
+    pub fn from_env() -> Config {
+        let mut c = Config::default();
+        if let Ok(v) = std::env::var("LARGEVIS_MODELCHECK_MODE") {
+            if v.eq_ignore_ascii_case("pct") {
+                c.mode = Mode::Pct;
+            }
+        }
+        let num = |name: &str| std::env::var(name).ok().and_then(|v| v.parse::<u64>().ok());
+        if let Some(v) = num("LARGEVIS_MODELCHECK_SEED") {
+            c.seed = v;
+        }
+        if let Some(v) = num("LARGEVIS_MODELCHECK_SCHEDULES") {
+            c.max_schedules = v.max(1);
+        }
+        if let Some(v) = num("LARGEVIS_MODELCHECK_PREEMPTIONS") {
+            c.preemption_bound = v.min(u32::MAX as u64) as u32;
+        }
+        c
+    }
+}
+
+/// Outcome of one exploration.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Model name (for the JSON report / failure messages).
+    pub name: String,
+    /// Driver that ran.
+    pub mode: Mode,
+    /// Seed used (PCT; echoed for DFS).
+    pub seed: u64,
+    /// Schedules executed.
+    pub schedules: u64,
+    /// True when DFS exhausted the (bounded) tree within the budget.
+    pub complete: bool,
+    /// Longest schedule, in decision steps.
+    pub max_steps: u64,
+    /// Preemption bound in force (DFS).
+    pub preemption_bound: u32,
+    /// Most preemptions spent by any executed schedule.
+    pub max_preemptions: u32,
+    /// First invariant violation found, if any.
+    pub failure: Option<Failure>,
+}
+
+/// A schedule that violated an invariant.
+#[derive(Clone, Debug)]
+pub struct Failure {
+    /// 1-based index of the failing schedule.
+    pub schedule: u64,
+    /// Panic message / deadlock description.
+    pub message: String,
+    /// Tail of the failing schedule's operation log.
+    pub trace: Vec<String>,
+}
+
+// --------------------------------------------------------- primitives
+
+/// Thread id inside one schedule (0 = the closure's own thread).
+pub(super) type TId = usize;
+
+/// Vector clock over model threads.
+#[derive(Clone, Debug, Default, PartialEq)]
+struct VClock(Vec<u64>);
+
+impl VClock {
+    fn tick(&mut self, t: TId) -> u64 {
+        self.ensure(t);
+        self.0[t] += 1;
+        self.0[t]
+    }
+    fn ensure(&mut self, t: TId) {
+        if self.0.len() <= t {
+            self.0.resize(t + 1, 0);
+        }
+    }
+    fn get(&self, t: TId) -> u64 {
+        self.0.get(t).copied().unwrap_or(0)
+    }
+    fn join(&mut self, other: &VClock) {
+        self.ensure(other.0.len().saturating_sub(1));
+        for (i, &v) in other.0.iter().enumerate() {
+            if self.0[i] < v {
+                self.0[i] = v;
+            }
+        }
+    }
+}
+
+/// One store in a cell's modification order.
+#[derive(Clone, Debug)]
+struct StoreRec {
+    val: u64,
+    /// Writer thread and its own clock component at the store — the
+    /// "write event" used by the known-overwritten rule.
+    wtid: TId,
+    wtick: u64,
+    /// Writer's full clock, attached when the store was
+    /// `Release`/`AcqRel`/`SeqCst`; acquiring readers join it.
+    release: Option<VClock>,
+}
+
+#[derive(Debug, Default)]
+struct CellHist {
+    stores: Vec<StoreRec>,
+    /// Per-thread coherence floor: the newest store index each thread
+    /// has read or written (it may never observe anything older).
+    floor: Vec<usize>,
+}
+
+impl CellHist {
+    fn seeded(init: u64) -> CellHist {
+        CellHist {
+            stores: vec![StoreRec { val: init, wtid: 0, wtick: 0, release: Some(VClock::default()) }],
+            floor: Vec::new(),
+        }
+    }
+    fn floor_of(&self, t: TId) -> usize {
+        self.floor.get(t).copied().unwrap_or(0)
+    }
+    fn raise_floor(&mut self, t: TId, idx: usize) {
+        if self.floor.len() <= t {
+            self.floor.resize(t + 1, 0);
+        }
+        if self.floor[t] < idx {
+            self.floor[t] = idx;
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Status {
+    Runnable,
+    /// Waiting to acquire the mutex keyed by this id.
+    BlockedMutex(usize),
+    /// Parked on the condvar keyed by this id.
+    BlockedCond(usize),
+    /// Waiting for the given thread to finish.
+    BlockedJoin(TId),
+    Finished,
+}
+
+#[derive(Debug)]
+struct ThreadState {
+    status: Status,
+    clock: VClock,
+    /// PCT priority (higher runs first).
+    priority: u64,
+}
+
+#[derive(Debug, Default)]
+struct MutexInfo {
+    owner: Option<TId>,
+    /// Clock joined by each successful acquire (release consistency of
+    /// the critical sections).
+    sync: VClock,
+}
+
+#[derive(Debug, Default)]
+struct CondInfo {
+    /// Parked waiters in arrival order, with the mutex they released.
+    waiters: Vec<(TId, usize)>,
+}
+
+// ------------------------------------------------------------- driver
+
+/// One recorded DFS decision node.
+#[derive(Clone, Debug)]
+struct Node {
+    chosen: usize,
+    n: usize,
+    /// For thread nodes: whether option `i` preempts (switches away
+    /// from a still-runnable active thread).
+    preemptive: Vec<bool>,
+    preempts_before: u32,
+}
+
+enum Driver {
+    Dfs { script: Vec<Node>, pos: usize, bound: u32 },
+    Pct { rng: Pcg, change_steps: Vec<u64>, step: u64 },
+}
+
+/// Minimal PCG32-style generator: deterministic per seed, no deps.
+struct Pcg(u64);
+
+impl Pcg {
+    fn new(seed: u64) -> Pcg {
+        Pcg(seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0xDA3E39CB94B95BDB))
+    }
+    fn next(&mut self) -> u64 {
+        // xorshift64*: plenty for schedule sampling.
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n.max(1) as u64) as usize
+    }
+}
+
+// ------------------------------------------------------------- engine
+
+/// Panic payload used to unwind model threads when a schedule aborts
+/// (deadlock, budget, or another thread's failure). Swallowed by the
+/// spawn wrappers; never reaches user code.
+pub(super) struct ModelAbort;
+
+struct EngineState {
+    threads: Vec<ThreadState>,
+    active: TId,
+    abort: bool,
+    failure: Option<String>,
+    trace: Vec<String>,
+    driver: Driver,
+    cells: HashMap<usize, CellHist>,
+    mutexes: HashMap<usize, MutexInfo>,
+    condvars: HashMap<usize, CondInfo>,
+    steps: u64,
+    max_steps: u64,
+    preemptions: u32,
+    /// Model threads whose OS thread has not yet finished (schedule
+    /// teardown waits for this to reach zero).
+    live: usize,
+}
+
+pub(super) struct Engine {
+    mu: StdMutex<EngineState>,
+    cv: StdCondvar,
+    /// Exploration generation stamp; detached threads from an aborted
+    /// schedule compare it and unwind instead of touching fresh state.
+    pub(super) gen: u64,
+}
+
+thread_local! {
+    /// (engine generation, model thread id) of the current OS thread.
+    static SELF_ID: std::cell::Cell<Option<(u64, TId)>> = const { std::cell::Cell::new(None) };
+}
+
+/// The engine of the exploration currently running (one at a time;
+/// [`explore`] serializes on `EXPLORE_LOCK`).
+static ACTIVE: StdMutex<Option<StdArc<Engine>>> = StdMutex::new(None);
+static EXPLORE_LOCK: StdMutex<()> = StdMutex::new(());
+static GEN: StdMutex<u64> = StdMutex::new(0);
+
+/// The current engine + this thread's model id, when this OS thread is
+/// a registered model thread of the live exploration.
+pub(super) fn current() -> Option<(StdArc<Engine>, TId)> {
+    let engine = ACTIVE.lock().unwrap_or_else(|e| e.into_inner()).clone()?;
+    let (gen, tid) = SELF_ID.with(|s| s.get())?;
+    if gen == engine.gen {
+        Some((engine, tid))
+    } else {
+        None
+    }
+}
+
+fn unwind_abort() -> ! {
+    std::panic::panic_any(ModelAbort)
+}
+
+impl Engine {
+    fn new(gen: u64, driver: Driver, max_steps: u64) -> Engine {
+        let mut clock = VClock::default();
+        clock.ensure(0);
+        Engine {
+            mu: StdMutex::new(EngineState {
+                threads: vec![ThreadState { status: Status::Runnable, clock, priority: u64::MAX }],
+                active: 0,
+                abort: false,
+                failure: None,
+                trace: Vec::new(),
+                driver,
+                cells: HashMap::new(),
+                mutexes: HashMap::new(),
+                condvars: HashMap::new(),
+                steps: 0,
+                max_steps,
+                preemptions: 0,
+                live: 1,
+            }),
+            cv: StdCondvar::new(),
+            gen,
+        }
+    }
+
+    fn log(st: &mut EngineState, t: TId, msg: &str) {
+        if st.trace.len() >= 512 {
+            st.trace.remove(0);
+        }
+        st.trace.push(format!("[t{t}] {msg}"));
+    }
+
+    /// Record a failure and abort every thread of this schedule.
+    fn fail(&self, st: &mut EngineState, msg: String) {
+        if st.failure.is_none() {
+            st.failure = Some(msg);
+        }
+        st.abort = true;
+        self.cv.notify_all();
+    }
+
+    /// Run `op` as the active thread: wait for the scheduler to grant
+    /// this thread the baton, execute, then hand the next decision to
+    /// the driver. `op` must not block.
+    fn turn<R>(&self, t: TId, desc: &str, op: impl FnOnce(&mut EngineState) -> R) -> R {
+        let mut st = self.mu.lock().unwrap_or_else(|e| e.into_inner());
+        while !st.abort && st.active != t {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if st.abort {
+            drop(st);
+            unwind_abort();
+        }
+        st.steps += 1;
+        if st.steps > st.max_steps {
+            self.fail(&mut st, format!("model exceeded {} steps (livelock?)", st.max_steps));
+            drop(st);
+            unwind_abort();
+        }
+        Self::log(&mut st, t, desc);
+        let r = op(&mut st);
+        self.reschedule(&mut st, t);
+        if st.abort && st.active == t {
+            // This thread was chosen but the schedule already failed.
+            drop(st);
+            unwind_abort();
+        }
+        r
+    }
+
+    /// Pick the next thread to hold the baton. Called with the state
+    /// lock held, after `from` completed an operation (or blocked).
+    fn reschedule(&self, st: &mut EngineState, from: TId) {
+        let mut opts: Vec<TId> = Vec::new();
+        if st.threads[from].status == Status::Runnable {
+            opts.push(from);
+        }
+        for (i, th) in st.threads.iter().enumerate() {
+            if i != from && th.status == Status::Runnable {
+                opts.push(i);
+            }
+        }
+        if opts.is_empty() {
+            let unfinished: Vec<TId> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, th)| th.status != Status::Finished)
+                .map(|(i, _)| i)
+                .collect();
+            if !unfinished.is_empty() {
+                let detail: Vec<String> = unfinished
+                    .iter()
+                    .map(|&i| format!("t{}={:?}", i, st.threads[i].status))
+                    .collect();
+                self.fail(st, format!("deadlock: no runnable thread ({})", detail.join(", ")));
+            }
+            return;
+        }
+        let from_runnable = st.threads[from].status == Status::Runnable;
+        let pick = match &mut st.driver {
+            Driver::Dfs { script, pos, bound } => {
+                let preemptive: Vec<bool> =
+                    opts.iter().map(|&o| from_runnable && o != from).collect();
+                let preempts_before = st.preemptions;
+                let chosen = if *pos < script.len() {
+                    script[*pos].chosen.min(opts.len() - 1)
+                } else {
+                    // Default: first option within the preemption
+                    // budget (option 0 never preempts by construction).
+                    let c = (0..opts.len())
+                        .find(|&i| !preemptive[i] || preempts_before < *bound)
+                        .unwrap_or(0);
+                    script.push(Node { chosen: c, n: opts.len(), preemptive: preemptive.clone(), preempts_before });
+                    c
+                };
+                *pos += 1;
+                if preemptive[chosen] {
+                    st.preemptions += 1;
+                }
+                opts[chosen]
+            }
+            Driver::Pct { rng, change_steps, step } => {
+                *step += 1;
+                if change_steps.contains(step) {
+                    // Priority-change point: demote the active thread.
+                    let new = rng.next() % 1024;
+                    st.threads[from].priority = new;
+                }
+                let mut best = opts[0];
+                for &o in &opts {
+                    if st.threads[o].priority > st.threads[best].priority {
+                        best = o;
+                    }
+                }
+                if from_runnable && best != from {
+                    st.preemptions += 1;
+                }
+                best
+            }
+        };
+        if pick != st.active {
+            st.active = pick;
+        }
+        self.cv.notify_all();
+    }
+
+    /// A value decision (which candidate a load observes).
+    fn choose_value(&self, st: &mut EngineState, n: usize) -> usize {
+        if n <= 1 {
+            return 0;
+        }
+        match &mut st.driver {
+            Driver::Dfs { script, pos, .. } => {
+                let chosen = if *pos < script.len() {
+                    script[*pos].chosen.min(n - 1)
+                } else {
+                    script.push(Node {
+                        chosen: 0,
+                        n,
+                        preemptive: vec![false; n],
+                        preempts_before: st.preemptions,
+                    });
+                    0
+                };
+                *pos += 1;
+                chosen
+            }
+            Driver::Pct { rng, .. } => {
+                // Bias toward the newest value (candidate 0), exploring
+                // staleness with probability ~1/4.
+                if rng.below(4) == 0 {
+                    rng.below(n)
+                } else {
+                    0
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------- atomics
+
+    /// Atomic load at `addr` (seeded with `init` on first touch).
+    pub(super) fn atomic_load(&self, t: TId, addr: usize, init: u64, ord: Ordering) -> u64 {
+        self.turn(t, "atomic load", |st| {
+            let clock = st.threads[t].clock.clone();
+            let cell = st.cells.entry(addr).or_insert_with(|| CellHist::seeded(init));
+            let floor = cell.floor_of(t);
+            // Known-overwritten rule: s is readable unless a newer
+            // store's write event is already in t's clock.
+            let mut candidates: Vec<usize> = Vec::new();
+            for i in (floor..cell.stores.len()).rev() {
+                let known_newer = cell.stores[i + 1..]
+                    .iter()
+                    .any(|s| clock.get(s.wtid) >= s.wtick);
+                if !known_newer {
+                    candidates.push(i);
+                }
+            }
+            if candidates.is_empty() {
+                candidates.push(cell.stores.len() - 1);
+            }
+            let n = candidates.len();
+            // Borrowck: finish with `cell` before the driver choice
+            // (which needs `&mut EngineState` again).
+            let stores_snapshot: Vec<(u64, Option<VClock>)> = candidates
+                .iter()
+                .map(|&i| {
+                    let s = &cell.stores[i];
+                    (s.val, s.release.clone())
+                })
+                .collect();
+            let choice = self.choose_value(st, n);
+            let (val, release) = stores_snapshot[choice].clone();
+            let idx = candidates[choice];
+            let acquire = matches!(ord, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst);
+            if acquire {
+                if let Some(rel) = &release {
+                    st.threads[t].clock.join(rel);
+                }
+            }
+            let cell = st.cells.get_mut(&addr).expect("cell just seeded");
+            cell.raise_floor(t, idx);
+            val
+        })
+    }
+
+    /// Atomic store at `addr`.
+    pub(super) fn atomic_store(&self, t: TId, addr: usize, init: u64, val: u64, ord: Ordering) {
+        self.turn(t, "atomic store", |st| {
+            let tick = st.threads[t].clock.tick(t);
+            let release = matches!(ord, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+                .then(|| st.threads[t].clock.clone());
+            let cell = st.cells.entry(addr).or_insert_with(|| CellHist::seeded(init));
+            let idx = cell.stores.len();
+            cell.stores.push(StoreRec { val, wtid: t, wtick: tick, release });
+            cell.raise_floor(t, idx);
+        })
+    }
+
+    /// Atomic read-modify-write at `addr`; reads the newest store
+    /// (modification-order coherence), writes `f(old)`, returns `old`.
+    pub(super) fn atomic_rmw(
+        &self,
+        t: TId,
+        addr: usize,
+        init: u64,
+        ord: Ordering,
+        f: impl FnOnce(u64) -> u64,
+    ) -> u64 {
+        self.turn(t, "atomic rmw", |st| {
+            let cell = st.cells.entry(addr).or_insert_with(|| CellHist::seeded(init));
+            let last = cell.stores.last().expect("history never empty");
+            let old = last.val;
+            let read_release = last.release.clone();
+            let acquire = matches!(ord, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst);
+            if acquire {
+                if let Some(rel) = read_release {
+                    st.threads[t].clock.join(&rel);
+                }
+            }
+            let tick = st.threads[t].clock.tick(t);
+            let release = matches!(ord, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+                .then(|| st.threads[t].clock.clone());
+            let cell = st.cells.get_mut(&addr).expect("cell just seeded");
+            let idx = cell.stores.len();
+            cell.stores.push(StoreRec { val: f(old), wtid: t, wtick: tick, release });
+            cell.raise_floor(t, idx);
+            old
+        })
+    }
+
+    // -------------------------------------------------------- mutexes
+
+    /// Acquire the model mutex keyed by `addr`; blocks (model-level)
+    /// while another thread owns it.
+    pub(super) fn mutex_lock(&self, t: TId, addr: usize) {
+        loop {
+            let acquired = self.turn(t, "mutex lock", |st| {
+                let m = st.mutexes.entry(addr).or_default();
+                if m.owner.is_none() {
+                    m.owner = Some(t);
+                    let sync = m.sync.clone();
+                    st.threads[t].clock.join(&sync);
+                    true
+                } else {
+                    st.threads[t].status = Status::BlockedMutex(addr);
+                    false
+                }
+            });
+            if acquired {
+                return;
+            }
+            self.wait_runnable(t);
+        }
+    }
+
+    /// Release the model mutex keyed by `addr` and wake its waiters.
+    pub(super) fn mutex_unlock(&self, t: TId, addr: usize) {
+        self.turn(t, "mutex unlock", |st| {
+            st.threads[t].clock.tick(t);
+            let clock = st.threads[t].clock.clone();
+            let m = st.mutexes.entry(addr).or_default();
+            m.owner = None;
+            m.sync.join(&clock);
+            for th in st.threads.iter_mut() {
+                if th.status == Status::BlockedMutex(addr) {
+                    th.status = Status::Runnable;
+                }
+            }
+        })
+    }
+
+    // ------------------------------------------------------- condvars
+
+    /// Atomically release `mutex_addr` and park on the condvar keyed
+    /// by `cond_addr`; returns once notified *and* rescheduled (the
+    /// caller then reacquires the mutex).
+    pub(super) fn cond_wait(&self, t: TId, cond_addr: usize, mutex_addr: usize) {
+        self.turn(t, "cond wait", |st| {
+            st.threads[t].clock.tick(t);
+            let clock = st.threads[t].clock.clone();
+            let m = st.mutexes.entry(mutex_addr).or_default();
+            m.owner = None;
+            m.sync.join(&clock);
+            for th in st.threads.iter_mut() {
+                if th.status == Status::BlockedMutex(mutex_addr) {
+                    th.status = Status::Runnable;
+                }
+            }
+            st.condvars.entry(cond_addr).or_default().waiters.push((t, mutex_addr));
+            st.threads[t].status = Status::BlockedCond(cond_addr);
+        });
+        self.wait_runnable(t);
+    }
+
+    /// Wake one/all threads parked on `cond_addr`. Only *currently
+    /// parked* waiters are woken — a notify with nobody parked is lost,
+    /// which is precisely the semantics lost-wakeup bugs depend on.
+    pub(super) fn cond_notify(&self, t: TId, cond_addr: usize, all: bool) {
+        self.turn(t, if all { "cond notify_all" } else { "cond notify_one" }, |st| {
+            let c = st.condvars.entry(cond_addr).or_default();
+            let woken: Vec<(TId, usize)> =
+                if all { c.waiters.drain(..).collect() } else { c.waiters.drain(..1.min(c.waiters.len())).collect() };
+            for (w, _mx) in woken {
+                st.threads[w].status = Status::Runnable;
+            }
+        })
+    }
+
+    // -------------------------------------------------------- threads
+
+    /// Register a child thread (parent must be the active thread);
+    /// returns the child's model id. The child's clock starts at the
+    /// parent's (spawn happens-before everything in the child).
+    pub(super) fn register_thread(&self, parent: TId) -> TId {
+        self.turn(parent, "spawn", |st| {
+            st.threads[parent].clock.tick(parent);
+            let clock = st.threads[parent].clock.clone();
+            let id = st.threads.len();
+            st.threads.push(ThreadState { status: Status::Runnable, clock, priority: 0 });
+            st.live += 1;
+            if let Driver::Pct { rng, .. } = &mut st.driver {
+                st.threads[id].priority = rng.next() % 1024;
+            }
+            id
+        })
+    }
+
+    /// Claim `tid` on the current OS thread (first thing the spawned
+    /// closure wrapper does).
+    pub(super) fn claim(&self, tid: TId) {
+        SELF_ID.with(|s| s.set(Some((self.gen, tid))));
+    }
+
+    /// Mark `t` finished (model-level) and wake joiners. Also the
+    /// teardown signal [`Engine::drain`] waits on.
+    pub(super) fn finish_thread(&self, t: TId, panic_msg: Option<String>) {
+        let mut st = self.mu.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(msg) = panic_msg {
+            self.fail(&mut st, msg);
+        }
+        st.threads[t].clock.tick(t);
+        st.threads[t].status = Status::Finished;
+        st.live -= 1;
+        for th in st.threads.iter_mut() {
+            if th.status == Status::BlockedJoin(t) {
+                th.status = Status::Runnable;
+            }
+        }
+        if !st.abort && st.active == t {
+            self.reschedule(&mut st, t);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Model-level join: block until `target` finishes, then inherit
+    /// its clock (join happens-after everything in the target).
+    pub(super) fn join_thread(&self, t: TId, target: TId) {
+        loop {
+            let done = self.turn(t, "join", |st| {
+                if st.threads[target].status == Status::Finished {
+                    let clock = st.threads[target].clock.clone();
+                    st.threads[t].clock.join(&clock);
+                    true
+                } else {
+                    st.threads[t].status = Status::BlockedJoin(target);
+                    false
+                }
+            });
+            if done {
+                return;
+            }
+            self.wait_runnable(t);
+        }
+    }
+
+    /// A plain scheduling point with no state effect (sleep/yield).
+    pub(super) fn yield_point(&self, t: TId) {
+        self.turn(t, "yield", |_| ());
+    }
+
+    /// Park until the scheduler makes this thread active again (used
+    /// after the thread marked itself blocked inside a [`Engine::turn`]).
+    fn wait_runnable(&self, t: TId) {
+        let mut st = self.mu.lock().unwrap_or_else(|e| e.into_inner());
+        while !st.abort && !(st.active == t && st.threads[t].status == Status::Runnable) {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if st.abort {
+            drop(st);
+            unwind_abort();
+        }
+    }
+
+    /// Wait for every model thread's OS thread to finish (schedule
+    /// teardown; aborted threads count too).
+    fn drain(&self) {
+        let mut st = self.mu.lock().unwrap_or_else(|e| e.into_inner());
+        while st.live > 0 {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+// -------------------------------------------------------- exploration
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> Option<String> {
+    if p.is::<ModelAbort>() {
+        return None;
+    }
+    if let Some(s) = p.downcast_ref::<&str>() {
+        return Some((*s).to_string());
+    }
+    if let Some(s) = p.downcast_ref::<String>() {
+        return Some(s.clone());
+    }
+    Some("model thread panicked (non-string payload)".to_string())
+}
+
+/// Called by spawn wrappers when their closure unwinds.
+pub(super) fn record_thread_panic(engine: &Engine, tid: TId, payload: &(dyn std::any::Any + Send)) {
+    engine.finish_thread(tid, panic_message(payload));
+}
+
+/// Abort the running schedule because `payload` unwound through a
+/// structured-concurrency boundary (a scope body). Blocked children
+/// are released so the scope's implicit real join can complete instead
+/// of hanging on threads that will never get the baton again.
+pub(super) fn abort_schedule(engine: &Engine, payload: &(dyn std::any::Any + Send)) {
+    let mut st = engine.mu.lock().unwrap_or_else(|e| e.into_inner());
+    match panic_message(payload) {
+        Some(msg) => engine.fail(&mut st, msg),
+        None => {
+            // ModelAbort: the schedule is already being torn down.
+            st.abort = true;
+            engine.cv.notify_all();
+        }
+    }
+}
+
+/// DFS backtrack: advance `script` to the next unexplored branch
+/// within the preemption bound. Returns false when the tree is done.
+fn dfs_backtrack(script: &mut Vec<Node>, bound: u32) -> bool {
+    while let Some(node) = script.pop() {
+        let mut cand = node.chosen + 1;
+        while cand < node.n {
+            let ok = !node.preemptive.get(cand).copied().unwrap_or(false)
+                || node.preempts_before < bound;
+            if ok {
+                let mut next = node.clone();
+                next.chosen = cand;
+                script.push(next);
+                return true;
+            }
+            cand += 1;
+        }
+    }
+    false
+}
+
+/// Run `f` under every schedule the configuration's budget allows and
+/// report what was explored. `f` is run once per schedule; it must
+/// rebuild its own state each time and must be deterministic apart
+/// from the scheduling the engine injects.
+pub fn explore<F>(name: &str, cfg: Config, f: F) -> Report
+where
+    F: Fn() + Send + Sync,
+{
+    let _serial = EXPLORE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev_hook = std::panic::take_hook();
+    // Model assertions are reported through the Report/trace; the
+    // default stderr backtrace per schedule would be noise.
+    std::panic::set_hook(Box::new(|_| {}));
+
+    let mut report = Report {
+        name: name.to_string(),
+        mode: cfg.mode,
+        seed: cfg.seed,
+        schedules: 0,
+        complete: false,
+        max_steps: 0,
+        preemption_bound: cfg.preemption_bound,
+        max_preemptions: 0,
+        failure: None,
+    };
+    let mut dfs_script: Vec<Node> = Vec::new();
+    loop {
+        if report.schedules >= cfg.max_schedules {
+            break;
+        }
+        report.schedules += 1;
+        let driver = match cfg.mode {
+            Mode::Dfs => Driver::Dfs {
+                script: std::mem::take(&mut dfs_script),
+                pos: 0,
+                bound: cfg.preemption_bound,
+            },
+            Mode::Pct => {
+                let mut rng = Pcg::new(cfg.seed.wrapping_add(report.schedules));
+                let horizon = 1 + rng.next() % cfg.max_steps.clamp(1, 256);
+                let change_steps: Vec<u64> = (1..cfg.pct_depth.max(1))
+                    .map(|_| 1 + rng.next() % horizon)
+                    .collect();
+                Driver::Pct { rng, change_steps, step: 0 }
+            }
+        };
+        let gen = {
+            let mut g = GEN.lock().unwrap_or_else(|e| e.into_inner());
+            *g += 1;
+            *g
+        };
+        let engine = StdArc::new(Engine::new(gen, driver, cfg.max_steps));
+        *ACTIVE.lock().unwrap_or_else(|e| e.into_inner()) = Some(engine.clone());
+        engine.claim(0);
+
+        let outcome = catch_unwind(AssertUnwindSafe(&f));
+        match outcome {
+            Ok(()) => engine.finish_thread(0, None),
+            Err(p) => record_thread_panic(&engine, 0, p.as_ref()),
+        }
+        engine.drain();
+        SELF_ID.with(|s| s.set(None));
+        *ACTIVE.lock().unwrap_or_else(|e| e.into_inner()) = None;
+
+        let st = engine.mu.lock().unwrap_or_else(|e| e.into_inner());
+        report.max_steps = report.max_steps.max(st.steps);
+        report.max_preemptions = report.max_preemptions.max(st.preemptions);
+        if let Some(msg) = &st.failure {
+            report.failure = Some(Failure {
+                schedule: report.schedules,
+                message: msg.clone(),
+                trace: st.trace.clone(),
+            });
+            break;
+        }
+        let backtrack = match &st.driver {
+            Driver::Dfs { script, bound, .. } => {
+                dfs_script = script.clone();
+                Some(*bound)
+            }
+            Driver::Pct { .. } => None,
+        };
+        drop(st);
+        if let Some(bound) = backtrack {
+            if !dfs_backtrack(&mut dfs_script, bound) {
+                report.complete = true;
+                break;
+            }
+        }
+    }
+    if cfg.mode == Mode::Pct && report.failure.is_none() && report.schedules == cfg.max_schedules {
+        // A full PCT sweep is "complete" in the sense of having spent
+        // its budget; callers distinguish via `mode`.
+        report.complete = true;
+    }
+    std::panic::set_hook(prev_hook);
+    report
+}
+
+/// [`explore`] + panic on failure, printing the failing schedule's
+/// trace — the assertion form the invariant model tests use.
+pub fn check<F>(name: &str, cfg: Config, f: F)
+where
+    F: Fn() + Send + Sync,
+{
+    let report = explore(name, cfg, f);
+    if let Some(fail) = &report.failure {
+        let trace = fail.trace.join("\n  ");
+        panic!(
+            "model '{name}' failed on schedule {} of {} ({:?}): {}\n  trace tail:\n  {trace}",
+            fail.schedule, report.schedules, report.mode, fail.message
+        );
+    }
+}

@@ -1,0 +1,593 @@
+//! Scheduler-instrumented drop-in replacements for the `std::sync`
+//! types (`--cfg modelcheck` builds only).
+//!
+//! Every type here keeps a *real* `std` primitive inside it and runs in
+//! one of two modes, decided per call by [`current`]:
+//!
+//! - **Under an active exploration** (the calling OS thread is a
+//!   registered model thread of the live engine): the operation is
+//!   routed through the scheduler, which decides interleaving and —
+//!   for atomic loads — which stored value is observed. The real
+//!   primitive is kept as an uncontended mirror: model-level mutual
+//!   exclusion is enforced by the engine, so the real `Mutex` below a
+//!   model-owned one never blocks for long, and the real atomic just
+//!   mirrors the newest store so the next schedule (and any
+//!   unregistered observer) seeds from a sane value.
+//! - **Outside an exploration** the wrappers delegate to the real
+//!   primitive untouched, so a modelcheck-cfg'd binary still behaves
+//!   like a normal build.
+//!
+//! The method surface is intentionally the subset the migrated modules
+//! use (`load`/`store`/`fetch_add`/`fetch_sub`, `lock`, `wait`/
+//! `wait_timeout`/`notify_*`, `spawn`/`scope`/`sleep`); grow it with
+//! call sites, not speculatively.
+
+use std::fmt;
+use std::mem::ManuallyDrop;
+use std::ops::{Deref, DerefMut};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{
+    Arc as StdArc, Condvar as StdCondvar, LockResult, Mutex as StdMutex,
+    MutexGuard as StdMutexGuard, PoisonError,
+};
+use std::time::Duration;
+
+use super::sched::{abort_schedule, current, record_thread_panic, Engine, TId};
+
+// ------------------------------------------------------------ atomics
+
+macro_rules! numeric_atomic {
+    ($Name:ident, $Std:ident, $Prim:ty) => {
+        /// Instrumented counterpart of the same-named `std` atomic:
+        /// identical method signatures, scheduler-routed under an
+        /// active exploration, plain `std` otherwise.
+        pub struct $Name {
+            real: std::sync::atomic::$Std,
+        }
+
+        impl $Name {
+            /// Creates a new atomic with the given initial value.
+            pub const fn new(v: $Prim) -> Self {
+                Self { real: std::sync::atomic::$Std::new(v) }
+            }
+
+            fn addr(&self) -> usize {
+                self as *const Self as usize
+            }
+
+            fn init(&self) -> u64 {
+                // ordering: Relaxed — this only seeds the model cell's
+                // history on first touch; no cross-thread protocol
+                // hangs off the mirror itself.
+                self.real.load(Ordering::Relaxed) as u64
+            }
+
+            /// See [`std::sync::atomic::$Std::load`].
+            pub fn load(&self, order: Ordering) -> $Prim {
+                match current() {
+                    Some((e, t)) => e.atomic_load(t, self.addr(), self.init(), order) as $Prim,
+                    None => self.real.load(order),
+                }
+            }
+
+            /// See [`std::sync::atomic::$Std::store`].
+            pub fn store(&self, val: $Prim, order: Ordering) {
+                match current() {
+                    Some((e, t)) => {
+                        e.atomic_store(t, self.addr(), self.init(), val as u64, order);
+                        // ordering: Relaxed — mirror write; model
+                        // threads never read through the mirror while
+                        // a schedule is live.
+                        self.real.store(val, Ordering::Relaxed);
+                    }
+                    None => self.real.store(val, order),
+                }
+            }
+
+            /// See [`std::sync::atomic::$Std::fetch_add`].
+            pub fn fetch_add(&self, val: $Prim, order: Ordering) -> $Prim {
+                self.rmw(order, |o| o.wrapping_add(val))
+            }
+
+            /// See [`std::sync::atomic::$Std::fetch_sub`].
+            pub fn fetch_sub(&self, val: $Prim, order: Ordering) -> $Prim {
+                self.rmw(order, |o| o.wrapping_sub(val))
+            }
+
+            fn rmw(&self, order: Ordering, f: impl Fn($Prim) -> $Prim) -> $Prim {
+                match current() {
+                    Some((e, t)) => {
+                        let old = e.atomic_rmw(t, self.addr(), self.init(), order, |o| {
+                            f(o as $Prim) as u64
+                        }) as $Prim;
+                        // ordering: Relaxed — mirror write (see store).
+                        self.real.store(f(old), Ordering::Relaxed);
+                        old
+                    }
+                    None => {
+                        // Outside a schedule there is no scheduler to
+                        // serialize us, so use the real RMW.
+                        let mut cur = self.real.load(Ordering::Relaxed);
+                        loop {
+                            match self.real.compare_exchange_weak(
+                                cur,
+                                f(cur),
+                                order,
+                                Ordering::Relaxed,
+                            ) {
+                                Ok(v) => return v,
+                                Err(v) => cur = v,
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        impl fmt::Debug for $Name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.debug_tuple(stringify!($Name)).field(&self.real.load(Ordering::Relaxed)).finish()
+            }
+        }
+    };
+}
+
+numeric_atomic!(AtomicU64, AtomicU64, u64);
+numeric_atomic!(AtomicU32, AtomicU32, u32);
+numeric_atomic!(AtomicUsize, AtomicUsize, usize);
+
+/// Instrumented counterpart of [`std::sync::atomic::AtomicBool`].
+pub struct AtomicBool {
+    real: std::sync::atomic::AtomicBool,
+}
+
+impl AtomicBool {
+    /// Creates a new boolean atomic with the given initial value.
+    pub const fn new(v: bool) -> Self {
+        Self { real: std::sync::atomic::AtomicBool::new(v) }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Self as usize
+    }
+
+    /// See [`std::sync::atomic::AtomicBool::load`].
+    pub fn load(&self, order: Ordering) -> bool {
+        match current() {
+            Some((e, t)) => {
+                // ordering: Relaxed — mirror read only seeds history.
+                let init = self.real.load(Ordering::Relaxed) as u64;
+                e.atomic_load(t, self.addr(), init, order) != 0
+            }
+            None => self.real.load(order),
+        }
+    }
+
+    /// See [`std::sync::atomic::AtomicBool::store`].
+    pub fn store(&self, val: bool, order: Ordering) {
+        match current() {
+            Some((e, t)) => {
+                // ordering: Relaxed — mirror read only seeds history.
+                let init = self.real.load(Ordering::Relaxed) as u64;
+                e.atomic_store(t, self.addr(), init, val as u64, order);
+                // ordering: Relaxed — mirror write (see module doc).
+                self.real.store(val, Ordering::Relaxed);
+            }
+            None => self.real.store(val, order),
+        }
+    }
+}
+
+impl fmt::Debug for AtomicBool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_tuple("AtomicBool").field(&self.real.load(Ordering::Relaxed)).finish()
+    }
+}
+
+// ------------------------------------------------------------ mutexes
+
+/// Instrumented counterpart of [`std::sync::Mutex`]. Model-level
+/// ownership (who may hold it, in what order) is decided by the
+/// scheduler; the data itself still lives behind the real `std` mutex,
+/// which is uncontended whenever the model owns locking order.
+pub struct Mutex<T> {
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    /// Creates a new mutex protecting `t`.
+    pub const fn new(t: T) -> Self {
+        Self { inner: StdMutex::new(t) }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const StdMutex<T> as usize
+    }
+
+    /// See [`std::sync::Mutex::lock`]; poisoning behaves as in `std`.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        let model = match current() {
+            Some((e, t)) => {
+                e.mutex_lock(t, self.addr());
+                Some((e, t))
+            }
+            None => None,
+        };
+        match self.inner.lock() {
+            Ok(g) => Ok(MutexGuard { real: Some(g), lock: self, model }),
+            Err(p) => Err(PoisonError::new(MutexGuard {
+                real: Some(p.into_inner()),
+                lock: self,
+                model,
+            })),
+        }
+    }
+
+    /// See [`std::sync::Mutex::into_inner`].
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    /// See [`std::sync::Mutex::get_mut`].
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Mutex").finish_non_exhaustive()
+    }
+}
+
+/// RAII guard returned by [`Mutex::lock`]; releases model ownership,
+/// then the real lock, on drop.
+pub struct MutexGuard<'a, T> {
+    /// `Some` for the guard's whole life; only taken when a condvar
+    /// wait dismantles the guard without running its `Drop`.
+    real: Option<StdMutexGuard<'a, T>>,
+    lock: &'a Mutex<T>,
+    model: Option<(StdArc<Engine>, TId)>,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.real.as_deref().expect("guard dismantled")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.real.as_deref_mut().expect("guard dismantled")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some((e, t)) = self.model.take() {
+            // During an unwind the schedule is being aborted (or the
+            // panic itself is the model failure); re-entering the
+            // scheduler from a destructor would panic-in-panic, and
+            // the model state is discarded anyway.
+            if !std::thread::panicking() {
+                e.mutex_unlock(t, self.lock.addr());
+            }
+        }
+        // The real guard (self.real) drops after this body, releasing
+        // the underlying std mutex.
+    }
+}
+
+// ----------------------------------------------------------- condvars
+
+/// Result of [`Condvar::wait_timeout`]. The std type cannot be
+/// constructed outside `std`, so the shim defines its own; under an
+/// active exploration waits never time out — a missing wakeup then
+/// surfaces as a detected deadlock instead of being masked by a
+/// timeout retry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    /// True when the wait returned because the timeout elapsed.
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Instrumented counterpart of [`std::sync::Condvar`].
+pub struct Condvar {
+    real: StdCondvar,
+}
+
+impl Condvar {
+    /// Creates a new condition variable.
+    pub const fn new() -> Self {
+        Self { real: StdCondvar::new() }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Self as usize
+    }
+
+    /// See [`std::sync::Condvar::wait`].
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        match guard.model.clone() {
+            Some((e, t)) => {
+                let lock = guard.lock;
+                // Dismantle the guard without running its Drop: the
+                // model-level mutex release happens atomically with
+                // parking inside `cond_wait`.
+                let mut g = ManuallyDrop::new(guard);
+                let real = g.real.take();
+                g.model = None;
+                // Release the real lock before parking so the thread
+                // that will notify us can take it.
+                drop(real);
+                e.cond_wait(t, self.addr(), lock.addr());
+                // Woken and rescheduled: reacquire model, then real.
+                e.mutex_lock(t, lock.addr());
+                match lock.inner.lock() {
+                    Ok(rg) => {
+                        Ok(MutexGuard { real: Some(rg), lock, model: Some((e, t)) })
+                    }
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        real: Some(p.into_inner()),
+                        lock,
+                        model: Some((e, t)),
+                    })),
+                }
+            }
+            None => {
+                let lock = guard.lock;
+                let mut g = ManuallyDrop::new(guard);
+                let real = g.real.take().expect("guard dismantled");
+                match self.real.wait(real) {
+                    Ok(rg) => Ok(MutexGuard { real: Some(rg), lock, model: None }),
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        real: Some(p.into_inner()),
+                        lock,
+                        model: None,
+                    })),
+                }
+            }
+        }
+    }
+
+    /// See [`std::sync::Condvar::wait_timeout`]. Under an active
+    /// exploration the timeout is ignored (see [`WaitTimeoutResult`]).
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        if guard.model.is_some() {
+            return match self.wait(guard) {
+                Ok(g) => Ok((g, WaitTimeoutResult(false))),
+                Err(p) => Err(PoisonError::new((p.into_inner(), WaitTimeoutResult(false)))),
+            };
+        }
+        let lock = guard.lock;
+        let mut g = ManuallyDrop::new(guard);
+        let real = g.real.take().expect("guard dismantled");
+        match self.real.wait_timeout(real, dur) {
+            Ok((rg, wtr)) => Ok((
+                MutexGuard { real: Some(rg), lock, model: None },
+                WaitTimeoutResult(wtr.timed_out()),
+            )),
+            Err(p) => {
+                let (rg, wtr) = p.into_inner();
+                Err(PoisonError::new((
+                    MutexGuard { real: Some(rg), lock, model: None },
+                    WaitTimeoutResult(wtr.timed_out()),
+                )))
+            }
+        }
+    }
+
+    /// See [`std::sync::Condvar::notify_one`].
+    pub fn notify_one(&self) {
+        match current() {
+            Some((e, t)) => e.cond_notify(t, self.addr(), false),
+            None => self.real.notify_one(),
+        }
+    }
+
+    /// See [`std::sync::Condvar::notify_all`].
+    pub fn notify_all(&self) {
+        match current() {
+            Some((e, t)) => e.cond_notify(t, self.addr(), true),
+            None => self.real.notify_all(),
+        }
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Condvar").finish_non_exhaustive()
+    }
+}
+
+// ------------------------------------------------------------ threads
+
+/// Instrumented `std::thread` subset: spawned threads register with
+/// the live engine (when one exists) so they become schedulable model
+/// entities; scopes model-join their children before std's implicit
+/// real join so teardown stays under scheduler control.
+pub mod thread_shim {
+    use super::*;
+
+    /// See [`std::thread::sleep`]. Under an active exploration this is
+    /// a pure scheduling point — model time does not exist, and a
+    /// sleep-based backoff loop becomes an explorable yield.
+    pub fn sleep(dur: Duration) {
+        match current() {
+            Some((e, t)) => e.yield_point(t),
+            None => std::thread::sleep(dur),
+        }
+    }
+
+    /// Body wrapper for every model-registered thread: claims the
+    /// model id on the OS thread, converts panics into schedule
+    /// failures, and always reports completion to the scheduler.
+    fn run_model_thread<T>(e: StdArc<Engine>, tid: TId, f: impl FnOnce() -> T) -> Option<T> {
+        e.claim(tid);
+        let e2 = e.clone();
+        match catch_unwind(AssertUnwindSafe(move || {
+            // First decision point: the scheduler — not the OS —
+            // decides when this thread first runs relative to its
+            // siblings' instrumented operations.
+            e2.yield_point(tid);
+            f()
+        })) {
+            Ok(v) => {
+                e.finish_thread(tid, None);
+                Some(v)
+            }
+            Err(p) => {
+                record_thread_panic(&e, tid, p.as_ref());
+                None
+            }
+        }
+    }
+
+    /// See [`std::thread::spawn`].
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        match current() {
+            Some((e, parent)) => {
+                let child = e.register_thread(parent);
+                let e2 = e.clone();
+                let inner = std::thread::spawn(move || run_model_thread(e2, child, f));
+                JoinHandle { inner, model: Some(child) }
+            }
+            None => JoinHandle { inner: std::thread::spawn(move || Some(f())), model: None },
+        }
+    }
+
+    /// See [`std::thread::JoinHandle`].
+    pub struct JoinHandle<T> {
+        inner: std::thread::JoinHandle<Option<T>>,
+        model: Option<TId>,
+    }
+
+    impl<T> JoinHandle<T> {
+        /// See [`std::thread::JoinHandle::join`]. Joins at the model
+        /// level first (a schedulable blocking point), then reaps the
+        /// OS thread, which exits promptly once model-finished.
+        pub fn join(self) -> std::thread::Result<T> {
+            if let Some(child) = self.model {
+                if let Some((e, me)) = current() {
+                    e.join_thread(me, child);
+                }
+            }
+            match self.inner.join() {
+                Ok(Some(v)) => Ok(v),
+                Ok(None) => Err(Box::new("model thread panicked")),
+                Err(p) => Err(p),
+            }
+        }
+    }
+
+    /// See [`std::thread::scope`]. The shim passes the scope token by
+    /// value (it is `Copy`); call sites written against std's by-ref
+    /// token compile unchanged because closure parameter types are
+    /// inferred and method calls auto-reference.
+    pub fn scope<'env, F, T>(f: F) -> T
+    where
+        F: for<'scope> FnOnce(Scope<'scope, 'env>) -> T,
+    {
+        // Model ids of every thread spawned through this scope; the
+        // scope must model-join them all before std's implicit *real*
+        // join parks this OS thread outside the scheduler's view.
+        let children: StdMutex<Vec<TId>> = StdMutex::new(Vec::new());
+        std::thread::scope(|s| {
+            let r = catch_unwind(AssertUnwindSafe(|| f(Scope { inner: s, children: &children })));
+            if let Some((e, me)) = current() {
+                match &r {
+                    Ok(_) => {
+                        let kids: Vec<TId> =
+                            children.lock().unwrap_or_else(|p| p.into_inner()).clone();
+                        for c in kids {
+                            e.join_thread(me, c);
+                        }
+                    }
+                    Err(p) => {
+                        // The scope body failed: abort the schedule so
+                        // blocked children unwind and std's implicit
+                        // join can finish, then re-raise below.
+                        abort_schedule(&e, p.as_ref());
+                    }
+                }
+            }
+            match r {
+                Ok(v) => v,
+                Err(p) => resume_unwind(p),
+            }
+        })
+    }
+
+    /// See [`std::thread::Scope`].
+    #[derive(Clone, Copy)]
+    pub struct Scope<'scope, 'env: 'scope> {
+        inner: &'scope std::thread::Scope<'scope, 'env>,
+        children: &'scope StdMutex<Vec<TId>>,
+    }
+
+    impl<'scope, 'env> Scope<'scope, 'env> {
+        /// See [`std::thread::Scope::spawn`].
+        pub fn spawn<F, T>(&self, f: F) -> ScopedJoinHandle<'scope, T>
+        where
+            F: FnOnce() -> T + Send + 'scope,
+            T: Send + 'scope,
+        {
+            match current() {
+                Some((e, parent)) => {
+                    let child = e.register_thread(parent);
+                    self.children.lock().unwrap_or_else(|p| p.into_inner()).push(child);
+                    let e2 = e.clone();
+                    let inner = self.inner.spawn(move || run_model_thread(e2, child, f));
+                    ScopedJoinHandle { inner, model: Some(child) }
+                }
+                None => ScopedJoinHandle {
+                    inner: self.inner.spawn(move || Some(f())),
+                    model: None,
+                },
+            }
+        }
+    }
+
+    /// See [`std::thread::ScopedJoinHandle`].
+    pub struct ScopedJoinHandle<'scope, T> {
+        inner: std::thread::ScopedJoinHandle<'scope, Option<T>>,
+        model: Option<TId>,
+    }
+
+    impl<T> ScopedJoinHandle<'_, T> {
+        /// See [`std::thread::ScopedJoinHandle::join`]; model join
+        /// first, then the real reap (see [`JoinHandle::join`]).
+        pub fn join(self) -> std::thread::Result<T> {
+            if let Some(child) = self.model {
+                if let Some((e, me)) = current() {
+                    e.join_thread(me, child);
+                }
+            }
+            match self.inner.join() {
+                Ok(Some(v)) => Ok(v),
+                Ok(None) => Err(Box::new("model thread panicked")),
+                Err(p) => Err(p),
+            }
+        }
+    }
+}

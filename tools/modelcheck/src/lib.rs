@@ -1,0 +1,465 @@
+//! Model-check harness for the `largevis` sync shim.
+//!
+//! The library half of `tools/modelcheck` has two layers:
+//!
+//! * [`report`] — always compiled: a dependency-free JSON row for the
+//!   CI artifact (`LARGEVIS_MODELCHECK_REPORT` names the directory the
+//!   integration tests drop one file per model into).
+//! * [`models`] — only under `--cfg modelcheck`: the closed concurrency
+//!   models for the epoch-swap, COW-snapshot, WAL, doorbell and
+//!   worker-latch protocols, each driven through
+//!   `largevis::util::sync::model` (bounded-exhaustive DFS by default,
+//!   seeded PCT via `LARGEVIS_MODELCHECK_MODE=pct`).
+//!
+//! The integration tests split along the mutation axis:
+//!
+//! * `tests/models.rs` — the invariants, compiled only when **no**
+//!   `modelcheck_mutant_*` cfg is set; every model must pass its whole
+//!   schedule budget.
+//! * `tests/mutants.rs` — compiled per mutant cfg; each test asserts
+//!   the checker *finds* the seeded bug (`failure.is_some()`), which is
+//!   what gates the checker's own sensitivity in CI.
+//!
+//! Without `--cfg modelcheck` this crate still builds and its unit
+//! tests run, so plain `cargo test -p modelcheck` stays green in the
+//! ordinary workspace build.
+
+pub mod report {
+    //! Flat JSON rows for the CI report artifact (no serde offline —
+    //! the shape is small enough to render by hand).
+
+    use std::io::Write;
+    use std::path::Path;
+
+    /// One explored model's outcome, flattened for the JSON artifact.
+    #[derive(Clone, Debug)]
+    pub struct Row {
+        /// Model name (also the artifact file stem).
+        pub name: String,
+        /// `"dfs"` or `"pct"`.
+        pub mode: String,
+        /// Seed used (PCT; echoed for DFS).
+        pub seed: u64,
+        /// Schedules executed.
+        pub schedules: u64,
+        /// Whether the exploration finished its tree/budget.
+        pub complete: bool,
+        /// Longest schedule, in decision steps.
+        pub max_steps: u64,
+        /// Preemption bound in force (DFS).
+        pub preemption_bound: u32,
+        /// Most preemptions any executed schedule spent.
+        pub max_preemptions: u32,
+        /// Failure message, when a schedule violated an invariant.
+        pub failure: Option<String>,
+        /// True when this row comes from a mutation-corpus run, where a
+        /// failure is the *expected* outcome.
+        pub expect_failure: bool,
+    }
+
+    /// Escape `s` for inclusion in a JSON string literal.
+    pub fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    impl Row {
+        /// Render as a single JSON object.
+        pub fn to_json(&self) -> String {
+            let failure = match &self.failure {
+                Some(m) => format!("\"{}\"", escape(m)),
+                None => "null".to_string(),
+            };
+            format!(
+                "{{\"name\":\"{}\",\"mode\":\"{}\",\"seed\":{},\"schedules\":{},\
+                 \"complete\":{},\"max_steps\":{},\"preemption_bound\":{},\
+                 \"max_preemptions\":{},\"expect_failure\":{},\"failure\":{}}}",
+                escape(&self.name),
+                escape(&self.mode),
+                self.seed,
+                self.schedules,
+                self.complete,
+                self.max_steps,
+                self.preemption_bound,
+                self.max_preemptions,
+                self.expect_failure,
+                failure,
+            )
+        }
+
+        /// Write `<dir>/<name>.json` (one file per model so parallel
+        /// test threads never contend on a shared artifact).
+        pub fn write_to_dir(&self, dir: &Path) -> std::io::Result<()> {
+            std::fs::create_dir_all(dir)?;
+            let path = dir.join(format!("{}.json", self.name));
+            let mut f = std::fs::File::create(path)?;
+            f.write_all(self.to_json().as_bytes())?;
+            f.write_all(b"\n")
+        }
+
+        /// [`Row::write_to_dir`] into `$LARGEVIS_MODELCHECK_REPORT`, a
+        /// silent no-op when the variable is unset (local runs).
+        pub fn write_to_env_dir(&self) -> std::io::Result<()> {
+            match std::env::var_os("LARGEVIS_MODELCHECK_REPORT") {
+                Some(dir) => self.write_to_dir(Path::new(&dir)),
+                None => Ok(()),
+            }
+        }
+    }
+}
+
+#[cfg(modelcheck)]
+pub mod models {
+    //! The closed protocol models. Each `*_model` function is one
+    //! deterministic scenario suitable for [`explore`]: it rebuilds all
+    //! of its state per schedule and asserts its invariant inline, so a
+    //! violating interleaving surfaces as a captured panic (or a
+    //! detected deadlock) in the schedule report.
+
+    use crate::report::Row;
+    use largevis::data::chunked::{copied_bytes, ChunkedMatrix};
+    use largevis::data::formats::wal::{read_wal_file, RecoveryPolicy, WalWriter};
+    use largevis::data::matrix::Matrix;
+    use largevis::serve::epoch::EpochCell;
+    use largevis::util::faultio::{FaultKind, FaultPlan, FaultStorage};
+    use largevis::util::notify::Doorbell;
+    use largevis::util::pool::DoneLatch;
+    use largevis::util::sync::atomic::{AtomicU64, Ordering};
+    use largevis::util::sync::model::{explore, Config, Report};
+    use largevis::util::sync::{thread, Arc, Mutex};
+    use std::time::Duration;
+
+    fn row_from(report: &Report, expect_failure: bool) -> Row {
+        Row {
+            name: report.name.clone(),
+            mode: format!("{:?}", report.mode).to_ascii_lowercase(),
+            seed: report.seed,
+            schedules: report.schedules,
+            complete: report.complete,
+            max_steps: report.max_steps,
+            preemption_bound: report.preemption_bound,
+            max_preemptions: report.max_preemptions,
+            failure: report.failure.as_ref().map(|f| f.message.clone()),
+            expect_failure,
+        }
+    }
+
+    /// Explore `f` under the environment-configured budget, emit a
+    /// report row, and panic (with the failing trace) on any violation
+    /// — the assertion form the invariant tests use.
+    pub fn run(name: &str, f: impl Fn() + Send + Sync) {
+        let report = explore(name, Config::from_env(), f);
+        let _ = row_from(&report, false).write_to_env_dir();
+        if let Some(fail) = &report.failure {
+            panic!(
+                "model '{name}' failed on schedule {} of {} ({:?}): {}\n  trace tail:\n  {}",
+                fail.schedule,
+                report.schedules,
+                report.mode,
+                fail.message,
+                fail.trace.join("\n  "),
+            );
+        }
+    }
+
+    /// Mutation-corpus assertion: the checker must *find* a violation
+    /// of `f` within the budget, proving it would catch this bug class.
+    pub fn expect_detected(name: &str, f: impl Fn() + Send + Sync) {
+        let report = explore(name, Config::from_env(), f);
+        let detected = report.failure.is_some();
+        let _ = row_from(&report, true).write_to_env_dir();
+        assert!(
+            detected,
+            "seeded bug '{name}' survived {} schedules ({:?}, seed {}) undetected — \
+             the checker lost sensitivity to this bug class",
+            report.schedules, report.mode, report.seed,
+        );
+    }
+
+    // ------------------------------------------------------ scenarios
+
+    /// Invariant (a): a reader never observes a torn epoch — if the
+    /// lock-free hint says `e`, the cell holds a payload of epoch
+    /// `>= e`, and the payload is internally consistent. The
+    /// `modelcheck_mutant_epoch_first` corpus entry (publish bumps the
+    /// counter before the swap) violates exactly this.
+    pub fn epoch_torn_read_model() {
+        let cell = EpochCell::new(Arc::new((0u64, 0u64)));
+        thread::scope(|s| {
+            let cell = &cell;
+            s.spawn(move || {
+                for e in 1..=2u64 {
+                    cell.publish(e, Arc::new((e, e)));
+                }
+            });
+            let mut last_hint = 0;
+            for _ in 0..2 {
+                let h = cell.hint();
+                assert!(h >= last_hint, "epoch hint went backwards: {last_hint} -> {h}");
+                last_hint = h;
+                let v = cell.get();
+                assert!(v.0 == v.1, "payload mixes epochs: ({}, {})", v.0, v.1);
+                assert!(
+                    v.0 >= h,
+                    "torn read: hint said epoch {h} but the cell held epoch {}",
+                    v.0
+                );
+            }
+        });
+    }
+
+    /// Invariant (b): a snapshot held across later publishes stays
+    /// bitwise frozen — the writer's copy-on-write mutations must never
+    /// leak into chunks shared with an older epoch — and the COW byte
+    /// counter is monotone under concurrency.
+    pub fn cow_frozen_epoch_model() {
+        let base = ChunkedMatrix::from_matrix(&Matrix::from_vec(vec![1.0; 8], 4, 2), 2);
+        let cell = EpochCell::new(Arc::new(base.clone()));
+        thread::scope(|s| {
+            let cell = &cell;
+            s.spawn(move || {
+                let mut local = base;
+                for step in 0..2u64 {
+                    local.row_mut(0)[0] = 10.0 + step as f32;
+                    cell.publish(step + 1, Arc::new(local.clone()));
+                }
+            });
+            let held = cell.get();
+            let flatten =
+                |m: &ChunkedMatrix| (0..m.n()).flat_map(|i| m.row(i).to_vec()).collect::<Vec<_>>();
+            let before = flatten(&held);
+            let c0 = copied_bytes();
+            // Instrumented ops between the two reads give the writer
+            // schedule points to publish (and COW-copy) in between.
+            let _ = cell.hint();
+            let c1 = copied_bytes();
+            assert!(c1 >= c0, "copied_bytes went backwards: {c0} -> {c1}");
+            let after = flatten(&held);
+            assert!(
+                before == after,
+                "held epoch mutated under a later publish: {before:?} -> {after:?}"
+            );
+        });
+    }
+
+    /// Fresh WAL path per schedule — uninstrumented file state must not
+    /// leak between schedules.
+    fn fresh_wal_path() -> std::path::PathBuf {
+        use std::sync::atomic::{AtomicU64 as StdAtomicU64, Ordering as StdOrdering};
+        static NEXT: StdAtomicU64 = StdAtomicU64::new(0);
+        let id = NEXT.fetch_add(1, StdOrdering::Relaxed);
+        let dir = std::env::temp_dir().join(format!("largevis_modelcheck_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("create model tempdir");
+        dir.join(format!("model_{id}.wal"))
+    }
+
+    /// Number of storage ops (writes + fsyncs) consumed by creating the
+    /// model WAL plus `appends` successful appends — probed once so the
+    /// fault trigger can be aimed at an exact append's write.
+    fn wal_ops_for(appends: usize) -> u64 {
+        let path = fresh_wal_path();
+        let storage = FaultStorage::probe();
+        let mut w = WalWriter::create(&storage, &path, 2, 0).expect("probe create");
+        for i in 0..appends {
+            let batch = Matrix::from_vec(vec![i as f32, -(i as f32)], 1, 2);
+            w.append(&batch).expect("probe append");
+        }
+        let ops = storage.ops();
+        drop(w);
+        let _ = std::fs::remove_file(&path);
+        ops
+    }
+
+    /// Invariant (c): recovery returns **exactly the acked prefix** —
+    /// every append whose sequence number was returned `Ok` is
+    /// replayed, and nothing else — under any interleaving of appends,
+    /// a mid-stream short-write + rollback, and a concurrent reader.
+    /// The `modelcheck_mutant_wal_no_rollback` corpus entry (failed
+    /// append leaves its torn tail in place) breaks this: the next
+    /// successful append lands after garbage, so replay truncates away
+    /// an acked record.
+    ///
+    /// File I/O is uninstrumented (the scheduler cannot preempt inside
+    /// a syscall), so writer and reader serialize on a shim [`Mutex`]
+    /// at *batch* granularity — the interleavings explored are
+    /// append-vs-read orderings, which is where the rollback invariant
+    /// lives.
+    pub fn wal_acked_prefix_model() {
+        // Aim a transient short write at the *second* append's payload
+        // write: ops [0, k1) cover create + append #1, so index k1 is
+        // the next write.
+        let trigger = wal_ops_for(1);
+        let path = fresh_wal_path();
+        let storage = FaultStorage::new(FaultPlan {
+            kind: FaultKind::ShortWrite,
+            trigger_op: trigger,
+            seed: 7,
+        });
+        let mut writer = WalWriter::create(&storage, &path, 2, 0).expect("create model WAL");
+        let acked: Mutex<Vec<Matrix>> = Mutex::new(Vec::new());
+        let io = Mutex::new(());
+        thread::scope(|s| {
+            let (acked, io, path) = (&acked, &io, &path);
+            let writer = &mut writer;
+            s.spawn(move || {
+                for i in 0..3u32 {
+                    let batch = Matrix::from_vec(vec![i as f32, -(i as f32)], 1, 2);
+                    let _serial = io.lock().unwrap();
+                    if writer.append(&batch).is_ok() {
+                        acked.lock().unwrap().push(batch);
+                    }
+                }
+            });
+            for _ in 0..2 {
+                let _serial = io.lock().unwrap();
+                let contents = read_wal_file(path, 2, RecoveryPolicy::Truncate)
+                    .expect("concurrent WAL read");
+                let acked = acked.lock().unwrap();
+                assert!(
+                    contents.batches.len() == acked.len(),
+                    "recovery saw {} batches but {} were acked",
+                    contents.batches.len(),
+                    acked.len()
+                );
+                for (got, want) in contents.batches.iter().zip(acked.iter()) {
+                    assert!(
+                        got.as_slice() == want.as_slice(),
+                        "recovered batch diverges from acked batch"
+                    );
+                }
+            }
+        });
+        // Final recovery after all appends: exactly the acked prefix.
+        let contents =
+            read_wal_file(&path, 2, RecoveryPolicy::Truncate).expect("final WAL read");
+        let acked = acked.into_inner().unwrap();
+        assert!(
+            contents.batches.len() == acked.len(),
+            "final recovery saw {} batches but {} were acked",
+            contents.batches.len(),
+            acked.len()
+        );
+        for (got, want) in contents.batches.iter().zip(acked.iter()) {
+            assert!(
+                got.as_slice() == want.as_slice(),
+                "final recovered batch diverges from acked batch"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Invariant (d): the refine doorbell never loses a ring — whatever
+    /// order ring and wait interleave in, the waiter wakes and reports
+    /// the bell rung. Under the model, `wait_timeout` never times out,
+    /// so a lost wakeup shows up as a detected deadlock — which is
+    /// exactly how the `modelcheck_mutant_bell_no_flag` corpus entry
+    /// (ring skips the sticky bit) dies.
+    pub fn doorbell_ring_model() {
+        let bell = Doorbell::new();
+        thread::scope(|s| {
+            let bell = &bell;
+            s.spawn(move || bell.ring());
+            let rung = bell.wait_or(Duration::from_millis(1), || false);
+            assert!(rung, "doorbell wait returned without the bell rung");
+        });
+    }
+
+    /// Worker-teardown publication: any thread observing
+    /// [`DoneLatch::is_done`] reads the workers' plain writes without
+    /// further synchronization. Both latch corpus entries
+    /// (`modelcheck_mutant_latch_relaxed` drops the Release half of
+    /// `arrive`, `modelcheck_mutant_latch_weak_poll` drops the Acquire
+    /// half of `is_done`) let the poller see the count hit zero while
+    /// the payload candidate set still contains the stale initial
+    /// value.
+    pub fn latch_publish_model() {
+        let latch = DoneLatch::new(1);
+        let payload = AtomicU64::new(0);
+        thread::scope(|s| {
+            let (latch, payload) = (&latch, &payload);
+            s.spawn(move || {
+                payload.store(42, Ordering::Relaxed);
+                latch.arrive();
+            });
+            // Bounded poll: the scope join below synchronizes anyway,
+            // so giving up after a few probes is fine and keeps the
+            // schedule tree small.
+            for _ in 0..4 {
+                if latch.is_done() {
+                    let got = payload.load(Ordering::Relaxed);
+                    assert!(
+                        got == 42,
+                        "latch opened before the worker's writes were published (read {got})"
+                    );
+                    break;
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::report::{escape, Row};
+
+    fn sample(failure: Option<&str>) -> Row {
+        Row {
+            name: "epoch_cell".to_string(),
+            mode: "dfs".to_string(),
+            seed: 1,
+            schedules: 37,
+            complete: true,
+            max_steps: 120,
+            preemption_bound: 2,
+            max_preemptions: 2,
+            failure: failure.map(|s| s.to_string()),
+            expect_failure: false,
+        }
+    }
+
+    #[test]
+    fn json_row_without_failure() {
+        assert_eq!(
+            sample(None).to_json(),
+            "{\"name\":\"epoch_cell\",\"mode\":\"dfs\",\"seed\":1,\"schedules\":37,\
+             \"complete\":true,\"max_steps\":120,\"preemption_bound\":2,\
+             \"max_preemptions\":2,\"expect_failure\":false,\"failure\":null}"
+        );
+    }
+
+    #[test]
+    fn json_row_with_failure_is_escaped() {
+        let row = sample(Some("torn \"read\"\nat step 3"));
+        let json = row.to_json();
+        assert!(json.contains("\"failure\":\"torn \\\"read\\\"\\nat step 3\""));
+    }
+
+    #[test]
+    fn escape_handles_controls_and_backslashes() {
+        assert_eq!(escape("a\\b"), "a\\\\b");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        assert_eq!(escape("plain"), "plain");
+    }
+
+    #[test]
+    fn write_to_dir_creates_one_file_per_model() {
+        let dir = std::env::temp_dir()
+            .join(format!("modelcheck_report_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        sample(None).write_to_dir(&dir).expect("write report row");
+        let body = std::fs::read_to_string(dir.join("epoch_cell.json")).expect("read row back");
+        assert_eq!(body.trim_end(), sample(None).to_json());
+        std::fs::remove_dir_all(&dir).expect("cleanup");
+    }
+}

@@ -1,0 +1,56 @@
+//! The invariant leg of the model-check suite: every protocol model
+//! must survive its whole schedule budget (exhaustively under the
+//! default DFS driver; for a seeded sweep set
+//! `LARGEVIS_MODELCHECK_MODE=pct` and vary `LARGEVIS_MODELCHECK_SEED`).
+//!
+//! Compiled only under `--cfg modelcheck` with **no** mutant cfg — the
+//! mutation corpus runs through `tests/mutants.rs` instead, where a
+//! found violation is the expected outcome.
+
+#![cfg(all(
+    modelcheck,
+    not(any(
+        modelcheck_mutant_bell_no_flag,
+        modelcheck_mutant_latch_relaxed,
+        modelcheck_mutant_latch_weak_poll,
+        modelcheck_mutant_epoch_first,
+        modelcheck_mutant_wal_no_rollback,
+    ))
+))]
+
+use modelcheck::models;
+
+/// Invariant (a): no reader ever observes a snapshot mixing two epochs
+/// — the epoch hint and the published cell stay coupled.
+#[test]
+fn epoch_cell_never_torn() {
+    models::run("epoch_cell_never_torn", models::epoch_torn_read_model);
+}
+
+/// Invariant (b): an epoch held across later publishes stays bitwise
+/// frozen, and the COW byte counter is monotone.
+#[test]
+fn cow_snapshot_frozen_across_publishes() {
+    models::run("cow_snapshot_frozen_across_publishes", models::cow_frozen_epoch_model);
+}
+
+/// Invariant (c): WAL recovery equals exactly the acked prefix under
+/// any append / rollback / concurrent-reader interleaving.
+#[test]
+fn wal_recovery_equals_acked_prefix() {
+    models::run("wal_recovery_equals_acked_prefix", models::wal_acked_prefix_model);
+}
+
+/// Invariant (d): the refine doorbell never deadlocks and never loses
+/// a wakeup, whichever side runs first.
+#[test]
+fn doorbell_never_loses_a_ring() {
+    models::run("doorbell_never_loses_a_ring", models::doorbell_ring_model);
+}
+
+/// Satellite regression: `DoneLatch::arrive`'s Release half publishes
+/// worker writes to any thread polling `DoneLatch::is_done`.
+#[test]
+fn pool_latch_publishes_worker_writes() {
+    models::run("pool_latch_publishes_worker_writes", models::latch_publish_model);
+}

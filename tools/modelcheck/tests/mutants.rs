@@ -1,0 +1,63 @@
+//! The mutation-corpus leg: each `modelcheck_mutant_*` cfg seeds one
+//! deliberate concurrency bug in the library (see the `#[cfg]`-gated
+//! sites in `rust/src`), and the matching test here asserts the
+//! checker *detects* it within the configured budget. CI builds this
+//! suite once per mutant cfg; a mutant surviving exploration fails the
+//! build, gating the checker's own sensitivity.
+//!
+//! Under a mutant cfg the invariant suite (`tests/models.rs`) is
+//! compiled out — the violated invariant is the point.
+
+#![cfg(modelcheck)]
+
+#[cfg(any(
+    modelcheck_mutant_bell_no_flag,
+    modelcheck_mutant_latch_relaxed,
+    modelcheck_mutant_latch_weak_poll,
+    modelcheck_mutant_epoch_first,
+    modelcheck_mutant_wal_no_rollback,
+))]
+use modelcheck::models;
+
+/// `EpochCell::publish` bumps the epoch counter before swapping the
+/// cell: a reader between the two observes hint `e` but fetches the
+/// previous epoch's value.
+#[cfg(modelcheck_mutant_epoch_first)]
+#[test]
+fn detects_epoch_published_before_swap() {
+    models::expect_detected("mutant_epoch_first", models::epoch_torn_read_model);
+}
+
+/// `Doorbell::ring` skips the sticky bit, so a ring delivered before
+/// the waiter parks is lost — a deadlock under the model's
+/// never-times-out `wait_timeout`.
+#[cfg(modelcheck_mutant_bell_no_flag)]
+#[test]
+fn detects_doorbell_without_sticky_bit() {
+    models::expect_detected("mutant_bell_no_flag", models::doorbell_ring_model);
+}
+
+/// `DoneLatch::arrive` demoted to Relaxed: the count reaches zero
+/// without publishing the workers' writes.
+#[cfg(modelcheck_mutant_latch_relaxed)]
+#[test]
+fn detects_latch_arrive_without_release() {
+    models::expect_detected("mutant_latch_relaxed", models::latch_publish_model);
+}
+
+/// `DoneLatch::is_done` demoted to Relaxed: the poller observes zero
+/// without acquiring the arrivers' writes.
+#[cfg(modelcheck_mutant_latch_weak_poll)]
+#[test]
+fn detects_latch_poll_without_acquire() {
+    models::expect_detected("mutant_latch_weak_poll", models::latch_publish_model);
+}
+
+/// `WalWriter::append` leaves its torn tail in place after a failed
+/// write: the next successful append lands after garbage and replay
+/// truncates away an acked record.
+#[cfg(modelcheck_mutant_wal_no_rollback)]
+#[test]
+fn detects_wal_append_without_rollback() {
+    models::expect_detected("mutant_wal_no_rollback", models::wal_acked_prefix_model);
+}

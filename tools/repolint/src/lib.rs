@@ -17,10 +17,20 @@
 //!   `thread_rng` in the deterministic replay path (`wal.rs`,
 //!   `vis/incremental.rs`): WAL replay must be a pure function of the
 //!   log bytes.
-//! - **ordering-justified** — every `Ordering::Relaxed` /
-//!   `Ordering::SeqCst` use must carry an `// ordering:` comment
-//!   justifying the choice (what happens-before edge it provides, or
-//!   why none is needed).
+//! - **ordering-justified** — every explicit `Ordering::` use
+//!   (`Relaxed`, `SeqCst`, `Acquire`, `Release`, `AcqRel`) must carry
+//!   an `// ordering:` comment justifying the choice (what
+//!   happens-before edge it provides, or why none is needed). The sync
+//!   shim itself (`util/sync/`) is exempt: it *interprets* orderings
+//!   passed by callers (matching on them, forwarding them), so per-site
+//!   justifications would be noise — the model-checker semantics are
+//!   documented once at the module level instead.
+//! - **sync-shim** — non-test code on the model-checked paths
+//!   (`serve/`, `data/chunked.rs`, `data/formats/wal.rs`,
+//!   `util/pool.rs`, `util/notify.rs`) must import concurrency
+//!   primitives via `util::sync`, never `std::sync` directly: a raw
+//!   `std::sync` type on those paths is invisible to the deterministic
+//!   scheduler, silently shrinking what `tools/modelcheck` explores.
 //!
 //! The lexer is not a full Rust parser: it splits each line into a
 //! *code* part (string/char-literal contents blanked) and a *comment*
@@ -41,12 +51,19 @@ pub const RULE_NO_PANIC: &str = "no-panic";
 pub const RULE_UNSAFE_SAFETY: &str = "unsafe-safety";
 /// Rule id: wall-clock/random sources in the replay path.
 pub const RULE_REPLAY_DETERMINISM: &str = "replay-determinism";
-/// Rule id: unannotated `Ordering::Relaxed`/`Ordering::SeqCst`.
+/// Rule id: unannotated explicit `Ordering::` use.
 pub const RULE_ORDERING_JUSTIFIED: &str = "ordering-justified";
+/// Rule id: raw `std::sync` on a model-checked path.
+pub const RULE_SYNC_SHIM: &str = "sync-shim";
 
 /// All rule ids, in report order.
-pub const RULES: [&str; 4] =
-    [RULE_NO_PANIC, RULE_UNSAFE_SAFETY, RULE_REPLAY_DETERMINISM, RULE_ORDERING_JUSTIFIED];
+pub const RULES: [&str; 5] = [
+    RULE_NO_PANIC,
+    RULE_UNSAFE_SAFETY,
+    RULE_REPLAY_DETERMINISM,
+    RULE_ORDERING_JUSTIFIED,
+    RULE_SYNC_SHIM,
+];
 
 /// One source line after lexing.
 #[derive(Debug, Default, Clone)]
@@ -106,6 +123,12 @@ pub struct Options {
     pub panic_scope: Vec<String>,
     /// Scope of the replay-determinism rule.
     pub determinism_scope: Vec<String>,
+    /// Scope of the sync-shim rule (paths that must import via
+    /// `util::sync`).
+    pub sync_scope: Vec<String>,
+    /// Paths exempt from the ordering-justified rule (the shim layer
+    /// that interprets orderings rather than choosing them).
+    pub ordering_exempt: Vec<String>,
     /// Allow-list entries (see [`AllowEntry`]).
     pub allow: Vec<AllowEntry>,
 }
@@ -126,6 +149,14 @@ impl Options {
                 "data/formats/wal.rs".to_string(),
                 "vis/incremental.rs".to_string(),
             ],
+            sync_scope: vec![
+                "serve/".to_string(),
+                "data/chunked.rs".to_string(),
+                "data/formats/wal.rs".to_string(),
+                "util/pool.rs".to_string(),
+                "util/notify.rs".to_string(),
+            ],
+            ordering_exempt: vec!["util/sync/".to_string()],
             allow: Vec::new(),
         }
     }
@@ -623,7 +654,10 @@ fn opens_unsafe_block_or_impl(lexed: &[LexedLine], idx: usize) -> bool {
 }
 
 /// True when the line (or the contiguous comment block directly above
-/// it) carries `tag`.
+/// it) carries `tag`. Single-line attributes (`#[cfg(...)]`,
+/// `#[allow(...)]`, ...) between the comment and the code do not break
+/// contiguity — an annotation above a cfg-gated statement still covers
+/// it.
 fn annotated(lexed: &[LexedLine], idx: usize, tag: &str) -> bool {
     if lexed[idx].comment.contains(tag) {
         return true;
@@ -631,7 +665,8 @@ fn annotated(lexed: &[LexedLine], idx: usize, tag: &str) -> bool {
     let mut j = idx;
     while j > 0 {
         j -= 1;
-        if !lexed[j].code.trim().is_empty() {
+        let code = lexed[j].code.trim();
+        if !code.is_empty() && !(code.starts_with("#[") && code.ends_with(']')) {
             return false;
         }
         if lexed[j].comment.contains(tag) {
@@ -650,6 +685,8 @@ pub fn scan_source(rel_path: &str, source: &str, opts: &Options) -> Vec<Violatio
     let in_scope = |scope: &[String]| scope.iter().any(|s| rel_path.contains(s.as_str()));
     let panic_scoped = in_scope(&opts.panic_scope);
     let determinism_scoped = in_scope(&opts.determinism_scope);
+    let sync_scoped = in_scope(&opts.sync_scope);
+    let ordering_exempt = in_scope(&opts.ordering_exempt);
     let mut out: Vec<Violation> = Vec::new();
     let mut push = |rule: &'static str, idx: usize, out: &mut Vec<Violation>| {
         out.push(Violation {
@@ -684,10 +721,22 @@ pub fn scan_source(rel_path: &str, source: &str, opts: &Options) -> Vec<Violatio
                 }
             }
         }
-        if (code.contains("Ordering::Relaxed") || code.contains("Ordering::SeqCst"))
+        if !ordering_exempt
+            && [
+                "Ordering::Relaxed",
+                "Ordering::SeqCst",
+                "Ordering::Acquire",
+                "Ordering::Release",
+                "Ordering::AcqRel",
+            ]
+            .iter()
+            .any(|p| code.contains(p))
             && !annotated(&lexed, idx, "ordering:")
         {
             push(RULE_ORDERING_JUSTIFIED, idx, &mut out);
+        }
+        if sync_scoped && code.contains("std::sync") {
+            push(RULE_SYNC_SHIM, idx, &mut out);
         }
         if opens_unsafe_block_or_impl(&lexed, idx) && !annotated(&lexed, idx, "SAFETY:") {
             push(RULE_UNSAFE_SAFETY, idx, &mut out);

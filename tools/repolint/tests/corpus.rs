@@ -4,7 +4,7 @@
 
 use repolint::{
     lex, parse_allow, scan_source, Options, Violation, RULE_NO_PANIC, RULE_ORDERING_JUSTIFIED,
-    RULE_REPLAY_DETERMINISM, RULE_UNSAFE_SAFETY,
+    RULE_REPLAY_DETERMINISM, RULE_SYNC_SHIM, RULE_UNSAFE_SAFETY,
 };
 
 fn count(vs: &[Violation], rule: &str) -> usize {
@@ -52,10 +52,13 @@ fn string_and_comment_traps_stay_clean() {
 fn ordering_and_replay_counts() {
     let src = include_str!("fixtures/ordering_and_replay.rs");
     let vs = scan_source("data/formats/wal.rs", src, &Options::repo_defaults());
-    // Acquire/Release are exempt; annotated Relaxed/SeqCst (same line
-    // or contiguous comment above) are compliant.
-    assert_eq!(count(&vs, RULE_ORDERING_JUSTIFIED), 2, "{vs:?}");
+    // Every explicit Ordering:: (Relaxed/SeqCst/Acquire/Release/AcqRel)
+    // needs a justification; annotated uses (same line or contiguous
+    // comment above) are compliant.
+    assert_eq!(count(&vs, RULE_ORDERING_JUSTIFIED), 4, "{vs:?}");
     assert_eq!(count(&vs, RULE_REPLAY_DETERMINISM), 2, "{vs:?}");
+    // The std::sync import itself trips the sync-shim rule here.
+    assert_eq!(count(&vs, RULE_SYNC_SHIM), 1, "{vs:?}");
 }
 
 #[test]
@@ -64,7 +67,27 @@ fn replay_rule_is_scoped() {
     let vs = scan_source("serve/state.rs", src, &Options::repo_defaults());
     assert_eq!(count(&vs, RULE_REPLAY_DETERMINISM), 0, "{vs:?}");
     // The ordering rule is repo-wide, so those findings remain.
-    assert_eq!(count(&vs, RULE_ORDERING_JUSTIFIED), 2, "{vs:?}");
+    assert_eq!(count(&vs, RULE_ORDERING_JUSTIFIED), 4, "{vs:?}");
+}
+
+#[test]
+fn ordering_rule_exempts_the_sync_shim() {
+    let src = include_str!("fixtures/ordering_and_replay.rs");
+    let vs = scan_source("util/sync/shim.rs", src, &Options::repo_defaults());
+    // The shim interprets caller-passed orderings; per-site
+    // justifications are waived there (and only there).
+    assert_eq!(count(&vs, RULE_ORDERING_JUSTIFIED), 0, "{vs:?}");
+}
+
+#[test]
+fn sync_shim_rule_counts_and_scoping() {
+    let src = include_str!("fixtures/sync_shim.rs");
+    let vs = scan_source("serve/fixture.rs", src, &Options::repo_defaults());
+    // Two imports + one fully-qualified use; the crate::util::sync
+    // import, comments, strings, and cfg(test) code stay clean.
+    assert_eq!(count(&vs, RULE_SYNC_SHIM), 3, "{vs:?}");
+    let vs = scan_source("vis/fixture.rs", src, &Options::repo_defaults());
+    assert_eq!(count(&vs, RULE_SYNC_SHIM), 0, "{vs:?}");
 }
 
 #[test]

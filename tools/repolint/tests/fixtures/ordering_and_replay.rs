@@ -1,7 +1,7 @@
 // Fixture: atomics with and without justifications, plus wall-clock
 // reads in the replay-determinism scope.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering}; // sync-shim finding in scope
 
 fn annotated_above(c: &AtomicU64) -> u64 {
     // ordering: Relaxed — pure counter, no data guarded.
@@ -12,6 +12,11 @@ fn annotated_trailing(c: &AtomicU64) -> u64 {
     c.load(Ordering::SeqCst) // ordering: SeqCst, total order for determinism
 }
 
+fn annotated_acquire(c: &AtomicU64) -> u64 {
+    // ordering: Acquire — pairs with a Release store elsewhere.
+    c.load(Ordering::Acquire)
+}
+
 fn missing_justification(c: &AtomicU64) -> u64 {
     c.load(Ordering::Relaxed) // finding 1
 }
@@ -20,16 +25,19 @@ fn missing_justification_seqcst(c: &AtomicU64) {
     c.store(7, Ordering::SeqCst); // finding 2
 }
 
-fn acquire_release_exempt(c: &AtomicU64) -> u64 {
-    c.store(1, Ordering::Release);
-    c.load(Ordering::Acquire)
+fn missing_justification_release(c: &AtomicU64) {
+    c.store(1, Ordering::Release); // finding 3
+}
+
+fn missing_justification_acqrel(c: &AtomicU64) -> u64 {
+    c.fetch_add(1, Ordering::AcqRel) // finding 4
 }
 
 fn wall_clock() -> std::time::Duration {
-    let t = std::time::Instant::now(); // finding 3 (replay scope)
+    let t = std::time::Instant::now(); // replay finding 1
     t.elapsed()
 }
 
 fn system_time_epoch() {
-    let _ = std::time::SystemTime::now(); // finding 4 (replay scope)
+    let _ = std::time::SystemTime::now(); // replay finding 2
 }

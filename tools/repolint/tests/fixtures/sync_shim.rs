@@ -1,0 +1,27 @@
+// Fixture: raw std::sync imports and uses on a model-checked path,
+// plus traps that must not count.
+
+use std::sync::atomic::AtomicUsize; // finding 1
+use std::sync::Mutex; // finding 2
+
+use crate::util::sync::atomic::AtomicU64; // clean: the shim path
+
+fn qualified_use() -> bool {
+    let b = std::sync::atomic::AtomicBool::new(false); // finding 3
+    b.into_inner()
+}
+
+fn traps() -> String {
+    // a comment mentioning std::sync must not count
+    "a string mentioning std::sync must not count".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Mutex; // exempt: test-gated code may use std directly
+
+    #[test]
+    fn uses_std() {
+        let _ = Mutex::new(0u32);
+    }
+}
